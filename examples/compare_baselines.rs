@@ -1,0 +1,79 @@
+//! ToMA vs the heuristic token-reduction baselines (Table 3 shape).
+//!
+//! All methods run through the same PJRT backend on the same seeds, so the
+//! comparison isolates the *algorithms*: ToMA's dense-GEMM merge against
+//! ToMe/ToFu's sort + gather/scatter matching and ToDo's KV pooling.
+//!
+//! ```bash
+//! cargo run --release --example compare_baselines -- --steps 10
+//! ```
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use toma::coordinator::{Engine, EngineConfig, GenRequest};
+use toma::quality::{dino_proxy, FeatureExtractor};
+use toma::report::Table;
+use toma::runtime::Runtime;
+use toma::util::argparse::Args;
+use toma::workload::PromptSet;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let model = args.get_str("model", "uvit_xs");
+    let steps = args.get_usize("steps", 10);
+    let ratio = args.get_f64("ratio", 0.5);
+    let n_prompts = args.get_usize("prompts", 3);
+
+    let runtime = Arc::new(Runtime::with_default_dir()?);
+    let prompts = PromptSet::imagenet();
+
+    let run = |variant: &str, ratio: Option<f64>| -> Result<(Vec<Vec<f32>>, f64, f64)> {
+        let mut cfg = EngineConfig::new(&model, variant, ratio);
+        cfg.steps = steps;
+        let engine = Engine::new(runtime.clone(), cfg)?;
+        let mut outs = vec![];
+        let (mut total, mut step_time) = (0.0, 0.0);
+        for p in 0..n_prompts {
+            let r = engine.generate(&GenRequest::new(prompts.get(p * 7), p as u64))?;
+            total += r.stats.total_s;
+            step_time += r.stats.step_s + r.stats.select_s;
+            outs.push(r.latent);
+        }
+        let n = n_prompts as f64;
+        Ok((outs, total / n, step_time / n))
+    };
+
+    let (base, base_s, _) = run("baseline", None)?;
+    let fx = FeatureExtractor::new(base[0].len(), 32, 11);
+
+    let mut t = Table::new(&format!(
+        "ToMA vs baselines ({model}, r={ratio}, {steps} steps, same backend)"
+    ))
+    .headers(&["Method", "DINOp", "s/img", "Δ vs baseline"]);
+    t.row(vec![
+        "Baseline".into(),
+        "0.000".into(),
+        format!("{base_s:.3}"),
+        "+0.0%".into(),
+    ]);
+
+    for method in ["toma", "tome", "tofu", "todo"] {
+        let (outs, s, _) = run(method, Some(ratio))?;
+        let dino = outs
+            .iter()
+            .zip(&base)
+            .map(|(a, b)| dino_proxy(&fx, b, a))
+            .sum::<f64>()
+            / outs.len() as f64;
+        t.row(vec![
+            method.into(),
+            format!("{dino:.3}"),
+            format!("{s:.3}"),
+            toma::report::fmt_delta(s, base_s),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("note: ToDo always uses its fixed 4-to-1 KV pooling (Sec. 5.1).");
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! Qualitative grid (Fig. 1 / Fig. 5 stand-in): PGM latent previews for a
+//! few prompts across variants + the per-image DINO-proxy scores.
+//!
+//! ```bash
+//! cargo run --release --example qualitative -- --out-dir /tmp/toma_quals
+//! ```
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use toma::coordinator::{Engine, EngineConfig, GenRequest};
+use toma::quality::{dino_proxy, write_pgm_preview, FeatureExtractor};
+use toma::runtime::Runtime;
+use toma::util::argparse::Args;
+use toma::workload::PromptSet;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let model = args.get_str("model", "uvit_xs");
+    let steps = args.get_usize("steps", 12);
+    let out_dir = args.get_str("out-dir", "/tmp/toma_quals");
+    std::fs::create_dir_all(&out_dir)?;
+
+    let runtime = Arc::new(Runtime::with_default_dir()?);
+    let info = runtime.manifest.model(&model)?.clone();
+    let prompts = PromptSet::gemrec();
+    let chosen: Vec<&str> = (0..4).map(|i| prompts.get(i * 5)).collect();
+
+    let variants: Vec<(&str, Option<f64>)> = vec![
+        ("baseline", None),
+        ("toma", Some(0.25)),
+        ("toma", Some(0.5)),
+        ("toma", Some(0.75)),
+    ];
+
+    let mut baselines: Vec<Vec<f32>> = vec![];
+    let fx = FeatureExtractor::new(info.latent_len() / info.batch, 32, 5);
+
+    println!("prompt grid -> {out_dir}/<prompt>_<variant>.pgm");
+    for (variant, ratio) in &variants {
+        let mut cfg = EngineConfig::new(&model, variant, *ratio);
+        cfg.steps = steps;
+        let engine = Engine::new(runtime.clone(), cfg)?;
+        for (pi, prompt) in chosen.iter().enumerate() {
+            let r = engine.generate(&GenRequest::new(prompt, pi as u64))?;
+            let tag = ratio
+                .map(|x| format!("{variant}_r{:02}", (x * 100.0) as u32))
+                .unwrap_or_else(|| variant.to_string());
+            let path = format!("{out_dir}/p{pi}_{tag}.pgm");
+            write_pgm_preview(&r.latent, info.channels, info.latent_hw, &path)?;
+            if *variant == "baseline" {
+                baselines.push(r.latent);
+                println!("  p{pi} {tag}: reference");
+            } else {
+                let d = dino_proxy(&fx, &baselines[pi], &r.latent);
+                println!("  p{pi} {tag}: DINOp={d:.4}");
+            }
+        }
+    }
+    Ok(())
+}

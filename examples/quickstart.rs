@@ -1,0 +1,61 @@
+//! Quickstart: generate one image latent with ToMA enabled.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Loads the AOT-compiled UVit model through PJRT, runs the denoising loop
+//! with tile-selected / globally-merged tokens at r=0.5 (the paper's
+//! default ToMA), and prints where the time went — including how often the
+//! Sec. 4.3.2 reuse schedule let the coordinator skip recomputing the merge
+//! plan.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use toma::coordinator::{Engine, EngineConfig, GenRequest};
+use toma::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let runtime = Arc::new(Runtime::with_default_dir()?);
+
+    // Baseline engine for comparison.
+    let mut base_cfg = EngineConfig::new("uvit_xs", "baseline", None);
+    base_cfg.steps = 20;
+    let baseline = Engine::new(runtime.clone(), base_cfg)?;
+
+    // ToMA engine: 50% of tokens merged, destinations refreshed every 10
+    // steps, merge weights every 5 (the paper's schedule).
+    let mut cfg = EngineConfig::new("uvit_xs", "toma", Some(0.5));
+    cfg.steps = 20;
+    let toma = Engine::new(runtime, cfg)?;
+
+    let req = GenRequest::new("a fantasy landscape with floating islands", 42);
+
+    let base = baseline.generate(&req)?;
+    let fast = toma.generate(&req)?;
+
+    println!("\n== quickstart ==");
+    println!(
+        "baseline: {:.3}s   ToMA(r=0.5): {:.3}s   speedup {:.2}x",
+        base.stats.total_s,
+        fast.stats.total_s,
+        base.stats.total_s / fast.stats.total_s
+    );
+    println!(
+        "ToMA plan cache: {} selections, {} weight refreshes, {} reuses over {} steps",
+        fast.stats.select_calls,
+        fast.stats.weight_refreshes,
+        fast.stats.plan_reuses,
+        fast.stats.steps
+    );
+
+    // How close is the merged output to the baseline? (DINO-proxy)
+    let fx = toma::quality::FeatureExtractor::new(base.latent.len(), 32, 7);
+    let dino = toma::quality::dino_proxy(&fx, &base.latent, &fast.latent);
+    println!("DINO-proxy delta vs baseline: {dino:.4} (0 = identical)");
+
+    toma::quality::write_pgm_preview(&fast.latent, 4, 16, "/tmp/toma_quickstart.pgm")?;
+    println!("latent preview -> /tmp/toma_quickstart.pgm");
+    Ok(())
+}

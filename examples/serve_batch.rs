@@ -1,0 +1,87 @@
+//! End-to-end serving driver (the DESIGN.md validation workload).
+//!
+//! Loads the small real model (uvit_s: 1024 tokens, the SDXL stand-in),
+//! serves a batch of prompted generation requests through the threaded
+//! coordinator with and without ToMA, and reports latency / throughput plus
+//! the plan-cache statistics. Results are recorded in EXPERIMENTS.md.
+//!
+//! ```bash
+//! cargo run --release --example serve_batch -- --requests 8 --workers 2 \
+//!     --steps 30 --model uvit_s
+//! ```
+
+use anyhow::Result;
+use toma::coordinator::{EngineConfig, GenRequest, Server};
+use toma::report::Table;
+use toma::util::argparse::Args;
+use toma::util::stats;
+use toma::workload::{request_stream, PromptSet};
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let model = args.get_str("model", "uvit_s");
+    let n = args.get_usize("requests", 8);
+    let workers = args.get_usize("workers", 2);
+    let steps = args.get_usize("steps", 30);
+    let ratio = args.get_f64("ratio", 0.5);
+
+    let prompts = PromptSet::gemrec();
+    let stream = request_stream(&prompts, n, 0.0, 17);
+
+    let mut table = Table::new(&format!(
+        "serve_batch: {model}, {n} requests, {workers} workers, {steps} steps"
+    ))
+    .headers(&[
+        "Variant", "Wall (s)", "Img/s", "p50 svc (s)", "p95 svc (s)",
+        "Reuse rate", "Speedup",
+    ]);
+
+    let mut base_wall = None;
+    for variant in ["baseline", "toma"] {
+        let mut cfg = EngineConfig::new(
+            &model,
+            variant,
+            (variant != "baseline").then_some(ratio),
+        );
+        cfg.steps = steps;
+
+        let server = Server::with_default_dir(workers);
+        let reqs: Vec<GenRequest> = stream
+            .iter()
+            .map(|r| GenRequest::new(&r.prompt, r.seed))
+            .collect();
+        let t0 = std::time::Instant::now();
+        let completions = server.run_batch(&cfg, reqs);
+        let wall = t0.elapsed().as_secs_f64();
+
+        let ok: Vec<_> = completions
+            .iter()
+            .filter_map(|c| c.result.as_ref().ok().map(|r| (c, r)))
+            .collect();
+        anyhow::ensure!(ok.len() == n, "{} of {n} requests failed", n - ok.len());
+
+        let svc: Vec<f64> = ok.iter().map(|(c, _)| c.service_s).collect();
+        let reuse: f64 = ok
+            .iter()
+            .map(|(_, r)| r.stats.plan_reuses as f64 / steps as f64)
+            .sum::<f64>()
+            / n as f64;
+        let speedup = base_wall.map(|b: f64| b / wall).unwrap_or(1.0);
+        if variant == "baseline" {
+            base_wall = Some(wall);
+        }
+        table.row(vec![
+            variant.into(),
+            format!("{wall:.2}"),
+            format!("{:.3}", n as f64 / wall),
+            format!("{:.2}", stats::median(&svc)),
+            format!("{:.2}", stats::percentile(&svc, 95.0)),
+            format!("{:.0}%", reuse * 100.0),
+            format!("{speedup:.2}x"),
+        ]);
+        println!("{}", server.metrics.render());
+    }
+
+    println!("{}", table.render());
+    Ok(())
+}

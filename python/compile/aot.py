@@ -1,0 +1,463 @@
+"""AOT lowering driver: JAX models -> HLO text + weights + manifest.
+
+Run once at build time (``make artifacts``); Python never executes on the
+request path. For every artifact in ``configs.enumerate_artifacts`` this
+emits:
+
+  artifacts/<name>.hlo.txt        HLO *text* (NOT .serialize(): jax >= 0.5
+                                  emits 64-bit instruction ids that
+                                  xla_extension 0.5.1 rejects; the text
+                                  parser reassigns ids cleanly)
+  artifacts/weights/<model>.npz   all parameters, named by flatten path
+  artifacts/manifest.json         artifact index the Rust runtime parses:
+                                  input order (params first, in tree-flatten
+                                  order, then runtime inputs), shapes,
+                                  dtypes, variant metadata, model configs.
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--quick]
+                              [--models uvit_xs,uvit_s,dit_s] [--pallas]
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import baselines_jax, dit as dit_mod, model as uvit_mod, toma_jax
+from .configs import (MODELS, TAU, DEST_EVERY, WEIGHT_EVERY, DitConfig,
+                      UVitConfig, enumerate_artifacts, ratio_tag, tiles_for)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def flatten_params(params):
+    """-> (names, leaves) in jax tree-flatten order ("blocks.0.qkv.w")."""
+    leaves, _ = jax.tree_util.tree_flatten(params)
+    paths = jax.tree_util.tree_flatten_with_path(params)[0]
+
+    def name(path):
+        parts = []
+        for p in path:
+            if isinstance(p, jax.tree_util.DictKey):
+                parts.append(str(p.key))
+            elif isinstance(p, jax.tree_util.SequenceKey):
+                parts.append(str(p.idx))
+            else:
+                parts.append(str(p))
+        return ".".join(parts)
+
+    names = [name(path) for path, _ in paths]
+    assert len(names) == len(leaves)
+    return names, leaves
+
+
+def spec_of(x):
+    return jax.ShapeDtypeStruct(x.shape, x.dtype)
+
+
+def dtype_tag(dt):
+    return {"float32": "f32", "int32": "s32", "uint32": "u32"}[str(np.dtype(dt))]
+
+
+def region_spec(cfg, mode, regions):
+    return toma_jax.RegionSpec(mode=mode, regions=regions,
+                               grid_h=cfg.grid, grid_w=cfg.grid)
+
+
+def dloc(cfg, spec, ratio):
+    n_loc = spec.tokens // spec.regions
+    return max(1, int(round((1.0 - ratio) * n_loc)))
+
+
+# ---------------------------------------------------------------------------
+# Artifact builders: return (fn, runtime_inputs [(name, spec)], outputs meta)
+# ---------------------------------------------------------------------------
+
+def build_step(cfg, art, kernel_impl):
+    b = cfg.batch
+    x_spec = jax.ShapeDtypeStruct((b, cfg.channels, cfg.latent_hw,
+                                   cfg.latent_hw), jnp.float32)
+    t_spec = jax.ShapeDtypeStruct((b,), jnp.float32)
+    c_spec = jax.ShapeDtypeStruct((b, cfg.txt_len, cfg.txt_dim), jnp.float32)
+
+    is_dit = isinstance(cfg, DitConfig)
+    v = art.variant
+
+    if is_dit:
+        return build_dit_step(cfg, art, kernel_impl, x_spec, t_spec, c_spec)
+
+    if v == "baseline":
+        def fn(params, x_t, t, cond):
+            return (uvit_mod.apply_uvit(params, cfg, x_t, t, cond,
+                                        "baseline", None, kernel_impl),)
+        return fn, [("x_t", x_spec), ("t", t_spec), ("cond", c_spec)]
+
+    if v in ("toma", "toma_stripe", "toma_tile", "toma_once",
+             "toma_pinv", "toma_colsm"):
+        mode = art.region_mode if art.regions > 1 else "global"
+        spec = region_spec(cfg, mode, max(1, art.regions))
+        d = dloc(cfg, spec, art.ratio)
+        n_loc = spec.tokens // spec.regions
+        g = b * spec.regions
+        at_spec = jax.ShapeDtypeStruct((g, d, n_loc), jnp.float32)
+        unmerge = {"toma_pinv": "pinv", "toma_colsm": "colsoftmax"}.get(
+            v, "transpose")
+        base_variant = "toma_once" if v == "toma_once" else "toma"
+
+        if unmerge == "colsoftmax":
+            def fn(params, x_t, t, cond, a, a_tilde):
+                m = toma_jax.Merger(a, a_tilde, spec, b, kernel_impl,
+                                    unmerge)
+                return (uvit_mod.apply_uvit(params, cfg, x_t, t, cond,
+                                            base_variant, m, kernel_impl),)
+            return fn, [("x_t", x_spec), ("t", t_spec), ("cond", c_spec),
+                        ("a", at_spec), ("a_tilde", at_spec)]
+
+        def fn(params, x_t, t, cond, a_tilde):
+            m = toma_jax.Merger(None, a_tilde, spec, b, kernel_impl, unmerge)
+            return (uvit_mod.apply_uvit(params, cfg, x_t, t, cond,
+                                        base_variant, m, kernel_impl),)
+        return fn, [("x_t", x_spec), ("t", t_spec), ("cond", c_spec),
+                    ("a_tilde", at_spec)]
+
+    if v == "tlb":
+        m = toma_jax.tlb_merger(b, cfg.tokens, art.ratio)
+
+        def fn(params, x_t, t, cond):
+            return (uvit_mod.apply_uvit(params, cfg, x_t, t, cond, "tlb",
+                                        m, kernel_impl),)
+        return fn, [("x_t", x_spec), ("t", t_spec), ("cond", c_spec)]
+
+    if v in ("tome", "tofu"):
+        ratio, depth = art.ratio, cfg.depth
+
+        def factory(x, bi):
+            mode = "merge"
+            if v == "tofu":
+                # ToFu: merge while features are near-linear (early blocks),
+                # prune later (static stand-in for the linearity test).
+                mode = "merge" if bi < depth // 2 else "prune"
+            plan = baselines_jax.tome_plan(x, cfg.grid, cfg.grid, ratio,
+                                           mode)
+            return baselines_jax.TomeMerger(plan, cfg.tokens)
+
+        def fn(params, x_t, t, cond):
+            return (uvit_mod.apply_uvit(params, cfg, x_t, t, cond, v,
+                                        factory, kernel_impl),)
+        return fn, [("x_t", x_spec), ("t", t_spec), ("cond", c_spec)]
+
+    if v == "todo":
+        def fn(params, x_t, t, cond):
+            return (uvit_mod.apply_uvit(params, cfg, x_t, t, cond, "todo",
+                                        None, kernel_impl),)
+        return fn, [("x_t", x_spec), ("t", t_spec), ("cond", c_spec)]
+
+    raise ValueError(f"unknown variant {v}")
+
+
+def build_dit_step(cfg, art, kernel_impl, x_spec, t_spec, c_spec):
+    b = cfg.batch
+    v = art.variant
+    if v == "baseline":
+        def fn(params, x_t, t, cond):
+            return (dit_mod.apply_dit(params, cfg, x_t, t, cond, None,
+                                      kernel_impl),)
+        return fn, [("x_t", x_spec), ("t", t_spec), ("cond", c_spec)]
+
+    assert v in ("toma", "toma_tile")
+    mode = "tile" if v == "toma_tile" else "global"
+    regions = art.regions if v == "toma_tile" else 1
+    img_spec = region_spec(cfg, mode, regions)
+    d_img = dloc(cfg, img_spec, art.ratio)
+    n_loc = img_spec.tokens // img_spec.regions
+    g = b * img_spec.regions
+    txt_spec = toma_jax.RegionSpec("global", 1, 1, cfg.txt_len)
+    d_txt = max(1, int(round((1.0 - art.ratio) * cfg.txt_len)))
+
+    at_img_spec = jax.ShapeDtypeStruct((g, d_img, n_loc), jnp.float32)
+    ix_img_spec = jax.ShapeDtypeStruct((g, d_img), jnp.int32)
+    at_txt_spec = jax.ShapeDtypeStruct((b, d_txt, cfg.txt_len), jnp.float32)
+    ix_txt_spec = jax.ShapeDtypeStruct((b, d_txt), jnp.int32)
+
+    reg_index = None
+    if img_spec.regions > 1:
+        reg_index = toma_jax.region_token_index(img_spec)  # (P, N_loc)
+
+    def fn(params, x_t, t, cond, at_img, ix_img, at_txt, ix_txt):
+        m_img = toma_jax.Merger(None, at_img, img_spec, b, kernel_impl)
+        m_txt = toma_jax.Merger(None, at_txt, txt_spec, b, kernel_impl)
+        # Global phase-table positions of the selected destinations.
+        if reg_index is not None:
+            gl = reg_index[None, :, :]                    # (1, P, N_loc)
+            gl = jnp.broadcast_to(gl, (b, img_spec.regions, n_loc))
+            gl = gl.reshape(g, n_loc)
+            img_pos = jnp.take_along_axis(gl, ix_img, axis=-1)
+            img_pos = img_pos.reshape(b, img_spec.regions * d_img)
+        else:
+            img_pos = ix_img.reshape(b, d_img)
+        img_pos = img_pos + cfg.txt_len                   # offset past text
+        txt_pos = ix_txt
+        ms = dit_mod.DitMergeState(m_txt, m_img, txt_pos, img_pos)
+        return (dit_mod.apply_dit(params, cfg, x_t, t, cond, ms,
+                                  kernel_impl),)
+
+    return fn, [("x_t", x_spec), ("t", t_spec), ("cond", c_spec),
+                ("at_img", at_img_spec), ("ix_img", ix_img_spec),
+                ("at_txt", at_txt_spec), ("ix_txt", ix_txt_spec)]
+
+
+# Parameter subsets used by non-step artifacts. The stablehlo->XLA
+# conversion prunes unused parameters, so each artifact must be lowered
+# with exactly the parameters its graph touches; the manifest records the
+# resulting order for the Rust runtime.
+SELECT_PARAM_KEYS = ["patch", "pos", "time1", "time2"]
+
+
+def build_select(cfg, art, kernel_impl):
+    """Selection artifact: hidden states -> (idx, A, A~) [per modality]."""
+    b = cfg.batch
+    x_spec = jax.ShapeDtypeStruct((b, cfg.channels, cfg.latent_hw,
+                                   cfg.latent_hw), jnp.float32)
+    t_spec = jax.ShapeDtypeStruct((b,), jnp.float32)
+    is_dit = isinstance(cfg, DitConfig)
+    mode = "global" if art.mode in ("global", "random") else art.mode
+    spec = region_spec(cfg, mode, art.regions if mode != "global" else 1)
+    ratio = art.ratio
+
+    if not is_dit:
+        if art.mode == "random":
+            s_spec = jax.ShapeDtypeStruct((1,), jnp.uint32)
+
+            def fn(params, x_t, t, seed):
+                h = uvit_mod.embed_tokens(params, cfg, x_t, t)
+                idx = toma_jax.select_destinations(h, spec, ratio,
+                                                   kernel_impl, seed)
+                a, at = toma_jax.build_merge_weights(h, idx, spec, TAU,
+                                                     kernel_impl)
+                return idx, a, at
+            return fn, [("x_t", x_spec), ("t", t_spec), ("seed", s_spec)], \
+                SELECT_PARAM_KEYS
+
+        def fn(params, x_t, t):
+            h = uvit_mod.embed_tokens(params, cfg, x_t, t)
+            idx = toma_jax.select_destinations(h, spec, ratio, kernel_impl)
+            a, at = toma_jax.build_merge_weights(h, idx, spec, TAU,
+                                                 kernel_impl)
+            return idx, a, at
+        return fn, [("x_t", x_spec), ("t", t_spec)], SELECT_PARAM_KEYS
+
+    # DiT: select image and text destinations independently (App. E).
+    c_spec = jax.ShapeDtypeStruct((b, cfg.txt_len, cfg.txt_dim), jnp.float32)
+    txt_spec = toma_jax.RegionSpec("global", 1, 1, cfg.txt_len)
+
+    def fn(params, x_t, cond):
+        from .model import linear, patchify
+        img_h = linear(params["patch"], patchify(x_t, cfg))
+        txt_h = linear(params["txt_in"], cond)
+        ix_img = toma_jax.select_destinations(img_h, spec, ratio,
+                                              kernel_impl)
+        a_i, at_i = toma_jax.build_merge_weights(img_h, ix_img, spec, TAU,
+                                                 kernel_impl)
+        ix_txt = toma_jax.select_destinations(txt_h, txt_spec, ratio,
+                                              kernel_impl)
+        a_t, at_t = toma_jax.build_merge_weights(txt_h, ix_txt, txt_spec,
+                                                 TAU, kernel_impl)
+        return ix_img, a_i, at_i, ix_txt, a_t, at_t
+    # Note: no timestep input — DiT selection runs on the patch embedding
+    # only (time conditioning enters via adaLN inside the blocks).
+    return fn, [("x_t", x_spec), ("cond", c_spec)], ["patch", "txt_in"]
+
+
+def build_weights_only(cfg, art, kernel_impl):
+    """Weights-only rebuild: (x_t, t, idx) -> (A, A~) with destinations kept.
+
+    The runtime half of Sec. 4.3.2's split schedule ("destinations every 10
+    steps, weights every 5"): the coordinator reruns this cheaper artifact
+    on weight-refresh steps instead of the full greedy selection.
+    UVit models only (the paper does not reuse across steps on Flux).
+    """
+    b = cfg.batch
+    x_spec = jax.ShapeDtypeStruct((b, cfg.channels, cfg.latent_hw,
+                                   cfg.latent_hw), jnp.float32)
+    t_spec = jax.ShapeDtypeStruct((b,), jnp.float32)
+    mode = "global" if art.mode in ("global", "random") else art.mode
+    spec = region_spec(cfg, mode, art.regions if mode != "global" else 1)
+    d = dloc(cfg, spec, art.ratio)
+    g = b * spec.regions
+    ix_spec = jax.ShapeDtypeStruct((g, d), jnp.int32)
+
+    def fn(params, x_t, t, idx):
+        h = uvit_mod.embed_tokens(params, cfg, x_t, t)
+        a, at = toma_jax.build_merge_weights(h, idx, spec, TAU, kernel_impl)
+        return a, at
+    return fn, [("x_t", x_spec), ("t", t_spec), ("idx", ix_spec)], \
+        SELECT_PARAM_KEYS
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+def lower_artifact(fn, params_spec, inputs, out_path):
+    """Lower and dump HLO text; returns (n_hlo_params, out_info).
+
+    Asserts the stablehlo->XLA conversion did not prune any parameter: the
+    Rust runtime feeds buffers positionally, so every lowered artifact must
+    consume exactly (params + runtime inputs).
+    """
+    arg_specs = [params_spec] + [s for _, s in inputs]
+    lowered = jax.jit(fn).lower(*arg_specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    n_params = len(comp.program_shape().parameter_shapes())
+    n_leaves = len(jax.tree_util.tree_leaves(params_spec))
+    expected = n_leaves + len(inputs)
+    if n_params != expected:
+        raise RuntimeError(
+            f"{out_path}: lowered program has {n_params} parameters, "
+            f"expected {expected} ({n_leaves} weights + {len(inputs)} "
+            f"inputs). A weight was pruned; narrow the param subset.")
+    with open(out_path, "w") as f:
+        f.write(comp.as_hlo_text())
+    return n_params, lowered.out_info
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="uvit_xs-only artifact set (pytest / CI)")
+    ap.add_argument("--models", default=None,
+                    help="comma list of models to lower")
+    ap.add_argument("--pallas", action="store_true",
+                    help="additionally emit Pallas-kernel artifacts "
+                         "(interpret mode) for uvit_xs")
+    args = ap.parse_args()
+
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+    os.makedirs(os.path.join(out_dir, "weights"), exist_ok=True)
+
+    model_names = args.models.split(",") if args.models else None
+    steps, selects = enumerate_artifacts(model_names, quick=args.quick)
+
+    # --- weights ----------------------------------------------------------
+    manifest = {"tau": TAU, "dest_every": DEST_EVERY,
+                "weight_every": WEIGHT_EVERY, "models": {}, "artifacts": []}
+    params_by_model, spec_by_model, names_by_model = {}, {}, {}
+    wanted = {a.model for a in steps} | {a.model for a in selects}
+    for mname in sorted(wanted):
+        cfg = MODELS[mname]
+        t0 = time.time()
+        if isinstance(cfg, DitConfig):
+            params = dit_mod.init_dit(cfg, seed=0)
+        else:
+            params = uvit_mod.init_uvit(cfg, seed=0)
+        names, leaves = flatten_params(params)
+        np.savez(os.path.join(out_dir, "weights", f"{mname}.npz"),
+                 **{n: np.asarray(l) for n, l in zip(names, leaves)})
+        params_by_model[mname] = params
+        spec_by_model[mname] = jax.tree_util.tree_map(spec_of, params)
+        names_by_model[mname] = [
+            {"name": n, "shape": list(l.shape), "dtype": dtype_tag(l.dtype)}
+            for n, l in zip(names, leaves)]
+        mcfg = {"kind": "dit" if isinstance(cfg, DitConfig) else "uvit",
+                "latent_hw": cfg.latent_hw, "channels": cfg.channels,
+                "patch": cfg.patch, "dim": cfg.dim, "heads": cfg.heads,
+                "txt_len": cfg.txt_len, "txt_dim": cfg.txt_dim,
+                "batch": cfg.batch, "tokens": cfg.tokens,
+                "params": names_by_model[mname]}
+        if isinstance(cfg, DitConfig):
+            mcfg["joint_blocks"] = cfg.joint_blocks
+            mcfg["single_blocks"] = cfg.single_blocks
+            mcfg["skip_blocks"] = cfg.skip_blocks
+        else:
+            mcfg["depth"] = cfg.depth
+        manifest["models"][mname] = mcfg
+        print(f"[weights] {mname}: {len(names)} tensors "
+              f"({sum(np.asarray(l).size for l in leaves):,} scalars, "
+              f"{time.time() - t0:.1f}s)")
+
+    # --- artifacts --------------------------------------------------------
+    def emit(art, kind, fn, inputs, extra, kernel_impl, param_keys=None):
+        name = art.name if not extra.get("pallas") else art.name + "_pallas"
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        t0 = time.time()
+        full_spec = spec_by_model[art.model]
+        if param_keys is None:
+            spec = full_spec
+        else:
+            spec = {k: full_spec[k] for k in param_keys}
+        pnames, _ = flatten_params(spec)
+        _, out_info = lower_artifact(fn, spec, inputs, path)
+        outs = jax.tree_util.tree_leaves(out_info)
+        entry = {
+            "name": name, "kind": kind, "model": art.model,
+            "file": f"{name}.hlo.txt", "kernel_impl": kernel_impl,
+            "params": pnames,
+            "inputs": [{"name": n, "shape": list(s.shape),
+                        "dtype": dtype_tag(s.dtype)} for n, s in inputs],
+            "outputs": [{"shape": list(o.shape),
+                         "dtype": dtype_tag(o.dtype)} for o in outs],
+        }
+        entry.update(extra)
+        manifest["artifacts"].append(entry)
+        print(f"[lower] {name} ({time.time() - t0:.1f}s)")
+
+    for art in steps:
+        cfg = MODELS[art.model]
+        fn, inputs = build_step(cfg, art, "jnp")
+        emit(art, "step", fn, inputs,
+             {"variant": art.variant, "ratio": art.ratio,
+              "regions": art.regions, "region_mode": art.region_mode},
+             "jnp")
+    for art in selects:
+        cfg = MODELS[art.model]
+        fn, inputs, pkeys = build_select(cfg, art, "jnp")
+        emit(art, "select", fn, inputs,
+             {"mode": art.mode, "ratio": art.ratio, "regions": art.regions},
+             "jnp", param_keys=pkeys)
+        if not isinstance(cfg, DitConfig) and art.mode != "random":
+            wfn, winputs, wkeys = build_weights_only(cfg, art, "jnp")
+
+            class _W:  # reuse emit(): name derives from select's name
+                model = art.model
+                name = art.name.replace("_select_", "_weights_")
+            emit(_W, "weights", wfn, winputs,
+                 {"mode": art.mode, "ratio": art.ratio,
+                  "regions": art.regions}, "jnp", param_keys=wkeys)
+
+    if args.pallas:
+        # Pallas-kernel variants of the hot artifacts (numerics-identical,
+        # TPU-shaped path) for cross-checking through the Rust runtime.
+        from .configs import StepArtifact, SelectArtifact
+        cfg = MODELS["uvit_xs"]
+        art = StepArtifact("uvit_xs", "toma", 0.5, 1, "global")
+        fn, inputs = build_step(cfg, art, "pallas")
+        emit(art, "step", fn, inputs,
+             {"variant": "toma", "ratio": 0.5, "regions": 1,
+              "region_mode": "global", "pallas": True}, "pallas")
+        sart = SelectArtifact("uvit_xs", "tile", 0.5, tiles_for(cfg))
+        fn, inputs, pkeys = build_select(cfg, sart, "pallas")
+        emit(sart, "select", fn, inputs,
+             {"mode": "tile", "ratio": 0.5, "regions": tiles_for(cfg),
+              "pallas": True}, "pallas", param_keys=pkeys)
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[manifest] {len(manifest['artifacts'])} artifacts -> {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

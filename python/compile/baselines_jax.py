@@ -1,0 +1,148 @@
+"""JAX implementations of the heuristic token-reduction baselines.
+
+These are faithful reimplementations of the comparison methods in Table 3,
+*including* their GPU-unfriendly primitives (argsort, gather, scatter-add),
+so that the overhead comparison against ToMA's dense-GEMM formulation is
+honest when both run through the same XLA/PJRT backend.
+
+  * ToMeSD (Bolya & Hoffman 2023): bipartite soft matching. Destinations are
+    one token per 2x2 window; sources are ranked by best-match similarity
+    (sort!), the top r*N are scatter-averaged into their destination, and
+    unmerge copies the destination embedding back to each merged source.
+  * ToFu (Kim et al. 2023): same matching, but each block either merges
+    (early blocks, features near-linear) or prunes (late blocks) -- we use
+    the static depth rule described in DESIGN.md in place of the online
+    linearity test.
+  * ToDo (Smith et al. 2024): downsamples only keys/values with uniform 2x2
+    spatial average pooling; queries stay at full length.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+
+
+def _grid_dst_mask(grid_h, grid_w):
+    """Boolean (N,) mask marking one destination per 2x2 window (top-left).
+
+    Computed with numpy: the partition is static (shape-only), so it must
+    not become a traced value inside the jitted step graph.
+    """
+    import numpy as np
+    r = np.arange(grid_h)[:, None]
+    c = np.arange(grid_w)[None, :]
+    return ((r % 2 == 0) & (c % 2 == 0)).reshape(-1)
+
+
+@dataclass
+class TomePlan:
+    """Static-shape bipartite merge plan for one step (shared over blocks)."""
+
+    dst_idx: jnp.ndarray      # (N_dst,) global ids of destination tokens
+    src_idx: jnp.ndarray      # (N_src,) global ids of source tokens
+    order: jnp.ndarray        # (B, N_src) src order by match quality (desc)
+    node_idx: jnp.ndarray     # (B, N_src) best dst slot per src
+    k: int                    # number of sources merged away
+    mode: str                 # "merge" (ToMe) or "prune" (ToFu late blocks)
+
+    @property
+    def merged_len(self) -> int:
+        return self.dst_idx.shape[0] + self.src_idx.shape[0] - self.k
+
+
+def tome_plan(h, grid_h, grid_w, ratio, mode="merge") -> TomePlan:
+    """Build the ToMeSD matching from hidden states h (B, N, d).
+
+    ``ratio`` is the fraction of the *total* sequence merged away; it is
+    capped by the source count (3/4 of tokens at 2x2 stride).
+    """
+    import numpy as np
+    b, n, _ = h.shape
+    mask = _grid_dst_mask(grid_h, grid_w)
+    dst_idx = jnp.asarray(np.where(mask)[0], jnp.int32)
+    src_idx = jnp.asarray(np.where(~mask)[0], jnp.int32)
+    n_src = src_idx.shape[0]
+    k = min(int(round(ratio * n)), n_src)
+
+    hn = ref.l2_normalize(h)
+    hd = hn[:, dst_idx]                                 # (B, N_dst, d)
+    hs = hn[:, src_idx]                                 # (B, N_src, d)
+    scores = jnp.einsum("bsd,btd->bst", hs, hd)         # (B, N_src, N_dst)
+    node_max = jnp.max(scores, axis=-1)
+    node_idx = jnp.argmax(scores, axis=-1).astype(jnp.int32)
+    # The GPU-inefficient step ToMA eliminates: a full sort over sources.
+    order = jnp.argsort(-node_max, axis=-1).astype(jnp.int32)
+    return TomePlan(dst_idx, src_idx, order, node_idx, k, mode)
+
+
+def tome_merge(plan: TomePlan, x):
+    """(B, N, d) -> (B, merged_len, d): kept sources first, then dests.
+
+    Merged sources are scatter-averaged into their destination (mode
+    "merge") or simply dropped (mode "prune", the ToFu late-block path).
+    """
+    b, n, d = x.shape
+    xs = x[:, plan.src_idx]                              # (B, N_src, d)
+    xd = x[:, plan.dst_idx]                              # (B, N_dst, d)
+    merged_sl = plan.order[:, :plan.k]                   # (B, k) src slots
+    kept_sl = plan.order[:, plan.k:]                     # (B, N_src - k)
+    x_kept = jnp.take_along_axis(xs, kept_sl[..., None], axis=1)
+
+    if plan.mode == "merge" and plan.k > 0:
+        tgt = jnp.take_along_axis(plan.node_idx, merged_sl, axis=1)  # (B, k)
+        x_merged = jnp.take_along_axis(xs, merged_sl[..., None], axis=1)
+        # Scattered writes: the second GPU-inefficient primitive.
+        sums = jax.vmap(lambda dd, ti, xm: dd.at[ti].add(xm))(
+            xd, tgt, x_merged)
+        cnt = jax.vmap(lambda ti: jnp.zeros((xd.shape[1],)).at[ti].add(1.0))(
+            tgt)
+        xd = sums / (cnt[..., None] + 1.0)
+    return jnp.concatenate([x_kept, xd], axis=1)
+
+
+def tome_unmerge(plan: TomePlan, y, n):
+    """Invert :func:`tome_merge`: copy dst embeddings back to merged srcs."""
+    b = y.shape[0]
+    d = y.shape[-1]
+    n_keep = plan.src_idx.shape[0] - plan.k
+    y_kept, y_dst = y[:, :n_keep], y[:, n_keep:]
+    merged_sl = plan.order[:, :plan.k]
+    kept_sl = plan.order[:, plan.k:]
+    tgt = jnp.take_along_axis(plan.node_idx, merged_sl, axis=1)
+    y_merged = jnp.take_along_axis(y_dst, tgt[..., None], axis=1)
+
+    out = jnp.zeros((b, n, d), y.dtype)
+
+    def place(o, slots, vals, base_idx):
+        gl = base_idx[slots]                             # (B?, m) global ids
+        return jax.vmap(lambda oo, ii, vv: oo.at[ii].set(vv))(o, gl, vals)
+
+    out = place(out, kept_sl, y_kept, plan.src_idx)
+    out = place(out, merged_sl, y_merged, plan.src_idx)
+    out = jax.vmap(lambda oo, vv: oo.at[plan.dst_idx].set(vv))(out, y_dst)
+    return out
+
+
+class TomeMerger:
+    """ToMe/ToFu adaptor exposing the same interface as toma_jax.Merger."""
+
+    def __init__(self, plan: TomePlan, n: int):
+        self.plan = plan
+        self.n = n
+        self.merged_tokens = plan.merged_len
+
+    def merge(self, x):
+        return tome_merge(self.plan, x)
+
+    def unmerge(self, y):
+        return tome_unmerge(self.plan, y, self.n)
+
+
+def todo_pool_kv(h, grid_h, grid_w):
+    """ToDo: 2x2 average-pool tokens on the spatial grid (for K/V only)."""
+    b, n, d = h.shape
+    g = h.reshape(b, grid_h // 2, 2, grid_w // 2, 2, d)
+    return g.mean(axis=(2, 4)).reshape(b, n // 4, d)

@@ -1,0 +1,216 @@
+"""Model / artifact configuration shared by model.py, aot.py and the tests.
+
+Every artifact the Rust runtime can load is enumerated here; ``aot.py``
+lowers the list to ``artifacts/*.hlo.txt`` plus a ``manifest.json`` that the
+Rust side parses (see ``rust/src/runtime/artifact.rs``).
+
+Naming convention (mirrors the paper's experiment grid):
+
+  <model>_step_<variant>[_r<ratio%>]        one denoising step -> eps
+  <model>_select_<mode>_r<ratio%>[_p<P>]    FL destination selection -> (idx, A)
+
+Variants:
+  baseline      full attention, no token reduction
+  toma          tile-based destination selection + global attention merge
+                (the paper's default "ToMA" row)
+  toma_stripe   selection and merge restricted to stripe regions
+  toma_tile     selection and merge restricted to tile regions
+  toma_once     merge once per transformer block (start/end) instead of
+                around each core module
+  tlb           theoretical lower bound: drop tokens, duplicate back
+  tome          ToMeSD bipartite soft matching (sort + gather/scatter)
+  tofu          ToFu merge/prune blend
+  todo          ToDo: KV downsampling only
+"""
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class UVitConfig:
+    """U-ViT-style latent denoiser (the SDXL stand-in)."""
+
+    name: str
+    latent_hw: int  # latent is (B, C, H, W) with H == W == latent_hw
+    channels: int = 4
+    patch: int = 1
+    dim: int = 192
+    depth: int = 6
+    heads: int = 6
+    mlp_ratio: int = 4
+    txt_len: int = 32
+    txt_dim: int = 96
+    batch: int = 2  # CFG pair
+
+    @property
+    def tokens(self) -> int:
+        return (self.latent_hw // self.patch) ** 2
+
+    @property
+    def grid(self) -> int:
+        return self.latent_hw // self.patch
+
+
+@dataclass(frozen=True)
+class DitConfig:
+    """DiT-style denoiser with Joint + Single blocks (the Flux stand-in)."""
+
+    name: str
+    latent_hw: int
+    channels: int = 4
+    patch: int = 1
+    dim: int = 192
+    joint_blocks: int = 3
+    single_blocks: int = 3
+    heads: int = 6
+    mlp_ratio: int = 4
+    txt_len: int = 32
+    txt_dim: int = 96
+    batch: int = 2
+    skip_blocks: int = 2  # paper: skip the first 10 of 57; scaled to our depth
+
+    @property
+    def tokens(self) -> int:
+        return (self.latent_hw // self.patch) ** 2
+
+    @property
+    def grid(self) -> int:
+        return self.latent_hw // self.patch
+
+
+# Default ToMA hyper-parameters (paper Sec. 5.1 / App. F).
+TAU = 0.1             # attention temperature for merge weights
+DEFAULT_TILES = 64    # destination-selection tile count for uvit_s (App F.2)
+DEST_EVERY = 10       # refresh destinations every 10 denoising steps
+WEIGHT_EVERY = 5      # refresh merge weights every 5 denoising steps
+
+UVIT_XS = UVitConfig(name="uvit_xs", latent_hw=16, dim=128, depth=4, heads=4,
+                     txt_len=16, txt_dim=64)
+UVIT_S = UVitConfig(name="uvit_s", latent_hw=32, dim=192, depth=6, heads=6,
+                    txt_len=32, txt_dim=96)
+DIT_S = DitConfig(name="dit_s", latent_hw=16, dim=192, txt_len=32, txt_dim=96)
+
+MODELS = {c.name: c for c in (UVIT_XS, UVIT_S, DIT_S)}
+
+RATIOS = (0.25, 0.50, 0.75)
+
+
+def tiles_for(cfg) -> int:
+    """Default tile count: keep tiles at 4x4 tokens (64 tiles at N=1024)."""
+    per_tile = 16
+    return max(1, cfg.tokens // per_tile)
+
+
+def stripes_for(cfg) -> int:
+    """Default stripe count: group 2 rows per stripe at N=1024 (paper: 64)."""
+    return max(1, cfg.grid // 2)
+
+
+def ratio_tag(r: float) -> str:
+    return f"r{int(round(r * 100)):02d}"
+
+
+@dataclass(frozen=True)
+class StepArtifact:
+    model: str
+    variant: str                 # see module docstring
+    ratio: Optional[float]       # None for baseline
+    regions: int = 1             # region count P used by the merge math
+    region_mode: str = "global"  # "global" | "tile" | "stripe"
+
+    @property
+    def name(self) -> str:
+        if self.variant == "baseline":
+            return f"{self.model}_step_baseline"
+        tag = ratio_tag(self.ratio)
+        if self.variant == "toma_tile" and self.regions != 0:
+            return f"{self.model}_step_{self.variant}_{tag}_p{self.regions}"
+        return f"{self.model}_step_{self.variant}_{tag}"
+
+
+@dataclass(frozen=True)
+class SelectArtifact:
+    model: str
+    mode: str                    # "tile" | "stripe" | "global" | "random"
+    ratio: float
+    regions: int                 # P (1 for global/random)
+
+    @property
+    def name(self) -> str:
+        tag = ratio_tag(self.ratio)
+        if self.mode == "tile":
+            return f"{self.model}_select_tile_{tag}_p{self.regions}"
+        return f"{self.model}_select_{self.mode}_{tag}"
+
+
+def enumerate_artifacts(model_names: Optional[List[str]] = None,
+                        quick: bool = False) -> Tuple[list, list]:
+    """Full artifact grid for the experiment suite.
+
+    ``quick`` restricts to the minimal set used by pytest (uvit_xs, r=0.5).
+    Returns (step_artifacts, select_artifacts).
+    """
+    steps, selects = [], []
+
+    def uvit_grid(m: str, ratios, variants, tile_sweep=False):
+        cfg = MODELS[m]
+        t, s = tiles_for(cfg), stripes_for(cfg)
+        steps.append(StepArtifact(m, "baseline", None))
+        for r in ratios:
+            for v in variants:
+                if v == "toma_stripe":
+                    steps.append(StepArtifact(m, v, r, s, "stripe"))
+                elif v == "toma_tile":
+                    steps.append(StepArtifact(m, v, r, t, "tile"))
+                elif v in ("toma", "toma_once"):
+                    # default ToMA: tile selection, global merge
+                    steps.append(StepArtifact(m, v, r, 1, "global"))
+                else:
+                    steps.append(StepArtifact(m, v, r, 1, "global"))
+            selects.append(SelectArtifact(m, "tile", r, t))
+            selects.append(SelectArtifact(m, "stripe", r, s))
+            selects.append(SelectArtifact(m, "global", r, 1))
+            selects.append(SelectArtifact(m, "random", r, 1))
+        if tile_sweep:
+            # Table 5 granularity sweep at r = 0.5.
+            for p in (4, 16, 64, 256):
+                if p == t:
+                    continue
+                if cfg.tokens % p == 0 and cfg.tokens // p >= 4:
+                    selects.append(SelectArtifact(m, "tile", 0.5, p))
+                    steps.append(StepArtifact(m, "toma_tile", 0.5, p, "tile"))
+
+    if quick:
+        uvit_grid("uvit_xs", [0.5],
+                  ["toma", "toma_stripe", "toma_tile", "toma_once",
+                   "tlb", "tome", "tofu", "todo", "toma_pinv", "toma_colsm"])
+        dedup_steps = list(dict.fromkeys(steps))
+        dedup_sel = list(dict.fromkeys(selects))
+        return dedup_steps, dedup_sel
+
+    names = model_names or ["uvit_xs", "uvit_s", "dit_s"]
+    if "uvit_xs" in names:
+        uvit_grid("uvit_xs", [0.5],
+                  ["toma", "toma_stripe", "toma_tile", "toma_once",
+                   "tlb", "tome", "tofu", "todo", "toma_pinv", "toma_colsm"])
+    if "uvit_s" in names:
+        uvit_grid("uvit_s", list(RATIOS),
+                  ["toma", "toma_stripe", "toma_tile", "toma_once",
+                   "tlb", "tome", "tofu", "todo"],
+                  tile_sweep=True)
+        # Table 7 unmerge ablation rows (transpose row == plain toma).
+        steps.append(StepArtifact("uvit_s", "toma_pinv", 0.5, 1, "global"))
+        steps.append(StepArtifact("uvit_s", "toma_colsm", 0.5, 1, "global"))
+    if "dit_s" in names:
+        m = "dit_s"
+        cfg = MODELS[m]
+        t = tiles_for(cfg)
+        steps.append(StepArtifact(m, "baseline", None))
+        for r in RATIOS:
+            steps.append(StepArtifact(m, "toma", r, 1, "global"))
+            steps.append(StepArtifact(m, "toma_tile", r, t, "tile"))
+            selects.append(SelectArtifact(m, "tile", r, t))
+            selects.append(SelectArtifact(m, "global", r, 1))
+
+    return list(dict.fromkeys(steps)), list(dict.fromkeys(selects))

@@ -1,0 +1,282 @@
+"""L2 JAX model: DitLite, the DiT-style denoiser (Flux.1 stand-in).
+
+Structure mirrors Flux: ``joint_blocks`` JointTransformer blocks (text and
+image projected separately, concatenated for attention) followed by
+``single_blocks`` SingleTransformer blocks (pre-concatenated sequence), with
+rotary positional embeddings (axial 2-D for image tokens, 1-D for text) and
+adaLN time modulation.
+
+ToMA-on-DiT rules (paper App. E):
+  * skip the first ``cfg.skip_blocks`` blocks (early blocks fuse text and
+    image features);
+  * merge text and image tokens *independently*, then concatenate;
+  * RoPE phases are **gathered at the destination token positions**, so the
+    merged sequence keeps valid positional structure.
+
+Off-the-shelf UNet-era methods (ToMe/ToFu/ToDo) have no such rules and break
+DiTs (all-black outputs) -- hence Table 2 benchmarks ToMA only, and so do we.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import DitConfig
+from .kernels import ref
+from .model import (_init_linear, _init_ln, linear, layernorm,
+                    timestep_embedding, heads_split, heads_join,
+                    patchify, unpatchify, multihead_sdpa)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_phase_table(cfg: DitConfig):
+    """Phases (T + N_img, dh/2): text 1-D, image axial 2-D (row||col)."""
+    dh = cfg.dim // cfg.heads
+    half = dh // 2
+    freqs = 1.0 / (10_000.0 ** (jnp.arange(half) / half))
+
+    t_pos = jnp.arange(cfg.txt_len, dtype=jnp.float32)
+    txt = t_pos[:, None] * freqs[None, :]
+
+    g = cfg.grid
+    rows = jnp.repeat(jnp.arange(g, dtype=jnp.float32), g)
+    cols = jnp.tile(jnp.arange(g, dtype=jnp.float32), (g,))
+    qh = half // 2
+    img = jnp.concatenate(
+        [rows[:, None] * freqs[None, :qh], cols[:, None] * freqs[None, qh:]],
+        axis=-1)
+    return jnp.concatenate([txt, img], axis=0)  # (T + N, half)
+
+
+def apply_rope(x, phases):
+    """Rotate (B, H, N, dh) by phases (B or 1, N, dh/2)."""
+    b, h, n, dh = x.shape
+    half = dh // 2
+    cos = jnp.cos(phases)[:, None, :, :]
+    sin = jnp.sin(phases)[:, None, :, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                           axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def init_dit(cfg: DitConfig, seed: int = 0):
+    key = jax.random.PRNGKey(seed)
+    d = cfg.dim
+    p_in = cfg.channels * cfg.patch * cfg.patch
+    n_blocks = cfg.joint_blocks + cfg.single_blocks
+    ks = jax.random.split(key, 8 + n_blocks)
+    params = {
+        "patch": _init_linear(ks[0], p_in, d),
+        "txt_in": _init_linear(ks[1], cfg.txt_dim, d),
+        "time1": _init_linear(ks[2], d, d),
+        "time2": _init_linear(ks[3], d, d),
+        "final_ln": _init_ln(d),
+        "final_mod": _init_linear(ks[4], d, 2 * d, scale=0.02),
+        "head": _init_linear(ks[5], d, p_in, scale=0.02),
+        "joint": [],
+        "single": [],
+    }
+    for i in range(cfg.joint_blocks):
+        bk = jax.random.split(ks[8 + i], 12)
+        params["joint"].append({
+            "img_mod": _init_linear(bk[0], d, 6 * d, scale=0.02),
+            "txt_mod": _init_linear(bk[1], d, 6 * d, scale=0.02),
+            "img_ln1": _init_ln(d), "txt_ln1": _init_ln(d),
+            "img_qkv": _init_linear(bk[2], d, 3 * d),
+            "txt_qkv": _init_linear(bk[3], d, 3 * d),
+            "img_proj": _init_linear(bk[4], d, d, scale=0.02),
+            "txt_proj": _init_linear(bk[5], d, d, scale=0.02),
+            "img_ln2": _init_ln(d), "txt_ln2": _init_ln(d),
+            "img_mlp1": _init_linear(bk[6], d, cfg.mlp_ratio * d),
+            "img_mlp2": _init_linear(bk[7], cfg.mlp_ratio * d, d, scale=0.02),
+            "txt_mlp1": _init_linear(bk[8], d, cfg.mlp_ratio * d),
+            "txt_mlp2": _init_linear(bk[9], cfg.mlp_ratio * d, d, scale=0.02),
+        })
+    for i in range(cfg.single_blocks):
+        bk = jax.random.split(ks[8 + cfg.joint_blocks + i], 6)
+        params["single"].append({
+            "mod": _init_linear(bk[0], d, 6 * d, scale=0.02),
+            "ln1": _init_ln(d),
+            "qkv": _init_linear(bk[1], d, 3 * d),
+            "proj": _init_linear(bk[2], d, d, scale=0.02),
+            "ln2": _init_ln(d),
+            "mlp1": _init_linear(bk[3], d, cfg.mlp_ratio * d),
+            "mlp2": _init_linear(bk[4], cfg.mlp_ratio * d, d, scale=0.02),
+        })
+    return params
+
+
+def _mod6(p, temb):
+    m = linear(p, jax.nn.silu(temb))
+    return [c[:, None, :] for c in jnp.split(m, 6, axis=-1)]
+
+
+def _modulate(ln, x, shift, scale):
+    return layernorm(ln, x) * (1.0 + scale) + shift
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _attn_with_rope(q, k, v, phases, heads):
+    qh, kh, vh = (heads_split(z, heads) for z in (q, k, v))
+    qh = apply_rope(qh, phases)
+    kh = apply_rope(kh, phases)
+    return heads_join(ref.sdpa(qh, kh, vh))
+
+
+class DitMergeState:
+    """Per-step merged-token bookkeeping for the DiT path.
+
+    Holds independent text/image mergers plus the *global* positions of the
+    selected destinations (for RoPE gathers). ``None`` mergers mean the
+    corresponding modality is left at full resolution.
+    """
+
+    def __init__(self, txt_merger, img_merger, txt_pos, img_pos):
+        self.txt = txt_merger
+        self.img = img_merger
+        self.txt_pos = txt_pos    # (B, D_txt) int32 into the phase table
+        self.img_pos = img_pos    # (B, D_img)
+
+    def phases(self, table, batch, txt_len, n_img):
+        """Merged-sequence phases (B, D_txt + D_img, dh/2)."""
+        if self.txt is None:
+            tp = jnp.broadcast_to(table[:txt_len][None], (batch, txt_len,
+                                                          table.shape[-1]))
+        else:
+            tp = table[self.txt_pos]
+        if self.img is None:
+            ip = jnp.broadcast_to(table[txt_len:][None], (batch, n_img,
+                                                          table.shape[-1]))
+        else:
+            ip = table[self.img_pos]
+        return jnp.concatenate([tp, ip], axis=1)
+
+
+def apply_dit(params, cfg: DitConfig, x_t, t, cond,
+              merge_state: "DitMergeState | None" = None,
+              kernel_impl: str = "jnp"):
+    """One denoising step (velocity/eps prediction) for DitLite."""
+    img = linear(params["patch"], patchify(x_t, cfg))
+    txt = linear(params["txt_in"], cond)
+    temb = timestep_embedding(t, cfg.dim)
+    temb = linear(params["time2"], jax.nn.silu(linear(params["time1"], temb)))
+    table = rope_phase_table(cfg)
+    b = img.shape[0]
+    n_img, n_txt = cfg.tokens, cfg.txt_len
+    heads = cfg.heads
+
+    full_phases = jnp.broadcast_to(table[None], (b,) + table.shape)
+
+    def block_merge(ms, block_index):
+        return ms if (ms is not None and block_index >= cfg.skip_blocks) \
+            else None
+
+    bi = 0
+    for bp in params["joint"]:
+        ms = block_merge(merge_state, bi)
+        bi += 1
+        im_sh, im_sc, im_g, im_msh, im_msc, im_mg = _mod6(bp["img_mod"], temb)
+        tx_sh, tx_sc, tx_g, tx_msh, tx_msc, tx_mg = _mod6(bp["txt_mod"], temb)
+
+        h_img = _modulate(bp["img_ln1"], img, im_sh, im_sc)
+        h_txt = _modulate(bp["txt_ln1"], txt, tx_sh, tx_sc)
+        if ms is not None:
+            h_img_m = ms.img.merge(h_img) if ms.img else h_img
+            h_txt_m = ms.txt.merge(h_txt) if ms.txt else h_txt
+            phases = ms.phases(table, b, n_txt, n_img)
+        else:
+            h_img_m, h_txt_m, phases = h_img, h_txt, full_phases
+
+        qkv_i = linear(bp["img_qkv"], h_img_m)
+        qkv_t = linear(bp["txt_qkv"], h_txt_m)
+        qi, ki, vi = jnp.split(qkv_i, 3, axis=-1)
+        qt, kt, vt = jnp.split(qkv_t, 3, axis=-1)
+        q = jnp.concatenate([qt, qi], axis=1)
+        k = jnp.concatenate([kt, ki], axis=1)
+        v = jnp.concatenate([vt, vi], axis=1)
+        o = _attn_with_rope(q, k, v, phases, heads)
+        dt = h_txt_m.shape[1]
+        o_txt, o_img = o[:, :dt], o[:, dt:]
+        o_img = linear(bp["img_proj"], o_img)
+        o_txt = linear(bp["txt_proj"], o_txt)
+        if ms is not None:
+            o_img = ms.img.unmerge(o_img) if ms.img else o_img
+            o_txt = ms.txt.unmerge(o_txt) if ms.txt else o_txt
+        img = img + im_g * o_img
+        txt = txt + tx_g * o_txt
+
+        # Per-modality MLP (merged when active).
+        h_img = _modulate(bp["img_ln2"], img, im_msh, im_msc)
+        h_txt = _modulate(bp["txt_ln2"], txt, tx_msh, tx_msc)
+        if ms is not None and ms.img is not None:
+            f = linear(bp["img_mlp2"], jax.nn.gelu(
+                linear(bp["img_mlp1"], ms.img.merge(h_img))))
+            img = img + im_mg * ms.img.unmerge(f)
+        else:
+            img = img + im_mg * linear(bp["img_mlp2"], jax.nn.gelu(
+                linear(bp["img_mlp1"], h_img)))
+        if ms is not None and ms.txt is not None:
+            f = linear(bp["txt_mlp2"], jax.nn.gelu(
+                linear(bp["txt_mlp1"], ms.txt.merge(h_txt))))
+            txt = txt + tx_mg * ms.txt.unmerge(f)
+        else:
+            txt = txt + tx_mg * linear(bp["txt_mlp2"], jax.nn.gelu(
+                linear(bp["txt_mlp1"], h_txt)))
+
+    for bp in params["single"]:
+        ms = block_merge(merge_state, bi)
+        bi += 1
+        sh, sc, g, msh, msc, mg = _mod6(bp["mod"], temb)
+        # SingleTransformer: the sequence is already concatenated; split back
+        # into modalities, merge each, re-concatenate (App. E rule).
+        x = jnp.concatenate([txt, img], axis=1)
+        h = _modulate(bp["ln1"], x, sh, sc)
+        if ms is not None:
+            h_txt, h_img = h[:, :n_txt], h[:, n_txt:]
+            h_txt_m = ms.txt.merge(h_txt) if ms.txt else h_txt
+            h_img_m = ms.img.merge(h_img) if ms.img else h_img
+            h_m = jnp.concatenate([h_txt_m, h_img_m], axis=1)
+            phases = ms.phases(table, b, n_txt, n_img)
+        else:
+            h_m, phases = h, full_phases
+        qkv = linear(bp["qkv"], h_m)
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        o = linear(bp["proj"], _attn_with_rope(q, k, v, phases, heads))
+        if ms is not None:
+            dt = h_txt_m.shape[1]
+            o_txt = ms.txt.unmerge(o[:, :dt]) if ms.txt else o[:, :dt]
+            o_img = ms.img.unmerge(o[:, dt:]) if ms.img else o[:, dt:]
+            o = jnp.concatenate([o_txt, o_img], axis=1)
+        x = x + g * o
+
+        h = _modulate(bp["ln2"], x, msh, msc)
+        if ms is not None:
+            h_txt, h_img = h[:, :n_txt], h[:, n_txt:]
+            parts = []
+            for mod, hm in ((ms.txt, h_txt), (ms.img, h_img)):
+                if mod is not None:
+                    f = linear(bp["mlp2"], jax.nn.gelu(
+                        linear(bp["mlp1"], mod.merge(hm))))
+                    parts.append(mod.unmerge(f))
+                else:
+                    parts.append(linear(bp["mlp2"], jax.nn.gelu(
+                        linear(bp["mlp1"], hm))))
+            x = x + mg * jnp.concatenate(parts, axis=1)
+        else:
+            x = x + mg * linear(bp["mlp2"], jax.nn.gelu(linear(bp["mlp1"],
+                                                               h)))
+        txt, img = x[:, :n_txt], x[:, n_txt:]
+
+    mod = linear(params["final_mod"], jax.nn.silu(temb))
+    f_sh, f_sc = (c[:, None, :] for c in jnp.split(mod, 2, axis=-1))
+    tok = layernorm(params["final_ln"], img) * (1.0 + f_sc) + f_sh
+    return unpatchify(linear(params["head"], tok), cfg)

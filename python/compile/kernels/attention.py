@@ -1,0 +1,42 @@
+"""L1 Pallas kernel: per-head SDPA block for the model's attention modules.
+
+One grid step computes full attention for one (batch, head) pair with the
+whole Q/K/V head slice staged in VMEM. At the merged sequence lengths ToMA
+produces (D <= 1024, d_head <= 64) the logits block fits VMEM comfortably, so
+a flash-style streaming decomposition is unnecessary; the fused
+softmax(QK^T)V maps to two MXU GEMMs + a VPU softmax.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sdpa_kernel(q_ref, k_ref, v_ref, o_ref):
+    q = q_ref[0]              # (Nq, dh)
+    k = k_ref[0]              # (Nk, dh)
+    v = v_ref[0]              # (Nk, dh)
+    scale = 1.0 / jnp.sqrt(q.shape[-1]).astype(q.dtype)
+    logits = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    logits = logits - jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits)
+    w = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[0] = jnp.dot(w, v, preferred_element_type=jnp.float32)
+
+
+def sdpa_pallas(q, k, v):
+    """SDPA over (G, N, dh) per-head slices (G = batch * heads)."""
+    g, nq, dh = q.shape
+    nk = k.shape[1]
+    return pl.pallas_call(
+        _sdpa_kernel,
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((1, nq, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, nk, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, nk, dh), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, nq, dh), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, nq, dh), q.dtype),
+        interpret=True,
+    )(q, k, v)

@@ -1,0 +1,80 @@
+"""L1 Pallas kernel: fused attention-based merge (Sec. 4.2.1).
+
+One grid step processes one (batch x region) block entirely in VMEM:
+
+    logits = (D_n X_n^T) / tau          D_loc x N_loc   (MXU GEMM)
+    A      = softmax_col(logits)        column = source token
+    A~     = row_normalize(A)
+    X_m    = A~ X                       D_loc x d       (MXU GEMM)
+
+Fusing the two softmax passes with both GEMMs keeps the region resident in
+VMEM for the whole merge: a single HBM->VMEM round-trip instead of the three
+a composition of jnp ops would need (TPU analogue of the paper's "fuse with
+existing attention kernels" note).
+
+The destination gather (``x[idx]``) stays *outside* the kernel: XLA lowers it
+to a cheap dynamic-gather and it would otherwise force scalar loads in VMEM.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; numerics are validated against ``ref.py`` by pytest.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EPS = 1e-8
+
+
+def _merge_kernel(xn_ref, dn_ref, x_ref, a_ref, at_ref, xm_ref, *, tau):
+    xn = xn_ref[0]            # (N_loc, d) normalized tokens
+    dn = dn_ref[0]            # (D_loc, d) normalized destinations
+    x = x_ref[0]              # (N_loc, d) raw tokens
+
+    logits = jnp.dot(dn, xn.T, preferred_element_type=jnp.float32) / tau
+    # Column softmax: normalize over destinations for each source token.
+    logits = logits - jnp.max(logits, axis=0, keepdims=True)
+    e = jnp.exp(logits)
+    a = e / (jnp.sum(e, axis=0, keepdims=True) + EPS)
+    # Row normalization: each destination row becomes a convex combination.
+    at = a / (jnp.sum(a, axis=1, keepdims=True) + EPS)
+
+    a_ref[0] = a
+    at_ref[0] = at
+    xm_ref[0] = jnp.dot(at, x, preferred_element_type=jnp.float32)
+
+
+def merge_pallas(x, idx, tau):
+    """Fused merge for x (G, N, d) and destination indices idx (G, D).
+
+    Returns (A, A_tilde, X_merged) matching ``ref.merge_weights`` +
+    ``ref.merge``. G is the flattened batch*regions grid dimension.
+    """
+    g, n, d = x.shape
+    k = idx.shape[-1]
+    xn = x / (jnp.linalg.norm(x, axis=-1, keepdims=True) + EPS)
+    dn = jnp.take_along_axis(xn, idx[..., None].astype(jnp.int32), axis=-2)
+
+    kernel = functools.partial(_merge_kernel, tau=tau)
+    return pl.pallas_call(
+        kernel,
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((1, n, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, k, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, n, d), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k, n), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, k, n), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, k, d), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((g, k, n), x.dtype),
+            jax.ShapeDtypeStruct((g, k, n), x.dtype),
+            jax.ShapeDtypeStruct((g, k, d), x.dtype),
+        ],
+        interpret=True,
+    )(xn, dn, x)

@@ -1,0 +1,161 @@
+"""Pure-jnp reference oracle for every L1 kernel.
+
+These are the ground-truth implementations of the paper's operators:
+
+  * cosine similarity matrix  (Sec. 4.1, ``S_ij = cos(X_i, X_j)``)
+  * greedy facility-location destination selection (Alg. 2, cache form of
+    App. A.1/A.2)
+  * attention-based merge weights ``A`` (column softmax) and row-normalized
+    ``A~`` (Sec. 4.2.1)
+  * merge ``A~ X``, unmerge ``A~^T X'`` and the Moore-Penrose variant
+    (Sec. 4.2.2)
+
+The Pallas kernels in this package are validated against these functions by
+``python/tests``; the Rust host implementation mirrors them and is
+cross-checked through the AOT artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-8
+
+
+def l2_normalize(x, axis=-1):
+    return x / (jnp.linalg.norm(x, axis=axis, keepdims=True) + EPS)
+
+
+def cosine_similarity(x):
+    """S[..., i, j] = cos(x_i, x_j) for x of shape (..., N, d)."""
+    xn = l2_normalize(x)
+    return jnp.einsum("...id,...jd->...ij", xn, xn)
+
+
+def fl_select(sim, k):
+    """Greedy facility-location selection (Alg. 2).
+
+    sim: (..., N, N) similarity matrix.
+    Returns int32 indices of shape (..., k), sorted ascending.
+
+    Uses the cached-max formulation of App. A.1: the marginal gain of a
+    candidate ``i`` is ``sum_j max(0, S_ij - m_j)`` where ``m_j`` is the best
+    similarity token ``j`` currently achieves against the selected set.
+    ``m`` is initialised to -1 (the cosine lower bound) so the first
+    iteration reduces to the row-sum rule of Alg. 2.
+    """
+    n = sim.shape[-1]
+    batch = sim.shape[:-2]
+    neg_inf = jnp.asarray(-jnp.inf, sim.dtype)
+
+    m0 = jnp.full(batch + (n,), -1.0, sim.dtype)
+    avail0 = jnp.ones(batch + (n,), bool)
+
+    def body(carry, _):
+        m, avail = carry
+        # gains[..., i] = sum_j max(0, S_ij - m_j)
+        gains = jnp.sum(jnp.maximum(sim - m[..., None, :], 0.0), axis=-1)
+        gains = jnp.where(avail, gains, neg_inf)
+        t = jnp.argmax(gains, axis=-1)  # (...,)
+        row = jnp.take_along_axis(
+            sim, t[..., None, None].astype(jnp.int32), axis=-2
+        )[..., 0, :]
+        m = jnp.maximum(m, row)
+        avail = avail & ~jax.nn.one_hot(t, n, dtype=bool)
+        return (m, avail), t.astype(jnp.int32)
+
+    (_, _), idx = jax.lax.scan(body, (m0, avail0), None, length=k)
+    # idx: (k, ...) -> (..., k), sorted for deterministic downstream gathers.
+    idx = jnp.moveaxis(idx, 0, -1)
+    return jnp.sort(idx, axis=-1)
+
+
+def fl_objective(sim, idx):
+    """Facility-location value f_FL(D) = sum_i max_{j in D} S_ij."""
+    cols = jnp.take_along_axis(
+        sim, idx[..., None, :].astype(jnp.int32),
+        axis=-1)  # (..., N, k)
+    return jnp.sum(jnp.max(cols, axis=-1), axis=-1)
+
+
+def merge_weights(x, idx, tau):
+    """Build the merge operator A~ from token matrix x and destinations idx.
+
+    x:   (..., N, d) hidden states.
+    idx: (..., D) destination indices.
+    Returns (A, A_tilde):
+      A        (..., D, N) column-softmax attention (each source column sums
+               to one over destinations) -- Sec. 4.2.1,
+      A_tilde  (..., D, N) row-normalized merge weights (each destination row
+               sums to one).
+    Cosine-normalized logits with temperature tau.
+    """
+    xn = l2_normalize(x)
+    dn = jnp.take_along_axis(xn, idx[..., None].astype(jnp.int32), axis=-2)
+    logits = jnp.einsum("...kd,...nd->...kn", dn, xn) / tau
+    a = jax.nn.softmax(logits, axis=-2)          # column softmax (over D)
+    a_tilde = a / (jnp.sum(a, axis=-1, keepdims=True) + EPS)  # row norm
+    return a, a_tilde
+
+
+def merge(a_tilde, x):
+    """X_merged = A~ X  -- (..., D, N) @ (..., N, d)."""
+    return jnp.einsum("...kn,...nd->...kd", a_tilde, x)
+
+
+def unmerge_transpose(a_tilde, y):
+    """X'_unmerged = A~^T X'  (paper default)."""
+    return jnp.einsum("...kn,...kd->...nd", a_tilde, y)
+
+
+def unmerge_colsoftmax(a, y):
+    """Extension: redistribute with the column-softmax weights A themselves.
+
+    Each source token receives a convex combination over destinations
+    (columns of A sum to one), so reconstruction of an unchanged token is
+    exact in the tau -> 0 limit. Not in the paper; reported as an extra
+    ablation row.
+    """
+    return jnp.einsum("...kn,...kd->...nd", a, y)
+
+
+def _newton_schulz_inverse(g, iters=24):
+    """Inverse of an SPD matrix via Newton-Schulz iteration.
+
+    Used instead of ``jnp.linalg.solve``: LAPACK lowers to a typed-FFI
+    custom call that the pinned xla_extension 0.5.1 runtime rejects, while
+    this is pure matmuls (and MXU-friendly on real TPUs). Quadratic
+    convergence from X0 = G^T / (||G||_1 ||G||_inf).
+    """
+    d = g.shape[-1]
+    eye = jnp.eye(d, dtype=g.dtype)
+    norm1 = jnp.max(jnp.sum(jnp.abs(g), axis=-1), axis=-1)
+    norminf = jnp.max(jnp.sum(jnp.abs(g), axis=-2), axis=-1)
+    x = jnp.swapaxes(g, -1, -2) / (norm1 * norminf)[..., None, None]
+
+    def body(_, x):
+        gx = jnp.einsum("...ij,...jk->...ik", g, x)
+        return jnp.einsum("...ij,...jk->...ik", x, 2.0 * eye - gx)
+
+    return jax.lax.fori_loop(0, iters, body, x)
+
+
+def unmerge_pinv(a_tilde, y):
+    """Least-squares unmerge with the Moore-Penrose pseudo-inverse:
+
+    X' = A~^+ y = A~^T (A~ A~^T)^{-1} y      (Sec. 4.2.2 ablation)
+    """
+    gram = jnp.einsum("...kn,...ln->...kl", a_tilde, a_tilde)
+    d = gram.shape[-1]
+    gram = gram + 1e-5 * jnp.eye(d, dtype=gram.dtype)
+    inv = _newton_schulz_inverse(gram)
+    z = jnp.einsum("...ij,...jd->...id", inv, y)
+    return jnp.einsum("...kn,...kd->...nd", a_tilde, z)
+
+
+def sdpa(q, k, v, scale=None):
+    """Reference scaled-dot-product attention over (..., N, d)."""
+    d = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d).astype(q.dtype)
+    logits = jnp.einsum("...qd,...kd->...qk", q, k) * scale
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("...qk,...kd->...qd", w, v)

@@ -1,0 +1,34 @@
+"""L1 Pallas kernel: transpose unmerge (Sec. 4.2.2 default path).
+
+    X'_unmerged = A~^T X'        N_loc x d  =  (D_loc x N_loc)^T @ (D_loc x d)
+
+A single MXU GEMM per (batch x region) block; A~ is laid out row-major per
+region so merge and unmerge read the same buffer without relayout.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _unmerge_kernel(at_ref, y_ref, o_ref):
+    at = at_ref[0]            # (D_loc, N_loc)
+    y = y_ref[0]              # (D_loc, d)
+    o_ref[0] = jnp.dot(at.T, y, preferred_element_type=jnp.float32)
+
+
+def unmerge_pallas(a_tilde, y):
+    """Unmerge for a_tilde (G, D, N) and module output y (G, D, d)."""
+    g, k, n = a_tilde.shape
+    d = y.shape[-1]
+    return pl.pallas_call(
+        _unmerge_kernel,
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((1, k, n), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, k, d), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, n, d), y.dtype),
+        interpret=True,
+    )(a_tilde, y)

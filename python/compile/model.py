@@ -1,0 +1,229 @@
+"""L2 JAX model: UVitLite, the U-ViT-style latent denoiser (SDXL stand-in).
+
+Patch-embed -> ``depth`` transformer blocks (self-attn, cross-attn, MLP,
+pre-LN) -> head -> unpatchify. Token reduction hooks wrap each core module
+exactly as Alg. 3 prescribes:
+
+    x <- x + unmerge( F( merge( LN(x) ) ) )
+
+so the baseline, every ToMA variant, TLB and the heuristic baselines all
+share one code path differing only in the bound ``merger``.
+
+Weights are random-init with a fixed seed (see DESIGN.md: ToMA is
+training-free and architecture-agnostic; the experiments measure *where
+tokens are merged and what that costs*, which does not depend on trained
+weights). All parameters are exported via ``aot.py`` and fed from Rust at
+runtime -- nothing is baked into the HLO.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .configs import UVitConfig
+from .kernels import ref
+from .kernels.attention import sdpa_pallas
+from . import baselines_jax
+
+
+# ---------------------------------------------------------------------------
+# Layers
+# ---------------------------------------------------------------------------
+
+def _init_linear(key, d_in, d_out, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    kw, _ = jax.random.split(key)
+    return {
+        "w": jax.random.normal(kw, (d_in, d_out), jnp.float32) * scale,
+        "b": jnp.zeros((d_out,), jnp.float32),
+    }
+
+
+def linear(p, x):
+    return x @ p["w"] + p["b"]
+
+
+def _init_ln(d):
+    return {"g": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(p, x, eps=1e-6):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * p["g"] + p["b"]
+
+
+def timestep_embedding(t, dim, max_period=10_000.0):
+    """Sinusoidal embedding of (B,) timesteps -> (B, dim)."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(max_period) * jnp.arange(half) / half)
+    ang = t[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.cos(ang), jnp.sin(ang)], axis=-1)
+
+
+def heads_split(x, heads):
+    b, n, d = x.shape
+    return x.reshape(b, n, heads, d // heads).transpose(0, 2, 1, 3)
+
+
+def heads_join(x):
+    b, h, n, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, n, h * dh)
+
+
+def multihead_sdpa(q, k, v, heads, kernel_impl="jnp"):
+    """Multi-head SDPA; optionally routed through the Pallas L1 kernel."""
+    qh, kh, vh = (heads_split(z, heads) for z in (q, k, v))
+    if kernel_impl == "pallas":
+        b, h, nq, dh = qh.shape
+        nk = kh.shape[2]
+        o = sdpa_pallas(qh.reshape(b * h, nq, dh), kh.reshape(b * h, nk, dh),
+                        vh.reshape(b * h, nk, dh)).reshape(b, h, nq, dh)
+    else:
+        o = ref.sdpa(qh, kh, vh)
+    return heads_join(o)
+
+
+# ---------------------------------------------------------------------------
+# UVitLite
+# ---------------------------------------------------------------------------
+
+def init_uvit(cfg: UVitConfig, seed: int = 0):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 8 + cfg.depth)
+    d = cfg.dim
+    p_in = cfg.channels * cfg.patch * cfg.patch
+    params = {
+        "patch": _init_linear(ks[0], p_in, d),
+        "pos": jax.random.normal(ks[1], (cfg.tokens, d), jnp.float32) * 0.02,
+        "time1": _init_linear(ks[2], d, d),
+        "time2": _init_linear(ks[3], d, d),
+        "txt": _init_linear(ks[4], cfg.txt_dim, d),
+        "final_ln": _init_ln(d),
+        "head": _init_linear(ks[5], d, p_in, scale=0.02),
+        "blocks": [],
+    }
+    for i in range(cfg.depth):
+        bk = jax.random.split(ks[8 + i], 8)
+        params["blocks"].append({
+            "ln1": _init_ln(d),
+            "qkv": _init_linear(bk[0], d, 3 * d),
+            "proj": _init_linear(bk[1], d, d, scale=0.02),
+            "ln2": _init_ln(d),
+            "q_x": _init_linear(bk[2], d, d),
+            "kv_c": _init_linear(bk[3], d, 2 * d),
+            "cproj": _init_linear(bk[4], d, d, scale=0.02),
+            "ln3": _init_ln(d),
+            "mlp1": _init_linear(bk[5], d, cfg.mlp_ratio * d),
+            "mlp2": _init_linear(bk[6], cfg.mlp_ratio * d, d, scale=0.02),
+        })
+    return params
+
+
+def patchify(x, cfg):
+    """(B, C, H, W) -> (B, N, C*p*p) tokens (row-major over the grid)."""
+    b, c, h, w = x.shape
+    p = cfg.patch
+    x = x.reshape(b, c, h // p, p, w // p, p)
+    x = x.transpose(0, 2, 4, 1, 3, 5)
+    return x.reshape(b, (h // p) * (w // p), c * p * p)
+
+
+def unpatchify(tok, cfg):
+    b, n, _ = tok.shape
+    p, c, g = cfg.patch, cfg.channels, cfg.grid
+    x = tok.reshape(b, g, g, c, p, p)
+    x = x.transpose(0, 3, 1, 4, 2, 5)
+    return x.reshape(b, c, g * p, g * p)
+
+
+def _self_attn(bp, h, heads, kernel_impl, kv_override=None):
+    qkv = linear(bp["qkv"], h)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    if kv_override is not None:   # ToDo: pooled keys/values
+        kvp = linear(bp["qkv"], kv_override)
+        _, k, v = jnp.split(kvp, 3, axis=-1)
+    return linear(bp["proj"], multihead_sdpa(q, k, v, heads, kernel_impl))
+
+
+def _cross_attn(bp, h, ctx, heads, kernel_impl):
+    q = linear(bp["q_x"], h)
+    kv = linear(bp["kv_c"], ctx)
+    k, v = jnp.split(kv, 2, axis=-1)
+    return linear(bp["cproj"], multihead_sdpa(q, k, v, heads, kernel_impl))
+
+
+def _mlp(bp, h):
+    return linear(bp["mlp2"], jax.nn.gelu(linear(bp["mlp1"], h)))
+
+
+def embed_tokens(params, cfg, x_t, t):
+    """Patch-embed + positional + time conditioning -> (B, N, d).
+
+    This is also the representation destination selection runs on (the
+    block-0 input hidden state -- see DESIGN.md).
+    """
+    tok = linear(params["patch"], patchify(x_t, cfg)) + params["pos"]
+    temb = timestep_embedding(t, cfg.dim)
+    temb = linear(params["time2"], jax.nn.silu(linear(params["time1"], temb)))
+    return tok + temb[:, None, :]
+
+
+def apply_uvit(params, cfg: UVitConfig, x_t, t, cond,
+               variant="baseline", merger=None, kernel_impl="jnp"):
+    """One denoising step: predict eps from (x_t, t, cond).
+
+    variant selects the token-reduction wiring:
+      baseline          plain transformer
+      toma/tome/tofu/tlb   per-module merge via the bound ``merger``
+      toma_once         merge once per block (start/end)
+      todo              pooled K/V inside self-attention only
+    """
+    x = embed_tokens(params, cfg, x_t, t)
+    ctx = linear(params["txt"], cond)
+    heads = cfg.heads
+
+    per_module = variant in ("toma", "toma_stripe", "toma_tile",
+                             "toma_pinv", "toma_colsm",
+                             "tome", "tofu", "tlb")
+    for bi, bp in enumerate(params["blocks"]):
+        # ``merger`` is either a bound (un)merge operator shared across
+        # blocks (ToMA: Sec. 4.3.2 weight sharing) or a factory called with
+        # the block input -- ToMe/ToFu rebuild their matching per block,
+        # which is exactly the recurring overhead ToMA amortizes away.
+        m = merger(x, bi) if callable(merger) else merger
+        if variant == "toma_once" and m is not None:
+            xm = m.merge(x)
+            xm = xm + _self_attn(bp, layernorm(bp["ln1"], xm), heads,
+                                 kernel_impl)
+            xm = xm + _cross_attn(bp, layernorm(bp["ln2"], xm), ctx, heads,
+                                  kernel_impl)
+            xm = xm + _mlp(bp, layernorm(bp["ln3"], xm))
+            x = m.unmerge(xm)
+            continue
+        if variant == "todo":
+            h = layernorm(bp["ln1"], x)
+            kv = baselines_jax.todo_pool_kv(h, cfg.grid, cfg.grid)
+            x = x + _self_attn(bp, h, heads, kernel_impl, kv_override=kv)
+            x = x + _cross_attn(bp, layernorm(bp["ln2"], x), ctx, heads,
+                                kernel_impl)
+            x = x + _mlp(bp, layernorm(bp["ln3"], x))
+            continue
+        if per_module and m is not None:
+            h = layernorm(bp["ln1"], x)
+            x = x + m.unmerge(_self_attn(bp, m.merge(h), heads, kernel_impl))
+            h = layernorm(bp["ln2"], x)
+            x = x + m.unmerge(_cross_attn(bp, m.merge(h), ctx, heads,
+                                          kernel_impl))
+            h = layernorm(bp["ln3"], x)
+            x = x + m.unmerge(_mlp(bp, m.merge(h)))
+        else:
+            x = x + _self_attn(bp, layernorm(bp["ln1"], x), heads,
+                               kernel_impl)
+            x = x + _cross_attn(bp, layernorm(bp["ln2"], x), ctx, heads,
+                                kernel_impl)
+            x = x + _mlp(bp, layernorm(bp["ln3"], x))
+
+    tok = linear(params["head"], layernorm(params["final_ln"], x))
+    return unpatchify(tok, cfg)

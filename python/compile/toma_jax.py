@@ -1,0 +1,207 @@
+"""L2 ToMA operators: region partitioning, destination selection, (un)merge.
+
+This module is the JAX-side implementation of Sec. 4 used inside the model
+graphs. Region layout (Sec. 4.3.1):
+
+  * ``stripe``: tokens grouped by contiguous rows -- a pure reshape, no data
+    movement (the memory-contiguous fast path).
+  * ``tile``:   2-D tiles preserving horizontal + vertical proximity -- one
+    reshape + transpose each way (the higher-fidelity path).
+  * ``global``: single region covering the whole sequence.
+
+``kernel_impl`` switches the inner operators between the pure-jnp reference
+("jnp", default for production artifacts -- XLA fuses it well on CPU) and the
+Pallas kernels ("pallas", lowered with interpret=True; the TPU-shaped path,
+numerics-identical, exercised by dedicated artifacts and pytest).
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.facility_location import fl_select_pallas
+from .kernels.merge_attention import merge_pallas
+from .kernels.unmerge import unmerge_pallas
+
+
+@dataclass(frozen=True)
+class RegionSpec:
+    """How a (B, N, d) token tensor is split into P local regions."""
+
+    mode: str       # "global" | "stripe" | "tile"
+    regions: int    # P
+    grid_h: int     # token grid height
+    grid_w: int     # token grid width
+
+    @property
+    def tokens(self) -> int:
+        return self.grid_h * self.grid_w
+
+    @property
+    def tokens_per_region(self) -> int:
+        return self.tokens // self.regions
+
+    def tile_hw(self):
+        """(tiles_y, tiles_x, tile_h, tile_w) for mode == "tile".
+
+        Chooses the most square tile decomposition whose count is P.
+        """
+        assert self.mode == "tile"
+        p = self.regions
+        best = None
+        ty = 1
+        while ty <= p:
+            if p % ty == 0:
+                tx = p // ty
+                if self.grid_h % ty == 0 and self.grid_w % tx == 0:
+                    th, tw = self.grid_h // ty, self.grid_w // tx
+                    score = abs(th - tw)
+                    if best is None or score < best[0]:
+                        best = (score, ty, tx, th, tw)
+            ty += 1
+        if best is None:
+            raise ValueError(f"cannot tile {self.grid_h}x{self.grid_w} into {p}")
+        _, ty, tx, th, tw = best
+        return ty, tx, th, tw
+
+
+def split_regions(x, spec: RegionSpec):
+    """(B, N, d) -> (B*P, N_loc, d) according to the region layout."""
+    b, n, d = x.shape
+    assert n == spec.tokens, (n, spec)
+    if spec.mode in ("global",) or spec.regions == 1:
+        return x.reshape(b * 1, n, d)
+    if spec.mode == "stripe":
+        return x.reshape(b * spec.regions, spec.tokens_per_region, d)
+    ty, tx, th, tw = spec.tile_hw()
+    x = x.reshape(b, ty, th, tx, tw, d)
+    x = x.transpose(0, 1, 3, 2, 4, 5)           # (B, ty, tx, th, tw, d)
+    return x.reshape(b * spec.regions, th * tw, d)
+
+
+def join_regions(x, spec: RegionSpec, batch: int):
+    """Inverse of :func:`split_regions`: (B*P, N_loc, d) -> (B, N, d)."""
+    d = x.shape[-1]
+    if spec.mode in ("global",) or spec.regions == 1:
+        return x.reshape(batch, spec.tokens, d)
+    if spec.mode == "stripe":
+        return x.reshape(batch, spec.tokens, d)
+    ty, tx, th, tw = spec.tile_hw()
+    x = x.reshape(batch, ty, tx, th, tw, d)
+    x = x.transpose(0, 1, 3, 2, 4, 5)           # (B, ty, th, tx, tw, d)
+    return x.reshape(batch, spec.tokens, d)
+
+
+def region_token_index(spec: RegionSpec):
+    """int32 (P, N_loc): global token id of each (region, local slot).
+
+    Used to translate per-region destination indices into global token
+    positions (RoPE gathers in the DiT path, Fig. 4 overlap analysis).
+    """
+    n = spec.tokens
+    ids = jnp.arange(n, dtype=jnp.int32).reshape(1, spec.grid_h, spec.grid_w, 1)
+    out = split_regions(ids.reshape(1, n, 1).astype(jnp.float32), spec)
+    return out.reshape(spec.regions, spec.tokens_per_region).astype(jnp.int32)
+
+
+def select_destinations(x, spec: RegionSpec, ratio: float,
+                        kernel_impl: str = "jnp", rng_bits=None):
+    """Greedy FL destination selection within regions (Sec. 4.1 + 4.3.1).
+
+    x: (B, N, d) hidden states. Returns int32 idx of shape (B*P, D_loc) with
+    region-local indices. ``ratio`` is the fraction of tokens *merged away*;
+    D_loc = round((1 - ratio) * N_loc). ``rng_bits`` (B,) activates the
+    random-selection baseline of App. F.1 instead of FL.
+    """
+    xs = split_regions(x, spec)
+    g, n_loc, _ = xs.shape
+    k = max(1, int(round((1.0 - ratio) * n_loc)))
+    if rng_bits is not None:
+        # Random baseline: per-region pseudo-random permutation scored by a
+        # hash of (seed, region, token) -- top-k without similarity.
+        seed = rng_bits.astype(jnp.uint32)
+        tok = jnp.arange(n_loc, dtype=jnp.uint32)[None, :]
+        reg = jnp.arange(g, dtype=jnp.uint32)[:, None]
+        h = (tok * jnp.uint32(2654435761)) ^ (reg * jnp.uint32(40503)) \
+            ^ (seed[0] * jnp.uint32(97))
+        h = (h ^ (h >> 13)) * jnp.uint32(0x5BD1E995)
+        idx = jnp.argsort(h, axis=-1)[:, :k].astype(jnp.int32)
+        return jnp.sort(idx, axis=-1)
+    sim = ref.cosine_similarity(xs)
+    if kernel_impl == "pallas":
+        return fl_select_pallas(sim, k)
+    return ref.fl_select(sim, k)
+
+
+def build_merge_weights(x, idx, spec: RegionSpec, tau: float,
+                        kernel_impl: str = "jnp"):
+    """Construct (A, A~) per region from hidden states + destination indices."""
+    xs = split_regions(x, spec)
+    if kernel_impl == "pallas":
+        a, at, _ = merge_pallas(xs, idx, tau)
+        return a, at
+    return ref.merge_weights(xs, idx, tau)
+
+
+class Merger:
+    """Bound (un)merge operator for one region layout + cached weights.
+
+    Holds A~ of shape (B*P, D_loc, N_loc). ``merge`` maps (B, N, d) ->
+    (B, P*D_loc, d); ``unmerge`` maps back. All ops are batched GEMMs.
+    """
+
+    def __init__(self, a, a_tilde, spec: RegionSpec, batch: int,
+                 kernel_impl: str = "jnp", unmerge_mode: str = "transpose"):
+        self.a = a
+        self.a_tilde = a_tilde
+        self.spec = spec
+        self.batch = batch
+        self.kernel_impl = kernel_impl
+        self.unmerge_mode = unmerge_mode
+        self.d_loc = a_tilde.shape[-2]
+
+    @property
+    def merged_tokens(self) -> int:
+        return self.spec.regions * self.d_loc
+
+    def merge(self, x):
+        xs = split_regions(x, self.spec)
+        xm = ref.merge(self.a_tilde, xs)
+        return xm.reshape(self.batch, self.merged_tokens, -1)
+
+    def unmerge(self, y):
+        ys = y.reshape(self.batch * self.spec.regions, self.d_loc, -1)
+        if self.unmerge_mode == "pinv":
+            out = ref.unmerge_pinv(self.a_tilde, ys)
+        elif self.unmerge_mode == "colsoftmax":
+            out = ref.unmerge_colsoftmax(self.a, ys)
+        elif self.kernel_impl == "pallas":
+            out = unmerge_pallas(self.a_tilde, ys)
+        else:
+            out = ref.unmerge_transpose(self.a_tilde, ys)
+        return join_regions(out, self.spec, self.batch)
+
+
+def tlb_merger(batch: int, n: int, ratio: float):
+    """Theoretical-lower-bound dummy merge (Sec. 5.1 "TLB").
+
+    Keeps the first D tokens, duplicates them back to length N on unmerge --
+    isolates the pure token-reduction benefit with minimal data movement.
+    """
+    k = max(1, int(round((1.0 - ratio) * n)))
+
+    class _Tlb:
+        merged_tokens = k
+
+        @staticmethod
+        def merge(x):
+            return x[:, :k, :]
+
+        @staticmethod
+        def unmerge(y):
+            reps = -(-n // k)  # ceil
+            return jnp.tile(y, (1, reps, 1))[:, :n, :]
+
+    return _Tlb()

@@ -1,0 +1,143 @@
+"""AOT pipeline smoke tests: lowering, manifest schema, HLO validity."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, toma_jax
+from compile.configs import (MODELS, UVIT_XS, SelectArtifact, StepArtifact,
+                             enumerate_artifacts, tiles_for)
+from compile.model import init_uvit
+
+
+class TestEnumeration:
+    def test_quick_set_covers_all_variants(self):
+        steps, selects = enumerate_artifacts(quick=True)
+        variants = {s.variant for s in steps}
+        for v in ["baseline", "toma", "toma_stripe", "toma_tile",
+                  "toma_once", "tlb", "tome", "tofu", "todo"]:
+            assert v in variants, v
+        modes = {s.mode for s in selects}
+        assert modes == {"tile", "stripe", "global", "random"}
+
+    def test_full_set_has_paper_grid(self):
+        steps, selects = enumerate_artifacts(["uvit_s"])
+        names = {s.name for s in steps}
+        for r in ("r25", "r50", "r75"):
+            assert f"uvit_s_step_toma_{r}" in names
+        # Table 5 granularity artifacts.
+        sel_names = {s.name for s in selects}
+        for p in (4, 16, 64, 256):
+            assert f"uvit_s_select_tile_r50_p{p}" in sel_names
+
+    def test_dit_set(self):
+        steps, _ = enumerate_artifacts(["dit_s"])
+        names = {s.name for s in steps}
+        assert "dit_s_step_baseline" in names
+        assert "dit_s_step_toma_r50" in names
+        assert any("toma_tile" in n for n in names)
+
+    def test_names_unique(self):
+        steps, selects = enumerate_artifacts()
+        names = [s.name for s in steps] + [s.name for s in selects]
+        assert len(names) == len(set(names))
+
+
+class TestLowering:
+    def test_step_artifact_lowers_to_valid_hlo(self, tmp_path):
+        art = StepArtifact("uvit_xs", "toma", 0.5, 1, "global")
+        fn, inputs = aot.build_step(UVIT_XS, art, "jnp")
+        params = init_uvit(UVIT_XS, seed=0)
+        spec = jax.tree_util.tree_map(aot.spec_of, params)
+        out = tmp_path / "t.hlo.txt"
+        n_params, _ = aot.lower_artifact(fn, spec, inputs, str(out))
+        text = out.read_text()
+        assert "ENTRY" in text and "parameter" in text
+        names, _ = aot.flatten_params(spec)
+        assert n_params == len(names) + len(inputs)
+
+    def test_param_subset_mismatch_raises(self, tmp_path):
+        # Lowering with an unused weight must fail loudly (the Rust side
+        # feeds buffers positionally).
+        def fn(params, x):
+            return (params["patch"]["w"].sum() + x,)
+
+        params = init_uvit(UVIT_XS, seed=0)
+        spec = jax.tree_util.tree_map(aot.spec_of, params)
+        x_spec = jax.ShapeDtypeStruct((), jnp.float32)
+        with pytest.raises(RuntimeError, match="pruned"):
+            aot.lower_artifact(fn, spec, [("x", x_spec)],
+                               str(tmp_path / "bad.hlo.txt"))
+
+    def test_flatten_names_match_npz_keys(self, tmp_path):
+        params = init_uvit(UVIT_XS, seed=0)
+        names, leaves = aot.flatten_params(params)
+        assert "patch.w" in names and "blocks.0.qkv.w" in names
+        path = tmp_path / "w.npz"
+        np.savez(path, **{n: np.asarray(l) for n, l in zip(names, leaves)})
+        loaded = np.load(path)
+        assert set(loaded.files) == set(names)
+
+
+@pytest.mark.skipif(not os.path.exists(
+    os.path.join(os.path.dirname(__file__), "..", "..", "artifacts",
+                 "manifest.json")),
+    reason="artifacts not built")
+class TestManifest:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        p = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts",
+                         "manifest.json")
+        return json.load(open(p))
+
+    def test_schema(self, manifest):
+        assert manifest["tau"] == 0.1
+        assert manifest["dest_every"] == 10
+        assert manifest["weight_every"] == 5
+        for name, m in manifest["models"].items():
+            assert m["kind"] in ("uvit", "dit"), name
+            assert m["params"], name
+
+    def test_every_artifact_file_exists(self, manifest):
+        d = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+        for a in manifest["artifacts"]:
+            assert os.path.exists(os.path.join(d, a["file"])), a["name"]
+
+    def test_inputs_have_shapes_and_dtypes(self, manifest):
+        for a in manifest["artifacts"]:
+            for i in a["inputs"]:
+                assert i["dtype"] in ("f32", "s32", "u32")
+                assert all(isinstance(x, int) and x > 0 for x in i["shape"])
+
+    def test_params_subset_of_model_params(self, manifest):
+        for a in manifest["artifacts"]:
+            model_params = {p["name"] for p in
+                            manifest["models"][a["model"]]["params"]}
+            for pn in a.get("params", []):
+                assert pn in model_params, f'{a["name"]}: {pn}'
+
+    def test_step_and_select_shapes_consistent(self, manifest):
+        """For every regional toma step, a select artifact with matching A~
+        shape must exist (the Direct plan path contract)."""
+        arts = {a["name"]: a for a in manifest["artifacts"]}
+        for a in arts.values():
+            if a["kind"] != "step" or not str(a.get("variant", "")).startswith("toma"):
+                continue
+            if a.get("regions", 1) <= 1:
+                continue
+            at_in = [i for i in a["inputs"] if i["name"] in ("a_tilde", "at_img")]
+            assert at_in, a["name"]
+            shape = at_in[0]["shape"]
+            found = [
+                s for s in arts.values()
+                if s["kind"] == "select" and s["model"] == a["model"]
+                and s.get("ratio") == a.get("ratio")
+                and s["outputs"][2]["shape"] == shape
+            ]
+            assert found, f'{a["name"]}: no matching select for {shape}'

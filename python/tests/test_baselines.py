@@ -1,0 +1,124 @@
+"""Invariants of the reimplemented baselines (ToMeSD / ToFu / ToDo)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import baselines_jax as bl
+
+
+def rand(shape, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+class TestTomePlan:
+    def test_partition_covers_all_tokens(self):
+        h = rand((2, 64, 8))
+        plan = bl.tome_plan(h, 8, 8, 0.5)
+        ids = sorted(np.asarray(plan.dst_idx).tolist()
+                     + np.asarray(plan.src_idx).tolist())
+        assert ids == list(range(64))
+
+    def test_dst_is_quarter(self):
+        plan = bl.tome_plan(rand((1, 64, 8)), 8, 8, 0.5)
+        assert plan.dst_idx.shape[0] == 16
+        assert plan.src_idx.shape[0] == 48
+
+    def test_k_capped_by_sources(self):
+        plan = bl.tome_plan(rand((1, 64, 8)), 8, 8, 0.9)
+        assert plan.k == 48  # cannot merge more than the source count
+
+    def test_merged_len(self):
+        plan = bl.tome_plan(rand((1, 64, 8)), 8, 8, 0.5)
+        assert plan.merged_len == 64 - plan.k
+
+    def test_order_is_permutation_of_sources(self):
+        plan = bl.tome_plan(rand((3, 64, 8), 1), 8, 8, 0.25)
+        for b in range(3):
+            o = np.asarray(plan.order[b])
+            assert sorted(o.tolist()) == list(range(48))
+
+    def test_order_ranks_by_similarity(self):
+        """Sources earlier in the order must have higher best-match sim."""
+        h = rand((1, 64, 8), 2)
+        plan = bl.tome_plan(h, 8, 8, 0.5)
+        hn = np.asarray(h / jnp.linalg.norm(h, axis=-1, keepdims=True))
+        hs, hd = hn[0][np.asarray(plan.src_idx)], hn[0][np.asarray(plan.dst_idx)]
+        best = (hs @ hd.T).max(-1)
+        ranked = best[np.asarray(plan.order[0])]
+        assert (np.diff(ranked) <= 1e-5).all()
+
+
+class TestTomeMergeUnmerge:
+    @pytest.mark.parametrize("ratio", [0.25, 0.5, 0.75])
+    def test_shapes(self, ratio):
+        x = rand((2, 64, 8), 3)
+        plan = bl.tome_plan(x, 8, 8, ratio)
+        m = bl.TomeMerger(plan, 64)
+        y = m.merge(x)
+        assert y.shape == (2, plan.merged_len, 8)
+        back = m.unmerge(y)
+        assert back.shape == x.shape
+
+    def test_unmerge_fills_every_position(self):
+        x = rand((1, 64, 8), 4)
+        plan = bl.tome_plan(x, 8, 8, 0.5)
+        m = bl.TomeMerger(plan, 64)
+        back = np.asarray(m.unmerge(m.merge(x)))
+        assert (np.abs(back).sum(-1) > 0).all()
+
+    def test_kept_tokens_roundtrip_exactly(self):
+        """Tokens that are not merged must come back bit-exact."""
+        x = rand((1, 64, 8), 5)
+        plan = bl.tome_plan(x, 8, 8, 0.25)
+        m = bl.TomeMerger(plan, 64)
+        back = np.asarray(m.unmerge(m.merge(x)))
+        kept_slots = np.asarray(plan.order[0][plan.k:])
+        kept_ids = np.asarray(plan.src_idx)[kept_slots]
+        np.testing.assert_allclose(back[0, kept_ids],
+                                   np.asarray(x)[0, kept_ids], atol=1e-6)
+
+    def test_merged_sources_receive_their_destination(self):
+        x = rand((1, 64, 8), 6)
+        plan = bl.tome_plan(x, 8, 8, 0.5)
+        m = bl.TomeMerger(plan, 64)
+        y = m.merge(x)
+        back = np.asarray(m.unmerge(y))
+        n_keep = plan.src_idx.shape[0] - plan.k
+        y_dst = np.asarray(y)[0, n_keep:]
+        merged_slots = np.asarray(plan.order[0][:plan.k])
+        tgt = np.asarray(plan.node_idx)[0][merged_slots]
+        src_ids = np.asarray(plan.src_idx)[merged_slots]
+        np.testing.assert_allclose(back[0, src_ids], y_dst[tgt], atol=1e-6)
+
+    def test_prune_mode_drops_instead_of_averaging(self):
+        x = rand((1, 64, 8), 7)
+        plan_m = bl.tome_plan(x, 8, 8, 0.5, mode="merge")
+        plan_p = bl.tome_plan(x, 8, 8, 0.5, mode="prune")
+        ym = np.asarray(bl.tome_merge(plan_m, x))
+        yp = np.asarray(bl.tome_merge(plan_p, x))
+        n_keep = plan_m.src_idx.shape[0] - plan_m.k
+        # Pruned destinations keep their original embedding.
+        np.testing.assert_allclose(yp[0, n_keep:],
+                                   np.asarray(x)[0, np.asarray(plan_p.dst_idx)],
+                                   atol=1e-6)
+        assert not np.allclose(ym[0, n_keep:], yp[0, n_keep:])
+
+
+class TestTodo:
+    def test_pool_shape(self):
+        h = rand((2, 64, 8), 8)
+        kv = bl.todo_pool_kv(h, 8, 8)
+        assert kv.shape == (2, 16, 8)
+
+    def test_pool_is_window_mean(self):
+        h = jnp.arange(64, dtype=jnp.float32).reshape(1, 64, 1)
+        kv = np.asarray(bl.todo_pool_kv(h, 8, 8)).ravel()
+        # Window (0,0) covers tokens {0, 1, 8, 9} -> mean 4.5.
+        assert kv[0] == pytest.approx(4.5)
+
+    def test_constant_field_preserved(self):
+        h = jnp.ones((1, 64, 3))
+        kv = np.asarray(bl.todo_pool_kv(h, 8, 8))
+        np.testing.assert_allclose(kv, 1.0)

@@ -1,0 +1,157 @@
+"""L2 model graphs: shapes, finiteness, determinism, variant wiring."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import dit as dit_mod
+from compile import model as uvit_mod
+from compile import toma_jax
+from compile.configs import DIT_S, UVIT_XS, tiles_for
+from compile.aot import build_select, build_step
+from compile.configs import SelectArtifact, StepArtifact
+
+
+@pytest.fixture(scope="module")
+def uvit_params():
+    return uvit_mod.init_uvit(UVIT_XS, seed=0)
+
+
+@pytest.fixture(scope="module")
+def dit_params():
+    return dit_mod.init_dit(DIT_S, seed=0)
+
+
+def inputs(cfg, seed=0):
+    k = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(k, 3)
+    x = jax.random.normal(k1, (cfg.batch, cfg.channels, cfg.latent_hw,
+                               cfg.latent_hw), jnp.float32)
+    t = jnp.full((cfg.batch,), 500.0, jnp.float32)
+    c = jax.random.normal(k3, (cfg.batch, cfg.txt_len, cfg.txt_dim),
+                          jnp.float32)
+    return x, t, c
+
+
+def toma_merger(cfg, params, x, t, mode="global", regions=1, ratio=0.5):
+    sp = toma_jax.RegionSpec(mode, regions, cfg.grid, cfg.grid)
+    h = uvit_mod.embed_tokens(params, cfg, x, t)
+    idx = toma_jax.select_destinations(h, sp, ratio)
+    a, at = toma_jax.build_merge_weights(h, idx, sp, 0.1)
+    return toma_jax.Merger(a, at, sp, cfg.batch)
+
+
+class TestUVit:
+    def test_baseline_shape_and_finite(self, uvit_params):
+        x, t, c = inputs(UVIT_XS)
+        eps = uvit_mod.apply_uvit(uvit_params, UVIT_XS, x, t, c)
+        assert eps.shape == x.shape
+        assert bool(jnp.isfinite(eps).all())
+
+    def test_deterministic(self, uvit_params):
+        x, t, c = inputs(UVIT_XS)
+        e1 = uvit_mod.apply_uvit(uvit_params, UVIT_XS, x, t, c)
+        e2 = uvit_mod.apply_uvit(uvit_params, UVIT_XS, x, t, c)
+        np.testing.assert_array_equal(np.asarray(e1), np.asarray(e2))
+
+    @pytest.mark.parametrize("variant,mode,regions", [
+        ("toma", "global", 1),
+        ("toma_stripe", "stripe", 8),
+        ("toma_tile", "tile", 16),
+        ("toma_once", "global", 1),
+    ])
+    def test_toma_variants(self, uvit_params, variant, mode, regions):
+        x, t, c = inputs(UVIT_XS, seed=1)
+        m = toma_merger(UVIT_XS, uvit_params, x, t, mode, regions)
+        eps = uvit_mod.apply_uvit(uvit_params, UVIT_XS, x, t, c, variant, m)
+        assert eps.shape == x.shape
+        assert bool(jnp.isfinite(eps).all())
+
+    def test_toma_close_to_baseline_at_mild_ratio(self, uvit_params):
+        """r=0.25 must barely perturb the output (the paper's DINO < 0.05
+        story); r=0.75 must perturb it more."""
+        x, t, c = inputs(UVIT_XS, seed=2)
+        base = np.asarray(uvit_mod.apply_uvit(uvit_params, UVIT_XS, x, t, c))
+
+        def err(ratio):
+            m = toma_merger(UVIT_XS, uvit_params, x, t, "tile", 16, ratio)
+            e = np.asarray(uvit_mod.apply_uvit(uvit_params, UVIT_XS, x, t,
+                                               c, "toma_tile", m))
+            return np.abs(e - base).mean() / (np.abs(base).mean() + 1e-8)
+
+        e25, e75 = err(0.25), err(0.75)
+        assert e25 < 0.7
+        assert e25 < e75
+
+    def test_tlb_variant(self, uvit_params):
+        x, t, c = inputs(UVIT_XS, seed=3)
+        m = toma_jax.tlb_merger(UVIT_XS.batch, UVIT_XS.tokens, 0.5)
+        eps = uvit_mod.apply_uvit(uvit_params, UVIT_XS, x, t, c, "tlb", m)
+        assert eps.shape == x.shape and bool(jnp.isfinite(eps).all())
+
+    def test_todo_variant(self, uvit_params):
+        x, t, c = inputs(UVIT_XS, seed=4)
+        eps = uvit_mod.apply_uvit(uvit_params, UVIT_XS, x, t, c, "todo")
+        assert eps.shape == x.shape and bool(jnp.isfinite(eps).all())
+
+    def test_identity_merger_matches_baseline(self, uvit_params):
+        """A merger that keeps every token (r=0, tau->0) must reproduce the
+        baseline output almost exactly."""
+        x, t, c = inputs(UVIT_XS, seed=5)
+        sp = toma_jax.RegionSpec("global", 1, UVIT_XS.grid, UVIT_XS.grid)
+        idx = jnp.tile(jnp.arange(UVIT_XS.tokens, dtype=jnp.int32)[None],
+                       (UVIT_XS.batch, 1))
+        h = uvit_mod.embed_tokens(uvit_params, UVIT_XS, x, t)
+        a, at = toma_jax.build_merge_weights(h, idx, sp, 0.001)
+        m = toma_jax.Merger(a, at, sp, UVIT_XS.batch)
+        base = np.asarray(uvit_mod.apply_uvit(uvit_params, UVIT_XS, x, t, c))
+        got = np.asarray(uvit_mod.apply_uvit(uvit_params, UVIT_XS, x, t, c,
+                                             "toma", m))
+        rel = np.abs(got - base).mean() / (np.abs(base).mean() + 1e-8)
+        assert rel < 0.05
+
+
+class TestDit:
+    def test_baseline(self, dit_params):
+        x, t, c = inputs(DIT_S)
+        out = dit_mod.apply_dit(dit_params, DIT_S, x, t, c)
+        assert out.shape == x.shape and bool(jnp.isfinite(out).all())
+
+    def test_toma_via_aot_builder(self, dit_params):
+        """Exercise the exact artifact function the AOT path lowers."""
+        art = StepArtifact("dit_s", "toma_tile", 0.5, tiles_for(DIT_S),
+                           "tile")
+        fn, ins = build_step(DIT_S, art, "jnp")
+        x, t, c = inputs(DIT_S, seed=6)
+        sart = SelectArtifact("dit_s", "tile", 0.5, tiles_for(DIT_S))
+        sfn, _, _ = build_select(DIT_S, sart, "jnp")
+        ix_i, a_i, at_i, ix_t, a_t, at_t = sfn(dit_params, x, c)
+        (eps,) = fn(dit_params, x, t, c, at_i, ix_i, at_t, ix_t)
+        assert eps.shape == x.shape and bool(jnp.isfinite(eps).all())
+
+    def test_skip_blocks_blunts_merge_damage(self, dit_params):
+        """Merging from block 0 (no skip) must hurt more than skipping the
+        early fusion blocks, on average over seeds (App. E rule)."""
+        deltas = []
+        for seed in (7, 8):
+            x, t, c = inputs(DIT_S, seed=seed)
+            base = np.asarray(dit_mod.apply_dit(dit_params, DIT_S, x, t, c))
+            sart = SelectArtifact("dit_s", "global", 0.75, 1)
+            sfn, _, _ = build_select(DIT_S, sart, "jnp")
+            ix_i, a_i, at_i, ix_t, a_t, at_t = sfn(dit_params, x, c)
+            sp = toma_jax.RegionSpec("global", 1, DIT_S.grid, DIT_S.grid)
+            tsp = toma_jax.RegionSpec("global", 1, 1, DIT_S.txt_len)
+            m_img = toma_jax.Merger(a_i, at_i, sp, DIT_S.batch)
+            m_txt = toma_jax.Merger(a_t, at_t, tsp, DIT_S.batch)
+            ms = dit_mod.DitMergeState(m_txt, m_img, ix_t,
+                                       ix_i + DIT_S.txt_len)
+            skip = np.asarray(dit_mod.apply_dit(dit_params, DIT_S, x, t, c,
+                                                ms))
+            import dataclasses
+            cfg0 = dataclasses.replace(DIT_S, skip_blocks=0)
+            noskip = np.asarray(dit_mod.apply_dit(dit_params, cfg0, x, t, c,
+                                                  ms))
+            deltas.append(np.abs(noskip - base).mean()
+                          - np.abs(skip - base).mean())
+        assert np.mean(deltas) > 0

@@ -1,0 +1,140 @@
+"""Region partitioning + Merger orchestration invariants (Sec. 4.3.1)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import toma_jax
+from compile.kernels import ref
+
+
+def rand(shape, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+def spec(mode, regions, g):
+    return toma_jax.RegionSpec(mode, regions, g, g)
+
+
+class TestRegions:
+    @pytest.mark.parametrize("mode,regions,g", [
+        ("global", 1, 8), ("stripe", 4, 8), ("stripe", 8, 8),
+        ("tile", 4, 8), ("tile", 16, 8), ("tile", 16, 16), ("tile", 64, 16),
+    ])
+    def test_split_join_roundtrip(self, mode, regions, g):
+        sp = spec(mode, regions, g)
+        x = rand((3, g * g, 5), seed=regions)
+        xs = toma_jax.split_regions(x, sp)
+        assert xs.shape == (3 * regions, g * g // regions, 5)
+        back = toma_jax.join_regions(xs, sp, 3)
+        np.testing.assert_allclose(np.asarray(back), np.asarray(x))
+
+    def test_stripe_is_contiguous(self):
+        """Stripes must be pure reshapes: token order preserved."""
+        sp = spec("stripe", 4, 8)
+        x = jnp.arange(64, dtype=jnp.float32).reshape(1, 64, 1)
+        xs = np.asarray(toma_jax.split_regions(x, sp)).reshape(4, 16)
+        np.testing.assert_array_equal(xs.ravel(), np.arange(64))
+
+    def test_tile_groups_are_spatial(self):
+        """Each tile must contain a contiguous 2-D window of the grid."""
+        g, p = 8, 16
+        sp = spec("tile", p, g)
+        ids = toma_jax.region_token_index(sp)  # (P, N_loc)
+        ids = np.asarray(ids)
+        for r in range(p):
+            rows = ids[r] // g
+            cols = ids[r] % g
+            assert rows.max() - rows.min() <= 2
+            assert cols.max() - cols.min() <= 2
+
+    def test_region_token_index_is_permutation(self):
+        sp = spec("tile", 16, 8)
+        ids = np.asarray(toma_jax.region_token_index(sp)).ravel()
+        assert sorted(ids.tolist()) == list(range(64))
+
+    def test_tile_hw_square_preference(self):
+        sp = spec("tile", 16, 16)
+        ty, tx, th, tw = sp.tile_hw()
+        assert ty * tx == 16 and th * tw == 16
+        assert th == tw == 4
+
+
+class TestSelection:
+    @given(mode=st.sampled_from(["global", "stripe", "tile"]),
+           ratio=st.sampled_from([0.25, 0.5, 0.75]),
+           seed=st.integers(0, 1000))
+    @settings(max_examples=10, deadline=None)
+    def test_select_shapes_and_bounds(self, mode, ratio, seed):
+        g = 8
+        regions = 1 if mode == "global" else 4
+        sp = spec(mode, regions, g)
+        x = rand((2, 64, 6), seed)
+        idx = toma_jax.select_destinations(x, sp, ratio)
+        n_loc = 64 // regions
+        k = max(1, int(round((1 - ratio) * n_loc)))
+        assert idx.shape == (2 * regions, k)
+        assert int(idx.min()) >= 0 and int(idx.max()) < n_loc
+
+    def test_random_selection_differs_from_fl(self):
+        sp = spec("global", 1, 8)
+        x = rand((1, 64, 6), 3)
+        fl = toma_jax.select_destinations(x, sp, 0.5)
+        rnd = toma_jax.select_destinations(
+            x, sp, 0.5, rng_bits=jnp.array([7], jnp.uint32))
+        assert not np.array_equal(np.asarray(fl), np.asarray(rnd))
+
+    def test_random_selection_deterministic_in_seed(self):
+        sp = spec("global", 1, 8)
+        x = rand((1, 64, 6), 3)
+        r1 = toma_jax.select_destinations(x, sp, 0.5,
+                                          rng_bits=jnp.array([7], jnp.uint32))
+        r2 = toma_jax.select_destinations(x, sp, 0.5,
+                                          rng_bits=jnp.array([7], jnp.uint32))
+        np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
+
+
+class TestMerger:
+    def _merger(self, mode="tile", regions=4, g=8, ratio=0.5, unmerge="transpose"):
+        sp = spec(mode, regions, g)
+        x = rand((2, g * g, 6), 5)
+        idx = toma_jax.select_destinations(x, sp, ratio)
+        a, at = toma_jax.build_merge_weights(x, idx, sp, 0.1)
+        return toma_jax.Merger(a, at, sp, 2, unmerge_mode=unmerge), x
+
+    @pytest.mark.parametrize("mode,regions", [("global", 1), ("stripe", 4),
+                                              ("tile", 4), ("tile", 16)])
+    def test_merge_unmerge_shapes(self, mode, regions):
+        m, x = self._merger(mode, regions)
+        xm = m.merge(x)
+        assert xm.shape[0] == 2 and xm.shape[2] == 6
+        assert xm.shape[1] == m.merged_tokens
+        back = m.unmerge(xm)
+        assert back.shape == x.shape
+
+    @pytest.mark.parametrize("unmerge", ["transpose", "pinv", "colsoftmax"])
+    def test_unmerge_modes_finite(self, unmerge):
+        m, x = self._merger(unmerge=unmerge)
+        out = m.unmerge(m.merge(x))
+        assert bool(jnp.isfinite(out).all())
+
+    def test_merge_equals_ref_global(self):
+        sp = spec("global", 1, 8)
+        x = rand((1, 64, 6), 6)
+        idx = toma_jax.select_destinations(x, sp, 0.5)
+        a, at = toma_jax.build_merge_weights(x, idx, sp, 0.1)
+        m = toma_jax.Merger(a, at, sp, 1)
+        np.testing.assert_allclose(np.asarray(m.merge(x))[0],
+                                   np.asarray(ref.merge(at, x.reshape(1, 64, 6))[0]),
+                                   atol=1e-6)
+
+    def test_tlb_merger(self):
+        m = toma_jax.tlb_merger(2, 64, 0.5)
+        x = rand((2, 64, 6), 7)
+        y = m.merge(x)
+        assert y.shape == (2, 32, 6)
+        back = m.unmerge(y)
+        assert back.shape == (2, 64, 6)
+        np.testing.assert_allclose(np.asarray(back[:, :32]), np.asarray(y))

@@ -1,0 +1,99 @@
+//! Table 1 — SDXL-scale ToMA variants: sec/img on RTX6000 / V100 / RTX8000
+//! from the GPU cost model, plus measured engine wall-clock on the CPU
+//! stand-in (uvit_xs, quick) as a live cross-check.
+//!
+//! Paper reference (sec/img, RTX6000 / V100 / RTX8000):
+//!   Baseline      6.1 / 14.5 / 16.1
+//!   r=0.50 ToMA   5.0 / 11.0 / 12.8     TLB 4.0 / 9.9 / 7.8
+//! Acceptance: orderings + rough factors, not absolute numbers.
+
+use std::sync::Arc;
+
+use toma::bench::Runner;
+use toma::coordinator::{Engine, EngineConfig, GenRequest};
+use toma::gpucost::device::{Gpu, GpuModel};
+use toma::gpucost::roofline::estimate_time;
+use toma::gpucost::workloads::{PaperModel, StepWorkload, Variant};
+use toma::report::Table;
+use toma::runtime::Runtime;
+
+fn cost(variant: Variant, ratio: f64, gpu: GpuModel) -> f64 {
+    toma::gpucost::calibrate::calibrated_sec_per_img(PaperModel::SdxlBase, variant, ratio, gpu)
+}
+
+fn main() {
+    let mut runner = Runner::from_args();
+
+    let mut t = Table::new("Table 1 — SDXL variants, sec/img (GPU cost model)")
+        .headers(&["Ratio", "Method", "RTX6000", "V100", "RTX8000"]);
+    let rows: Vec<(&str, Variant)> = vec![
+        ("ToMA", Variant::toma_default()),
+        ("ToMA_stripe", Variant::toma_stripe()),
+        ("ToMA_tile", Variant::toma_tile(64)),
+        ("ToMA_once", Variant::toma_once()),
+        ("TLB", Variant::Tlb),
+    ];
+    let base: Vec<f64> = GpuModel::all()
+        .iter()
+        .map(|g| cost(Variant::Baseline, 0.0, *g))
+        .collect();
+    t.row(vec![
+        "—".into(),
+        "Baseline".into(),
+        format!("{:.1}", base[0]),
+        format!("{:.1}", base[1]),
+        format!("{:.1}", base[2]),
+    ]);
+    for ratio in [0.25, 0.5, 0.75] {
+        for (name, v) in &rows {
+            let cells: Vec<String> = GpuModel::all()
+                .iter()
+                .map(|g| format!("{:.1}", cost(*v, ratio, *g)))
+                .collect();
+            t.row(vec![
+                format!("{ratio:.2}"),
+                (*name).into(),
+                cells[0].clone(),
+                cells[1].clone(),
+                cells[2].clone(),
+            ]);
+        }
+    }
+    println!("\n{}", t.render());
+
+    // Shape assertions vs the paper.
+    let b = cost(Variant::Baseline, 0.0, GpuModel::Rtx6000);
+    let toma50 = cost(Variant::toma_default(), 0.5, GpuModel::Rtx6000);
+    let stripe50 = cost(Variant::toma_stripe(), 0.5, GpuModel::Rtx6000);
+    let tile50 = cost(Variant::toma_tile(64), 0.5, GpuModel::Rtx6000);
+    let tlb50 = cost(Variant::Tlb, 0.5, GpuModel::Rtx6000);
+    assert!(toma50 < b, "ToMA must beat baseline");
+    assert!(b / toma50 > 1.15, "headline >= ~1.2x at r=0.5");
+    assert!(stripe50 <= toma50 + 0.2, "stripe is the fast variant");
+    assert!(tile50 >= stripe50, "tile pays the relayout cost");
+    assert!(tlb50 <= toma50, "TLB lower-bounds every real variant");
+    println!("shape checks passed: baseline {b:.1}s > ToMA {toma50:.1}s >= TLB {tlb50:.1}s");
+
+    // Live engine cross-check on the CPU stand-in (quick).
+    if let Ok(runtime) = Runtime::with_default_dir().map(Arc::new) {
+        let mut bcfg = EngineConfig::new("uvit_xs", "baseline", None);
+        bcfg.steps = 8;
+        let mut tcfg = EngineConfig::new("uvit_xs", "toma", Some(0.5));
+        tcfg.steps = 8;
+        if let (Ok(be), Ok(te)) = (
+            Engine::new(runtime.clone(), bcfg),
+            Engine::new(runtime, tcfg),
+        ) {
+            let req = GenRequest::new("a lighthouse on a cliff", 1);
+            let _ = be.generate(&req); // compile+warm
+            let _ = te.generate(&req);
+            let tb = runner.bench("engine_baseline_8steps", || {
+                be.generate(&req).unwrap();
+            });
+            let tt = runner.bench("engine_toma50_8steps", || {
+                te.generate(&req).unwrap();
+            });
+            println!("measured CPU: baseline {tb:.3}s vs ToMA {tt:.3}s ({:.2}x)", tb / tt);
+        }
+    }
+}

@@ -1,0 +1,67 @@
+//! Table 5 (App. F.2) — tile granularity sweep at r=0.5 on uvit_s
+//! (4 / 16 / 64 / 256 tiles).
+//!
+//! Paper reference: 4 tiles = 11.4 s/img, 64 tiles = 5.0 s/img with the
+//! best DINO/MSE; 256 tiles no faster. Mechanism: selection cost scales
+//! ~1/P (fewer greedy iterations, smaller similarity blocks) until launch
+//! overhead floors it; too-large windows also hurt quality.
+
+use std::sync::Arc;
+
+use toma::bench::Runner;
+use toma::report::{fmt_secs, Table};
+use toma::runtime::executor::Input;
+use toma::runtime::Runtime;
+use toma::toma::facility::fl_select_regions;
+use toma::util::Pcg64;
+
+fn main() {
+    let mut runner = Runner::from_args();
+
+    // Host-side: FL selection cost vs granularity (N=1024, d=192, r=0.5).
+    let (n, d) = (1024usize, 192usize);
+    let x = Pcg64::new(0).normal_vec(n * d);
+    let mut t = Table::new("Table 5 — tile granularity (host FL + PJRT select artifact)")
+        .headers(&["#Tiles", "Host FL select", "Artifact latency"]);
+
+    let runtime = Runtime::with_default_dir().map(Arc::new).ok();
+    let mut host_times = vec![];
+    for p in [4usize, 16, 64, 256] {
+        let host = runner.bench(&format!("fl_regions_p{p}"), || {
+            std::hint::black_box(fl_select_regions(&x, p, n / p, d, n / p / 2));
+        });
+        host_times.push((p, host));
+
+        let mut art = String::from("—");
+        if let Some(rt) = &runtime {
+            let name = format!("uvit_s_select_tile_r50_p{p}");
+            if let Ok(exe) = rt.executor(&name) {
+                let info = rt.manifest.model("uvit_s").unwrap();
+                let mut rng = Pcg64::new(p as u64);
+                let x_t = rng.normal_vec(info.latent_len());
+                let tv = vec![500.0f32; info.batch];
+                let inputs = vec![Input::F32(x_t), Input::F32(tv)];
+                let _ = exe.run(&inputs);
+                let s = runner.bench(&format!("select_artifact_p{p}"), || {
+                    exe.run(&inputs).unwrap();
+                });
+                art = fmt_secs(s);
+            }
+        }
+        t.row(vec![format!("{p}"), fmt_secs(host), art]);
+    }
+    println!("\n{}", t.render());
+
+    // Shape: cost drops steeply from 4 -> 64 tiles, then flattens.
+    let t4 = host_times[0].1;
+    let t64 = host_times[2].1;
+    let t256 = host_times[3].1;
+    assert!(t64 < t4 / 3.0, "64 tiles should be >3x faster than 4");
+    assert!(t256 < t4, "finer tiles never slower than the coarse extreme");
+    println!(
+        "shape: p4 {} >> p64 {} ~ p256 {} (paper: 11.4s -> 5.0s -> 5.0s)",
+        fmt_secs(t4),
+        fmt_secs(t64),
+        fmt_secs(t256)
+    );
+}

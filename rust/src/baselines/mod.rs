@@ -1,0 +1,12 @@
+//! Reimplementations of the heuristic token-reduction baselines the paper
+//! compares against (Table 3, Table 6), including their GPU-unfriendly
+//! primitives (argsort, gather, scatter-add) so the overhead comparison
+//! with ToMA's dense-GEMM merge is honest.
+
+pub mod tlb;
+pub mod todo;
+pub mod tome;
+
+pub use tlb::TlbReducer;
+pub use todo::todo_pool;
+pub use tome::{TomeMode, TomePlan};

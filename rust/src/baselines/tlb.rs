@@ -1,0 +1,69 @@
+//! TLB — the Theoretical Lower Bound dummy merge (Sec. 5.1).
+//!
+//! Approximates the maximum attainable speedup of token reduction by
+//! dropping tokens outright (keep the first D) and duplicating the retained
+//! features back to full length on "unmerge". No similarity computation, no
+//! gather logic: pure slicing, isolating the token-count benefit.
+
+/// Keep-first-k reducer with tile-duplication restore.
+#[derive(Clone, Copy, Debug)]
+pub struct TlbReducer {
+    pub n: usize,
+    pub k: usize,
+}
+
+impl TlbReducer {
+    pub fn new(n: usize, ratio: f32) -> Self {
+        let k = (((1.0 - ratio) * n as f32).round() as usize).max(1);
+        TlbReducer { n, k }
+    }
+
+    pub fn merge(&self, x: &[f32], d: usize) -> Vec<f32> {
+        assert_eq!(x.len(), self.n * d);
+        x[..self.k * d].to_vec()
+    }
+
+    pub fn unmerge(&self, y: &[f32], d: usize) -> Vec<f32> {
+        assert_eq!(y.len(), self.k * d);
+        let mut out = Vec::with_capacity(self.n * d);
+        while out.len() < self.n * d {
+            let take = (self.n * d - out.len()).min(y.len());
+            out.extend_from_slice(&y[..take]);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratios() {
+        assert_eq!(TlbReducer::new(64, 0.5).k, 32);
+        assert_eq!(TlbReducer::new(64, 0.75).k, 16);
+        assert_eq!(TlbReducer::new(4, 0.99).k, 1);
+    }
+
+    #[test]
+    fn merge_slices_prefix() {
+        let x: Vec<f32> = (0..16).map(|v| v as f32).collect();
+        let r = TlbReducer::new(8, 0.5);
+        assert_eq!(r.merge(&x, 2), &x[..8]);
+    }
+
+    #[test]
+    fn unmerge_duplicates() {
+        let r = TlbReducer::new(4, 0.5);
+        let y = vec![1.0, 2.0, 3.0, 4.0]; // k=2, d=2
+        let out = r.unmerge(&y, 2);
+        assert_eq!(out, vec![1.0, 2.0, 3.0, 4.0, 1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn roundtrip_shape() {
+        let r = TlbReducer::new(10, 0.7);
+        let x = vec![0.5f32; 10 * 3];
+        assert_eq!(r.unmerge(&r.merge(&x, 3), 3).len(), 30);
+    }
+}

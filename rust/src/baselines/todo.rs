@@ -1,0 +1,50 @@
+//! ToDo (Smith et al. 2024): token downsampling of keys/values only.
+//! Queries stay at full resolution; K/V are 2x2 average-pooled on the
+//! spatial grid (a fixed 75% reduction — the method's minimum ratio).
+
+/// 2x2 average-pool (h x w x d) row-major tokens -> (h/2 x w/2 x d).
+pub fn todo_pool(x: &[f32], h: usize, w: usize, d: usize) -> Vec<f32> {
+    assert_eq!(x.len(), h * w * d);
+    assert!(h % 2 == 0 && w % 2 == 0, "grid must be even");
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = vec![0.0f32; oh * ow * d];
+    for r in 0..oh {
+        for c in 0..ow {
+            let o = (r * ow + c) * d;
+            for (dr, dc) in [(0, 0), (0, 1), (1, 0), (1, 1)] {
+                let i = ((2 * r + dr) * w + (2 * c + dc)) * d;
+                for j in 0..d {
+                    out[o + j] += 0.25 * x[i + j];
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_quartered() {
+        let x = vec![1.0f32; 8 * 8 * 3];
+        assert_eq!(todo_pool(&x, 8, 8, 3).len(), 16 * 3);
+    }
+
+    #[test]
+    fn window_mean() {
+        // Token value = its flat index; window (0,0) = {0,1,8,9} -> 4.5.
+        let x: Vec<f32> = (0..64).map(|v| v as f32).collect();
+        let p = todo_pool(&x, 8, 8, 1);
+        assert!((p[0] - 4.5).abs() < 1e-6);
+        // Window (1,1) covers {18,19,26,27} -> 22.5.
+        assert!((p[1 * 4 + 1] - 22.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn constant_preserved() {
+        let x = vec![3.5f32; 4 * 4 * 2];
+        assert!(todo_pool(&x, 4, 4, 2).iter().all(|v| (v - 3.5).abs() < 1e-6));
+    }
+}

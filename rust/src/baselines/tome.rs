@@ -1,0 +1,268 @@
+//! ToMeSD bipartite soft matching (Bolya & Hoffman 2023) and the ToFu
+//! merge/prune blend (Kim et al. 2023).
+//!
+//! Pipeline (per plan):
+//!   1. destinations = one token per 2x2 spatial window; sources = rest;
+//!   2. score every source against every destination (cosine);
+//!   3. **sort** sources by best-match similarity (the GPU-inefficient
+//!      step ToMA eliminates);
+//!   4. merge: **gather** the top-r sources, **scatter-add** them into
+//!      their destinations, divide by counts;
+//!   5. unmerge: copy each destination embedding back to the source
+//!      positions merged into it.
+//!
+//! ToFu reuses the matching but either merges (averaging) or prunes
+//! (destinations unchanged) depending on the block's linearity regime.
+
+use crate::tensor::ops::{argsort_desc, gather_rows, l2_normalize_rows, matmul_bt, scatter_add_rows};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TomeMode {
+    Merge,
+    Prune,
+}
+
+/// A bipartite merge plan for one batch element on an (h x w) token grid.
+#[derive(Clone, Debug)]
+pub struct TomePlan {
+    pub dst_idx: Vec<usize>,   // global ids of destination tokens
+    pub src_idx: Vec<usize>,   // global ids of source tokens
+    pub order: Vec<usize>,     // source slots sorted by match quality (desc)
+    pub node_idx: Vec<usize>,  // best destination slot per source slot
+    pub k: usize,              // number of sources merged away
+    pub mode: TomeMode,
+    pub n: usize,
+}
+
+impl TomePlan {
+    /// Build the matching from features x (n x d) on an (h x w) grid.
+    /// `ratio` is the fraction of the total sequence merged away, capped by
+    /// the source count (3/4 at 2x2 stride).
+    pub fn build(x: &[f32], h: usize, w: usize, d: usize, ratio: f32, mode: TomeMode) -> TomePlan {
+        let n = h * w;
+        assert_eq!(x.len(), n * d);
+        let mut dst_idx = vec![];
+        let mut src_idx = vec![];
+        for r in 0..h {
+            for c in 0..w {
+                if r % 2 == 0 && c % 2 == 0 {
+                    dst_idx.push(r * w + c);
+                } else {
+                    src_idx.push(r * w + c);
+                }
+            }
+        }
+        let n_src = src_idx.len();
+        let k = ((ratio * n as f32).round() as usize).min(n_src);
+
+        let mut xn = x.to_vec();
+        l2_normalize_rows(&mut xn, n, d);
+        let hs = gather_rows(&xn, d, &src_idx);
+        let hd = gather_rows(&xn, d, &dst_idx);
+        let scores = matmul_bt(&hs, &hd, n_src, d, dst_idx.len());
+
+        let mut node_max = vec![f32::NEG_INFINITY; n_src];
+        let mut node_idx = vec![0usize; n_src];
+        for s in 0..n_src {
+            for t in 0..dst_idx.len() {
+                let v = scores[s * dst_idx.len() + t];
+                if v > node_max[s] {
+                    node_max[s] = v;
+                    node_idx[s] = t;
+                }
+            }
+        }
+        // The characteristic full sort over sources.
+        let order = argsort_desc(&node_max);
+
+        TomePlan {
+            dst_idx,
+            src_idx,
+            order,
+            node_idx,
+            k,
+            mode,
+            n,
+        }
+    }
+
+    pub fn merged_len(&self) -> usize {
+        self.n - self.k
+    }
+
+    /// Merge: (n x d) -> (merged_len x d), kept sources first then dests.
+    pub fn merge(&self, x: &[f32], d: usize) -> Vec<f32> {
+        assert_eq!(x.len(), self.n * d);
+        let xs = gather_rows(x, d, &self.src_idx);
+        let mut xd = gather_rows(x, d, &self.dst_idx);
+        let kept: Vec<usize> = self.order[self.k..]
+            .iter()
+            .map(|&s| self.src_idx[s])
+            .collect();
+        let x_kept = gather_rows(x, d, &kept);
+
+        if self.mode == TomeMode::Merge && self.k > 0 {
+            let merged_slots = &self.order[..self.k];
+            let merged_rows: Vec<f32> = merged_slots
+                .iter()
+                .flat_map(|&s| xs[s * d..(s + 1) * d].to_vec())
+                .collect();
+            let targets: Vec<usize> = merged_slots.iter().map(|&s| self.node_idx[s]).collect();
+            // Scatter-add + count normalization (destination keeps weight 1).
+            scatter_add_rows(&merged_rows, d, &targets, &mut xd);
+            let mut counts = vec![1.0f32; self.dst_idx.len()];
+            for &t in &targets {
+                counts[t] += 1.0;
+            }
+            for (t, row) in xd.chunks_mut(d).enumerate() {
+                let inv = 1.0 / counts[t];
+                for v in row {
+                    *v *= inv;
+                }
+            }
+        }
+        let mut out = x_kept;
+        out.extend_from_slice(&xd);
+        out
+    }
+
+    /// Unmerge: (merged_len x d) -> (n x d).
+    pub fn unmerge(&self, y: &[f32], d: usize) -> Vec<f32> {
+        assert_eq!(y.len(), self.merged_len() * d);
+        let n_keep = self.src_idx.len() - self.k;
+        let y_kept = &y[..n_keep * d];
+        let y_dst = &y[n_keep * d..];
+        let mut out = vec![0.0f32; self.n * d];
+        for (i, &s) in self.order[self.k..].iter().enumerate() {
+            let g = self.src_idx[s];
+            out[g * d..(g + 1) * d].copy_from_slice(&y_kept[i * d..(i + 1) * d]);
+        }
+        for (i, &s) in self.order[..self.k].iter().enumerate() {
+            let _ = i;
+            let g = self.src_idx[s];
+            let t = self.node_idx[s];
+            out[g * d..(g + 1) * d].copy_from_slice(&y_dst[t * d..(t + 1) * d]);
+        }
+        for (t, &g) in self.dst_idx.iter().enumerate() {
+            out[g * d..(g + 1) * d].copy_from_slice(&y_dst[t * d..(t + 1) * d]);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, Pcg64};
+
+    fn randn(n: usize, seed: u64) -> Vec<f32> {
+        Pcg64::new(seed).normal_vec(n)
+    }
+
+    #[test]
+    fn partition_covers_grid() {
+        let x = randn(64 * 4, 0);
+        let p = TomePlan::build(&x, 8, 8, 4, 0.5, TomeMode::Merge);
+        let mut all: Vec<usize> = p.dst_idx.iter().chain(&p.src_idx).copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..64).collect::<Vec<_>>());
+        assert_eq!(p.dst_idx.len(), 16);
+    }
+
+    #[test]
+    fn k_capped_by_sources() {
+        let x = randn(64 * 4, 1);
+        let p = TomePlan::build(&x, 8, 8, 4, 0.95, TomeMode::Merge);
+        assert_eq!(p.k, 48);
+        assert_eq!(p.merged_len(), 16);
+    }
+
+    #[test]
+    fn merge_unmerge_shapes() {
+        let x = randn(64 * 4, 2);
+        let p = TomePlan::build(&x, 8, 8, 4, 0.5, TomeMode::Merge);
+        let y = p.merge(&x, 4);
+        assert_eq!(y.len(), p.merged_len() * 4);
+        let back = p.unmerge(&y, 4);
+        assert_eq!(back.len(), 64 * 4);
+    }
+
+    #[test]
+    fn kept_tokens_roundtrip_exactly() {
+        let x = randn(64 * 4, 3);
+        let p = TomePlan::build(&x, 8, 8, 4, 0.25, TomeMode::Merge);
+        let back = p.unmerge(&p.merge(&x, 4), 4);
+        for &s in &p.order[p.k..] {
+            let g = p.src_idx[s];
+            assert_eq!(&back[g * 4..(g + 1) * 4], &x[g * 4..(g + 1) * 4]);
+        }
+    }
+
+    #[test]
+    fn merged_sources_get_destination_value() {
+        let x = randn(64 * 4, 4);
+        let p = TomePlan::build(&x, 8, 8, 4, 0.5, TomeMode::Merge);
+        let y = p.merge(&x, 4);
+        let back = p.unmerge(&y, 4);
+        for &s in &p.order[..p.k] {
+            let g_src = p.src_idx[s];
+            let g_dst = p.dst_idx[p.node_idx[s]];
+            assert_eq!(&back[g_src * 4..(g_src + 1) * 4],
+                       &back[g_dst * 4..(g_dst + 1) * 4]);
+        }
+    }
+
+    #[test]
+    fn prune_keeps_destinations_unchanged() {
+        let x = randn(64 * 4, 5);
+        let p = TomePlan::build(&x, 8, 8, 4, 0.5, TomeMode::Prune);
+        let y = p.merge(&x, 4);
+        let n_keep = p.src_idx.len() - p.k;
+        for (t, &g) in p.dst_idx.iter().enumerate() {
+            assert_eq!(&y[(n_keep + t) * 4..(n_keep + t + 1) * 4],
+                       &x[g * 4..(g + 1) * 4]);
+        }
+    }
+
+    #[test]
+    fn order_ranks_by_similarity() {
+        let x = randn(64 * 8, 6);
+        let p = TomePlan::build(&x, 8, 8, 8, 0.5, TomeMode::Merge);
+        // Recompute node_max and verify the order is non-increasing.
+        let mut xn = x.clone();
+        l2_normalize_rows(&mut xn, 64, 8);
+        let hs = gather_rows(&xn, 8, &p.src_idx);
+        let hd = gather_rows(&xn, 8, &p.dst_idx);
+        let sc = matmul_bt(&hs, &hd, p.src_idx.len(), 8, p.dst_idx.len());
+        let best: Vec<f32> = (0..p.src_idx.len())
+            .map(|s| {
+                (0..p.dst_idx.len())
+                    .map(|t| sc[s * p.dst_idx.len() + t])
+                    .fold(f32::NEG_INFINITY, f32::max)
+            })
+            .collect();
+        let ranked: Vec<f32> = p.order.iter().map(|&s| best[s]).collect();
+        assert!(ranked.windows(2).all(|w| w[0] >= w[1] - 1e-5));
+    }
+
+    #[test]
+    fn prop_unmerge_fills_everything() {
+        prop::check("tome fills", 12, |g| {
+            let hw = *g.pick(&[4usize, 8]);
+            let d = g.usize_in(2, 6);
+            let ratio = *g.pick(&[0.25f32, 0.5, 0.75]);
+            let x: Vec<f32> = g
+                .normal_vec(hw * hw * d)
+                .iter()
+                .map(|v| v + 3.0)
+                .collect();
+            let p = TomePlan::build(&x, hw, hw, d, ratio, TomeMode::Merge);
+            let back = p.unmerge(&p.merge(&x, d), d);
+            // Shifted inputs are strictly positive on average per row.
+            for r in 0..hw * hw {
+                let s: f32 = back[r * d..(r + 1) * d].iter().map(|v| v.abs()).sum();
+                prop::assert_prop(s > 0.0, "position filled");
+            }
+        });
+    }
+}

@@ -1,0 +1,179 @@
+//! Criterion-style micro-benchmark harness (the vendored crate set has no
+//! `criterion`): warmup, timed iterations, median/p10/p90 with outlier
+//! trimming, and a `--filter` / `--quick` aware runner for `cargo bench`
+//! targets (`harness = false`).
+
+use std::time::Instant;
+
+use crate::util::stats;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median_s: f64,
+    pub mean_s: f64,
+    pub p10_s: f64,
+    pub p90_s: f64,
+}
+
+impl BenchResult {
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<44} {:>12} median  {:>12} p90  ({} iters)",
+            self.name,
+            crate::report::fmt_secs(self.median_s),
+            crate::report::fmt_secs(self.p90_s),
+            self.iters
+        )
+    }
+}
+
+/// Benchmark runner configured from CLI args.
+pub struct Runner {
+    pub filter: Option<String>,
+    /// Minimum sampling time per case, seconds.
+    pub min_time_s: f64,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for Runner {
+    fn default() -> Self {
+        Runner::new()
+    }
+}
+
+impl Runner {
+    pub fn new() -> Self {
+        Runner {
+            filter: None,
+            min_time_s: 0.5,
+            min_iters: 5,
+            max_iters: 1000,
+            results: vec![],
+        }
+    }
+
+    /// Configure from `cargo bench -- [filter] [--quick]` style args.
+    pub fn from_args() -> Self {
+        let mut r = Runner::new();
+        for a in std::env::args().skip(1) {
+            match a.as_str() {
+                "--quick" => {
+                    r.min_time_s = 0.05;
+                    r.min_iters = 2;
+                    r.max_iters = 20;
+                }
+                "--bench" | "--exact" => {}
+                s if !s.starts_with('-') => r.filter = Some(s.to_string()),
+                _ => {}
+            }
+        }
+        if std::env::var("TOMA_BENCH_QUICK").is_ok() {
+            r.min_time_s = 0.05;
+            r.min_iters = 2;
+            r.max_iters = 20;
+        }
+        r
+    }
+
+    pub fn should_run(&self, name: &str) -> bool {
+        self.filter
+            .as_ref()
+            .map(|f| name.contains(f.as_str()))
+            .unwrap_or(true)
+    }
+
+    /// Time `f`, printing and recording the result. Returns median seconds.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> f64 {
+        if !self.should_run(name) {
+            return 0.0;
+        }
+        // Warmup: one untimed call plus enough to estimate cost.
+        let t0 = Instant::now();
+        f();
+        let first = t0.elapsed().as_secs_f64();
+        let target_iters = ((self.min_time_s / first.max(1e-9)) as usize)
+            .clamp(self.min_iters, self.max_iters);
+
+        let mut samples = Vec::with_capacity(target_iters);
+        for _ in 0..target_iters {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        // Trim top/bottom 10% against scheduler noise.
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let trim = samples.len() / 10;
+        let trimmed = &samples[trim..samples.len() - trim.min(samples.len() - 1)];
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: samples.len(),
+            median_s: stats::median(trimmed),
+            mean_s: stats::mean(trimmed),
+            p10_s: stats::percentile(&samples, 10.0),
+            p90_s: stats::percentile(&samples, 90.0),
+        };
+        println!("{}", result.summary());
+        let med = result.median_s;
+        self.results.push(result);
+        med
+    }
+
+    /// Look up a recorded result by exact name.
+    pub fn get(&self, name: &str) -> Option<&BenchResult> {
+        self.results.iter().find(|r| r.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_records_result() {
+        let mut r = Runner::new();
+        r.min_time_s = 0.01;
+        r.max_iters = 10;
+        let med = r.bench("spin", || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(med >= 0.0);
+        assert_eq!(r.results.len(), 1);
+        assert!(r.get("spin").is_some());
+        assert!(r.get("missing").is_none());
+    }
+
+    #[test]
+    fn filter_skips() {
+        let mut r = Runner::new();
+        r.filter = Some("match".into());
+        assert!(r.should_run("a_match_b"));
+        assert!(!r.should_run("other"));
+        let ran = std::cell::Cell::new(false);
+        r.bench("other", || ran.set(true));
+        assert!(!ran.get());
+        assert!(r.results.is_empty());
+    }
+
+    #[test]
+    fn ordering_sane_for_different_costs() {
+        let mut r = Runner::new();
+        r.min_time_s = 0.02;
+        r.max_iters = 50;
+        // black_box the *bounds* so the compiler cannot constant-fold the
+        // loops away in release mode.
+        let fast = r.bench("fast", || {
+            let n = std::hint::black_box(100u64);
+            std::hint::black_box((0..n).map(|x| x.wrapping_mul(x)).sum::<u64>());
+        });
+        let slow = r.bench("slow", || {
+            let n = std::hint::black_box(1_000_000u64);
+            std::hint::black_box((0..n).map(|x| x.wrapping_mul(x)).sum::<u64>());
+        });
+        assert!(slow > fast);
+    }
+}

@@ -1,0 +1,443 @@
+//! The generation engine: one denoising loop per request, driving the AOT
+//! step/select/weights executables through the reuse schedule.
+//!
+//! Per step the engine:
+//!  1. consults the plan cache (Sec. 4.3.2): rerun selection, rebuild
+//!     weights only, or reuse the cached `A~`;
+//!  2. executes the step artifact with (x_t, t, cond[, A~, idx]);
+//!  3. applies classifier-free guidance and the DDIM/Euler update on the
+//!     host (cheap, O(latent)).
+//!
+//! Everything heavy runs inside XLA; the engine's own overhead is tracked
+//! separately (`GenStats::host_s`) and asserted small in the perf pass.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::plan_cache::PlanSlot;
+use super::request::{EngineConfig, GenRequest, GenResult, GenStats};
+use crate::diffusion::{cfg_mix, ddim_update, euler_update, NoiseSchedule, SamplerKind};
+use crate::runtime::executor::{Arg, DeviceInput, Input};
+use crate::runtime::{ArtifactEntry, Executor, ModelInfo, Runtime};
+use crate::toma::plan::{MergePlan, PlanAction};
+use crate::toma::regions::{RegionLayout, RegionMode};
+use crate::util::Pcg64;
+use crate::workload::prompts::embed_prompt;
+
+/// How selection output reaches the step artifact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum PlanPath {
+    /// Selection's region layout matches the step's merge layout: the
+    /// select artifact's `A~` feeds the step directly (stripe/tile merge,
+    /// and DiT's global merge with global selection).
+    Direct,
+    /// The paper's default ToMA: *regional* destination selection + a
+    /// *global* attention merge. Region-local destination indices are
+    /// translated to global token ids on the host, then the global
+    /// weights artifact builds the (B, D, N) operator.
+    Globalize,
+}
+
+pub struct Engine {
+    pub cfg: EngineConfig,
+    runtime: Arc<Runtime>,
+    info: ModelInfo,
+    step_exe: Arc<Executor>,
+    select_exe: Option<Arc<Executor>>,
+    /// Weights-only rebuild matching the *step's* merge layout.
+    weights_exe: Option<Arc<Executor>>,
+    schedule: NoiseSchedule,
+    plan_path: PlanPath,
+    /// Region layout of the selection artifact (global-id translation for
+    /// the Globalize path and the Fig. 4 trace).
+    select_layout: Option<RegionLayout>,
+}
+
+impl Engine {
+    pub fn new(runtime: Arc<Runtime>, cfg: EngineConfig) -> Result<Engine> {
+        let info = runtime.manifest.model(&cfg.model)?.clone();
+        let step_name = runtime
+            .manifest
+            .step_name(&cfg.model, &cfg.variant, cfg.ratio)?;
+        let step_exe = runtime.executor(&step_name)?;
+
+        let mut plan_path = PlanPath::Direct;
+        let (select_exe, weights_exe, select_layout) = if cfg.needs_plan() {
+            let ratio = cfg.ratio.ok_or_else(|| anyhow!("toma needs ratio"))?;
+            let step_regions = step_exe.entry.regions.max(1);
+            let step_mode = step_exe.entry.region_mode.clone()
+                .unwrap_or_else(|| "global".into());
+
+            // Pick the selection artifact. Regional-merge variants must
+            // select within the step's own regions (Direct); global-merge
+            // variants select per cfg.select_mode and globalize.
+            let (sel_name, weights_name) = if step_regions > 1 {
+                let sel = runtime.manifest.select_name(
+                    &cfg.model, &step_mode, ratio, Some(step_regions))?;
+                let w = runtime.manifest.weights_name_for_select(&sel);
+                (sel, w)
+            } else if info.kind == "dit" {
+                // DiT global merge: global selection matches directly.
+                let sel = runtime
+                    .manifest
+                    .select_name(&cfg.model, "global", ratio, None)?;
+                (sel, None)
+            } else {
+                plan_path = PlanPath::Globalize;
+                let sel = runtime
+                    .manifest
+                    .select_name(&cfg.model, &cfg.select_mode, ratio, None)?;
+                // Global weights artifact rebuilds A~ from global ids.
+                let g = runtime
+                    .manifest
+                    .select_name(&cfg.model, "global", ratio, None)?;
+                let w = runtime.manifest.weights_name_for_select(&g);
+                (sel, w)
+            };
+            let sel = runtime.executor(&sel_name)?;
+            let weights = weights_name.map(|w| runtime.executor(&w)).transpose()?;
+
+            let grid = info.grid();
+            let sel_mode = match sel.entry.mode.as_deref() {
+                Some("tile") => RegionMode::Tile,
+                Some("stripe") => RegionMode::Stripe,
+                _ => RegionMode::Global,
+            };
+            let layout = RegionLayout::new(sel_mode, sel.entry.regions.max(1), grid, grid);
+            (Some(sel), weights, Some(layout))
+        } else {
+            (None, None, None)
+        };
+
+        let sampler = SamplerKind::for_model_kind(&info.kind);
+        let schedule = NoiseSchedule::new(sampler, cfg.steps);
+        Ok(Engine {
+            cfg,
+            runtime,
+            info,
+            step_exe,
+            select_exe,
+            weights_exe,
+            schedule,
+            plan_path,
+            select_layout,
+        })
+    }
+
+    pub fn info(&self) -> &ModelInfo {
+        &self.info
+    }
+
+    pub fn step_entry(&self) -> &ArtifactEntry {
+        &self.step_exe.entry
+    }
+
+    /// Build the CFG-paired conditioning tensor: row 0 zeros (uncond),
+    /// row 1 the prompt embedding (batch must be 2).
+    fn conditioning(&self, prompt: &str) -> Vec<f32> {
+        let (tl, td, b) = (self.info.txt_len, self.info.txt_dim, self.info.batch);
+        let emb = embed_prompt(prompt, tl, td);
+        let mut cond = vec![0.0f32; b * tl * td];
+        if b >= 2 {
+            cond[tl * td..2 * tl * td].copy_from_slice(&emb);
+        } else {
+            cond[..tl * td].copy_from_slice(&emb);
+        }
+        cond
+    }
+
+    /// Run the selection artifact and convert outputs into MergePlans.
+    fn run_select(&self, x_t: &[f32], t: &[f32], cond: &[f32], step: u64,
+                  seed: u64) -> Result<(MergePlan, Option<MergePlan>)> {
+        let sel = self.select_exe.as_ref().expect("select exe");
+        let mut inputs: Vec<Input> = Vec::new();
+        for spec in &sel.entry.inputs {
+            match spec.name.as_str() {
+                "x_t" => inputs.push(Input::F32(x_t.to_vec())),
+                "t" => inputs.push(Input::F32(t.to_vec())),
+                "cond" => inputs.push(Input::F32(cond.to_vec())),
+                "seed" => inputs.push(Input::U32(vec![(seed ^ step) as u32])),
+                other => return Err(anyhow!("unknown select input {other}")),
+            }
+        }
+        let outs = sel.run(&inputs)?;
+        let mk_plan = |idx: &xla::Literal, at: &xla::Literal, a_shape: &[usize]| -> Result<MergePlan> {
+            Ok(MergePlan {
+                idx: idx.to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?,
+                a_tilde: at.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+                a: vec![],
+                groups: a_shape[0],
+                d_loc: a_shape[1],
+                n_loc: a_shape[2],
+                dest_step: step,
+                weight_step: step,
+            })
+        };
+        if self.info.kind == "uvit" {
+            // (idx, a, at)
+            let shape = &sel.entry.outputs[2].shape;
+            let mut img = mk_plan(&outs[0], &outs[2], shape)?;
+            img.a = outs[1].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+            if self.plan_path == PlanPath::Globalize && sel.entry.regions > 1 {
+                img = self.globalize_plan(img, x_t, t, step)?;
+            }
+            Ok((img, None))
+        } else {
+            // (ix_img, a_i, at_i, ix_txt, a_t, at_t)
+            let img = mk_plan(&outs[0], &outs[2], &sel.entry.outputs[2].shape)?;
+            let txt = mk_plan(&outs[3], &outs[5], &sel.entry.outputs[5].shape)?;
+            Ok((img, Some(txt)))
+        }
+    }
+
+    /// The paper-default ToMA wiring: region-local destinations -> global
+    /// token ids (host, O(D)) -> global merge operator via the weights
+    /// artifact.
+    fn globalize_plan(&self, local: MergePlan, x_t: &[f32], t: &[f32],
+                      step: u64) -> Result<MergePlan> {
+        let layout = self
+            .select_layout
+            .as_ref()
+            .ok_or_else(|| anyhow!("globalize needs a select layout"))?;
+        let wexe = self.weights_exe.as_ref().ok_or_else(|| {
+            anyhow!("global-merge variant needs the global weights artifact")
+        })?;
+        let b = self.info.batch;
+        let regions = layout.regions;
+        let d_total = regions * local.d_loc;
+        let mut global_idx = Vec::with_capacity(b * d_total);
+        for batch in 0..b {
+            let mut ids: Vec<i32> = (0..regions)
+                .flat_map(|p| {
+                    let g = batch * regions + p;
+                    (0..local.d_loc).map(move |s| (g, p, s))
+                })
+                .map(|(g, p, s)| {
+                    layout.token_at(p, local.idx[g * local.d_loc + s] as usize) as i32
+                })
+                .collect();
+            ids.sort_unstable();
+            global_idx.extend(ids);
+        }
+        let outs = wexe.run(&[
+            Input::F32(x_t.to_vec()),
+            Input::F32(t.to_vec()),
+            Input::I32(global_idx.clone()),
+        ])?;
+        let shape = &wexe.entry.outputs[1].shape; // at: (B, D, N)
+        Ok(MergePlan {
+            idx: global_idx,
+            a: outs[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+            a_tilde: outs[1].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+            groups: shape[0],
+            d_loc: shape[1],
+            n_loc: shape[2],
+            dest_step: step,
+            weight_step: step,
+        })
+    }
+
+    /// Weights-only refresh (UVit): keep destinations, rebuild A / A~.
+    fn run_weights(&self, x_t: &[f32], t: &[f32], slot: &mut PlanSlot,
+                   step: u64) -> Result<bool> {
+        let Some(wexe) = self.weights_exe.as_ref() else {
+            return Ok(false);
+        };
+        let Some(plan) = slot.img.as_ref() else {
+            return Ok(false);
+        };
+        let inputs = vec![
+            Input::F32(x_t.to_vec()),
+            Input::F32(t.to_vec()),
+            Input::I32(plan.idx.clone()),
+        ];
+        let outs = wexe.run(&inputs)?;
+        let a = outs[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let at = outs[1].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        slot.refresh_weights(at, a, step);
+        Ok(true)
+    }
+
+    /// Upload every step-invariant plan input as a device buffer, keyed by
+    /// input name (perf: avoids re-copying the A~ operator every step —
+    /// the Sec. 4.3.2 reuse made physical).
+    fn upload_plan(&self, slot: &PlanSlot)
+                   -> Result<std::collections::BTreeMap<String, DeviceInput>> {
+        let mut out = std::collections::BTreeMap::new();
+        for (pos, spec) in self.step_exe.entry.inputs.iter().enumerate() {
+            let input = match spec.name.as_str() {
+                "a_tilde" | "at_img" => {
+                    let p = slot.img.as_ref().ok_or_else(|| anyhow!("no plan"))?;
+                    Input::F32(p.a_tilde.clone())
+                }
+                "a" => {
+                    let p = slot.img.as_ref().ok_or_else(|| anyhow!("no plan"))?;
+                    Input::F32(p.a.clone())
+                }
+                "ix_img" => {
+                    let p = slot.img.as_ref().ok_or_else(|| anyhow!("no plan"))?;
+                    Input::I32(p.idx.clone())
+                }
+                "at_txt" => {
+                    let p = slot.txt.as_ref().ok_or_else(|| anyhow!("no txt plan"))?;
+                    Input::F32(p.a_tilde.clone())
+                }
+                "ix_txt" => {
+                    let p = slot.txt.as_ref().ok_or_else(|| anyhow!("no txt plan"))?;
+                    Input::I32(p.idx.clone())
+                }
+                _ => continue,
+            };
+            out.insert(spec.name.clone(), self.step_exe.upload(pos, &input)?);
+        }
+        Ok(out)
+    }
+
+    /// Execute one denoising step; returns eps/velocity (B,C,H,W) flat.
+    /// `cond_dev` and `plan_dev` are resident device buffers.
+    fn run_step(&self, x_t: &[f32], t: &[f32], cond_dev: &DeviceInput,
+                plan_dev: &std::collections::BTreeMap<String, DeviceInput>)
+                -> Result<Vec<f32>> {
+        let mut args: Vec<Arg> = Vec::new();
+        for spec in &self.step_exe.entry.inputs {
+            match spec.name.as_str() {
+                "x_t" => args.push(Arg::Host(Input::F32(x_t.to_vec()))),
+                "t" => args.push(Arg::Host(Input::F32(t.to_vec()))),
+                "cond" => args.push(Arg::Device(cond_dev)),
+                name => {
+                    let dev = plan_dev
+                        .get(name)
+                        .ok_or_else(|| anyhow!("no cached buffer for {name}"))?;
+                    args.push(Arg::Device(dev));
+                }
+            }
+        }
+        let outs = self.step_exe.run_args(&args)?;
+        outs[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))
+    }
+
+    /// Generate one image latent.
+    pub fn generate(&self, req: &GenRequest) -> Result<GenResult> {
+        let t_start = Instant::now();
+        let info = &self.info;
+        let b = info.batch;
+        let per = info.channels * info.latent_hw * info.latent_hw;
+        let mut rng = Pcg64::new(req.seed);
+
+        // Same initial noise for the uncond/cond CFG rows.
+        let noise = rng.normal_vec(per);
+        let mut x_t = vec![0.0f32; b * per];
+        for row in 0..b {
+            x_t[row * per..(row + 1) * per].copy_from_slice(&noise);
+        }
+        let cond = self.conditioning(&req.prompt);
+        // Conditioning never changes within a generation: resident buffer.
+        let cond_pos = self
+            .step_exe
+            .entry
+            .inputs
+            .iter()
+            .position(|s| s.name == "cond")
+            .ok_or_else(|| anyhow!("step artifact has no cond input"))?;
+        let cond_dev = self.step_exe.upload(cond_pos, &Input::F32(cond.clone()))?;
+
+        let mut slot = PlanSlot::default();
+        let mut plan_dev: std::collections::BTreeMap<String, DeviceInput> =
+            Default::default();
+        let mut stats = GenStats::default();
+        let mut dest_trace: Vec<Vec<usize>> = vec![];
+        let mut eps_mixed = vec![0.0f32; per];
+        let mut x_next = vec![0.0f32; b * per];
+
+        for step in 0..self.cfg.steps {
+            let tv = vec![self.schedule.timesteps[step]; b];
+
+            if self.cfg.needs_plan() {
+                match slot.decide(&self.cfg.schedule, step as u64) {
+                    PlanAction::RefreshAll => {
+                        let t0 = Instant::now();
+                        let (img, txt) =
+                            self.run_select(&x_t, &tv, &cond, step as u64, req.seed)?;
+                        slot.install(img, txt);
+                        plan_dev = self.upload_plan(&slot)?;
+                        stats.select_calls += 1;
+                        stats.select_s += t0.elapsed().as_secs_f64();
+                    }
+                    PlanAction::RefreshWeights => {
+                        let t0 = Instant::now();
+                        if self.run_weights(&x_t, &tv, &mut slot, step as u64)? {
+                            plan_dev = self.upload_plan(&slot)?;
+                            stats.weight_refreshes += 1;
+                        }
+                        stats.select_s += t0.elapsed().as_secs_f64();
+                    }
+                    PlanAction::Reuse => {
+                        stats.plan_reuses += 1;
+                    }
+                }
+                if req.trace {
+                    if let Some(p) = slot.img.as_ref() {
+                        if self.plan_path == PlanPath::Globalize {
+                            // idx already holds global token ids (batch 0).
+                            dest_trace.push(
+                                p.idx[..p.d_loc.min(p.idx.len())]
+                                    .iter()
+                                    .map(|&i| i as usize)
+                                    .collect(),
+                            );
+                        } else if let Some(layout) = self.select_layout.as_ref() {
+                            dest_trace.push(p.global_destinations(layout, 0));
+                        }
+                    }
+                }
+            }
+
+            let t0 = Instant::now();
+            let eps = self.run_step(&x_t, &tv, &cond_dev, &plan_dev)?;
+            stats.step_s += t0.elapsed().as_secs_f64();
+
+            // Host: CFG mix + sampler update.
+            let t0 = Instant::now();
+            if b >= 2 {
+                cfg_mix(&eps[..per], &eps[per..2 * per], self.cfg.guidance,
+                        &mut eps_mixed);
+            } else {
+                eps_mixed.copy_from_slice(&eps[..per]);
+            }
+            let level = self.schedule.levels[step];
+            let next = self.schedule.next_level(step);
+            match self.schedule.kind {
+                SamplerKind::Ddim => {
+                    ddim_update(&x_t[..per], &eps_mixed, level, next,
+                                &mut x_next[..per]);
+                }
+                SamplerKind::Euler => {
+                    euler_update(&x_t[..per], &eps_mixed, level, next,
+                                 &mut x_next[..per]);
+                }
+            }
+            // Both CFG rows advance with the guided update (standard CFG).
+            let (head, tail) = x_next.split_at_mut(per);
+            for row in 1..b {
+                tail[(row - 1) * per..row * per].copy_from_slice(head);
+            }
+            std::mem::swap(&mut x_t, &mut x_next);
+            stats.host_s += t0.elapsed().as_secs_f64();
+            stats.steps += 1;
+        }
+
+        stats.total_s = t_start.elapsed().as_secs_f64();
+        Ok(GenResult {
+            latent: x_t[..per].to_vec(),
+            stats,
+            dest_trace,
+        })
+    }
+
+    /// The runtime this engine executes on.
+    pub fn runtime(&self) -> &Arc<Runtime> {
+        &self.runtime
+    }
+}

@@ -1,0 +1,121 @@
+//! Serving metrics registry: counters + latency histograms, shared across
+//! worker threads and rendered by `toma-serve serve` / the e2e example.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::stats::LatencyHistogram;
+
+#[derive(Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, u64>>,
+    histograms: Mutex<BTreeMap<String, LatencyHistogram>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&self, name: &str) {
+        self.add(name, 1);
+    }
+
+    pub fn add(&self, name: &str, v: u64) {
+        *self
+            .counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert(0) += v;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters
+            .lock()
+            .unwrap()
+            .get(name)
+            .copied()
+            .unwrap_or(0)
+    }
+
+    pub fn observe(&self, name: &str, d: Duration) {
+        self.histograms
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .record(d);
+    }
+
+    pub fn observe_s(&self, name: &str, secs: f64) {
+        self.observe(name, Duration::from_secs_f64(secs.max(0.0)));
+    }
+
+    /// (count, mean_s, p50_s, p95_s) of a histogram.
+    pub fn latency_summary(&self, name: &str) -> Option<(u64, f64, f64, f64)> {
+        let h = self.histograms.lock().unwrap();
+        let h = h.get(name)?;
+        Some((
+            h.count(),
+            h.mean_us() / 1e6,
+            h.quantile_us(0.5) / 1e6,
+            h.quantile_us(0.95) / 1e6,
+        ))
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::from("-- metrics --\n");
+        for (k, v) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("{k:<40} {v}\n"));
+        }
+        for (k, h) in self.histograms.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "{k:<40} n={} mean={:.3}s p50={:.3}s p95={:.3}s\n",
+                h.count(),
+                h.mean_us() / 1e6,
+                h.quantile_us(0.5) / 1e6,
+                h.quantile_us(0.95) / 1e6
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.inc("req");
+        m.add("req", 4);
+        assert_eq!(m.counter("req"), 5);
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn histogram_summary() {
+        let m = Metrics::new();
+        for i in 1..=100 {
+            m.observe_s("lat", i as f64 * 0.001);
+        }
+        let (n, mean, p50, p95) = m.latency_summary("lat").unwrap();
+        assert_eq!(n, 100);
+        assert!(mean > 0.04 && mean < 0.06);
+        assert!(p50 <= p95);
+        assert!(m.latency_summary("missing").is_none());
+    }
+
+    #[test]
+    fn render_contains_entries() {
+        let m = Metrics::new();
+        m.inc("served");
+        m.observe_s("lat", 0.1);
+        let r = m.render();
+        assert!(r.contains("served"));
+        assert!(r.contains("lat"));
+    }
+}

@@ -1,0 +1,15 @@
+//! Layer-3 serving coordinator: engines, plan cache, request server,
+//! metrics. The paper's Sec. 4.3 (locality layouts + reuse schedules) lives
+//! here as scheduling/caching policy over the AOT artifacts.
+
+pub mod engine;
+pub mod metrics;
+pub mod plan_cache;
+pub mod request;
+pub mod server;
+
+pub use engine::Engine;
+pub use metrics::Metrics;
+pub use plan_cache::{PlanSlot, PlanStats};
+pub use request::{EngineConfig, GenRequest, GenResult, GenStats};
+pub use server::{Completion, Server};

@@ -1,0 +1,133 @@
+//! The merge-plan cache — the runtime embodiment of Sec. 4.3.2.
+//!
+//! Each in-flight generation owns a [`PlanSlot`] holding the current
+//! [`MergePlan`] (destinations + `A~`); the reuse schedule decides per step
+//! whether the coordinator reruns the selection artifact, rebuilds weights
+//! only, or reuses the cached plan. Aggregate hit statistics feed the
+//! metrics registry and the Table 8 harness.
+
+use crate::toma::plan::{MergePlan, PlanAction, ReuseSchedule};
+
+/// Cached plan state for one generation (and for DiT, the text modality).
+#[derive(Default)]
+pub struct PlanSlot {
+    pub img: Option<MergePlan>,
+    pub txt: Option<MergePlan>,
+    pub stats: PlanStats,
+}
+
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PlanStats {
+    pub refresh_all: u64,
+    pub refresh_weights: u64,
+    pub reuses: u64,
+}
+
+impl PlanStats {
+    pub fn total(&self) -> u64 {
+        self.refresh_all + self.refresh_weights + self.reuses
+    }
+
+    /// Fraction of steps served without any recompute.
+    pub fn hit_rate(&self) -> f64 {
+        if self.total() == 0 {
+            return 0.0;
+        }
+        self.reuses as f64 / self.total() as f64
+    }
+}
+
+impl PlanSlot {
+    /// Decide the action for `step` and record it in the stats.
+    pub fn decide(&mut self, schedule: &ReuseSchedule, step: u64) -> PlanAction {
+        let action = schedule.action(step, self.img.as_ref());
+        match action {
+            PlanAction::RefreshAll => self.stats.refresh_all += 1,
+            PlanAction::RefreshWeights => self.stats.refresh_weights += 1,
+            PlanAction::Reuse => self.stats.reuses += 1,
+        }
+        action
+    }
+
+    /// Install a freshly selected plan (destinations + weights).
+    pub fn install(&mut self, img: MergePlan, txt: Option<MergePlan>) {
+        self.img = Some(img);
+        self.txt = txt;
+    }
+
+    /// Refresh only the weights of the cached plan (same destinations).
+    pub fn refresh_weights(&mut self, a_tilde: Vec<f32>, a: Vec<f32>, step: u64) {
+        if let Some(p) = self.img.as_mut() {
+            p.a_tilde = a_tilde;
+            p.a = a;
+            p.weight_step = step;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan(dest_step: u64, weight_step: u64) -> MergePlan {
+        MergePlan {
+            idx: vec![0],
+            a_tilde: vec![1.0],
+            a: vec![],
+            groups: 1,
+            d_loc: 1,
+            n_loc: 1,
+            dest_step,
+            weight_step,
+        }
+    }
+
+    #[test]
+    fn paper_schedule_statistics() {
+        // 50 steps at dest_every=10, weight_every=5: 5 full refreshes,
+        // 5 weight-only refreshes, 40 pure reuses.
+        let schedule = ReuseSchedule::default();
+        let mut slot = PlanSlot::default();
+        for step in 0..50u64 {
+            match slot.decide(&schedule, step) {
+                PlanAction::RefreshAll => {
+                    slot.install(plan(step, step), None);
+                }
+                PlanAction::RefreshWeights => {
+                    slot.refresh_weights(vec![1.0], vec![], step);
+                }
+                PlanAction::Reuse => {}
+            }
+        }
+        assert_eq!(slot.stats.refresh_all, 5);
+        assert_eq!(slot.stats.refresh_weights, 5);
+        assert_eq!(slot.stats.reuses, 40);
+        assert!((slot.stats.hit_rate() - 0.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn every_step_schedule_never_reuses() {
+        let schedule = ReuseSchedule::every_step();
+        let mut slot = PlanSlot::default();
+        for step in 0..10u64 {
+            if slot.decide(&schedule, step) == PlanAction::RefreshAll {
+                slot.install(plan(step, step), None);
+            }
+        }
+        assert_eq!(slot.stats.refresh_all, 10);
+        assert_eq!(slot.stats.reuses, 0);
+    }
+
+    #[test]
+    fn weight_refresh_keeps_destinations() {
+        let mut slot = PlanSlot::default();
+        slot.install(plan(0, 0), None);
+        let old_idx = slot.img.as_ref().unwrap().idx.clone();
+        slot.refresh_weights(vec![0.5], vec![0.7], 5);
+        let p = slot.img.as_ref().unwrap();
+        assert_eq!(p.idx, old_idx);
+        assert_eq!(p.a_tilde, vec![0.5]);
+        assert_eq!(p.weight_step, 5);
+        assert_eq!(p.dest_step, 0);
+    }
+}

@@ -1,0 +1,119 @@
+//! Request / result types for the serving coordinator.
+
+use crate::toma::plan::ReuseSchedule;
+
+/// Engine configuration: one engine per (model, variant, ratio, schedule).
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    pub model: String,
+    /// "baseline", "toma", "toma_stripe", "toma_tile", "toma_once",
+    /// "toma_pinv", "toma_colsm", "tlb", "tome", "tofu", "todo".
+    pub variant: String,
+    pub ratio: Option<f64>,
+    pub steps: usize,
+    /// Classifier-free guidance weight.
+    pub guidance: f32,
+    pub schedule: ReuseSchedule,
+    /// Destination-selection mode: "tile" | "stripe" | "global" | "random".
+    pub select_mode: String,
+}
+
+impl EngineConfig {
+    pub fn new(model: &str, variant: &str, ratio: Option<f64>) -> Self {
+        EngineConfig {
+            model: model.to_string(),
+            variant: variant.to_string(),
+            ratio,
+            steps: 50,
+            guidance: 5.0,
+            schedule: ReuseSchedule::default(),
+            select_mode: "tile".to_string(),
+        }
+    }
+
+    /// Does this variant consume ToMA merge weights at runtime?
+    pub fn needs_plan(&self) -> bool {
+        self.variant.starts_with("toma")
+    }
+
+    /// Cache / batch key.
+    pub fn key(&self) -> String {
+        format!(
+            "{}:{}:{}:{}:{}+{}",
+            self.model,
+            self.variant,
+            self.ratio.map(|r| format!("{r:.2}")).unwrap_or_default(),
+            self.select_mode,
+            self.schedule.dest_every,
+            self.schedule.weight_every
+        )
+    }
+}
+
+/// One generation request.
+#[derive(Clone, Debug)]
+pub struct GenRequest {
+    pub prompt: String,
+    pub seed: u64,
+    /// Record per-step destination sets (Fig. 4) and plan stats.
+    pub trace: bool,
+}
+
+impl GenRequest {
+    pub fn new(prompt: &str, seed: u64) -> Self {
+        GenRequest {
+            prompt: prompt.to_string(),
+            seed,
+            trace: false,
+        }
+    }
+}
+
+/// Timing + cache statistics for one generation.
+#[derive(Clone, Debug, Default)]
+pub struct GenStats {
+    pub total_s: f64,
+    pub select_s: f64,
+    pub step_s: f64,
+    pub host_s: f64,
+    pub steps: usize,
+    pub select_calls: usize,
+    pub weight_refreshes: usize,
+    pub plan_reuses: usize,
+}
+
+/// Result of one generation.
+#[derive(Clone, Debug)]
+pub struct GenResult {
+    /// Final denoised latent for the conditional row, (C, H, W) flattened.
+    pub latent: Vec<f32>,
+    pub stats: GenStats,
+    /// Per-step global destination-token sets (only when trace=true).
+    pub dest_trace: Vec<Vec<usize>>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn needs_plan_per_variant() {
+        for v in ["toma", "toma_stripe", "toma_tile", "toma_once", "toma_pinv"] {
+            assert!(EngineConfig::new("m", v, Some(0.5)).needs_plan(), "{v}");
+        }
+        for v in ["baseline", "tlb", "tome", "tofu", "todo"] {
+            assert!(!EngineConfig::new("m", v, Some(0.5)).needs_plan(), "{v}");
+        }
+    }
+
+    #[test]
+    fn key_distinguishes_configs() {
+        let a = EngineConfig::new("uvit_s", "toma", Some(0.5));
+        let mut b = a.clone();
+        b.ratio = Some(0.25);
+        assert_ne!(a.key(), b.key());
+        let mut c = a.clone();
+        c.schedule.dest_every = 1;
+        assert_ne!(a.key(), c.key());
+    }
+}

@@ -1,0 +1,197 @@
+//! Threaded serving front-end: a request queue + a worker pool per engine
+//! key. Requests with the same (model, variant, ratio, schedule) share a
+//! lane; distinct keys get their own lane.
+//!
+//! The `xla` crate's PJRT handles are deliberately single-threaded (`Rc` +
+//! raw pointers), so each worker thread owns a full `Runtime` + `Engine` —
+//! the same isolation a per-device worker process has in a production
+//! serving stack. Requests and completions are plain `Send` data.
+//! (std threads + channels: the vendored crate set has no tokio; the
+//! workload is compute-bound through PJRT, so a thread pool is the right
+//! shape anyway.)
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::engine::Engine;
+use super::metrics::Metrics;
+use super::request::{EngineConfig, GenRequest, GenResult};
+use crate::runtime::Runtime;
+
+/// A completed request with timing info.
+pub struct Completion {
+    pub request: GenRequest,
+    pub result: Result<GenResult>,
+    pub queued_s: f64,
+    pub service_s: f64,
+}
+
+struct Job {
+    request: GenRequest,
+    enqueued: Instant,
+    done: Sender<Completion>,
+}
+
+/// One worker lane: a job queue drained by N engine-owning threads.
+struct Lane {
+    tx: Sender<Job>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+pub struct Server {
+    artifact_dir: PathBuf,
+    pub metrics: Arc<Metrics>,
+    workers_per_lane: usize,
+    lanes: Mutex<BTreeMap<String, Lane>>,
+}
+
+impl Server {
+    pub fn new(artifact_dir: PathBuf, workers_per_lane: usize) -> Server {
+        Server {
+            artifact_dir,
+            metrics: Arc::new(Metrics::new()),
+            workers_per_lane: workers_per_lane.max(1),
+            lanes: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    pub fn with_default_dir(workers_per_lane: usize) -> Server {
+        Server::new(crate::default_artifact_dir(), workers_per_lane)
+    }
+
+    fn spawn_lane(&self, cfg: &EngineConfig) -> Lane {
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut handles = vec![];
+        for w in 0..self.workers_per_lane {
+            let rx: Arc<Mutex<Receiver<Job>>> = rx.clone();
+            let metrics = self.metrics.clone();
+            let cfg = cfg.clone();
+            let dir = self.artifact_dir.clone();
+            let name = format!("toma-worker-{w}");
+            handles.push(
+                std::thread::Builder::new()
+                    .name(name)
+                    .spawn(move || {
+                        // Each worker owns its PJRT client + compiled
+                        // executables for the lifetime of the lane.
+                        let engine = Runtime::new(dir)
+                            .map(Arc::new)
+                            .and_then(|rt| Engine::new(rt, cfg.clone()));
+                        let engine = match engine {
+                            Ok(e) => e,
+                            Err(e) => {
+                                // Fail every job this worker would serve.
+                                let msg = format!("engine init failed: {e:#}");
+                                loop {
+                                    let job = match rx.lock().unwrap().recv() {
+                                        Ok(j) => j,
+                                        Err(_) => return,
+                                    };
+                                    metrics.inc("requests_err");
+                                    let _ = job.done.send(Completion {
+                                        request: job.request,
+                                        result: Err(anyhow!("{msg}")),
+                                        queued_s: 0.0,
+                                        service_s: 0.0,
+                                    });
+                                }
+                            }
+                        };
+                        loop {
+                            let job = {
+                                let guard = rx.lock().unwrap();
+                                match guard.recv() {
+                                    Ok(j) => j,
+                                    Err(_) => return, // queue closed
+                                }
+                            };
+                            let queued_s = job.enqueued.elapsed().as_secs_f64();
+                            metrics.observe_s("queue_wait", queued_s);
+                            let t0 = Instant::now();
+                            let result = engine.generate(&job.request);
+                            let service_s = t0.elapsed().as_secs_f64();
+                            metrics.observe_s("service_time", service_s);
+                            metrics.inc(if result.is_ok() {
+                                "requests_ok"
+                            } else {
+                                "requests_err"
+                            });
+                            if let Ok(r) = &result {
+                                metrics.observe_s("select_time", r.stats.select_s);
+                                metrics.add("plan_reuses", r.stats.plan_reuses as u64);
+                                metrics.add("select_calls", r.stats.select_calls as u64);
+                            }
+                            let _ = job.done.send(Completion {
+                                request: job.request,
+                                result,
+                                queued_s,
+                                service_s,
+                            });
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        Lane { tx, handles }
+    }
+
+    /// Submit a request; the completion arrives on the returned channel.
+    pub fn submit(&self, cfg: &EngineConfig, request: GenRequest) -> Receiver<Completion> {
+        let key = cfg.key();
+        let (done_tx, done_rx) = channel();
+        let mut lanes = self.lanes.lock().unwrap();
+        let lane = lanes
+            .entry(key)
+            .or_insert_with(|| self.spawn_lane(cfg));
+        self.metrics.inc("requests_submitted");
+        lane.tx
+            .send(Job {
+                request,
+                enqueued: Instant::now(),
+                done: done_tx,
+            })
+            .expect("lane alive");
+        done_rx
+    }
+
+    /// Run a batch to completion (closed-loop), returning completions in
+    /// submission order.
+    pub fn run_batch(&self, cfg: &EngineConfig, requests: Vec<GenRequest>) -> Vec<Completion> {
+        let rxs: Vec<Receiver<Completion>> =
+            requests.into_iter().map(|r| self.submit(cfg, r)).collect();
+        rxs.into_iter().map(|rx| rx.recv().expect("worker")).collect()
+    }
+
+    /// Convenience: run a batch and return the successful results.
+    pub fn run_batch_ok(&self, cfg: &EngineConfig, requests: Vec<GenRequest>) -> Result<Vec<GenResult>> {
+        self.run_batch(cfg, requests)
+            .into_iter()
+            .map(|c| c.result)
+            .collect()
+    }
+
+    /// Drop all lanes, joining worker threads.
+    pub fn shutdown(&self) {
+        let mut lanes = self.lanes.lock().unwrap();
+        let drained: Vec<Lane> = std::mem::take(&mut *lanes).into_values().collect();
+        for lane in drained {
+            drop(lane.tx);
+            for h in lane.handles {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}

@@ -1,0 +1,91 @@
+//! Diffusion samplers and noise schedules (host-side; the eps prediction
+//! itself runs through the PJRT artifacts or the pure-Rust model).
+
+pub mod schedule;
+
+pub use schedule::{NoiseSchedule, SamplerKind};
+
+/// One deterministic DDIM update: x_{t-1} from (x_t, eps, abar_t, abar_prev).
+///
+/// The x0 estimate is clamped to a fixed range (static thresholding, as in
+/// Imagen/diffusers): at high noise levels `1/sqrt(abar)` amplifies any
+/// eps-prediction error enormously, which would otherwise blow up the
+/// trajectory — especially with the random-init stand-in weights.
+pub fn ddim_update(x_t: &[f32], eps: &[f32], abar_t: f32, abar_prev: f32, out: &mut [f32]) {
+    const X0_CLAMP: f32 = 5.0;
+    let sa = abar_t.sqrt();
+    let s1 = (1.0 - abar_t).sqrt();
+    let sap = abar_prev.sqrt();
+    let s1p = (1.0 - abar_prev).sqrt();
+    for ((o, &x), &e) in out.iter_mut().zip(x_t).zip(eps) {
+        let x0 = ((x - s1 * e) / sa).clamp(-X0_CLAMP, X0_CLAMP);
+        // Recompute the direction to x_t from the clamped estimate so the
+        // update stays on the DDIM ODE.
+        let e_eff = if s1 > 1e-6 { (x - sa * x0) / s1 } else { e };
+        *o = sap * x0 + s1p * e_eff;
+    }
+}
+
+/// One Euler update on the sigma parameterization (the DiT/Flux-style
+/// rectified-flow sampler): x <- x + (sigma_next - sigma) * v.
+pub fn euler_update(x_t: &[f32], v: &[f32], sigma: f32, sigma_next: f32, out: &mut [f32]) {
+    let dt = sigma_next - sigma;
+    for ((o, &x), &vv) in out.iter_mut().zip(x_t).zip(v) {
+        *o = x + dt * vv;
+    }
+}
+
+/// Classifier-free guidance mix: eps = eps_u + w * (eps_c - eps_u).
+pub fn cfg_mix(eps_uncond: &[f32], eps_cond: &[f32], w: f32, out: &mut [f32]) {
+    for ((o, &u), &c) in out.iter_mut().zip(eps_uncond).zip(eps_cond) {
+        *o = u + w * (c - u);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ddim_identity_when_abar_equal() {
+        let x = vec![1.0, -2.0, 0.5];
+        let eps = vec![0.1, 0.2, -0.1];
+        let mut out = vec![0.0; 3];
+        ddim_update(&x, &eps, 0.5, 0.5, &mut out);
+        for (o, x) in out.iter().zip(&x) {
+            assert!((o - x).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn ddim_final_step_returns_x0() {
+        // abar_prev = 1 -> output is the model's x0 estimate.
+        let x = vec![2.0];
+        let eps = vec![0.5];
+        let mut out = vec![0.0];
+        let abar: f32 = 0.25;
+        ddim_update(&x, &eps, abar, 1.0, &mut out);
+        let x0 = (2.0 - (1.0 - abar).sqrt() * 0.5) / abar.sqrt();
+        assert!((out[0] - x0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn euler_moves_along_velocity() {
+        let x = vec![1.0, 1.0];
+        let v = vec![2.0, -2.0];
+        let mut out = vec![0.0; 2];
+        euler_update(&x, &v, 1.0, 0.5, &mut out);
+        assert_eq!(out, vec![0.0, 2.0]);
+    }
+
+    #[test]
+    fn cfg_mix_interpolates() {
+        let u = vec![0.0, 0.0];
+        let c = vec![1.0, -1.0];
+        let mut out = vec![0.0; 2];
+        cfg_mix(&u, &c, 2.0, &mut out);
+        assert_eq!(out, vec![2.0, -2.0]);
+        cfg_mix(&u, &c, 0.0, &mut out);
+        assert_eq!(out, vec![0.0, 0.0]);
+    }
+}

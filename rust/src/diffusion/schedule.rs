@@ -1,0 +1,144 @@
+//! Noise schedules: cosine alpha-bar (DDIM / UVit path) and the linear
+//! sigma schedule used by the rectified-flow Euler sampler (DiT path).
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SamplerKind {
+    /// Deterministic DDIM over a cosine alpha-bar schedule (uvit models).
+    Ddim,
+    /// Euler over a linear sigma schedule (dit models).
+    Euler,
+}
+
+impl SamplerKind {
+    pub fn parse(s: &str) -> Option<SamplerKind> {
+        match s {
+            "ddim" => Some(SamplerKind::Ddim),
+            "euler" => Some(SamplerKind::Euler),
+            _ => None,
+        }
+    }
+
+    /// Default sampler per model family.
+    pub fn for_model_kind(kind: &str) -> SamplerKind {
+        if kind == "dit" {
+            SamplerKind::Euler
+        } else {
+            SamplerKind::Ddim
+        }
+    }
+}
+
+/// Precomputed schedule for a fixed number of sampling steps.
+#[derive(Clone, Debug)]
+pub struct NoiseSchedule {
+    pub kind: SamplerKind,
+    pub steps: usize,
+    /// DDIM: alpha_bar at each sampled timestep (descending t);
+    /// Euler: sigma at each step (descending), with a trailing 0.0.
+    pub levels: Vec<f32>,
+    /// Model-facing timestep value fed to the artifact at each step.
+    pub timesteps: Vec<f32>,
+}
+
+const TRAIN_STEPS: usize = 1000;
+
+fn cosine_alpha_bar(t: f64) -> f64 {
+    // Nichol & Dhariwal cosine schedule.
+    let s = 0.008;
+    let f = ((t + s) / (1.0 + s) * std::f64::consts::FRAC_PI_2).cos();
+    (f * f).clamp(1e-5, 1.0)
+}
+
+impl NoiseSchedule {
+    pub fn new(kind: SamplerKind, steps: usize) -> Self {
+        assert!(steps >= 1);
+        match kind {
+            SamplerKind::Ddim => {
+                // Evenly spaced timesteps over [0, TRAIN_STEPS), descending.
+                let mut timesteps = Vec::with_capacity(steps);
+                let mut levels = Vec::with_capacity(steps);
+                for i in 0..steps {
+                    let frac = 1.0 - i as f64 / steps as f64; // (0, 1]
+                    let t = frac * (TRAIN_STEPS - 1) as f64;
+                    timesteps.push(t as f32);
+                    levels.push(cosine_alpha_bar(t / TRAIN_STEPS as f64) as f32);
+                }
+                NoiseSchedule {
+                    kind,
+                    steps,
+                    levels,
+                    timesteps,
+                }
+            }
+            SamplerKind::Euler => {
+                // sigma from 1 -> 0 linearly; timestep = sigma * 1000.
+                let mut levels = Vec::with_capacity(steps + 1);
+                let mut timesteps = Vec::with_capacity(steps);
+                for i in 0..steps {
+                    let sigma = 1.0 - i as f32 / steps as f32;
+                    levels.push(sigma);
+                    timesteps.push(sigma * TRAIN_STEPS as f32);
+                }
+                levels.push(0.0);
+                NoiseSchedule {
+                    kind,
+                    steps,
+                    levels,
+                    timesteps,
+                }
+            }
+        }
+    }
+
+    /// alpha_bar (or sigma) *after* step i — the integration target.
+    pub fn next_level(&self, i: usize) -> f32 {
+        match self.kind {
+            SamplerKind::Ddim => {
+                if i + 1 < self.steps {
+                    self.levels[i + 1]
+                } else {
+                    1.0 // final step denoises fully
+                }
+            }
+            SamplerKind::Euler => self.levels[i + 1],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ddim_levels_increase_toward_clean() {
+        let s = NoiseSchedule::new(SamplerKind::Ddim, 50);
+        assert_eq!(s.levels.len(), 50);
+        // alpha_bar grows as t decreases (later steps are cleaner).
+        assert!(s.levels.windows(2).all(|w| w[1] >= w[0]));
+        assert!(s.timesteps.windows(2).all(|w| w[1] < w[0]));
+        assert!(s.next_level(49) == 1.0);
+    }
+
+    #[test]
+    fn euler_sigmas_decrease_to_zero() {
+        let s = NoiseSchedule::new(SamplerKind::Euler, 35);
+        assert_eq!(s.levels.len(), 36);
+        assert!((s.levels[0] - 1.0).abs() < 1e-6);
+        assert_eq!(*s.levels.last().unwrap(), 0.0);
+        assert!(s.levels.windows(2).all(|w| w[1] < w[0]));
+    }
+
+    #[test]
+    fn cosine_bounds() {
+        assert!(cosine_alpha_bar(0.0) > 0.99);
+        assert!(cosine_alpha_bar(1.0) < 0.01);
+    }
+
+    #[test]
+    fn sampler_defaults() {
+        assert_eq!(SamplerKind::for_model_kind("dit"), SamplerKind::Euler);
+        assert_eq!(SamplerKind::for_model_kind("uvit"), SamplerKind::Ddim);
+        assert_eq!(SamplerKind::parse("ddim"), Some(SamplerKind::Ddim));
+        assert_eq!(SamplerKind::parse("x"), None);
+    }
+}

@@ -1,0 +1,85 @@
+//! Baseline anchoring: the cost model predicts *relative* costs from op
+//! structure; absolute sec/img is anchored to the paper's measured baseline
+//! rows (Tables 1-2). Every variant figure is then
+//! `t(variant) = raw(variant) / raw(baseline) * paper_baseline`,
+//! i.e. baselines match by construction, every delta is a prediction.
+
+use super::device::{Gpu, GpuModel};
+use super::roofline::estimate_time;
+use super::workloads::{PaperModel, StepWorkload, Variant};
+
+/// The paper's measured baseline sec/img (Tables 1 and 2).
+/// None = not reported (V100 OOMs on Flux).
+pub fn paper_baseline_s(model: PaperModel, gpu: GpuModel) -> Option<f64> {
+    match (model, gpu) {
+        (PaperModel::SdxlBase, GpuModel::Rtx6000) => Some(6.07),
+        (PaperModel::SdxlBase, GpuModel::V100) => Some(14.5),
+        (PaperModel::SdxlBase, GpuModel::Rtx8000) => Some(16.1),
+        (PaperModel::FluxDev, GpuModel::Rtx6000) => Some(21.03),
+        (PaperModel::FluxDev, GpuModel::Rtx8000) => Some(59.20),
+        (PaperModel::FluxDev, GpuModel::V100) => None,
+    }
+}
+
+/// Raw (unanchored) cost model estimate.
+pub fn raw_sec_per_img(model: PaperModel, variant: Variant, ratio: f64, gpu: GpuModel) -> f64 {
+    let w = StepWorkload::new(model, variant, ratio);
+    estimate_time(&Gpu::profile(gpu), &w.ops_per_image())
+}
+
+/// Paper-anchored estimate: predicted relative cost x measured baseline.
+pub fn calibrated_sec_per_img(
+    model: PaperModel,
+    variant: Variant,
+    ratio: f64,
+    gpu: GpuModel,
+) -> f64 {
+    let raw = raw_sec_per_img(model, variant, ratio, gpu);
+    let raw_base = raw_sec_per_img(model, Variant::Baseline, 0.0, gpu);
+    match paper_baseline_s(model, gpu) {
+        Some(anchor) => raw / raw_base * anchor,
+        None => raw,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_matches_anchor_exactly() {
+        for (m, g, want) in [
+            (PaperModel::SdxlBase, GpuModel::Rtx6000, 6.07),
+            (PaperModel::FluxDev, GpuModel::Rtx8000, 59.20),
+        ] {
+            let got = calibrated_sec_per_img(m, Variant::Baseline, 0.0, g);
+            assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn sdxl_toma_headline_band() {
+        // Paper: ToMA r=0.5 -> 5.04s on RTX6000 (-17%); accept the model's
+        // prediction within a +-10pp band around the published delta.
+        let t = calibrated_sec_per_img(
+            PaperModel::SdxlBase, Variant::toma_default(), 0.5, GpuModel::Rtx6000);
+        let delta = t / 6.07 - 1.0;
+        assert!((-0.45..=-0.10).contains(&delta), "delta {delta}");
+    }
+
+    #[test]
+    fn flux_toma75_matches_paper_delta() {
+        // Paper: -15.9% (RTX8000) / -23.4% (RTX6000) at r=0.75.
+        let t = calibrated_sec_per_img(
+            PaperModel::FluxDev, Variant::toma_default(), 0.75, GpuModel::Rtx8000);
+        let delta = t / 59.20 - 1.0;
+        assert!((-0.35..=-0.10).contains(&delta), "delta {delta}");
+    }
+
+    #[test]
+    fn tome_slower_than_baseline_after_anchoring() {
+        let t = calibrated_sec_per_img(
+            PaperModel::SdxlBase, Variant::Tome, 0.5, GpuModel::Rtx6000);
+        assert!(t > 6.07, "ToMe must lose to the baseline ({t})");
+    }
+}

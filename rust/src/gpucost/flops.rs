@@ -1,0 +1,153 @@
+//! Analytic FLOP accounting: Table 10 (layer-level breakdown) and the
+//! App. C complexity model (ideal vs practical speedup curves).
+
+/// FLOPs of the dominant modules of one transformer block at (seq n, dim d):
+/// QKV + output projections and the two attention matrix products.
+/// Matches the paper's Table 10 accounting: C = 4 d^2 N + 2 d N^2 (x2 for
+/// multiply-accumulate).
+pub fn block_flops(n: f64, d: f64) -> f64 {
+    2.0 * (4.0 * d * d * n + 2.0 * d * n * n)
+}
+
+/// Same block after merging to D = (1 - ratio) N tokens.
+pub fn block_flops_merged(n: f64, d: f64, ratio: f64) -> f64 {
+    let kept = (1.0 - ratio) * n;
+    block_flops(kept, d)
+}
+
+/// ToMA overhead FLOPs at (n, d, ratio), per App. C:
+/// submodular selection N^2 d + three linear terms 3 N D d, divided by the
+/// regions count for locality and amortized over the reuse schedule.
+pub fn toma_overhead_flops(
+    n: f64,
+    d: f64,
+    ratio: f64,
+    regions: f64,
+    dest_every: f64,
+    weight_every: f64,
+) -> f64 {
+    let kept = (1.0 - ratio) * n;
+    let n_loc = n / regions;
+    let sub = 2.0 * n * n_loc * d / dest_every; // similarity GEMM, amortized
+    let proj = 2.0 * kept * n_loc * d / weight_every; // A construction
+    let merge_unmerge = 2.0 * 2.0 * kept * n_loc * d; // A~X and A~^T X'
+    sub + proj + merge_unmerge
+}
+
+/// App. C ideal speedup (no overhead): C_base / C_attn(D).
+pub fn ideal_speedup(n: f64, d: f64, ratio: f64) -> f64 {
+    let r = 1.0 - ratio; // r in the paper = fraction KEPT
+    (4.0 * d + 2.0 * n) / (4.0 * d * r + 2.0 * n * r * r)
+}
+
+/// App. C practical speedup including the one-shot global selection and
+/// the linear merge terms (regions = 1, no amortization — the paper's
+/// pessimistic closed form).
+pub fn practical_speedup(n: f64, d: f64, ratio: f64) -> f64 {
+    let r = 1.0 - ratio;
+    (4.0 * d * n + 2.0 * n * n)
+        / (4.0 * d * r * n + n * n * (1.0 + 3.0 * r + 2.0 * r * r))
+}
+
+/// One Table 10 row: (original GFLOP, merged GFLOP, overhead GFLOP,
+/// reduction factor) for a layer of (seq, dim) at the given merge ratio.
+pub fn table10_row(n: usize, d: usize, ratio: f64) -> (f64, f64, f64, f64) {
+    let (nf, df) = (n as f64, d as f64);
+    let orig = block_flops(nf, df) / 1e9;
+    let merged = block_flops_merged(nf, df, ratio) / 1e9;
+    // Paper Table 10 reports the *unamortized* per-layer overhead with the
+    // default 64-region locality.
+    let overhead = toma_overhead_flops(nf, df, ratio, 64.0, 1.0, 1.0) / 1e9;
+    let reduction = orig / (merged + overhead);
+    (orig, merged, overhead, reduction)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table10_flux_row_shape() {
+        // Paper: Flux 4608 x 3072 -> 520 GFLOP original, ~225 merged,
+        // ~1 overhead, ~2.3x reduction. Our MAC-doubled accounting over the
+        // full 4608-token sequence lands ~17% above the published count
+        // (they appear to count the 4096 image tokens only); the reduction
+        // factor — the claim — must match.
+        let (orig, merged, overhead, red) = table10_row(4608, 3072, 0.5);
+        assert!((orig - 520.0).abs() < 130.0, "orig {orig}");
+        assert!((merged - 225.0).abs() < 60.0, "merged {merged}");
+        assert!(overhead < 0.05 * merged, "overhead {overhead}");
+        assert!((red - 2.3).abs() < 0.5, "reduction {red}");
+    }
+
+    #[test]
+    fn table10_sdxl_rows_shape() {
+        // SDXL 4096 x 640 (paper: 106 -> 32, ~3.4x) — attention-dominated,
+        // so merging pays off superlinearly; our attention-only accounting
+        // is ~2x below their published absolute count (they include GEGLU
+        // projections) but the reduction band must overlap.
+        let (orig, merged, overhead, red) = table10_row(4096, 640, 0.5);
+        assert!(orig > 40.0 && orig < 130.0, "orig {orig}");
+        assert!(merged < 0.4 * orig, "merged {merged} vs orig {orig}");
+        assert!(red > 2.5 && red < 4.0, "reduction {red}");
+        assert!(overhead < 2.0);
+        // SDXL 1024 x 1280 (paper: 30 -> 13, ~2.4x) — projection-dominated,
+        // so the reduction is closer to the 1/r bound.
+        let (o2, m2, _ov2, red2) = table10_row(1024, 1280, 0.5);
+        assert!(o2 > 12.0 && o2 < 40.0, "orig {o2}");
+        assert!((m2 / o2 - 13.0 / 30.0).abs() < 0.1, "merged ratio {}", m2 / o2);
+        assert!(red2 > 1.8 && red2 < 3.0, "reduction {red2}");
+        // Cross-row claim: the attention-heavy layer reduces MORE.
+        assert!(red > red2);
+    }
+
+    #[test]
+    fn ideal_speedup_monotone_in_ratio() {
+        let mut prev = 1.0;
+        for ratio in [0.0, 0.25, 0.5, 0.75] {
+            let s = ideal_speedup(4096.0, 640.0, ratio);
+            assert!(s >= prev - 1e-9, "ratio {ratio}: {s} < {prev}");
+            prev = s;
+        }
+        assert!((ideal_speedup(4096.0, 640.0, 0.0) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn practical_below_ideal() {
+        for ratio in [0.25, 0.5, 0.75] {
+            let i = ideal_speedup(4096.0, 640.0, ratio);
+            let p = practical_speedup(4096.0, 640.0, ratio);
+            assert!(p < i, "ratio {ratio}: practical {p} >= ideal {i}");
+            assert!(p > 0.5);
+        }
+    }
+
+    #[test]
+    fn diminishing_returns_below_r01() {
+        // App. C: pushing the kept fraction below ~0.1 stops helping —
+        // the overhead terms dominate; the curve flattens.
+        let d = 640.0;
+        let n = 4096.0;
+        let p90 = practical_speedup(n, d, 0.90);
+        let p99 = practical_speedup(n, d, 0.99);
+        let gain_tail = p99 / p90;
+        let p50 = practical_speedup(n, d, 0.50);
+        let p75 = practical_speedup(n, d, 0.75);
+        let gain_mid = p75 / p50;
+        assert!(gain_tail < gain_mid, "tail {gain_tail} vs mid {gain_mid}");
+    }
+
+    #[test]
+    fn amortization_reduces_overhead() {
+        let full = toma_overhead_flops(4096.0, 640.0, 0.5, 64.0, 1.0, 1.0);
+        let amortized = toma_overhead_flops(4096.0, 640.0, 0.5, 64.0, 10.0, 5.0);
+        assert!(amortized < full);
+    }
+
+    #[test]
+    fn locality_reduces_selection_cost() {
+        let global = toma_overhead_flops(4096.0, 640.0, 0.5, 1.0, 1.0, 1.0);
+        let tiled = toma_overhead_flops(4096.0, 640.0, 0.5, 64.0, 1.0, 1.0);
+        assert!(tiled < global / 10.0, "tiled {tiled} vs global {global}");
+    }
+}

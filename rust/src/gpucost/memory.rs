@@ -1,0 +1,94 @@
+//! Peak-memory model (Table 9): weights + activation live-set + the extra
+//! buffers each token-reduction variant allocates. The paper's finding is
+//! that ToMA's memory overhead is negligible (< 2% worst case); the model
+//! reproduces that because the A~ matrices are small relative to
+//! activations and weights.
+
+use super::workloads::{PaperModel, Variant};
+
+const MB: f64 = 1024.0 * 1024.0;
+
+/// Estimated peak allocated memory in MB for a (model, variant, ratio).
+pub fn peak_alloc_mb(model: PaperModel, variant: Variant, ratio: f64) -> f64 {
+    let (weights_mb, act_base_mb) = match model {
+        // SDXL-base fp16 weights ~5.1 GB + text encoders ~1.6 GB; baseline
+        // activation live-set measured by the paper at ~10.7 GB total.
+        PaperModel::SdxlBase => (6700.0, 4000.0),
+        // Flux.1-dev fp16 ~23.8 GB + T5 ~9 GB; total ~34.6 GB.
+        PaperModel::FluxDev => (32800.0, 1840.0),
+    };
+    let extra = variant_extra_bytes(model, variant, ratio) / MB;
+    weights_mb + act_base_mb + extra
+}
+
+/// Extra bytes the variant's bookkeeping allocates at peak.
+fn variant_extra_bytes(model: PaperModel, variant: Variant, ratio: f64) -> f64 {
+    let stage = &model.stages()[0]; // largest stage dominates
+    let n = stage.n as f64;
+    let d = stage.d as f64;
+    let kept = (1.0 - ratio) * n;
+    let elem = 2.0;
+    match variant {
+        Variant::Baseline => 0.0,
+        Variant::Toma { merge_regions, tile_relayout, .. } => {
+            let p = merge_regions.max(1) as f64;
+            // A and A~ per region set: 2 x (D_loc x N_loc x P) = 2 x D x N/P,
+            // plus one merged-activation buffer (D x d), plus the relayout
+            // scratch for tile mode.
+            let weights = 2.0 * kept * (n / p) * elem;
+            let merged = kept * d * elem;
+            // Tile relayout streams region-by-region through a small
+            // scratch tile; only one region is live at a time.
+            let scratch = if tile_relayout { (n / p) * d * elem } else { 0.0 };
+            weights + merged + scratch
+        }
+        Variant::Tlb => kept * d * elem,
+        Variant::Tome | Variant::Tofu => {
+            // score matrix (N_src x N_dst) + index arrays.
+            let n_dst = n / 4.0;
+            (n - n_dst) * n_dst * elem + 3.0 * n * 4.0
+        }
+        Variant::Todo => n / 4.0 * d * elem,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_matches_paper_scale() {
+        let sdxl = peak_alloc_mb(PaperModel::SdxlBase, Variant::Baseline, 0.0);
+        assert!((sdxl - 10_721.0).abs() < 1_500.0, "sdxl {sdxl}");
+        let flux = peak_alloc_mb(PaperModel::FluxDev, Variant::Baseline, 0.0);
+        assert!((flux - 34_640.0).abs() < 2_000.0, "flux {flux}");
+    }
+
+    #[test]
+    fn toma_overhead_under_two_percent() {
+        for model in [PaperModel::SdxlBase, PaperModel::FluxDev] {
+            let base = peak_alloc_mb(model, Variant::Baseline, 0.0);
+            for ratio in [0.25, 0.5, 0.75] {
+                let t = peak_alloc_mb(model, Variant::toma_default(), ratio);
+                let rel = (t - base) / base;
+                assert!(rel >= 0.0 && rel < 0.02, "{model:?} r={ratio}: {rel}");
+            }
+        }
+    }
+
+    #[test]
+    fn tile_variant_even_closer_than_global() {
+        // Tile A~ matrices are P x smaller: overhead below plain ToMA.
+        let base = peak_alloc_mb(PaperModel::SdxlBase, Variant::Baseline, 0.0);
+        let toma = peak_alloc_mb(PaperModel::SdxlBase, Variant::toma_default(), 0.25);
+        let tile = peak_alloc_mb(PaperModel::SdxlBase, Variant::toma_tile(64), 0.25);
+        assert!(tile - base < toma - base);
+    }
+
+    #[test]
+    fn higher_ratio_less_memory() {
+        let lo = peak_alloc_mb(PaperModel::SdxlBase, Variant::toma_default(), 0.25);
+        let hi = peak_alloc_mb(PaperModel::SdxlBase, Variant::toma_default(), 0.75);
+        assert!(hi <= lo);
+    }
+}

@@ -1,0 +1,29 @@
+//! Analytic GPU cost model (see DESIGN.md §substitutions).
+//!
+//! The paper's latency tables were measured on NVIDIA RTX6000 / V100 /
+//! RTX8000 hardware we do not have. This module rebuilds them from first
+//! principles: every step of every variant is described as a sequence of
+//! [`ops::Op`]s (GEMMs, fused attention, softmax, gathers, scatters, sorts,
+//! relayout copies, kernel launches), and a per-device roofline converts
+//! the sequence to seconds.
+//!
+//! Calibration policy: each device profile has a single global `speed`
+//! factor anchored on the paper's *baseline* rows (SDXL 6.1 s on RTX6000,
+//! etc.). Everything else — the relative cost of ToMA vs ToMe vs TLB, the
+//! ratio sweeps, the tile/stripe gap — is *predicted* by the model, never
+//! fitted. The acceptance criterion is shape fidelity (who wins, by what
+//! factor, where crossovers fall), per DESIGN.md.
+
+pub mod calibrate;
+pub mod device;
+pub mod flops;
+pub mod memory;
+pub mod ops;
+pub mod roofline;
+pub mod workloads;
+
+pub use calibrate::calibrated_sec_per_img;
+pub use device::{Gpu, GpuModel};
+pub use ops::Op;
+pub use roofline::estimate_time;
+pub use workloads::{PaperModel, StepWorkload, Variant};

@@ -1,0 +1,114 @@
+//! Primitive GPU operations with FLOP and byte accounting.
+
+/// Element size in bytes (fp16 activations on the paper's testbed).
+pub const ELEM: f64 = 2.0;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Op {
+    /// Dense GEMM (m x k) @ (k x n).
+    Gemm { m: usize, k: usize, n: usize },
+    /// Fused SDPA: q queries, kv keys/values, head dim d_total (all heads).
+    /// Flash-style: logits never round-trip to HBM.
+    Attention { q: usize, kv: usize, d: usize },
+    /// Row softmax over (rows x cols), materialized in HBM.
+    Softmax { rows: usize, cols: usize },
+    /// Streaming elementwise over n scalars reading `reads` inputs.
+    Elementwise { n: usize, reads: usize },
+    /// Gather `rows` rows of width d (index_select).
+    Gather { rows: usize, d: usize },
+    /// Scatter-add `rows` rows of width d (index_add).
+    ScatterAdd { rows: usize, d: usize },
+    /// Device sort of n keys (argsort) — the ToMe matching step.
+    Sort { n: usize },
+    /// Relayout copy of n scalars (tile reshuffle, reshape-with-copy).
+    Copy { n: usize },
+    /// Extra kernel launches with no work (bookkeeping dispatches).
+    Launches { count: usize },
+}
+
+impl Op {
+    /// Floating-point operations.
+    pub fn flops(&self) -> f64 {
+        match *self {
+            Op::Gemm { m, k, n } => 2.0 * m as f64 * k as f64 * n as f64,
+            Op::Attention { q, kv, d } => 4.0 * q as f64 * kv as f64 * d as f64,
+            Op::Softmax { rows, cols } => 5.0 * rows as f64 * cols as f64,
+            Op::Elementwise { n, .. } => n as f64,
+            Op::Gather { .. } | Op::ScatterAdd { .. } => 0.0,
+            Op::Sort { n } => {
+                let n = n as f64;
+                n * n.log2().max(1.0)
+            }
+            Op::Copy { .. } | Op::Launches { .. } => 0.0,
+        }
+    }
+
+    /// HBM bytes moved (reads + writes).
+    pub fn bytes(&self) -> f64 {
+        match *self {
+            Op::Gemm { m, k, n } => {
+                ELEM * (m as f64 * k as f64 + k as f64 * n as f64 + m as f64 * n as f64)
+            }
+            Op::Attention { q, kv, d } => {
+                // Flash attention: read Q, K, V; write O. No logits in HBM.
+                ELEM * (q as f64 * d as f64 * 2.0 + kv as f64 * d as f64 * 2.0)
+            }
+            Op::Softmax { rows, cols } => ELEM * 2.0 * rows as f64 * cols as f64,
+            Op::Elementwise { n, reads } => ELEM * (reads as f64 + 1.0) * n as f64,
+            Op::Gather { rows, d } => ELEM * 2.0 * rows as f64 * d as f64,
+            Op::ScatterAdd { rows, d } => ELEM * 3.0 * rows as f64 * d as f64,
+            Op::Sort { n } => ELEM * 8.0 * n as f64, // multi-pass radix
+            Op::Copy { n } => ELEM * 2.0 * n as f64,
+            Op::Launches { .. } => 0.0,
+        }
+    }
+
+    /// Whether the memory traffic is scattered (index-driven) rather than
+    /// coalesced streaming.
+    pub fn scattered(&self) -> bool {
+        matches!(self, Op::Gather { .. } | Op::ScatterAdd { .. })
+    }
+
+    /// Number of kernel launches this op costs.
+    pub fn launches(&self) -> usize {
+        match *self {
+            Op::Launches { count } => count,
+            Op::Sort { .. } => 4, // radix passes
+            _ => 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemm_flops() {
+        let op = Op::Gemm { m: 2, k: 3, n: 4 };
+        assert_eq!(op.flops(), 48.0);
+        assert_eq!(op.bytes(), ELEM * (6.0 + 12.0 + 8.0));
+    }
+
+    #[test]
+    fn attention_no_logit_traffic() {
+        let op = Op::Attention { q: 4096, kv: 4096, d: 64 };
+        // Flash-style: bytes scale with (q + kv) * d, never q * kv.
+        assert!(op.bytes() < ELEM * 4096.0 * 4096.0);
+        assert_eq!(op.flops(), 4.0 * 4096.0 * 4096.0 * 64.0);
+    }
+
+    #[test]
+    fn scattered_classification() {
+        assert!(Op::Gather { rows: 1, d: 1 }.scattered());
+        assert!(Op::ScatterAdd { rows: 1, d: 1 }.scattered());
+        assert!(!Op::Gemm { m: 1, k: 1, n: 1 }.scattered());
+        assert!(!Op::Copy { n: 1 }.scattered());
+    }
+
+    #[test]
+    fn sort_costs_multiple_launches() {
+        assert!(Op::Sort { n: 1024 }.launches() > 1);
+        assert!(Op::Sort { n: 1024 }.flops() > 0.0);
+    }
+}

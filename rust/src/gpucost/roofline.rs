@@ -1,0 +1,138 @@
+//! Roofline time estimation: each op costs
+//! `max(flops / eff_flops, bytes / eff_bw) + launch overhead`,
+//! with efficiency chosen by op class.
+
+use super::device::Gpu;
+use super::ops::Op;
+
+/// Estimated wall time of a single op on a device, in seconds.
+pub fn op_time(gpu: &Gpu, op: &Op) -> f64 {
+    let flops = op.flops();
+    let bytes = op.bytes();
+    let (flop_eff, bw_eff) = match op {
+        Op::Gemm { .. } => (gpu.gemm_eff, gpu.stream_eff),
+        Op::Attention { .. } => (gpu.attn_eff, gpu.stream_eff),
+        Op::Sort { .. } => (1.0, gpu.stream_eff),
+        _ if op.scattered() => (1.0, gpu.scatter_eff),
+        _ => (1.0, gpu.stream_eff),
+    };
+    let t_flop = match op {
+        Op::Sort { n } => *n as f64 / (gpu.sort_rate * gpu.speed),
+        _ => flops / gpu.effective_flops(flop_eff).max(1.0),
+    };
+    let t_mem = bytes / gpu.effective_bw(bw_eff).max(1.0);
+    t_flop.max(t_mem) + op.launches() as f64 * gpu.launch_s
+}
+
+/// Total estimated time of an op sequence, seconds.
+pub fn estimate_time(gpu: &Gpu, ops: &[Op]) -> f64 {
+    ops.iter().map(|op| op_time(gpu, op)).sum()
+}
+
+/// Breakdown by coarse category (for the §Perf analysis and Table 10).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TimeBreakdown {
+    pub gemm: f64,
+    pub attention: f64,
+    pub scattered: f64,
+    pub sort: f64,
+    pub other: f64,
+    pub launch: f64,
+}
+
+impl TimeBreakdown {
+    pub fn total(&self) -> f64 {
+        self.gemm + self.attention + self.scattered + self.sort + self.other + self.launch
+    }
+}
+
+pub fn breakdown(gpu: &Gpu, ops: &[Op]) -> TimeBreakdown {
+    let mut b = TimeBreakdown::default();
+    for op in ops {
+        let launch = op.launches() as f64 * gpu.launch_s;
+        let t = op_time(gpu, op) - launch;
+        b.launch += launch;
+        match op {
+            Op::Gemm { .. } => b.gemm += t,
+            Op::Attention { .. } => b.attention += t,
+            Op::Sort { .. } => b.sort += t,
+            _ if op.scattered() => b.scattered += t,
+            _ => b.other += t,
+        }
+    }
+    b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpucost::device::GpuModel;
+
+    fn gpu() -> Gpu {
+        Gpu::profile(GpuModel::Rtx6000)
+    }
+
+    #[test]
+    fn bigger_gemm_takes_longer() {
+        let g = gpu();
+        let small = op_time(&g, &Op::Gemm { m: 128, k: 128, n: 128 });
+        let large = op_time(&g, &Op::Gemm { m: 1024, k: 1024, n: 1024 });
+        assert!(large > small);
+    }
+
+    #[test]
+    fn gather_slower_than_copy_same_bytes() {
+        let g = gpu();
+        // Same data volume, scattered vs streaming.
+        let gather = op_time(&g, &Op::Gather { rows: 4096, d: 640 });
+        let copy = op_time(&g, &Op::Copy { n: 4096 * 640 });
+        assert!(gather > 2.0 * copy, "{gather} vs {copy}");
+    }
+
+    #[test]
+    fn launch_floor_for_tiny_ops() {
+        let g = gpu();
+        let t = op_time(&g, &Op::Gemm { m: 1, k: 1, n: 1 });
+        assert!(t >= g.launch_s);
+    }
+
+    #[test]
+    fn breakdown_sums_to_estimate() {
+        let g = gpu();
+        let ops = vec![
+            Op::Gemm { m: 512, k: 512, n: 512 },
+            Op::Attention { q: 1024, kv: 1024, d: 640 },
+            Op::Sort { n: 3072 },
+            Op::Gather { rows: 1024, d: 640 },
+            Op::Copy { n: 65536 },
+        ];
+        let b = breakdown(&g, &ops);
+        let t = estimate_time(&g, &ops);
+        assert!((b.total() - t).abs() < 1e-9 * t.max(1.0));
+        assert!(b.sort > 0.0 && b.scattered > 0.0 && b.gemm > 0.0);
+    }
+
+    #[test]
+    fn table6_shape_gemm_merge_beats_gather_merge() {
+        // The micro-benchmark claim (Table 6): at N=1024, d=640, the dense
+        // GEMM merge is ~4-5x faster than index gather + scatter merge.
+        let g = gpu();
+        let n = 1024;
+        let d = 640;
+        let k = 512;
+        let toma = estimate_time(&g, &[Op::Gemm { m: k, k: n, n: d }]);
+        let tome = estimate_time(
+            &g,
+            &[
+                Op::Gather { rows: n - k, d },
+                Op::ScatterAdd { rows: n - k, d },
+                Op::Launches { count: 4 }, // index bookkeeping dispatches
+            ],
+        );
+        let speedup = tome / toma;
+        assert!(
+            (2.0..12.0).contains(&speedup),
+            "speedup {speedup} out of plausible range"
+        );
+    }
+}

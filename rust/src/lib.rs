@@ -1,0 +1,49 @@
+//! # ToMA — Token Merge with Attention for Diffusion Models
+//!
+//! Full-system reproduction of *ToMA: Token Merge with Attention for
+//! Diffusion Models* (ICML 2025) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! This crate is **Layer 3**: the serving coordinator that owns the
+//! denoising loop, dynamic request batching, and — the heart of the paper's
+//! Sec. 4.3 — the *merge-plan cache* that decides when destination tokens
+//! and merge weights are recomputed versus reused. Model compute runs
+//! through AOT-compiled XLA artifacts (see `runtime`); Python never executes
+//! at serve time.
+//!
+//! Module map (see DESIGN.md for the experiment index):
+//!
+//! * [`toma`] — host reference of the paper's operators: facility-location
+//!   selection, attention merge, transpose/pinv unmerge, region layouts.
+//! * [`baselines`] — ToMeSD / ToFu / ToDo / TLB reimplementations.
+//! * [`coordinator`] — engine, batcher, plan cache, server, metrics.
+//! * [`runtime`] — PJRT client, artifact registry, weight store.
+//! * [`diffusion`] — DDIM / Euler samplers and noise schedules.
+//! * [`model`] — pure-Rust UVitLite forward (cross-validation substrate).
+//! * [`gpucost`] — per-GPU roofline model regenerating the paper's latency
+//!   tables on hardware we do not have.
+//! * [`quality`] — DINO/CLIP/FID proxy metrics.
+//! * [`tensor`], [`util`], [`workload`], [`report`], [`bench`] — substrates.
+
+pub mod baselines;
+pub mod bench;
+pub mod coordinator;
+pub mod diffusion;
+pub mod gpucost;
+pub mod model;
+pub mod quality;
+pub mod report;
+pub mod runtime;
+pub mod tensor;
+pub mod toma;
+pub mod util;
+pub mod workload;
+
+/// Repo-relative default artifact directory (`make artifacts` output).
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    if let Ok(dir) = std::env::var("TOMA_ARTIFACTS") {
+        return dir.into();
+    }
+    let mut p = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    p.push("artifacts");
+    p
+}

@@ -1,0 +1,202 @@
+//! `toma-serve` — the ToMA serving CLI.
+//!
+//! Subcommands:
+//!   generate   generate one image latent with a chosen variant
+//!   serve      closed-loop batch serving over a synthetic request stream
+//!   table      regenerate a paper table (latency tables use the GPU cost
+//!              model; quality tables run the real engine) — see DESIGN.md
+//!   artifacts  list/compile-check the AOT artifact inventory
+//!   info       print manifest + runtime info
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use toma::coordinator::{EngineConfig, GenRequest, Server};
+use toma::runtime::Runtime;
+use toma::toma::plan::ReuseSchedule;
+use toma::util::argparse::Args;
+use toma::workload::{request_stream, PromptSet};
+
+fn usage() -> String {
+    "usage: toma-serve <command> [options]\n\
+     \n\
+     commands:\n\
+       generate   --model uvit_s --variant toma --ratio 0.5 --steps 20 --seed 0\n\
+       serve      --model uvit_xs --variant toma --ratio 0.5 --requests 8 --workers 2\n\
+       table      --id {1,2,3,4,5,7,8,9,10,C} [--device rtx6000] [--full]\n\
+       artifacts  [--compile <name>]\n\
+       info\n"
+        .to_string()
+}
+
+fn engine_config(args: &Args) -> EngineConfig {
+    let model = args.get_str("model", "uvit_xs");
+    let variant = args.get_str("variant", "toma");
+    let ratio = if variant == "baseline" {
+        None
+    } else {
+        Some(args.get_f64("ratio", 0.5))
+    };
+    let mut cfg = EngineConfig::new(&model, &variant, ratio);
+    cfg.steps = args.get_usize("steps", 20);
+    cfg.guidance = args.get_f64("guidance", 5.0) as f32;
+    cfg.select_mode = args.get_str("select", "tile");
+    cfg.schedule = ReuseSchedule {
+        dest_every: args.get_u64("dest-every", 10),
+        weight_every: args.get_u64("weight-every", 5),
+    };
+    cfg
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let cfg = engine_config(args);
+    let runtime = Arc::new(Runtime::with_default_dir()?);
+    let engine = toma::coordinator::Engine::new(runtime, cfg.clone())?;
+    let prompt = args.get_str("prompt", "a photo of a goldfish");
+    let seed = args.get_u64("seed", 0);
+    let mut req = GenRequest::new(&prompt, seed);
+    req.trace = args.has("trace");
+    let result = engine.generate(&req)?;
+    let s = &result.stats;
+    println!(
+        "generated latent ({} values) in {:.3}s  [steps {:.3}s | select {:.3}s | host {:.3}s]",
+        result.latent.len(),
+        s.total_s,
+        s.step_s,
+        s.select_s,
+        s.host_s
+    );
+    println!(
+        "plan: {} selects, {} weight refreshes, {} reuses",
+        s.select_calls, s.weight_refreshes, s.plan_reuses
+    );
+    if let Some(out) = args.get("out") {
+        toma::quality::write_pgm_preview(
+            &result.latent,
+            engine.info().channels,
+            engine.info().latent_hw,
+            out,
+        )?;
+        println!("preview -> {out}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = engine_config(args);
+    let n = args.get_usize("requests", 8);
+    let workers = args.get_usize("workers", 2);
+    let rate = args.get_f64("rate", 0.0);
+    let prompts = if args.get_str("prompts", "gemrec") == "imagenet" {
+        PromptSet::imagenet()
+    } else {
+        PromptSet::gemrec()
+    };
+    let stream = request_stream(&prompts, n, rate, args.get_u64("seed", 0));
+
+    let server = Server::with_default_dir(workers);
+    let t0 = std::time::Instant::now();
+    let reqs: Vec<GenRequest> = stream
+        .iter()
+        .map(|r| GenRequest::new(&r.prompt, r.seed))
+        .collect();
+    let completions = server.run_batch(&cfg, reqs);
+    let wall = t0.elapsed().as_secs_f64();
+
+    let ok = completions.iter().filter(|c| c.result.is_ok()).count();
+    println!(
+        "\nserved {ok}/{n} requests in {wall:.2}s  ({:.3} img/s)",
+        ok as f64 / wall
+    );
+    println!("{}", server.metrics.render());
+    for c in completions.iter().take(3) {
+        if let Ok(r) = &c.result {
+            println!(
+                "  `{}` queued {:.3}s service {:.3}s reuse-rate {:.0}%",
+                c.request.prompt,
+                c.queued_s,
+                c.service_s,
+                100.0 * r.stats.plan_reuses as f64 / cfg.steps.max(1) as f64
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    let runtime = Runtime::with_default_dir()?;
+    if let Some(name) = args.get("compile") {
+        let exe = runtime.executor(name)?;
+        println!(
+            "compiled {name}: {} inputs, {} outputs",
+            exe.entry.inputs.len(),
+            exe.entry.outputs.len()
+        );
+        return Ok(());
+    }
+    let m = &runtime.manifest;
+    println!("{} artifacts in {:?}", m.artifacts.len(), m.dir);
+    for (name, a) in &m.artifacts {
+        println!(
+            "  {:<44} {:>8} model={} inputs={} ratio={}",
+            name,
+            format!("{:?}", a.kind),
+            a.model,
+            a.inputs.len(),
+            a.ratio
+                .map(|r| format!("{r:.2}"))
+                .unwrap_or_else(|| "-".into())
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let runtime = Runtime::with_default_dir()?;
+    println!(
+        "platform={} devices={}",
+        runtime.client.platform_name(),
+        runtime.client.device_count()
+    );
+    for (name, m) in &runtime.manifest.models {
+        let params: usize = m.params.iter().map(|p| p.elements()).sum();
+        println!(
+            "model {name}: kind={} tokens={} dim={} heads={} batch={} params={:.2}M",
+            m.kind,
+            m.tokens,
+            m.dim,
+            m.heads,
+            m.batch,
+            params as f64 / 1e6
+        );
+    }
+    println!(
+        "tau={} dest_every={} weight_every={}",
+        runtime.manifest.tau, runtime.manifest.dest_every, runtime.manifest.weight_every
+    );
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("help");
+    match cmd {
+        "generate" => cmd_generate(&args),
+        "serve" => cmd_serve(&args),
+        "table" => toma::report::tables::run_table(&args),
+        "artifacts" => cmd_artifacts(&args),
+        "info" => cmd_info(),
+        _ => {
+            print!("{}", usage());
+            if cmd != "help" {
+                return Err(anyhow!("unknown command `{cmd}`"));
+            }
+            Ok(())
+        }
+    }
+}

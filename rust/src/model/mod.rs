@@ -1,0 +1,13 @@
+//! Pure-Rust model forward passes.
+//!
+//! These mirror the JAX definitions in `python/compile/model.py` layer for
+//! layer and read the same weight npz. They serve two roles:
+//! 1. **Cross-validation**: integration tests check the PJRT artifacts
+//!    against this independent implementation (same inputs, same weights,
+//!    numerics within f32 accumulation tolerance).
+//! 2. **Host baseline substrate**: lets the ToMe/ToFu/ToDo comparisons and
+//!    the Table 6 micro-benchmarks run without the XLA runtime.
+
+pub mod uvit;
+
+pub use uvit::{HostReduce, HostUVit, UVitParams};

@@ -1,0 +1,373 @@
+//! Host-side UVitLite forward pass (mirror of `python/compile/model.py`).
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::{ModelInfo, WeightStore};
+use crate::tensor::ops::{gelu, layernorm, matmul, silu, softmax_rows};
+use crate::toma::merge::MergeWeights;
+use crate::toma::regions::RegionLayout;
+use crate::toma::unmerge::unmerge_transpose;
+
+/// A linear layer's host weights.
+#[derive(Clone, Debug)]
+pub struct Linear {
+    pub w: Vec<f32>, // (d_in x d_out)
+    pub b: Vec<f32>,
+    pub d_in: usize,
+    pub d_out: usize,
+}
+
+impl Linear {
+    pub fn apply(&self, x: &[f32], rows: usize) -> Vec<f32> {
+        let mut y = matmul(x, &self.w, rows, self.d_in, self.d_out);
+        for r in 0..rows {
+            for c in 0..self.d_out {
+                y[r * self.d_out + c] += self.b[c];
+            }
+        }
+        y
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Ln {
+    pub g: Vec<f32>,
+    pub b: Vec<f32>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Block {
+    pub ln1: Ln,
+    pub qkv: Linear,
+    pub proj: Linear,
+    pub ln2: Ln,
+    pub q_x: Linear,
+    pub kv_c: Linear,
+    pub cproj: Linear,
+    pub ln3: Ln,
+    pub mlp1: Linear,
+    pub mlp2: Linear,
+}
+
+/// All UVitLite parameters on the host.
+pub struct UVitParams {
+    pub patch: Linear,
+    pub pos: Vec<f32>, // (tokens x dim)
+    pub time1: Linear,
+    pub time2: Linear,
+    pub txt: Linear,
+    pub final_ln: Ln,
+    pub head: Linear,
+    pub blocks: Vec<Block>,
+}
+
+/// Token-reduction hook for the host forward.
+pub enum HostReduce<'a> {
+    None,
+    /// ToMA per-module merge with a shared operator (transpose unmerge).
+    Toma {
+        weights: &'a MergeWeights,
+        layout: &'a RegionLayout,
+    },
+}
+
+/// The host model: config + params.
+pub struct HostUVit {
+    pub info: ModelInfo,
+    pub params: UVitParams,
+    pub depth: usize,
+}
+
+fn get_linear(ws: &WeightStore, name: &str, d_in: usize, d_out: usize) -> Result<Linear> {
+    let w = ws.f32_data(&format!("{name}.w"))?;
+    let b = ws.f32_data(&format!("{name}.b"))?;
+    if w.len() != d_in * d_out || b.len() != d_out {
+        return Err(anyhow!(
+            "linear `{name}`: shape mismatch ({} vs {}x{})",
+            w.len(),
+            d_in,
+            d_out
+        ));
+    }
+    Ok(Linear { w, b, d_in, d_out })
+}
+
+fn get_ln(ws: &WeightStore, name: &str) -> Result<Ln> {
+    Ok(Ln {
+        g: ws.f32_data(&format!("{name}.g"))?,
+        b: ws.f32_data(&format!("{name}.b"))?,
+    })
+}
+
+impl HostUVit {
+    /// Build from a weight store (names as exported by aot.py).
+    pub fn from_weights(info: &ModelInfo, ws: &WeightStore) -> Result<HostUVit> {
+        let d = info.dim;
+        let p_in = info.channels; // patch == 1
+        let depth = ws
+            .names
+            .iter()
+            .filter(|n| n.ends_with(".qkv.w"))
+            .count();
+        let mut blocks = Vec::with_capacity(depth);
+        for i in 0..depth {
+            let p = format!("blocks.{i}");
+            blocks.push(Block {
+                ln1: get_ln(ws, &format!("{p}.ln1"))?,
+                qkv: get_linear(ws, &format!("{p}.qkv"), d, 3 * d)?,
+                proj: get_linear(ws, &format!("{p}.proj"), d, d)?,
+                ln2: get_ln(ws, &format!("{p}.ln2"))?,
+                q_x: get_linear(ws, &format!("{p}.q_x"), d, d)?,
+                kv_c: get_linear(ws, &format!("{p}.kv_c"), d, 2 * d)?,
+                cproj: get_linear(ws, &format!("{p}.cproj"), d, d)?,
+                ln3: get_ln(ws, &format!("{p}.ln3"))?,
+                mlp1: get_linear(ws, &format!("{p}.mlp1"), d, 4 * d)?,
+                mlp2: get_linear(ws, &format!("{p}.mlp2"), 4 * d, d)?,
+            });
+        }
+        Ok(HostUVit {
+            info: info.clone(),
+            params: UVitParams {
+                patch: get_linear(ws, "patch", p_in, d)?,
+                pos: ws.f32_data("pos")?,
+                time1: get_linear(ws, "time1", d, d)?,
+                time2: get_linear(ws, "time2", d, d)?,
+                txt: get_linear(ws, "txt", info.txt_dim, d)?,
+                final_ln: get_ln(ws, "final_ln")?,
+                head: get_linear(ws, "head", d, p_in)?,
+                blocks,
+            },
+            depth,
+        })
+    }
+
+    /// Sinusoidal timestep embedding matching model.py.
+    fn time_embedding(&self, t: f32) -> Vec<f32> {
+        let dim = self.info.dim;
+        let half = dim / 2;
+        let mut out = vec![0.0f32; dim];
+        for j in 0..half {
+            let freq = (-(10_000.0f32).ln() * j as f32 / half as f32).exp();
+            let ang = t * freq;
+            out[j] = ang.cos();
+            out[half + j] = ang.sin();
+        }
+        out
+    }
+
+    /// Multi-head SDPA over host slices: q (nq x d), k/v (nk x d).
+    fn mha(&self, q: &[f32], k: &[f32], v: &[f32], nq: usize, nk: usize) -> Vec<f32> {
+        let d = self.info.dim;
+        let h = self.info.heads;
+        let dh = d / h;
+        let scale = 1.0 / (dh as f32).sqrt();
+        let mut out = vec![0.0f32; nq * d];
+        let mut logits = vec![0.0f32; nq * nk];
+        for head in 0..h {
+            let off = head * dh;
+            for i in 0..nq {
+                for j in 0..nk {
+                    let mut s = 0.0f32;
+                    for c in 0..dh {
+                        s += q[i * d + off + c] * k[j * d + off + c];
+                    }
+                    logits[i * nk + j] = s * scale;
+                }
+            }
+            softmax_rows(&mut logits, nq, nk);
+            for i in 0..nq {
+                for j in 0..nk {
+                    let w = logits[i * nk + j];
+                    if w == 0.0 {
+                        continue;
+                    }
+                    for c in 0..dh {
+                        out[i * d + off + c] += w * v[j * d + off + c];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Embed latent -> tokens for one batch element (the selection rep).
+    pub fn embed_tokens(&self, x_bchw: &[f32], t: f32) -> Vec<f32> {
+        let info = &self.info;
+        let (c, hw) = (info.channels, info.latent_hw);
+        let n = info.tokens;
+        let d = info.dim;
+        assert_eq!(x_bchw.len(), c * hw * hw);
+        // patchify p=1: token i = channels at pixel i.
+        let mut patches = vec![0.0f32; n * c];
+        for ch in 0..c {
+            for px in 0..n {
+                patches[px * c + ch] = x_bchw[ch * n + px];
+            }
+        }
+        let mut tok = self.params.patch.apply(&patches, n);
+        for i in 0..n * d {
+            tok[i] += self.params.pos[i];
+        }
+        let te = self.time_embedding(t);
+        let mut h1 = self.params.time1.apply(&te, 1);
+        silu(&mut h1);
+        let temb = self.params.time2.apply(&h1, 1);
+        for px in 0..n {
+            for j in 0..d {
+                tok[px * d + j] += temb[j];
+            }
+        }
+        tok
+    }
+
+    fn ln(&self, x: &[f32], rows: usize, l: &Ln) -> Vec<f32> {
+        let mut h = x.to_vec();
+        layernorm(&mut h, rows, self.info.dim, &l.g, &l.b);
+        h
+    }
+
+    /// One denoising step for a single batch element.
+    /// `cond` is (txt_len x txt_dim); returns eps in (C, H, W) layout.
+    pub fn forward(&self, x_bchw: &[f32], t: f32, cond: &[f32], reduce: &HostReduce) -> Vec<f32> {
+        self.forward_with_taps(x_bchw, t, cond, reduce, None)
+    }
+
+    /// Forward pass that optionally records each block's input hidden
+    /// state (N x d) — the Fig. 3 latent-locality analysis substrate.
+    pub fn forward_with_taps(
+        &self,
+        x_bchw: &[f32],
+        t: f32,
+        cond: &[f32],
+        reduce: &HostReduce,
+        mut taps: Option<&mut Vec<Vec<f32>>>,
+    ) -> Vec<f32> {
+        let info = &self.info;
+        let n = info.tokens;
+        let d = info.dim;
+        let mut x = self.embed_tokens(x_bchw, t);
+        let ctx = self.params.txt.apply(cond, info.txt_len);
+
+        // merge/unmerge helpers bound to the reduction mode.
+        let apply_module = |x: &mut Vec<f32>,
+                            h: Vec<f32>,
+                            module: &dyn Fn(&[f32], usize) -> Vec<f32>,
+                            reduce: &HostReduce| {
+            match reduce {
+                HostReduce::None => {
+                    let y = module(&h, n);
+                    for (xv, yv) in x.iter_mut().zip(&y) {
+                        *xv += yv;
+                    }
+                }
+                HostReduce::Toma { weights, layout } => {
+                    // Regional merge: split -> per-region A~ X -> module ->
+                    // per-region A~^T Y -> join. `weights` holds the
+                    // block-diagonal operator per region, identical rows
+                    // across regions count.
+                    let p = layout.regions;
+                    let n_loc = layout.tokens_per_region();
+                    let k_loc = weights.k;
+                    let hs = layout.split(&h, d);
+                    let mut merged = vec![0.0f32; p * k_loc * d];
+                    for r in 0..p {
+                        let w = MergeWeights {
+                            a: vec![],
+                            a_tilde: weights.a_tilde
+                                [r * k_loc * n_loc..(r + 1) * k_loc * n_loc]
+                                .to_vec(),
+                            k: k_loc,
+                            n: n_loc,
+                        };
+                        let xm = crate::toma::merge::merge(
+                            &w,
+                            &hs[r * n_loc * d..(r + 1) * n_loc * d],
+                            d,
+                        );
+                        merged[r * k_loc * d..(r + 1) * k_loc * d].copy_from_slice(&xm);
+                    }
+                    let y = module(&merged, p * k_loc);
+                    let mut restored = vec![0.0f32; n * d];
+                    for r in 0..p {
+                        let w = MergeWeights {
+                            a: vec![],
+                            a_tilde: weights.a_tilde
+                                [r * k_loc * n_loc..(r + 1) * k_loc * n_loc]
+                                .to_vec(),
+                            k: k_loc,
+                            n: n_loc,
+                        };
+                        let back =
+                            unmerge_transpose(&w, &y[r * k_loc * d..(r + 1) * k_loc * d], d);
+                        restored[r * n_loc * d..(r + 1) * n_loc * d].copy_from_slice(&back);
+                    }
+                    let joined = layout.join(&restored, d);
+                    for (xv, yv) in x.iter_mut().zip(&joined) {
+                        *xv += yv;
+                    }
+                }
+            }
+        };
+
+        for b in &self.params.blocks {
+            if let Some(t) = taps.as_deref_mut() {
+                t.push(x.clone());
+            }
+            // Self-attention.
+            let h = self.ln(&x, n, &b.ln1);
+            let self_attn = |hm: &[f32], rows: usize| -> Vec<f32> {
+                let qkv = b.qkv.apply(hm, rows);
+                let mut q = vec![0.0f32; rows * d];
+                let mut k = vec![0.0f32; rows * d];
+                let mut v = vec![0.0f32; rows * d];
+                for r in 0..rows {
+                    q[r * d..(r + 1) * d].copy_from_slice(&qkv[r * 3 * d..r * 3 * d + d]);
+                    k[r * d..(r + 1) * d]
+                        .copy_from_slice(&qkv[r * 3 * d + d..r * 3 * d + 2 * d]);
+                    v[r * d..(r + 1) * d]
+                        .copy_from_slice(&qkv[r * 3 * d + 2 * d..(r + 1) * 3 * d]);
+                }
+                let o = self.mha(&q, &k, &v, rows, rows);
+                b.proj.apply(&o, rows)
+            };
+            apply_module(&mut x, h, &self_attn, reduce);
+
+            // Cross-attention.
+            let h = self.ln(&x, n, &b.ln2);
+            let kv = b.kv_c.apply(&ctx, info.txt_len);
+            let mut ck = vec![0.0f32; info.txt_len * d];
+            let mut cv = vec![0.0f32; info.txt_len * d];
+            for r in 0..info.txt_len {
+                ck[r * d..(r + 1) * d].copy_from_slice(&kv[r * 2 * d..r * 2 * d + d]);
+                cv[r * d..(r + 1) * d].copy_from_slice(&kv[r * 2 * d + d..(r + 1) * 2 * d]);
+            }
+            let cross = |hm: &[f32], rows: usize| -> Vec<f32> {
+                let q = b.q_x.apply(hm, rows);
+                let o = self.mha(&q, &ck, &cv, rows, info.txt_len);
+                b.cproj.apply(&o, rows)
+            };
+            apply_module(&mut x, h, &cross, reduce);
+
+            // MLP.
+            let h = self.ln(&x, n, &b.ln3);
+            let mlp = |hm: &[f32], rows: usize| -> Vec<f32> {
+                let mut u = b.mlp1.apply(hm, rows);
+                gelu(&mut u);
+                b.mlp2.apply(&u, rows)
+            };
+            apply_module(&mut x, h, &mlp, reduce);
+        }
+
+        let hf = self.ln(&x, n, &self.params.final_ln);
+        let tokens_out = self.params.head.apply(&hf, n);
+        // unpatchify p=1: (n x C) -> (C, H, W).
+        let c = info.channels;
+        let mut eps = vec![0.0f32; c * n];
+        for px in 0..n {
+            for ch in 0..c {
+                eps[ch * n + px] = tokens_out[px * c + ch];
+            }
+        }
+        eps
+    }
+}

@@ -1,0 +1,125 @@
+//! Fixed random-projection feature extractor — the pretrained-network
+//! stand-in for DINO / CLIP / Inception features.
+//!
+//! Two layers of seeded Gaussian projections with a tanh nonlinearity:
+//! deterministic in the seed, Lipschitz (small input changes -> small
+//! feature changes), and direction-sensitive — the properties the proxy
+//! metrics rely on.
+
+use crate::tensor::ops::matmul;
+use crate::util::Pcg64;
+
+pub struct FeatureExtractor {
+    w1: Vec<f32>, // (in_dim x hidden)
+    w2: Vec<f32>, // (hidden x out_dim)
+    pub in_dim: usize,
+    hidden: usize,
+    pub out_dim: usize,
+    seed: u64,
+}
+
+impl FeatureExtractor {
+    pub fn new(in_dim: usize, out_dim: usize, seed: u64) -> Self {
+        let hidden = (in_dim / 2).max(out_dim).max(8);
+        let mut rng = Pcg64::new(seed ^ 0xFEA7);
+        let scale1 = 1.0 / (in_dim as f32).sqrt();
+        let scale2 = 1.0 / (hidden as f32).sqrt();
+        let w1 = rng.normal_vec(in_dim * hidden).iter().map(|v| v * scale1).collect();
+        let w2 = rng.normal_vec(hidden * out_dim).iter().map(|v| v * scale2).collect();
+        FeatureExtractor {
+            w1,
+            w2,
+            in_dim,
+            hidden,
+            out_dim,
+            seed,
+        }
+    }
+
+    /// Embed an input of exactly `in_dim` scalars.
+    pub fn embed(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.in_dim, "feature extractor input size");
+        let mut h = matmul(x, &self.w1, 1, self.in_dim, self.hidden);
+        for v in &mut h {
+            *v = v.tanh();
+        }
+        matmul(&h, &self.w2, 1, self.hidden, self.out_dim)
+    }
+
+    /// Embed arbitrary-length input by folding it into `in_dim` buckets
+    /// first (used for conditioning vectors of a different size).
+    pub fn embed_any(&self, x: &[f32]) -> Vec<f32> {
+        let mut folded = vec![0.0f32; self.in_dim];
+        for (i, v) in x.iter().enumerate() {
+            folded[i % self.in_dim] += v;
+        }
+        self.embed(&folded)
+    }
+
+    /// Batch embed rows of an (n x in_dim) matrix into (n x out_dim).
+    pub fn embed_batch(&self, xs: &[f32], n: usize) -> Vec<f32> {
+        assert_eq!(xs.len(), n * self.in_dim);
+        let mut h = matmul(xs, &self.w1, n, self.in_dim, self.hidden);
+        for v in &mut h {
+            *v = v.tanh();
+        }
+        matmul(&h, &self.w2, n, self.hidden, self.out_dim)
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = FeatureExtractor::new(32, 16, 1);
+        let b = FeatureExtractor::new(32, 16, 1);
+        let x: Vec<f32> = (0..32).map(|v| v as f32 * 0.1).collect();
+        assert_eq!(a.embed(&x), b.embed(&x));
+    }
+
+    #[test]
+    fn seed_changes_features() {
+        let a = FeatureExtractor::new(32, 16, 1);
+        let b = FeatureExtractor::new(32, 16, 2);
+        let x: Vec<f32> = (0..32).map(|v| v as f32 * 0.1).collect();
+        assert_ne!(a.embed(&x), b.embed(&x));
+    }
+
+    #[test]
+    fn lipschitz_small_perturbation() {
+        let fx = FeatureExtractor::new(64, 32, 3);
+        let mut rng = Pcg64::new(0);
+        let x = rng.normal_vec(64);
+        let y: Vec<f32> = x.iter().map(|v| v + 1e-3).collect();
+        let fa = fx.embed(&x);
+        let fb = fx.embed(&y);
+        let d: f32 = fa.iter().zip(&fb).map(|(a, b)| (a - b).abs()).sum();
+        assert!(d < 1.0, "{d}");
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let fx = FeatureExtractor::new(16, 8, 4);
+        let mut rng = Pcg64::new(1);
+        let xs = rng.normal_vec(3 * 16);
+        let batch = fx.embed_batch(&xs, 3);
+        for i in 0..3 {
+            let single = fx.embed(&xs[i * 16..(i + 1) * 16]);
+            assert_eq!(&batch[i * 8..(i + 1) * 8], single.as_slice());
+        }
+    }
+
+    #[test]
+    fn embed_any_handles_mismatched_length() {
+        let fx = FeatureExtractor::new(16, 8, 5);
+        let out = fx.embed_any(&vec![1.0; 100]);
+        assert_eq!(out.len(), 8);
+        assert!(out.iter().all(|v| v.is_finite()));
+    }
+}

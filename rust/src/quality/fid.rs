@@ -1,0 +1,120 @@
+//! FID-proxy: Fréchet distance between Gaussian fits of two feature
+//! populations,
+//! `d^2 = |mu1 - mu2|^2 + Tr(C1 + C2 - 2 (C1 C2)^{1/2})`,
+//! computed exactly (matrix sqrt via Denman–Beavers) on the
+//! random-projection features of `quality::features`.
+
+use crate::tensor::linalg::{sqrtm_spd, trace};
+use crate::tensor::ops::matmul;
+
+/// Mean and covariance of an (n x d) feature population.
+pub fn gaussian_stats(feats: &[f32], n: usize, d: usize) -> (Vec<f32>, Vec<f32>) {
+    assert_eq!(feats.len(), n * d);
+    assert!(n >= 2, "need at least 2 samples");
+    let mut mu = vec![0.0f32; d];
+    for i in 0..n {
+        for j in 0..d {
+            mu[j] += feats[i * d + j];
+        }
+    }
+    for v in &mut mu {
+        *v /= n as f32;
+    }
+    let mut cov = vec![0.0f32; d * d];
+    for i in 0..n {
+        for a in 0..d {
+            let da = feats[i * d + a] - mu[a];
+            for b in 0..d {
+                cov[a * d + b] += da * (feats[i * d + b] - mu[b]);
+            }
+        }
+    }
+    for v in &mut cov {
+        *v /= (n - 1) as f32;
+    }
+    (mu, cov)
+}
+
+/// Fréchet distance between two Gaussians (mu, cov) of dim d.
+pub fn frechet_gaussians(mu1: &[f32], c1: &[f32], mu2: &[f32], c2: &[f32], d: usize) -> f64 {
+    let mean_term: f64 = mu1
+        .iter()
+        .zip(mu2)
+        .map(|(a, b)| ((a - b) as f64).powi(2))
+        .sum();
+    // Regularize to keep sqrtm stable on low-rank covariances.
+    let mut c1r = c1.to_vec();
+    let mut c2r = c2.to_vec();
+    for i in 0..d {
+        c1r[i * d + i] += 1e-4;
+        c2r[i * d + i] += 1e-4;
+    }
+    let prod = matmul(&c1r, &c2r, d, d, d);
+    let s = sqrtm_spd(&prod, d, 40);
+    let tr = trace(&c1r, d) as f64 + trace(&c2r, d) as f64 - 2.0 * trace(&s, d) as f64;
+    (mean_term + tr.max(0.0)).max(0.0)
+}
+
+/// FID-proxy between two feature populations (n1 x d) and (n2 x d).
+pub fn frechet_distance(f1: &[f32], n1: usize, f2: &[f32], n2: usize, d: usize) -> f64 {
+    let (m1, c1) = gaussian_stats(f1, n1, d);
+    let (m2, c2) = gaussian_stats(f2, n2, d);
+    frechet_gaussians(&m1, &c1, &m2, &c2, d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn pop(n: usize, d: usize, mean: f32, std: f32, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::new(seed);
+        (0..n * d).map(|_| mean + std * rng.normal()).collect()
+    }
+
+    #[test]
+    fn identical_populations_near_zero() {
+        let a = pop(200, 8, 0.0, 1.0, 0);
+        let d = frechet_distance(&a, 200, &a, 200, 8);
+        assert!(d < 1e-2, "{d}");
+    }
+
+    #[test]
+    fn mean_shift_dominates() {
+        let a = pop(300, 8, 0.0, 1.0, 1);
+        let b = pop(300, 8, 2.0, 1.0, 2);
+        let d = frechet_distance(&a, 300, &b, 300, 8);
+        // |mu1 - mu2|^2 = 8 * 4 = 32 plus sampling noise.
+        assert!((d - 32.0).abs() < 8.0, "{d}");
+    }
+
+    #[test]
+    fn variance_shift_detected() {
+        let a = pop(300, 8, 0.0, 1.0, 3);
+        let b = pop(300, 8, 0.0, 2.0, 4);
+        let same = frechet_distance(&a, 300, &pop(300, 8, 0.0, 1.0, 5), 300, 8);
+        let diff = frechet_distance(&a, 300, &b, 300, 8);
+        assert!(diff > same + 1.0, "{diff} vs {same}");
+    }
+
+    #[test]
+    fn gaussian_stats_sane() {
+        let a = pop(5000, 4, 1.5, 0.5, 6);
+        let (mu, cov) = gaussian_stats(&a, 5000, 4);
+        for m in &mu {
+            assert!((m - 1.5).abs() < 0.05);
+        }
+        for i in 0..4 {
+            assert!((cov[i * 4 + i] - 0.25).abs() < 0.05);
+        }
+    }
+
+    #[test]
+    fn symmetric() {
+        let a = pop(200, 6, 0.0, 1.0, 7);
+        let b = pop(200, 6, 0.5, 1.2, 8);
+        let d1 = frechet_distance(&a, 200, &b, 200, 6);
+        let d2 = frechet_distance(&b, 200, &a, 200, 6);
+        assert!((d1 - d2).abs() < 0.3 * d1.max(1.0), "{d1} vs {d2}");
+    }
+}

@@ -1,0 +1,139 @@
+//! Quality-proxy metrics (see DESIGN.md §substitutions).
+//!
+//! The paper scores generated *images* with pretrained networks (DINO,
+//! CLIP, Inception/FID). Without those weights we score generated *latents*
+//! with a fixed random-projection feature extractor — a universal,
+//! seed-deterministic embedding that preserves the metrics' ordering
+//! semantics: identical outputs score perfectly, degradation grows with
+//! merge aggressiveness, and distribution shift inflates the Fréchet
+//! distance.
+
+pub mod features;
+pub mod fid;
+
+pub use features::FeatureExtractor;
+pub use fid::frechet_distance;
+
+/// DINO-proxy: 1 - mean cosine similarity between the feature embeddings of
+/// a reference latent and a candidate latent (paper's DINO "delta"; 0 =
+/// identical, higher = worse).
+pub fn dino_proxy(fx: &FeatureExtractor, reference: &[f32], candidate: &[f32]) -> f64 {
+    assert_eq!(reference.len(), candidate.len());
+    let a = fx.embed(reference);
+    let b = fx.embed(candidate);
+    1.0 - cosine(&a, &b)
+}
+
+/// CLIP-proxy: scaled cosine alignment between the latent's features and
+/// the conditioning embedding's features (higher = better aligned). The
+/// paper's CLIP-T sits around ~30; we use the same x100/3 scaling so tables
+/// are visually comparable.
+pub fn clip_proxy(fx: &FeatureExtractor, latent: &[f32], cond: &[f32]) -> f64 {
+    let a = fx.embed(latent);
+    let b = fx.embed_any(cond);
+    (cosine(&a, &b) + 1.0) * 0.5 * 33.0
+}
+
+/// Pixel-space mean-squared error (the App. F ablation metric), scaled by
+/// 1e4 to land in the paper's integer range.
+pub fn mse(reference: &[f32], candidate: &[f32]) -> f64 {
+    assert_eq!(reference.len(), candidate.len());
+    let s: f64 = reference
+        .iter()
+        .zip(candidate)
+        .map(|(a, b)| {
+            let d = (*a - *b) as f64;
+            d * d
+        })
+        .sum();
+    s / reference.len() as f64 * 1e4
+}
+
+/// Write a grayscale PGM preview of a latent (C, H, W): channels are
+/// averaged and min-max normalized — the qualitative-figure stand-in
+/// (Fig. 1 / 5-8) for environments without a VAE decoder.
+pub fn write_pgm_preview(
+    latent: &[f32],
+    channels: usize,
+    hw: usize,
+    path: &str,
+) -> anyhow::Result<()> {
+    use std::io::Write;
+    let n = hw * hw;
+    anyhow::ensure!(latent.len() == channels * n, "latent size mismatch");
+    let mut gray = vec![0.0f32; n];
+    for c in 0..channels {
+        for p in 0..n {
+            gray[p] += latent[c * n + p] / channels as f32;
+        }
+    }
+    let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+    for v in &gray {
+        lo = lo.min(*v);
+        hi = hi.max(*v);
+    }
+    let scale = if hi > lo { 255.0 / (hi - lo) } else { 0.0 };
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "P5\n{hw} {hw}\n255")?;
+    let bytes: Vec<u8> = gray
+        .iter()
+        .map(|v| ((v - lo) * scale).clamp(0.0, 255.0) as u8)
+        .collect();
+    f.write_all(&bytes)?;
+    Ok(())
+}
+
+fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    let mut dot = 0.0f64;
+    let mut na = 0.0f64;
+    let mut nb = 0.0f64;
+    for (x, y) in a.iter().zip(b) {
+        dot += (*x as f64) * (*y as f64);
+        na += (*x as f64).powi(2);
+        nb += (*y as f64).powi(2);
+    }
+    dot / (na.sqrt() * nb.sqrt() + 1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn dino_zero_for_identical() {
+        let fx = FeatureExtractor::new(64, 32, 7);
+        let x = Pcg64::new(0).normal_vec(64);
+        assert!(dino_proxy(&fx, &x, &x) < 1e-6);
+    }
+
+    #[test]
+    fn dino_grows_with_perturbation() {
+        let fx = FeatureExtractor::new(256, 64, 7);
+        let mut rng = Pcg64::new(1);
+        let x = rng.normal_vec(256);
+        let mk = |noise: f32, rng: &mut Pcg64| -> Vec<f32> {
+            x.iter().map(|v| v + noise * rng.normal()).collect()
+        };
+        let small = dino_proxy(&fx, &x, &mk(0.1, &mut rng));
+        let large = dino_proxy(&fx, &x, &mk(1.0, &mut rng));
+        assert!(small < large, "{small} vs {large}");
+        assert!(small > 0.0);
+    }
+
+    #[test]
+    fn mse_basic() {
+        assert_eq!(mse(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+        assert!((mse(&[0.0], &[0.1]) - 100.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn clip_proxy_in_range() {
+        let fx = FeatureExtractor::new(64, 32, 3);
+        let mut rng = Pcg64::new(2);
+        let a = rng.normal_vec(64);
+        let c = rng.normal_vec(48);
+        let v = clip_proxy(&fx, &a, &c);
+        assert!((0.0..=33.0).contains(&v), "{v}");
+    }
+}

@@ -1,0 +1,194 @@
+//! ASCII / markdown table rendering for the experiment harnesses — every
+//! `cargo bench` target and `toma-serve table --id N` prints through this.
+
+/// Column alignment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple table builder with aligned plain-text and markdown output.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    headers: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str) -> Self {
+        Table {
+            title: title.to_string(),
+            ..Default::default()
+        }
+    }
+
+    pub fn headers(mut self, hs: &[&str]) -> Self {
+        self.headers = hs.iter().map(|s| s.to_string()).collect();
+        self.aligns = hs
+            .iter()
+            .enumerate()
+            .map(|(i, _)| if i == 0 { Align::Left } else { Align::Right })
+            .collect();
+        self
+    }
+
+    pub fn align(mut self, col: usize, a: Align) -> Self {
+        if col < self.aligns.len() {
+            self.aligns[col] = a;
+        }
+        self
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row width != header width"
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn row_count(&self) -> usize {
+        self.rows.len()
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        w
+    }
+
+    /// Aligned plain-text rendering.
+    pub fn render(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("== {} ==\n", self.title));
+        }
+        let line = |cells: &[String], w: &[usize], aligns: &[Align]| -> String {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                if i > 0 {
+                    s.push_str("  ");
+                }
+                match aligns.get(i).unwrap_or(&Align::Left) {
+                    Align::Left => s.push_str(&format!("{:<width$}", c, width = w[i])),
+                    Align::Right => s.push_str(&format!("{:>width$}", c, width = w[i])),
+                }
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&line(&self.headers, &w, &self.aligns));
+        out.push_str(&format!(
+            "{}\n",
+            w.iter()
+                .map(|n| "-".repeat(*n))
+                .collect::<Vec<_>>()
+                .join("  ")
+        ));
+        for row in &self.rows {
+            out.push_str(&line(row, &w, &self.aligns));
+        }
+        out
+    }
+
+    /// GitHub-flavored markdown rendering.
+    pub fn render_markdown(&self) -> String {
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("### {}\n\n", self.title));
+        }
+        out.push_str(&format!("| {} |\n", self.headers.join(" | ")));
+        out.push_str(&format!(
+            "|{}|\n",
+            self.aligns
+                .iter()
+                .map(|a| match a {
+                    Align::Left => " :--- ",
+                    Align::Right => " ---: ",
+                })
+                .collect::<Vec<_>>()
+                .join("|")
+        ));
+        for row in &self.rows {
+            out.push_str(&format!("| {} |\n", row.join(" | ")));
+        }
+        out
+    }
+}
+
+/// Format seconds with adaptive precision.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.2}s")
+    }
+}
+
+/// Format a relative delta vs a baseline as the paper does: "-24.0%".
+pub fn fmt_delta(value: f64, baseline: f64) -> String {
+    if baseline <= 0.0 {
+        return "n/a".into();
+    }
+    let pct = (value / baseline - 1.0) * 100.0;
+    format!("{pct:+.1}%")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Table {
+        let mut t = Table::new("t").headers(&["Method", "Sec/img"]);
+        t.row(vec!["Baseline".into(), "6.10".into()]);
+        t.row(vec!["ToMA".into(), "5.04".into()]);
+        t
+    }
+
+    #[test]
+    fn renders_aligned() {
+        let s = sample().render();
+        assert!(s.contains("Method"));
+        assert!(s.contains("Baseline"));
+        let lines: Vec<&str> = s.lines().collect();
+        // header + rule + 2 rows + title
+        assert_eq!(lines.len(), 5);
+    }
+
+    #[test]
+    fn renders_markdown() {
+        let s = sample().render_markdown();
+        assert!(s.contains("| Method | Sec/img |"));
+        assert!(s.contains("| ToMA | 5.04 |"));
+        assert!(s.contains("---:"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_row_panics() {
+        let mut t = Table::new("x").headers(&["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(fmt_secs(0.0000391), "39.1us");
+        assert_eq!(fmt_secs(0.0123), "12.30ms");
+        assert_eq!(fmt_secs(6.07), "6.07s");
+        assert_eq!(fmt_delta(5.0, 6.1), "-18.0%");
+        assert_eq!(fmt_delta(8.66, 6.07), "+42.7%");
+    }
+}
+pub mod tables;

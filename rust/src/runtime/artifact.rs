@@ -1,0 +1,409 @@
+//! Artifact manifest parsing (`artifacts/manifest.json`).
+//!
+//! The manifest is written by `python/compile/aot.py` and is the single
+//! source of truth for: which HLO files exist, their parameter order
+//! (model weights first, in tree-flatten order, then runtime inputs), input
+//! shapes/dtypes, and the ToMA metadata (variant, ratio, regions).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    Step,
+    Select,
+    /// Weights-only rebuild (destinations kept) — Sec. 4.3.2 split refresh.
+    Weights,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    S32,
+    U32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "s32" => Ok(Dtype::S32),
+            "u32" => Ok(Dtype::U32),
+            _ => Err(anyhow!("unknown dtype {s}")),
+        }
+    }
+}
+
+/// Shape + dtype of one runtime input or output.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let name = j
+            .get("name")
+            .and_then(Json::as_str)
+            .unwrap_or("")
+            .to_string();
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing shape"))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = Dtype::parse(j.str_field("dtype").map_err(|e| anyhow!("{e}"))?)?;
+        Ok(TensorSpec { name, shape, dtype })
+    }
+}
+
+/// One entry of the artifact index.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub kind: ArtifactKind,
+    pub model: String,
+    pub file: String,
+    pub kernel_impl: String,
+    /// Token-reduction variant for steps ("baseline", "toma", ...).
+    pub variant: Option<String>,
+    /// Selection mode for selects ("tile", "stripe", "global", "random").
+    pub mode: Option<String>,
+    pub ratio: Option<f64>,
+    pub regions: usize,
+    pub region_mode: Option<String>,
+    /// Weight-parameter names this artifact consumes, in lowering order.
+    /// Empty means "all model parameters" (legacy manifests).
+    pub params: Vec<String>,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Model metadata (shapes + parameter inventory).
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub name: String,
+    pub kind: String, // "uvit" | "dit"
+    pub latent_hw: usize,
+    pub channels: usize,
+    pub dim: usize,
+    pub heads: usize,
+    pub txt_len: usize,
+    pub txt_dim: usize,
+    pub batch: usize,
+    pub tokens: usize,
+    /// Parameter order as lowered (names match the weights npz).
+    pub params: Vec<TensorSpec>,
+}
+
+impl ModelInfo {
+    pub fn grid(&self) -> usize {
+        (self.tokens as f64).sqrt() as usize
+    }
+
+    pub fn latent_len(&self) -> usize {
+        self.batch * self.channels * self.latent_hw * self.latent_hw
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub tau: f64,
+    pub dest_every: u64,
+    pub weight_every: u64,
+    pub models: BTreeMap<String, ModelInfo>,
+    pub artifacts: BTreeMap<String, ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}; run `make artifacts` first"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+
+        let mut models = BTreeMap::new();
+        for (name, m) in j
+            .get("models")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing models"))?
+        {
+            let params = m
+                .get("params")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("model {name} missing params"))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            models.insert(
+                name.clone(),
+                ModelInfo {
+                    name: name.clone(),
+                    kind: m.str_field("kind").map_err(|e| anyhow!("{e}"))?.into(),
+                    latent_hw: m.num_field("latent_hw").map_err(|e| anyhow!("{e}"))? as usize,
+                    channels: m.num_field("channels").map_err(|e| anyhow!("{e}"))? as usize,
+                    dim: m.num_field("dim").map_err(|e| anyhow!("{e}"))? as usize,
+                    heads: m.num_field("heads").map_err(|e| anyhow!("{e}"))? as usize,
+                    txt_len: m.num_field("txt_len").map_err(|e| anyhow!("{e}"))? as usize,
+                    txt_dim: m.num_field("txt_dim").map_err(|e| anyhow!("{e}"))? as usize,
+                    batch: m.num_field("batch").map_err(|e| anyhow!("{e}"))? as usize,
+                    tokens: m.num_field("tokens").map_err(|e| anyhow!("{e}"))? as usize,
+                    params,
+                },
+            );
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for a in j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+        {
+            let name = a.str_field("name").map_err(|e| anyhow!("{e}"))?.to_string();
+            let kind = match a.str_field("kind").map_err(|e| anyhow!("{e}"))? {
+                "step" => ArtifactKind::Step,
+                "select" => ArtifactKind::Select,
+                "weights" => ArtifactKind::Weights,
+                other => return Err(anyhow!("unknown artifact kind {other}")),
+            };
+            let inputs = a
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .unwrap_or(&[])
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = a
+                .get("outputs")
+                .and_then(Json::as_arr)
+                .unwrap_or(&[])
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactEntry {
+                    name: name.clone(),
+                    kind,
+                    model: a.str_field("model").map_err(|e| anyhow!("{e}"))?.into(),
+                    file: a.str_field("file").map_err(|e| anyhow!("{e}"))?.into(),
+                    kernel_impl: a
+                        .get("kernel_impl")
+                        .and_then(Json::as_str)
+                        .unwrap_or("jnp")
+                        .into(),
+                    variant: a.get("variant").and_then(Json::as_str).map(String::from),
+                    mode: a.get("mode").and_then(Json::as_str).map(String::from),
+                    ratio: a.get("ratio").and_then(Json::as_f64),
+                    regions: a.get("regions").and_then(Json::as_usize).unwrap_or(1),
+                    region_mode: a
+                        .get("region_mode")
+                        .and_then(Json::as_str)
+                        .map(String::from),
+                    params: a
+                        .get("params")
+                        .and_then(Json::as_arr)
+                        .map(|arr| {
+                            arr.iter()
+                                .filter_map(Json::as_str)
+                                .map(String::from)
+                                .collect()
+                        })
+                        .unwrap_or_default(),
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            tau: j.num_field("tau").map_err(|e| anyhow!("{e}"))?,
+            dest_every: j.num_field("dest_every").map_err(|e| anyhow!("{e}"))? as u64,
+            weight_every: j.num_field("weight_every").map_err(|e| anyhow!("{e}"))? as u64,
+            models,
+            artifacts,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("model {name} not in manifest"))
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name} not in manifest"))
+    }
+
+    /// Step artifact name for (model, variant, ratio).
+    pub fn step_name(&self, model: &str, variant: &str, ratio: Option<f64>) -> Result<String> {
+        if variant == "baseline" {
+            return Ok(format!("{model}_step_baseline"));
+        }
+        let r = ratio.ok_or_else(|| anyhow!("variant {variant} needs a ratio"))?;
+        let tag = format!("r{:02}", (r * 100.0).round() as u32);
+        // toma_tile carries its region count in the name; find by scan.
+        let prefix = format!("{model}_step_{variant}_{tag}");
+        if self.artifacts.contains_key(&prefix) {
+            return Ok(prefix);
+        }
+        self.artifacts
+            .keys()
+            .find(|k| k.starts_with(&prefix))
+            .cloned()
+            .ok_or_else(|| anyhow!("no artifact for {model}/{variant}/{tag}"))
+    }
+
+    /// Select artifact name for (model, mode, ratio[, regions]).
+    pub fn select_name(
+        &self,
+        model: &str,
+        mode: &str,
+        ratio: f64,
+        regions: Option<usize>,
+    ) -> Result<String> {
+        let tag = format!("r{:02}", (ratio * 100.0).round() as u32);
+        let candidates: Vec<&String> = self
+            .artifacts
+            .keys()
+            .filter(|k| k.starts_with(&format!("{model}_select_{mode}_{tag}")))
+            .collect();
+        match regions {
+            Some(p) => {
+                let exact = format!("{model}_select_{mode}_{tag}_p{p}");
+                if self.artifacts.contains_key(&exact) {
+                    Ok(exact)
+                } else {
+                    candidates
+                        .first()
+                        .map(|s| s.to_string())
+                        .ok_or_else(|| anyhow!("no select artifact {exact}"))
+                }
+            }
+            None => candidates
+                .first()
+                .map(|s| s.to_string())
+                .ok_or_else(|| anyhow!("no select artifact for {model}/{mode}/{tag}")),
+        }
+    }
+
+    /// Weights-only artifact paired with a select artifact, if present.
+    pub fn weights_name_for_select(&self, select_name: &str) -> Option<String> {
+        let w = select_name.replace("_select_", "_weights_");
+        self.artifacts.contains_key(&w).then_some(w)
+    }
+
+    pub fn hlo_path(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+
+    pub fn weights_path(&self, model: &str) -> PathBuf {
+        self.dir.join("weights").join(format!("{model}.npz"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_manifest_json() -> String {
+        r#"{
+ "tau": 0.1, "dest_every": 10, "weight_every": 5,
+ "models": {
+  "uvit_xs": {"kind": "uvit", "latent_hw": 16, "channels": 4, "patch": 1,
+    "dim": 128, "heads": 4, "txt_len": 16, "txt_dim": 64, "batch": 2,
+    "tokens": 256, "depth": 4,
+    "params": [{"name": "patch.w", "shape": [4, 128], "dtype": "f32"}]}
+ },
+ "artifacts": [
+  {"name": "uvit_xs_step_baseline", "kind": "step", "model": "uvit_xs",
+   "file": "uvit_xs_step_baseline.hlo.txt", "kernel_impl": "jnp",
+   "variant": "baseline", "ratio": null, "regions": 1,
+   "inputs": [{"name": "x_t", "shape": [2, 4, 16, 16], "dtype": "f32"}],
+   "outputs": [{"shape": [2, 4, 16, 16], "dtype": "f32"}]},
+  {"name": "uvit_xs_step_toma_r50", "kind": "step", "model": "uvit_xs",
+   "file": "f.hlo.txt", "kernel_impl": "jnp", "variant": "toma",
+   "ratio": 0.5, "regions": 1, "inputs": [], "outputs": []},
+  {"name": "uvit_xs_select_tile_r50_p16", "kind": "select",
+   "model": "uvit_xs", "file": "s.hlo.txt", "kernel_impl": "jnp",
+   "mode": "tile", "ratio": 0.5, "regions": 16,
+   "inputs": [], "outputs": []}
+ ]
+}"#
+        .to_string()
+    }
+
+    fn load_fake() -> Manifest {
+        let dir = std::env::temp_dir().join(format!("toma_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), fake_manifest_json()).unwrap();
+        Manifest::load(&dir).unwrap()
+    }
+
+    #[test]
+    fn parses_models_and_artifacts() {
+        let m = load_fake();
+        assert_eq!(m.tau, 0.1);
+        assert_eq!(m.dest_every, 10);
+        let model = m.model("uvit_xs").unwrap();
+        assert_eq!(model.tokens, 256);
+        assert_eq!(model.grid(), 16);
+        assert_eq!(model.params.len(), 1);
+        let a = m.artifact("uvit_xs_step_baseline").unwrap();
+        assert_eq!(a.kind, ArtifactKind::Step);
+        assert_eq!(a.inputs[0].shape, vec![2, 4, 16, 16]);
+        assert_eq!(a.inputs[0].elements(), 2048);
+    }
+
+    #[test]
+    fn step_name_resolution() {
+        let m = load_fake();
+        assert_eq!(
+            m.step_name("uvit_xs", "baseline", None).unwrap(),
+            "uvit_xs_step_baseline"
+        );
+        assert_eq!(
+            m.step_name("uvit_xs", "toma", Some(0.5)).unwrap(),
+            "uvit_xs_step_toma_r50"
+        );
+        assert!(m.step_name("uvit_xs", "toma", Some(0.25)).is_err());
+    }
+
+    #[test]
+    fn select_name_resolution() {
+        let m = load_fake();
+        assert_eq!(
+            m.select_name("uvit_xs", "tile", 0.5, Some(16)).unwrap(),
+            "uvit_xs_select_tile_r50_p16"
+        );
+        // Region-less lookup falls back to the first matching candidate.
+        assert_eq!(
+            m.select_name("uvit_xs", "tile", 0.5, None).unwrap(),
+            "uvit_xs_select_tile_r50_p16"
+        );
+        assert!(m.select_name("uvit_xs", "stripe", 0.5, None).is_err());
+    }
+
+    #[test]
+    fn missing_model_errors() {
+        let m = load_fake();
+        assert!(m.model("nope").is_err());
+        assert!(m.artifact("nope").is_err());
+    }
+}

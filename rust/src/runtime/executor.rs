@@ -1,0 +1,335 @@
+//! The PJRT execution layer: one [`Runtime`] per process (CPU client +
+//! manifest + weight stores + compiled-executable cache), one [`Executor`]
+//! per artifact.
+//!
+//! Hot-path contract: model weights live on device permanently; per-call
+//! inputs are uploaded as buffers, executed with `execute_b`, and outputs
+//! are fetched as literals. Compilation happens once per artifact and is
+//! cached for the life of the process.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::artifact::{ArtifactEntry, Manifest, TensorSpec};
+use super::weights::WeightStore;
+
+/// Typed per-call input.
+pub enum Input {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+}
+
+impl Input {
+    fn to_literal(&self, spec: &TensorSpec) -> Result<Literal> {
+        let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Input::F32(v) => {
+                if v.len() != spec.elements() {
+                    return Err(anyhow!(
+                        "input `{}`: got {} elements, want {}",
+                        spec.name,
+                        v.len(),
+                        spec.elements()
+                    ));
+                }
+                Literal::vec1(v)
+            }
+            Input::I32(v) => {
+                if v.len() != spec.elements() {
+                    return Err(anyhow!("input `{}` size mismatch", spec.name));
+                }
+                Literal::vec1(v)
+            }
+            Input::U32(v) => {
+                if v.len() != spec.elements() {
+                    return Err(anyhow!("input `{}` size mismatch", spec.name));
+                }
+                Literal::vec1(v)
+            }
+        };
+        lit.reshape(&dims)
+            .map_err(|e| anyhow!("reshaping `{}`: {e:?}", spec.name))
+    }
+}
+
+/// A device-resident input: the buffer plus the host literal it was copied
+/// from (kept alive because the CPU client copies asynchronously).
+pub struct DeviceInput {
+    pub buf: PjRtBuffer,
+    _lit: Literal,
+}
+
+/// A per-call argument: host data (uploaded on the fly) or an already
+/// resident device buffer (the hot-path form for step-invariant inputs
+/// like conditioning embeddings and cached merge plans).
+pub enum Arg<'a> {
+    Host(Input),
+    Device(&'a DeviceInput),
+}
+
+/// A compiled artifact bound to its model's weight buffers.
+pub struct Executor {
+    pub entry: ArtifactEntry,
+    exe: PjRtLoadedExecutable,
+    weights: Arc<WeightStore>,
+    client: PjRtClient,
+    /// Cumulative statistics.
+    pub calls: std::sync::atomic::AtomicU64,
+    pub exec_ns: std::sync::atomic::AtomicU64,
+}
+
+impl Executor {
+    /// Upload one runtime input (by position) as a reusable device buffer.
+    pub fn upload(&self, position: usize, input: &Input) -> Result<DeviceInput> {
+        let spec = self
+            .entry
+            .inputs
+            .get(position)
+            .ok_or_else(|| anyhow!("{}: no input {position}", self.entry.name))?;
+        let lit = input.to_literal(spec)?;
+        let buf = self
+            .client
+            .buffer_from_host_literal(None, &lit)
+            .map_err(|e| anyhow!("upload `{}`: {e:?}", spec.name))?;
+        Ok(DeviceInput { buf, _lit: lit })
+    }
+
+    /// Execute with a mix of host inputs and resident device buffers.
+    pub fn run_args(&self, args: &[Arg]) -> Result<Vec<Literal>> {
+        let expect = self.entry.inputs.len();
+        if args.len() != expect {
+            return Err(anyhow!(
+                "{}: got {} runtime args, want {}",
+                self.entry.name,
+                args.len(),
+                expect
+            ));
+        }
+        let mut arg_bufs: Vec<&PjRtBuffer> = if self.entry.params.is_empty() {
+            self.weights.buffers().iter().collect()
+        } else {
+            self.weights.buffers_for(&self.entry.params)?
+        };
+        arg_bufs.reserve(expect);
+        let mut owned: Vec<PjRtBuffer> = Vec::new();
+        let mut lits: Vec<Literal> = Vec::new();
+        // First pass: upload host args (owned buffers must outlive exec).
+        let mut slots: Vec<Option<usize>> = Vec::with_capacity(expect);
+        for (i, (arg, spec)) in args.iter().zip(&self.entry.inputs).enumerate() {
+            match arg {
+                Arg::Host(input) => {
+                    let lit = input.to_literal(spec)?;
+                    owned.push(
+                        self.client
+                            .buffer_from_host_literal(None, &lit)
+                            .map_err(|e| anyhow!("upload `{}`: {e:?}", spec.name))?,
+                    );
+                    lits.push(lit);
+                    slots.push(Some(owned.len() - 1));
+                    let _ = i;
+                }
+                Arg::Device(_) => slots.push(None),
+            }
+        }
+        for (arg, slot) in args.iter().zip(&slots) {
+            match (arg, slot) {
+                (Arg::Device(b), _) => arg_bufs.push(&b.buf),
+                (Arg::Host(_), Some(j)) => arg_bufs.push(&owned[*j]),
+                _ => unreachable!(),
+            }
+        }
+        let t0 = Instant::now();
+        let result = self
+            .exe
+            .execute_b::<&PjRtBuffer>(&arg_bufs)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.entry.name))?;
+        self.calls
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.exec_ns.fetch_add(
+            t0.elapsed().as_nanos() as u64,
+            std::sync::atomic::Ordering::Relaxed,
+        );
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {}: {e:?}", self.entry.name))?;
+        drop(lits);
+        let outs = lit
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple {}: {e:?}", self.entry.name))?;
+        if outs.len() != self.entry.outputs.len() {
+            return Err(anyhow!(
+                "{}: got {} outputs, manifest says {}",
+                self.entry.name,
+                outs.len(),
+                self.entry.outputs.len()
+            ));
+        }
+        Ok(outs)
+    }
+
+    /// Execute with per-call inputs following the weight parameters.
+    /// Returns one literal per artifact output.
+    pub fn run(&self, inputs: &[Input]) -> Result<Vec<Literal>> {
+        let expect = self.entry.inputs.len();
+        if inputs.len() != expect {
+            return Err(anyhow!(
+                "{}: got {} runtime inputs, want {}",
+                self.entry.name,
+                inputs.len(),
+                expect
+            ));
+        }
+        // Upload per-call inputs, then splice behind the weight buffers
+        // (only the subset this artifact's graph consumes).
+        let mut arg_bufs: Vec<&PjRtBuffer> = if self.entry.params.is_empty() {
+            self.weights.buffers().iter().collect()
+        } else {
+            self.weights.buffers_for(&self.entry.params)?
+        };
+        arg_bufs.reserve(expect);
+        // NOTE: buffer_from_host_literal copies asynchronously on the CPU
+        // client — the source literals must outlive the execution, so they
+        // are collected here and dropped only after the outputs are
+        // materialized below.
+        let mut owned: Vec<PjRtBuffer> = Vec::with_capacity(expect);
+        let mut lits: Vec<Literal> = Vec::with_capacity(expect);
+        for (inp, spec) in inputs.iter().zip(&self.entry.inputs) {
+            let lit = inp.to_literal(spec)?;
+            owned.push(
+                self.client
+                    .buffer_from_host_literal(None, &lit)
+                    .map_err(|e| anyhow!("upload `{}`: {e:?}", spec.name))?,
+            );
+            lits.push(lit);
+        }
+        for b in &owned {
+            arg_bufs.push(b);
+        }
+
+        let t0 = Instant::now();
+        let result = self
+            .exe
+            .execute_b::<&PjRtBuffer>(&arg_bufs)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.entry.name))?;
+        self.calls
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.exec_ns.fetch_add(
+            t0.elapsed().as_nanos() as u64,
+            std::sync::atomic::Ordering::Relaxed,
+        );
+
+        // return_tuple=True => a single tuple literal holding all outputs.
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {}: {e:?}", self.entry.name))?;
+        drop(lits); // inputs fully consumed once outputs are materialized
+        let outs = lit
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple {}: {e:?}", self.entry.name))?;
+        if outs.len() != self.entry.outputs.len() {
+            return Err(anyhow!(
+                "{}: got {} outputs, manifest says {}",
+                self.entry.name,
+                outs.len(),
+                self.entry.outputs.len()
+            ));
+        }
+        Ok(outs)
+    }
+
+    /// Mean execution latency so far, seconds.
+    pub fn mean_latency_s(&self) -> f64 {
+        let calls = self.calls.load(std::sync::atomic::Ordering::Relaxed);
+        if calls == 0 {
+            return 0.0;
+        }
+        self.exec_ns.load(std::sync::atomic::Ordering::Relaxed) as f64 / 1e9 / calls as f64
+    }
+}
+
+/// Process-wide runtime: client, manifest, weights, executable cache.
+pub struct Runtime {
+    pub client: PjRtClient,
+    pub manifest: Manifest,
+    weights: Mutex<BTreeMap<String, Arc<WeightStore>>>,
+    executors: Mutex<BTreeMap<String, Arc<Executor>>>,
+}
+
+impl Runtime {
+    pub fn new(artifact_dir: PathBuf) -> Result<Runtime> {
+        let manifest = Manifest::load(&artifact_dir)?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            weights: Mutex::new(BTreeMap::new()),
+            executors: Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    pub fn with_default_dir() -> Result<Runtime> {
+        Runtime::new(crate::default_artifact_dir())
+    }
+
+    /// Weight store for a model (loaded + uploaded once).
+    pub fn weights(&self, model: &str) -> Result<Arc<WeightStore>> {
+        if let Some(w) = self.weights.lock().unwrap().get(model) {
+            return Ok(w.clone());
+        }
+        let info = self.manifest.model(model)?.clone();
+        let path = self.manifest.weights_path(model);
+        let store = Arc::new(WeightStore::load(&self.client, &info, &path)?);
+        self.weights
+            .lock()
+            .unwrap()
+            .insert(model.to_string(), store.clone());
+        Ok(store)
+    }
+
+    /// Compile (or fetch cached) an executor for an artifact by name.
+    pub fn executor(&self, name: &str) -> Result<Arc<Executor>> {
+        if let Some(e) = self.executors.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let entry = self.manifest.artifact(name)?.clone();
+        let weights = self.weights(&entry.model)?;
+        let path = self.manifest.hlo_path(&entry);
+        let t0 = Instant::now();
+        let proto = HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing HLO {path:?}: {e:?}"))
+            .with_context(|| "run `make artifacts`?")?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        eprintln!(
+            "[runtime] compiled {name} in {:.2}s",
+            t0.elapsed().as_secs_f64()
+        );
+        let executor = Arc::new(Executor {
+            entry,
+            exe,
+            weights,
+            client: self.client.clone(),
+            calls: Default::default(),
+            exec_ns: Default::default(),
+        });
+        self.executors
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), executor.clone());
+        Ok(executor)
+    }
+
+    /// Names of currently compiled executors.
+    pub fn compiled(&self) -> Vec<String> {
+        self.executors.lock().unwrap().keys().cloned().collect()
+    }
+}

@@ -1,0 +1,11 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from the
+//! serve path. Python never runs here — the manifest + HLO text + weight
+//! npz files produced by `make artifacts` are the entire interface.
+
+pub mod artifact;
+pub mod executor;
+pub mod weights;
+
+pub use artifact::{ArtifactEntry, ArtifactKind, Manifest, ModelInfo, TensorSpec};
+pub use executor::{Executor, Runtime};
+pub use weights::WeightStore;

@@ -1,0 +1,109 @@
+//! Model weight loading: `artifacts/weights/<model>.npz` -> host literals,
+//! uploaded once per model as PJRT device buffers and shared by every
+//! executable of that model (the runtime hot path passes device buffers via
+//! `execute_b`, so weights never re-cross the host boundary per step).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+use xla::{FromRawBytes, Literal, PjRtBuffer, PjRtClient};
+
+use super::artifact::ModelInfo;
+
+/// Host + device copies of one model's parameters, in lowering order.
+pub struct WeightStore {
+    pub model: String,
+    /// Parameter names in artifact input order.
+    pub names: Vec<String>,
+    literals: Vec<Literal>,
+    buffers: Vec<PjRtBuffer>,
+}
+
+impl WeightStore {
+    /// Load an npz and upload each tensor, ordered per `info.params`.
+    pub fn load(client: &PjRtClient, info: &ModelInfo, npz_path: &Path) -> Result<WeightStore> {
+        let named: Vec<(String, Literal)> = Literal::read_npz(npz_path, &())
+            .with_context(|| format!("reading weights {npz_path:?}"))?;
+        let mut by_name: BTreeMap<String, Literal> = named.into_iter().collect();
+
+        let mut names = Vec::with_capacity(info.params.len());
+        let mut literals = Vec::with_capacity(info.params.len());
+        let mut buffers = Vec::with_capacity(info.params.len());
+        for spec in &info.params {
+            // npz entries may carry a trailing ".npy" in their names.
+            let lit = by_name
+                .remove(&spec.name)
+                .or_else(|| by_name.remove(&format!("{}.npy", spec.name)))
+                .ok_or_else(|| anyhow!("weights npz missing tensor `{}`", spec.name))?;
+            let expected: usize = spec.shape.iter().product();
+            if lit.element_count() != expected {
+                return Err(anyhow!(
+                    "weight `{}` has {} elements, manifest says {}",
+                    spec.name,
+                    lit.element_count(),
+                    expected
+                ));
+            }
+            let buf = client
+                .buffer_from_host_literal(None, &lit)
+                .map_err(|e| anyhow!("uploading `{}`: {e:?}", spec.name))?;
+            names.push(spec.name.clone());
+            literals.push(lit);
+            buffers.push(buf);
+        }
+        Ok(WeightStore {
+            model: info.name.clone(),
+            names,
+            literals,
+            buffers,
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.buffers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buffers.is_empty()
+    }
+
+    /// Device buffers in artifact input order.
+    pub fn buffers(&self) -> &[PjRtBuffer] {
+        &self.buffers
+    }
+
+    /// Device buffers for a named subset, in the given order.
+    pub fn buffers_for(&self, names: &[String]) -> Result<Vec<&PjRtBuffer>> {
+        names
+            .iter()
+            .map(|n| {
+                self.names
+                    .iter()
+                    .position(|m| m == n)
+                    .map(|i| &self.buffers[i])
+                    .ok_or_else(|| anyhow!("weight `{n}` not in store"))
+            })
+            .collect()
+    }
+
+    /// Host literal by name (used by the pure-Rust cross-validation model).
+    pub fn literal(&self, name: &str) -> Option<&Literal> {
+        self.names
+            .iter()
+            .position(|n| n == name)
+            .map(|i| &self.literals[i])
+    }
+
+    /// Host f32 data by name.
+    pub fn f32_data(&self, name: &str) -> Result<Vec<f32>> {
+        self.literal(name)
+            .ok_or_else(|| anyhow!("no weight `{name}`"))?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("weight `{name}` not f32: {e:?}"))
+    }
+
+    pub fn total_parameters(&self) -> usize {
+        self.literals.iter().map(|l| l.element_count()).sum()
+    }
+}

@@ -1,0 +1,184 @@
+//! k-means (Lloyd's algorithm, k-means++ seeding) for the latent-locality
+//! analysis of Fig. 3 / Fig. 9: clustering hidden states and measuring how
+//! spatially coherent the clusters are across blocks and denoising steps.
+
+use crate::util::Pcg64;
+
+pub struct KMeans {
+    pub centroids: Vec<f32>, // (k, d)
+    pub assignments: Vec<usize>,
+    pub k: usize,
+    pub d: usize,
+    pub inertia: f32,
+}
+
+fn dist2(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// Cluster `n` points of dim `d` into `k` clusters.
+pub fn kmeans(x: &[f32], n: usize, d: usize, k: usize, iters: usize, rng: &mut Pcg64) -> KMeans {
+    assert_eq!(x.len(), n * d);
+    assert!(k >= 1 && k <= n);
+
+    // k-means++ seeding.
+    let mut centroids = vec![0.0f32; k * d];
+    let first = rng.below(n);
+    centroids[..d].copy_from_slice(&x[first * d..(first + 1) * d]);
+    let mut min_d2: Vec<f32> = (0..n)
+        .map(|i| dist2(&x[i * d..(i + 1) * d], &centroids[..d]))
+        .collect();
+    for c in 1..k {
+        let total: f32 = min_d2.iter().sum();
+        let mut pick = n - 1;
+        if total > 0.0 {
+            let mut target = rng.next_f32() * total;
+            for (i, w) in min_d2.iter().enumerate() {
+                target -= w;
+                if target <= 0.0 {
+                    pick = i;
+                    break;
+                }
+            }
+        } else {
+            pick = rng.below(n);
+        }
+        centroids[c * d..(c + 1) * d].copy_from_slice(&x[pick * d..(pick + 1) * d]);
+        for i in 0..n {
+            let dd = dist2(&x[i * d..(i + 1) * d], &centroids[c * d..(c + 1) * d]);
+            if dd < min_d2[i] {
+                min_d2[i] = dd;
+            }
+        }
+    }
+
+    let mut assignments = vec![0usize; n];
+    let mut inertia = 0.0;
+    for _ in 0..iters {
+        // Assign.
+        inertia = 0.0;
+        for i in 0..n {
+            let p = &x[i * d..(i + 1) * d];
+            let mut best = 0;
+            let mut bd = f32::INFINITY;
+            for c in 0..k {
+                let dd = dist2(p, &centroids[c * d..(c + 1) * d]);
+                if dd < bd {
+                    bd = dd;
+                    best = c;
+                }
+            }
+            assignments[i] = best;
+            inertia += bd;
+        }
+        // Update.
+        let mut sums = vec![0.0f32; k * d];
+        let mut counts = vec![0usize; k];
+        for i in 0..n {
+            let c = assignments[i];
+            counts[c] += 1;
+            for j in 0..d {
+                sums[c * d + j] += x[i * d + j];
+            }
+        }
+        for c in 0..k {
+            if counts[c] > 0 {
+                for j in 0..d {
+                    centroids[c * d + j] = sums[c * d + j] / counts[c] as f32;
+                }
+            }
+        }
+    }
+
+    KMeans {
+        centroids,
+        assignments,
+        k,
+        d,
+        inertia,
+    }
+}
+
+/// Spatial-coherence score for cluster labels on an (h x w) token grid:
+/// the fraction of 4-neighbour edges whose endpoints share a label.
+/// Random labels with k clusters score ~1/k; a blocky segmentation (the
+/// paper's Fig. 3 claim) scores much higher.
+pub fn spatial_coherence(labels: &[usize], h: usize, w: usize) -> f64 {
+    assert_eq!(labels.len(), h * w);
+    let mut same = 0usize;
+    let mut total = 0usize;
+    for r in 0..h {
+        for c in 0..w {
+            if c + 1 < w {
+                total += 1;
+                if labels[r * w + c] == labels[r * w + c + 1] {
+                    same += 1;
+                }
+            }
+            if r + 1 < h {
+                total += 1;
+                if labels[r * w + c] == labels[(r + 1) * w + c] {
+                    same += 1;
+                }
+            }
+        }
+    }
+    same as f64 / total.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn separates_two_blobs() {
+        let mut rng = Pcg64::new(0);
+        let mut pts = vec![];
+        for _ in 0..50 {
+            pts.push(rng.normal() * 0.1 + 5.0);
+            pts.push(rng.normal() * 0.1 + 5.0);
+        }
+        for _ in 0..50 {
+            pts.push(rng.normal() * 0.1 - 5.0);
+            pts.push(rng.normal() * 0.1 - 5.0);
+        }
+        let km = kmeans(&pts, 100, 2, 2, 10, &mut rng);
+        let first = km.assignments[0];
+        assert!(km.assignments[..50].iter().all(|&a| a == first));
+        assert!(km.assignments[50..].iter().all(|&a| a != first));
+    }
+
+    #[test]
+    fn inertia_decreases_with_k() {
+        let mut rng = Pcg64::new(1);
+        let pts: Vec<f32> = rng.normal_vec(200 * 3);
+        let i2 = kmeans(&pts, 200, 3, 2, 15, &mut rng.fork(1)).inertia;
+        let i8 = kmeans(&pts, 200, 3, 8, 15, &mut rng.fork(2)).inertia;
+        assert!(i8 < i2);
+    }
+
+    #[test]
+    fn coherence_of_blocky_vs_random() {
+        // Left half label 0, right half label 1 -> high coherence.
+        let mut blocky = vec![0usize; 64];
+        for r in 0..8 {
+            for c in 4..8 {
+                blocky[r * 8 + c] = 1;
+            }
+        }
+        let cb = spatial_coherence(&blocky, 8, 8);
+        let mut rng = Pcg64::new(2);
+        let random: Vec<usize> = (0..64).map(|_| rng.below(2)).collect();
+        let cr = spatial_coherence(&random, 8, 8);
+        assert!(cb > 0.9, "blocky {cb}");
+        assert!(cb > cr, "blocky {cb} vs random {cr}");
+    }
+
+    #[test]
+    fn k_equals_n_zero_inertia() {
+        let pts = vec![0.0, 0.0, 1.0, 1.0, 2.0, 2.0];
+        let mut rng = Pcg64::new(3);
+        let km = kmeans(&pts, 3, 2, 3, 5, &mut rng);
+        assert!(km.inertia < 1e-9);
+    }
+}

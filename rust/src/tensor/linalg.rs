@@ -1,0 +1,250 @@
+//! Small dense linear algebra: Cholesky, symmetric solve, Moore–Penrose
+//! pseudo-inverse for the unmerge ablation (Table 7).
+
+#[cfg(test)]
+use super::ops::matmul;
+use super::ops::{matmul_at, matmul_bt};
+
+/// Cholesky factorization of an SPD matrix (n x n): A = L L^T.
+/// Returns the lower-triangular factor, or None if not positive-definite.
+pub fn cholesky(a: &[f32], n: usize) -> Option<Vec<f32>> {
+    assert_eq!(a.len(), n * n);
+    let mut l = vec![0.0f32; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a[i * n + j];
+            for k in 0..j {
+                s -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return None;
+                }
+                l[i * n + j] = s.sqrt();
+            } else {
+                l[i * n + j] = s / l[j * n + j];
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve A X = B for SPD A (n x n) and B (n x m) via Cholesky.
+pub fn solve_spd(a: &[f32], b: &[f32], n: usize, m: usize) -> Option<Vec<f32>> {
+    let l = cholesky(a, n)?;
+    let mut x = b.to_vec();
+    // Forward: L y = b
+    for col in 0..m {
+        for i in 0..n {
+            let mut s = x[i * m + col];
+            for k in 0..i {
+                s -= l[i * n + k] * x[k * m + col];
+            }
+            x[i * m + col] = s / l[i * n + i];
+        }
+        // Backward: L^T x = y
+        for i in (0..n).rev() {
+            let mut s = x[i * m + col];
+            for k in (i + 1)..n {
+                s -= l[k * n + i] * x[k * m + col];
+            }
+            x[i * m + col] = s / l[i * n + i];
+        }
+    }
+    Some(x)
+}
+
+/// Pseudo-inverse applied to a RHS: given the merge operator `a` (k x n)
+/// with full row rank and a module output `y` (k x d), compute
+/// `A^+ y = A^T (A A^T)^{-1} y` (the exact unmerge of Sec. 4.2.2).
+///
+/// Ridge `eps` keeps the Gram matrix SPD when rows nearly coincide.
+pub fn pinv_apply(a: &[f32], y: &[f32], k: usize, n: usize, d: usize, eps: f32) -> Vec<f32> {
+    assert_eq!(a.len(), k * n);
+    assert_eq!(y.len(), k * d);
+    // Gram = A A^T (k x k), SPD for full-row-rank A.
+    let mut gram = matmul_bt(a, a, k, n, k);
+    for i in 0..k {
+        gram[i * k + i] += eps;
+    }
+    let z = solve_spd(&gram, y, k, d).expect("gram not SPD even with ridge");
+    // A^T z: (n x k) @ (k x d) -- computed as matmul_at(a: k x n).
+    matmul_at(&a.to_vec(), &z, k, n, d)
+}
+
+/// Frobenius distance between two equally-sized matrices.
+pub fn fro_dist(a: &[f32], b: &[f32]) -> f32 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y) * (x - y))
+        .sum::<f32>()
+        .sqrt()
+}
+
+/// Matrix square root of a small SPD matrix via Denman–Beavers iteration
+/// (used by the FID-proxy Fréchet distance).
+pub fn sqrtm_spd(a: &[f32], n: usize, iters: usize) -> Vec<f32> {
+    let mut y = a.to_vec();
+    let mut z = identity(n);
+    for _ in 0..iters {
+        let y_inv = invert(&y, n).unwrap_or_else(|| identity(n));
+        let z_inv = invert(&z, n).unwrap_or_else(|| identity(n));
+        let y_next: Vec<f32> = y
+            .iter()
+            .zip(&z_inv)
+            .map(|(a, b)| 0.5 * (a + b))
+            .collect();
+        let z_next: Vec<f32> = z
+            .iter()
+            .zip(&y_inv)
+            .map(|(a, b)| 0.5 * (a + b))
+            .collect();
+        y = y_next;
+        z = z_next;
+    }
+    y
+}
+
+pub fn identity(n: usize) -> Vec<f32> {
+    let mut i = vec![0.0f32; n * n];
+    for k in 0..n {
+        i[k * n + k] = 1.0;
+    }
+    i
+}
+
+/// Gauss-Jordan inverse with partial pivoting; None if singular.
+pub fn invert(a: &[f32], n: usize) -> Option<Vec<f32>> {
+    let mut m = a.to_vec();
+    let mut inv = identity(n);
+    for col in 0..n {
+        // Pivot.
+        let mut piv = col;
+        for r in (col + 1)..n {
+            if m[r * n + col].abs() > m[piv * n + col].abs() {
+                piv = r;
+            }
+        }
+        if m[piv * n + col].abs() < 1e-12 {
+            return None;
+        }
+        if piv != col {
+            for j in 0..n {
+                m.swap(col * n + j, piv * n + j);
+                inv.swap(col * n + j, piv * n + j);
+            }
+        }
+        let p = m[col * n + col];
+        for j in 0..n {
+            m[col * n + j] /= p;
+            inv[col * n + j] /= p;
+        }
+        for r in 0..n {
+            if r == col {
+                continue;
+            }
+            let f = m[r * n + col];
+            if f == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                m[r * n + j] -= f * m[col * n + j];
+                inv[r * n + j] -= f * inv[col * n + j];
+            }
+        }
+    }
+    Some(inv)
+}
+
+/// Trace of (n x n).
+pub fn trace(a: &[f32], n: usize) -> f32 {
+    (0..n).map(|i| a[i * n + i]).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn random_spd(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::new(seed);
+        let b: Vec<f32> = rng.normal_vec(n * n);
+        let mut a = matmul_bt(&b, &b, n, n, n);
+        for i in 0..n {
+            a[i * n + i] += n as f32;
+        }
+        a
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let a = random_spd(5, 1);
+        let l = cholesky(&a, 5).unwrap();
+        let lt: Vec<f32> = super::super::ops::transpose(&l, 5, 5);
+        let back = matmul(&l, &lt, 5, 5, 5);
+        assert!(fro_dist(&a, &back) < 1e-3 * fro_dist(&a, &vec![0.0; 25]));
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = vec![1.0, 2.0, 2.0, 1.0]; // eigenvalues 3, -1
+        assert!(cholesky(&a, 2).is_none());
+    }
+
+    #[test]
+    fn solve_spd_matches_direct() {
+        let a = random_spd(4, 2);
+        let b = vec![1.0, 0.0, 2.0, -1.0];
+        let x = solve_spd(&a, &b, 4, 1).unwrap();
+        let back = matmul(&a, &x, 4, 4, 1);
+        for (u, v) in back.iter().zip(&b) {
+            assert!((u - v).abs() < 1e-3, "{u} vs {v}");
+        }
+    }
+
+    #[test]
+    fn invert_matches_identity() {
+        let a = random_spd(4, 3);
+        let inv = invert(&a, 4).unwrap();
+        let id = matmul(&a, &inv, 4, 4, 4);
+        assert!(fro_dist(&id, &identity(4)) < 1e-3);
+    }
+
+    #[test]
+    fn invert_singular_none() {
+        let a = vec![1.0, 2.0, 2.0, 4.0];
+        assert!(invert(&a, 2).is_none());
+    }
+
+    #[test]
+    fn pinv_apply_exact_for_orthonormal_rows() {
+        // A with orthonormal rows: pinv == transpose, roundtrip exact.
+        let a = vec![1.0, 0.0, 0.0, 0.0, 1.0, 0.0]; // 2x3
+        let y = vec![5.0, 7.0]; // k x d = 2x1
+        let x = pinv_apply(&a, &y, 2, 3, 1, 0.0);
+        assert_eq!(x, vec![5.0, 7.0, 0.0]);
+    }
+
+    #[test]
+    fn pinv_apply_least_squares() {
+        // Merge two identical tokens: A = [0.5 0.5]; y = 3 -> x = [3, 3]
+        let a = vec![0.5, 0.5];
+        let x = pinv_apply(&a, &[3.0], 1, 2, 1, 0.0);
+        assert!((x[0] - 3.0).abs() < 1e-5 && (x[1] - 3.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn sqrtm_squares_back() {
+        let a = random_spd(3, 4);
+        let s = sqrtm_spd(&a, 3, 30);
+        let back = matmul(&s, &s, 3, 3, 3);
+        let scale = fro_dist(&a, &vec![0.0; 9]);
+        assert!(fro_dist(&a, &back) < 1e-2 * scale, "{}", fro_dist(&a, &back));
+    }
+
+    #[test]
+    fn trace_sums_diagonal() {
+        let a = vec![1.0, 9.0, 9.0, 2.0];
+        assert_eq!(trace(&a, 2), 3.0);
+    }
+}

@@ -1,0 +1,219 @@
+//! Host tensor substrate: row-major f32 tensors plus the dense kernels the
+//! ToMA host reference, the baselines and the quality metrics are built on.
+
+pub mod kmeans;
+pub mod linalg;
+pub mod ops;
+
+use std::fmt;
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    pub data: Vec<f32>,
+    pub shape: Vec<usize>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}", self.shape)
+    }
+}
+
+impl Tensor {
+    pub fn new(data: Vec<f32>, shape: &[usize]) -> Self {
+        assert_eq!(
+            data.len(),
+            shape.iter().product::<usize>(),
+            "data/shape mismatch: {} vs {:?}",
+            data.len(),
+            shape
+        );
+        Tensor {
+            data,
+            shape: shape.to_vec(),
+        }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor {
+            data: vec![0.0; shape.iter().product()],
+            shape: shape.to_vec(),
+        }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        Tensor {
+            data: vec![v; shape.iter().product()],
+            shape: shape.to_vec(),
+        }
+    }
+
+    pub fn randn(rng: &mut crate::util::Pcg64, shape: &[usize]) -> Self {
+        Tensor {
+            data: rng.normal_vec(shape.iter().product()),
+            shape: shape.to_vec(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Size of the given dimension (negative indices from the back).
+    pub fn dim(&self, i: isize) -> usize {
+        let n = self.shape.len() as isize;
+        let i = if i < 0 { n + i } else { i } as usize;
+        self.shape[i]
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(
+            self.data.len(),
+            shape.iter().product::<usize>(),
+            "reshape {:?} -> {:?}",
+            self.shape,
+            shape
+        );
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// View as (rows, cols) where cols is the last dim.
+    pub fn as_2d(&self) -> (usize, usize) {
+        let cols = *self.shape.last().expect("scalar tensor");
+        (self.data.len() / cols, cols)
+    }
+
+    /// Row `i` of the flattened (rows, cols) view.
+    pub fn row(&self, i: usize) -> &[f32] {
+        let (_, c) = self.as_2d();
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let (_, c) = self.as_2d();
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    /// Leading-dim slice: self[i] for a tensor of ndim >= 2.
+    pub fn index(&self, i: usize) -> Tensor {
+        let inner: usize = self.shape[1..].iter().product();
+        Tensor::new(
+            self.data[i * inner..(i + 1) * inner].to_vec(),
+            &self.shape[1..],
+        )
+    }
+
+    pub fn map(mut self, f: impl Fn(f32) -> f32) -> Self {
+        for v in &mut self.data {
+            *v = f(*v);
+        }
+        self
+    }
+
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a + b)
+            .collect();
+        Tensor::new(data, &self.shape)
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a - b)
+            .collect();
+        Tensor::new(data, &self.shape)
+    }
+
+    pub fn scale(mut self, s: f32) -> Tensor {
+        for v in &mut self.data {
+            *v *= s;
+        }
+        self
+    }
+
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().sum::<f32>() / self.data.len() as f32
+    }
+
+    pub fn abs_mean(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().map(|v| v.abs()).sum::<f32>() / self.data.len() as f32
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, v| m.max(v.abs()))
+    }
+
+    pub fn all_finite(&self) -> bool {
+        self.data.iter().all(|v| v.is_finite())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn construct_and_reshape() {
+        let t = Tensor::new((0..24).map(|x| x as f32).collect(), &[2, 3, 4]);
+        assert_eq!(t.ndim(), 3);
+        assert_eq!(t.dim(-1), 4);
+        let t = t.reshape(&[6, 4]);
+        assert_eq!(t.as_2d(), (6, 4));
+        assert_eq!(t.row(1), &[4.0, 5.0, 6.0, 7.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        Tensor::new(vec![1.0; 5], &[2, 3]);
+    }
+
+    #[test]
+    fn index_slices_leading_dim() {
+        let t = Tensor::new((0..12).map(|x| x as f32).collect(), &[3, 4]);
+        assert_eq!(t.index(2).data, vec![8.0, 9.0, 10.0, 11.0]);
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = Tensor::full(&[2, 2], 2.0);
+        let b = Tensor::full(&[2, 2], 3.0);
+        assert_eq!(a.add(&b).data, vec![5.0; 4]);
+        assert_eq!(b.sub(&a).data, vec![1.0; 4]);
+        assert_eq!(a.clone().scale(2.0).data, vec![4.0; 4]);
+        assert!((a.mean() - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn randn_stats() {
+        let mut rng = Pcg64::new(0);
+        let t = Tensor::randn(&mut rng, &[100, 100]);
+        assert!(t.mean().abs() < 0.05);
+        assert!(t.all_finite());
+    }
+}

@@ -1,0 +1,358 @@
+//! Dense kernels on row-major slices: GEMM, softmax, layernorm, gather /
+//! scatter, argsort. The ToMA host path (Table 6 micro-benchmarks) and the
+//! pure-Rust model forward are built from these.
+
+use super::Tensor;
+
+/// C (m x n) = A (m x k) @ B (k x n), blocked over k for cache locality.
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    matmul_into(a, b, &mut c, m, k, n);
+    c
+}
+
+/// GEMM into a caller-provided buffer (hot path: no allocation).
+pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k, "A shape");
+    assert_eq!(b.len(), k * n, "B shape");
+    assert_eq!(c.len(), m * n, "C shape");
+    c.fill(0.0);
+    const KB: usize = 64;
+    for kb in (0..k).step_by(KB) {
+        let kend = (kb + KB).min(k);
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for kk in kb..kend {
+                let av = arow[kk];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[kk * n..(kk + 1) * n];
+                for (cv, bv) in crow.iter_mut().zip(brow) {
+                    *cv += av * bv;
+                }
+            }
+        }
+    }
+}
+
+/// C = A @ B^T where A is (m x k), B is (n x k).
+pub fn matmul_bt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), n * k);
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut s = 0.0f32;
+            for (x, y) in arow.iter().zip(brow) {
+                s += x * y;
+            }
+            c[i * n + j] = s;
+        }
+    }
+    c
+}
+
+/// C = A^T @ B where A is (k x m), B is (k x n) -> (m x n).
+pub fn matmul_at(a: &[f32], b: &[f32], k: usize, m: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), k * m);
+    assert_eq!(b.len(), k * n);
+    let mut c = vec![0.0f32; m * n];
+    for kk in 0..k {
+        let arow = &a[kk * m..(kk + 1) * m];
+        let brow = &b[kk * n..(kk + 1) * n];
+        for i in 0..m {
+            let av = arow[i];
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (cv, bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+    c
+}
+
+pub fn transpose(a: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; rows * cols];
+    for i in 0..rows {
+        for j in 0..cols {
+            out[j * rows + i] = a[i * cols + j];
+        }
+    }
+    out
+}
+
+/// In-place softmax over each row of an (rows x cols) matrix.
+pub fn softmax_rows(x: &mut [f32], rows: usize, cols: usize) {
+    for i in 0..rows {
+        let row = &mut x[i * cols..(i + 1) * cols];
+        let mx = row.iter().fold(f32::NEG_INFINITY, |m, v| m.max(*v));
+        let mut z = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - mx).exp();
+            z += *v;
+        }
+        let inv = 1.0 / z.max(1e-20);
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// In-place softmax over each *column* of an (rows x cols) matrix — the
+/// paper's column-wise merge softmax (Sec. 4.2.1).
+pub fn softmax_cols(x: &mut [f32], rows: usize, cols: usize) {
+    for j in 0..cols {
+        let mut mx = f32::NEG_INFINITY;
+        for i in 0..rows {
+            mx = mx.max(x[i * cols + j]);
+        }
+        let mut z = 0.0f32;
+        for i in 0..rows {
+            let v = (x[i * cols + j] - mx).exp();
+            x[i * cols + j] = v;
+            z += v;
+        }
+        let inv = 1.0 / z.max(1e-20);
+        for i in 0..rows {
+            x[i * cols + j] *= inv;
+        }
+    }
+}
+
+/// Row-normalize to sum 1 (the A -> A~ step).
+pub fn normalize_rows(x: &mut [f32], rows: usize, cols: usize) {
+    for i in 0..rows {
+        let row = &mut x[i * cols..(i + 1) * cols];
+        let s: f32 = row.iter().sum();
+        let inv = 1.0 / (s + 1e-8);
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// L2-normalize each row; zero rows stay zero.
+pub fn l2_normalize_rows(x: &mut [f32], rows: usize, cols: usize) {
+    for i in 0..rows {
+        let row = &mut x[i * cols..(i + 1) * cols];
+        let n: f32 = row.iter().map(|v| v * v).sum::<f32>().sqrt();
+        let inv = 1.0 / (n + 1e-8);
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// Layer norm over the last dim with scale `g` and bias `b`.
+pub fn layernorm(x: &mut [f32], rows: usize, cols: usize, g: &[f32], b: &[f32]) {
+    assert_eq!(g.len(), cols);
+    assert_eq!(b.len(), cols);
+    for i in 0..rows {
+        let row = &mut x[i * cols..(i + 1) * cols];
+        let mu: f32 = row.iter().sum::<f32>() / cols as f32;
+        let var: f32 =
+            row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / cols as f32;
+        let inv = 1.0 / (var + 1e-6).sqrt();
+        for (j, v) in row.iter_mut().enumerate() {
+            *v = (*v - mu) * inv * g[j] + b[j];
+        }
+    }
+}
+
+pub fn gelu(x: &mut [f32]) {
+    // tanh approximation (matches jax.nn.gelu default).
+    for v in x.iter_mut() {
+        let x3 = *v * *v * *v;
+        let inner = 0.797_884_6 * (*v + 0.044_715 * x3);
+        *v = 0.5 * *v * (1.0 + inner.tanh());
+    }
+}
+
+pub fn silu(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v /= 1.0 + (-*v).exp();
+    }
+}
+
+/// Gather rows: out[i] = x[idx[i]].
+pub fn gather_rows(x: &[f32], cols: usize, idx: &[usize]) -> Vec<f32> {
+    let mut out = vec![0.0f32; idx.len() * cols];
+    for (i, &j) in idx.iter().enumerate() {
+        out[i * cols..(i + 1) * cols].copy_from_slice(&x[j * cols..(j + 1) * cols]);
+    }
+    out
+}
+
+/// Scatter-add rows: out[idx[i]] += x[i]. `out` has `rows` rows.
+pub fn scatter_add_rows(x: &[f32], cols: usize, idx: &[usize], out: &mut [f32]) {
+    for (i, &j) in idx.iter().enumerate() {
+        let src = &x[i * cols..(i + 1) * cols];
+        let dst = &mut out[j * cols..(j + 1) * cols];
+        for (d, s) in dst.iter_mut().zip(src) {
+            *d += s;
+        }
+    }
+}
+
+/// Indices that sort `xs` descending (the ToMe hot-path sort).
+pub fn argsort_desc(xs: &[f32]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&a, &b| xs[b].partial_cmp(&xs[a]).unwrap_or(std::cmp::Ordering::Equal));
+    idx
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, v) in xs.iter().enumerate() {
+        if *v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Batched GEMM over matching leading dims: (g, m, k) @ (g, k, n).
+pub fn bmm(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.ndim(), 3);
+    assert_eq!(b.ndim(), 3);
+    let (g, m, k) = (a.shape[0], a.shape[1], a.shape[2]);
+    let (g2, k2, n) = (b.shape[0], b.shape[1], b.shape[2]);
+    assert_eq!(g, g2);
+    assert_eq!(k, k2);
+    let mut out = Tensor::zeros(&[g, m, n]);
+    for i in 0..g {
+        let c = matmul(
+            &a.data[i * m * k..(i + 1) * m * k],
+            &b.data[i * k * n..(i + 1) * k * n],
+            m,
+            k,
+            n,
+        );
+        out.data[i * m * n..(i + 1) * m * n].copy_from_slice(&c);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small() {
+        // [[1,2],[3,4]] @ [[1,0],[0,1]] = same
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let i = vec![1.0, 0.0, 0.0, 1.0];
+        assert_eq!(matmul(&a, &i, 2, 2, 2), a);
+        // [[1,2],[3,4]] @ [[5],[6]] = [[17],[39]]
+        let b = vec![5.0, 6.0];
+        assert_eq!(matmul(&a, &b, 2, 2, 1), vec![17.0, 39.0]);
+    }
+
+    #[test]
+    fn matmul_bt_matches_transpose() {
+        let a = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]; // 2x3
+        let b = vec![1.0, 0.0, 1.0, 2.0, 1.0, 0.0]; // 2x3 (as n x k)
+        let bt = transpose(&b, 2, 3); // 3x2
+        assert_eq!(matmul_bt(&a, &b, 2, 3, 2), matmul(&a, &bt, 2, 3, 2));
+    }
+
+    #[test]
+    fn matmul_at_matches_transpose() {
+        let a = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]; // 3x2 (k=3, m=2)
+        let b = vec![1.0, 1.0, 2.0, 0.0, 0.0, 1.0]; // 3x2 (k=3, n=2)
+        let at = transpose(&a, 3, 2); // 2x3
+        assert_eq!(matmul_at(&a, &b, 3, 2, 2), matmul(&at, &b, 2, 3, 2));
+    }
+
+    #[test]
+    fn softmax_rows_sums_to_one() {
+        let mut x = vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0];
+        softmax_rows(&mut x, 2, 3);
+        for r in 0..2 {
+            let s: f32 = x[r * 3..(r + 1) * 3].iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+        assert!(x[2] > x[1] && x[1] > x[0]);
+    }
+
+    #[test]
+    fn softmax_cols_sums_to_one() {
+        let mut x = vec![1.0, 5.0, 2.0, -1.0, 3.0, 0.5];
+        softmax_cols(&mut x, 2, 3);
+        for c in 0..3 {
+            let s = x[c] + x[3 + c];
+            assert!((s - 1.0).abs() < 1e-5, "col {c}: {s}");
+        }
+    }
+
+    #[test]
+    fn layernorm_zero_mean_unit_var() {
+        let mut x = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+        let g = vec![1.0; 4];
+        let b = vec![0.0; 4];
+        layernorm(&mut x, 2, 4, &g, &b);
+        for r in 0..2 {
+            let row = &x[r * 4..(r + 1) * 4];
+            let mu: f32 = row.iter().sum::<f32>() / 4.0;
+            let var: f32 = row.iter().map(|v| (v - mu).powi(2)).sum::<f32>() / 4.0;
+            assert!(mu.abs() < 1e-5);
+            assert!((var - 1.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let x = vec![0.0, 0.0, 1.0, 1.0, 2.0, 2.0];
+        let g = gather_rows(&x, 2, &[2, 0]);
+        assert_eq!(g, vec![2.0, 2.0, 0.0, 0.0]);
+        let mut out = vec![0.0; 6];
+        scatter_add_rows(&g, 2, &[1, 1], &mut out);
+        assert_eq!(out, vec![0.0, 0.0, 2.0, 2.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn argsort_desc_orders() {
+        assert_eq!(argsort_desc(&[0.1, 0.9, 0.5]), vec![1, 2, 0]);
+        assert_eq!(argmax(&[0.1, 0.9, 0.5]), 1);
+    }
+
+    #[test]
+    fn gelu_reference_points() {
+        let mut x = vec![0.0, 1.0, -1.0];
+        gelu(&mut x);
+        assert!(x[0].abs() < 1e-6);
+        assert!((x[1] - 0.8412).abs() < 1e-3);
+        assert!((x[2] + 0.1588).abs() < 1e-3);
+    }
+
+    #[test]
+    fn bmm_batches_independent() {
+        let a = Tensor::new(vec![1.0, 0.0, 0.0, 1.0, 2.0, 0.0, 0.0, 2.0], &[2, 2, 2]);
+        let b = Tensor::new(vec![1.0, 2.0, 3.0, 4.0, 1.0, 2.0, 3.0, 4.0], &[2, 2, 2]);
+        let c = bmm(&a, &b);
+        assert_eq!(&c.data[..4], &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(&c.data[4..], &[2.0, 4.0, 6.0, 8.0]);
+    }
+
+    #[test]
+    fn normalize_rows_unit_sum() {
+        let mut x = vec![1.0, 3.0, 2.0, 2.0];
+        normalize_rows(&mut x, 2, 2);
+        assert!((x[0] + x[1] - 1.0).abs() < 1e-5);
+        assert!((x[0] - 0.25).abs() < 1e-5);
+    }
+
+    #[test]
+    fn l2_normalize_rows_unit_norm() {
+        let mut x = vec![3.0, 4.0];
+        l2_normalize_rows(&mut x, 1, 2);
+        assert!((x[0] - 0.6).abs() < 1e-5 && (x[1] - 0.8).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,155 @@
+//! Attention-based merge (Sec. 4.2.1): the dense-GEMM formulation that is
+//! the paper's core systems contribution.
+//!
+//! ```text
+//! A  = softmax_col(D_n X_n^T / tau)     (D x N)
+//! A~ = row_normalize(A)
+//! X_merged = A~ X                        (D x d) — one GEMM
+//! ```
+//!
+//! Contrast with `baselines::tome`, which needs argsort + gather +
+//! scatter-add for the same effect (Table 6).
+
+use crate::tensor::ops::{
+    gather_rows, l2_normalize_rows, matmul, normalize_rows, softmax_cols,
+};
+
+/// The merge operator for one region: both the column-softmax attention `a`
+/// and the row-normalized merge weights `a_tilde`, each (k x n) row-major.
+#[derive(Clone, Debug)]
+pub struct MergeWeights {
+    pub a: Vec<f32>,
+    pub a_tilde: Vec<f32>,
+    pub k: usize,
+    pub n: usize,
+}
+
+/// Build merge weights from features x (n x d) and destination indices.
+pub fn build_merge_weights(x: &[f32], n: usize, d: usize, idx: &[usize], tau: f32) -> MergeWeights {
+    assert_eq!(x.len(), n * d);
+    let k = idx.len();
+    let mut xn = x.to_vec();
+    l2_normalize_rows(&mut xn, n, d);
+    let dn = gather_rows(&xn, d, idx);
+    // logits = D_n X_n^T / tau  (k x n)
+    let mut a = crate::tensor::ops::matmul_bt(&dn, &xn, k, d, n);
+    for v in &mut a {
+        *v /= tau;
+    }
+    softmax_cols(&mut a, k, n);
+    let mut a_tilde = a.clone();
+    normalize_rows(&mut a_tilde, k, n);
+    MergeWeights { a, a_tilde, k, n }
+}
+
+/// X_merged = A~ X: (k x n) @ (n x d) — the single-GEMM merge.
+pub fn merge(w: &MergeWeights, x: &[f32], d: usize) -> Vec<f32> {
+    assert_eq!(x.len(), w.n * d);
+    matmul(&w.a_tilde, x, w.k, w.n, d)
+}
+
+/// Merge into a caller-provided buffer (allocation-free hot path).
+pub fn merge_into(w: &MergeWeights, x: &[f32], d: usize, out: &mut [f32]) {
+    crate::tensor::ops::matmul_into(&w.a_tilde, x, out, w.k, w.n, d);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::toma::facility::{fl_select, similarity_matrix};
+    use crate::util::{prop, Pcg64};
+
+    fn setup(n: usize, d: usize, k: usize, tau: f32, seed: u64) -> (Vec<f32>, MergeWeights) {
+        let x = Pcg64::new(seed).normal_vec(n * d);
+        let sim = similarity_matrix(&x, n, d);
+        let idx = fl_select(&sim, n, k);
+        let w = build_merge_weights(&x, n, d, &idx, tau);
+        (x, w)
+    }
+
+    #[test]
+    fn columns_sum_to_one() {
+        let (_, w) = setup(20, 8, 5, 0.1, 0);
+        for j in 0..w.n {
+            let s: f32 = (0..w.k).map(|i| w.a[i * w.n + j]).sum();
+            assert!((s - 1.0).abs() < 1e-4, "col {j}: {s}");
+        }
+    }
+
+    #[test]
+    fn rows_sum_to_one() {
+        let (_, w) = setup(20, 8, 5, 0.1, 1);
+        for i in 0..w.k {
+            let s: f32 = w.a_tilde[i * w.n..(i + 1) * w.n].iter().sum();
+            assert!((s - 1.0).abs() < 1e-4, "row {i}: {s}");
+        }
+    }
+
+    #[test]
+    fn weights_nonnegative() {
+        let (_, w) = setup(16, 4, 4, 0.1, 2);
+        assert!(w.a.iter().all(|v| *v >= 0.0));
+        assert!(w.a_tilde.iter().all(|v| *v >= 0.0));
+    }
+
+    #[test]
+    fn merged_tokens_are_convex_combinations() {
+        let (x, w) = setup(16, 4, 4, 0.1, 3);
+        let xm = merge(&w, &x, 4);
+        for c in 0..4 {
+            let lo = (0..16).map(|i| x[i * 4 + c]).fold(f32::INFINITY, f32::min);
+            let hi = (0..16)
+                .map(|i| x[i * 4 + c])
+                .fold(f32::NEG_INFINITY, f32::max);
+            for r in 0..4 {
+                let v = xm[r * 4 + c];
+                assert!(v >= lo - 1e-4 && v <= hi + 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn sharp_tau_recovers_destinations() {
+        // tau -> 0 with k == n: A~ ~ I, so merged ~ original tokens.
+        let x = Pcg64::new(4).normal_vec(10 * 6);
+        let idx: Vec<usize> = (0..10).collect();
+        let w = build_merge_weights(&x, 10, 6, &idx, 0.005);
+        let xm = merge(&w, &x, 6);
+        for (a, b) in xm.iter().zip(&x) {
+            assert!((a - b).abs() < 0.05, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn merge_into_matches_merge() {
+        let (x, w) = setup(20, 8, 5, 0.1, 5);
+        let out1 = merge(&w, &x, 8);
+        let mut out2 = vec![0.0; 5 * 8];
+        merge_into(&w, &x, 8, &mut out2);
+        assert_eq!(out1, out2);
+    }
+
+    #[test]
+    fn prop_merge_invariants() {
+        prop::check("merge weights", 20, |g| {
+            let n = g.usize_in(4, 24);
+            let d = g.usize_in(2, 10);
+            let k = g.usize_in(1, n);
+            let tau = *g.pick(&[0.05f32, 0.1, 0.5, 1.0]);
+            let x = g.normal_vec(n * d);
+            let sim = similarity_matrix(&x, n, d);
+            let idx = fl_select(&sim, n, k);
+            let w = build_merge_weights(&x, n, d, &idx, tau);
+            for j in 0..n {
+                let s: f32 = (0..k).map(|i| w.a[i * n + j]).sum();
+                prop::assert_prop((s - 1.0).abs() < 1e-3, "col softmax");
+            }
+            for i in 0..k {
+                let s: f32 = w.a_tilde[i * n..(i + 1) * n].iter().sum();
+                prop::assert_prop((s - 1.0).abs() < 1e-3, "row norm");
+            }
+            let xm = merge(&w, &x, d);
+            prop::assert_prop(xm.iter().all(|v| v.is_finite()), "finite");
+        });
+    }
+}

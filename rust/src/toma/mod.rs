@@ -1,0 +1,22 @@
+//! Host reference of the paper's operators (Sec. 4): facility-location
+//! destination selection, attention-based merge, transpose / pseudo-inverse
+//! unmerge, and the tile/stripe region layouts.
+//!
+//! Two roles:
+//! 1. *Oracle + baseline substrate*: mirrors `python/compile/kernels/ref.py`
+//!    bit-for-bit in structure, letting integration tests cross-check the
+//!    AOT artifacts against an independent implementation.
+//! 2. *Micro-benchmark subject*: Table 6 compares this module's dense GEMM
+//!    merge against `baselines::tome`'s sort + gather/scatter merge.
+
+pub mod facility;
+pub mod merge;
+pub mod plan;
+pub mod regions;
+pub mod unmerge;
+
+pub use facility::{fl_objective, fl_select, similarity_matrix};
+pub use merge::{build_merge_weights, merge, MergeWeights};
+pub use plan::{MergePlan, ReuseSchedule};
+pub use regions::{RegionLayout, RegionMode};
+pub use unmerge::{unmerge_colsoftmax, unmerge_pinv, unmerge_transpose};

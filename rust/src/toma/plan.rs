@@ -1,0 +1,177 @@
+//! Merge plans and the reuse schedule (Sec. 4.3.2).
+//!
+//! A [`MergePlan`] bundles everything one denoising step needs to merge and
+//! unmerge: the destination indices and the flattened `A~` weights for every
+//! (batch x region) block. [`ReuseSchedule`] encodes the paper's
+//! "destinations every 10 steps, weights every 5 steps" amortization; the
+//! coordinator's plan cache consults it each step.
+
+use super::regions::RegionLayout;
+
+/// Destination indices + merge weights for one (model, ratio, layout) key.
+#[derive(Clone, Debug)]
+pub struct MergePlan {
+    /// Region-local destination indices, (groups, d_loc) flattened, where
+    /// groups = batch x regions.
+    pub idx: Vec<i32>,
+    /// Row-normalized merge weights A~, (groups, d_loc, n_loc) flattened.
+    pub a_tilde: Vec<f32>,
+    /// Column-softmax weights A (same shape) — needed only by the
+    /// colsoftmax unmerge extension; empty otherwise.
+    pub a: Vec<f32>,
+    pub groups: usize,
+    pub d_loc: usize,
+    pub n_loc: usize,
+    /// Step at which destinations were last selected.
+    pub dest_step: u64,
+    /// Step at which weights were last rebuilt.
+    pub weight_step: u64,
+}
+
+impl MergePlan {
+    pub fn merged_tokens_per_batch(&self, regions: usize) -> usize {
+        regions * self.d_loc
+    }
+
+    /// Global token ids of the destinations for batch element `b`.
+    pub fn global_destinations(&self, layout: &RegionLayout, b: usize) -> Vec<usize> {
+        let regions = layout.regions;
+        let mut out = Vec::with_capacity(regions * self.d_loc);
+        for p in 0..regions {
+            let g = b * regions + p;
+            for s in 0..self.d_loc {
+                let local = self.idx[g * self.d_loc + s] as usize;
+                out.push(layout.token_at(p, local));
+            }
+        }
+        out
+    }
+}
+
+/// When to recompute destinations / weights (Sec. 4.3.2 + Table 8).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ReuseSchedule {
+    /// Re-run destination selection every `dest_every` steps.
+    pub dest_every: u64,
+    /// Rebuild merge weights every `weight_every` steps.
+    pub weight_every: u64,
+}
+
+impl Default for ReuseSchedule {
+    fn default() -> Self {
+        // Paper default: destinations every 10, weights every 5.
+        ReuseSchedule {
+            dest_every: 10,
+            weight_every: 5,
+        }
+    }
+}
+
+/// What the plan cache must do at a given step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlanAction {
+    /// Run destination selection AND rebuild weights.
+    RefreshAll,
+    /// Keep destinations, rebuild weights only.
+    RefreshWeights,
+    /// Reuse the cached plan untouched.
+    Reuse,
+}
+
+impl ReuseSchedule {
+    pub fn every_step() -> Self {
+        ReuseSchedule {
+            dest_every: 1,
+            weight_every: 1,
+        }
+    }
+
+    /// Decide the action for `step` given the cached plan (if any).
+    pub fn action(&self, step: u64, cached: Option<&MergePlan>) -> PlanAction {
+        let plan = match cached {
+            None => return PlanAction::RefreshAll,
+            Some(p) => p,
+        };
+        if step >= plan.dest_step + self.dest_every {
+            PlanAction::RefreshAll
+        } else if step >= plan.weight_step + self.weight_every {
+            PlanAction::RefreshWeights
+        } else {
+            PlanAction::Reuse
+        }
+    }
+
+    /// Fraction of steps that run *any* recompute, for overhead accounting.
+    pub fn recompute_fraction(&self) -> f64 {
+        1.0 / self.weight_every as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::toma::regions::{RegionLayout, RegionMode};
+
+    fn plan(dest_step: u64, weight_step: u64) -> MergePlan {
+        MergePlan {
+            idx: vec![0, 2],
+            a_tilde: vec![],
+            a: vec![],
+            groups: 1,
+            d_loc: 2,
+            n_loc: 4,
+            dest_step,
+            weight_step,
+        }
+    }
+
+    #[test]
+    fn cold_cache_refreshes_all() {
+        let s = ReuseSchedule::default();
+        assert_eq!(s.action(0, None), PlanAction::RefreshAll);
+    }
+
+    #[test]
+    fn paper_schedule_10_5() {
+        let s = ReuseSchedule::default();
+        let p = plan(0, 0);
+        assert_eq!(s.action(1, Some(&p)), PlanAction::Reuse);
+        assert_eq!(s.action(4, Some(&p)), PlanAction::Reuse);
+        assert_eq!(s.action(5, Some(&p)), PlanAction::RefreshWeights);
+        let p2 = plan(0, 5);
+        assert_eq!(s.action(9, Some(&p2)), PlanAction::Reuse);
+        assert_eq!(s.action(10, Some(&p2)), PlanAction::RefreshAll);
+    }
+
+    #[test]
+    fn every_step_always_refreshes() {
+        let s = ReuseSchedule::every_step();
+        let p = plan(3, 3);
+        assert_eq!(s.action(4, Some(&p)), PlanAction::RefreshAll);
+    }
+
+    #[test]
+    fn global_destinations_map_through_layout() {
+        let layout = RegionLayout::new(RegionMode::Stripe, 2, 2, 4);
+        // 8 tokens, 2 stripes of 4; batch 1, d_loc 2, idx picks slots 1,3
+        // in region 0 and 0,2 in region 1.
+        let p = MergePlan {
+            idx: vec![1, 3, 0, 2],
+            a_tilde: vec![],
+            a: vec![],
+            groups: 2,
+            d_loc: 2,
+            n_loc: 4,
+            dest_step: 0,
+            weight_step: 0,
+        };
+        assert_eq!(p.global_destinations(&layout, 0), vec![1, 3, 4, 6]);
+        assert_eq!(p.merged_tokens_per_batch(2), 4);
+    }
+
+    #[test]
+    fn recompute_fraction() {
+        assert!((ReuseSchedule::default().recompute_fraction() - 0.2).abs() < 1e-9);
+        assert!((ReuseSchedule::every_step().recompute_fraction() - 1.0).abs() < 1e-9);
+    }
+}

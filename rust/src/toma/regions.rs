@@ -1,0 +1,221 @@
+//! Locality-aware region partitioning (Sec. 4.3.1).
+//!
+//! * `Stripe` — contiguous row groups: a pure reshape, zero data movement.
+//! * `Tile`   — 2-D windows: one permutation each way, best quality.
+//! * `Global` — single region (the default ToMA merge scope).
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RegionMode {
+    Global,
+    Stripe,
+    Tile,
+}
+
+impl RegionMode {
+    pub fn parse(s: &str) -> Option<RegionMode> {
+        match s {
+            "global" => Some(RegionMode::Global),
+            "stripe" => Some(RegionMode::Stripe),
+            "tile" => Some(RegionMode::Tile),
+            _ => None,
+        }
+    }
+}
+
+/// A concrete partition of an (h x w) token grid into `regions` parts.
+#[derive(Clone, Debug)]
+pub struct RegionLayout {
+    pub mode: RegionMode,
+    pub regions: usize,
+    pub grid_h: usize,
+    pub grid_w: usize,
+    /// token_of[p * n_loc + s] = global token id of slot s in region p.
+    token_of: Vec<usize>,
+    /// slot_of[token] = (region, slot).
+    slot_of: Vec<(usize, usize)>,
+}
+
+impl RegionLayout {
+    pub fn new(mode: RegionMode, regions: usize, grid_h: usize, grid_w: usize) -> Self {
+        let n = grid_h * grid_w;
+        let regions = if mode == RegionMode::Global { 1 } else { regions };
+        assert!(n % regions == 0, "tokens {n} not divisible by {regions}");
+        let n_loc = n / regions;
+        let mut token_of = vec![0usize; n];
+        match mode {
+            RegionMode::Global | RegionMode::Stripe => {
+                // Contiguous chunks of the row-major order.
+                for (i, t) in token_of.iter_mut().enumerate() {
+                    *t = i;
+                }
+            }
+            RegionMode::Tile => {
+                let (ty, tx, th, tw) = tile_decomposition(grid_h, grid_w, regions);
+                let mut i = 0;
+                for by in 0..ty {
+                    for bx in 0..tx {
+                        for r in 0..th {
+                            for c in 0..tw {
+                                token_of[i] = (by * th + r) * grid_w + bx * tw + c;
+                                i += 1;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        let mut slot_of = vec![(0usize, 0usize); n];
+        for p in 0..regions {
+            for s in 0..n_loc {
+                slot_of[token_of[p * n_loc + s]] = (p, s);
+            }
+        }
+        RegionLayout {
+            mode,
+            regions,
+            grid_h,
+            grid_w,
+            token_of,
+            slot_of,
+        }
+    }
+
+    pub fn tokens(&self) -> usize {
+        self.grid_h * self.grid_w
+    }
+
+    pub fn tokens_per_region(&self) -> usize {
+        self.tokens() / self.regions
+    }
+
+    /// Global token id of (region, slot).
+    pub fn token_at(&self, region: usize, slot: usize) -> usize {
+        self.token_of[region * self.tokens_per_region() + slot]
+    }
+
+    /// (region, slot) of a global token id.
+    pub fn slot_of(&self, token: usize) -> (usize, usize) {
+        self.slot_of[token]
+    }
+
+    /// Split (n, d) row-major features into (regions, n_loc, d), returned
+    /// flattened. For Global/Stripe this is a no-op copy.
+    pub fn split(&self, x: &[f32], d: usize) -> Vec<f32> {
+        let n = self.tokens();
+        assert_eq!(x.len(), n * d);
+        if self.mode != RegionMode::Tile {
+            return x.to_vec();
+        }
+        let mut out = vec![0.0f32; n * d];
+        for (i, &t) in self.token_of.iter().enumerate() {
+            out[i * d..(i + 1) * d].copy_from_slice(&x[t * d..(t + 1) * d]);
+        }
+        out
+    }
+
+    /// Inverse of [`split`].
+    pub fn join(&self, xs: &[f32], d: usize) -> Vec<f32> {
+        let n = self.tokens();
+        assert_eq!(xs.len(), n * d);
+        if self.mode != RegionMode::Tile {
+            return xs.to_vec();
+        }
+        let mut out = vec![0.0f32; n * d];
+        for (i, &t) in self.token_of.iter().enumerate() {
+            out[t * d..(t + 1) * d].copy_from_slice(&xs[i * d..(i + 1) * d]);
+        }
+        out
+    }
+}
+
+/// Most-square (tiles_y, tiles_x, tile_h, tile_w) with tiles_y*tiles_x == p.
+/// Mirrors `toma_jax.RegionSpec.tile_hw`.
+pub fn tile_decomposition(grid_h: usize, grid_w: usize, p: usize) -> (usize, usize, usize, usize) {
+    let mut best: Option<(usize, usize, usize, usize, usize)> = None;
+    for ty in 1..=p {
+        if p % ty != 0 {
+            continue;
+        }
+        let tx = p / ty;
+        if grid_h % ty != 0 || grid_w % tx != 0 {
+            continue;
+        }
+        let (th, tw) = (grid_h / ty, grid_w / tx);
+        let score = th.abs_diff(tw);
+        if best.map(|b| score < b.0).unwrap_or(true) {
+            best = Some((score, ty, tx, th, tw));
+        }
+    }
+    let (_, ty, tx, th, tw) =
+        best.unwrap_or_else(|| panic!("cannot tile {grid_h}x{grid_w} into {p}"));
+    (ty, tx, th, tw)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn global_is_identity() {
+        let l = RegionLayout::new(RegionMode::Global, 1, 4, 4);
+        let x: Vec<f32> = (0..32).map(|v| v as f32).collect();
+        assert_eq!(l.split(&x, 2), x);
+        assert_eq!(l.join(&x, 2), x);
+    }
+
+    #[test]
+    fn stripe_is_contiguous() {
+        let l = RegionLayout::new(RegionMode::Stripe, 4, 4, 4);
+        for t in 0..16 {
+            let (p, s) = l.slot_of(t);
+            assert_eq!(p, t / 4);
+            assert_eq!(s, t % 4);
+        }
+    }
+
+    #[test]
+    fn tile_split_join_roundtrip() {
+        for (g, p) in [(8, 4), (8, 16), (16, 64), (16, 16)] {
+            let l = RegionLayout::new(RegionMode::Tile, p, g, g);
+            let x: Vec<f32> = (0..g * g * 3).map(|v| v as f32).collect();
+            let s = l.split(&x, 3);
+            assert_eq!(l.join(&s, 3), x, "g={g} p={p}");
+        }
+    }
+
+    #[test]
+    fn tile_windows_are_spatial() {
+        let l = RegionLayout::new(RegionMode::Tile, 16, 8, 8);
+        for p in 0..16 {
+            let ids: Vec<usize> = (0..4).map(|s| l.token_at(p, s)).collect();
+            let rows: Vec<usize> = ids.iter().map(|t| t / 8).collect();
+            let cols: Vec<usize> = ids.iter().map(|t| t % 8).collect();
+            assert!(rows.iter().max().unwrap() - rows.iter().min().unwrap() <= 1);
+            assert!(cols.iter().max().unwrap() - cols.iter().min().unwrap() <= 1);
+        }
+    }
+
+    #[test]
+    fn token_of_is_permutation() {
+        let l = RegionLayout::new(RegionMode::Tile, 16, 8, 8);
+        let mut ids: Vec<usize> = (0..64).map(|i| l.token_at(i / 4, i % 4)).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn decomposition_prefers_square() {
+        assert_eq!(tile_decomposition(16, 16, 16), (4, 4, 4, 4));
+        assert_eq!(tile_decomposition(32, 32, 64), (8, 8, 4, 4));
+        assert_eq!(tile_decomposition(8, 8, 4), (2, 2, 4, 4));
+    }
+
+    #[test]
+    fn slot_roundtrip() {
+        let l = RegionLayout::new(RegionMode::Tile, 4, 8, 8);
+        for t in 0..64 {
+            let (p, s) = l.slot_of(t);
+            assert_eq!(l.token_at(p, s), t);
+        }
+    }
+}

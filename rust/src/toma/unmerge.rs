@@ -1,0 +1,112 @@
+//! Unmerge (Sec. 4.2.2): restore full token resolution after a module ran
+//! on merged tokens.
+//!
+//! * `unmerge_transpose` — `A~^T X'`: one GEMM, the paper's default
+//!   (justified by `A~ A~^T ~ I` at sharp temperature).
+//! * `unmerge_pinv` — `A~^+ X'` via Cholesky on the Gram matrix (Table 7
+//!   ablation; ~2x slower in the paper, same quality).
+//! * `unmerge_colsoftmax` — redistribute with the column-softmax `A` (our
+//!   extension: exact convex reconstruction per source).
+
+use super::merge::MergeWeights;
+use crate::tensor::linalg::pinv_apply;
+use crate::tensor::ops::matmul_at;
+
+/// X'_unmerged = A~^T X' — (n x k) @ (k x d) as a transpose-GEMM.
+pub fn unmerge_transpose(w: &MergeWeights, y: &[f32], d: usize) -> Vec<f32> {
+    assert_eq!(y.len(), w.k * d);
+    matmul_at(&w.a_tilde, y, w.k, w.n, d)
+}
+
+/// Least-squares unmerge with the Moore–Penrose pseudo-inverse.
+pub fn unmerge_pinv(w: &MergeWeights, y: &[f32], d: usize) -> Vec<f32> {
+    assert_eq!(y.len(), w.k * d);
+    pinv_apply(&w.a_tilde, y, w.k, w.n, d, 1e-6)
+}
+
+/// Column-softmax redistribution: each source receives a convex combination
+/// of destination outputs (columns of A sum to one).
+pub fn unmerge_colsoftmax(w: &MergeWeights, y: &[f32], d: usize) -> Vec<f32> {
+    assert_eq!(y.len(), w.k * d);
+    matmul_at(&w.a, y, w.k, w.n, d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::toma::facility::{fl_select, similarity_matrix};
+    use crate::toma::merge::{build_merge_weights, merge};
+    use crate::util::{prop, Pcg64};
+
+    fn setup(n: usize, d: usize, k: usize, tau: f32, seed: u64) -> (Vec<f32>, MergeWeights, Vec<f32>) {
+        let x = Pcg64::new(seed).normal_vec(n * d);
+        let sim = similarity_matrix(&x, n, d);
+        let idx = fl_select(&sim, n, k);
+        let w = build_merge_weights(&x, n, d, &idx, tau);
+        let y = merge(&w, &x, d);
+        (x, w, y)
+    }
+
+    #[test]
+    fn shapes() {
+        let (_, w, y) = setup(20, 8, 6, 0.1, 0);
+        assert_eq!(unmerge_transpose(&w, &y, 8).len(), 20 * 8);
+        assert_eq!(unmerge_pinv(&w, &y, 8).len(), 20 * 8);
+        assert_eq!(unmerge_colsoftmax(&w, &y, 8).len(), 20 * 8);
+    }
+
+    #[test]
+    fn pinv_is_exact_least_squares() {
+        // pinv unmerge then re-merge must reproduce y: A~ (A~^+ y) = y.
+        let (_, w, y) = setup(16, 4, 5, 0.1, 1);
+        let x_hat = unmerge_pinv(&w, &y, 4);
+        let y_back = merge(&w, &x_hat, 4);
+        for (a, b) in y_back.iter().zip(&y) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn transpose_close_to_pinv_at_sharp_tau() {
+        let (_, w, y) = setup(32, 16, 24, 0.01, 2);
+        let tr = unmerge_transpose(&w, &y, 16);
+        let pv = unmerge_pinv(&w, &y, 16);
+        let num: f32 = tr.iter().zip(&pv).map(|(a, b)| (a - b).abs()).sum();
+        let den: f32 = pv.iter().map(|v| v.abs()).sum::<f32>() + 1e-6;
+        assert!(num / den < 0.45, "rel err {}", num / den);
+    }
+
+    #[test]
+    fn colsoftmax_identity_when_k_equals_n_sharp() {
+        let x = Pcg64::new(3).normal_vec(10 * 6);
+        let idx: Vec<usize> = (0..10).collect();
+        let w = build_merge_weights(&x, 10, 6, &idx, 0.005);
+        let y = merge(&w, &x, 6);
+        let back = unmerge_colsoftmax(&w, &y, 6);
+        for (a, b) in back.iter().zip(&x) {
+            assert!((a - b).abs() < 0.05);
+        }
+    }
+
+    #[test]
+    fn prop_unmerge_finite_and_bounded() {
+        prop::check("unmerge", 16, |g| {
+            let n = g.usize_in(4, 20);
+            let d = g.usize_in(2, 8);
+            let k = g.usize_in(1, n);
+            let x = g.normal_vec(n * d);
+            let sim = similarity_matrix(&x, n, d);
+            let idx = fl_select(&sim, n, k);
+            let w = build_merge_weights(&x, n, d, &idx, 0.1);
+            let y = merge(&w, &x, d);
+            for out in [
+                unmerge_transpose(&w, &y, d),
+                unmerge_pinv(&w, &y, d),
+                unmerge_colsoftmax(&w, &y, d),
+            ] {
+                prop::assert_prop(out.iter().all(|v| v.is_finite()), "finite");
+                prop::assert_prop(out.len() == n * d, "shape");
+            }
+        });
+    }
+}

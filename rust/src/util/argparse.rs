@@ -1,0 +1,139 @@
+//! Tiny CLI argument parser (the vendored crate set has no `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional
+//! arguments, with typed getters and an auto-generated usage string.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    present: Vec<String>,
+    spec: Vec<(String, String)>, // (name, help) for usage
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Self {
+        let mut a = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(rest) = arg.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    a.flags.insert(k.to_string(), v.to_string());
+                    a.present.push(k.to_string());
+                } else {
+                    let key = rest.to_string();
+                    a.present.push(key.clone());
+                    // Treat the next token as a value unless it is a flag.
+                    if let Some(next) = it.peek() {
+                        if !next.starts_with("--") {
+                            a.flags.insert(key, it.next().unwrap());
+                            continue;
+                        }
+                    }
+                    a.flags.insert(key, String::from("true"));
+                }
+            } else {
+                a.positional.push(arg);
+            }
+        }
+        a
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn describe(&mut self, name: &str, help: &str) -> &mut Self {
+        self.spec.push((name.to_string(), help.to_string()));
+        self
+    }
+
+    pub fn usage(&self, prog: &str) -> String {
+        let mut s = format!("usage: {prog} [options]\n");
+        for (n, h) in &self.spec {
+            s.push_str(&format!("  --{n:<20} {h}\n"));
+        }
+        s
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.present.iter().any(|k| k == key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// Comma-separated list value.
+    pub fn get_list(&self, key: &str) -> Vec<String> {
+        self.get(key)
+            .map(|v| v.split(',').map(|s| s.trim().to_string()).collect())
+            .unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn flags_and_values() {
+        let a = parse("cmd --steps 50 --ratio=0.5 --verbose --out x.txt");
+        assert_eq!(a.positional, vec!["cmd"]);
+        assert_eq!(a.get_usize("steps", 0), 50);
+        assert_eq!(a.get_f64("ratio", 0.0), 0.5);
+        assert!(a.has("verbose"));
+        assert_eq!(a.get_str("out", ""), "x.txt");
+    }
+
+    #[test]
+    fn bare_flag_before_flag() {
+        let a = parse("--quick --steps 10");
+        assert!(a.has("quick"));
+        assert_eq!(a.get_usize("steps", 0), 10);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("");
+        assert_eq!(a.get_usize("missing", 7), 7);
+        assert_eq!(a.get_str("missing", "d"), "d");
+        assert!(!a.has("missing"));
+    }
+
+    #[test]
+    fn list_values() {
+        let a = parse("--models uvit_s,dit_s");
+        assert_eq!(a.get_list("models"), vec!["uvit_s", "dit_s"]);
+    }
+
+    #[test]
+    fn negative_number_value() {
+        // A negative numeric value is not a flag.
+        let a = Args::parse(vec!["--offset".to_string(), "-3".to_string()]);
+        // "-3" does not start with "--", so it is consumed as the value.
+        assert_eq!(a.get_str("offset", ""), "-3");
+    }
+}

@@ -1,0 +1,9 @@
+//! Substrate utilities: RNG, statistics, JSON, CLI parsing, property tests.
+
+pub mod argparse;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Pcg64;

@@ -1,0 +1,113 @@
+//! Seeded property-testing helper (the vendored crate set has no
+//! `proptest`). `check` runs a closure over `cases` deterministic random
+//! inputs; on failure it reports the seed so the case can be replayed:
+//!
+//! ```no_run
+//! use toma::util::prop;
+//! prop::check("sorted stays sorted", 64, |g| {
+//!     let n = g.usize_in(1, 32);
+//!     let mut v = g.vec_f32(n, -10.0, 10.0);
+//!     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+//!     prop::assert_prop(v.windows(2).all(|w| w[0] <= w[1]), "order");
+//! });
+//! ```
+
+use super::rng::Pcg64;
+
+/// Input generator handed to each property case.
+pub struct Gen {
+    rng: Pcg64,
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range_f32(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn vec_f32(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f32> {
+        self.rng.normal_vec(n)
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+
+    pub fn rng(&mut self) -> &mut Pcg64 {
+        &mut self.rng
+    }
+}
+
+/// Assertion with a label, used inside property closures.
+pub fn assert_prop(cond: bool, label: &str) {
+    assert!(cond, "property violated: {label}");
+}
+
+/// Run `cases` random cases of `f`, reporting the failing seed on panic.
+pub fn check<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(
+    name: &str,
+    cases: usize,
+    f: F,
+) {
+    let base_seed = 0xD1F7_u64;
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64 * 0x9E37_79B9);
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen {
+                rng: Pcg64::new(seed),
+                case,
+            };
+            f(&mut g);
+        });
+        if let Err(e) = result {
+            eprintln!("property `{name}` failed at case {case} (seed {seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_runs_all_cases() {
+        let counter = std::sync::atomic::AtomicUsize::new(0);
+        check("count", 10, |_| {
+            counter.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        });
+        assert_eq!(counter.load(std::sync::atomic::Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn gen_ranges() {
+        check("ranges", 32, |g| {
+            let n = g.usize_in(3, 9);
+            assert_prop((3..=9).contains(&n), "usize_in bounds");
+            let x = g.f32_in(-1.0, 1.0);
+            assert_prop((-1.0..1.0).contains(&x), "f32_in bounds");
+            let v = g.vec_f32(n, 0.0, 2.0);
+            assert_prop(v.len() == n, "vec len");
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn failing_property_panics() {
+        check("fails", 5, |g| {
+            assert_prop(g.usize_in(0, 10) > 100, "impossible");
+        });
+    }
+}

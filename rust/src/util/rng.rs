@@ -1,0 +1,190 @@
+//! Deterministic PCG-64 pseudo-random generator.
+//!
+//! All randomness in the coordinator, the workload generator and the
+//! property tests flows through this type so every experiment is exactly
+//! reproducible from a seed. (The vendored crate set has no `rand`; this is
+//! the PCG-XSL-RR 128/64 generator from O'Neill 2014.)
+
+/// PCG-XSL-RR 128/64: 128-bit LCG state, 64-bit xorshift-rotate output.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Pcg64 {
+    /// Seed with an arbitrary 64-bit value (stream constant fixed).
+    pub fn new(seed: u64) -> Self {
+        let mut rng = Pcg64 {
+            state: 0,
+            inc: (0xda3e_39cb_94b9_5bdb_u128 << 1) | 1,
+        };
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng.state = rng.state.wrapping_add(seed as u128);
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng
+    }
+
+    /// Derive an independent generator for a labelled sub-stream.
+    pub fn fork(&mut self, label: u64) -> Pcg64 {
+        Pcg64::new(self.next_u64() ^ label.wrapping_mul(0x9e37_79b9_7f4a_7c15))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    pub fn next_f32(&mut self) -> f32 {
+        self.next_f64() as f32
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        ((self.next_f64() * n as f64) as usize).min(n - 1)
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.next_f32()
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal(&mut self) -> f32 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 <= f64::EPSILON {
+                continue;
+            }
+            let u2 = self.next_f64();
+            let r = (-2.0 * u1.ln()).sqrt();
+            return (r * (2.0 * std::f64::consts::PI * u2).cos()) as f32;
+        }
+    }
+
+    /// Vector of standard normals.
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.normal()).collect()
+    }
+
+    /// Exponential with the given rate (Poisson inter-arrival times).
+    pub fn exponential(&mut self, rate: f64) -> f64 {
+        let u = loop {
+            let u = self.next_f64();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        -u.ln() / rate
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// k distinct indices from [0, n), sorted ascending.
+    pub fn choose_k(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let mut all: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut all);
+        let mut out = all[..k.min(n)].to_vec();
+        out.sort_unstable();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_from_seed() {
+        let mut a = Pcg64::new(42);
+        let mut b = Pcg64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Pcg64::new(1);
+        let mut b = Pcg64::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn uniform_mean_near_half() {
+        let mut r = Pcg64::new(7);
+        let m: f64 = (0..20_000).map(|_| r.next_f64()).sum::<f64>() / 20_000.0;
+        assert!((m - 0.5).abs() < 0.01, "mean {m}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg64::new(11);
+        let xs: Vec<f32> = (0..50_000).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f32>() / xs.len() as f32;
+        let var =
+            xs.iter().map(|x| (x - mean).powi(2)).sum::<f32>() / xs.len() as f32;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut r = Pcg64::new(3);
+        for _ in 0..1000 {
+            assert!(r.below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn choose_k_distinct_sorted() {
+        let mut r = Pcg64::new(9);
+        let ks = r.choose_k(100, 20);
+        assert_eq!(ks.len(), 20);
+        assert!(ks.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg64::new(13);
+        let mut v: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut s = v.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = Pcg64::new(5);
+        let m: f64 =
+            (0..20_000).map(|_| r.exponential(2.0)).sum::<f64>() / 20_000.0;
+        assert!((m - 0.5).abs() < 0.02, "mean {m}");
+    }
+
+    #[test]
+    fn fork_streams_independent() {
+        let mut root = Pcg64::new(1);
+        let mut a = root.fork(1);
+        let mut b = root.fork(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+}

@@ -1,0 +1,224 @@
+//! Streaming and batch statistics used by the bench harness, the metrics
+//! registry and the quality proxies.
+
+/// Welford online mean/variance accumulator.
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn std(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (xs.len() - 1) as f64)
+        .sqrt()
+}
+
+/// Percentile with linear interpolation; `p` in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Fixed-boundary latency histogram (microsecond buckets, log-spaced).
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    bounds_us: Vec<f64>,
+    counts: Vec<u64>,
+    total: u64,
+    sum_us: f64,
+    max_us: f64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        // 1us .. ~100s, 4 buckets per decade.
+        let mut bounds = vec![];
+        let mut b = 1.0f64;
+        while b < 1e8 {
+            for m in [1.0, 1.78, 3.16, 5.62] {
+                bounds.push(b * m);
+            }
+            b *= 10.0;
+        }
+        let n = bounds.len();
+        LatencyHistogram {
+            bounds_us: bounds,
+            counts: vec![0; n + 1],
+            total: 0,
+            sum_us: 0.0,
+            max_us: 0.0,
+        }
+    }
+
+    pub fn record(&mut self, dur: std::time::Duration) {
+        self.record_us(dur.as_secs_f64() * 1e6);
+    }
+
+    pub fn record_us(&mut self, us: f64) {
+        let i = self.bounds_us.partition_point(|b| *b < us);
+        self.counts[i] += 1;
+        self.total += 1;
+        self.sum_us += us;
+        if us > self.max_us {
+            self.max_us = us;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum_us / self.total as f64
+        }
+    }
+
+    pub fn max_us(&self) -> f64 {
+        self.max_us
+    }
+
+    /// Approximate quantile from bucket boundaries.
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (q * self.total as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return if i < self.bounds_us.len() {
+                    self.bounds_us[i]
+                } else {
+                    self.max_us
+                };
+            }
+        }
+        self.max_us
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_batch() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean() - mean(&xs)).abs() < 1e-12);
+        assert!((w.std() - std(&xs)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-12);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+        assert!((median(&[3.0, 1.0, 2.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_unsorted_input() {
+        let xs = [9.0, 1.0, 5.0, 3.0, 7.0];
+        assert!((percentile(&xs, 50.0) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_quantiles_monotone() {
+        let mut h = LatencyHistogram::new();
+        for i in 1..=1000u64 {
+            h.record_us(i as f64);
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile_us(0.5);
+        let p95 = h.quantile_us(0.95);
+        let p99 = h.quantile_us(0.99);
+        assert!(p50 <= p95 && p95 <= p99);
+        assert!((h.mean_us() - 500.5).abs() < 1.0);
+    }
+
+    #[test]
+    fn histogram_bucket_accuracy() {
+        let mut h = LatencyHistogram::new();
+        for _ in 0..100 {
+            h.record_us(100.0);
+        }
+        let q = h.quantile_us(0.5);
+        // Log-spaced buckets: within one bucket width (~78%).
+        assert!(q >= 100.0 && q <= 180.0, "q={q}");
+    }
+}

@@ -1,0 +1,69 @@
+//! Synthetic workload generator: prompts, conditioning embeddings, and
+//! request streams (the GEMRec / ImageNet-1K stand-in, DESIGN.md
+//! §substitutions).
+
+pub mod prompts;
+
+pub use prompts::{PromptSet, Workload};
+
+use crate::util::Pcg64;
+
+/// A generation request as submitted to the coordinator.
+#[derive(Clone, Debug)]
+pub struct RequestSpec {
+    pub prompt: String,
+    pub seed: u64,
+    /// Arrival offset from stream start, seconds (0 for closed-loop).
+    pub arrival_s: f64,
+}
+
+/// Generate `n` requests. `rate` > 0 produces an open-loop Poisson stream;
+/// `rate` == 0 produces a closed-loop batch (all arrive at t=0).
+pub fn request_stream(prompts: &PromptSet, n: usize, rate: f64, seed: u64) -> Vec<RequestSpec> {
+    let mut rng = Pcg64::new(seed);
+    let mut t = 0.0;
+    (0..n)
+        .map(|i| {
+            if rate > 0.0 {
+                t += rng.exponential(rate);
+            }
+            RequestSpec {
+                prompt: prompts.pick(&mut rng).to_string(),
+                seed: seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                arrival_s: t,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn closed_loop_all_at_zero() {
+        let ps = PromptSet::imagenet();
+        let reqs = request_stream(&ps, 10, 0.0, 1);
+        assert_eq!(reqs.len(), 10);
+        assert!(reqs.iter().all(|r| r.arrival_s == 0.0));
+    }
+
+    #[test]
+    fn open_loop_monotone_arrivals() {
+        let ps = PromptSet::gemrec();
+        let reqs = request_stream(&ps, 50, 2.0, 2);
+        assert!(reqs.windows(2).all(|w| w[1].arrival_s >= w[0].arrival_s));
+        let mean_gap = reqs.last().unwrap().arrival_s / 49.0;
+        assert!((mean_gap - 0.5).abs() < 0.3, "gap {mean_gap}");
+    }
+
+    #[test]
+    fn seeds_unique() {
+        let ps = PromptSet::imagenet();
+        let reqs = request_stream(&ps, 20, 0.0, 3);
+        let mut seeds: Vec<u64> = reqs.iter().map(|r| r.seed).collect();
+        seeds.sort_unstable();
+        seeds.dedup();
+        assert_eq!(seeds.len(), 20);
+    }
+}

@@ -1,0 +1,252 @@
+//! Prompt sets and conditioning-embedding synthesis.
+//!
+//! Prompts are embedded as seeded hashed bag-of-words vectors projected to
+//! the model's text width — deterministic, diverse, and semantically stable
+//! (the same word always contributes the same direction), which is all the
+//! proxy metrics need (DESIGN.md §substitutions).
+
+use crate::util::Pcg64;
+
+/// ImageNet-1K class-name style prompts (a representative sample) and
+/// GEMRec-style generative prompts.
+#[derive(Clone, Debug)]
+pub struct PromptSet {
+    pub name: &'static str,
+    prompts: Vec<String>,
+}
+
+const IMAGENET_NAMES: &[&str] = &[
+    "tench", "goldfish", "great white shark", "tiger shark", "hammerhead",
+    "electric ray", "stingray", "rooster", "hen", "ostrich", "brambling",
+    "goldfinch", "house finch", "junco", "indigo bunting", "robin",
+    "bulbul", "jay", "magpie", "chickadee", "water ouzel", "kite",
+    "bald eagle", "vulture", "great grey owl", "fire salamander",
+    "smooth newt", "eft", "spotted salamander", "axolotl", "bullfrog",
+    "tree frog", "tailed frog", "loggerhead", "leatherback turtle",
+    "mud turtle", "terrapin", "box turtle", "banded gecko", "green iguana",
+    "American chameleon", "whiptail", "agama", "frilled lizard",
+    "alligator lizard", "Gila monster", "green lizard", "African chameleon",
+    "Komodo dragon", "African crocodile", "American alligator", "triceratops",
+    "thunder snake", "ringneck snake", "hognose snake", "green snake",
+    "king snake", "garter snake", "water snake", "vine snake", "night snake",
+    "boa constrictor", "rock python", "Indian cobra", "green mamba",
+    "sea snake", "horned viper", "diamondback", "sidewinder", "trilobite",
+    "harvestman", "scorpion", "black and gold garden spider", "barn spider",
+    "garden spider", "black widow", "tarantula", "wolf spider", "tick",
+    "centipede", "black grouse", "ptarmigan", "ruffed grouse",
+    "prairie chicken", "peacock", "quail", "partridge", "African grey",
+    "macaw", "sulphur-crested cockatoo", "lorikeet", "coucal", "bee eater",
+    "hornbill", "hummingbird", "jacamar", "toucan", "drake",
+    "red-breasted merganser", "goose", "black swan", "tusker", "echidna",
+    "platypus", "wallaby", "koala", "wombat", "jellyfish", "sea anemone",
+    "brain coral", "flatworm", "nematode", "conch", "snail", "slug",
+    "sea slug", "chiton", "chambered nautilus", "Dungeness crab",
+    "rock crab", "fiddler crab", "king crab", "American lobster",
+    "spiny lobster", "crayfish", "hermit crab", "isopod", "white stork",
+];
+
+const GEMREC_PROMPTS: &[&str] = &[
+    "a fantasy landscape with floating islands and waterfalls at sunset",
+    "portrait of an elderly fisherman with weathered skin, studio lighting",
+    "a bowl of fire sitting on a wooden table, photorealistic",
+    "cyberpunk city street at night, neon reflections in the rain",
+    "a watercolor painting of a fox in a snowy forest",
+    "ancient temple ruins overgrown with jungle vines, volumetric light",
+    "macro photograph of a dewdrop on a spider web",
+    "a steam locomotive crossing a stone viaduct in the alps",
+    "an astronaut riding a horse on mars, cinematic",
+    "still life with pomegranates and brass jug, oil on canvas",
+    "a lighthouse on a cliff during a thunderstorm",
+    "origami crane made of glowing circuit boards",
+    "a cozy library with floor-to-ceiling bookshelves and a fireplace",
+    "bioluminescent mushrooms in a dark cave, fantasy art",
+    "a samurai standing in a bamboo forest at dawn",
+    "hot air balloons over cappadocia at sunrise",
+    "a clockwork whale swimming through clouds, surrealism",
+    "venetian canal with gondolas, golden hour photography",
+    "a desert caravan under a sky full of stars",
+    "robot barista making coffee in a retro diner",
+    "cherry blossoms falling over a quiet shrine",
+    "a viking longship in rough northern seas, dramatic lighting",
+    "garden maze seen from above, baroque palace grounds",
+    "polar bear family on drifting ice, wildlife photography",
+    "an art nouveau greenhouse full of exotic plants",
+    "a castle carved into a mountain face, matte painting",
+    "street market in marrakech, vibrant colors",
+    "a violin made of flowing water, high speed photo",
+    "northern lights over a frozen lake with a lone cabin",
+    "an old bookshop window on a rainy evening",
+    "a dragon curled around a crystal tower",
+    "sunflower field with an approaching storm front",
+    "a tram climbing a steep street in lisbon",
+    "jellyfish ballet in deep ocean light",
+    "a blacksmith forging a sword, sparks flying",
+    "minimalist japanese garden with raked sand",
+    "a pirate cove hidden inside a sea cave",
+    "futuristic train station with glass domes",
+    "autumn forest path covered in red leaves",
+    "a whale skeleton in a desert, surreal composition",
+    "moonlit rooftops of an old european town",
+    "a hummingbird frozen mid-flight near a hibiscus",
+    "abandoned amusement park reclaimed by nature",
+    "a monk meditating under a waterfall",
+    "chess pieces as gothic architecture, tilt-shift",
+    "fireflies over a rice paddy at dusk",
+    "an airship docking at a mountaintop spire",
+    "a fox spirit with nine tails in a torii gate corridor",
+    "stained glass window depicting the solar system",
+    "a tiny house on a giant turtle, children's book art",
+];
+
+impl PromptSet {
+    pub fn imagenet() -> PromptSet {
+        PromptSet {
+            name: "imagenet1k-names",
+            prompts: IMAGENET_NAMES
+                .iter()
+                .map(|s| format!("a photo of a {s}"))
+                .collect(),
+        }
+    }
+
+    pub fn gemrec() -> PromptSet {
+        PromptSet {
+            name: "gemrec",
+            prompts: GEMREC_PROMPTS.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.prompts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.prompts.is_empty()
+    }
+
+    pub fn get(&self, i: usize) -> &str {
+        &self.prompts[i % self.prompts.len()]
+    }
+
+    pub fn pick<'a>(&'a self, rng: &mut Pcg64) -> &'a str {
+        &self.prompts[rng.below(self.prompts.len())]
+    }
+}
+
+/// FNV-1a hash for word bucketing.
+fn fnv1a(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// Embed a prompt into a (txt_len x txt_dim) conditioning matrix.
+///
+/// Token t gets the hashed-word direction of word t (cyclic) plus a small
+/// positional component; unused positions carry a deterministic padding
+/// vector. The embedding is unit-scale and deterministic.
+pub fn embed_prompt(prompt: &str, txt_len: usize, txt_dim: usize) -> Vec<f32> {
+    let words: Vec<&str> = prompt.split_whitespace().collect();
+    let mut out = vec![0.0f32; txt_len * txt_dim];
+    for t in 0..txt_len {
+        let row = &mut out[t * txt_dim..(t + 1) * txt_dim];
+        if words.is_empty() || t >= words.len() {
+            // Padding token: fixed direction.
+            let mut rng = Pcg64::new(0x9AD ^ t as u64);
+            for v in row.iter_mut() {
+                *v = 0.02 * rng.normal();
+            }
+            continue;
+        }
+        let w = words[t];
+        let mut rng = Pcg64::new(fnv1a(w));
+        for v in row.iter_mut() {
+            *v = rng.normal();
+        }
+        // Positional flavor keeps repeated words distinguishable.
+        let mut prng = Pcg64::new(0x705 ^ t as u64);
+        for v in row.iter_mut() {
+            *v += 0.1 * prng.normal();
+        }
+        let norm: f32 = row.iter().map(|v| v * v).sum::<f32>().sqrt();
+        for v in row.iter_mut() {
+            *v /= norm.max(1e-6);
+        }
+    }
+    out
+}
+
+/// Convenience bundle: a prompt set plus embedding dims.
+#[derive(Clone, Debug)]
+pub struct Workload {
+    pub prompts: PromptSet,
+    pub txt_len: usize,
+    pub txt_dim: usize,
+}
+
+impl Workload {
+    pub fn new(prompts: PromptSet, txt_len: usize, txt_dim: usize) -> Self {
+        Workload {
+            prompts,
+            txt_len,
+            txt_dim,
+        }
+    }
+
+    pub fn embed(&self, prompt: &str) -> Vec<f32> {
+        embed_prompt(prompt, self.txt_len, self.txt_dim)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prompt_sets_nonempty() {
+        assert!(PromptSet::imagenet().len() >= 100);
+        assert!(PromptSet::gemrec().len() >= 50);
+    }
+
+    #[test]
+    fn embedding_deterministic() {
+        let a = embed_prompt("a photo of a goldfish", 16, 64);
+        let b = embed_prompt("a photo of a goldfish", 16, 64);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn different_prompts_differ() {
+        let a = embed_prompt("a photo of a goldfish", 16, 64);
+        let b = embed_prompt("a photo of a tarantula", 16, 64);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn shared_words_share_directions() {
+        // "a photo of a X": first 4 token rows identical across prompts.
+        let a = embed_prompt("a photo of a goldfish", 16, 64);
+        let b = embed_prompt("a photo of a tarantula", 16, 64);
+        assert_eq!(&a[..4 * 64], &b[..4 * 64]);
+        assert_ne!(&a[4 * 64..5 * 64], &b[4 * 64..5 * 64]);
+    }
+
+    #[test]
+    fn word_rows_unit_norm() {
+        let e = embed_prompt("one two three", 8, 32);
+        for t in 0..3 {
+            let n: f32 = e[t * 32..(t + 1) * 32].iter().map(|v| v * v).sum();
+            assert!((n.sqrt() - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn padding_is_small() {
+        let e = embed_prompt("hi", 8, 32);
+        let pad_norm: f32 = e[5 * 32..6 * 32].iter().map(|v| v * v).sum::<f32>().sqrt();
+        assert!(pad_norm < 0.5);
+    }
+}

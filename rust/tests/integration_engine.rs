@@ -1,0 +1,179 @@
+//! Integration: the generation engine end-to-end (all variants, schedules,
+//! determinism, quality ordering). Requires `make artifacts`.
+
+use std::sync::Arc;
+
+use toma::coordinator::{Engine, EngineConfig, GenRequest};
+use toma::quality::{dino_proxy, FeatureExtractor};
+use toma::runtime::Runtime;
+use toma::toma::plan::ReuseSchedule;
+
+fn runtime() -> Arc<Runtime> {
+    Arc::new(Runtime::with_default_dir().expect("run `make artifacts` first"))
+}
+
+fn gen(rt: &Arc<Runtime>, variant: &str, ratio: Option<f64>, steps: usize,
+       seed: u64) -> toma::coordinator::GenResult {
+    let mut cfg = EngineConfig::new("uvit_xs", variant, ratio);
+    cfg.steps = steps;
+    let e = Engine::new(rt.clone(), cfg).expect("engine");
+    e.generate(&GenRequest::new("a bowl of fire on a wooden table", seed))
+        .expect("generate")
+}
+
+#[test]
+fn all_variants_generate_finite_latents() {
+    let rt = runtime();
+    for variant in ["baseline", "toma", "toma_stripe", "toma_tile",
+                    "toma_once", "toma_pinv", "toma_colsm", "tlb", "tome",
+                    "tofu", "todo"] {
+        let ratio = (variant != "baseline").then_some(0.5);
+        let r = gen(&rt, variant, ratio, 3, 0);
+        assert!(
+            r.latent.iter().all(|v| v.is_finite()),
+            "{variant}: non-finite latent"
+        );
+        assert!(r.latent.iter().any(|v| v.abs() > 1e-6), "{variant}: zeros");
+    }
+}
+
+#[test]
+fn generation_is_deterministic_in_seed() {
+    let rt = runtime();
+    let a = gen(&rt, "toma", Some(0.5), 4, 123);
+    let b = gen(&rt, "toma", Some(0.5), 4, 123);
+    assert_eq!(a.latent, b.latent, "same seed must be bit-identical");
+    let c = gen(&rt, "toma", Some(0.5), 4, 124);
+    assert_ne!(a.latent, c.latent, "different seeds must differ");
+}
+
+#[test]
+fn plan_schedule_statistics_match_paper_schedule() {
+    let rt = runtime();
+    let mut cfg = EngineConfig::new("uvit_xs", "toma", Some(0.5));
+    cfg.steps = 20;
+    cfg.schedule = ReuseSchedule { dest_every: 10, weight_every: 5 };
+    let e = Engine::new(rt.clone(), cfg).unwrap();
+    let r = e.generate(&GenRequest::new("x", 0)).unwrap();
+    assert_eq!(r.stats.select_calls, 2, "selects at steps 0 and 10");
+    assert_eq!(r.stats.weight_refreshes, 2, "weight-only at steps 5 and 15");
+    assert_eq!(r.stats.plan_reuses, 16);
+}
+
+#[test]
+fn reuse_schedule_accelerates_toma() {
+    let rt = runtime();
+    let mut fast_cfg = EngineConfig::new("uvit_xs", "toma", Some(0.5));
+    fast_cfg.steps = 12;
+    let mut slow_cfg = fast_cfg.clone();
+    slow_cfg.schedule = ReuseSchedule::every_step();
+
+    let fast = Engine::new(rt.clone(), fast_cfg).unwrap();
+    let slow = Engine::new(rt.clone(), slow_cfg).unwrap();
+    let req = GenRequest::new("venetian canal with gondolas", 5);
+    let _ = fast.generate(&req).unwrap();
+    let _ = slow.generate(&req).unwrap();
+    // Compare select-time shares over a few runs (wall-clock is noisy).
+    let mut fast_sel = 0.0;
+    let mut slow_sel = 0.0;
+    for _ in 0..3 {
+        fast_sel += fast.generate(&req).unwrap().stats.select_s;
+        slow_sel += slow.generate(&req).unwrap().stats.select_s;
+    }
+    assert!(
+        fast_sel < slow_sel,
+        "reuse must cut selection time: {fast_sel:.4}s vs {slow_sel:.4}s"
+    );
+}
+
+#[test]
+fn quality_degrades_monotonically_with_ratio_on_uvit_s() {
+    // uvit_s has the full ratio grid; use few steps for speed.
+    let rt = runtime();
+    let steps = 4;
+    let mut cfg = EngineConfig::new("uvit_s", "baseline", None);
+    cfg.steps = steps;
+    let base = Engine::new(rt.clone(), cfg)
+        .unwrap()
+        .generate(&GenRequest::new("macro photo of a dewdrop", 1))
+        .unwrap();
+    let fx = FeatureExtractor::new(base.latent.len(), 32, 21);
+    let mut prev = -1.0;
+    for ratio in [0.25, 0.5, 0.75] {
+        let mut cfg = EngineConfig::new("uvit_s", "toma_tile", Some(ratio));
+        cfg.steps = steps;
+        let r = Engine::new(rt.clone(), cfg)
+            .unwrap()
+            .generate(&GenRequest::new("macro photo of a dewdrop", 1))
+            .unwrap();
+        let d = dino_proxy(&fx, &base.latent, &r.latent);
+        assert!(
+            d >= prev - 0.02,
+            "DINO-proxy should not improve as merging gets more aggressive \
+             (r={ratio}: {d:.4} vs prev {prev:.4})"
+        );
+        prev = d;
+    }
+    assert!(prev > 0.0, "aggressive merging must perturb the output");
+}
+
+#[test]
+fn toma_beats_baseline_wall_clock_on_uvit_s() {
+    // The paper's headline on the real engine: merged steps are faster.
+    let rt = runtime();
+    let steps = 4;
+    let req = GenRequest::new("ancient temple ruins", 2);
+    let mut bc = EngineConfig::new("uvit_s", "baseline", None);
+    bc.steps = steps;
+    let be = Engine::new(rt.clone(), bc).unwrap();
+    let mut tc = EngineConfig::new("uvit_s", "toma_stripe", Some(0.75));
+    tc.steps = steps;
+    let te = Engine::new(rt.clone(), tc).unwrap();
+    let _ = be.generate(&req).unwrap();
+    let _ = te.generate(&req).unwrap();
+    let mut tb = 0.0;
+    let mut tt = 0.0;
+    for _ in 0..2 {
+        tb += be.generate(&req).unwrap().stats.step_s;
+        tt += te.generate(&req).unwrap().stats.step_s;
+    }
+    assert!(
+        tt < tb,
+        "stripe merge at r=0.75 must cut step time ({tt:.3}s vs {tb:.3}s)"
+    );
+}
+
+#[test]
+fn dit_variants_run_and_respect_modalities() {
+    let rt = runtime();
+    let mut cfg = EngineConfig::new("dit_s", "toma", Some(0.5));
+    cfg.steps = 3;
+    cfg.select_mode = "global".into();
+    cfg.schedule = ReuseSchedule::every_step();
+    let e = Engine::new(rt.clone(), cfg).unwrap();
+    let r = e.generate(&GenRequest::new("a dragon around a tower", 3)).unwrap();
+    assert!(r.latent.iter().all(|v| v.is_finite()));
+    assert_eq!(r.stats.select_calls, 3, "no cross-step reuse on DiT");
+}
+
+#[test]
+fn trace_records_destination_sets() {
+    let rt = runtime();
+    let mut cfg = EngineConfig::new("uvit_xs", "toma", Some(0.5));
+    cfg.steps = 5;
+    cfg.schedule = ReuseSchedule::every_step();
+    let e = Engine::new(rt, cfg).unwrap();
+    let mut req = GenRequest::new("fireflies over a rice paddy", 4);
+    req.trace = true;
+    let r = e.generate(&req).unwrap();
+    assert_eq!(r.dest_trace.len(), 5);
+    let n_tokens = 256;
+    for dests in &r.dest_trace {
+        assert_eq!(dests.len(), 128, "r=0.5 keeps half the tokens");
+        assert!(dests.iter().all(|&d| d < n_tokens));
+        let mut sorted = dests.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), dests.len(), "destinations unique");
+    }
+}

@@ -1,0 +1,196 @@
+//! Integration: PJRT runtime vs the independent pure-Rust model.
+//!
+//! Requires `make artifacts`. Each test builds its own Runtime (the PJRT
+//! handles are intentionally single-threaded).
+
+use std::sync::Arc;
+
+use toma::model::{HostReduce, HostUVit};
+use toma::runtime::executor::Input;
+use toma::runtime::Runtime;
+use toma::util::Pcg64;
+use toma::workload::prompts::embed_prompt;
+
+fn runtime() -> Arc<Runtime> {
+    Arc::new(Runtime::with_default_dir().expect("run `make artifacts` first"))
+}
+
+#[test]
+fn manifest_inventory_is_complete() {
+    let rt = runtime();
+    let m = &rt.manifest;
+    assert!(m.models.contains_key("uvit_xs"));
+    assert!(m.models.contains_key("uvit_s"));
+    assert!(m.models.contains_key("dit_s"));
+    // Paper grid: every uvit_s variant at each ratio.
+    for v in ["toma", "toma_stripe", "toma_tile", "toma_once", "tlb",
+              "tome", "tofu", "todo"] {
+        for r in [0.25, 0.5, 0.75] {
+            assert!(
+                m.step_name("uvit_s", v, Some(r)).is_ok(),
+                "missing uvit_s {v} r={r}"
+            );
+        }
+    }
+    // Granularity sweep artifacts (Table 5).
+    for p in [4, 16, 64, 256] {
+        assert!(
+            m.artifacts.contains_key(&format!("uvit_s_select_tile_r50_p{p}")),
+            "missing select p{p}"
+        );
+    }
+    // Selection modes (Table 4).
+    for mode in ["tile", "stripe", "global", "random"] {
+        assert!(m.select_name("uvit_xs", mode, 0.5, None).is_ok());
+    }
+}
+
+#[test]
+fn baseline_step_matches_host_model() {
+    let rt = runtime();
+    let info = rt.manifest.model("uvit_xs").unwrap().clone();
+    let ws = rt.weights("uvit_xs").unwrap();
+    assert!(ws.total_parameters() > 1_000_000);
+    let host = HostUVit::from_weights(&info, &ws).unwrap();
+
+    let mut rng = Pcg64::new(42);
+    let per = info.channels * info.latent_hw * info.latent_hw;
+    let x_single = rng.normal_vec(per);
+    let mut x = x_single.clone();
+    x.extend_from_slice(&x_single); // batch of 2 identical rows
+    let t = 417.0f32;
+    let cond = embed_prompt("a photo of a macaw", info.txt_len, info.txt_dim);
+    let mut cond_b = vec![0.0f32; info.txt_len * info.txt_dim];
+    cond_b.extend_from_slice(&cond); // row0 uncond, row1 cond
+
+    let exe = rt.executor("uvit_xs_step_baseline").unwrap();
+    let outs = exe
+        .run(&[
+            Input::F32(x.clone()),
+            Input::F32(vec![t, t]),
+            Input::F32(cond_b.clone()),
+        ])
+        .unwrap();
+    let eps = outs[0].to_vec::<f32>().unwrap();
+
+    // Row 1 (conditional) vs host forward with the same cond.
+    let host_eps = host.forward(&x_single, t, &cond, &HostReduce::None);
+    let xla_row1 = &eps[per..2 * per];
+    let mut max_err = 0.0f32;
+    let mut denom = 0.0f32;
+    for (a, b) in xla_row1.iter().zip(&host_eps) {
+        max_err = max_err.max((a - b).abs());
+        denom = denom.max(b.abs());
+    }
+    assert!(
+        max_err < 2e-3 * denom.max(1.0),
+        "XLA vs host mismatch: max err {max_err} (scale {denom})"
+    );
+}
+
+#[test]
+fn select_artifact_is_deterministic_and_valid() {
+    let rt = runtime();
+    let info = rt.manifest.model("uvit_xs").unwrap().clone();
+    let exe = rt.executor("uvit_xs_select_tile_r50_p16").unwrap();
+    let mut rng = Pcg64::new(7);
+    let x = rng.normal_vec(info.latent_len());
+    let tv = vec![300.0f32; info.batch];
+    let inputs = vec![Input::F32(x.clone()), Input::F32(tv.clone())];
+    let o1 = exe.run(&inputs).unwrap();
+    let o2 = exe.run(&inputs).unwrap();
+    let idx1 = o1[0].to_vec::<i32>().unwrap();
+    let idx2 = o2[0].to_vec::<i32>().unwrap();
+    assert_eq!(idx1, idx2, "selection must be deterministic");
+
+    // Region-local indices: sorted, unique, in range.
+    let d_loc = exe.entry.outputs[0].shape[1];
+    let n_loc = exe.entry.outputs[2].shape[2];
+    for chunk in idx1.chunks(d_loc) {
+        assert!(chunk.windows(2).all(|w| w[0] < w[1]), "sorted unique");
+        assert!(chunk.iter().all(|&i| (i as usize) < n_loc), "in range");
+    }
+
+    // A~ rows sum to 1.
+    let at = o1[2].to_vec::<f32>().unwrap();
+    for row in at.chunks(n_loc) {
+        let s: f32 = row.iter().sum();
+        assert!((s - 1.0).abs() < 1e-3, "row sum {s}");
+    }
+}
+
+#[test]
+fn pallas_artifacts_match_jnp_artifacts() {
+    let rt = runtime();
+    let info = rt.manifest.model("uvit_xs").unwrap().clone();
+    // Selection: jnp vs pallas kernels must agree exactly on indices.
+    let jnp = rt.executor("uvit_xs_select_tile_r50_p16").unwrap();
+    let pal = rt.executor("uvit_xs_select_tile_r50_p16_pallas").unwrap();
+    let mut rng = Pcg64::new(9);
+    let x = rng.normal_vec(info.latent_len());
+    let tv = vec![500.0f32; info.batch];
+    let inputs = vec![Input::F32(x.clone()), Input::F32(tv.clone())];
+    let oj = jnp.run(&inputs).unwrap();
+    let op = pal.run(&inputs).unwrap();
+    assert_eq!(
+        oj[0].to_vec::<i32>().unwrap(),
+        op[0].to_vec::<i32>().unwrap(),
+        "pallas FL selection diverges from jnp"
+    );
+    let aj = oj[2].to_vec::<f32>().unwrap();
+    let ap = op[2].to_vec::<f32>().unwrap();
+    let max = aj
+        .iter()
+        .zip(&ap)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max < 1e-4, "pallas merge weights diverge: {max}");
+
+    // Step artifacts agree given identical A~ inputs.
+    let js = rt.executor("uvit_xs_step_toma_r50").unwrap();
+    let ps = rt.executor("uvit_xs_step_toma_r50_pallas").unwrap();
+    let g = js.entry.inputs.last().unwrap();
+    let at = vec![1.0f32 / g.shape[2] as f32; g.elements()];
+    let cond = vec![0.01f32; info.batch * info.txt_len * info.txt_dim];
+    let step_inputs = vec![
+        Input::F32(x.clone()),
+        Input::F32(tv.clone()),
+        Input::F32(cond.clone()),
+        Input::F32(at.clone()),
+    ];
+    let ej = js.run(&step_inputs).unwrap()[0].to_vec::<f32>().unwrap();
+    let ep = ps.run(&step_inputs).unwrap()[0].to_vec::<f32>().unwrap();
+    let scale = ej.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    let max = ej
+        .iter()
+        .zip(&ep)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max < 5e-3 * scale.max(1.0), "pallas step diverges: {max}");
+}
+
+#[test]
+fn weights_only_artifact_matches_select_weights() {
+    let rt = runtime();
+    let info = rt.manifest.model("uvit_xs").unwrap().clone();
+    let sel = rt.executor("uvit_xs_select_tile_r50_p16").unwrap();
+    let w = rt.executor("uvit_xs_weights_tile_r50_p16").unwrap();
+    let mut rng = Pcg64::new(11);
+    let x = rng.normal_vec(info.latent_len());
+    let tv = vec![250.0f32; info.batch];
+    let o = sel
+        .run(&[Input::F32(x.clone()), Input::F32(tv.clone())])
+        .unwrap();
+    let idx = o[0].to_vec::<i32>().unwrap();
+    let at_sel = o[2].to_vec::<f32>().unwrap();
+    let ow = w
+        .run(&[Input::F32(x), Input::F32(tv), Input::I32(idx)])
+        .unwrap();
+    let at_w = ow[1].to_vec::<f32>().unwrap();
+    let max = at_sel
+        .iter()
+        .zip(&at_w)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max < 1e-5, "weights-only rebuild diverges from select: {max}");
+}
