@@ -11,7 +11,7 @@
 
 use std::sync::Arc;
 
-use anyhow::Result;
+use toma::util::error::Result;
 use toma::coordinator::{Engine, EngineConfig, GenRequest};
 use toma::quality::{dino_proxy, mse, FeatureExtractor};
 use toma::report::Table;

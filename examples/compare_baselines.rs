@@ -10,7 +10,7 @@
 
 use std::sync::Arc;
 
-use anyhow::Result;
+use toma::util::error::Result;
 use toma::coordinator::{Engine, EngineConfig, GenRequest};
 use toma::quality::{dino_proxy, FeatureExtractor};
 use toma::report::Table;

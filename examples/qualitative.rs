@@ -7,7 +7,7 @@
 
 use std::sync::Arc;
 
-use anyhow::Result;
+use toma::util::error::Result;
 use toma::coordinator::{Engine, EngineConfig, GenRequest};
 use toma::quality::{dino_proxy, write_pgm_preview, FeatureExtractor};
 use toma::runtime::Runtime;

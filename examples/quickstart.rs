@@ -12,7 +12,7 @@
 
 use std::sync::Arc;
 
-use anyhow::Result;
+use toma::util::error::Result;
 use toma::coordinator::{Engine, EngineConfig, GenRequest};
 use toma::runtime::Runtime;
 

@@ -10,7 +10,7 @@
 //!     --steps 30 --model uvit_s
 //! ```
 
-use anyhow::Result;
+use toma::util::error::Result;
 use toma::coordinator::{EngineConfig, GenRequest, Server};
 use toma::report::Table;
 use toma::util::argparse::Args;
@@ -58,7 +58,7 @@ fn main() -> Result<()> {
             .iter()
             .filter_map(|c| c.result.as_ref().ok().map(|r| (c, r)))
             .collect();
-        anyhow::ensure!(ok.len() == n, "{} of {n} requests failed", n - ok.len());
+        toma::ensure!(ok.len() == n, "{} of {n} requests failed", n - ok.len());
 
         let svc: Vec<f64> = ok.iter().map(|(c, _)| c.service_s).collect();
         let reuse: f64 = ok

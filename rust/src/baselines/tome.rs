@@ -15,6 +15,7 @@
 //! (destinations unchanged) depending on the block's linearity regime.
 
 use crate::tensor::ops::{argsort_desc, gather_rows, l2_normalize_rows, matmul_bt, scatter_add_rows};
+use crate::tensor::pool;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum TomeMode {
@@ -61,16 +62,33 @@ impl TomePlan {
         let hd = gather_rows(&xn, d, &dst_idx);
         let scores = matmul_bt(&hs, &hd, n_src, d, dst_idx.len());
 
+        // Best destination per source: independent row scans, fanned out
+        // over the worker pool (same substrate as the ToMA side, so the
+        // Table 6 comparison stays algorithmic). Small score matrices stay
+        // serial — pool dispatch would dominate the scan.
         let mut node_max = vec![f32::NEG_INFINITY; n_src];
         let mut node_idx = vec![0usize; n_src];
-        for s in 0..n_src {
-            for t in 0..dst_idx.len() {
-                let v = scores[s * dst_idx.len() + t];
-                if v > node_max[s] {
-                    node_max[s] = v;
-                    node_idx[s] = t;
+        let n_dst = dst_idx.len();
+        let scan = |s: usize, best: &mut f32, arg: &mut usize| {
+            let row = &scores[s * n_dst..(s + 1) * n_dst];
+            for (t, &v) in row.iter().enumerate() {
+                if v > *best {
+                    *best = v;
+                    *arg = t;
                 }
             }
+        };
+        if n_src * n_dst < pool::PAR_MIN_ELEMS {
+            for s in 0..n_src {
+                scan(s, &mut node_max[s], &mut node_idx[s]);
+            }
+        } else {
+            let per = pool::rows_per_task(n_src);
+            pool::parallel_chunks2_mut(&mut node_max, &mut node_idx, per, |ci, cm, cidx| {
+                for off in 0..cm.len() {
+                    scan(ci * per + off, &mut cm[off], &mut cidx[off]);
+                }
+            });
         }
         // The characteristic full sort over sources.
         let order = argsort_desc(&node_max);

@@ -1,8 +1,16 @@
 //! Criterion-style micro-benchmark harness (the vendored crate set has no
 //! `criterion`): warmup, timed iterations, median/p10/p90 with outlier
-//! trimming, and a `--filter` / `--quick` aware runner for `cargo bench`
-//! targets (`harness = false`).
+//! trimming, and a `--filter` / `--quick` / `--json <path>` aware runner
+//! for `cargo bench` targets (`harness = false`).
+//!
+//! With `--json <path>` (or `TOMA_BENCH_JSON=<path>`), the runner writes
+//! `BENCH_<target>.json` — machine-readable `(name, median_s, p10_s,
+//! p90_s, mean_s, iters)` records — when it is dropped, so the perf
+//! trajectory of every PR can be diffed without scraping stdout. If
+//! `<path>` is an existing directory the file is created inside it;
+//! otherwise `<path>` is used verbatim.
 
+use std::path::PathBuf;
 use std::time::Instant;
 
 use crate::util::stats;
@@ -38,6 +46,8 @@ pub struct Runner {
     pub min_iters: usize,
     pub max_iters: usize,
     pub results: Vec<BenchResult>,
+    /// Where to write the JSON record on drop (`--json <path>`).
+    pub json: Option<PathBuf>,
 }
 
 impl Default for Runner {
@@ -54,18 +64,31 @@ impl Runner {
             min_iters: 5,
             max_iters: 1000,
             results: vec![],
+            json: None,
         }
     }
 
-    /// Configure from `cargo bench -- [filter] [--quick]` style args.
+    /// Configure from `cargo bench -- [filter] [--quick] [--json <path>]`
+    /// style args.
     pub fn from_args() -> Self {
         let mut r = Runner::new();
-        for a in std::env::args().skip(1) {
+        let mut args = std::env::args().skip(1).peekable();
+        while let Some(a) = args.next() {
             match a.as_str() {
                 "--quick" => {
                     r.min_time_s = 0.05;
                     r.min_iters = 2;
                     r.max_iters = 20;
+                }
+                "--json" => {
+                    // Only consume a real value; `--json --quick` must not
+                    // eat the following flag.
+                    match args.peek() {
+                        Some(v) if !v.starts_with('-') => {
+                            r.json = args.next().map(PathBuf::from);
+                        }
+                        _ => eprintln!("[bench] --json requires a path; ignoring"),
+                    }
                 }
                 "--bench" | "--exact" => {}
                 s if !s.starts_with('-') => r.filter = Some(s.to_string()),
@@ -77,7 +100,69 @@ impl Runner {
             r.min_iters = 2;
             r.max_iters = 20;
         }
+        if r.json.is_none() {
+            if let Ok(p) = std::env::var("TOMA_BENCH_JSON") {
+                r.json = Some(PathBuf::from(p));
+            }
+        }
         r
+    }
+
+    /// The bench target name: the executable stem minus cargo's `-<hash>`.
+    fn target_name() -> String {
+        let exe = std::env::args().next().unwrap_or_default();
+        let stem = std::path::Path::new(&exe)
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or("bench")
+            .to_string();
+        match stem.rsplit_once('-') {
+            Some((base, hash))
+                if hash.len() == 16 && hash.bytes().all(|b| b.is_ascii_hexdigit()) =>
+            {
+                base.to_string()
+            }
+            _ => stem,
+        }
+    }
+
+    /// Render the recorded results as a JSON document.
+    pub fn to_json(&self) -> String {
+        fn esc(s: &str) -> String {
+            s.replace('\\', "\\\\").replace('"', "\\\"")
+        }
+        let rows: Vec<String> = self
+            .results
+            .iter()
+            .map(|r| {
+                format!(
+                    "  {{\"name\": \"{}\", \"median_s\": {:e}, \"p10_s\": {:e}, \
+                     \"p90_s\": {:e}, \"mean_s\": {:e}, \"iters\": {}}}",
+                    esc(&r.name),
+                    r.median_s,
+                    r.p10_s,
+                    r.p90_s,
+                    r.mean_s,
+                    r.iters
+                )
+            })
+            .collect();
+        format!(
+            "{{\"bench\": \"{}\", \"results\": [\n{}\n]}}\n",
+            esc(&Self::target_name()),
+            rows.join(",\n")
+        )
+    }
+
+    /// Write the JSON record now (also runs on drop when `--json` is set).
+    pub fn write_json(&self, path: &std::path::Path) -> std::io::Result<PathBuf> {
+        let path = if path.is_dir() {
+            path.join(format!("BENCH_{}.json", Self::target_name()))
+        } else {
+            path.to_path_buf()
+        };
+        std::fs::write(&path, self.to_json())?;
+        Ok(path)
     }
 
     pub fn should_run(&self, name: &str) -> bool {
@@ -129,6 +214,27 @@ impl Runner {
     }
 }
 
+impl Drop for Runner {
+    fn drop(&mut self) {
+        let Some(path) = self.json.clone() else {
+            return;
+        };
+        if self.results.is_empty() {
+            return;
+        }
+        // A panicking bench run would serialize a truncated result set that
+        // a perf-diff pipeline couldn't tell from a healthy one — skip it.
+        if std::thread::panicking() {
+            eprintln!("[bench] run panicked; not writing {}", path.display());
+            return;
+        }
+        match self.write_json(&path) {
+            Ok(p) => eprintln!("[bench] wrote {}", p.display()),
+            Err(e) => eprintln!("[bench] writing {}: {e}", path.display()),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -157,6 +263,24 @@ mod tests {
         r.bench("other", || ran.set(true));
         assert!(!ran.get());
         assert!(r.results.is_empty());
+    }
+
+    #[test]
+    fn json_record_roundtrips_fields() {
+        let mut r = Runner::new();
+        r.min_time_s = 0.001;
+        r.max_iters = 3;
+        r.bench("alpha", || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        let j = r.to_json();
+        assert!(j.contains("\"name\": \"alpha\""));
+        assert!(j.contains("median_s"));
+        assert!(j.contains("p90_s"));
+        let parsed = crate::util::json::Json::parse(&j).expect("valid json");
+        let rows = parsed.get("results").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert!(rows[0].get("iters").and_then(|v| v.as_usize()).unwrap() >= 1);
     }
 
     #[test]

@@ -14,13 +14,13 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{anyhow, Result};
-
 use super::plan_cache::PlanSlot;
 use super::request::{EngineConfig, GenRequest, GenResult, GenStats};
+use crate::anyhow;
 use crate::diffusion::{cfg_mix, ddim_update, euler_update, NoiseSchedule, SamplerKind};
 use crate::runtime::executor::{Arg, DeviceInput, Input};
-use crate::runtime::{ArtifactEntry, Executor, ModelInfo, Runtime};
+use crate::runtime::{ArtifactEntry, Executor, Literal, ModelInfo, Runtime};
+use crate::util::error::Result;
 use crate::toma::plan::{MergePlan, PlanAction};
 use crate::toma::regions::{RegionLayout, RegionMode};
 use crate::util::Pcg64;
@@ -163,7 +163,7 @@ impl Engine {
             }
         }
         let outs = sel.run(&inputs)?;
-        let mk_plan = |idx: &xla::Literal, at: &xla::Literal, a_shape: &[usize]| -> Result<MergePlan> {
+        let mk_plan = |idx: &Literal, at: &Literal, a_shape: &[usize]| -> Result<MergePlan> {
             Ok(MergePlan {
                 idx: idx.to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?,
                 a_tilde: at.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,

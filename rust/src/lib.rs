@@ -13,16 +13,38 @@
 //! Module map (see DESIGN.md for the experiment index):
 //!
 //! * [`toma`] — host reference of the paper's operators: facility-location
-//!   selection, attention merge, transpose/pinv unmerge, region layouts.
+//!   selection (incremental-gain lazy greedy since PR 1), attention merge,
+//!   transpose/pinv unmerge, region layouts.
 //! * [`baselines`] — ToMeSD / ToFu / ToDo / TLB reimplementations.
 //! * [`coordinator`] — engine, batcher, plan cache, server, metrics.
-//! * [`runtime`] — PJRT client, artifact registry, weight store.
+//! * [`runtime`] — PJRT client, artifact registry, weight store. The
+//!   XLA-backed layer sits behind the `pjrt` cargo feature; the default
+//!   build compiles same-API pure-Rust stubs, so no XLA toolchain is
+//!   needed to build, test, or run the host benches.
 //! * [`diffusion`] — DDIM / Euler samplers and noise schedules.
-//! * [`model`] — pure-Rust UVitLite forward (cross-validation substrate).
+//! * [`model`] — pure-Rust UVitLite forward (cross-validation substrate),
+//!   with multi-head attention lowered onto the parallel GEMM kernels.
 //! * [`gpucost`] — per-GPU roofline model regenerating the paper's latency
 //!   tables on hardware we do not have.
 //! * [`quality`] — DINO/CLIP/FID proxy metrics.
-//! * [`tensor`], [`util`], [`workload`], [`report`], [`bench`] — substrates.
+//! * [`tensor`] — the host kernel substrate: [`tensor::pool`] (persistent
+//!   worker pool + scoped parallel-for), [`tensor::gemm`] (blocked,
+//!   register-tiled, multithreaded GEMM with the seed's scalar kernels
+//!   kept as `gemm::scalar` references), and [`tensor::ops`] (public
+//!   kernel surface: GEMMs, tiled column softmax, parallel row ops).
+//! * [`util`], [`workload`], [`report`], [`bench`] — substrates
+//!   (`util::error` is the crate's dependency-free `anyhow` stand-in;
+//!   `bench::Runner` understands `--quick` and `--json <path>`).
+
+// The `pjrt` feature selects the XLA-backed runtime modules, which need the
+// vendored `xla` crate in [dependencies]. Until that dependency lands (see
+// ROADMAP.md "Open items"), fail fast with one clear message instead of a
+// page of unresolved-import errors. Delete this guard when wiring `xla` in.
+#[cfg(feature = "pjrt")]
+compile_error!(
+    "the `pjrt` feature requires the vendored `xla` crate: add it to \
+     [dependencies] in rust/Cargo.toml and remove this guard (ROADMAP.md)"
+);
 
 pub mod baselines;
 pub mod bench;

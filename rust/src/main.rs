@@ -10,9 +10,9 @@
 
 use std::sync::Arc;
 
-use anyhow::{anyhow, Result};
-
+use toma::anyhow;
 use toma::coordinator::{EngineConfig, GenRequest, Server};
+use toma::util::error::Result;
 use toma::runtime::Runtime;
 use toma::toma::plan::ReuseSchedule;
 use toma::util::argparse::Args;

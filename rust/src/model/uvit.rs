@@ -1,9 +1,9 @@
 //! Host-side UVitLite forward pass (mirror of `python/compile/model.py`).
 
-use anyhow::{anyhow, Result};
-
+use crate::anyhow;
 use crate::runtime::{ModelInfo, WeightStore};
-use crate::tensor::ops::{gelu, layernorm, matmul, silu, softmax_rows};
+use crate::tensor::ops::{gelu, layernorm, matmul, matmul_bt_into, silu, softmax_rows};
+use crate::util::error::Result;
 use crate::toma::merge::MergeWeights;
 use crate::toma::regions::RegionLayout;
 use crate::toma::unmerge::unmerge_transpose;
@@ -156,35 +156,45 @@ impl HostUVit {
     }
 
     /// Multi-head SDPA over host slices: q (nq x d), k/v (nk x d).
+    ///
+    /// Each head is packed into contiguous (rows x dh) panels so both the
+    /// QK^T logits and the PV reduction run as blocked parallel GEMMs on
+    /// the `tensor::gemm` substrate (the packing is O(rows * d), the GEMMs
+    /// O(nq * nk * dh) — the packing cost vanishes for real token counts).
     fn mha(&self, q: &[f32], k: &[f32], v: &[f32], nq: usize, nk: usize) -> Vec<f32> {
         let d = self.info.dim;
         let h = self.info.heads;
         let dh = d / h;
         let scale = 1.0 / (dh as f32).sqrt();
         let mut out = vec![0.0f32; nq * d];
+        // All scratch hoisted out of the head loop: zero allocations per head.
+        let mut qh = vec![0.0f32; nq * dh];
+        let mut kh = vec![0.0f32; nk * dh];
+        let mut vht = vec![0.0f32; dh * nk];
         let mut logits = vec![0.0f32; nq * nk];
+        let mut oh = vec![0.0f32; nq * dh];
         for head in 0..h {
             let off = head * dh;
+            // Fold the 1/sqrt(dh) scale into the O(nq*dh) q-panel pack —
+            // nk/dh times cheaper than rescaling the (nq x nk) logits.
             for i in 0..nq {
-                for j in 0..nk {
-                    let mut s = 0.0f32;
-                    for c in 0..dh {
-                        s += q[i * d + off + c] * k[j * d + off + c];
-                    }
-                    logits[i * nk + j] = s * scale;
+                for c in 0..dh {
+                    qh[i * dh + c] = q[i * d + off + c] * scale;
                 }
             }
-            softmax_rows(&mut logits, nq, nk);
-            for i in 0..nq {
-                for j in 0..nk {
-                    let w = logits[i * nk + j];
-                    if w == 0.0 {
-                        continue;
-                    }
-                    for c in 0..dh {
-                        out[i * d + off + c] += w * v[j * d + off + c];
-                    }
+            // Pack V directly transposed (dh x nk) so the PV reduction is a
+            // bt-GEMM with no internal packing allocation.
+            for j in 0..nk {
+                kh[j * dh..(j + 1) * dh].copy_from_slice(&k[j * d + off..j * d + off + dh]);
+                for c in 0..dh {
+                    vht[c * nk + j] = v[j * d + off + c];
                 }
+            }
+            matmul_bt_into(&qh, &kh, &mut logits, nq, dh, nk);
+            softmax_rows(&mut logits, nq, nk);
+            matmul_bt_into(&logits, &vht, &mut oh, nq, nk, dh);
+            for i in 0..nq {
+                out[i * d + off..i * d + off + dh].copy_from_slice(&oh[i * dh..(i + 1) * dh]);
             }
         }
         out

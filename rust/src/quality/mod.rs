@@ -57,10 +57,10 @@ pub fn write_pgm_preview(
     channels: usize,
     hw: usize,
     path: &str,
-) -> anyhow::Result<()> {
+) -> crate::util::error::Result<()> {
     use std::io::Write;
     let n = hw * hw;
-    anyhow::ensure!(latent.len() == channels * n, "latent size mismatch");
+    crate::ensure!(latent.len() == channels * n, "latent size mismatch");
     let mut gray = vec![0.0f32; n];
     for c in 0..channels {
         for p in 0..n {

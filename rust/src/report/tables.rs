@@ -13,9 +13,9 @@
 
 use std::sync::Arc;
 
-use anyhow::{anyhow, Result};
-
+use crate::anyhow;
 use crate::coordinator::{Engine, EngineConfig, GenRequest};
+use crate::util::error::Result;
 use crate::gpucost::device::GpuModel;
 use crate::gpucost::workloads::{PaperModel, Variant};
 use crate::gpucost::{flops, memory};

@@ -12,8 +12,10 @@ use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use anyhow::{anyhow, Context, Result};
 use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::anyhow;
+use crate::util::error::{Context, Result};
 
 use super::artifact::{ArtifactEntry, Manifest, TensorSpec};
 use super::weights::WeightStore;

@@ -1,0 +1,181 @@
+//! Pure-Rust stand-ins for the PJRT execution layer, compiled when the
+//! `pjrt` feature is off (the default — no XLA toolchain required).
+//!
+//! The types mirror the API surface of `runtime::executor` exactly, so the
+//! engine, server, benches and examples compile unchanged; every execution
+//! entry point returns a descriptive error at runtime instead. The real
+//! implementations live in `executor.rs` behind `--features pjrt`.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use super::artifact::{ArtifactEntry, Manifest};
+use super::weights::WeightStore;
+use crate::anyhow;
+use crate::util::error::Result;
+
+const NO_PJRT: &str = "built without the `pjrt` feature: PJRT/XLA execution is unavailable \
+     (add the xla dependency and rebuild with `--features pjrt`)";
+
+/// Typed per-call input.
+pub enum Input {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+}
+
+/// A device-resident input (never constructed in the stub).
+pub struct DeviceInput {
+    _private: (),
+}
+
+/// A per-call argument: host data or a resident device buffer.
+pub enum Arg<'a> {
+    Host(Input),
+    Device(&'a DeviceInput),
+}
+
+/// Host literal mirroring the `xla::Literal` surface the engine consumes.
+#[derive(Clone, Debug)]
+pub enum Literal {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+}
+
+/// Error for dtype-mismatched [`Literal::to_vec`] calls.
+#[derive(Debug)]
+pub struct LiteralError(pub &'static str);
+
+/// Element types extractable from a [`Literal`].
+pub trait LiteralElem: Sized {
+    fn extract(lit: &Literal) -> Option<Vec<Self>>;
+}
+
+impl LiteralElem for f32 {
+    fn extract(lit: &Literal) -> Option<Vec<f32>> {
+        match lit {
+            Literal::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl LiteralElem for i32 {
+    fn extract(lit: &Literal) -> Option<Vec<i32>> {
+        match lit {
+            Literal::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl LiteralElem for u32 {
+    fn extract(lit: &Literal) -> Option<Vec<u32>> {
+        match lit {
+            Literal::U32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl Literal {
+    pub fn to_vec<T: LiteralElem>(&self) -> std::result::Result<Vec<T>, LiteralError> {
+        T::extract(self).ok_or(LiteralError("literal dtype mismatch"))
+    }
+
+    pub fn element_count(&self) -> usize {
+        match self {
+            Literal::F32(v) => v.len(),
+            Literal::I32(v) => v.len(),
+            Literal::U32(v) => v.len(),
+        }
+    }
+}
+
+/// Stand-in for `PjRtClient` (identification only).
+pub struct Client;
+
+impl Client {
+    pub fn platform_name(&self) -> String {
+        "host-stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+}
+
+/// A compiled artifact bound to its model's weights (never constructed).
+pub struct Executor {
+    pub entry: ArtifactEntry,
+    pub calls: std::sync::atomic::AtomicU64,
+    pub exec_ns: std::sync::atomic::AtomicU64,
+}
+
+impl Executor {
+    pub fn upload(&self, _position: usize, _input: &Input) -> Result<DeviceInput> {
+        Err(anyhow!("{NO_PJRT}"))
+    }
+
+    pub fn run_args(&self, _args: &[Arg]) -> Result<Vec<Literal>> {
+        Err(anyhow!("{NO_PJRT}"))
+    }
+
+    pub fn run(&self, _inputs: &[Input]) -> Result<Vec<Literal>> {
+        Err(anyhow!("{NO_PJRT}"))
+    }
+
+    pub fn mean_latency_s(&self) -> f64 {
+        0.0
+    }
+}
+
+/// Process-wide runtime stub: construction always fails with a pointer at
+/// the `pjrt` feature, so callers hit one clear error instead of partial
+/// behavior.
+pub struct Runtime {
+    pub client: Client,
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    pub fn new(_artifact_dir: PathBuf) -> Result<Runtime> {
+        Err(anyhow!("{NO_PJRT}"))
+    }
+
+    pub fn with_default_dir() -> Result<Runtime> {
+        Runtime::new(crate::default_artifact_dir())
+    }
+
+    pub fn weights(&self, _model: &str) -> Result<Arc<WeightStore>> {
+        Err(anyhow!("{NO_PJRT}"))
+    }
+
+    pub fn executor(&self, _name: &str) -> Result<Arc<Executor>> {
+        Err(anyhow!("{NO_PJRT}"))
+    }
+
+    pub fn compiled(&self) -> Vec<String> {
+        Vec::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runtime_construction_reports_missing_feature() {
+        let err = Runtime::with_default_dir().unwrap_err().to_string();
+        assert!(err.contains("pjrt"), "unhelpful stub error: {err}");
+    }
+
+    #[test]
+    fn literal_roundtrips_by_dtype() {
+        let l = Literal::F32(vec![1.0, 2.0]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0]);
+        assert!(l.to_vec::<i32>().is_err());
+        assert_eq!(l.element_count(), 2);
+    }
+}

@@ -1,11 +1,35 @@
 //! PJRT runtime: load AOT-compiled HLO artifacts and execute them from the
 //! serve path. Python never runs here — the manifest + HLO text + weight
 //! npz files produced by `make artifacts` are the entire interface.
+//!
+//! The XLA-backed execution layer (`executor.rs`, `weights.rs`) is gated
+//! behind the `pjrt` cargo feature. Without it (the default), pure-Rust
+//! stubs with the identical API surface are compiled instead, so the whole
+//! crate — engine, server, benches, examples — builds and tests on a bare
+//! Rust toolchain; execution entry points then return a "built without
+//! pjrt" error. Manifest parsing (`artifact.rs`) is pure Rust either way.
 
 pub mod artifact;
+
+#[cfg(feature = "pjrt")]
 pub mod executor;
+#[cfg(not(feature = "pjrt"))]
+#[path = "executor_stub.rs"]
+pub mod executor;
+
+#[cfg(feature = "pjrt")]
+pub mod weights;
+#[cfg(not(feature = "pjrt"))]
+#[path = "weights_stub.rs"]
 pub mod weights;
 
 pub use artifact::{ArtifactEntry, ArtifactKind, Manifest, ModelInfo, TensorSpec};
 pub use executor::{Executor, Runtime};
 pub use weights::WeightStore;
+
+/// The literal type returned by executors: `xla::Literal` with the `pjrt`
+/// feature, the host stub otherwise.
+#[cfg(feature = "pjrt")]
+pub use xla::Literal;
+#[cfg(not(feature = "pjrt"))]
+pub use executor::Literal;

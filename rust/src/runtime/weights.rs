@@ -6,8 +6,10 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
 use xla::{FromRawBytes, Literal, PjRtBuffer, PjRtClient};
+
+use crate::anyhow;
+use crate::util::error::{Context, Result};
 
 use super::artifact::ModelInfo;
 

@@ -1,0 +1,45 @@
+//! Pure-Rust stand-in for the PJRT weight store (built without the `pjrt`
+//! feature). Mirrors the `runtime::weights::WeightStore` surface used by
+//! the host model and engine; all data access fails with a pointer at the
+//! feature flag.
+
+use std::path::Path;
+
+use super::artifact::ModelInfo;
+use super::executor::Client;
+use crate::anyhow;
+use crate::util::error::Result;
+
+const NO_PJRT: &str = "built without the `pjrt` feature: weight upload is unavailable \
+     (add the xla dependency and rebuild with `--features pjrt`)";
+
+/// Host + device copies of one model's parameters (never constructed in
+/// the stub build).
+pub struct WeightStore {
+    pub model: String,
+    /// Parameter names in artifact input order.
+    pub names: Vec<String>,
+}
+
+impl WeightStore {
+    pub fn load(_client: &Client, _info: &ModelInfo, _npz_path: &Path) -> Result<WeightStore> {
+        Err(anyhow!("{NO_PJRT}"))
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    /// Host f32 data by name.
+    pub fn f32_data(&self, name: &str) -> Result<Vec<f32>> {
+        Err(anyhow!("no weight `{name}`: {NO_PJRT}"))
+    }
+
+    pub fn total_parameters(&self) -> usize {
+        0
+    }
+}

@@ -1,0 +1,354 @@
+//! Blocked, register-tiled, multithreaded GEMM — the parallel substrate
+//! behind `tensor::ops::{matmul, matmul_bt, matmul_at, bmm}`.
+//!
+//! Organization (GPU-shaped-on-CPU, per the paper's thesis that merge must
+//! be dense matrix work):
+//!
+//! * All products are lowered to one kernel shape, `C += A · Bᵀ` with both
+//!   operands row-major — every inner loop is then a contiguous dot
+//!   product. `matmul` packs `B` into `Bᵀ` panels first (a (k x n) →
+//!   (n x k) blocked transpose), `matmul_at` packs `A`.
+//! * The kernel is tiled three ways: `KC`-deep k-panels (operand panel
+//!   fits L1/L2), `JB`-wide column tiles (the `Bᵀ` panel is reused across
+//!   every row of the block), and a 1x4 register tile (`dot4`) whose
+//!   unrolled-by-8 inner loops are written with exact-size slices so LLVM
+//!   autovectorizes them.
+//! * Work is split over the M dimension across the [`super::pool`] worker
+//!   pool; each worker owns a disjoint row-block of `C`, so no locks and
+//!   no false sharing on the hot path.
+//!
+//! `scalar` keeps the seed's naive loop nests as the reference
+//! implementation the property tests compare against.
+
+use super::pool;
+
+/// k-panel depth: one A-row segment (KC floats) + a JB x KC B-panel stay
+/// resident in L1/L2 while the panel is swept.
+const KC: usize = 256;
+/// Column-tile width of C (rows of Bᵀ reused per panel sweep).
+const JB: usize = 64;
+/// Below this many multiply-adds the dispatch overhead beats parallelism.
+const PAR_MIN_MACS: usize = 1 << 17;
+
+/// Contiguous dot product, 8-wide accumulators (autovectorizes).
+#[inline(always)]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n8 = a.len() / 8 * 8;
+    let mut acc = [0.0f32; 8];
+    let mut i = 0;
+    while i < n8 {
+        let x = &a[i..i + 8];
+        let y = &b[i..i + 8];
+        for l in 0..8 {
+            acc[l] += x[l] * y[l];
+        }
+        i += 8;
+    }
+    let mut s = 0.0f32;
+    for l in 0..8 {
+        s += acc[l];
+    }
+    for j in n8..a.len() {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// 1x4 register tile: one A row segment against four Bᵀ rows at once —
+/// each A load is reused 4x, quadrupling arithmetic intensity.
+#[inline(always)]
+fn dot4(a: &[f32], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32]) -> [f32; 4] {
+    let n = a.len();
+    let n8 = n / 8 * 8;
+    let mut a0 = [0.0f32; 8];
+    let mut a1 = [0.0f32; 8];
+    let mut a2 = [0.0f32; 8];
+    let mut a3 = [0.0f32; 8];
+    let mut i = 0;
+    while i < n8 {
+        let x = &a[i..i + 8];
+        let y0 = &b0[i..i + 8];
+        let y1 = &b1[i..i + 8];
+        let y2 = &b2[i..i + 8];
+        let y3 = &b3[i..i + 8];
+        for l in 0..8 {
+            a0[l] += x[l] * y0[l];
+            a1[l] += x[l] * y1[l];
+            a2[l] += x[l] * y2[l];
+            a3[l] += x[l] * y3[l];
+        }
+        i += 8;
+    }
+    let mut out = [0.0f32; 4];
+    for l in 0..8 {
+        out[0] += a0[l];
+        out[1] += a1[l];
+        out[2] += a2[l];
+        out[3] += a3[l];
+    }
+    for j in n8..n {
+        out[0] += a[j] * b0[j];
+        out[1] += a[j] * b1[j];
+        out[2] += a[j] * b2[j];
+        out[3] += a[j] * b3[j];
+    }
+    out
+}
+
+/// Single-thread blocked kernel: `c` (rows r0..r1 of C, zeroed here)
+/// accumulates `A[r0..r1] · Bᵀ` where A is (m x k) and B is (n x k).
+fn bt_kernel_rows(a: &[f32], bt: &[f32], c: &mut [f32], r0: usize, r1: usize, k: usize, n: usize) {
+    for v in c.iter_mut() {
+        *v = 0.0;
+    }
+    let mut kb = 0;
+    while kb < k {
+        let kend = (kb + KC).min(k);
+        let mut jb = 0;
+        while jb < n {
+            let jend = (jb + JB).min(n);
+            for i in r0..r1 {
+                let arow = &a[i * k + kb..i * k + kend];
+                let crow = &mut c[(i - r0) * n..(i - r0) * n + n];
+                let mut j = jb;
+                while j + 4 <= jend {
+                    let s = dot4(
+                        arow,
+                        &bt[j * k + kb..j * k + kend],
+                        &bt[(j + 1) * k + kb..(j + 1) * k + kend],
+                        &bt[(j + 2) * k + kb..(j + 2) * k + kend],
+                        &bt[(j + 3) * k + kb..(j + 3) * k + kend],
+                    );
+                    crow[j] += s[0];
+                    crow[j + 1] += s[1];
+                    crow[j + 2] += s[2];
+                    crow[j + 3] += s[3];
+                    j += 4;
+                }
+                while j < jend {
+                    crow[j] += dot(arow, &bt[j * k + kb..j * k + kend]);
+                    j += 1;
+                }
+            }
+            jb = jend;
+        }
+        kb = kend;
+    }
+}
+
+/// C (m x n) = A (m x k) @ B (n x k)ᵀ, parallel over row blocks of C.
+pub fn matmul_bt_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k, "A shape");
+    assert_eq!(b.len(), n * k, "B shape");
+    assert_eq!(c.len(), m * n, "C shape");
+    if m == 0 || n == 0 {
+        return;
+    }
+    if m * k.max(1) * n < PAR_MIN_MACS {
+        bt_kernel_rows(a, b, c, 0, m, k, n);
+        return;
+    }
+    let rows_per = pool::rows_per_task(m);
+    pool::parallel_chunks_mut(c, rows_per * n, |ci, chunk| {
+        let r0 = ci * rows_per;
+        let r1 = r0 + chunk.len() / n;
+        bt_kernel_rows(a, b, chunk, r0, r1, k, n);
+    });
+}
+
+/// Blocked (tile-transposed) out-of-place transpose: (rows x cols) ->
+/// (cols x rows). Parallel over output row blocks for large operands.
+pub fn transpose_into(a: &[f32], out: &mut [f32], rows: usize, cols: usize) {
+    assert_eq!(a.len(), rows * cols);
+    assert_eq!(out.len(), rows * cols);
+    const TB: usize = 32;
+    let tile = |out_chunk: &mut [f32], j0: usize, j1: usize| {
+        // out rows j0..j1 (original columns), blocked over the i axis.
+        let mut ib = 0;
+        while ib < rows {
+            let iend = (ib + TB).min(rows);
+            for j in j0..j1 {
+                let orow = &mut out_chunk[(j - j0) * rows..(j - j0) * rows + rows];
+                for i in ib..iend {
+                    orow[i] = a[i * cols + j];
+                }
+            }
+            ib = iend;
+        }
+    };
+    if rows * cols < PAR_MIN_MACS {
+        tile(out, 0, cols);
+        return;
+    }
+    let jper = pool::rows_per_task(cols).max(TB);
+    pool::parallel_chunks_mut(out, jper * rows, |ci, chunk| {
+        let j0 = ci * jper;
+        let j1 = j0 + chunk.len() / rows;
+        tile(chunk, j0, j1);
+    });
+}
+
+/// Seed reference kernels (naive loop nests, single-threaded). Kept as the
+/// ground truth for the parallel/blocked property tests and for shapes so
+/// small the blocked path is pure overhead.
+pub mod scalar {
+    /// C (m x n) = A (m x k) @ B (k x n), k-blocked axpy form.
+    pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut c = vec![0.0f32; m * n];
+        matmul_into(a, b, &mut c, m, k, n);
+        c
+    }
+
+    /// In-place form of [`matmul`] (the seed's allocation-free hot path).
+    pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+        assert_eq!(a.len(), m * k, "A shape");
+        assert_eq!(b.len(), k * n, "B shape");
+        assert_eq!(c.len(), m * n, "C shape");
+        c.fill(0.0);
+        const KB: usize = 64;
+        for kb in (0..k).step_by(KB) {
+            let kend = (kb + KB).min(k);
+            for i in 0..m {
+                let arow = &a[i * k..(i + 1) * k];
+                let crow = &mut c[i * n..(i + 1) * n];
+                for kk in kb..kend {
+                    let av = arow[kk];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[kk * n..(kk + 1) * n];
+                    for (cv, bv) in crow.iter_mut().zip(brow) {
+                        *cv += av * bv;
+                    }
+                }
+            }
+        }
+    }
+
+    /// C = A @ Bᵀ where A is (m x k), B is (n x k).
+    pub fn matmul_bt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        assert_eq!(a.len(), m * k);
+        assert_eq!(b.len(), n * k);
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            for j in 0..n {
+                let brow = &b[j * k..(j + 1) * k];
+                let mut s = 0.0f32;
+                for (x, y) in arow.iter().zip(brow) {
+                    s += x * y;
+                }
+                c[i * n + j] = s;
+            }
+        }
+        c
+    }
+
+    /// C = Aᵀ @ B where A is (k x m), B is (k x n) -> (m x n).
+    pub fn matmul_at(a: &[f32], b: &[f32], k: usize, m: usize, n: usize) -> Vec<f32> {
+        assert_eq!(a.len(), k * m);
+        assert_eq!(b.len(), k * n);
+        let mut c = vec![0.0f32; m * n];
+        for kk in 0..k {
+            let arow = &a[kk * m..(kk + 1) * m];
+            let brow = &b[kk * n..(kk + 1) * n];
+            for i in 0..m {
+                let av = arow[i];
+                if av == 0.0 {
+                    continue;
+                }
+                let crow = &mut c[i * n..(i + 1) * n];
+                for (cv, bv) in crow.iter_mut().zip(brow) {
+                    *cv += av * bv;
+                }
+            }
+        }
+        c
+    }
+
+    /// Column-strided softmax (the seed's cache-hostile traversal) — the
+    /// numeric reference for the tiled `ops::softmax_cols`.
+    pub fn softmax_cols(x: &mut [f32], rows: usize, cols: usize) {
+        for j in 0..cols {
+            let mut mx = f32::NEG_INFINITY;
+            for i in 0..rows {
+                mx = mx.max(x[i * cols + j]);
+            }
+            let mut z = 0.0f32;
+            for i in 0..rows {
+                let v = (x[i * cols + j] - mx).exp();
+                x[i * cols + j] = v;
+                z += v;
+            }
+            let inv = 1.0 / z.max(1e-20);
+            for i in 0..rows {
+                x[i * cols + j] *= inv;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn close(a: &[f32], b: &[f32], tol: f32) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!(
+                (x - y).abs() <= tol * (1.0 + y.abs()),
+                "elem {i}: {x} vs {y}"
+            );
+        }
+    }
+
+    #[test]
+    fn bt_matches_scalar_ragged_shapes() {
+        let mut rng = Pcg64::new(7);
+        for (m, k, n) in [(1, 1, 1), (3, 5, 2), (17, 33, 9), (64, 256, 64), (70, 65, 130)] {
+            let a = rng.normal_vec(m * k);
+            let b = rng.normal_vec(n * k);
+            let mut c = vec![0.0f32; m * n];
+            matmul_bt_into(&a, &b, &mut c, m, k, n);
+            close(&c, &scalar::matmul_bt(&a, &b, m, k, n), 1e-4);
+        }
+    }
+
+    #[test]
+    fn bt_parallel_path_matches_scalar() {
+        let mut rng = Pcg64::new(8);
+        let (m, k, n) = (96, 300, 50); // above PAR_MIN_MACS
+        let a = rng.normal_vec(m * k);
+        let b = rng.normal_vec(n * k);
+        let mut c = vec![0.0f32; m * n];
+        matmul_bt_into(&a, &b, &mut c, m, k, n);
+        close(&c, &scalar::matmul_bt(&a, &b, m, k, n), 1e-4);
+    }
+
+    #[test]
+    fn transpose_into_blocked_matches_naive() {
+        let mut rng = Pcg64::new(9);
+        for (r, c) in [(1, 7), (33, 65), (128, 300)] {
+            let a = rng.normal_vec(r * c);
+            let mut t = vec![0.0f32; r * c];
+            transpose_into(&a, &mut t, r, c);
+            for i in 0..r {
+                for j in 0..c {
+                    assert_eq!(t[j * r + i], a[i * c + j]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dot_handles_remainders() {
+        for len in [0usize, 1, 7, 8, 9, 31] {
+            let a: Vec<f32> = (0..len).map(|i| i as f32).collect();
+            let b = vec![2.0f32; len];
+            let expect: f32 = (0..len).map(|i| 2.0 * i as f32).sum();
+            assert_eq!(dot(&a, &b), expect);
+        }
+    }
+}

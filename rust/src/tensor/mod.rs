@@ -1,9 +1,16 @@
 //! Host tensor substrate: row-major f32 tensors plus the dense kernels the
 //! ToMA host reference, the baselines and the quality metrics are built on.
+//!
+//! The kernels are layered: [`pool`] is a persistent `std::thread` worker
+//! pool with a scoped parallel-for, [`gemm`] the blocked/register-tiled
+//! GEMM microkernels fanned out over it, and [`ops`] the public kernel
+//! surface everything else calls.
 
+pub mod gemm;
 pub mod kmeans;
 pub mod linalg;
 pub mod ops;
+pub mod pool;
 
 use std::fmt;
 

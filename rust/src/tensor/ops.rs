@@ -1,97 +1,95 @@
 //! Dense kernels on row-major slices: GEMM, softmax, layernorm, gather /
 //! scatter, argsort. The ToMA host path (Table 6 micro-benchmarks) and the
 //! pure-Rust model forward are built from these.
+//!
+//! Since PR 1 the GEMMs lower onto the blocked/register-tiled kernels in
+//! [`super::gemm`] and fan out over the [`super::pool`] worker pool;
+//! row-wise ops (softmax, layernorm, L2-normalize) parallelize over row
+//! blocks, and `softmax_cols` runs column-tiled so every pass is a
+//! contiguous row-major sweep instead of the seed's strided column walk.
 
-use super::Tensor;
+use super::pool::PAR_MIN_ELEMS;
+use super::{gemm, pool, Tensor};
 
-/// C (m x n) = A (m x k) @ B (k x n), blocked over k for cache locality.
+/// C (m x n) = A (m x k) @ B (k x n).
 pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     let mut c = vec![0.0f32; m * n];
     matmul_into(a, b, &mut c, m, k, n);
     c
 }
 
-/// GEMM into a caller-provided buffer (hot path: no allocation).
+/// GEMM into a caller-provided buffer (hot path: no allocation for C).
+/// B is packed into row-major Bᵀ panels so the inner kernel is pure
+/// contiguous dot products (see `tensor::gemm`).
 pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
     assert_eq!(a.len(), m * k, "A shape");
     assert_eq!(b.len(), k * n, "B shape");
     assert_eq!(c.len(), m * n, "C shape");
-    c.fill(0.0);
-    const KB: usize = 64;
-    for kb in (0..k).step_by(KB) {
-        let kend = (kb + KB).min(k);
-        for i in 0..m {
-            let arow = &a[i * k..(i + 1) * k];
-            let crow = &mut c[i * n..(i + 1) * n];
-            for kk in kb..kend {
-                let av = arow[kk];
-                if av == 0.0 {
-                    continue;
-                }
-                let brow = &b[kk * n..(kk + 1) * n];
-                for (cv, bv) in crow.iter_mut().zip(brow) {
-                    *cv += av * bv;
-                }
-            }
-        }
+    // Tiny or skinny products: the Bᵀ packing can't amortize over enough
+    // C rows, so the seed's in-place scalar kernel wins.
+    if m < 4 || m * k.max(1) * n < 8 * 1024 {
+        gemm::scalar::matmul_into(a, b, c, m, k, n);
+        return;
     }
+    let mut bt = vec![0.0f32; k * n];
+    gemm::transpose_into(b, &mut bt, k, n);
+    gemm::matmul_bt_into(a, &bt, c, m, k, n);
 }
 
 /// C = A @ B^T where A is (m x k), B is (n x k).
 pub fn matmul_bt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    assert_eq!(a.len(), m * k);
-    assert_eq!(b.len(), n * k);
     let mut c = vec![0.0f32; m * n];
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        for j in 0..n {
-            let brow = &b[j * k..(j + 1) * k];
-            let mut s = 0.0f32;
-            for (x, y) in arow.iter().zip(brow) {
-                s += x * y;
-            }
-            c[i * n + j] = s;
-        }
-    }
+    gemm::matmul_bt_into(a, b, &mut c, m, k, n);
     c
+}
+
+/// [`matmul_bt`] into a caller-provided buffer (allocation-free hot path).
+pub fn matmul_bt_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    gemm::matmul_bt_into(a, b, c, m, k, n);
 }
 
 /// C = A^T @ B where A is (k x m), B is (k x n) -> (m x n).
 pub fn matmul_at(a: &[f32], b: &[f32], k: usize, m: usize, n: usize) -> Vec<f32> {
     assert_eq!(a.len(), k * m);
     assert_eq!(b.len(), k * n);
-    let mut c = vec![0.0f32; m * n];
-    for kk in 0..k {
-        let arow = &a[kk * m..(kk + 1) * m];
-        let brow = &b[kk * n..(kk + 1) * n];
-        for i in 0..m {
-            let av = arow[i];
-            if av == 0.0 {
-                continue;
-            }
-            let crow = &mut c[i * n..(i + 1) * n];
-            for (cv, bv) in crow.iter_mut().zip(brow) {
-                *cv += av * bv;
-            }
-        }
+    if m < 4 || k * m.max(1) * n < 8 * 1024 {
+        return gemm::scalar::matmul_at(a, b, k, m, n);
     }
-    c
+    let mut at = vec![0.0f32; k * m];
+    gemm::transpose_into(a, &mut at, k, m);
+    matmul(&at, b, m, k, n)
 }
 
 pub fn transpose(a: &[f32], rows: usize, cols: usize) -> Vec<f32> {
     let mut out = vec![0.0f32; rows * cols];
-    for i in 0..rows {
-        for j in 0..cols {
-            out[j * rows + i] = a[i * cols + j];
-        }
-    }
+    gemm::transpose_into(a, &mut out, rows, cols);
     out
+}
+
+/// Apply `f` to each `cols`-wide row of `x`, fanning out over the pool
+/// when the operand is large enough to amortize dispatch.
+fn for_each_row(x: &mut [f32], rows: usize, cols: usize, f: impl Fn(&mut [f32]) + Sync) {
+    assert_eq!(x.len(), rows * cols);
+    if rows == 0 || cols == 0 {
+        return;
+    }
+    if rows * cols < PAR_MIN_ELEMS {
+        for row in x.chunks_mut(cols) {
+            f(row);
+        }
+        return;
+    }
+    let per = pool::rows_per_task(rows);
+    pool::parallel_chunks_mut(x, per * cols, |_ci, chunk| {
+        for row in chunk.chunks_mut(cols) {
+            f(row);
+        }
+    });
 }
 
 /// In-place softmax over each row of an (rows x cols) matrix.
 pub fn softmax_rows(x: &mut [f32], rows: usize, cols: usize) {
-    for i in 0..rows {
-        let row = &mut x[i * cols..(i + 1) * cols];
+    for_each_row(x, rows, cols, |row| {
         let mx = row.iter().fold(f32::NEG_INFINITY, |m, v| m.max(*v));
         let mut z = 0.0f32;
         for v in row.iter_mut() {
@@ -102,68 +100,95 @@ pub fn softmax_rows(x: &mut [f32], rows: usize, cols: usize) {
         for v in row.iter_mut() {
             *v *= inv;
         }
-    }
+    });
 }
 
 /// In-place softmax over each *column* of an (rows x cols) matrix — the
 /// paper's column-wise merge softmax (Sec. 4.2.1).
+///
+/// Column-tiled: per tile of `NB` columns the max / exp-sum / scale passes
+/// sweep row-major with a small per-column accumulator strip, so memory
+/// traffic is contiguous (the seed walked whole columns with stride
+/// `cols`, a cache miss per element once `cols` exceeds a few lines).
+/// Numerically identical to the strided form: each column sees the same
+/// operations in the same row order.
 pub fn softmax_cols(x: &mut [f32], rows: usize, cols: usize) {
-    for j in 0..cols {
-        let mut mx = f32::NEG_INFINITY;
+    const NB: usize = 512;
+    if rows == 0 || cols == 0 {
+        return;
+    }
+    let w_max = NB.min(cols);
+    let mut mx = vec![0.0f32; w_max];
+    let mut z = vec![0.0f32; w_max];
+    let mut jb = 0;
+    while jb < cols {
+        let jend = (jb + NB).min(cols);
+        let w = jend - jb;
+        mx[..w].fill(f32::NEG_INFINITY);
         for i in 0..rows {
-            mx = mx.max(x[i * cols + j]);
+            let row = &x[i * cols + jb..i * cols + jend];
+            for (m, v) in mx[..w].iter_mut().zip(row) {
+                if *v > *m {
+                    *m = *v;
+                }
+            }
         }
-        let mut z = 0.0f32;
+        z[..w].fill(0.0);
         for i in 0..rows {
-            let v = (x[i * cols + j] - mx).exp();
-            x[i * cols + j] = v;
-            z += v;
+            let row = &mut x[i * cols + jb..i * cols + jend];
+            for (l, v) in row.iter_mut().enumerate() {
+                let e = (*v - mx[l]).exp();
+                *v = e;
+                z[l] += e;
+            }
         }
-        let inv = 1.0 / z.max(1e-20);
+        for zv in z[..w].iter_mut() {
+            *zv = 1.0 / zv.max(1e-20);
+        }
         for i in 0..rows {
-            x[i * cols + j] *= inv;
+            let row = &mut x[i * cols + jb..i * cols + jend];
+            for (l, v) in row.iter_mut().enumerate() {
+                *v *= z[l];
+            }
         }
+        jb = jend;
     }
 }
 
 /// Row-normalize to sum 1 (the A -> A~ step).
 pub fn normalize_rows(x: &mut [f32], rows: usize, cols: usize) {
-    for i in 0..rows {
-        let row = &mut x[i * cols..(i + 1) * cols];
+    for_each_row(x, rows, cols, |row| {
         let s: f32 = row.iter().sum();
         let inv = 1.0 / (s + 1e-8);
         for v in row.iter_mut() {
             *v *= inv;
         }
-    }
+    });
 }
 
 /// L2-normalize each row; zero rows stay zero.
 pub fn l2_normalize_rows(x: &mut [f32], rows: usize, cols: usize) {
-    for i in 0..rows {
-        let row = &mut x[i * cols..(i + 1) * cols];
+    for_each_row(x, rows, cols, |row| {
         let n: f32 = row.iter().map(|v| v * v).sum::<f32>().sqrt();
         let inv = 1.0 / (n + 1e-8);
         for v in row.iter_mut() {
             *v *= inv;
         }
-    }
+    });
 }
 
 /// Layer norm over the last dim with scale `g` and bias `b`.
 pub fn layernorm(x: &mut [f32], rows: usize, cols: usize, g: &[f32], b: &[f32]) {
     assert_eq!(g.len(), cols);
     assert_eq!(b.len(), cols);
-    for i in 0..rows {
-        let row = &mut x[i * cols..(i + 1) * cols];
+    for_each_row(x, rows, cols, |row| {
         let mu: f32 = row.iter().sum::<f32>() / cols as f32;
-        let var: f32 =
-            row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / cols as f32;
+        let var: f32 = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / cols as f32;
         let inv = 1.0 / (var + 1e-6).sqrt();
         for (j, v) in row.iter_mut().enumerate() {
             *v = (*v - mu) * inv * g[j] + b[j];
         }
-    }
+    });
 }
 
 pub fn gelu(x: &mut [f32]) {
@@ -202,9 +227,12 @@ pub fn scatter_add_rows(x: &[f32], cols: usize, idx: &[usize], out: &mut [f32]) 
 }
 
 /// Indices that sort `xs` descending (the ToMe hot-path sort).
+/// `total_cmp` gives a deterministic total order even under NaN (NaN sorts
+/// first, i.e. as the largest keys), where `partial_cmp(..).unwrap_or(Equal)`
+/// made the order depend on comparison sequence.
 pub fn argsort_desc(xs: &[f32]) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..xs.len()).collect();
-    idx.sort_by(|&a, &b| xs[b].partial_cmp(&xs[a]).unwrap_or(std::cmp::Ordering::Equal));
+    idx.sort_by(|&a, &b| xs[b].total_cmp(&xs[a]));
     idx
 }
 
@@ -219,6 +247,9 @@ pub fn argmax(xs: &[f32]) -> usize {
 }
 
 /// Batched GEMM over matching leading dims: (g, m, k) @ (g, k, n).
+/// Parallel over batches; the per-batch GEMM runs the serial blocked
+/// kernel (the pool suppresses nesting), which keeps each batch's panel
+/// working set on one core.
 pub fn bmm(a: &Tensor, b: &Tensor) -> Tensor {
     assert_eq!(a.ndim(), 3);
     assert_eq!(b.ndim(), 3);
@@ -227,16 +258,19 @@ pub fn bmm(a: &Tensor, b: &Tensor) -> Tensor {
     assert_eq!(g, g2);
     assert_eq!(k, k2);
     let mut out = Tensor::zeros(&[g, m, n]);
-    for i in 0..g {
-        let c = matmul(
+    if m * n == 0 {
+        return out;
+    }
+    pool::parallel_chunks_mut(&mut out.data, m * n, |i, chunk| {
+        matmul_into(
             &a.data[i * m * k..(i + 1) * m * k],
             &b.data[i * k * n..(i + 1) * k * n],
+            chunk,
             m,
             k,
             n,
         );
-        out.data[i * m * n..(i + 1) * m * n].copy_from_slice(&c);
-    }
+    });
     out
 }
 
@@ -293,6 +327,21 @@ mod tests {
     }
 
     #[test]
+    fn softmax_cols_tiled_matches_strided_reference() {
+        let mut rng = crate::util::Pcg64::new(3);
+        for (rows, cols) in [(5, 700), (16, 513), (3, 1)] {
+            let x0 = rng.normal_vec(rows * cols);
+            let mut a = x0.clone();
+            let mut b = x0;
+            softmax_cols(&mut a, rows, cols);
+            crate::tensor::gemm::scalar::softmax_cols(&mut b, rows, cols);
+            for (u, v) in a.iter().zip(&b) {
+                assert!((u - v).abs() < 1e-6, "{u} vs {v}");
+            }
+        }
+    }
+
+    #[test]
     fn layernorm_zero_mean_unit_var() {
         let mut x = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
         let g = vec![1.0; 4];
@@ -321,6 +370,13 @@ mod tests {
     fn argsort_desc_orders() {
         assert_eq!(argsort_desc(&[0.1, 0.9, 0.5]), vec![1, 2, 0]);
         assert_eq!(argmax(&[0.1, 0.9, 0.5]), 1);
+    }
+
+    #[test]
+    fn argsort_desc_deterministic_under_nan() {
+        // total_cmp: NaN keys sort as largest, ties keep index order.
+        let idx = argsort_desc(&[0.5, f32::NAN, 0.5, 1.0]);
+        assert_eq!(idx, vec![1, 3, 0, 2]);
     }
 
     #[test]

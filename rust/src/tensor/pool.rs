@@ -1,0 +1,396 @@
+//! Persistent worker pool with a scoped parallel-for (the vendored crate
+//! set has no `rayon`).
+//!
+//! One process-wide pool of `std::thread` workers parks on a condvar;
+//! [`Pool::run`] publishes a borrowed task closure, lets the workers (and
+//! the calling thread) claim chunk indices under the state mutex, and
+//! returns only once every chunk has finished — which is what makes the
+//! lifetime erasure sound: the closure is guaranteed to outlive all uses.
+//!
+//! Design notes:
+//!
+//! * Nested parallelism degrades to serial: a worker thread that calls
+//!   `run` (e.g. `bmm` → `matmul`) executes inline, so the pool can never
+//!   deadlock on itself and inner kernels stay cache-local per worker.
+//! * Concurrent submitters from independent threads (the serving lanes)
+//!   don't queue behind each other: if the pool is busy, `run` executes
+//!   serially on the caller. GEMM-sized tasks amortize either way.
+//! * `TOMA_THREADS=<n>` caps/overrides the worker count (`1` disables
+//!   parallelism entirely — useful for bit-exact A/B debugging).
+
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Shared serial-vs-parallel cutoff: row-wise work over fewer elements
+/// than this runs serially — pool dispatch would dominate the scan.
+pub const PAR_MIN_ELEMS: usize = 1 << 15;
+
+/// Type-erased borrowed task: a raw pointer so worker-local copies may
+/// dangle *after* the submitter has observed completion (raw pointers,
+/// unlike references, are allowed to dangle while unused).
+#[derive(Clone, Copy)]
+struct Task(*const (dyn Fn(usize) + Sync + 'static));
+
+// SAFETY: the pointee is `Sync` (shared-callable) and `Pool::run` blocks
+// until all uses complete, so sending the pointer across threads is sound.
+unsafe impl Send for Task {}
+
+struct State {
+    task: Option<Task>,
+    /// Next chunk index to claim.
+    next: usize,
+    /// Total chunks in the current task.
+    total: usize,
+    /// Workers currently executing a chunk.
+    active: usize,
+    /// A chunk panicked; the submitter re-raises after the task drains.
+    panicked: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers wait here for work.
+    work: Condvar,
+    /// The submitter waits here for completion.
+    done: Condvar,
+}
+
+pub struct Pool {
+    shared: Arc<Shared>,
+    /// Total parallelism including the submitting thread.
+    pub threads: usize,
+    /// Held while a task is in flight; `try_lock` keeps independent
+    /// submitters from queueing (they fall back to serial execution).
+    submit: Mutex<()>,
+}
+
+thread_local! {
+    static IN_POOL: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// Execute one claimed chunk and do the completion bookkeeping. Shared by
+/// the worker loop and the submitter so the claim/complete protocol exists
+/// in exactly one place.
+fn run_chunk(shared: &Shared, task: Task, idx: usize) {
+    // SAFETY: the submitter is still blocked in `run` (active > 0), so the
+    // closure behind the pointer is alive for the whole call.
+    let f = unsafe { &*task.0 };
+    // Catch panics so a failing chunk reports instead of hanging the
+    // submitter (the panic message already went to stderr via the hook).
+    let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(idx))).is_ok();
+    let mut st = shared.state.lock().unwrap();
+    st.active -= 1;
+    if !ok {
+        st.panicked = true;
+        st.next = st.total; // stop handing out further chunks
+    }
+    if st.next >= st.total && st.active == 0 {
+        st.task = None;
+        shared.done.notify_all();
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    IN_POOL.with(|c| c.set(true));
+    loop {
+        // Claim one chunk (or sleep until a task appears).
+        let (task, idx) = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if let Some(task) = st.task {
+                    if st.next < st.total {
+                        let i = st.next;
+                        st.next += 1;
+                        st.active += 1;
+                        break (task, i);
+                    }
+                }
+                st = shared.work.wait(st).unwrap();
+            }
+        };
+        run_chunk(&shared, task, idx);
+    }
+}
+
+impl Pool {
+    fn new() -> Pool {
+        let threads = std::env::var("TOMA_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(1)
+            })
+            .clamp(1, 64);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                task: None,
+                next: 0,
+                total: 0,
+                active: 0,
+                panicked: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        // The submitting thread participates, so spawn threads - 1 workers.
+        for w in 1..threads {
+            let sh = shared.clone();
+            std::thread::Builder::new()
+                .name(format!("toma-pool-{w}"))
+                .spawn(move || worker_loop(sh))
+                .expect("spawn pool worker");
+        }
+        Pool {
+            shared,
+            threads,
+            submit: Mutex::new(()),
+        }
+    }
+
+    /// Run `f(0), f(1), ..., f(total - 1)` across the pool, blocking until
+    /// every call has returned. Calls may run in any order and on any
+    /// thread; `f` must therefore be `Sync` and index-disjoint in its
+    /// effects.
+    pub fn run(&self, total: usize, f: &(dyn Fn(usize) + Sync)) {
+        if total == 0 {
+            return;
+        }
+        let run_serial = self.threads <= 1 || total == 1 || IN_POOL.with(|c| c.get());
+        if run_serial {
+            for i in 0..total {
+                f(i);
+            }
+            return;
+        }
+        // Busy pool (another thread mid-task): execute inline instead of
+        // queueing — keeps serving lanes independent and deadlock-free.
+        let guard = match self.submit.try_lock() {
+            Ok(g) => g,
+            Err(_) => {
+                for i in 0..total {
+                    f(i);
+                }
+                return;
+            }
+        };
+        // SAFETY: lifetime erasure only; `run` does not return until all
+        // chunks completed, so the borrow outlives every use.
+        let task = Task(unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f)
+                as *const _
+        });
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            debug_assert!(st.task.is_none(), "pool task already in flight");
+            st.task = Some(task);
+            st.next = 0;
+            st.total = total;
+            st.panicked = false;
+            self.shared.work.notify_all();
+        }
+        // The submitter participates in the same chunk race.
+        loop {
+            let idx = {
+                let mut st = self.shared.state.lock().unwrap();
+                if st.next < st.total {
+                    let i = st.next;
+                    st.next += 1;
+                    st.active += 1;
+                    Some(i)
+                } else {
+                    None
+                }
+            };
+            let Some(i) = idx else { break };
+            run_chunk(&self.shared, task, i);
+        }
+        // Wait for the stragglers; only then is it safe to release the
+        // borrowed closure (and to re-raise any chunk panic).
+        let mut st = self.shared.state.lock().unwrap();
+        while st.task.is_some() {
+            st = self.shared.done.wait(st).unwrap();
+        }
+        let panicked = st.panicked;
+        st.panicked = false;
+        drop(st);
+        drop(guard);
+        if panicked {
+            panic!("parallel task panicked in worker pool (see stderr above)");
+        }
+    }
+}
+
+/// The process-wide pool (created on first use).
+pub fn global() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    POOL.get_or_init(Pool::new)
+}
+
+/// Parallel for over `n` indices.
+pub fn parallel_for(n: usize, f: impl Fn(usize) + Sync) {
+    global().run(n, &f);
+}
+
+/// Raw-pointer wrapper for handing disjoint `&mut` chunks to workers.
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// Split `data` into chunks of `chunk` elements (last may be short) and
+/// run `f(chunk_index, chunk)` for each in parallel. The chunks are
+/// disjoint, so handing each to one worker is race-free.
+pub fn parallel_chunks_mut<T: Send>(
+    data: &mut [T],
+    chunk: usize,
+    f: impl Fn(usize, &mut [T]) + Sync,
+) {
+    assert!(chunk > 0, "chunk size must be positive");
+    let len = data.len();
+    if len == 0 {
+        return;
+    }
+    let n_chunks = (len + chunk - 1) / chunk;
+    let base = SendPtr(data.as_mut_ptr());
+    global().run(n_chunks, &|ci| {
+        let start = ci * chunk;
+        let end = (start + chunk).min(len);
+        // SAFETY: [start, end) ranges are disjoint across chunk indices and
+        // in-bounds; the parent `&mut` borrow is held for the whole call.
+        let slice = unsafe { std::slice::from_raw_parts_mut(base.0.add(start), end - start) };
+        f(ci, slice);
+    });
+}
+
+/// Like [`parallel_chunks_mut`] but over two parallel arrays chunked with
+/// the same stride (e.g. a value array and an index array filled together).
+/// Both must have the same length.
+pub fn parallel_chunks2_mut<T: Send, U: Send>(
+    a: &mut [T],
+    b: &mut [U],
+    chunk: usize,
+    f: impl Fn(usize, &mut [T], &mut [U]) + Sync,
+) {
+    assert!(chunk > 0, "chunk size must be positive");
+    assert_eq!(a.len(), b.len(), "parallel arrays must match");
+    let len = a.len();
+    if len == 0 {
+        return;
+    }
+    let n_chunks = (len + chunk - 1) / chunk;
+    let pa = SendPtr(a.as_mut_ptr());
+    let pb = SendPtr(b.as_mut_ptr());
+    global().run(n_chunks, &|ci| {
+        let start = ci * chunk;
+        let end = (start + chunk).min(len);
+        // SAFETY: disjoint in-bounds ranges per chunk index (see above).
+        let sa = unsafe { std::slice::from_raw_parts_mut(pa.0.add(start), end - start) };
+        let sb = unsafe { std::slice::from_raw_parts_mut(pb.0.add(start), end - start) };
+        f(ci, sa, sb);
+    });
+}
+
+/// Chunk rows so each task is big enough to amortize dispatch but the
+/// pool still load-balances: aim for ~2 tasks per thread.
+pub fn rows_per_task(rows: usize) -> usize {
+    let t = global().threads.max(1);
+    ((rows + 2 * t - 1) / (2 * t)).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_every_index_exactly_once() {
+        let n = 257;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for(n, |i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn chunks_cover_disjointly() {
+        let mut v = vec![0u32; 1000];
+        parallel_chunks_mut(&mut v, 37, |ci, chunk| {
+            for (o, x) in chunk.iter_mut().enumerate() {
+                *x = (ci * 37 + o) as u32;
+            }
+        });
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i as u32);
+        }
+    }
+
+    #[test]
+    fn chunks2_fill_both_arrays() {
+        let mut a = vec![0u32; 100];
+        let mut b = vec![0u64; 100];
+        parallel_chunks2_mut(&mut a, &mut b, 9, |ci, ca, cb| {
+            for o in 0..ca.len() {
+                let i = ci * 9 + o;
+                ca[o] = i as u32;
+                cb[o] = (i * 2) as u64;
+            }
+        });
+        for i in 0..100 {
+            assert_eq!(a[i] as usize, i);
+            assert_eq!(b[i] as usize, i * 2);
+        }
+    }
+
+    #[test]
+    fn nested_calls_run_serially_not_deadlock() {
+        let count = AtomicUsize::new(0);
+        parallel_for(8, |_| {
+            parallel_for(8, |_| {
+                count.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 64);
+    }
+
+    #[test]
+    fn reusable_across_submissions() {
+        let total = AtomicUsize::new(0);
+        for _ in 0..20 {
+            parallel_for(13, |i| {
+                total.fetch_add(i, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(total.load(Ordering::SeqCst), 20 * (13 * 12) / 2);
+    }
+
+    #[test]
+    fn chunk_panic_propagates_and_pool_survives() {
+        let result = std::panic::catch_unwind(|| {
+            parallel_for(16, |i| {
+                if i == 7 {
+                    panic!("intentional test panic");
+                }
+            });
+        });
+        assert!(result.is_err(), "panic must propagate to the submitter");
+        // The pool must stay usable afterwards.
+        let c = AtomicUsize::new(0);
+        parallel_for(8, |_| {
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(c.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn borrows_local_state() {
+        // The whole point of the scoped design: closures may borrow the
+        // caller's stack.
+        let data: Vec<usize> = (0..100).collect();
+        let sum = AtomicUsize::new(0);
+        parallel_for(data.len(), |i| {
+            sum.fetch_add(data[i], Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 4950);
+    }
+}

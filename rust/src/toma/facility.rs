@@ -2,11 +2,24 @@
 //!
 //! Implements the cached-max formulation of App. A.1: the marginal gain of
 //! candidate `i` against the selected set is `sum_j max(0, S_ij - m_j)`
-//! where `m_j` caches token `j`'s best similarity to the current set. Each
-//! iteration is a dense row scan — no sorting, no scattered writes — and
-//! maps 1:1 onto the JAX/Pallas kernels.
+//! where `m_j` caches token `j`'s best similarity to the current set.
+//!
+//! Since PR 1 the greedy loop maintains gains *incrementally* (lazy greedy
+//! / CELF, Minoux 1978): every candidate keeps a cached gain from the last
+//! round it was evaluated in. Submodularity makes that cache an upper
+//! bound — selecting a destination only raises `m`, which only shrinks
+//! `max(0, S_ij - m_j)` terms — so each round pops the largest cached
+//! gain from a max-heap and re-scores only until a candidate's *fresh*
+//! gain tops the heap. Per-round cost drops from the seed's full O(n²)
+//! rescan to O(n · rescored), with rescored typically a handful.
+//!
+//! The rescore uses byte-for-byte the seed's row scan (same summation
+//! order), and ties break toward the smaller index exactly like the seed's
+//! strict-`>` ascending argmax — so the selected index set is identical to
+//! [`fl_select_ref`], which the property tests assert.
 
 use crate::tensor::ops::l2_normalize_rows;
+use crate::tensor::pool;
 
 /// Cosine similarity matrix S (n x n) of row-major features x (n x d).
 pub fn similarity_matrix(x: &[f32], n: usize, d: usize) -> Vec<f32> {
@@ -16,13 +29,128 @@ pub fn similarity_matrix(x: &[f32], n: usize, d: usize) -> Vec<f32> {
     crate::tensor::ops::matmul_bt(&xn, &xn, n, d, n)
 }
 
+/// Marginal gain of one similarity row against the cached maxima `m` —
+/// the seed's exact scan, kept as a single summation order so cached and
+/// re-scored gains are bit-identical.
+#[inline]
+fn gain_row(row: &[f32], m: &[f32]) -> f32 {
+    let mut gain = 0.0f32;
+    for (s, mm) in row.iter().zip(m) {
+        let g = s - mm;
+        if g > 0.0 {
+            gain += g;
+        }
+    }
+    gain
+}
+
+/// Max-heap entry: cached gain + the round it was computed in.
+struct Entry {
+    gain: f32,
+    idx: usize,
+    round: usize,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+impl Eq for Entry {}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Larger gain wins; on exact ties the smaller index wins (matches
+        // the reference's ascending strict-`>` argmax).
+        self.gain
+            .total_cmp(&other.gain)
+            .then_with(|| other.idx.cmp(&self.idx))
+    }
+}
+
 /// Greedy FL selection of `k` destinations from an (n x n) similarity
 /// matrix. Returns sorted-ascending indices (matches `ref.fl_select`).
+///
+/// Same selection as [`fl_select_ref`], computed with incremental gain
+/// maintenance instead of a full per-round rescan.
 pub fn fl_select(sim: &[f32], n: usize, k: usize) -> Vec<usize> {
     assert_eq!(sim.len(), n * n);
     assert!(k >= 1 && k <= n);
-    // m initialised to -1 (the cosine lower bound) so the first iteration
+    // m initialised to -1 (the cosine lower bound) so the first round
     // reduces to the row-sum rule of Alg. 2.
+    let mut m = vec![-1.0f32; n];
+
+    // Round-1 gains for every candidate, in parallel over row blocks
+    // (serially for similarity matrices too small to amortize dispatch).
+    let mut gains = vec![0.0f32; n];
+    if n * n < pool::PAR_MIN_ELEMS {
+        for (i, g) in gains.iter_mut().enumerate() {
+            *g = gain_row(&sim[i * n..(i + 1) * n], &m);
+        }
+    } else {
+        let m_ref = &m;
+        let per = pool::rows_per_task(n);
+        pool::parallel_chunks_mut(&mut gains, per, |ci, chunk| {
+            for (off, g) in chunk.iter_mut().enumerate() {
+                let i = ci * per + off;
+                *g = gain_row(&sim[i * n..(i + 1) * n], m_ref);
+            }
+        });
+    }
+
+    let mut heap = std::collections::BinaryHeap::with_capacity(n + k);
+    // `stamp[i]` is the round whose `m` the live heap entry for `i` was
+    // scored against; entries with a stale stamp are superseded duplicates.
+    let mut stamp = vec![1usize; n];
+    for (i, &g) in gains.iter().enumerate() {
+        heap.push(Entry {
+            gain: g,
+            idx: i,
+            round: 1,
+        });
+    }
+
+    let mut idx = Vec::with_capacity(k);
+    for round in 1..=k {
+        let t = loop {
+            let e = heap.pop().expect("candidates remain");
+            if stamp[e.idx] != e.round {
+                continue; // superseded (or already selected)
+            }
+            if e.round == round {
+                break e.idx; // fresh this round: the true argmax
+            }
+            // Stale upper bound: re-score against the current m and requeue.
+            let g = gain_row(&sim[e.idx * n..(e.idx + 1) * n], &m);
+            stamp[e.idx] = round;
+            heap.push(Entry {
+                gain: g,
+                idx: e.idx,
+                round,
+            });
+        };
+        idx.push(t);
+        stamp[t] = usize::MAX; // never pops again
+        let row = &sim[t * n..(t + 1) * n];
+        for (mm, s) in m.iter_mut().zip(row) {
+            if *s > *mm {
+                *mm = *s;
+            }
+        }
+    }
+    idx.sort_unstable();
+    idx
+}
+
+/// The seed's full-rescan greedy selection — O(n²) per round. Retained as
+/// the ground truth the incremental version must match index-for-index.
+pub fn fl_select_ref(sim: &[f32], n: usize, k: usize) -> Vec<usize> {
+    assert_eq!(sim.len(), n * n);
+    assert!(k >= 1 && k <= n);
     let mut m = vec![-1.0f32; n];
     let mut avail = vec![true; n];
     let mut idx = Vec::with_capacity(k);
@@ -33,14 +161,7 @@ pub fn fl_select(sim: &[f32], n: usize, k: usize) -> Vec<usize> {
             if !avail[i] {
                 continue;
             }
-            let row = &sim[i * n..(i + 1) * n];
-            let mut gain = 0.0f32;
-            for (s, mm) in row.iter().zip(&m) {
-                let g = s - mm;
-                if g > 0.0 {
-                    gain += g;
-                }
-            }
+            let gain = gain_row(&sim[i * n..(i + 1) * n], &m);
             if gain > best_gain {
                 best_gain = gain;
                 best = i;
@@ -75,7 +196,9 @@ pub fn fl_objective(sim: &[f32], n: usize, idx: &[usize]) -> f32 {
 }
 
 /// Per-region FL selection: features (regions, n_loc, d) flattened; returns
-/// region-local destination indices (regions, k_loc) flattened.
+/// region-local destination indices (regions, k_loc) flattened. Regions are
+/// independent, so they fan out across the worker pool (the per-region
+/// similarity GEMM then runs serially on its worker).
 pub fn fl_select_regions(
     xs: &[f32],
     regions: usize,
@@ -84,11 +207,23 @@ pub fn fl_select_regions(
     k_loc: usize,
 ) -> Vec<usize> {
     assert_eq!(xs.len(), regions * n_loc * d);
-    let mut out = Vec::with_capacity(regions * k_loc);
-    for p in 0..regions {
+    let mut out = vec![0usize; regions * k_loc];
+    if k_loc == 0 {
+        return out;
+    }
+    let select_region = |p: usize, chunk: &mut [usize]| {
         let block = &xs[p * n_loc * d..(p + 1) * n_loc * d];
         let sim = similarity_matrix(block, n_loc, d);
-        out.extend(fl_select(&sim, n_loc, k_loc));
+        chunk.copy_from_slice(&fl_select(&sim, n_loc, k_loc));
+    };
+    // Region work is dominated by the n_loc^2 * d similarity GEMM; tiny
+    // totals run serially rather than paying pool dispatch.
+    if regions == 1 || regions * n_loc * n_loc * d < pool::PAR_MIN_ELEMS {
+        for p in 0..regions {
+            select_region(p, &mut out[p * k_loc..(p + 1) * k_loc]);
+        }
+    } else {
+        pool::parallel_chunks_mut(&mut out, k_loc, |p, chunk| select_region(p, chunk));
     }
     out
 }
@@ -173,6 +308,46 @@ mod tests {
             assert!(chunk.windows(2).all(|w| w[0] < w[1]));
             assert!(chunk.iter().all(|&i| i < 8));
         }
+    }
+
+    #[test]
+    fn incremental_matches_reference_on_duplicates() {
+        // Duplicate tokens force exact gain ties: the tie-break must match
+        // the reference's smallest-index rule.
+        let base = randn(6, 5, 7);
+        let mut x = vec![];
+        for _ in 0..3 {
+            x.extend_from_slice(&base);
+        }
+        let s = similarity_matrix(&x, 18, 5);
+        for k in [1, 2, 5, 9, 18] {
+            assert_eq!(fl_select(&s, 18, k), fl_select_ref(&s, 18, k), "k={k}");
+        }
+    }
+
+    #[test]
+    fn prop_incremental_bit_identical_to_reference() {
+        prop::check("fl incremental == ref", 40, |g| {
+            let n = g.usize_in(2, 48);
+            let d = g.usize_in(2, 8);
+            let k = g.usize_in(1, n);
+            let x = if g.bool() {
+                g.normal_vec(n * d)
+            } else {
+                // Clustered features: near-duplicate rows, tie-heavy gains.
+                let protos = g.normal_vec(3 * d);
+                let mut xs = Vec::with_capacity(n * d);
+                for i in 0..n {
+                    xs.extend_from_slice(&protos[(i % 3) * d..(i % 3 + 1) * d]);
+                }
+                xs
+            };
+            let sim = similarity_matrix(&x, n, d);
+            prop::assert_prop(
+                fl_select(&sim, n, k) == fl_select_ref(&sim, n, k),
+                "incremental selection diverged from full-rescan reference",
+            );
+        });
     }
 
     #[test]

@@ -30,12 +30,15 @@ pub fn build_merge_weights(x: &[f32], n: usize, d: usize, idx: &[usize], tau: f3
     let k = idx.len();
     let mut xn = x.to_vec();
     l2_normalize_rows(&mut xn, n, d);
-    let dn = gather_rows(&xn, d, idx);
-    // logits = D_n X_n^T / tau  (k x n)
-    let mut a = crate::tensor::ops::matmul_bt(&dn, &xn, k, d, n);
-    for v in &mut a {
-        *v /= tau;
+    // Fold the 1/tau temperature into the k x d destination rows before
+    // the GEMM: O(k*d) scales instead of an O(k*n) pass over the logits.
+    let mut dn = gather_rows(&xn, d, idx);
+    let inv_tau = 1.0 / tau;
+    for v in &mut dn {
+        *v *= inv_tau;
     }
+    // logits = (D_n / tau) X_n^T  (k x n)
+    let mut a = crate::tensor::ops::matmul_bt(&dn, &xn, k, d, n);
     softmax_cols(&mut a, k, n);
     let mut a_tilde = a.clone();
     normalize_rows(&mut a_tilde, k, n);

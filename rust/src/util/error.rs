@@ -1,0 +1,108 @@
+//! Minimal `anyhow`-shaped error plumbing (the vendored crate set has no
+//! `anyhow`). `Error` is a boxed trait object, so `?` converts any std
+//! error; the [`crate::anyhow!`] / [`crate::ensure!`] macros and the
+//! [`Context`] trait cover the call-site patterns the crate uses.
+
+use std::fmt::Display;
+
+/// Boxed dynamic error — what `anyhow::Error` is for our purposes.
+pub type Error = Box<dyn std::error::Error + Send + Sync + 'static>;
+
+/// Crate-wide result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Build an [`Error`] from a format string — the `anyhow!` macro body.
+pub fn msg(m: String) -> Error {
+    m.into()
+}
+
+/// `anyhow::Context` stand-in: wrap an error with a prefix message.
+pub trait Context<T> {
+    fn context<D: Display>(self, msg: D) -> Result<T>;
+    fn with_context<D: Display, F: FnOnce() -> D>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Display> Context<T> for std::result::Result<T, E> {
+    fn context<D: Display>(self, msg: D) -> Result<T> {
+        self.map_err(|e| crate::util::error::msg(format!("{msg}: {e}")))
+    }
+
+    fn with_context<D: Display, F: FnOnce() -> D>(self, f: F) -> Result<T> {
+        self.map_err(|e| crate::util::error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<D: Display>(self, msg: D) -> Result<T> {
+        self.ok_or_else(|| crate::util::error::msg(format!("{msg}")))
+    }
+
+    fn with_context<D: Display, F: FnOnce() -> D>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| crate::util::error::msg(format!("{}", f())))
+    }
+}
+
+/// `anyhow!`-compatible error constructor.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::msg(format!($($arg)*))
+    };
+}
+
+/// `anyhow::ensure!`-compatible early-return check.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::util::error::msg(format!($($arg)*)));
+        }
+    };
+}
+
+/// `anyhow::bail!`-compatible early return.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::util::error::msg(format!($($arg)*)))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn macro_formats() {
+        let e: Error = crate::anyhow!("bad {} of {}", 3, "x");
+        assert_eq!(e.to_string(), "bad 3 of x");
+    }
+
+    #[test]
+    fn question_mark_converts_io() {
+        fn f() -> Result<()> {
+            std::fs::read_to_string("/definitely/not/a/path/xyz")?;
+            Ok(())
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn context_wraps() {
+        let r: std::result::Result<(), std::fmt::Error> = Err(std::fmt::Error);
+        let e = r.context("while formatting").unwrap_err();
+        assert!(e.to_string().starts_with("while formatting:"));
+        let o: Option<u32> = None;
+        assert!(o.with_context(|| "missing").is_err());
+    }
+
+    #[test]
+    fn ensure_returns_err() {
+        fn f(x: u32) -> Result<u32> {
+            crate::ensure!(x < 10, "x too big: {x}");
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert!(f(30).is_err());
+    }
+}

@@ -1,6 +1,8 @@
-//! Substrate utilities: RNG, statistics, JSON, CLI parsing, property tests.
+//! Substrate utilities: RNG, statistics, JSON, CLI parsing, property
+//! tests, and the crate-wide error plumbing.
 
 pub mod argparse;
+pub mod error;
 pub mod json;
 pub mod prop;
 pub mod rng;

@@ -1,5 +1,7 @@
 //! Integration: the generation engine end-to-end (all variants, schedules,
-//! determinism, quality ordering). Requires `make artifacts`.
+//! determinism, quality ordering). Requires `make artifacts` and the
+//! `pjrt` feature (the default build compiles PJRT stubs only).
+#![cfg(feature = "pjrt")]
 
 use std::sync::Arc;
 

@@ -1,7 +1,9 @@
 //! Integration: PJRT runtime vs the independent pure-Rust model.
 //!
-//! Requires `make artifacts`. Each test builds its own Runtime (the PJRT
+//! Requires `make artifacts` and the `pjrt` feature (the default build
+//! compiles PJRT stubs only). Each test builds its own Runtime (the PJRT
 //! handles are intentionally single-threaded).
+#![cfg(feature = "pjrt")]
 
 use std::sync::Arc;
 

@@ -1,0 +1,239 @@
+//! Property tests for PR 1's parallel substrate: the blocked / tiled /
+//! multithreaded kernels must agree with the seed's scalar references
+//! within 1e-4 across random shapes (including ragged sizes that do not
+//! divide the tile), and the incremental-gain facility-location selection
+//! must return exactly the indices of the full-rescan seed algorithm.
+
+use toma::tensor::gemm::scalar;
+use toma::tensor::ops::{
+    bmm, l2_normalize_rows, layernorm, matmul, matmul_at, matmul_bt, softmax_cols, softmax_rows,
+};
+use toma::tensor::Tensor;
+use toma::toma::facility::{fl_select, fl_select_ref, fl_select_regions, similarity_matrix};
+use toma::util::prop;
+
+fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= tol * (1.0 + y.abs()),
+            "{what}: elem {i}: {x} vs {y}"
+        );
+    }
+}
+
+#[test]
+fn prop_matmul_matches_scalar_reference() {
+    prop::check("matmul == scalar", 30, |g| {
+        let m = g.usize_in(1, 70);
+        let k = g.usize_in(1, 70);
+        let n = g.usize_in(1, 70);
+        let a = g.normal_vec(m * k);
+        let b = g.normal_vec(k * n);
+        assert_close(
+            &matmul(&a, &b, m, k, n),
+            &scalar::matmul(&a, &b, m, k, n),
+            1e-4,
+            "matmul",
+        );
+    });
+}
+
+#[test]
+fn prop_matmul_bt_matches_scalar_reference() {
+    prop::check("matmul_bt == scalar", 30, |g| {
+        let m = g.usize_in(1, 70);
+        let k = g.usize_in(1, 70);
+        let n = g.usize_in(1, 70);
+        let a = g.normal_vec(m * k);
+        let b = g.normal_vec(n * k);
+        assert_close(
+            &matmul_bt(&a, &b, m, k, n),
+            &scalar::matmul_bt(&a, &b, m, k, n),
+            1e-4,
+            "matmul_bt",
+        );
+    });
+}
+
+#[test]
+fn prop_matmul_at_matches_scalar_reference() {
+    prop::check("matmul_at == scalar", 30, |g| {
+        let k = g.usize_in(1, 70);
+        let m = g.usize_in(1, 70);
+        let n = g.usize_in(1, 70);
+        let a = g.normal_vec(k * m);
+        let b = g.normal_vec(k * n);
+        assert_close(
+            &matmul_at(&a, &b, k, m, n),
+            &scalar::matmul_at(&a, &b, k, m, n),
+            1e-4,
+            "matmul_at",
+        );
+    });
+}
+
+#[test]
+fn large_parallel_gemms_match_scalar_reference() {
+    // Shapes big enough to take the multithreaded path, sized so they do
+    // NOT divide the KC=256 / JB=64 / 8-lane tiles.
+    let mut rng = toma::util::Pcg64::new(42);
+    for (m, k, n) in [(130, 257, 66), (64, 641, 100), (33, 100, 310)] {
+        let a = rng.normal_vec(m * k);
+        let b = rng.normal_vec(k * n);
+        assert_close(
+            &matmul(&a, &b, m, k, n),
+            &scalar::matmul(&a, &b, m, k, n),
+            1e-4,
+            "large matmul",
+        );
+        let bt = rng.normal_vec(n * k);
+        assert_close(
+            &matmul_bt(&a, &bt, m, k, n),
+            &scalar::matmul_bt(&a, &bt, m, k, n),
+            1e-4,
+            "large matmul_bt",
+        );
+    }
+}
+
+#[test]
+fn prop_bmm_matches_per_batch_scalar() {
+    prop::check("bmm == per-batch scalar", 16, |g| {
+        let gn = g.usize_in(1, 6);
+        let m = g.usize_in(1, 20);
+        let k = g.usize_in(1, 20);
+        let n = g.usize_in(1, 20);
+        let a = Tensor::new(g.normal_vec(gn * m * k), &[gn, m, k]);
+        let b = Tensor::new(g.normal_vec(gn * k * n), &[gn, k, n]);
+        let c = bmm(&a, &b);
+        for i in 0..gn {
+            let want = scalar::matmul(
+                &a.data[i * m * k..(i + 1) * m * k],
+                &b.data[i * k * n..(i + 1) * k * n],
+                m,
+                k,
+                n,
+            );
+            assert_close(&c.data[i * m * n..(i + 1) * m * n], &want, 1e-4, "bmm");
+        }
+    });
+}
+
+#[test]
+fn prop_softmax_cols_matches_strided_reference() {
+    prop::check("softmax_cols tiled == strided", 20, |g| {
+        let rows = g.usize_in(1, 24);
+        let cols = g.usize_in(1, 700); // crosses the NB=512 tile
+        let x0 = g.normal_vec(rows * cols);
+        let mut tiled = x0.clone();
+        let mut strided = x0;
+        softmax_cols(&mut tiled, rows, cols);
+        scalar::softmax_cols(&mut strided, rows, cols);
+        assert_close(&tiled, &strided, 1e-6, "softmax_cols");
+    });
+}
+
+#[test]
+fn parallel_row_ops_match_serial() {
+    // Big enough that the row ops take the pool path; compare against a
+    // serial per-row computation of the same formulas.
+    let mut rng = toma::util::Pcg64::new(7);
+    let (rows, cols) = (600, 80); // 48k elements > the parallel threshold
+    let x0 = rng.normal_vec(rows * cols);
+
+    let mut par = x0.clone();
+    softmax_rows(&mut par, rows, cols);
+    for r in 0..rows {
+        let row = &x0[r * cols..(r + 1) * cols];
+        let mx = row.iter().fold(f32::NEG_INFINITY, |m, v| m.max(*v));
+        let z: f32 = row.iter().map(|v| (v - mx).exp()).sum();
+        for (c, v) in row.iter().enumerate() {
+            let want = (v - mx).exp() / z.max(1e-20);
+            assert!((par[r * cols + c] - want).abs() < 1e-6);
+        }
+    }
+
+    let mut par = x0.clone();
+    l2_normalize_rows(&mut par, rows, cols);
+    for r in 0..rows {
+        let row = &x0[r * cols..(r + 1) * cols];
+        let n: f32 = row.iter().map(|v| v * v).sum::<f32>().sqrt();
+        for (c, v) in row.iter().enumerate() {
+            assert!((par[r * cols + c] - v / (n + 1e-8)).abs() < 1e-6);
+        }
+    }
+
+    let g: Vec<f32> = (0..cols).map(|i| 1.0 + i as f32 / cols as f32).collect();
+    let b: Vec<f32> = (0..cols).map(|i| i as f32 * 0.01).collect();
+    let mut par = x0.clone();
+    layernorm(&mut par, rows, cols, &g, &b);
+    for r in 0..rows {
+        let row = &x0[r * cols..(r + 1) * cols];
+        let mu: f32 = row.iter().sum::<f32>() / cols as f32;
+        let var: f32 = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / cols as f32;
+        let inv = 1.0 / (var + 1e-6).sqrt();
+        for (c, v) in row.iter().enumerate() {
+            let want = (v - mu) * inv * g[c] + b[c];
+            assert!((par[r * cols + c] - want).abs() < 1e-5);
+        }
+    }
+}
+
+#[test]
+fn prop_fl_select_incremental_identical_to_seed() {
+    prop::check("fl_select == fl_select_ref", 48, |g| {
+        let n = g.usize_in(2, 64);
+        let d = g.usize_in(2, 10);
+        let k = g.usize_in(1, n);
+        // Mix of smooth random features and tie-heavy clustered features.
+        let x = match g.usize_in(0, 2) {
+            0 => g.normal_vec(n * d),
+            1 => {
+                let protos = g.normal_vec(2 * d);
+                (0..n)
+                    .flat_map(|i| protos[(i % 2) * d..(i % 2 + 1) * d].to_vec())
+                    .collect()
+            }
+            _ => {
+                // Constant features: every gain ties every round.
+                vec![1.0f32; n * d]
+            }
+        };
+        let sim = similarity_matrix(&x, n, d);
+        let fast = fl_select(&sim, n, k);
+        let slow = fl_select_ref(&sim, n, k);
+        prop::assert_prop(fast == slow, "incremental fl_select diverged from seed");
+    });
+}
+
+#[test]
+fn fl_select_above_parallel_threshold_matches_seed() {
+    // n*n >= PAR_MIN_ELEMS: the round-1 gains take the pool path, so this
+    // covers the parallel chunk-to-row index mapping, not just the serial
+    // fallback the small property cases hit.
+    let mut rng = toma::util::Pcg64::new(13);
+    let (n, d) = (200, 8);
+    let x = rng.normal_vec(n * d);
+    let sim = similarity_matrix(&x, n, d);
+    for k in [1, 64, 100, 200] {
+        assert_eq!(fl_select(&sim, n, k), fl_select_ref(&sim, n, k), "k={k}");
+    }
+}
+
+#[test]
+fn fl_select_regions_matches_sequential_seed() {
+    // regions * n_loc^2 * d above the parallel threshold: regions fan out
+    // across the pool.
+    let mut rng = toma::util::Pcg64::new(11);
+    let (regions, n_loc, d, k_loc) = (8, 32, 8, 12);
+    let xs = rng.normal_vec(regions * n_loc * d);
+    let par = fl_select_regions(&xs, regions, n_loc, d, k_loc);
+    assert_eq!(par.len(), regions * k_loc);
+    for p in 0..regions {
+        let block = &xs[p * n_loc * d..(p + 1) * n_loc * d];
+        let sim = similarity_matrix(block, n_loc, d);
+        let want = fl_select_ref(&sim, n_loc, k_loc);
+        assert_eq!(&par[p * k_loc..(p + 1) * k_loc], &want[..], "region {p}");
+    }
+}
