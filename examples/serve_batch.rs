@@ -1,35 +1,92 @@
 //! End-to-end serving driver (the DESIGN.md validation workload).
 //!
-//! Loads the small real model (uvit_s: 1024 tokens, the SDXL stand-in),
-//! serves a batch of prompted generation requests through the threaded
-//! coordinator with and without ToMA, and reports latency / throughput plus
-//! the plan-cache statistics. Results are recorded in EXPERIMENTS.md.
+//! Part 1 — micro-batching scheduler (artifact-free): a synthetic host
+//! model serves a prompted batch through step-level cohorts at several
+//! batch sizes, showing the shared-plan amortization (`refresh_all` is
+//! per cohort step, not per request) and p50/p95/p99 latency.
+//!
+//! Part 2 — pjrt per-request server: the original per-request lanes over
+//! compiled artifacts; skipped with a note when no artifacts / `pjrt`
+//! feature are available.
 //!
 //! ```bash
 //! cargo run --release --example serve_batch -- --requests 8 --workers 2 \
 //!     --steps 30 --model uvit_s
 //! ```
 
-use toma::util::error::Result;
+use std::sync::Arc;
+
+use toma::coordinator::scheduler::{BatchPolicy, HostBackend, Scheduler, DEFAULT_TAU};
 use toma::coordinator::{EngineConfig, GenRequest, Server};
+use toma::model::HostUVit;
 use toma::report::Table;
+use toma::runtime::ModelInfo;
 use toma::util::argparse::Args;
+use toma::util::error::Result;
 use toma::util::stats;
 use toma::workload::{request_stream, PromptSet};
 
-fn main() -> Result<()> {
-    let args = Args::from_env();
-    let model = args.get_str("model", "uvit_s");
-    let n = args.get_usize("requests", 8);
-    let workers = args.get_usize("workers", 2);
-    let steps = args.get_usize("steps", 30);
-    let ratio = args.get_f64("ratio", 0.5);
-
+fn scheduler_demo(n: usize, steps: usize, ratio: f64) -> Result<()> {
+    let info = ModelInfo::synthetic("uvit_demo", 8, 3, 32, 4, 4, 8);
+    let model = Arc::new(HostUVit::synthetic(&info, 2, 7));
     let prompts = PromptSet::gemrec();
     let stream = request_stream(&prompts, n, 0.0, 17);
 
     let mut table = Table::new(&format!(
-        "serve_batch: {model}, {n} requests, {workers} workers, {steps} steps"
+        "micro-batch scheduler (synthetic host model): {n} requests, {steps} steps"
+    ))
+    .headers(&[
+        "Batch", "Wall (s)", "Img/s", "p50 svc (s)", "p99 svc (s)", "RefreshAll/req",
+    ]);
+    for max_batch in [1usize, 4] {
+        let m = model.clone();
+        let sched = Scheduler::new(
+            BatchPolicy {
+                max_batch,
+                max_queue_wait_s: 0.1,
+                ..Default::default()
+            },
+            move |c: &EngineConfig| HostBackend::boxed(m.clone(), c.clone(), 4, DEFAULT_TAU),
+        );
+        let mut cfg = EngineConfig::new("uvit_demo", "toma", Some(ratio));
+        cfg.steps = steps;
+        let reqs: Vec<GenRequest> = stream
+            .iter()
+            .map(|r| GenRequest::new(&r.prompt, r.seed))
+            .collect();
+        let t0 = std::time::Instant::now();
+        let completions = sched.run_batch(&cfg, reqs);
+        let wall = t0.elapsed().as_secs_f64();
+        let ok = completions.iter().filter(|c| c.result.is_ok()).count();
+        toma::ensure!(ok == n, "{} of {n} scheduler requests failed", n - ok);
+        let lat = sched
+            .metrics
+            .latency_summary("service_time")
+            .expect("latency recorded");
+        table.row(vec![
+            format!("{max_batch}"),
+            format!("{wall:.2}"),
+            format!("{:.3}", n as f64 / wall),
+            format!("{:.3}", lat.p50_s),
+            format!("{:.3}", lat.p99_s),
+            format!(
+                "{:.3}",
+                sched.metrics.counter("cohort_refresh_all") as f64 / n as f64
+            ),
+        ]);
+        sched.shutdown();
+    }
+    println!("{}", table.render());
+    Ok(())
+}
+
+fn pjrt_server_demo(args: &Args, n: usize, workers: usize, steps: usize, ratio: f64) -> Result<()> {
+    let model = args.get_str("model", "uvit_s");
+    let prompts = PromptSet::gemrec();
+    let stream = request_stream(&prompts, n, 0.0, 17);
+
+    let mut table = Table::new(&format!(
+        "pjrt per-request server: {model}, {n} requests, {workers} workers, {steps} steps"
     ))
     .headers(&[
         "Variant", "Wall (s)", "Img/s", "p50 svc (s)", "p95 svc (s)",
@@ -84,4 +141,24 @@ fn main() -> Result<()> {
 
     println!("{}", table.render());
     Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let n = args.get_usize("requests", 8);
+    let workers = args.get_usize("workers", 2);
+    let steps = args.get_usize("steps", 30);
+    let ratio = args.get_f64("ratio", 0.5);
+
+    scheduler_demo(n, steps, ratio)?;
+
+    // The per-request pjrt path needs compiled artifacts.
+    if toma::runtime::Runtime::with_default_dir().is_err() {
+        println!(
+            "no artifacts / pjrt runtime available; skipping the per-request \
+             server demo (run `make artifacts` and build with --features pjrt)"
+        );
+        return Ok(());
+    }
+    pjrt_server_demo(&args, n, workers, steps, ratio)
 }

@@ -1,0 +1,189 @@
+//! Bench trend tracking: compare two `BENCH_<target>.json` records (as
+//! written by [`super::Runner`] with `--json`) by median and flag
+//! regressions — the engine behind `toma-serve bench-diff` and the CI
+//! perf gate (ROADMAP "bench trend tracking").
+
+use std::collections::BTreeMap;
+
+use crate::util::error::Result;
+use crate::util::json::Json;
+use crate::anyhow;
+
+/// One case present in both records.
+#[derive(Clone, Debug)]
+pub struct DiffRow {
+    pub name: String,
+    pub old_median_s: f64,
+    pub new_median_s: f64,
+}
+
+impl DiffRow {
+    /// new / old: 1.0 = unchanged, above 1.0 = slower.
+    pub fn ratio(&self) -> f64 {
+        if self.old_median_s <= 0.0 {
+            1.0
+        } else {
+            self.new_median_s / self.old_median_s
+        }
+    }
+}
+
+/// Comparison of two bench records.
+#[derive(Debug, Default)]
+pub struct DiffReport {
+    pub rows: Vec<DiffRow>,
+    /// Cases only in the old record (removed benches).
+    pub only_old: Vec<String>,
+    /// Cases only in the new record (added benches).
+    pub only_new: Vec<String>,
+}
+
+/// Extract `name -> median_s` from a bench JSON document.
+pub fn parse_medians(json: &str) -> Result<BTreeMap<String, f64>> {
+    let doc = Json::parse(json).map_err(|e| anyhow!("bench json: {e}"))?;
+    let rows = doc
+        .get("results")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("bench json has no `results` array"))?;
+    let mut out = BTreeMap::new();
+    for r in rows {
+        let name = r
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("bench result without `name`"))?;
+        let median = r
+            .get("median_s")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("bench result `{name}` without `median_s`"))?;
+        out.insert(name.to_string(), median);
+    }
+    Ok(out)
+}
+
+/// Diff two bench JSON documents (old baseline vs new run).
+pub fn diff(old_json: &str, new_json: &str) -> Result<DiffReport> {
+    let old = parse_medians(old_json)?;
+    let mut new = parse_medians(new_json)?;
+    let mut report = DiffReport::default();
+    for (name, old_median_s) in old {
+        match new.remove(&name) {
+            Some(new_median_s) => report.rows.push(DiffRow {
+                name,
+                old_median_s,
+                new_median_s,
+            }),
+            None => report.only_old.push(name),
+        }
+    }
+    report.only_new = new.into_keys().collect();
+    Ok(report)
+}
+
+impl DiffReport {
+    /// Cases slower than `(1 + tolerance)x`, ignoring medians below
+    /// `min_median_s` on either side (timer noise dominates down there).
+    pub fn regressions(&self, tolerance: f64, min_median_s: f64) -> Vec<&DiffRow> {
+        self.rows
+            .iter()
+            .filter(|r| {
+                r.old_median_s >= min_median_s
+                    && r.new_median_s >= min_median_s
+                    && r.ratio() > 1.0 + tolerance
+            })
+            .collect()
+    }
+
+    /// Human-readable comparison table.
+    pub fn render(&self, tolerance: f64, min_median_s: f64) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<44} {:>12} {:>12} {:>8}\n",
+            "case", "old median", "new median", "ratio"
+        ));
+        for r in &self.rows {
+            let flag = if r.old_median_s >= min_median_s
+                && r.new_median_s >= min_median_s
+                && r.ratio() > 1.0 + tolerance
+            {
+                "  REGRESSED"
+            } else {
+                ""
+            };
+            out.push_str(&format!(
+                "{:<44} {:>12} {:>12} {:>7.2}x{}\n",
+                r.name,
+                crate::report::fmt_secs(r.old_median_s),
+                crate::report::fmt_secs(r.new_median_s),
+                r.ratio(),
+                flag
+            ));
+        }
+        for n in &self.only_old {
+            out.push_str(&format!("{n:<44} removed\n"));
+        }
+        for n in &self.only_new {
+            out.push_str(&format!("{n:<44} new\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(cases: &[(&str, f64)]) -> String {
+        let rows: Vec<String> = cases
+            .iter()
+            .map(|(n, m)| {
+                format!(
+                    "{{\"name\": \"{n}\", \"median_s\": {m:e}, \"p10_s\": {m:e}, \
+                     \"p90_s\": {m:e}, \"mean_s\": {m:e}, \"iters\": 5}}"
+                )
+            })
+            .collect();
+        format!("{{\"bench\": \"t\", \"results\": [{}]}}", rows.join(","))
+    }
+
+    #[test]
+    fn parses_runner_output_format() {
+        let mut r = crate::bench::Runner::new();
+        r.min_time_s = 0.001;
+        r.max_iters = 3;
+        r.bench("case_a", || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        let medians = parse_medians(&r.to_json()).expect("parse");
+        assert!(medians.contains_key("case_a"));
+    }
+
+    #[test]
+    fn flags_regressions_beyond_tolerance() {
+        let old = record(&[("fast", 1e-3), ("slow", 2e-3), ("tiny", 1e-6)]);
+        let new = record(&[("fast", 1.05e-3), ("slow", 3e-3), ("tiny", 5e-6)]);
+        let report = diff(&old, &new).expect("diff");
+        let regs = report.regressions(0.15, 5e-5);
+        assert_eq!(regs.len(), 1, "only `slow` regresses: {regs:?}");
+        assert_eq!(regs[0].name, "slow");
+        assert!((regs[0].ratio() - 1.5).abs() < 1e-9);
+        // `tiny` is under the noise floor, `fast` within tolerance.
+        let render = report.render(0.15, 5e-5);
+        assert!(render.contains("REGRESSED"));
+    }
+
+    #[test]
+    fn tracks_added_and_removed_cases() {
+        let old = record(&[("a", 1e-3), ("gone", 1e-3)]);
+        let new = record(&[("a", 1e-3), ("added", 1e-3)]);
+        let report = diff(&old, &new).expect("diff");
+        assert_eq!(report.only_old, vec!["gone".to_string()]);
+        assert_eq!(report.only_new, vec!["added".to_string()]);
+        assert!(report.regressions(0.15, 0.0).is_empty());
+    }
+
+    #[test]
+    fn rejects_malformed_json() {
+        assert!(diff("not json", "{}").is_err());
+        assert!(diff("{\"results\": 3}", "{\"results\": []}").is_err());
+    }
+}

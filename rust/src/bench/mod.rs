@@ -10,6 +10,8 @@
 //! `<path>` is an existing directory the file is created inside it;
 //! otherwise `<path>` is used verbatim.
 
+pub mod diff;
+
 use std::path::PathBuf;
 use std::time::Instant;
 

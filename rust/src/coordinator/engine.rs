@@ -26,6 +26,15 @@ use crate::toma::regions::{RegionLayout, RegionMode};
 use crate::util::Pcg64;
 use crate::workload::prompts::embed_prompt;
 
+/// Initial latent noise shared by every engine implementation: one
+/// (C*H*W) row of standard normals drawn from the request seed. The pjrt
+/// engine and the host scheduler backends both start from this, which is
+/// what makes their latents comparable for the same seed (CFG rows
+/// duplicate the row).
+pub fn initial_noise(len: usize, seed: u64) -> Vec<f32> {
+    Pcg64::new(seed).normal_vec(len)
+}
+
 /// How selection output reaches the step artifact.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 enum PlanPath {
@@ -324,10 +333,9 @@ impl Engine {
         let info = &self.info;
         let b = info.batch;
         let per = info.channels * info.latent_hw * info.latent_hw;
-        let mut rng = Pcg64::new(req.seed);
 
         // Same initial noise for the uncond/cond CFG rows.
-        let noise = rng.normal_vec(per);
+        let noise = initial_noise(per, req.seed);
         let mut x_t = vec![0.0f32; b * per];
         for row in 0..b {
             x_t[row * per..(row + 1) * per].copy_from_slice(&noise);

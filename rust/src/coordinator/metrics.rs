@@ -1,11 +1,30 @@
 //! Serving metrics registry: counters + latency histograms, shared across
 //! worker threads and rendered by `toma-serve serve` / the e2e example.
+//!
+//! Latency is tracked in fixed-bucket log-spaced histograms
+//! (`util::stats::LatencyHistogram`) with p50/p95/p99 accessors — the
+//! micro-batching scheduler's tail-latency acceptance numbers come from
+//! here. Cohort [`PlanStats`] aggregate into plain counters via
+//! [`Metrics::record_plan_stats`], which the scheduler lane calls with a
+//! one-step delta after every cohort step (so `cohort_refresh_all` counts
+//! refreshes per cohort step, not per request — the amortization metric).
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::Duration;
 
+use super::plan_cache::PlanStats;
 use crate::util::stats::LatencyHistogram;
+
+/// Summary of one latency histogram (seconds).
+#[derive(Clone, Copy, Debug)]
+pub struct LatencySummary {
+    pub count: u64,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+}
 
 #[derive(Default)]
 pub struct Metrics {
@@ -53,16 +72,31 @@ impl Metrics {
         self.observe(name, Duration::from_secs_f64(secs.max(0.0)));
     }
 
-    /// (count, mean_s, p50_s, p95_s) of a histogram.
-    pub fn latency_summary(&self, name: &str) -> Option<(u64, f64, f64, f64)> {
+    /// Aggregate one cohort's plan-cache statistics into counters
+    /// (`<prefix>_refresh_all` / `_refresh_weights` / `_reuses`).
+    pub fn record_plan_stats(&self, prefix: &str, s: &PlanStats) {
+        self.add(&format!("{prefix}_refresh_all"), s.refresh_all);
+        self.add(&format!("{prefix}_refresh_weights"), s.refresh_weights);
+        self.add(&format!("{prefix}_reuses"), s.reuses);
+    }
+
+    /// One quantile (seconds) of a histogram, `q` in [0, 1].
+    pub fn quantile_s(&self, name: &str, q: f64) -> Option<f64> {
+        let h = self.histograms.lock().unwrap();
+        Some(h.get(name)?.quantile_us(q) / 1e6)
+    }
+
+    /// Count / mean / p50 / p95 / p99 of a histogram.
+    pub fn latency_summary(&self, name: &str) -> Option<LatencySummary> {
         let h = self.histograms.lock().unwrap();
         let h = h.get(name)?;
-        Some((
-            h.count(),
-            h.mean_us() / 1e6,
-            h.quantile_us(0.5) / 1e6,
-            h.quantile_us(0.95) / 1e6,
-        ))
+        Some(LatencySummary {
+            count: h.count(),
+            mean_s: h.mean_us() / 1e6,
+            p50_s: h.quantile_us(0.5) / 1e6,
+            p95_s: h.quantile_us(0.95) / 1e6,
+            p99_s: h.quantile_us(0.99) / 1e6,
+        })
     }
 
     pub fn render(&self) -> String {
@@ -72,11 +106,12 @@ impl Metrics {
         }
         for (k, h) in self.histograms.lock().unwrap().iter() {
             out.push_str(&format!(
-                "{k:<40} n={} mean={:.3}s p50={:.3}s p95={:.3}s\n",
+                "{k:<40} n={} mean={:.3}s p50={:.3}s p95={:.3}s p99={:.3}s\n",
                 h.count(),
                 h.mean_us() / 1e6,
                 h.quantile_us(0.5) / 1e6,
-                h.quantile_us(0.95) / 1e6
+                h.quantile_us(0.95) / 1e6,
+                h.quantile_us(0.99) / 1e6
             ));
         }
         out
@@ -102,11 +137,39 @@ mod tests {
         for i in 1..=100 {
             m.observe_s("lat", i as f64 * 0.001);
         }
-        let (n, mean, p50, p95) = m.latency_summary("lat").unwrap();
-        assert_eq!(n, 100);
-        assert!(mean > 0.04 && mean < 0.06);
-        assert!(p50 <= p95);
+        let s = m.latency_summary("lat").unwrap();
+        assert_eq!(s.count, 100);
+        assert!(s.mean_s > 0.04 && s.mean_s < 0.06);
+        assert!(s.p50_s <= s.p95_s && s.p95_s <= s.p99_s);
         assert!(m.latency_summary("missing").is_none());
+    }
+
+    #[test]
+    fn quantile_accessor_matches_summary() {
+        let m = Metrics::new();
+        for i in 1..=1000 {
+            m.observe_s("lat", i as f64 * 1e-4);
+        }
+        let s = m.latency_summary("lat").unwrap();
+        assert_eq!(m.quantile_s("lat", 0.99), Some(s.p99_s));
+        assert!(m.quantile_s("missing", 0.5).is_none());
+        // Tail quantiles really reach the tail of the distribution.
+        assert!(s.p99_s > 0.9 * 0.1, "p99 {}", s.p99_s);
+    }
+
+    #[test]
+    fn plan_stats_aggregate_into_counters() {
+        let m = Metrics::new();
+        let s = PlanStats {
+            refresh_all: 2,
+            refresh_weights: 3,
+            reuses: 15,
+        };
+        m.record_plan_stats("cohort", &s);
+        m.record_plan_stats("cohort", &s);
+        assert_eq!(m.counter("cohort_refresh_all"), 4);
+        assert_eq!(m.counter("cohort_refresh_weights"), 6);
+        assert_eq!(m.counter("cohort_reuses"), 30);
     }
 
     #[test]
@@ -117,5 +180,6 @@ mod tests {
         let r = m.render();
         assert!(r.contains("served"));
         assert!(r.contains("lat"));
+        assert!(r.contains("p99"));
     }
 }

@@ -1,15 +1,28 @@
 //! Layer-3 serving coordinator: engines, plan cache, request server,
-//! metrics. The paper's Sec. 4.3 (locality layouts + reuse schedules) lives
-//! here as scheduling/caching policy over the AOT artifacts.
+//! micro-batching scheduler, metrics. The paper's Sec. 4.3 (locality
+//! layouts + reuse schedules) lives here as scheduling/caching policy over
+//! the AOT artifacts.
+//!
+//! Two serving front-ends share the request/metrics types:
+//!
+//! * [`Server`] — one engine per worker thread, one request at a time
+//!   (the pjrt path; each worker owns its PJRT client).
+//! * [`Scheduler`] — step-level continuous micro-batching: requests with
+//!   the same plan key form *cohorts* that advance through batched steps
+//!   sharing a single [`PlanSlot`] (see [`scheduler`]).
 
 pub mod engine;
 pub mod metrics;
 pub mod plan_cache;
 pub mod request;
+pub mod scheduler;
 pub mod server;
 
 pub use engine::Engine;
-pub use metrics::Metrics;
+pub use metrics::{LatencySummary, Metrics};
 pub use plan_cache::{PlanSlot, PlanStats};
 pub use request::{EngineConfig, GenRequest, GenResult, GenStats};
+pub use scheduler::{
+    BatchPolicy, Cohort, CohortBackend, HostBackend, HostEngine, Scheduler,
+};
 pub use server::{Completion, Server};

@@ -63,6 +63,14 @@ impl PlanSlot {
             p.weight_step = step;
         }
     }
+
+    /// Reset for a fresh cohort: drop the cached plans and zero the
+    /// statistics, returning the accumulated stats for aggregation.
+    pub fn reset(&mut self) -> PlanStats {
+        let stats = self.stats;
+        *self = PlanSlot::default();
+        stats
+    }
 }
 
 #[cfg(test)]
@@ -116,6 +124,91 @@ mod tests {
         }
         assert_eq!(slot.stats.refresh_all, 10);
         assert_eq!(slot.stats.reuses, 0);
+    }
+
+    #[test]
+    fn reset_returns_stats_and_clears() {
+        let schedule = ReuseSchedule::default();
+        let mut slot = PlanSlot::default();
+        for step in 0..7u64 {
+            if slot.decide(&schedule, step) == PlanAction::RefreshAll {
+                slot.install(plan(step, step), None);
+            }
+        }
+        let stats = slot.reset();
+        assert_eq!(stats.total(), 7);
+        assert!(slot.img.is_none());
+        assert_eq!(slot.stats, PlanStats::default());
+    }
+
+    /// Satellite: a cohort member joining a shared slot exactly on a
+    /// RefreshAll step observes, from its local step 0, the same action
+    /// sequence a dedicated per-request slot would give it — for the
+    /// paper schedule and for one where weight_every does not divide
+    /// dest_every.
+    #[test]
+    fn member_joining_on_refresh_boundary_sees_per_request_cadence() {
+        for schedule in [
+            ReuseSchedule::default(),
+            ReuseSchedule { dest_every: 7, weight_every: 3 },
+        ] {
+            // Shared cohort slot, driven from cohort step 0.
+            let mut shared = PlanSlot::default();
+            let mut shared_actions = vec![];
+            let mut join_step = None;
+            for step in 0..40u64 {
+                if join_step.is_none()
+                    && step > 0
+                    && schedule.is_refresh_boundary(step, shared.img.as_ref())
+                {
+                    join_step = Some(step);
+                }
+                let a = shared.decide(&schedule, step);
+                match a {
+                    PlanAction::RefreshAll => shared.install(plan(step, step), None),
+                    PlanAction::RefreshWeights => shared.refresh_weights(vec![1.0], vec![], step),
+                    PlanAction::Reuse => {}
+                }
+                shared_actions.push(a);
+            }
+            let join = join_step.expect("a boundary occurs") as usize;
+
+            // Dedicated per-request slot, steps 0..N.
+            let mut own = PlanSlot::default();
+            let mut own_actions = vec![];
+            for step in 0..(40 - join as u64) {
+                let a = own.decide(&schedule, step);
+                match a {
+                    PlanAction::RefreshAll => own.install(plan(step, step), None),
+                    PlanAction::RefreshWeights => own.refresh_weights(vec![1.0], vec![], step),
+                    PlanAction::Reuse => {}
+                }
+                own_actions.push(a);
+            }
+            assert_eq!(
+                &shared_actions[join..],
+                &own_actions[..],
+                "joined-member cadence must match per-request ({schedule:?})"
+            );
+        }
+    }
+
+    /// Satellite: the shared slot counts each refresh once per cohort
+    /// step — the amortization the serve_sweep bench measures.
+    #[test]
+    fn shared_slot_counts_refreshes_once_per_cohort_step() {
+        let schedule = ReuseSchedule::default();
+        let mut slot = PlanSlot::default();
+        // A two-member cohort stepping 20 steps still decides once/step.
+        for step in 0..20u64 {
+            match slot.decide(&schedule, step) {
+                PlanAction::RefreshAll => slot.install(plan(step, step), None),
+                PlanAction::RefreshWeights => slot.refresh_weights(vec![1.0], vec![], step),
+                PlanAction::Reuse => {}
+            }
+        }
+        assert_eq!(slot.stats.refresh_all, 2); // steps 0 and 10
+        assert_eq!(slot.stats.total(), 20);
     }
 
     #[test]

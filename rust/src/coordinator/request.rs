@@ -36,16 +36,23 @@ impl EngineConfig {
         self.variant.starts_with("toma")
     }
 
-    /// Cache / batch key.
+    /// Cache / batch key. Every field that changes what a lane's engine
+    /// or cohort backend computes must appear here — a request with a
+    /// different step count or guidance weight is *not* plan-compatible
+    /// with an existing lane and must get its own. Floats use the
+    /// shortest-roundtrip `Display` form, so distinct values never
+    /// collide in the key.
     pub fn key(&self) -> String {
         format!(
-            "{}:{}:{}:{}:{}+{}",
+            "{}:{}:{}:{}:{}+{}:s{}:g{}",
             self.model,
             self.variant,
-            self.ratio.map(|r| format!("{r:.2}")).unwrap_or_default(),
+            self.ratio.map(|r| r.to_string()).unwrap_or_default(),
             self.select_mode,
             self.schedule.dest_every,
-            self.schedule.weight_every
+            self.schedule.weight_every,
+            self.steps,
+            self.guidance
         )
     }
 }
@@ -57,6 +64,10 @@ pub struct GenRequest {
     pub seed: u64,
     /// Record per-step destination sets (Fig. 4) and plan stats.
     pub trace: bool,
+    /// Admission deadline (seconds from submission): the micro-batching
+    /// scheduler sheds the request instead of serving it late. `None`
+    /// falls back to the lane's `BatchPolicy::deadline_s`.
+    pub deadline_s: Option<f64>,
 }
 
 impl GenRequest {
@@ -65,7 +76,14 @@ impl GenRequest {
             prompt: prompt.to_string(),
             seed,
             trace: false,
+            deadline_s: None,
         }
+    }
+
+    /// Attach an admission deadline (seconds from submission).
+    pub fn with_deadline(mut self, deadline_s: f64) -> Self {
+        self.deadline_s = Some(deadline_s);
+        self
     }
 }
 
@@ -80,6 +98,9 @@ pub struct GenStats {
     pub select_calls: usize,
     pub weight_refreshes: usize,
     pub plan_reuses: usize,
+    /// Largest cohort this request was batched with (micro-batching
+    /// scheduler only; 0 for the per-request engines).
+    pub cohort_size: usize,
 }
 
 /// Result of one generation.
@@ -107,6 +128,14 @@ mod tests {
     }
 
     #[test]
+    fn deadline_builder_sets_field() {
+        let r = GenRequest::new("p", 1);
+        assert!(r.deadline_s.is_none());
+        let r = r.with_deadline(0.25);
+        assert_eq!(r.deadline_s, Some(0.25));
+    }
+
+    #[test]
     fn key_distinguishes_configs() {
         let a = EngineConfig::new("uvit_s", "toma", Some(0.5));
         let mut b = a.clone();
@@ -115,5 +144,16 @@ mod tests {
         let mut c = a.clone();
         c.schedule.dest_every = 1;
         assert_ne!(a.key(), c.key());
+        // steps/guidance change the lane's engine: distinct keys too.
+        let mut d = a.clone();
+        d.steps = 25;
+        assert_ne!(a.key(), d.key());
+        let mut e = a.clone();
+        e.guidance = 7.5;
+        assert_ne!(a.key(), e.key());
+        // Shortest-roundtrip float formatting: close values don't collide.
+        let mut f = a.clone();
+        f.guidance = 5.001;
+        assert_ne!(a.key(), f.key());
     }
 }

@@ -1,0 +1,262 @@
+//! A *cohort*: plan-compatible requests advancing through the denoising
+//! loop one batched step at a time, sharing a single [`PlanSlot`] — the
+//! Sec. 4.3.2 reuse schedule made batch-level. The slot decides and counts
+//! each plan action **once per cohort step**, not once per request, which
+//! is exactly the amortization the serve_sweep bench measures.
+//!
+//! Membership changes on two edges only:
+//!
+//! * **join** — only at `RefreshAll` boundaries (or into an empty
+//!   cohort). Every reuse window starts with a full refresh, so a member
+//!   joining on a boundary observes from its local step 0 precisely the
+//!   refresh cadence a dedicated per-request engine would give it; the
+//!   refresh that admits it also rebuilds the shared plan for the grown
+//!   membership. This is what keeps batched latents bit-identical to
+//!   per-request ones.
+//! * **leave** — on completion (the member ran its `cfg.steps` local
+//!   steps). Its group block is dropped from the shared [`MergePlan`]
+//!   mid-window; survivors keep their slices and the cadence bookkeeping
+//!   (`dest_step` / `weight_step`) is untouched.
+
+use crate::coordinator::plan_cache::{PlanSlot, PlanStats};
+use crate::coordinator::request::{EngineConfig, GenRequest, GenResult, GenStats};
+use crate::toma::plan::PlanAction;
+use crate::util::error::Result;
+
+/// Per-request state while the request is in a cohort.
+pub struct MemberState {
+    pub request: GenRequest,
+    /// Current latent, (C*H*W) single row (the CFG pair shares it).
+    pub x: Vec<f32>,
+    /// Prompt conditioning, (txt_len x txt_dim).
+    pub cond: Vec<f32>,
+    /// This member's own denoising step (0-based; the cohort step minus
+    /// the join step).
+    pub local_step: usize,
+    pub stats: GenStats,
+    /// Per-step global destination sets (only when `request.trace`),
+    /// recorded by the backend — the Fig. 4 trace.
+    pub dest_trace: Vec<Vec<usize>>,
+    /// Scheduler-assigned identity, stable across membership changes.
+    pub tag: u64,
+}
+
+/// The batched execution backend a cohort drives. [`super::HostBackend`]
+/// implements it on the pure-Rust model; a PJRT batched-step backend can
+/// plug in here once variable-batch artifacts exist.
+pub trait CohortBackend: Send {
+    fn cfg(&self) -> &EngineConfig;
+    /// Plan groups contributed per member (the region count; 1 for
+    /// variants without merge plans).
+    fn regions_per_member(&self) -> usize;
+    /// Image tokens denoised per member per step (throughput accounting).
+    fn tokens_per_member_step(&self) -> usize;
+    /// Build fresh member state for an admitted request (`tag` is filled
+    /// in by the cohort).
+    fn admit(&self, request: &GenRequest) -> MemberState;
+    /// Rerun destination selection and rebuild weights for every member
+    /// in one batched call, installing the shared plan into `slot`.
+    fn refresh_all(
+        &self,
+        members: &[MemberState],
+        slot: &mut PlanSlot,
+        cohort_step: u64,
+    ) -> Result<()>;
+    /// Rebuild merge weights only, keeping the cached destinations.
+    fn refresh_weights(
+        &self,
+        members: &[MemberState],
+        slot: &mut PlanSlot,
+        cohort_step: u64,
+    ) -> Result<()>;
+    /// One batched denoising step: advance every member's latent and
+    /// `local_step` by one.
+    fn step_batch(&self, members: &mut [MemberState], slot: &PlanSlot) -> Result<()>;
+}
+
+/// A member that finished this step.
+pub struct CohortCompletion {
+    pub tag: u64,
+    pub request: GenRequest,
+    pub result: Result<GenResult>,
+}
+
+/// What one cohort step did (the lane turns this into metrics).
+pub struct StepOutcome {
+    /// The shared slot's decision (None for plan-less variants).
+    pub action: Option<PlanAction>,
+    /// Members that took part in this step.
+    pub active_members: usize,
+    pub completions: Vec<CohortCompletion>,
+}
+
+pub struct Cohort {
+    backend: Box<dyn CohortBackend>,
+    members: Vec<MemberState>,
+    slot: PlanSlot,
+    cohort_step: u64,
+    next_tag: u64,
+}
+
+impl Cohort {
+    pub fn new(backend: Box<dyn CohortBackend>) -> Cohort {
+        Cohort {
+            backend,
+            members: Vec::new(),
+            slot: PlanSlot::default(),
+            cohort_step: 0,
+            next_tag: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    pub fn cohort_step(&self) -> u64 {
+        self.cohort_step
+    }
+
+    pub fn cfg(&self) -> &EngineConfig {
+        self.backend.cfg()
+    }
+
+    /// The shared slot's accumulated statistics (current cohort).
+    pub fn plan_stats(&self) -> PlanStats {
+        self.slot.stats
+    }
+
+    pub fn tokens_per_member_step(&self) -> usize {
+        self.backend.tokens_per_member_step()
+    }
+
+    /// Can a request join right now? Plan-bearing cohorts accept members
+    /// only when the *next* step's action is `RefreshAll`, so the
+    /// newcomer's local cadence is exactly the per-request one.
+    pub fn can_join(&self) -> bool {
+        if self.members.is_empty() || !self.backend.cfg().needs_plan() {
+            return true;
+        }
+        self.backend
+            .cfg()
+            .schedule
+            .is_refresh_boundary(self.cohort_step, self.slot.img.as_ref())
+    }
+
+    /// Admit a request (resets to a fresh cohort when empty); returns the
+    /// member tag used to match completions.
+    pub fn admit(&mut self, request: &GenRequest) -> Result<u64> {
+        crate::ensure!(self.can_join(), "cohort not at a refresh boundary");
+        if self.members.is_empty() {
+            self.slot.reset();
+            self.cohort_step = 0;
+        }
+        let mut m = self.backend.admit(request);
+        m.tag = self.next_tag;
+        self.next_tag += 1;
+        let tag = m.tag;
+        self.members.push(m);
+        Ok(tag)
+    }
+
+    /// Fail every in-flight member (backend error recovery); the cohort
+    /// becomes empty and resets on the next admit.
+    pub fn drain(&mut self) -> Vec<(u64, GenRequest)> {
+        self.slot.reset();
+        self.cohort_step = 0;
+        self.members
+            .drain(..)
+            .map(|m| (m.tag, m.request))
+            .collect()
+    }
+
+    /// One batched step: decide/refresh the shared plan once, run the
+    /// batched backend step, then emit members that reached their final
+    /// step (dropping their plan blocks so survivors keep their slices).
+    pub fn step(&mut self) -> Result<StepOutcome> {
+        if self.members.is_empty() {
+            return Ok(StepOutcome {
+                action: None,
+                active_members: 0,
+                completions: vec![],
+            });
+        }
+        let needs_plan = self.backend.cfg().needs_plan();
+        let schedule = self.backend.cfg().schedule;
+        let mut action = None;
+        if needs_plan {
+            let a = self.slot.decide(&schedule, self.cohort_step);
+            match a {
+                PlanAction::RefreshAll => {
+                    self.backend
+                        .refresh_all(&self.members, &mut self.slot, self.cohort_step)?
+                }
+                PlanAction::RefreshWeights => {
+                    self.backend
+                        .refresh_weights(&self.members, &mut self.slot, self.cohort_step)?
+                }
+                PlanAction::Reuse => {}
+            }
+            // Per-member stats mirror what a dedicated engine would count.
+            for m in &mut self.members {
+                match a {
+                    PlanAction::RefreshAll => m.stats.select_calls += 1,
+                    PlanAction::RefreshWeights => m.stats.weight_refreshes += 1,
+                    PlanAction::Reuse => m.stats.plan_reuses += 1,
+                }
+            }
+            action = Some(a);
+        }
+        let size = self.members.len();
+        for m in &mut self.members {
+            m.stats.cohort_size = m.stats.cohort_size.max(size);
+        }
+        self.backend.step_batch(&mut self.members, &self.slot)?;
+        for m in &mut self.members {
+            m.stats.steps += 1;
+        }
+        self.cohort_step += 1;
+
+        // Leave on completion.
+        let total = self.backend.cfg().steps;
+        let regions = self.backend.regions_per_member();
+        let mut completions = vec![];
+        let mut i = self.members.len();
+        while i > 0 {
+            i -= 1;
+            if self.members[i].local_step >= total {
+                let m = self.members.remove(i);
+                if needs_plan {
+                    if let Some(p) = self.slot.img.as_mut() {
+                        p.remove_member(i, regions);
+                    }
+                }
+                // Note on stats: count fields (select_calls, reuses, ...)
+                // mirror a dedicated engine exactly; per-phase *timings*
+                // are shared across the cohort and therefore not
+                // attributable per member — the scheduler lane records
+                // them in the metrics histograms (cohort_step_time) and
+                // fills stats.total_s with the member's wall time.
+                completions.push(CohortCompletion {
+                    tag: m.tag,
+                    request: m.request,
+                    result: Ok(GenResult {
+                        latent: m.x,
+                        stats: m.stats,
+                        dest_trace: m.dest_trace,
+                    }),
+                });
+            }
+        }
+        completions.reverse(); // admission order among leavers
+        Ok(StepOutcome {
+            action,
+            active_members: size,
+            completions,
+        })
+    }
+}

@@ -1,0 +1,469 @@
+//! Host-model execution for the micro-batching scheduler.
+//!
+//! * [`HostEngine`] — the per-request reference: one denoising loop on the
+//!   pure-Rust UViT with host-side plan building (facility-location
+//!   selection + attention merge weights), driven by the same
+//!   [`PlanSlot`]/[`ReuseSchedule`] machinery as the pjrt engine.
+//! * [`HostBackend`] — the batched cohort backend: the same plan builders
+//!   run once per cohort refresh (a single `fl_select_regions` call spans
+//!   every member's regions) and the step runs through
+//!   [`HostUVit::forward_batch`].
+//!
+//! Every per-member operation is the same code on the same inputs in both
+//! paths, and the batched forward is bitwise fold-invariant, so a cohort
+//! member's latent trajectory is identical to its dedicated
+//! [`HostEngine::generate`] run — asserted by `tests/scheduler_equivalence`.
+//!
+//! Both run artifact-free (synthetic or npz-loaded weights), which is what
+//! lets the scheduler's acceptance tests sit in tier 1.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::anyhow;
+use crate::coordinator::engine::initial_noise;
+use crate::coordinator::plan_cache::PlanSlot;
+use crate::coordinator::request::{EngineConfig, GenRequest, GenResult, GenStats};
+use crate::diffusion::{cfg_mix, ddim_update, euler_update, NoiseSchedule, SamplerKind};
+use crate::model::uvit::{BatchReduce, BatchSample, HostReduce, HostUVit};
+use crate::toma::facility::fl_select_regions;
+use crate::toma::merge::{build_merge_weights, MergeWeights};
+use crate::toma::plan::{MergePlan, PlanAction};
+use crate::toma::regions::{RegionLayout, RegionMode};
+use crate::util::error::Result;
+use crate::workload::prompts::embed_prompt;
+
+use super::cohort::{CohortBackend, MemberState};
+
+/// Default merge-softmax temperature (matches the artifact pipeline).
+pub const DEFAULT_TAU: f32 = 0.1;
+
+/// Shared host-model execution context: model + plan geometry + sampler.
+pub struct HostContext {
+    pub model: Arc<HostUVit>,
+    pub cfg: EngineConfig,
+    pub schedule: NoiseSchedule,
+    layout: Option<RegionLayout>,
+    k_loc: usize,
+    tau: f32,
+}
+
+impl HostContext {
+    pub fn new(
+        model: Arc<HostUVit>,
+        cfg: EngineConfig,
+        regions: usize,
+        tau: f32,
+    ) -> Result<HostContext> {
+        // A zero-step config would panic NoiseSchedule::new inside the
+        // lane thread and permanently wedge the lane; reject it as a
+        // normal backend-init error instead (every queued request then
+        // gets a clean failure completion).
+        crate::ensure!(cfg.steps >= 1, "engine config needs steps >= 1");
+        let info = &model.info;
+        let sampler = SamplerKind::for_model_kind(&info.kind);
+        let schedule = NoiseSchedule::new(sampler, cfg.steps);
+        let (layout, k_loc) = if cfg.needs_plan() {
+            let ratio = cfg
+                .ratio
+                .ok_or_else(|| anyhow!("toma variants need a merge ratio"))?;
+            let mode = RegionMode::parse(&cfg.select_mode).ok_or_else(|| {
+                anyhow!("unsupported host select mode `{}`", cfg.select_mode)
+            })?;
+            let grid = info.grid();
+            let layout = RegionLayout::new(mode, regions, grid, grid);
+            let n_loc = layout.tokens_per_region();
+            let k_loc = (((1.0 - ratio) * n_loc as f64).round() as usize).clamp(1, n_loc);
+            (Some(layout), k_loc)
+        } else {
+            (None, 0)
+        };
+        Ok(HostContext {
+            model,
+            cfg,
+            schedule,
+            layout,
+            k_loc,
+            tau,
+        })
+    }
+
+    pub fn layout(&self) -> Option<&RegionLayout> {
+        self.layout.as_ref()
+    }
+
+    pub fn k_loc(&self) -> usize {
+        self.k_loc
+    }
+
+    /// Latent length of one CFG row.
+    pub fn per(&self) -> usize {
+        let i = &self.model.info;
+        i.channels * i.latent_hw * i.latent_hw
+    }
+
+    /// Selection features at (x, t), split into the layout's regions:
+    /// (regions, n_loc, d) flattened.
+    fn split_features(&self, x: &[f32], t: f32) -> Vec<f32> {
+        let layout = self.layout.as_ref().expect("plan variant");
+        let tok = self.model.embed_tokens(x, t);
+        layout.split(&tok, self.model.info.dim)
+    }
+
+    /// A~ blocks (regions, k_loc, n_loc) for region-local destinations.
+    fn weights_from_split(&self, hs: &[f32], idx: &[i32]) -> Vec<f32> {
+        let layout = self.layout.as_ref().expect("plan variant");
+        let d = self.model.info.dim;
+        let p = layout.regions;
+        let n_loc = layout.tokens_per_region();
+        let k = self.k_loc;
+        let mut at = vec![0.0f32; p * k * n_loc];
+        for r in 0..p {
+            let ids: Vec<usize> = idx[r * k..(r + 1) * k]
+                .iter()
+                .map(|&i| i as usize)
+                .collect();
+            let w = build_merge_weights(
+                &hs[r * n_loc * d..(r + 1) * n_loc * d],
+                n_loc,
+                d,
+                &ids,
+                self.tau,
+            );
+            at[r * k * n_loc..(r + 1) * k * n_loc].copy_from_slice(&w.a_tilde);
+        }
+        at
+    }
+
+    /// One sampler update for one member row.
+    fn advance(&self, x: &[f32], eps: &[f32], step: usize, out: &mut [f32]) {
+        let level = self.schedule.levels[step];
+        let next = self.schedule.next_level(step);
+        match self.schedule.kind {
+            SamplerKind::Ddim => ddim_update(x, eps, level, next, out),
+            SamplerKind::Euler => euler_update(x, eps, level, next, out),
+        }
+    }
+}
+
+/// Per-request reference engine on the host model — the exact semantics
+/// the batched scheduler must reproduce bit-for-bit.
+pub struct HostEngine {
+    pub ctx: HostContext,
+}
+
+impl HostEngine {
+    pub fn new(
+        model: Arc<HostUVit>,
+        cfg: EngineConfig,
+        regions: usize,
+        tau: f32,
+    ) -> Result<HostEngine> {
+        Ok(HostEngine {
+            ctx: HostContext::new(model, cfg, regions, tau)?,
+        })
+    }
+
+    /// Generate one latent: per step, consult the reuse schedule, rebuild
+    /// the plan as needed from this request's own features, run the
+    /// uncond/cond forwards, CFG-mix, and take the sampler update.
+    pub fn generate(&self, req: &GenRequest) -> Result<GenResult> {
+        let t_start = Instant::now();
+        let ctx = &self.ctx;
+        let info = &ctx.model.info;
+        let per = ctx.per();
+        let mut x = initial_noise(per, req.seed);
+        let cond = embed_prompt(&req.prompt, info.txt_len, info.txt_dim);
+        let cond0 = vec![0.0f32; info.txt_len * info.txt_dim];
+        let mut slot = PlanSlot::default();
+        let mut stats = GenStats::default();
+        let mut dest_trace: Vec<Vec<usize>> = vec![];
+        // Reduce operator rebuilt only when the plan actually changes
+        // (refresh steps), not per step — Reuse steps borrow it as-is.
+        let mut weights: Option<MergeWeights> = None;
+        let mut eps = vec![0.0f32; per];
+        let mut x_next = vec![0.0f32; per];
+        for step in 0..ctx.cfg.steps {
+            let t = ctx.schedule.timesteps[step];
+            if ctx.cfg.needs_plan() {
+                let t0 = Instant::now();
+                let action = slot.decide(&ctx.cfg.schedule, step as u64);
+                match action {
+                    PlanAction::RefreshAll => {
+                        let layout = ctx.layout.as_ref().expect("plan variant");
+                        let p = layout.regions;
+                        let n_loc = layout.tokens_per_region();
+                        let hs = ctx.split_features(&x, t);
+                        let idx: Vec<i32> =
+                            fl_select_regions(&hs, p, n_loc, info.dim, ctx.k_loc)
+                                .into_iter()
+                                .map(|i| i as i32)
+                                .collect();
+                        let a_tilde = ctx.weights_from_split(&hs, &idx);
+                        slot.install(
+                            MergePlan {
+                                idx,
+                                a_tilde,
+                                a: vec![],
+                                groups: p,
+                                d_loc: ctx.k_loc,
+                                n_loc,
+                                dest_step: step as u64,
+                                weight_step: step as u64,
+                            },
+                            None,
+                        );
+                        stats.select_calls += 1;
+                    }
+                    PlanAction::RefreshWeights => {
+                        let hs = ctx.split_features(&x, t);
+                        let idx = slot.img.as_ref().expect("cached plan").idx.clone();
+                        let at = ctx.weights_from_split(&hs, &idx);
+                        slot.refresh_weights(at, vec![], step as u64);
+                        stats.weight_refreshes += 1;
+                    }
+                    PlanAction::Reuse => stats.plan_reuses += 1,
+                }
+                if action != PlanAction::Reuse {
+                    weights = slot.img.as_ref().map(|p| MergeWeights {
+                        a: vec![],
+                        a_tilde: p.a_tilde.clone(),
+                        k: p.d_loc,
+                        n: p.n_loc,
+                    });
+                }
+                stats.select_s += t0.elapsed().as_secs_f64();
+                if req.trace {
+                    if let (Some(plan), Some(layout)) =
+                        (slot.img.as_ref(), ctx.layout.as_ref())
+                    {
+                        dest_trace.push(plan.global_destinations(layout, 0));
+                    }
+                }
+            }
+            let t0 = Instant::now();
+            let reduce = match (&weights, ctx.layout.as_ref()) {
+                (Some(w), Some(layout)) => HostReduce::Toma { weights: w, layout },
+                _ => HostReduce::None,
+            };
+            let eps_u = ctx.model.forward(&x, t, &cond0, &reduce);
+            let eps_c = ctx.model.forward(&x, t, &cond, &reduce);
+            stats.step_s += t0.elapsed().as_secs_f64();
+            let t0 = Instant::now();
+            cfg_mix(&eps_u, &eps_c, ctx.cfg.guidance, &mut eps);
+            ctx.advance(&x, &eps, step, &mut x_next);
+            std::mem::swap(&mut x, &mut x_next);
+            stats.host_s += t0.elapsed().as_secs_f64();
+            stats.steps += 1;
+        }
+        stats.total_s = t_start.elapsed().as_secs_f64();
+        Ok(GenResult {
+            latent: x,
+            stats,
+            dest_trace,
+        })
+    }
+}
+
+/// Batched cohort backend on the host model.
+pub struct HostBackend {
+    pub ctx: HostContext,
+    cond0: Vec<f32>,
+}
+
+impl HostBackend {
+    pub fn new(
+        model: Arc<HostUVit>,
+        cfg: EngineConfig,
+        regions: usize,
+        tau: f32,
+    ) -> Result<HostBackend> {
+        let ctx = HostContext::new(model, cfg, regions, tau)?;
+        let info = &ctx.model.info;
+        let cond0 = vec![0.0f32; info.txt_len * info.txt_dim];
+        Ok(HostBackend { ctx, cond0 })
+    }
+
+    /// Boxed form for [`super::Scheduler`] backend factories.
+    pub fn boxed(
+        model: Arc<HostUVit>,
+        cfg: EngineConfig,
+        regions: usize,
+        tau: f32,
+    ) -> Result<Box<dyn CohortBackend>> {
+        Ok(Box::new(HostBackend::new(model, cfg, regions, tau)?))
+    }
+}
+
+impl CohortBackend for HostBackend {
+    fn cfg(&self) -> &EngineConfig {
+        &self.ctx.cfg
+    }
+
+    fn regions_per_member(&self) -> usize {
+        self.ctx.layout.as_ref().map(|l| l.regions).unwrap_or(1)
+    }
+
+    fn tokens_per_member_step(&self) -> usize {
+        self.ctx.model.info.tokens
+    }
+
+    fn admit(&self, request: &GenRequest) -> MemberState {
+        let info = &self.ctx.model.info;
+        MemberState {
+            request: request.clone(),
+            x: initial_noise(self.ctx.per(), request.seed),
+            cond: embed_prompt(&request.prompt, info.txt_len, info.txt_dim),
+            local_step: 0,
+            stats: GenStats::default(),
+            dest_trace: vec![],
+            tag: 0,
+        }
+    }
+
+    fn refresh_all(
+        &self,
+        members: &[MemberState],
+        slot: &mut PlanSlot,
+        cohort_step: u64,
+    ) -> Result<()> {
+        let ctx = &self.ctx;
+        let layout = ctx
+            .layout
+            .as_ref()
+            .ok_or_else(|| anyhow!("refresh on a plan-less variant"))?;
+        let d = ctx.model.info.dim;
+        let p = layout.regions;
+        let n_loc = layout.tokens_per_region();
+        let k = ctx.k_loc;
+        // One batched selection: every member's regions go through a
+        // single fl_select_regions call ((members * p) regions fan out
+        // across the worker pool). Per-region results are independent of
+        // the batching, so each member gets exactly its per-request plan.
+        let mut hs_all = vec![0.0f32; members.len() * p * n_loc * d];
+        for (m, member) in members.iter().enumerate() {
+            let t = ctx.schedule.timesteps[member.local_step];
+            let hs = ctx.split_features(&member.x, t);
+            hs_all[m * p * n_loc * d..(m + 1) * p * n_loc * d].copy_from_slice(&hs);
+        }
+        let idx_all: Vec<i32> =
+            fl_select_regions(&hs_all, members.len() * p, n_loc, d, k)
+                .into_iter()
+                .map(|i| i as i32)
+                .collect();
+        let mut a_tilde = vec![0.0f32; members.len() * p * k * n_loc];
+        for m in 0..members.len() {
+            let at = ctx.weights_from_split(
+                &hs_all[m * p * n_loc * d..(m + 1) * p * n_loc * d],
+                &idx_all[m * p * k..(m + 1) * p * k],
+            );
+            a_tilde[m * p * k * n_loc..(m + 1) * p * k * n_loc].copy_from_slice(&at);
+        }
+        slot.install(
+            MergePlan {
+                idx: idx_all,
+                a_tilde,
+                a: vec![],
+                groups: members.len() * p,
+                d_loc: k,
+                n_loc,
+                dest_step: cohort_step,
+                weight_step: cohort_step,
+            },
+            None,
+        );
+        Ok(())
+    }
+
+    fn refresh_weights(
+        &self,
+        members: &[MemberState],
+        slot: &mut PlanSlot,
+        cohort_step: u64,
+    ) -> Result<()> {
+        let ctx = &self.ctx;
+        let layout = ctx
+            .layout
+            .as_ref()
+            .ok_or_else(|| anyhow!("refresh on a plan-less variant"))?;
+        let p = layout.regions;
+        let n_loc = layout.tokens_per_region();
+        let k = ctx.k_loc;
+        let plan_idx = slot
+            .img
+            .as_ref()
+            .ok_or_else(|| anyhow!("weights refresh without a cached plan"))?
+            .idx
+            .clone();
+        crate::ensure!(
+            plan_idx.len() == members.len() * p * k,
+            "plan/member mismatch ({} ids for {} members)",
+            plan_idx.len(),
+            members.len()
+        );
+        let mut a_tilde = vec![0.0f32; members.len() * p * k * n_loc];
+        for (m, member) in members.iter().enumerate() {
+            let t = ctx.schedule.timesteps[member.local_step];
+            let hs = ctx.split_features(&member.x, t);
+            let at = ctx.weights_from_split(&hs, &plan_idx[m * p * k..(m + 1) * p * k]);
+            a_tilde[m * p * k * n_loc..(m + 1) * p * k * n_loc].copy_from_slice(&at);
+        }
+        slot.refresh_weights(a_tilde, vec![], cohort_step);
+        Ok(())
+    }
+
+    fn step_batch(&self, members: &mut [MemberState], slot: &PlanSlot) -> Result<()> {
+        let ctx = &self.ctx;
+        let per = ctx.per();
+        // Fig. 4 trace: record each traced member's current destination
+        // set (the plan was already decided/refreshed for this step),
+        // mirroring the per-request engines.
+        if let (Some(plan), Some(layout)) = (slot.img.as_ref(), ctx.layout.as_ref()) {
+            for (m, member) in members.iter_mut().enumerate() {
+                if member.request.trace {
+                    member.dest_trace.push(plan.global_destinations(layout, m));
+                }
+            }
+        }
+        // Two CFG samples per member — uncond row first, like the pjrt
+        // engine's (zeros, prompt) conditioning rows.
+        let mut samples = Vec::with_capacity(2 * members.len());
+        let mut plan_of = Vec::with_capacity(2 * members.len());
+        for (m, member) in members.iter().enumerate() {
+            let t = ctx.schedule.timesteps[member.local_step];
+            samples.push(BatchSample {
+                x_bchw: &member.x,
+                t,
+                cond: &self.cond0,
+            });
+            samples.push(BatchSample {
+                x_bchw: &member.x,
+                t,
+                cond: &member.cond,
+            });
+            plan_of.push(m);
+            plan_of.push(m);
+        }
+        let reduce = match (slot.img.as_ref(), ctx.layout.as_ref()) {
+            (Some(p), Some(layout)) => BatchReduce::Toma {
+                a_tilde: &p.a_tilde,
+                k_loc: p.d_loc,
+                layout,
+                plan_of: &plan_of,
+            },
+            _ => BatchReduce::None,
+        };
+        let eps_all = ctx.model.forward_batch(&samples, &reduce);
+        let mut eps = vec![0.0f32; per];
+        // One scratch row reused across members: after the swap it holds
+        // the member's old latent and is fully overwritten by `advance`.
+        let mut x_next = vec![0.0f32; per];
+        for (m, member) in members.iter_mut().enumerate() {
+            cfg_mix(&eps_all[2 * m], &eps_all[2 * m + 1], ctx.cfg.guidance, &mut eps);
+            ctx.advance(&member.x, &eps, member.local_step, &mut x_next);
+            std::mem::swap(&mut member.x, &mut x_next);
+            member.local_step += 1;
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,605 @@
+//! Step-level continuous micro-batching — plan-compatible batched serving.
+//!
+//! The per-request `Server` runs one engine per request; this subsystem
+//! instead admits requests into *cohorts* keyed by plan-compatibility
+//! (`EngineConfig::key()`: same model, variant, ratio, select mode and
+//! reuse schedule ⇒ same per-step [`PlanAction`] sequence) and advances a
+//! cohort through the backend **one batched denoising step at a time**:
+//!
+//! * one [`PlanSlot`](crate::coordinator::PlanSlot) per cohort —
+//!   selection / weights rebuilds are
+//!   decided and counted once per cohort step, not once per request
+//!   (Sec. 4.3.2's amortization made batch-level);
+//! * requests join mid-flight at `RefreshAll` boundaries and leave on
+//!   completion, so lanes stay full under continuous arrivals;
+//! * the model step itself is the batch-folded
+//!   [`HostUVit::forward_batch`](crate::model::HostUVit::forward_batch),
+//!   which is bitwise fold-invariant — batched latents equal per-request
+//!   latents for the same seeds (see `tests/scheduler_equivalence.rs`).
+//!
+//! [`BatchPolicy`] bounds the cohort size, the formation window, the lane
+//! queue depth (backpressure: `try_submit` fails fast) and admission
+//! deadlines (overdue requests are shed, not served late).
+
+pub mod cohort;
+pub mod host;
+pub mod policy;
+
+pub use cohort::{Cohort, CohortBackend, CohortCompletion, MemberState, StepOutcome};
+pub use host::{HostBackend, HostContext, HostEngine, DEFAULT_TAU};
+pub use policy::BatchPolicy;
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::mpsc::{
+    channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TryRecvError,
+    TrySendError,
+};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::anyhow;
+use crate::toma::plan::PlanAction;
+use crate::util::error::Result;
+
+use super::metrics::Metrics;
+use super::plan_cache::PlanStats;
+use super::request::{EngineConfig, GenRequest, GenResult};
+use super::server::Completion;
+
+/// Creates the batched backend for a new lane (one lane per engine key).
+pub type BackendFactory =
+    dyn Fn(&EngineConfig) -> Result<Box<dyn CohortBackend>> + Send + Sync;
+
+struct SchedJob {
+    request: GenRequest,
+    enqueued: Instant,
+    done: Sender<Completion>,
+}
+
+struct SchedLane {
+    tx: SyncSender<SchedJob>,
+    handle: JoinHandle<()>,
+}
+
+/// The micro-batching front-end: submit requests, get completions.
+pub struct Scheduler {
+    policy: BatchPolicy,
+    pub metrics: Arc<Metrics>,
+    factory: Arc<BackendFactory>,
+    lanes: Mutex<BTreeMap<String, SchedLane>>,
+}
+
+impl Scheduler {
+    pub fn new<F>(policy: BatchPolicy, factory: F) -> Scheduler
+    where
+        F: Fn(&EngineConfig) -> Result<Box<dyn CohortBackend>> + Send + Sync + 'static,
+    {
+        Scheduler {
+            policy: policy.normalized(),
+            metrics: Arc::new(Metrics::new()),
+            factory: Arc::new(factory),
+            lanes: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    pub fn policy(&self) -> &BatchPolicy {
+        &self.policy
+    }
+
+    fn lane_tx(&self, cfg: &EngineConfig) -> SyncSender<SchedJob> {
+        let mut lanes = self.lanes.lock().unwrap();
+        lanes
+            .entry(cfg.key())
+            .or_insert_with(|| self.spawn_lane(cfg))
+            .tx
+            .clone()
+    }
+
+    fn spawn_lane(&self, cfg: &EngineConfig) -> SchedLane {
+        let (tx, rx) = sync_channel::<SchedJob>(self.policy.queue_depth);
+        let policy = self.policy;
+        let metrics = self.metrics.clone();
+        let factory = self.factory.clone();
+        let cfg = cfg.clone();
+        let handle = std::thread::Builder::new()
+            .name("toma-sched".to_string())
+            .spawn(move || lane_loop(&cfg, policy, &factory, &metrics, rx))
+            .expect("spawn scheduler lane");
+        SchedLane { tx, handle }
+    }
+
+    /// Submit a request; blocks when the lane queue is full
+    /// (backpressure). The completion arrives on the returned channel.
+    /// A dead lane (e.g. a panicked backend) fails the request with an
+    /// error completion and is respawned on the next submit — one bad
+    /// request must not poison the serving process.
+    pub fn submit(&self, cfg: &EngineConfig, request: GenRequest) -> Receiver<Completion> {
+        let tx = self.lane_tx(cfg);
+        let (done_tx, done_rx) = channel();
+        self.metrics.inc("requests_submitted");
+        let job = SchedJob {
+            request,
+            enqueued: Instant::now(),
+            done: done_tx,
+        };
+        if let Err(std::sync::mpsc::SendError(job)) = tx.send(job) {
+            self.metrics.inc("requests_err");
+            self.lanes.lock().unwrap().remove(&cfg.key());
+            let _ = job.done.send(Completion {
+                request: job.request,
+                result: Err(anyhow!("scheduler lane died; resubmit")),
+                queued_s: 0.0,
+                service_s: 0.0,
+            });
+        }
+        done_rx
+    }
+
+    /// Non-blocking submit: fails fast when the lane queue is at its
+    /// `BatchPolicy::queue_depth` bound.
+    pub fn try_submit(
+        &self,
+        cfg: &EngineConfig,
+        request: GenRequest,
+    ) -> Result<Receiver<Completion>> {
+        let tx = self.lane_tx(cfg);
+        let (done_tx, done_rx) = channel();
+        match tx.try_send(SchedJob {
+            request,
+            enqueued: Instant::now(),
+            done: done_tx,
+        }) {
+            Ok(()) => {
+                self.metrics.inc("requests_submitted");
+                Ok(done_rx)
+            }
+            Err(TrySendError::Full(_)) => {
+                self.metrics.inc("requests_rejected");
+                Err(anyhow!(
+                    "lane queue full ({} deep): backpressure",
+                    self.policy.queue_depth
+                ))
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                // Dead lane: drop it so the next submit respawns fresh.
+                self.lanes.lock().unwrap().remove(&cfg.key());
+                Err(anyhow!("scheduler lane died; resubmit"))
+            }
+        }
+    }
+
+    /// Run a batch to completion (closed loop), preserving submission
+    /// order in the result. A lane dying mid-request yields an error
+    /// completion for the affected requests rather than a panic.
+    pub fn run_batch(&self, cfg: &EngineConfig, requests: Vec<GenRequest>) -> Vec<Completion> {
+        let pairs: Vec<(GenRequest, Receiver<Completion>)> = requests
+            .into_iter()
+            .map(|r| {
+                let rx = self.submit(cfg, r.clone());
+                (r, rx)
+            })
+            .collect();
+        pairs
+            .into_iter()
+            .map(|(request, rx)| {
+                rx.recv().unwrap_or_else(|_| Completion {
+                    request,
+                    result: Err(anyhow!("scheduler lane died mid-request")),
+                    queued_s: 0.0,
+                    service_s: 0.0,
+                })
+            })
+            .collect()
+    }
+
+    /// Convenience: run a batch and return the successful results.
+    pub fn run_batch_ok(
+        &self,
+        cfg: &EngineConfig,
+        requests: Vec<GenRequest>,
+    ) -> Result<Vec<GenResult>> {
+        self.run_batch(cfg, requests)
+            .into_iter()
+            .map(|c| c.result)
+            .collect()
+    }
+
+    /// Drop all lanes, joining scheduler threads.
+    pub fn shutdown(&self) {
+        let drained: Vec<SchedLane> =
+            std::mem::take(&mut *self.lanes.lock().unwrap()).into_values().collect();
+        for lane in drained {
+            drop(lane.tx);
+            let _ = lane.handle.join();
+        }
+    }
+}
+
+impl Drop for Scheduler {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+struct JobMeta {
+    request: GenRequest,
+    done: Sender<Completion>,
+    queued_s: f64,
+    admitted: Instant,
+}
+
+/// The instant by which `job` must be admitted (submission time plus its
+/// effective deadline), if it has one.
+fn admission_deadline(policy: &BatchPolicy, job: &SchedJob) -> Option<Instant> {
+    let dl = policy.deadline_for(job.request.deadline_s)?;
+    let d = Duration::try_from_secs_f64(dl.max(0.0)).ok()?;
+    job.enqueued.checked_add(d)
+}
+
+fn fail(metrics: &Metrics, meta: JobMeta, msg: &str) {
+    metrics.inc("requests_err");
+    let service_s = meta.admitted.elapsed().as_secs_f64();
+    let _ = meta.done.send(Completion {
+        request: meta.request,
+        result: Err(anyhow!("{msg}")),
+        queued_s: meta.queued_s,
+        service_s,
+    });
+}
+
+/// One lane: a bounded queue drained by a single cohort that steps
+/// continuously. The loop blocks only while completely idle.
+fn lane_loop(
+    cfg: &EngineConfig,
+    policy: BatchPolicy,
+    factory: &BackendFactory,
+    metrics: &Metrics,
+    rx: Receiver<SchedJob>,
+) {
+    let backend = match factory(cfg) {
+        Ok(b) => b,
+        Err(e) => {
+            // Fail every job this lane would serve.
+            let msg = format!("backend init failed: {e}");
+            while let Ok(job) = rx.recv() {
+                metrics.inc("requests_err");
+                let _ = job.done.send(Completion {
+                    request: job.request,
+                    result: Err(anyhow!("{msg}")),
+                    queued_s: job.enqueued.elapsed().as_secs_f64(),
+                    service_s: 0.0,
+                });
+            }
+            return;
+        }
+    };
+    let tokens_per_member = backend.tokens_per_member_step();
+    let mut cohort = Cohort::new(backend);
+    let mut pending: VecDeque<SchedJob> = VecDeque::new();
+    let mut inflight: BTreeMap<u64, JobMeta> = BTreeMap::new();
+    let mut open = true;
+
+    loop {
+        if cohort.is_empty() && pending.is_empty() {
+            if !open {
+                break;
+            }
+            // Idle: block for the first request of a new cohort, then hold
+            // the formation window open for companions — clamped so no
+            // pending request is held past its admission deadline just to
+            // wait for company.
+            match rx.recv() {
+                Ok(j) => pending.push_back(j),
+                Err(_) => break,
+            }
+            let window = Duration::from_secs_f64(policy.max_queue_wait_s);
+            let mut wait_until = Instant::now() + window;
+            if let Some(dl) = pending.back().and_then(|j| admission_deadline(&policy, j)) {
+                wait_until = wait_until.min(dl);
+            }
+            while pending.len() < policy.max_batch {
+                let remaining = wait_until.saturating_duration_since(Instant::now());
+                if remaining.is_zero() {
+                    break;
+                }
+                match rx.recv_timeout(remaining) {
+                    Ok(j) => {
+                        if let Some(dl) = admission_deadline(&policy, &j) {
+                            wait_until = wait_until.min(dl);
+                        }
+                        pending.push_back(j);
+                    }
+                    Err(RecvTimeoutError::Timeout) => break,
+                    Err(RecvTimeoutError::Disconnected) => {
+                        open = false;
+                        break;
+                    }
+                }
+            }
+        } else if open {
+            // Mid-flight: drain the channel into `pending` (bounded by
+            // queue_depth) so the deadline shed below sees every waiting
+            // request each step, even while the cohort is full; admission
+            // still gates joins on boundaries and max_batch. Effective
+            // buffering is therefore up to queue_depth in `pending` plus
+            // queue_depth in the channel.
+            while pending.len() < policy.queue_depth {
+                match rx.try_recv() {
+                    Ok(j) => pending.push_back(j),
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        open = false;
+                        break;
+                    }
+                }
+            }
+        }
+
+        // Deadline-aware draining: shed overdue requests *every* loop
+        // iteration, not just at join boundaries — a dead request must be
+        // rejected promptly, not after waiting out a reuse window.
+        let mut kept = VecDeque::with_capacity(pending.len());
+        for job in pending.drain(..) {
+            let queued_s = job.enqueued.elapsed().as_secs_f64();
+            match policy.deadline_for(job.request.deadline_s) {
+                Some(dl) if queued_s > dl => {
+                    metrics.inc("requests_shed");
+                    let _ = job.done.send(Completion {
+                        request: job.request,
+                        result: Err(anyhow!(
+                            "deadline exceeded in queue ({queued_s:.3}s > {dl:.3}s)"
+                        )),
+                        queued_s,
+                        service_s: 0.0,
+                    });
+                }
+                _ => kept.push_back(job),
+            }
+        }
+        pending = kept;
+
+        // Admit at join boundaries.
+        while cohort.len() < policy.max_batch && !pending.is_empty() && cohort.can_join() {
+            let job = pending.pop_front().expect("non-empty");
+            let queued_s = job.enqueued.elapsed().as_secs_f64();
+            metrics.observe_s("queue_wait", queued_s);
+            // A join into a cohort that already stepped is a mid-flight
+            // join; formation-batch admits (cohort_step 0) are not.
+            let mid_flight = cohort.cohort_step() > 0 && !cohort.is_empty();
+            match cohort.admit(&job.request) {
+                Ok(tag) => {
+                    if mid_flight {
+                        metrics.inc("cohort_joins");
+                    }
+                    inflight.insert(
+                        tag,
+                        JobMeta {
+                            request: job.request,
+                            done: job.done,
+                            queued_s,
+                            admitted: Instant::now(),
+                        },
+                    );
+                }
+                Err(e) => {
+                    metrics.inc("requests_err");
+                    let _ = job.done.send(Completion {
+                        request: job.request,
+                        result: Err(e),
+                        queued_s,
+                        service_s: 0.0,
+                    });
+                }
+            }
+        }
+
+        if cohort.is_empty() {
+            if !open && pending.is_empty() {
+                break;
+            }
+            continue;
+        }
+
+        // One batched step for the whole cohort.
+        let t0 = Instant::now();
+        match cohort.step() {
+            Ok(out) => {
+                metrics.inc("cohort_steps");
+                metrics.add("cohort_member_steps", out.active_members as u64);
+                metrics.add(
+                    "tokens_denoised",
+                    (out.active_members * tokens_per_member) as u64,
+                );
+                if let Some(a) = out.action {
+                    let mut delta = PlanStats::default();
+                    match a {
+                        PlanAction::RefreshAll => delta.refresh_all = 1,
+                        PlanAction::RefreshWeights => delta.refresh_weights = 1,
+                        PlanAction::Reuse => delta.reuses = 1,
+                    }
+                    metrics.record_plan_stats("cohort", &delta);
+                }
+                metrics.observe_s("cohort_step_time", t0.elapsed().as_secs_f64());
+                for mut c in out.completions {
+                    let Some(meta) = inflight.remove(&c.tag) else {
+                        continue;
+                    };
+                    let service_s = meta.admitted.elapsed().as_secs_f64();
+                    // Batched steps are shared work, so per-phase timings
+                    // (step_s/select_s) live in the lane histograms; the
+                    // per-request wall time is attributable, so fill it.
+                    if let Ok(r) = c.result.as_mut() {
+                        r.stats.total_s = service_s;
+                    }
+                    metrics.observe_s("service_time", service_s);
+                    metrics.observe_s("e2e_time", meta.queued_s + service_s);
+                    metrics.inc(if c.result.is_ok() {
+                        "requests_ok"
+                    } else {
+                        "requests_err"
+                    });
+                    let _ = meta.done.send(Completion {
+                        request: c.request,
+                        result: c.result,
+                        queued_s: meta.queued_s,
+                        service_s,
+                    });
+                }
+            }
+            Err(e) => {
+                // A deterministic backend should never fail mid-step; if it
+                // does, fail the whole cohort rather than wedging the lane.
+                let msg = format!("cohort step failed: {e}");
+                for (tag, _req) in cohort.drain() {
+                    if let Some(meta) = inflight.remove(&tag) {
+                        fail(metrics, meta, &msg);
+                    }
+                }
+            }
+        }
+    }
+
+    // Lane closing: anything still pending was never admitted.
+    for job in pending {
+        metrics.inc("requests_err");
+        let _ = job.done.send(Completion {
+            request: job.request,
+            result: Err(anyhow!("scheduler lane shut down before admission")),
+            queued_s: job.enqueued.elapsed().as_secs_f64(),
+            service_s: 0.0,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::GenStats;
+    use crate::model::HostUVit;
+    use crate::runtime::ModelInfo;
+
+    fn tiny_model() -> Arc<HostUVit> {
+        let info = ModelInfo::synthetic("uvit_sched", 4, 2, 16, 2, 3, 5);
+        Arc::new(HostUVit::synthetic(&info, 1, 99))
+    }
+
+    fn toma_cfg(steps: usize) -> EngineConfig {
+        let mut cfg = EngineConfig::new("uvit_sched", "toma", Some(0.5));
+        cfg.steps = steps;
+        cfg
+    }
+
+    fn host_scheduler(policy: BatchPolicy) -> Scheduler {
+        let model = tiny_model();
+        Scheduler::new(policy, move |cfg: &EngineConfig| {
+            HostBackend::boxed(model.clone(), cfg.clone(), 4, DEFAULT_TAU)
+        })
+    }
+
+    #[test]
+    fn closed_loop_batch_completes_all() {
+        // Generous formation window so the closed-loop batch reliably
+        // cohorts up even on a loaded CI machine.
+        let s = host_scheduler(BatchPolicy {
+            max_batch: 4,
+            max_queue_wait_s: 0.25,
+            ..Default::default()
+        });
+        let reqs: Vec<GenRequest> = (0..5).map(|i| GenRequest::new("cat", i)).collect();
+        let comps = s.run_batch(&toma_cfg(6), reqs);
+        assert_eq!(comps.len(), 5);
+        for c in &comps {
+            let r = c.result.as_ref().expect("ok");
+            assert_eq!(r.stats.steps, 6);
+            assert!(r.stats.cohort_size >= 1);
+            assert!(r.latent.iter().all(|v| v.is_finite()));
+        }
+        assert_eq!(s.metrics.counter("requests_ok"), 5);
+        // Amortization: fewer cohort refreshes than request-level ones
+        // (5 requests would need 5 RefreshAll at batch size 1).
+        assert!(s.metrics.counter("cohort_refresh_all") < 5);
+        assert!(s.metrics.counter("tokens_denoised") > 0);
+        s.shutdown();
+    }
+
+    #[test]
+    fn deadline_zero_sheds_requests() {
+        let s = host_scheduler(BatchPolicy::with_max_batch(2));
+        let req = GenRequest::new("late", 1).with_deadline(0.0);
+        let rx = s.submit(&toma_cfg(4), req);
+        let c = rx.recv().expect("completion");
+        let err = c.result.err().expect("shed").to_string();
+        assert!(err.contains("deadline"), "unexpected error: {err}");
+        assert_eq!(s.metrics.counter("requests_shed"), 1);
+        s.shutdown();
+    }
+
+    #[test]
+    fn try_submit_rejects_when_lane_queue_full() {
+        // Hold the lane's backend factory on a condvar so the lane never
+        // drains its queue; with queue_depth 1, the first submit fills
+        // the channel and the second must fail fast with backpressure.
+        let gate = Arc::new((Mutex::new(false), std::sync::Condvar::new()));
+        let g2 = gate.clone();
+        let s = Scheduler::new(
+            BatchPolicy {
+                queue_depth: 1,
+                ..Default::default()
+            },
+            move |_cfg: &EngineConfig| {
+                let (lock, cv) = &*g2;
+                let mut open = lock.lock().unwrap();
+                while !*open {
+                    open = cv.wait(open).unwrap();
+                }
+                Err(anyhow!("factory released"))
+            },
+        );
+        let cfg = toma_cfg(2);
+        let rx1 = s.submit(&cfg, GenRequest::new("a", 1));
+        let err = s
+            .try_submit(&cfg, GenRequest::new("b", 2))
+            .err()
+            .expect("second submit must hit backpressure");
+        assert!(err.to_string().contains("backpressure"), "{err}");
+        assert_eq!(s.metrics.counter("requests_rejected"), 1);
+        // Release the lane; the queued request fails with the factory
+        // error instead of hanging.
+        {
+            let (lock, cv) = &*gate;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        let c = rx1.recv().expect("completion");
+        assert!(c.result.is_err());
+        s.shutdown();
+    }
+
+    #[test]
+    fn backend_init_failure_fails_requests() {
+        let s = Scheduler::new(BatchPolicy::default(), |_cfg: &EngineConfig| {
+            Err(anyhow!("no such model"))
+        });
+        let rx = s.submit(&toma_cfg(2), GenRequest::new("x", 0));
+        let c = rx.recv().expect("completion");
+        let err = c.result.err().expect("must fail").to_string();
+        assert!(err.contains("backend init failed"), "{err}");
+        s.shutdown();
+    }
+
+    #[test]
+    fn baseline_variant_runs_without_plans() {
+        let s = host_scheduler(BatchPolicy::with_max_batch(2));
+        let mut cfg = EngineConfig::new("uvit_sched", "baseline", None);
+        cfg.steps = 3;
+        let results = s
+            .run_batch_ok(&cfg, vec![GenRequest::new("a", 1), GenRequest::new("b", 2)])
+            .expect("ok");
+        assert_eq!(results.len(), 2);
+        assert_eq!(s.metrics.counter("cohort_refresh_all"), 0);
+        let zero = GenStats::default();
+        assert_eq!(results[0].stats.select_calls, zero.select_calls);
+        s.shutdown();
+    }
+}

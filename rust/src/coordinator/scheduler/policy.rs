@@ -1,0 +1,132 @@
+//! Admission policy for the micro-batching scheduler: cohort size, the
+//! cohort-formation window, queue bounds (backpressure) and admission
+//! deadlines (load shedding).
+
+/// Limits governing how a lane forms cohorts and drains its queue.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Maximum cohort size — requests batched into one denoising step.
+    pub max_batch: usize,
+    /// How long the first request of a new cohort waits for companions
+    /// before the cohort starts (the classic batching-window tradeoff:
+    /// larger windows raise occupancy, smaller ones bound added latency).
+    pub max_queue_wait_s: f64,
+    /// Bounded per-lane queue depth; `try_submit` fails fast beyond it
+    /// (backpressure), while `submit` blocks.
+    pub queue_depth: usize,
+    /// Default admission deadline (seconds from submission): a request
+    /// still queued after this long is shed with an error instead of
+    /// served hopelessly late. Per-request `GenRequest::deadline_s`
+    /// overrides it. `None` disables shedding.
+    pub deadline_s: Option<f64>,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 8,
+            max_queue_wait_s: 0.005,
+            queue_depth: 256,
+            deadline_s: None,
+        }
+    }
+}
+
+impl BatchPolicy {
+    /// Policy with a given cohort size cap, defaults elsewhere.
+    pub fn with_max_batch(max_batch: usize) -> Self {
+        BatchPolicy {
+            max_batch,
+            ..Default::default()
+        }
+        .normalized()
+    }
+
+    /// Formation windows above this are treated as "wait until the batch
+    /// is full": one hour, far beyond any serving cadence, and safely
+    /// finite for `Duration::from_secs_f64` (which panics on
+    /// non-finite/overflowing input — a lane-killing bug otherwise).
+    pub const MAX_QUEUE_WAIT_S: f64 = 3600.0;
+
+    /// Clamp degenerate values to servable bounds.
+    pub fn normalized(mut self) -> Self {
+        self.max_batch = self.max_batch.max(1);
+        self.queue_depth = self.queue_depth.max(1);
+        if !(self.max_queue_wait_s >= 0.0) {
+            self.max_queue_wait_s = 0.0; // negative or NaN
+        }
+        if self.max_queue_wait_s > Self::MAX_QUEUE_WAIT_S {
+            self.max_queue_wait_s = Self::MAX_QUEUE_WAIT_S; // inf or absurd
+        }
+        self
+    }
+
+    /// Effective admission deadline for a request (request override wins).
+    pub fn deadline_for(&self, request_deadline_s: Option<f64>) -> Option<f64> {
+        request_deadline_s.or(self.deadline_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_servable() {
+        let p = BatchPolicy::default();
+        assert!(p.max_batch >= 1);
+        assert!(p.queue_depth >= 1);
+        assert!(p.max_queue_wait_s >= 0.0);
+        assert!(p.deadline_s.is_none());
+    }
+
+    #[test]
+    fn normalized_clamps_degenerate_values() {
+        let p = BatchPolicy {
+            max_batch: 0,
+            max_queue_wait_s: -1.0,
+            queue_depth: 0,
+            deadline_s: None,
+        }
+        .normalized();
+        assert_eq!(p.max_batch, 1);
+        assert_eq!(p.queue_depth, 1);
+        assert_eq!(p.max_queue_wait_s, 0.0);
+        // NaN windows clamp too (the `!(x >= 0)` form catches them).
+        let p = BatchPolicy {
+            max_queue_wait_s: f64::NAN,
+            ..Default::default()
+        }
+        .normalized();
+        assert_eq!(p.max_queue_wait_s, 0.0);
+        // Infinite / absurd windows clamp to the finite cap instead of
+        // later panicking Duration::from_secs_f64 in the lane thread.
+        for huge in [f64::INFINITY, 1e30] {
+            let p = BatchPolicy {
+                max_queue_wait_s: huge,
+                ..Default::default()
+            }
+            .normalized();
+            assert_eq!(p.max_queue_wait_s, BatchPolicy::MAX_QUEUE_WAIT_S);
+        }
+    }
+
+    #[test]
+    fn request_deadline_overrides_policy() {
+        let p = BatchPolicy {
+            deadline_s: Some(1.0),
+            ..Default::default()
+        };
+        assert_eq!(p.deadline_for(None), Some(1.0));
+        assert_eq!(p.deadline_for(Some(0.2)), Some(0.2));
+        let none = BatchPolicy::default();
+        assert_eq!(none.deadline_for(None), None);
+        assert_eq!(none.deadline_for(Some(3.0)), Some(3.0));
+    }
+
+    #[test]
+    fn with_max_batch_sets_cap() {
+        assert_eq!(BatchPolicy::with_max_batch(4).max_batch, 4);
+        assert_eq!(BatchPolicy::with_max_batch(0).max_batch, 1);
+    }
+}

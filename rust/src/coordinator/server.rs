@@ -12,7 +12,7 @@
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
@@ -39,9 +39,11 @@ struct Job {
     done: Sender<Completion>,
 }
 
-/// One worker lane: a job queue drained by N engine-owning threads.
+/// One worker lane: a bounded job queue drained by N engine-owning
+/// threads. The bound provides backpressure: [`Server::submit`] blocks at
+/// the high-water mark, [`Server::try_submit`] fails fast.
 struct Lane {
-    tx: Sender<Job>,
+    tx: SyncSender<Job>,
     handles: Vec<JoinHandle<()>>,
 }
 
@@ -49,6 +51,7 @@ pub struct Server {
     artifact_dir: PathBuf,
     pub metrics: Arc<Metrics>,
     workers_per_lane: usize,
+    queue_depth: usize,
     lanes: Mutex<BTreeMap<String, Lane>>,
 }
 
@@ -58,6 +61,7 @@ impl Server {
             artifact_dir,
             metrics: Arc::new(Metrics::new()),
             workers_per_lane: workers_per_lane.max(1),
+            queue_depth: 1024,
             lanes: Mutex::new(BTreeMap::new()),
         }
     }
@@ -66,8 +70,15 @@ impl Server {
         Server::new(crate::default_artifact_dir(), workers_per_lane)
     }
 
+    /// Bound each lane's queue (backpressure watermark). Applies to lanes
+    /// spawned after the call.
+    pub fn with_queue_depth(mut self, depth: usize) -> Server {
+        self.queue_depth = depth.max(1);
+        self
+    }
+
     fn spawn_lane(&self, cfg: &EngineConfig) -> Lane {
-        let (tx, rx) = channel::<Job>();
+        let (tx, rx) = sync_channel::<Job>(self.queue_depth);
         let rx = Arc::new(Mutex::new(rx));
         let mut handles = vec![];
         for w in 0..self.workers_per_lane {
@@ -143,31 +154,96 @@ impl Server {
         Lane { tx, handles }
     }
 
-    /// Submit a request; the completion arrives on the returned channel.
-    pub fn submit(&self, cfg: &EngineConfig, request: GenRequest) -> Receiver<Completion> {
-        let key = cfg.key();
-        let (done_tx, done_rx) = channel();
+    fn lane_tx(&self, cfg: &EngineConfig) -> SyncSender<Job> {
         let mut lanes = self.lanes.lock().unwrap();
-        let lane = lanes
-            .entry(key)
-            .or_insert_with(|| self.spawn_lane(cfg));
+        lanes
+            .entry(cfg.key())
+            .or_insert_with(|| self.spawn_lane(cfg))
+            .tx
+            .clone()
+    }
+
+    /// Submit a request; the completion arrives on the returned channel.
+    /// Blocks when the lane queue is at its bound (backpressure). A dead
+    /// lane (panicked workers) fails the request with an error completion
+    /// and is respawned on the next submit.
+    pub fn submit(&self, cfg: &EngineConfig, request: GenRequest) -> Receiver<Completion> {
+        let tx = self.lane_tx(cfg);
+        let (done_tx, done_rx) = channel();
         self.metrics.inc("requests_submitted");
-        lane.tx
-            .send(Job {
-                request,
-                enqueued: Instant::now(),
-                done: done_tx,
-            })
-            .expect("lane alive");
+        let job = Job {
+            request,
+            enqueued: Instant::now(),
+            done: done_tx,
+        };
+        if let Err(std::sync::mpsc::SendError(job)) = tx.send(job) {
+            self.metrics.inc("requests_err");
+            self.lanes.lock().unwrap().remove(&cfg.key());
+            let _ = job.done.send(Completion {
+                request: job.request,
+                result: Err(anyhow!("server lane died; resubmit")),
+                queued_s: 0.0,
+                service_s: 0.0,
+            });
+        }
         done_rx
     }
 
+    /// Non-blocking submit: fails fast when the lane queue is full, so
+    /// upstream load balancers see backpressure instead of silent queueing.
+    pub fn try_submit(
+        &self,
+        cfg: &EngineConfig,
+        request: GenRequest,
+    ) -> Result<Receiver<Completion>> {
+        let tx = self.lane_tx(cfg);
+        let (done_tx, done_rx) = channel();
+        match tx.try_send(Job {
+            request,
+            enqueued: Instant::now(),
+            done: done_tx,
+        }) {
+            Ok(()) => {
+                self.metrics.inc("requests_submitted");
+                Ok(done_rx)
+            }
+            Err(TrySendError::Full(_)) => {
+                self.metrics.inc("requests_rejected");
+                Err(anyhow!(
+                    "lane queue full ({} deep): backpressure",
+                    self.queue_depth
+                ))
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                // Dead lane: drop it so the next submit respawns fresh.
+                self.lanes.lock().unwrap().remove(&cfg.key());
+                Err(anyhow!("server lane died; resubmit"))
+            }
+        }
+    }
+
     /// Run a batch to completion (closed-loop), returning completions in
-    /// submission order.
+    /// submission order. A lane dying mid-request yields error
+    /// completions for the affected requests rather than a panic.
     pub fn run_batch(&self, cfg: &EngineConfig, requests: Vec<GenRequest>) -> Vec<Completion> {
-        let rxs: Vec<Receiver<Completion>> =
-            requests.into_iter().map(|r| self.submit(cfg, r)).collect();
-        rxs.into_iter().map(|rx| rx.recv().expect("worker")).collect()
+        let pairs: Vec<(GenRequest, Receiver<Completion>)> = requests
+            .into_iter()
+            .map(|r| {
+                let rx = self.submit(cfg, r.clone());
+                (r, rx)
+            })
+            .collect();
+        pairs
+            .into_iter()
+            .map(|(request, rx)| {
+                rx.recv().unwrap_or_else(|_| Completion {
+                    request,
+                    result: Err(anyhow!("server lane died mid-request")),
+                    queued_s: 0.0,
+                    service_s: 0.0,
+                })
+            })
+            .collect()
     }
 
     /// Convenience: run a batch and return the successful results.

@@ -16,7 +16,16 @@
 //!   selection (incremental-gain lazy greedy since PR 1), attention merge,
 //!   transpose/pinv unmerge, region layouts.
 //! * [`baselines`] — ToMeSD / ToFu / ToDo / TLB reimplementations.
-//! * [`coordinator`] — engine, batcher, plan cache, server, metrics.
+//! * [`coordinator`] — engine, plan cache, per-request server, metrics
+//!   (latency histograms with p50/p95/p99), and — since PR 2 —
+//!   [`coordinator::scheduler`]: step-level continuous micro-batching.
+//!   Plan-compatible requests form *cohorts* that advance through batched
+//!   denoising steps sharing one `PlanSlot` (selection/weights amortize
+//!   across the batch), join mid-flight at refresh boundaries, leave on
+//!   completion, and are governed by a `BatchPolicy` (batch size cap,
+//!   formation window, bounded queues with backpressure, deadline
+//!   shedding). Batched latents are bit-identical to per-request ones
+//!   (`tests/scheduler_equivalence.rs`).
 //! * [`runtime`] — PJRT client, artifact registry, weight store. The
 //!   XLA-backed layer sits behind the `pjrt` cargo feature; the default
 //!   build compiles same-API pure-Rust stubs, so no XLA toolchain is
@@ -24,6 +33,10 @@
 //! * [`diffusion`] — DDIM / Euler samplers and noise schedules.
 //! * [`model`] — pure-Rust UVitLite forward (cross-validation substrate),
 //!   with multi-head attention lowered onto the parallel GEMM kernels.
+//!   `HostUVit::forward_batch` is the scheduler's batch-folded step path
+//!   (one GEMM per linear layer across the whole cohort, attention fanned
+//!   out per (sample, head)); `model::Linear` caches its packed Bᵀ panels
+//!   at construction so step weights are never repacked per call.
 //! * [`gpucost`] — per-GPU roofline model regenerating the paper's latency
 //!   tables on hardware we do not have.
 //! * [`quality`] — DINO/CLIP/FID proxy metrics.
@@ -34,7 +47,9 @@
 //!   kernel surface: GEMMs, tiled column softmax, parallel row ops).
 //! * [`util`], [`workload`], [`report`], [`bench`] — substrates
 //!   (`util::error` is the crate's dependency-free `anyhow` stand-in;
-//!   `bench::Runner` understands `--quick` and `--json <path>`).
+//!   `bench::Runner` understands `--quick` and `--json <path>`, and
+//!   `bench::diff` + `toma-serve bench-diff` gate CI on median
+//!   regressions between runs).
 
 // The `pjrt` feature selects the XLA-backed runtime modules, which need the
 // vendored `xla` crate in [dependencies]. Until that dependency lands (see

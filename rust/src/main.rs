@@ -1,12 +1,14 @@
 //! `toma-serve` — the ToMA serving CLI.
 //!
 //! Subcommands:
-//!   generate   generate one image latent with a chosen variant
-//!   serve      closed-loop batch serving over a synthetic request stream
-//!   table      regenerate a paper table (latency tables use the GPU cost
-//!              model; quality tables run the real engine) — see DESIGN.md
-//!   artifacts  list/compile-check the AOT artifact inventory
-//!   info       print manifest + runtime info
+//!   generate    generate one image latent with a chosen variant
+//!   serve       closed-loop batch serving over a synthetic request stream
+//!   table       regenerate a paper table (latency tables use the GPU cost
+//!               model; quality tables run the real engine) — see DESIGN.md
+//!   artifacts   list/compile-check the AOT artifact inventory
+//!   info        print manifest + runtime info
+//!   bench-diff  compare two BENCH_<target>.json records; non-zero exit on
+//!               median regressions beyond --tolerance (CI perf gate)
 
 use std::sync::Arc;
 
@@ -26,8 +28,42 @@ fn usage() -> String {
        serve      --model uvit_xs --variant toma --ratio 0.5 --requests 8 --workers 2\n\
        table      --id {1,2,3,4,5,7,8,9,10,C} [--device rtx6000] [--full]\n\
        artifacts  [--compile <name>]\n\
-       info\n"
+       info\n\
+       bench-diff <old.json> <new.json> [--tolerance 0.15] [--min-median-us 50]\n"
         .to_string()
+}
+
+/// Compare two bench JSON records; error (non-zero exit) on regression.
+fn cmd_bench_diff(args: &Args) -> Result<()> {
+    let old_path = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("bench-diff needs <old.json> <new.json>"))?;
+    let new_path = args
+        .positional
+        .get(2)
+        .ok_or_else(|| anyhow!("bench-diff needs <old.json> <new.json>"))?;
+    let tolerance = args.get_f64("tolerance", 0.15);
+    let min_median_s = args.get_f64("min-median-us", 50.0) / 1e6;
+    let old = std::fs::read_to_string(old_path)
+        .map_err(|e| anyhow!("reading {old_path}: {e}"))?;
+    let new = std::fs::read_to_string(new_path)
+        .map_err(|e| anyhow!("reading {new_path}: {e}"))?;
+    let report = toma::bench::diff::diff(&old, &new)?;
+    print!("{}", report.render(tolerance, min_median_s));
+    let regs = report.regressions(tolerance, min_median_s);
+    toma::ensure!(
+        regs.is_empty(),
+        "{} case(s) regressed beyond {:.0}% (old -> new median)",
+        regs.len(),
+        tolerance * 100.0
+    );
+    println!(
+        "bench-diff: {} case(s) within {:.0}% tolerance",
+        report.rows.len(),
+        tolerance * 100.0
+    );
+    Ok(())
 }
 
 fn engine_config(args: &Args) -> EngineConfig {
@@ -191,6 +227,7 @@ fn main() -> Result<()> {
         "table" => toma::report::tables::run_table(&args),
         "artifacts" => cmd_artifacts(&args),
         "info" => cmd_info(),
+        "bench-diff" => cmd_bench_diff(&args),
         _ => {
             print!("{}", usage());
             if cmd != "help" {

@@ -10,4 +10,4 @@
 
 pub mod uvit;
 
-pub use uvit::{HostReduce, HostUVit, UVitParams};
+pub use uvit::{BatchReduce, BatchSample, HostReduce, HostUVit, Linear, UVitParams};

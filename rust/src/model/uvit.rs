@@ -1,31 +1,76 @@
 //! Host-side UVitLite forward pass (mirror of `python/compile/model.py`).
+//!
+//! Two entry points share one implementation:
+//!
+//! * [`HostUVit::forward`] — one (latent, t, cond) sample, used by the
+//!   per-request reference engine and the analysis benches.
+//! * [`HostUVit::forward_batch`] — the micro-batching scheduler's step
+//!   path: S samples advance one denoising step together. Every linear
+//!   layer (qkv / proj / mlp / text) is *batch-folded* into a single
+//!   (S·rows x d) GEMM on the `tensor::gemm` substrate, and attention fans
+//!   out per (sample, head) across the worker pool.
+//!
+//! The fold is **bitwise sample-invariant**: the blocked GEMM kernel
+//! computes each output row with an arithmetic order that depends only on
+//! the (k, n) tiling — never on the row count — and every other kernel in
+//! the path (layernorm, softmax, gelu, per-region merge/unmerge) is
+//! row-local with shapes that do not change under batching. A sample's
+//! eps is therefore identical whether it runs alone or in a cohort of any
+//! size — the property the scheduler's equivalence tests pin down.
 
 use crate::anyhow;
 use crate::runtime::{ModelInfo, WeightStore};
-use crate::tensor::ops::{gelu, layernorm, matmul, matmul_bt_into, silu, softmax_rows};
-use crate::util::error::Result;
+use crate::tensor::ops::{gelu, layernorm, silu, softmax_rows};
+use crate::tensor::{gemm, pool};
 use crate::toma::merge::MergeWeights;
 use crate::toma::regions::RegionLayout;
 use crate::toma::unmerge::unmerge_transpose;
+use crate::util::error::Result;
+use crate::util::Pcg64;
 
-/// A linear layer's host weights.
+/// A linear layer's host weights, with the GEMM operand pre-packed.
+///
+/// `ops::matmul` repacks B into Bᵀ panels on every call, but step weights
+/// never change across the denoising loop — so the transpose is hoisted to
+/// construction and `apply` feeds the blocked `gemm::matmul_bt_into`
+/// kernel directly (ROADMAP "Packed-B reuse across steps"). Because that
+/// kernel's per-output-row arithmetic is independent of the row count,
+/// `apply` is also bitwise fold-invariant:
+/// `apply(concat(x1, x2)) == concat(apply(x1), apply(x2))`.
 #[derive(Clone, Debug)]
 pub struct Linear {
-    pub w: Vec<f32>, // (d_in x d_out)
     pub b: Vec<f32>,
     pub d_in: usize,
     pub d_out: usize,
+    /// Packed Bᵀ panels, (d_out x d_in) row-major — the only stored copy
+    /// of the weights (storing the row-major (d_in x d_out) form too
+    /// would double the resident weight footprint for no runtime use).
+    wt: Vec<f32>,
 }
 
 impl Linear {
+    pub fn new(w: Vec<f32>, b: Vec<f32>, d_in: usize, d_out: usize) -> Linear {
+        assert_eq!(w.len(), d_in * d_out, "linear weight shape");
+        assert_eq!(b.len(), d_out, "linear bias shape");
+        let mut wt = vec![0.0f32; w.len()];
+        gemm::transpose_into(&w, &mut wt, d_in, d_out);
+        Linear { b, d_in, d_out, wt }
+    }
+
     pub fn apply(&self, x: &[f32], rows: usize) -> Vec<f32> {
-        let mut y = matmul(x, &self.w, rows, self.d_in, self.d_out);
-        for r in 0..rows {
-            for c in 0..self.d_out {
-                y[r * self.d_out + c] += self.b[c];
+        let mut y = vec![0.0f32; rows * self.d_out];
+        self.apply_into(x, rows, &mut y);
+        y
+    }
+
+    /// y = x W + b into a caller buffer, using the cached Bᵀ panels.
+    pub fn apply_into(&self, x: &[f32], rows: usize, y: &mut [f32]) {
+        gemm::matmul_bt_into(x, &self.wt, y, rows, self.d_in, self.d_out);
+        for row in y.chunks_mut(self.d_out) {
+            for (yv, bv) in row.iter_mut().zip(&self.b) {
+                *yv += bv;
             }
         }
-        y
     }
 }
 
@@ -61,7 +106,7 @@ pub struct UVitParams {
     pub blocks: Vec<Block>,
 }
 
-/// Token-reduction hook for the host forward.
+/// Token-reduction hook for the single-sample host forward.
 pub enum HostReduce<'a> {
     None,
     /// ToMA per-module merge with a shared operator (transpose unmerge).
@@ -71,11 +116,45 @@ pub enum HostReduce<'a> {
     },
 }
 
+/// One sample of a batched denoising step.
+pub struct BatchSample<'a> {
+    /// Latent, (C, H, W) flattened.
+    pub x_bchw: &'a [f32],
+    pub t: f32,
+    /// Conditioning, (txt_len x txt_dim).
+    pub cond: &'a [f32],
+}
+
+/// Token-reduction hook for the batched step path. The merge operator rows
+/// live in one shared buffer (the cohort's `PlanSlot`); `plan_of[s]` maps
+/// sample `s` to its plan row, so CFG pairs share one plan without copies.
+pub enum BatchReduce<'a> {
+    None,
+    Toma {
+        /// (plans x regions, k_loc, n_loc) flattened A~ blocks.
+        a_tilde: &'a [f32],
+        k_loc: usize,
+        layout: &'a RegionLayout,
+        /// Per-sample plan row index into the leading dim of `a_tilde`.
+        plan_of: &'a [usize],
+    },
+}
+
 /// The host model: config + params.
 pub struct HostUVit {
     pub info: ModelInfo,
     pub params: UVitParams,
     pub depth: usize,
+}
+
+thread_local! {
+    /// Per-thread MHA packing scratch (qh | kh | vht | logits), reused
+    /// across (sample, head) attention tasks: keeps the hot path
+    /// allocation-free per worker thread while the tasks fan out over
+    /// the pool. Every region is fully overwritten before use (the GEMM
+    /// kernel zeroes its output), so stale contents are harmless.
+    static MHA_SCRATCH: std::cell::RefCell<Vec<f32>> =
+        const { std::cell::RefCell::new(Vec::new()) };
 }
 
 fn get_linear(ws: &WeightStore, name: &str, d_in: usize, d_out: usize) -> Result<Linear> {
@@ -89,7 +168,7 @@ fn get_linear(ws: &WeightStore, name: &str, d_in: usize, d_out: usize) -> Result
             d_out
         ));
     }
-    Ok(Linear { w, b, d_in, d_out })
+    Ok(Linear::new(w, b, d_in, d_out))
 }
 
 fn get_ln(ws: &WeightStore, name: &str) -> Result<Ln> {
@@ -97,6 +176,20 @@ fn get_ln(ws: &WeightStore, name: &str) -> Result<Ln> {
         g: ws.f32_data(&format!("{name}.g"))?,
         b: ws.f32_data(&format!("{name}.b"))?,
     })
+}
+
+fn synthetic_linear(rng: &mut Pcg64, d_in: usize, d_out: usize) -> Linear {
+    let s = 1.0 / (d_in as f32).sqrt();
+    let w: Vec<f32> = rng.normal_vec(d_in * d_out).into_iter().map(|v| v * s).collect();
+    let b: Vec<f32> = rng.normal_vec(d_out).into_iter().map(|v| v * 0.01).collect();
+    Linear::new(w, b, d_in, d_out)
+}
+
+fn unit_ln(d: usize) -> Ln {
+    Ln {
+        g: vec![1.0; d],
+        b: vec![0.0; d],
+    }
 }
 
 impl HostUVit {
@@ -141,6 +234,47 @@ impl HostUVit {
         })
     }
 
+    /// Random-init model with the real architecture — the artifact-free
+    /// substrate for the scheduler's tier-1 tests and the serve_sweep
+    /// bench (no weight npz or XLA toolchain needed).
+    pub fn synthetic(info: &ModelInfo, depth: usize, seed: u64) -> HostUVit {
+        let d = info.dim;
+        let mut rng = Pcg64::new(seed);
+        let blocks: Vec<Block> = (0..depth)
+            .map(|_| Block {
+                ln1: unit_ln(d),
+                qkv: synthetic_linear(&mut rng, d, 3 * d),
+                proj: synthetic_linear(&mut rng, d, d),
+                ln2: unit_ln(d),
+                q_x: synthetic_linear(&mut rng, d, d),
+                kv_c: synthetic_linear(&mut rng, d, 2 * d),
+                cproj: synthetic_linear(&mut rng, d, d),
+                ln3: unit_ln(d),
+                mlp1: synthetic_linear(&mut rng, d, 4 * d),
+                mlp2: synthetic_linear(&mut rng, 4 * d, d),
+            })
+            .collect();
+        let pos: Vec<f32> = rng
+            .normal_vec(info.tokens * d)
+            .into_iter()
+            .map(|v| v * 0.02)
+            .collect();
+        HostUVit {
+            info: info.clone(),
+            params: UVitParams {
+                patch: synthetic_linear(&mut rng, info.channels, d),
+                pos,
+                time1: synthetic_linear(&mut rng, d, d),
+                time2: synthetic_linear(&mut rng, d, d),
+                txt: synthetic_linear(&mut rng, info.txt_dim, d),
+                final_ln: unit_ln(d),
+                head: synthetic_linear(&mut rng, d, info.channels),
+                blocks,
+            },
+            depth,
+        }
+    }
+
     /// Sinusoidal timestep embedding matching model.py.
     fn time_embedding(&self, t: f32) -> Vec<f32> {
         let dim = self.info.dim;
@@ -155,46 +289,85 @@ impl HostUVit {
         out
     }
 
-    /// Multi-head SDPA over host slices: q (nq x d), k/v (nk x d).
+    /// Multi-head SDPA over `samples` independent row groups: q is
+    /// (samples*nq x d), k/v are (samples*nk x d); attention never crosses
+    /// a sample boundary.
     ///
-    /// Each head is packed into contiguous (rows x dh) panels so both the
-    /// QK^T logits and the PV reduction run as blocked parallel GEMMs on
-    /// the `tensor::gemm` substrate (the packing is O(rows * d), the GEMMs
-    /// O(nq * nk * dh) — the packing cost vanishes for real token counts).
-    fn mha(&self, q: &[f32], k: &[f32], v: &[f32], nq: usize, nk: usize) -> Vec<f32> {
+    /// The (sample x head) tasks fan out across the worker pool; each task
+    /// packs its head panels (q pre-scaled by 1/sqrt(dh), V transposed)
+    /// and runs the two blocked GEMMs serially on its worker — the same
+    /// arithmetic per head regardless of how many samples are folded.
+    fn mha(&self, q: &[f32], k: &[f32], v: &[f32], samples: usize, nq: usize, nk: usize) -> Vec<f32> {
         let d = self.info.dim;
         let h = self.info.heads;
         let dh = d / h;
+        debug_assert_eq!(dh * h, d, "heads must divide dim");
         let scale = 1.0 / (dh as f32).sqrt();
-        let mut out = vec![0.0f32; nq * d];
-        // All scratch hoisted out of the head loop: zero allocations per head.
-        let mut qh = vec![0.0f32; nq * dh];
-        let mut kh = vec![0.0f32; nk * dh];
-        let mut vht = vec![0.0f32; dh * nk];
-        let mut logits = vec![0.0f32; nq * nk];
-        let mut oh = vec![0.0f32; nq * dh];
-        for head in 0..h {
-            let off = head * dh;
-            // Fold the 1/sqrt(dh) scale into the O(nq*dh) q-panel pack —
-            // nk/dh times cheaper than rescaling the (nq x nk) logits.
-            for i in 0..nq {
-                for c in 0..dh {
-                    qh[i * dh + c] = q[i * d + off + c] * scale;
+        debug_assert_eq!(q.len(), samples * nq * d);
+        debug_assert_eq!(k.len(), samples * nk * d);
+        debug_assert_eq!(v.len(), samples * nk * d);
+        // (samples*h, nq, dh) head outputs, one contiguous chunk per task.
+        let mut heads_out = vec![0.0f32; samples * h * nq * dh];
+        let attend = |ti: usize, out_h: &mut [f32]| {
+            let s = ti / h;
+            let off = (ti % h) * dh;
+            let qs = &q[s * nq * d..(s + 1) * nq * d];
+            let ks = &k[s * nk * d..(s + 1) * nk * d];
+            let vs = &v[s * nk * d..(s + 1) * nk * d];
+            MHA_SCRATCH.with(|cell| {
+                let mut buf = cell.borrow_mut();
+                let need = nq * dh + nk * dh + dh * nk + nq * nk;
+                if buf.len() < need {
+                    buf.resize(need, 0.0);
                 }
-            }
-            // Pack V directly transposed (dh x nk) so the PV reduction is a
-            // bt-GEMM with no internal packing allocation.
-            for j in 0..nk {
-                kh[j * dh..(j + 1) * dh].copy_from_slice(&k[j * d + off..j * d + off + dh]);
-                for c in 0..dh {
-                    vht[c * nk + j] = v[j * d + off + c];
+                let (qh, rest) = buf.split_at_mut(nq * dh);
+                let (kh, rest) = rest.split_at_mut(nk * dh);
+                let (vht, rest) = rest.split_at_mut(dh * nk);
+                let logits = &mut rest[..nq * nk];
+                // Fold the 1/sqrt(dh) scale into the O(nq*dh) q-panel
+                // pack — nk/dh times cheaper than rescaling the
+                // (nq x nk) logits.
+                for i in 0..nq {
+                    for c in 0..dh {
+                        qh[i * dh + c] = qs[i * d + off + c] * scale;
+                    }
                 }
+                // Pack V directly transposed (dh x nk) so the PV
+                // reduction is a bt-GEMM with no internal packing
+                // allocation.
+                for j in 0..nk {
+                    kh[j * dh..(j + 1) * dh]
+                        .copy_from_slice(&ks[j * d + off..j * d + off + dh]);
+                    for c in 0..dh {
+                        vht[c * nk + j] = vs[j * d + off + c];
+                    }
+                }
+                gemm::matmul_bt_into(qh, kh, logits, nq, dh, nk);
+                softmax_rows(logits, nq, nk);
+                gemm::matmul_bt_into(logits, vht, out_h, nq, nk, dh);
+            });
+        };
+        // Below this many multiply-adds across all tasks, pool dispatch
+        // costs more than the attention math; results are bit-identical
+        // either way.
+        let macs = samples * h * nq * nk * dh;
+        if samples * h == 1 || macs < gemm::PAR_MIN_MACS {
+            for (ti, chunk) in heads_out.chunks_mut(nq * dh).enumerate() {
+                attend(ti, chunk);
             }
-            matmul_bt_into(&qh, &kh, &mut logits, nq, dh, nk);
-            softmax_rows(&mut logits, nq, nk);
-            matmul_bt_into(&logits, &vht, &mut oh, nq, nk, dh);
-            for i in 0..nq {
-                out[i * d + off..i * d + off + dh].copy_from_slice(&oh[i * dh..(i + 1) * dh]);
+        } else {
+            pool::parallel_chunks_mut(&mut heads_out, nq * dh, |ti, chunk| attend(ti, chunk));
+        }
+        // Repack (s, head, i, c) -> (s*nq + i, head*dh + c).
+        let mut out = vec![0.0f32; samples * nq * d];
+        for s in 0..samples {
+            for head in 0..h {
+                let base = (s * h + head) * nq * dh;
+                let off = head * dh;
+                for i in 0..nq {
+                    out[(s * nq + i) * d + off..(s * nq + i) * d + off + dh]
+                        .copy_from_slice(&heads_out[base + i * dh..base + (i + 1) * dh]);
+                }
             }
         }
         out
@@ -236,55 +409,38 @@ impl HostUVit {
         h
     }
 
-    /// One denoising step for a single batch element.
-    /// `cond` is (txt_len x txt_dim); returns eps in (C, H, W) layout.
-    pub fn forward(&self, x_bchw: &[f32], t: f32, cond: &[f32], reduce: &HostReduce) -> Vec<f32> {
-        self.forward_with_taps(x_bchw, t, cond, reduce, None)
-    }
-
-    /// Forward pass that optionally records each block's input hidden
-    /// state (N x d) — the Fig. 3 latent-locality analysis substrate.
-    pub fn forward_with_taps(
+    /// Merge each sample's (n x d) rows into (regions*k_loc x d) with its
+    /// plan row's A~. Returns `None` (use the input rows unchanged) for
+    /// `BatchReduce::None` — no copy on the no-merge path — plus the
+    /// per-sample row count.
+    fn batch_merge(
         &self,
-        x_bchw: &[f32],
-        t: f32,
-        cond: &[f32],
-        reduce: &HostReduce,
-        mut taps: Option<&mut Vec<Vec<f32>>>,
-    ) -> Vec<f32> {
-        let info = &self.info;
-        let n = info.tokens;
-        let d = info.dim;
-        let mut x = self.embed_tokens(x_bchw, t);
-        let ctx = self.params.txt.apply(cond, info.txt_len);
-
-        // merge/unmerge helpers bound to the reduction mode.
-        let apply_module = |x: &mut Vec<f32>,
-                            h: Vec<f32>,
-                            module: &dyn Fn(&[f32], usize) -> Vec<f32>,
-                            reduce: &HostReduce| {
-            match reduce {
-                HostReduce::None => {
-                    let y = module(&h, n);
-                    for (xv, yv) in x.iter_mut().zip(&y) {
-                        *xv += yv;
-                    }
-                }
-                HostReduce::Toma { weights, layout } => {
-                    // Regional merge: split -> per-region A~ X -> module ->
-                    // per-region A~^T Y -> join. `weights` holds the
-                    // block-diagonal operator per region, identical rows
-                    // across regions count.
-                    let p = layout.regions;
-                    let n_loc = layout.tokens_per_region();
-                    let k_loc = weights.k;
-                    let hs = layout.split(&h, d);
-                    let mut merged = vec![0.0f32; p * k_loc * d];
+        h: &[f32],
+        s_count: usize,
+        reduce: &BatchReduce,
+    ) -> (Option<Vec<f32>>, usize) {
+        let n = self.info.tokens;
+        let d = self.info.dim;
+        match reduce {
+            BatchReduce::None => (None, n),
+            BatchReduce::Toma {
+                a_tilde,
+                k_loc,
+                layout,
+                plan_of,
+            } => {
+                let p = layout.regions;
+                let n_loc = layout.tokens_per_region();
+                let k_loc = *k_loc;
+                let mut merged = vec![0.0f32; s_count * p * k_loc * d];
+                for s in 0..s_count {
+                    let hs = layout.split(&h[s * n * d..(s + 1) * n * d], d);
+                    let m = plan_of[s];
                     for r in 0..p {
+                        let g = m * p + r;
                         let w = MergeWeights {
                             a: vec![],
-                            a_tilde: weights.a_tilde
-                                [r * k_loc * n_loc..(r + 1) * k_loc * n_loc]
+                            a_tilde: a_tilde[g * k_loc * n_loc..(g + 1) * k_loc * n_loc]
                                 .to_vec(),
                             k: k_loc,
                             n: n_loc,
@@ -294,90 +450,343 @@ impl HostUVit {
                             &hs[r * n_loc * d..(r + 1) * n_loc * d],
                             d,
                         );
-                        merged[r * k_loc * d..(r + 1) * k_loc * d].copy_from_slice(&xm);
+                        merged[(s * p + r) * k_loc * d..(s * p + r + 1) * k_loc * d]
+                            .copy_from_slice(&xm);
                     }
-                    let y = module(&merged, p * k_loc);
+                }
+                (Some(merged), p * k_loc)
+            }
+        }
+    }
+
+    /// Unmerge each sample's module output back to n tokens (A~ᵀ Y per
+    /// region) and add the residual into x.
+    fn batch_unmerge_add(&self, x: &mut [f32], y: &[f32], s_count: usize, reduce: &BatchReduce) {
+        let n = self.info.tokens;
+        let d = self.info.dim;
+        match reduce {
+            BatchReduce::None => {
+                for (xv, yv) in x.iter_mut().zip(y) {
+                    *xv += yv;
+                }
+            }
+            BatchReduce::Toma {
+                a_tilde,
+                k_loc,
+                layout,
+                plan_of,
+            } => {
+                let p = layout.regions;
+                let n_loc = layout.tokens_per_region();
+                let k_loc = *k_loc;
+                for s in 0..s_count {
+                    let m = plan_of[s];
                     let mut restored = vec![0.0f32; n * d];
                     for r in 0..p {
+                        let g = m * p + r;
                         let w = MergeWeights {
                             a: vec![],
-                            a_tilde: weights.a_tilde
-                                [r * k_loc * n_loc..(r + 1) * k_loc * n_loc]
+                            a_tilde: a_tilde[g * k_loc * n_loc..(g + 1) * k_loc * n_loc]
                                 .to_vec(),
                             k: k_loc,
                             n: n_loc,
                         };
-                        let back =
-                            unmerge_transpose(&w, &y[r * k_loc * d..(r + 1) * k_loc * d], d);
+                        let back = unmerge_transpose(
+                            &w,
+                            &y[(s * p + r) * k_loc * d..(s * p + r + 1) * k_loc * d],
+                            d,
+                        );
                         restored[r * n_loc * d..(r + 1) * n_loc * d].copy_from_slice(&back);
                     }
                     let joined = layout.join(&restored, d);
-                    for (xv, yv) in x.iter_mut().zip(&joined) {
+                    for (xv, yv) in x[s * n * d..(s + 1) * n * d].iter_mut().zip(&joined) {
                         *xv += yv;
                     }
                 }
             }
+        }
+    }
+
+    /// One denoising step for a single batch element.
+    /// `cond` is (txt_len x txt_dim); returns eps in (C, H, W) layout.
+    pub fn forward(&self, x_bchw: &[f32], t: f32, cond: &[f32], reduce: &HostReduce) -> Vec<f32> {
+        self.forward_with_taps(x_bchw, t, cond, reduce, None)
+    }
+
+    /// Single-sample forward that optionally records each block's input
+    /// hidden state (N x d) — the Fig. 3 latent-locality substrate. Thin
+    /// wrapper over the batched implementation (one sample).
+    pub fn forward_with_taps(
+        &self,
+        x_bchw: &[f32],
+        t: f32,
+        cond: &[f32],
+        reduce: &HostReduce,
+        taps: Option<&mut Vec<Vec<f32>>>,
+    ) -> Vec<f32> {
+        let sample = BatchSample { x_bchw, t, cond };
+        let reduce = match reduce {
+            HostReduce::None => BatchReduce::None,
+            HostReduce::Toma { weights, layout } => BatchReduce::Toma {
+                a_tilde: &weights.a_tilde,
+                k_loc: weights.k,
+                layout: *layout,
+                plan_of: &[0],
+            },
         };
+        self.forward_batch_taps(std::slice::from_ref(&sample), &reduce, taps)
+            .pop()
+            .expect("one sample")
+    }
+
+    /// One batched denoising step for S independent samples; returns eps
+    /// in (C, H, W) layout per sample. See the module docs for the
+    /// fold-invariance guarantee.
+    pub fn forward_batch(&self, samples: &[BatchSample], reduce: &BatchReduce) -> Vec<Vec<f32>> {
+        self.forward_batch_taps(samples, reduce, None)
+    }
+
+    fn forward_batch_taps(
+        &self,
+        samples: &[BatchSample],
+        reduce: &BatchReduce,
+        mut taps: Option<&mut Vec<Vec<f32>>>,
+    ) -> Vec<Vec<f32>> {
+        let info = &self.info;
+        let n = info.tokens;
+        let d = info.dim;
+        let s_count = samples.len();
+        if s_count == 0 {
+            return vec![];
+        }
+        let (tl, td) = (info.txt_len, info.txt_dim);
+        if let BatchReduce::Toma { plan_of, .. } = reduce {
+            assert_eq!(plan_of.len(), s_count, "plan_of per sample");
+        }
+
+        // Per-sample token embedding, concatenated (S*n x d).
+        let mut x = vec![0.0f32; s_count * n * d];
+        for (s, smp) in samples.iter().enumerate() {
+            assert_eq!(smp.cond.len(), tl * td, "cond shape");
+            let tok = self.embed_tokens(smp.x_bchw, smp.t);
+            x[s * n * d..(s + 1) * n * d].copy_from_slice(&tok);
+        }
+
+        // Text context: one folded GEMM over every sample's conditioning.
+        let mut cond_cat = vec![0.0f32; s_count * tl * td];
+        for (s, smp) in samples.iter().enumerate() {
+            cond_cat[s * tl * td..(s + 1) * tl * td].copy_from_slice(smp.cond);
+        }
+        let ctx = self.params.txt.apply(&cond_cat, s_count * tl);
 
         for b in &self.params.blocks {
             if let Some(t) = taps.as_deref_mut() {
                 t.push(x.clone());
             }
             // Self-attention.
-            let h = self.ln(&x, n, &b.ln1);
-            let self_attn = |hm: &[f32], rows: usize| -> Vec<f32> {
-                let qkv = b.qkv.apply(hm, rows);
-                let mut q = vec![0.0f32; rows * d];
-                let mut k = vec![0.0f32; rows * d];
-                let mut v = vec![0.0f32; rows * d];
-                for r in 0..rows {
-                    q[r * d..(r + 1) * d].copy_from_slice(&qkv[r * 3 * d..r * 3 * d + d]);
-                    k[r * d..(r + 1) * d]
-                        .copy_from_slice(&qkv[r * 3 * d + d..r * 3 * d + 2 * d]);
-                    v[r * d..(r + 1) * d]
-                        .copy_from_slice(&qkv[r * 3 * d + 2 * d..(r + 1) * 3 * d]);
-                }
-                let o = self.mha(&q, &k, &v, rows, rows);
-                b.proj.apply(&o, rows)
-            };
-            apply_module(&mut x, h, &self_attn, reduce);
-
-            // Cross-attention.
-            let h = self.ln(&x, n, &b.ln2);
-            let kv = b.kv_c.apply(&ctx, info.txt_len);
-            let mut ck = vec![0.0f32; info.txt_len * d];
-            let mut cv = vec![0.0f32; info.txt_len * d];
-            for r in 0..info.txt_len {
-                ck[r * d..(r + 1) * d].copy_from_slice(&kv[r * 2 * d..r * 2 * d + d]);
-                cv[r * d..(r + 1) * d].copy_from_slice(&kv[r * 2 * d + d..(r + 1) * 2 * d]);
+            let h = self.ln(&x, s_count * n, &b.ln1);
+            let (merged, rows_m) = self.batch_merge(&h, s_count, reduce);
+            let hm: &[f32] = merged.as_deref().unwrap_or(&h);
+            let qkv = b.qkv.apply(hm, s_count * rows_m);
+            let mut q = vec![0.0f32; s_count * rows_m * d];
+            let mut k = vec![0.0f32; s_count * rows_m * d];
+            let mut v = vec![0.0f32; s_count * rows_m * d];
+            for r in 0..s_count * rows_m {
+                q[r * d..(r + 1) * d].copy_from_slice(&qkv[r * 3 * d..r * 3 * d + d]);
+                k[r * d..(r + 1) * d]
+                    .copy_from_slice(&qkv[r * 3 * d + d..r * 3 * d + 2 * d]);
+                v[r * d..(r + 1) * d]
+                    .copy_from_slice(&qkv[r * 3 * d + 2 * d..(r + 1) * 3 * d]);
             }
-            let cross = |hm: &[f32], rows: usize| -> Vec<f32> {
-                let q = b.q_x.apply(hm, rows);
-                let o = self.mha(&q, &ck, &cv, rows, info.txt_len);
-                b.cproj.apply(&o, rows)
-            };
-            apply_module(&mut x, h, &cross, reduce);
+            let o = self.mha(&q, &k, &v, s_count, rows_m, rows_m);
+            let y = b.proj.apply(&o, s_count * rows_m);
+            self.batch_unmerge_add(&mut x, &y, s_count, reduce);
+
+            // Cross-attention (K/V from the folded kv_c GEMM).
+            let h = self.ln(&x, s_count * n, &b.ln2);
+            let kv = b.kv_c.apply(&ctx, s_count * tl);
+            let mut ck = vec![0.0f32; s_count * tl * d];
+            let mut cv = vec![0.0f32; s_count * tl * d];
+            for r in 0..s_count * tl {
+                ck[r * d..(r + 1) * d].copy_from_slice(&kv[r * 2 * d..r * 2 * d + d]);
+                cv[r * d..(r + 1) * d]
+                    .copy_from_slice(&kv[r * 2 * d + d..(r + 1) * 2 * d]);
+            }
+            let (merged, rows_m) = self.batch_merge(&h, s_count, reduce);
+            let hm: &[f32] = merged.as_deref().unwrap_or(&h);
+            let q = b.q_x.apply(hm, s_count * rows_m);
+            let o = self.mha(&q, &ck, &cv, s_count, rows_m, tl);
+            let y = b.cproj.apply(&o, s_count * rows_m);
+            self.batch_unmerge_add(&mut x, &y, s_count, reduce);
 
             // MLP.
-            let h = self.ln(&x, n, &b.ln3);
-            let mlp = |hm: &[f32], rows: usize| -> Vec<f32> {
-                let mut u = b.mlp1.apply(hm, rows);
-                gelu(&mut u);
-                b.mlp2.apply(&u, rows)
-            };
-            apply_module(&mut x, h, &mlp, reduce);
+            let h = self.ln(&x, s_count * n, &b.ln3);
+            let (merged, rows_m) = self.batch_merge(&h, s_count, reduce);
+            let hm: &[f32] = merged.as_deref().unwrap_or(&h);
+            let mut u = b.mlp1.apply(hm, s_count * rows_m);
+            gelu(&mut u);
+            let y = b.mlp2.apply(&u, s_count * rows_m);
+            self.batch_unmerge_add(&mut x, &y, s_count, reduce);
         }
 
-        let hf = self.ln(&x, n, &self.params.final_ln);
-        let tokens_out = self.params.head.apply(&hf, n);
-        // unpatchify p=1: (n x C) -> (C, H, W).
+        let hf = self.ln(&x, s_count * n, &self.params.final_ln);
+        let tokens_out = self.params.head.apply(&hf, s_count * n);
+        // unpatchify p=1 per sample: (n x C) -> (C, H, W).
         let c = info.channels;
-        let mut eps = vec![0.0f32; c * n];
-        for px in 0..n {
-            for ch in 0..c {
-                eps[ch * n + px] = tokens_out[px * c + ch];
+        (0..s_count)
+            .map(|s| {
+                let base = s * n * c;
+                let mut eps = vec![0.0f32; c * n];
+                for px in 0..n {
+                    for ch in 0..c {
+                        eps[ch * n + px] = tokens_out[base + px * c + ch];
+                    }
+                }
+                eps
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::toma::regions::RegionMode;
+
+    fn tiny_model() -> HostUVit {
+        let info = ModelInfo::synthetic("uvit_test", 4, 2, 16, 2, 3, 5);
+        HostUVit::synthetic(&info, 2, 7)
+    }
+
+    fn sample_inputs(model: &HostUVit, count: usize, seed: u64) -> Vec<(Vec<f32>, f32, Vec<f32>)> {
+        let info = &model.info;
+        let per = info.channels * info.latent_hw * info.latent_hw;
+        let mut rng = Pcg64::new(seed);
+        (0..count)
+            .map(|i| {
+                (
+                    rng.normal_vec(per),
+                    100.0 + 37.0 * i as f32,
+                    rng.normal_vec(info.txt_len * info.txt_dim),
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn linear_apply_matches_reference_gemm() {
+        let mut rng = Pcg64::new(1);
+        let (rows, d_in, d_out) = (5, 7, 9);
+        let w = rng.normal_vec(d_in * d_out);
+        let b = rng.normal_vec(d_out);
+        let x = rng.normal_vec(rows * d_in);
+        let lin = Linear::new(w.clone(), b.clone(), d_in, d_out);
+        let y = lin.apply(&x, rows);
+        let mut want = crate::tensor::gemm::scalar::matmul(&x, &w, rows, d_in, d_out);
+        for r in 0..rows {
+            for c in 0..d_out {
+                want[r * d_out + c] += b[c];
             }
         }
-        eps
+        for (a, bv) in y.iter().zip(&want) {
+            assert!((a - bv).abs() < 1e-4, "{a} vs {bv}");
+        }
+    }
+
+    #[test]
+    fn linear_apply_is_fold_invariant() {
+        // The property the whole batched path rests on: applying to a
+        // concatenation is bitwise the concatenation of single applies.
+        let mut rng = Pcg64::new(2);
+        let (d_in, d_out) = (11, 13);
+        let lin = Linear::new(
+            rng.normal_vec(d_in * d_out),
+            rng.normal_vec(d_out),
+            d_in,
+            d_out,
+        );
+        let x1 = rng.normal_vec(3 * d_in);
+        let x2 = rng.normal_vec(5 * d_in);
+        let mut cat = x1.clone();
+        cat.extend_from_slice(&x2);
+        let y_cat = lin.apply(&cat, 8);
+        let y1 = lin.apply(&x1, 3);
+        let y2 = lin.apply(&x2, 5);
+        assert_eq!(&y_cat[..3 * d_out], &y1[..]);
+        assert_eq!(&y_cat[3 * d_out..], &y2[..]);
+    }
+
+    #[test]
+    fn forward_batch_matches_single_forward_bitwise() {
+        let model = tiny_model();
+        let inputs = sample_inputs(&model, 3, 11);
+        let samples: Vec<BatchSample> = inputs
+            .iter()
+            .map(|(x, t, c)| BatchSample { x_bchw: x, t: *t, cond: c })
+            .collect();
+        let batched = model.forward_batch(&samples, &BatchReduce::None);
+        for (i, (x, t, c)) in inputs.iter().enumerate() {
+            let single = model.forward(x, *t, c, &HostReduce::None);
+            assert_eq!(batched[i], single, "sample {i} diverged under batching");
+        }
+    }
+
+    #[test]
+    fn forward_batch_with_toma_plans_matches_single_bitwise() {
+        let model = tiny_model();
+        let info = model.info.clone();
+        let grid = info.grid();
+        let layout = RegionLayout::new(RegionMode::Tile, 4, grid, grid);
+        let n_loc = layout.tokens_per_region();
+        let k_loc = n_loc / 2;
+        let p = layout.regions;
+        let inputs = sample_inputs(&model, 2, 13);
+        // Two distinct plans (one per sample), normalized rows.
+        let mut rng = Pcg64::new(5);
+        let mut a_tilde = vec![0.0f32; 2 * p * k_loc * n_loc];
+        for row in a_tilde.chunks_mut(n_loc) {
+            let mut s = 0.0f32;
+            for v in row.iter_mut() {
+                *v = rng.next_f32();
+                s += *v;
+            }
+            for v in row.iter_mut() {
+                *v /= s.max(1e-6);
+            }
+        }
+        let samples: Vec<BatchSample> = inputs
+            .iter()
+            .map(|(x, t, c)| BatchSample { x_bchw: x, t: *t, cond: c })
+            .collect();
+        let reduce = BatchReduce::Toma {
+            a_tilde: &a_tilde,
+            k_loc,
+            layout: &layout,
+            plan_of: &[0, 1],
+        };
+        let batched = model.forward_batch(&samples, &reduce);
+        for (i, (x, t, c)) in inputs.iter().enumerate() {
+            let w = MergeWeights {
+                a: vec![],
+                a_tilde: a_tilde[i * p * k_loc * n_loc..(i + 1) * p * k_loc * n_loc].to_vec(),
+                k: k_loc,
+                n: n_loc,
+            };
+            let single = model.forward(x, *t, c, &HostReduce::Toma { weights: &w, layout: &layout });
+            assert_eq!(batched[i], single, "toma sample {i} diverged under batching");
+        }
+    }
+
+    #[test]
+    fn synthetic_model_is_deterministic() {
+        let info = ModelInfo::synthetic("m", 4, 2, 16, 2, 3, 5);
+        let a = HostUVit::synthetic(&info, 2, 42);
+        let b = HostUVit::synthetic(&info, 2, 42);
+        assert_eq!(a.params.pos, b.params.pos);
+        assert_eq!(a.params.blocks[1].mlp2.b, b.params.blocks[1].mlp2.b);
+        let x = Pcg64::new(3).normal_vec(7 * a.params.patch.d_in);
+        assert_eq!(a.params.patch.apply(&x, 7), b.params.patch.apply(&x, 7));
+        let c = HostUVit::synthetic(&info, 2, 43);
+        assert_ne!(a.params.pos, c.params.pos);
     }
 }

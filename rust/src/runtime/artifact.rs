@@ -109,6 +109,33 @@ pub struct ModelInfo {
 }
 
 impl ModelInfo {
+    /// Minimal in-memory model description for artifact-free host serving
+    /// (the scheduler's synthetic-model tests and the serve_sweep bench):
+    /// patch size 1, so tokens = grid^2; CFG batch of 2.
+    pub fn synthetic(
+        name: &str,
+        grid: usize,
+        channels: usize,
+        dim: usize,
+        heads: usize,
+        txt_len: usize,
+        txt_dim: usize,
+    ) -> ModelInfo {
+        ModelInfo {
+            name: name.to_string(),
+            kind: "uvit".to_string(),
+            latent_hw: grid,
+            channels,
+            dim,
+            heads,
+            txt_len,
+            txt_dim,
+            batch: 2,
+            tokens: grid * grid,
+            params: vec![],
+        }
+    }
+
     pub fn grid(&self) -> usize {
         (self.tokens as f64).sqrt() as usize
     }

@@ -28,7 +28,9 @@ const KC: usize = 256;
 /// Column-tile width of C (rows of Bᵀ reused per panel sweep).
 const JB: usize = 64;
 /// Below this many multiply-adds the dispatch overhead beats parallelism.
-const PAR_MIN_MACS: usize = 1 << 17;
+/// Shared with the model layer's attention dispatch so the serial/parallel
+/// crossover points stay in sync.
+pub(crate) const PAR_MIN_MACS: usize = 1 << 17;
 
 /// Contiguous dot product, 8-wide accumulators (autovectorizes).
 #[inline(always)]

@@ -33,6 +33,23 @@ impl MergePlan {
         regions * self.d_loc
     }
 
+    /// Drop one cohort member's `regions` consecutive group blocks (the
+    /// member completed and left the cohort); the remaining members'
+    /// slices shift down but keep their relative order, so member index
+    /// `i` in the cohort always owns groups `[i*regions, (i+1)*regions)`.
+    pub fn remove_member(&mut self, member: usize, regions: usize) {
+        let g0 = member * regions;
+        assert!(g0 + regions <= self.groups, "member {member} out of range");
+        let dl = self.d_loc;
+        let nl = self.n_loc;
+        self.idx.drain(g0 * dl..(g0 + regions) * dl);
+        self.a_tilde.drain(g0 * dl * nl..(g0 + regions) * dl * nl);
+        if !self.a.is_empty() {
+            self.a.drain(g0 * dl * nl..(g0 + regions) * dl * nl);
+        }
+        self.groups -= regions;
+    }
+
     /// Global token ids of the destinations for batch element `b`.
     pub fn global_destinations(&self, layout: &RegionLayout, b: usize) -> Vec<usize> {
         let regions = layout.regions;
@@ -105,6 +122,16 @@ impl ReuseSchedule {
     pub fn recompute_fraction(&self) -> f64 {
         1.0 / self.weight_every as f64
     }
+
+    /// True when `action(step, cached)` is [`PlanAction::RefreshAll`] —
+    /// the only step at which a new cohort member may join batched
+    /// serving and still observe, from its local step 0, exactly the
+    /// refresh cadence a dedicated per-request engine would give it
+    /// (every refresh window starts with a full refresh, so window
+    /// offsets relative to the join step coincide).
+    pub fn is_refresh_boundary(&self, step: u64, cached: Option<&MergePlan>) -> bool {
+        self.action(step, cached) == PlanAction::RefreshAll
+    }
 }
 
 #[cfg(test)]
@@ -173,5 +200,46 @@ mod tests {
     fn recompute_fraction() {
         assert!((ReuseSchedule::default().recompute_fraction() - 0.2).abs() < 1e-9);
         assert!((ReuseSchedule::every_step().recompute_fraction() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn refresh_boundaries_mark_join_steps() {
+        let s = ReuseSchedule::default();
+        // Cold cache: always a boundary.
+        assert!(s.is_refresh_boundary(3, None));
+        let p = plan(0, 5);
+        assert!(!s.is_refresh_boundary(7, Some(&p)), "mid-window");
+        assert!(s.is_refresh_boundary(10, Some(&p)), "dest refresh due");
+        // every_step: every step is a boundary (continuous joining).
+        assert!(ReuseSchedule::every_step().is_refresh_boundary(4, Some(&plan(3, 3))));
+    }
+
+    #[test]
+    fn remove_member_drops_exactly_one_block() {
+        // 3 members x 2 regions, d_loc 2, n_loc 3.
+        let (members, regions, dl, nl) = (3usize, 2usize, 2usize, 3usize);
+        let groups = members * regions;
+        let idx: Vec<i32> = (0..groups * dl).map(|v| v as i32).collect();
+        let a_tilde: Vec<f32> = (0..groups * dl * nl).map(|v| v as f32).collect();
+        let mut p = MergePlan {
+            idx: idx.clone(),
+            a_tilde: a_tilde.clone(),
+            a: vec![],
+            groups,
+            d_loc: dl,
+            n_loc: nl,
+            dest_step: 4,
+            weight_step: 9,
+        };
+        p.remove_member(1, regions);
+        assert_eq!(p.groups, (members - 1) * regions);
+        // Member 0's block unchanged, member 2's block shifted down.
+        assert_eq!(&p.idx[..regions * dl], &idx[..regions * dl]);
+        assert_eq!(&p.idx[regions * dl..], &idx[2 * regions * dl..]);
+        assert_eq!(&p.a_tilde[..regions * dl * nl], &a_tilde[..regions * dl * nl]);
+        assert_eq!(&p.a_tilde[regions * dl * nl..], &a_tilde[2 * regions * dl * nl..]);
+        // Cadence bookkeeping is untouched by membership changes.
+        assert_eq!(p.dest_step, 4);
+        assert_eq!(p.weight_step, 9);
     }
 }

@@ -1,0 +1,205 @@
+//! Acceptance tests for the micro-batching scheduler: batched serving
+//! must produce **bit-identical** latents to the per-request host engine
+//! for the same seeds, across cohort sizes, joins at refresh boundaries
+//! and mid-window leaves. Runs artifact-free on the synthetic model
+//! (tier 1).
+
+use std::sync::Arc;
+
+use toma::coordinator::scheduler::{
+    BatchPolicy, Cohort, HostBackend, HostEngine, Scheduler, DEFAULT_TAU,
+};
+use toma::coordinator::{EngineConfig, GenRequest};
+use toma::model::HostUVit;
+use toma::runtime::ModelInfo;
+use toma::toma::plan::ReuseSchedule;
+
+const REGIONS: usize = 4;
+const TAU: f32 = DEFAULT_TAU;
+
+fn model() -> Arc<HostUVit> {
+    // grid 4 -> 16 tokens, tile layout 2x2; small but goes through every
+    // code path (merge, unmerge, CFG, schedule).
+    let info = ModelInfo::synthetic("uvit_eq", 4, 2, 16, 2, 3, 5);
+    Arc::new(HostUVit::synthetic(&info, 2, 4242))
+}
+
+fn toma_cfg(steps: usize) -> EngineConfig {
+    let mut cfg = EngineConfig::new("uvit_eq", "toma", Some(0.5));
+    cfg.steps = steps;
+    cfg.select_mode = "tile".to_string();
+    cfg.schedule = ReuseSchedule::default(); // dest 10 / weights 5
+    cfg
+}
+
+fn reference_latents(model: &Arc<HostUVit>, cfg: &EngineConfig, seeds: &[u64]) -> Vec<Vec<f32>> {
+    let engine = HostEngine::new(model.clone(), cfg.clone(), REGIONS, TAU).expect("engine");
+    seeds
+        .iter()
+        .map(|&seed| {
+            engine
+                .generate(&GenRequest::new(&format!("prompt {seed}"), seed))
+                .expect("reference generate")
+                .latent
+        })
+        .collect()
+}
+
+/// The headline acceptance criterion: scheduler latents == per-request
+/// latents, bit for bit, for batch sizes 1 / 2 / 4.
+#[test]
+fn batched_latents_match_per_request_bitwise() {
+    let model = model();
+    let cfg = toma_cfg(12); // crosses a weight refresh (5) and a dest refresh (10)
+    let seeds: Vec<u64> = vec![11, 22, 33, 44];
+    let reference = reference_latents(&model, &cfg, &seeds);
+
+    for max_batch in [1usize, 2, 4] {
+        let m = model.clone();
+        let sched = Scheduler::new(
+            BatchPolicy {
+                max_batch,
+                max_queue_wait_s: 0.25,
+                ..Default::default()
+            },
+            move |c: &EngineConfig| HostBackend::boxed(m.clone(), c.clone(), REGIONS, TAU),
+        );
+        let reqs: Vec<GenRequest> = seeds
+            .iter()
+            .map(|&seed| GenRequest::new(&format!("prompt {seed}"), seed))
+            .collect();
+        let results = sched.run_batch_ok(&cfg, reqs).expect("batch ok");
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(
+                r.latent, reference[i],
+                "batch size {max_batch}, seed {}: latent diverged from per-request engine",
+                seeds[i]
+            );
+            assert!(r.stats.cohort_size >= 1 && r.stats.cohort_size <= max_batch);
+        }
+        sched.shutdown();
+    }
+}
+
+/// Baseline (plan-less) variants batch too, and stay bit-identical.
+#[test]
+fn baseline_variant_batched_matches_per_request() {
+    let model = model();
+    let mut cfg = EngineConfig::new("uvit_eq", "baseline", None);
+    cfg.steps = 5;
+    let seeds = vec![7u64, 8];
+    let reference = reference_latents(&model, &cfg, &seeds);
+    let m = model.clone();
+    let sched = Scheduler::new(
+        BatchPolicy {
+            max_batch: 2,
+            max_queue_wait_s: 0.25,
+            ..Default::default()
+        },
+        move |c: &EngineConfig| HostBackend::boxed(m.clone(), c.clone(), REGIONS, TAU),
+    );
+    let reqs: Vec<GenRequest> = seeds
+        .iter()
+        .map(|&s| GenRequest::new(&format!("prompt {s}"), s))
+        .collect();
+    let results = sched.run_batch_ok(&cfg, reqs).expect("batch ok");
+    for (i, r) in results.iter().enumerate() {
+        assert_eq!(r.latent, reference[i], "baseline seed {}", seeds[i]);
+    }
+    sched.shutdown();
+}
+
+/// Driving the cohort directly: a member joins exactly on a RefreshAll
+/// boundary mid-flight, the first member leaves mid-reuse-window, and
+/// both still match their dedicated per-request runs bit for bit. Also
+/// pins the amortization accounting: the shared slot counts RefreshAll
+/// once per cohort step, so two overlapping members cost 3 selections
+/// instead of the 4 two dedicated engines would run.
+#[test]
+fn join_at_boundary_and_leave_mid_window_stay_bit_identical() {
+    let model = model();
+    let cfg = toma_cfg(12);
+    let seeds = [101u64, 202];
+    let reference = reference_latents(&model, &cfg, &seeds);
+
+    let backend =
+        HostBackend::boxed(model.clone(), cfg.clone(), REGIONS, TAU).expect("backend");
+    let mut cohort = Cohort::new(backend);
+    let req_a = GenRequest::new(&format!("prompt {}", seeds[0]), seeds[0]);
+    let req_b = GenRequest::new(&format!("prompt {}", seeds[1]), seeds[1]);
+
+    let tag_a = cohort.admit(&req_a).expect("admit A at step 0");
+    let mut done = vec![];
+    // Steps 0..9: A alone. Not a join boundary mid-window.
+    for step in 0..10 {
+        if step == 1 {
+            assert!(!cohort.can_join(), "step 1 is mid-window");
+        }
+        let out = cohort.step().expect("step");
+        assert!(out.completions.is_empty());
+    }
+    // Cohort step 10 is a dest-refresh boundary: B joins mid-flight.
+    assert!(cohort.can_join(), "step 10 is a RefreshAll boundary");
+    let tag_b = cohort.admit(&req_b).expect("admit B at boundary");
+    assert_eq!(cohort.len(), 2);
+    // Steps 10..11: A finishes at cohort step 12 (B mid-reuse-window).
+    for _ in 10..12 {
+        done.extend(cohort.step().expect("step").completions);
+    }
+    assert_eq!(done.len(), 1, "A leaves at its step 12");
+    assert_eq!(done[0].tag, tag_a);
+    assert_eq!(cohort.len(), 1, "B continues after A leaves mid-window");
+    // B runs out its remaining steps (local 2..12 == cohort 12..22).
+    for _ in 12..22 {
+        done.extend(cohort.step().expect("step").completions);
+    }
+    assert_eq!(done.len(), 2);
+    assert_eq!(done[1].tag, tag_b);
+
+    let lat_a = &done[0].result.as_ref().expect("A ok").latent;
+    let lat_b = &done[1].result.as_ref().expect("B ok").latent;
+    assert_eq!(lat_a, &reference[0], "A diverged (joined at 0)");
+    assert_eq!(lat_b, &reference[1], "B diverged (joined mid-flight at 10)");
+
+    // Amortization: shared slot selections = steps 0, 10, 20 -> 3; two
+    // dedicated 12-step runs would select at {0, 10} each -> 4.
+    let stats = cohort.plan_stats();
+    assert_eq!(stats.refresh_all, 3, "selection amortized across the cohort");
+    // Weight-only refreshes at cohort steps 5 and 15.
+    assert_eq!(stats.refresh_weights, 2);
+}
+
+/// A 1-request cohort is exactly today's per-request engine (degenerate
+/// case), including plan statistics.
+#[test]
+fn degenerate_single_member_cohort_matches_per_request() {
+    let model = model();
+    let cfg = toma_cfg(11);
+    let seed = 99u64;
+    let engine = HostEngine::new(model.clone(), cfg.clone(), REGIONS, TAU).expect("engine");
+    let mut req = GenRequest::new("solo", seed);
+    req.trace = true;
+    let reference = engine.generate(&req).expect("reference");
+
+    let backend =
+        HostBackend::boxed(model.clone(), cfg.clone(), REGIONS, TAU).expect("backend");
+    let mut cohort = Cohort::new(backend);
+    cohort.admit(&req).expect("admit");
+    let mut result = None;
+    for _ in 0..11 {
+        let mut out = cohort.step().expect("step");
+        if let Some(c) = out.completions.pop() {
+            result = Some(c.result.expect("ok"));
+        }
+    }
+    let result = result.expect("completed after 11 steps");
+    assert_eq!(result.latent, reference.latent, "degenerate cohort != engine");
+    // Fig. 4 trace: one destination set per step, identical to the
+    // per-request engine's.
+    assert_eq!(result.dest_trace.len(), 11);
+    assert_eq!(result.dest_trace, reference.dest_trace, "trace diverged");
+    assert_eq!(result.stats.select_calls, reference.stats.select_calls);
+    assert_eq!(result.stats.weight_refreshes, reference.stats.weight_refreshes);
+    assert_eq!(result.stats.plan_reuses, reference.stats.plan_reuses);
+    assert_eq!(result.stats.steps, reference.stats.steps);
+}
