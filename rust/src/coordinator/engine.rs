@@ -19,7 +19,8 @@ use super::request::{EngineConfig, GenRequest, GenResult, GenStats};
 use crate::anyhow;
 use crate::diffusion::{cfg_mix, ddim_update, euler_update, NoiseSchedule, SamplerKind};
 use crate::runtime::executor::{Arg, DeviceInput, Input};
-use crate::runtime::{ArtifactEntry, Executor, Literal, ModelInfo, Runtime};
+use crate::runtime::{ArtifactEntry, Dtype, Executor, Literal, ModelInfo, Runtime};
+use crate::tensor::element::StorageDtype;
 use crate::util::error::Result;
 use crate::toma::plan::{MergePlan, PlanAction};
 use crate::toma::regions::{RegionLayout, RegionMode};
@@ -67,6 +68,27 @@ pub struct Engine {
 impl Engine {
     pub fn new(runtime: Arc<Runtime>, cfg: EngineConfig) -> Result<Engine> {
         let info = runtime.manifest.model(&cfg.model)?.clone();
+        // The pjrt engine streams weights in whatever dtype the artifacts
+        // were lowered with — a storage override only makes sense when the
+        // manifest actually declares half-precision parameters (the host
+        // backends repack instead; see scheduler::HostContext). Catch the
+        // mismatch at engine init, not as a shape error mid-step.
+        if cfg.storage != StorageDtype::F32 {
+            let wanted = match cfg.storage {
+                StorageDtype::Bf16 => Dtype::BF16,
+                StorageDtype::F16 => Dtype::F16,
+                StorageDtype::F32 => unreachable!(),
+            };
+            crate::ensure!(
+                info.params.iter().any(|p| p.dtype == wanted),
+                "model `{}` declares no {} params in its manifest; re-export \
+                 the artifacts with {}-stored weights or drop the storage \
+                 override (the host scheduler backends repack on the fly)",
+                cfg.model,
+                cfg.storage,
+                cfg.storage
+            );
+        }
         let step_name = runtime
             .manifest
             .step_name(&cfg.model, &cfg.variant, cfg.ratio)?;

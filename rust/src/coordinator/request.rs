@@ -1,5 +1,6 @@
 //! Request / result types for the serving coordinator.
 
+use crate::tensor::element::StorageDtype;
 use crate::toma::plan::ReuseSchedule;
 
 /// Engine configuration: one engine per (model, variant, ratio, schedule).
@@ -16,6 +17,13 @@ pub struct EngineConfig {
     pub schedule: ReuseSchedule,
     /// Destination-selection mode: "tile" | "stripe" | "global" | "random".
     pub select_mode: String,
+    /// Weight-panel storage dtype for this engine's model. The default
+    /// (`f32`) is bit-exact with the pre-dtype substrate and keeps the
+    /// historical [`EngineConfig::key`] unchanged; `bf16`/`f16` halve the
+    /// resident weight bytes at a small accuracy cost and key into their
+    /// own lanes/cohorts (latents are storage-dependent, so mixing
+    /// storages in one cohort would break plan compatibility).
+    pub storage: StorageDtype,
 }
 
 impl EngineConfig {
@@ -28,7 +36,14 @@ impl EngineConfig {
             guidance: 5.0,
             schedule: ReuseSchedule::default(),
             select_mode: "tile".to_string(),
+            storage: StorageDtype::F32,
         }
+    }
+
+    /// Builder: select the weight-panel storage dtype.
+    pub fn with_storage(mut self, storage: StorageDtype) -> Self {
+        self.storage = storage;
+        self
     }
 
     /// Does this variant consume ToMA merge weights at runtime?
@@ -41,10 +56,16 @@ impl EngineConfig {
     /// different step count or guidance weight is *not* plan-compatible
     /// with an existing lane and must get its own. Floats use the
     /// shortest-roundtrip `Display` form, so distinct values never
-    /// collide in the key.
+    /// collide in the key. The storage dtype appears only when it is not
+    /// the f32 default, so pre-dtype cohort keys (and any baselines keyed
+    /// on them) are unchanged.
     pub fn key(&self) -> String {
+        let storage = match self.storage {
+            StorageDtype::F32 => String::new(),
+            other => format!(":dt{other}"),
+        };
         format!(
-            "{}:{}:{}:{}:{}+{}:s{}:g{}",
+            "{}:{}:{}:{}:{}+{}:s{}:g{}{}",
             self.model,
             self.variant,
             self.ratio.map(|r| r.to_string()).unwrap_or_default(),
@@ -52,7 +73,8 @@ impl EngineConfig {
             self.schedule.dest_every,
             self.schedule.weight_every,
             self.steps,
-            self.guidance
+            self.guidance,
+            storage
         )
     }
 }
@@ -155,5 +177,21 @@ mod tests {
         let mut f = a.clone();
         f.guidance = 5.001;
         assert_ne!(a.key(), f.key());
+    }
+
+    #[test]
+    fn default_storage_keeps_historical_key() {
+        use crate::tensor::element::StorageDtype;
+        let a = EngineConfig::new("uvit_s", "toma", Some(0.5));
+        assert_eq!(a.storage, StorageDtype::F32);
+        // The exact PR 2 key format: no dtype suffix for the default.
+        assert_eq!(a.key(), "uvit_s:toma:0.5:tile:10+5:s50:g5");
+        let b = a.clone().with_storage(StorageDtype::Bf16);
+        assert_eq!(b.key(), "uvit_s:toma:0.5:tile:10+5:s50:g5:dtbf16");
+        assert_ne!(
+            b.key(),
+            a.clone().with_storage(StorageDtype::F16).key(),
+            "each storage dtype gets its own cohort"
+        );
     }
 }

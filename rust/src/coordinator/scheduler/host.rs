@@ -60,6 +60,19 @@ impl HostContext {
         // normal backend-init error instead (every queued request then
         // gets a clean failure completion).
         crate::ensure!(cfg.steps >= 1, "engine config needs steps >= 1");
+        // Per-engine storage dtype: if the shared master model is not
+        // already stored in the configured dtype, repack once at engine
+        // init (an O(weights) conversion, amortized over the lane's
+        // lifetime). The f32 default never copies. Note each non-matching
+        // lane holds its *own* converted copy — a deployment running many
+        // lanes of one half dtype should pass a master already stored in
+        // that dtype (HostUVit::to_storage once, outside the factory)
+        // so every lane shares the same Arc.
+        let model = if model.storage == cfg.storage {
+            model
+        } else {
+            Arc::new(model.to_storage(cfg.storage))
+        };
         let info = &model.info;
         let sampler = SamplerKind::for_model_kind(&info.kind);
         let schedule = NoiseSchedule::new(sampler, cfg.steps);

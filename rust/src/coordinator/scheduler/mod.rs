@@ -60,6 +60,8 @@ struct SchedJob {
 struct SchedLane {
     tx: SyncSender<SchedJob>,
     handle: JoinHandle<()>,
+    /// Identity of this lane incarnation (see [`Scheduler::evict_lane`]).
+    generation: u64,
 }
 
 /// The micro-batching front-end: submit requests, get completions.
@@ -68,6 +70,7 @@ pub struct Scheduler {
     pub metrics: Arc<Metrics>,
     factory: Arc<BackendFactory>,
     lanes: Mutex<BTreeMap<String, SchedLane>>,
+    next_generation: std::sync::atomic::AtomicU64,
 }
 
 impl Scheduler {
@@ -80,6 +83,7 @@ impl Scheduler {
             metrics: Arc::new(Metrics::new()),
             factory: Arc::new(factory),
             lanes: Mutex::new(BTreeMap::new()),
+            next_generation: std::sync::atomic::AtomicU64::new(1),
         }
     }
 
@@ -87,13 +91,29 @@ impl Scheduler {
         &self.policy
     }
 
-    fn lane_tx(&self, cfg: &EngineConfig) -> SyncSender<SchedJob> {
+    /// The lane's sender plus the generation it belongs to — the identity
+    /// a failed submit must present to [`Scheduler::evict_lane`].
+    fn lane_tx(&self, cfg: &EngineConfig) -> (SyncSender<SchedJob>, u64) {
         let mut lanes = self.lanes.lock().unwrap();
-        lanes
+        let lane = lanes
             .entry(cfg.key())
-            .or_insert_with(|| self.spawn_lane(cfg))
-            .tx
-            .clone()
+            .or_insert_with(|| self.spawn_lane(cfg));
+        (lane.tx.clone(), lane.generation)
+    }
+
+    /// Remove the lane for `key` only if it is still the `generation` the
+    /// caller observed failing. A submitter racing a respawn would
+    /// otherwise evict the *fresh, healthy* lane another submitter just
+    /// spawned (the ROADMAP dead-lane race) — generation mismatch makes
+    /// the stale eviction a no-op. Returns whether a lane was evicted.
+    fn evict_lane(&self, key: &str, generation: u64) -> bool {
+        let mut lanes = self.lanes.lock().unwrap();
+        if lanes.get(key).map(|l| l.generation) == Some(generation) {
+            lanes.remove(key);
+            true
+        } else {
+            false
+        }
     }
 
     fn spawn_lane(&self, cfg: &EngineConfig) -> SchedLane {
@@ -106,7 +126,14 @@ impl Scheduler {
             .name("toma-sched".to_string())
             .spawn(move || lane_loop(&cfg, policy, &factory, &metrics, rx))
             .expect("spawn scheduler lane");
-        SchedLane { tx, handle }
+        let generation = self
+            .next_generation
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        SchedLane {
+            tx,
+            handle,
+            generation,
+        }
     }
 
     /// Submit a request; blocks when the lane queue is full
@@ -115,7 +142,7 @@ impl Scheduler {
     /// error completion and is respawned on the next submit — one bad
     /// request must not poison the serving process.
     pub fn submit(&self, cfg: &EngineConfig, request: GenRequest) -> Receiver<Completion> {
-        let tx = self.lane_tx(cfg);
+        let (tx, generation) = self.lane_tx(cfg);
         let (done_tx, done_rx) = channel();
         self.metrics.inc("requests_submitted");
         let job = SchedJob {
@@ -125,7 +152,7 @@ impl Scheduler {
         };
         if let Err(std::sync::mpsc::SendError(job)) = tx.send(job) {
             self.metrics.inc("requests_err");
-            self.lanes.lock().unwrap().remove(&cfg.key());
+            self.evict_lane(&cfg.key(), generation);
             let _ = job.done.send(Completion {
                 request: job.request,
                 result: Err(anyhow!("scheduler lane died; resubmit")),
@@ -143,7 +170,7 @@ impl Scheduler {
         cfg: &EngineConfig,
         request: GenRequest,
     ) -> Result<Receiver<Completion>> {
-        let tx = self.lane_tx(cfg);
+        let (tx, generation) = self.lane_tx(cfg);
         let (done_tx, done_rx) = channel();
         match tx.try_send(SchedJob {
             request,
@@ -162,8 +189,9 @@ impl Scheduler {
                 ))
             }
             Err(TrySendError::Disconnected(_)) => {
-                // Dead lane: drop it so the next submit respawns fresh.
-                self.lanes.lock().unwrap().remove(&cfg.key());
+                // Dead lane: drop *this incarnation* so the next submit
+                // respawns fresh (never a healthy respawn that beat us).
+                self.evict_lane(&cfg.key(), generation);
                 Err(anyhow!("scheduler lane died; resubmit"))
             }
         }
@@ -573,6 +601,58 @@ mod tests {
         }
         let c = rx1.recv().expect("completion");
         assert!(c.result.is_err());
+        s.shutdown();
+    }
+
+    #[test]
+    fn forced_lane_death_then_resubmit_respawns_generation_checked() {
+        // First factory call panics, killing the lane thread mid-flight;
+        // subsequent calls build a healthy host backend. This exercises
+        // the full death -> stale-sender-detect -> evict -> respawn path.
+        let model = tiny_model();
+        let died = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let d2 = died.clone();
+        let s = Scheduler::new(
+            BatchPolicy {
+                max_batch: 2,
+                max_queue_wait_s: 0.01,
+                ..Default::default()
+            },
+            move |cfg: &EngineConfig| {
+                if !d2.swap(true, std::sync::atomic::Ordering::SeqCst) {
+                    panic!("injected lane death");
+                }
+                HostBackend::boxed(model.clone(), cfg.clone(), 4, DEFAULT_TAU)
+            },
+        );
+        let cfg = toma_cfg(3);
+        // Depending on timing the dying lane either drops the completion
+        // sender (recv errors) or the submit itself observes the dead
+        // channel (error completion). Either way, resubmitting must reach
+        // a healthy respawned lane within a few attempts.
+        let mut served = false;
+        for attempt in 0..4u64 {
+            let rx = s.submit(&cfg, GenRequest::new("retry", attempt));
+            if let Ok(c) = rx.recv() {
+                if c.result.is_ok() {
+                    served = true;
+                    break;
+                }
+            }
+        }
+        assert!(served, "resubmit after forced lane death must be served");
+        assert!(died.load(std::sync::atomic::Ordering::SeqCst));
+        // The healthy lane is a fresh incarnation; the dead lane's
+        // generation is permanently stale and cannot evict it.
+        let (_tx, fresh) = s.lane_tx(&cfg);
+        assert!(fresh > 1, "respawn must advance the generation");
+        assert!(!s.evict_lane(&cfg.key(), fresh - 1));
+        assert!(
+            s.lanes.lock().unwrap().contains_key(&cfg.key()),
+            "stale eviction must not remove the healthy lane"
+        );
+        // The current generation is the only one that may evict.
+        assert!(s.evict_lane(&cfg.key(), fresh));
         s.shutdown();
     }
 

@@ -45,6 +45,12 @@ struct Job {
 struct Lane {
     tx: SyncSender<Job>,
     handles: Vec<JoinHandle<()>>,
+    /// Identity of this lane incarnation. Dead-lane eviction is
+    /// generation-checked: a submitter that observed generation `g` fail
+    /// may only evict generation `g` — never a lane respawned (g+1) by a
+    /// concurrent submitter in the window between the failed send and the
+    /// eviction (the ROADMAP "stale sender evicts healthy lane" race).
+    generation: u64,
 }
 
 pub struct Server {
@@ -53,6 +59,7 @@ pub struct Server {
     workers_per_lane: usize,
     queue_depth: usize,
     lanes: Mutex<BTreeMap<String, Lane>>,
+    next_generation: std::sync::atomic::AtomicU64,
 }
 
 impl Server {
@@ -63,6 +70,7 @@ impl Server {
             workers_per_lane: workers_per_lane.max(1),
             queue_depth: 1024,
             lanes: Mutex::new(BTreeMap::new()),
+            next_generation: std::sync::atomic::AtomicU64::new(1),
         }
     }
 
@@ -151,16 +159,37 @@ impl Server {
                     .expect("spawn worker"),
             );
         }
-        Lane { tx, handles }
+        let generation = self
+            .next_generation
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        Lane {
+            tx,
+            handles,
+            generation,
+        }
     }
 
-    fn lane_tx(&self, cfg: &EngineConfig) -> SyncSender<Job> {
+    /// The lane's sender plus the generation it belongs to — the identity
+    /// a failed submit must present to [`Server::evict_lane`].
+    fn lane_tx(&self, cfg: &EngineConfig) -> (SyncSender<Job>, u64) {
         let mut lanes = self.lanes.lock().unwrap();
-        lanes
+        let lane = lanes
             .entry(cfg.key())
-            .or_insert_with(|| self.spawn_lane(cfg))
-            .tx
-            .clone()
+            .or_insert_with(|| self.spawn_lane(cfg));
+        (lane.tx.clone(), lane.generation)
+    }
+
+    /// Remove the lane for `key` only if it is still the `generation` the
+    /// caller observed failing. Returns whether a lane was evicted; a
+    /// fresher lane (respawned by a concurrent submitter) is left alone.
+    fn evict_lane(&self, key: &str, generation: u64) -> bool {
+        let mut lanes = self.lanes.lock().unwrap();
+        if lanes.get(key).map(|l| l.generation) == Some(generation) {
+            lanes.remove(key);
+            true
+        } else {
+            false
+        }
     }
 
     /// Submit a request; the completion arrives on the returned channel.
@@ -168,7 +197,7 @@ impl Server {
     /// lane (panicked workers) fails the request with an error completion
     /// and is respawned on the next submit.
     pub fn submit(&self, cfg: &EngineConfig, request: GenRequest) -> Receiver<Completion> {
-        let tx = self.lane_tx(cfg);
+        let (tx, generation) = self.lane_tx(cfg);
         let (done_tx, done_rx) = channel();
         self.metrics.inc("requests_submitted");
         let job = Job {
@@ -178,7 +207,7 @@ impl Server {
         };
         if let Err(std::sync::mpsc::SendError(job)) = tx.send(job) {
             self.metrics.inc("requests_err");
-            self.lanes.lock().unwrap().remove(&cfg.key());
+            self.evict_lane(&cfg.key(), generation);
             let _ = job.done.send(Completion {
                 request: job.request,
                 result: Err(anyhow!("server lane died; resubmit")),
@@ -196,7 +225,7 @@ impl Server {
         cfg: &EngineConfig,
         request: GenRequest,
     ) -> Result<Receiver<Completion>> {
-        let tx = self.lane_tx(cfg);
+        let (tx, generation) = self.lane_tx(cfg);
         let (done_tx, done_rx) = channel();
         match tx.try_send(Job {
             request,
@@ -215,8 +244,10 @@ impl Server {
                 ))
             }
             Err(TrySendError::Disconnected(_)) => {
-                // Dead lane: drop it so the next submit respawns fresh.
-                self.lanes.lock().unwrap().remove(&cfg.key());
+                // Dead lane: drop *this incarnation* so the next submit
+                // respawns fresh (generation-checked: never a healthy
+                // respawn that beat us to it).
+                self.evict_lane(&cfg.key(), generation);
                 Err(anyhow!("server lane died; resubmit"))
             }
         }
@@ -270,5 +301,76 @@ impl Server {
 impl Drop for Server {
     fn drop(&mut self) {
         self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> EngineConfig {
+        EngineConfig::new("uvit_none", "baseline", None)
+    }
+
+    /// Server against a directory with no artifacts: lanes spawn, their
+    /// engines fail init, and every job gets a clean error completion —
+    /// which is all these eviction tests need (a live lane to evict).
+    fn dead_dir_server() -> Server {
+        Server::new(
+            std::env::temp_dir().join("toma_no_such_artifacts"),
+            1,
+        )
+    }
+
+    #[test]
+    fn stale_generation_cannot_evict_fresh_lane() {
+        let server = dead_dir_server();
+        let c = cfg();
+        let (_tx, gen1) = server.lane_tx(&c);
+        // A submitter that observed an *older* incarnation fail must not
+        // evict the current lane.
+        assert!(!server.evict_lane(&c.key(), gen1 + 1));
+        assert!(!server.evict_lane(&c.key(), gen1.wrapping_sub(1)));
+        assert_eq!(
+            server.lanes.lock().unwrap().get(&c.key()).map(|l| l.generation),
+            Some(gen1),
+            "stale eviction must leave the live lane in place"
+        );
+        // The matching generation does evict.
+        assert!(server.evict_lane(&c.key(), gen1));
+        assert!(server.lanes.lock().unwrap().get(&c.key()).is_none());
+        // A respawn gets a fresh identity, so the old generation is now
+        // permanently stale.
+        let (_tx, gen2) = server.lane_tx(&c);
+        assert!(gen2 > gen1);
+        assert!(!server.evict_lane(&c.key(), gen1));
+        server.shutdown();
+    }
+
+    #[test]
+    fn distinct_lanes_get_distinct_generations() {
+        let server = dead_dir_server();
+        let a = cfg();
+        let mut b = cfg();
+        b.steps = 7; // different key
+        let (_ta, ga) = server.lane_tx(&a);
+        let (_tb, gb) = server.lane_tx(&b);
+        assert_ne!(ga, gb);
+        // Re-fetching an existing lane reports the same generation.
+        assert_eq!(server.lane_tx(&a).1, ga);
+        server.shutdown();
+    }
+
+    #[test]
+    fn engine_init_failure_yields_error_completion_not_eviction() {
+        let server = dead_dir_server();
+        let c = cfg();
+        let rx = server.submit(&c, GenRequest::new("x", 1));
+        let comp = rx.recv().expect("completion");
+        let err = comp.result.err().expect("init must fail").to_string();
+        assert!(err.contains("engine init failed"), "{err}");
+        // The lane survives (init failure is not lane death).
+        assert!(server.lanes.lock().unwrap().contains_key(&c.key()));
+        server.shutdown();
     }
 }

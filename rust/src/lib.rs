@@ -36,15 +36,23 @@
 //!   `HostUVit::forward_batch` is the scheduler's batch-folded step path
 //!   (one GEMM per linear layer across the whole cohort, attention fanned
 //!   out per (sample, head)); `model::Linear` caches its packed Bᵀ panels
-//!   at construction so step weights are never repacked per call.
+//!   at construction — since PR 3 in a configurable storage dtype
+//!   (`EngineConfig::storage`: f32 default, or bf16/f16 which halve the
+//!   resident weight bytes) — so step weights are never repacked per call.
 //! * [`gpucost`] — per-GPU roofline model regenerating the paper's latency
 //!   tables on hardware we do not have.
 //! * [`quality`] — DINO/CLIP/FID proxy metrics.
 //! * [`tensor`] — the host kernel substrate: [`tensor::pool`] (persistent
-//!   worker pool + scoped parallel-for), [`tensor::gemm`] (blocked,
-//!   register-tiled, multithreaded GEMM with the seed's scalar kernels
-//!   kept as `gemm::scalar` references), and [`tensor::ops`] (public
-//!   kernel surface: GEMMs, tiled column softmax, parallel row ops).
+//!   worker pool + scoped parallel-for), [`tensor::element`] (sealed
+//!   storage-dtype abstraction: f32 / bf16 / f16 with exact u16 bit
+//!   conversions and widening loads; `StorageDtype` is the runtime
+//!   selector), [`tensor::gemm`] (blocked, register-tiled, multithreaded
+//!   GEMM, generic over each operand's storage element and accumulating
+//!   in f32, with the seed's scalar kernels kept as `gemm::scalar`
+//!   references and `gemm::Panels` as the runtime-dtype dispatch), and
+//!   [`tensor::ops`] (public kernel surface: GEMMs — including the
+//!   dtype-parameterized `matmul_e`/`matmul_at_e` — tiled column softmax,
+//!   parallel row ops).
 //! * [`util`], [`workload`], [`report`], [`bench`] — substrates
 //!   (`util::error` is the crate's dependency-free `anyhow` stand-in;
 //!   `bench::Runner` understands `--quick` and `--json <path>`, and

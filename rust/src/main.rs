@@ -14,6 +14,7 @@ use std::sync::Arc;
 
 use toma::anyhow;
 use toma::coordinator::{EngineConfig, GenRequest, Server};
+use toma::tensor::element::StorageDtype;
 use toma::util::error::Result;
 use toma::runtime::Runtime;
 use toma::toma::plan::ReuseSchedule;
@@ -26,6 +27,7 @@ fn usage() -> String {
      commands:\n\
        generate   --model uvit_s --variant toma --ratio 0.5 --steps 20 --seed 0\n\
        serve      --model uvit_xs --variant toma --ratio 0.5 --requests 8 --workers 2\n\
+                  (both take --storage f32|bf16|f16: weight-panel storage dtype)\n\
        table      --id {1,2,3,4,5,7,8,9,10,C} [--device rtx6000] [--full]\n\
        artifacts  [--compile <name>]\n\
        info\n\
@@ -66,7 +68,7 @@ fn cmd_bench_diff(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn engine_config(args: &Args) -> EngineConfig {
+fn engine_config(args: &Args) -> Result<EngineConfig> {
     let model = args.get_str("model", "uvit_xs");
     let variant = args.get_str("variant", "toma");
     let ratio = if variant == "baseline" {
@@ -82,11 +84,14 @@ fn engine_config(args: &Args) -> EngineConfig {
         dest_every: args.get_u64("dest-every", 10),
         weight_every: args.get_u64("weight-every", 5),
     };
-    cfg
+    let storage = args.get_str("storage", "f32");
+    cfg.storage = StorageDtype::parse(&storage)
+        .ok_or_else(|| anyhow!("unknown --storage `{storage}` (accepted: f32, bf16, f16)"))?;
+    Ok(cfg)
 }
 
 fn cmd_generate(args: &Args) -> Result<()> {
-    let cfg = engine_config(args);
+    let cfg = engine_config(args)?;
     let runtime = Arc::new(Runtime::with_default_dir()?);
     let engine = toma::coordinator::Engine::new(runtime, cfg.clone())?;
     let prompt = args.get_str("prompt", "a photo of a goldfish");
@@ -120,7 +125,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let cfg = engine_config(args);
+    let cfg = engine_config(args)?;
     let n = args.get_usize("requests", 8);
     let workers = args.get_usize("workers", 2);
     let rate = args.get_f64("rate", 0.0);

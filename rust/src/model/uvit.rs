@@ -20,6 +20,8 @@
 
 use crate::anyhow;
 use crate::runtime::{ModelInfo, WeightStore};
+use crate::tensor::element::StorageDtype;
+use crate::tensor::gemm::Panels;
 use crate::tensor::ops::{gelu, layernorm, silu, softmax_rows};
 use crate::tensor::{gemm, pool};
 use crate::toma::merge::MergeWeights;
@@ -32,29 +34,67 @@ use crate::util::Pcg64;
 ///
 /// `ops::matmul` repacks B into Bᵀ panels on every call, but step weights
 /// never change across the denoising loop — so the transpose is hoisted to
-/// construction and `apply` feeds the blocked `gemm::matmul_bt_into`
-/// kernel directly (ROADMAP "Packed-B reuse across steps"). Because that
-/// kernel's per-output-row arithmetic is independent of the row count,
-/// `apply` is also bitwise fold-invariant:
-/// `apply(concat(x1, x2)) == concat(apply(x1), apply(x2))`.
+/// construction and `apply` feeds the blocked bt kernel directly (ROADMAP
+/// "Packed-B reuse across steps"). Because that kernel's per-output-row
+/// arithmetic is independent of the row count, `apply` is also bitwise
+/// fold-invariant: `apply(concat(x1, x2)) == concat(apply(x1), apply(x2))`
+/// — for *any* storage dtype, since the widening loads observe the same
+/// stored values regardless of batching.
+///
+/// Since PR 3 the panels live in a configurable storage dtype
+/// ([`StorageDtype`]): `f32` (bit-exact default), or `bf16`/`f16`, which
+/// halve the resident panel bytes and the L1/L2 traffic of every apply;
+/// activations and the f32 accumulation are unchanged.
 #[derive(Clone, Debug)]
 pub struct Linear {
     pub b: Vec<f32>,
     pub d_in: usize,
     pub d_out: usize,
-    /// Packed Bᵀ panels, (d_out x d_in) row-major — the only stored copy
-    /// of the weights (storing the row-major (d_in x d_out) form too
-    /// would double the resident weight footprint for no runtime use).
-    wt: Vec<f32>,
+    /// Packed Bᵀ panels, (d_out x d_in) row-major in the storage dtype —
+    /// the only stored copy of the weights (storing the row-major
+    /// (d_in x d_out) f32 form too would forfeit the footprint win).
+    wt: Panels,
 }
 
 impl Linear {
+    /// f32-stored layer: bitwise the pre-dtype behavior.
     pub fn new(w: Vec<f32>, b: Vec<f32>, d_in: usize, d_out: usize) -> Linear {
+        Linear::with_storage(w, b, d_in, d_out, StorageDtype::F32)
+    }
+
+    /// Layer with the packed panels stored in `storage`.
+    pub fn with_storage(
+        w: Vec<f32>,
+        b: Vec<f32>,
+        d_in: usize,
+        d_out: usize,
+        storage: StorageDtype,
+    ) -> Linear {
         assert_eq!(w.len(), d_in * d_out, "linear weight shape");
         assert_eq!(b.len(), d_out, "linear bias shape");
-        let mut wt = vec![0.0f32; w.len()];
-        gemm::transpose_into(&w, &mut wt, d_in, d_out);
+        let wt = Panels::pack(&w, d_in, d_out, storage);
         Linear { b, d_in, d_out, wt }
+    }
+
+    /// Storage dtype of the packed panels.
+    pub fn storage(&self) -> StorageDtype {
+        self.wt.dtype()
+    }
+
+    /// Resident bytes of the packed weight panels.
+    pub fn panel_bytes(&self) -> usize {
+        self.wt.bytes()
+    }
+
+    /// Re-store this layer's panels in another dtype (elementwise, no
+    /// re-transpose; widening is exact, narrowing rounds to nearest even).
+    pub fn to_storage(&self, storage: StorageDtype) -> Linear {
+        Linear {
+            b: self.b.clone(),
+            d_in: self.d_in,
+            d_out: self.d_out,
+            wt: self.wt.convert(storage),
+        }
     }
 
     pub fn apply(&self, x: &[f32], rows: usize) -> Vec<f32> {
@@ -63,9 +103,10 @@ impl Linear {
         y
     }
 
-    /// y = x W + b into a caller buffer, using the cached Bᵀ panels.
+    /// y = x W + b into a caller buffer, using the cached Bᵀ panels
+    /// (widened on load when stored in a half dtype).
     pub fn apply_into(&self, x: &[f32], rows: usize, y: &mut [f32]) {
-        gemm::matmul_bt_into(x, &self.wt, y, rows, self.d_in, self.d_out);
+        self.wt.matmul_bt_into(x, y, rows, self.d_in, self.d_out);
         for row in y.chunks_mut(self.d_out) {
             for (yv, bv) in row.iter_mut().zip(&self.b) {
                 *yv += bv;
@@ -145,6 +186,8 @@ pub struct HostUVit {
     pub info: ModelInfo,
     pub params: UVitParams,
     pub depth: usize,
+    /// Storage dtype of every linear layer's packed weight panels.
+    pub storage: StorageDtype,
 }
 
 thread_local! {
@@ -157,7 +200,13 @@ thread_local! {
         const { std::cell::RefCell::new(Vec::new()) };
 }
 
-fn get_linear(ws: &WeightStore, name: &str, d_in: usize, d_out: usize) -> Result<Linear> {
+fn get_linear(
+    ws: &WeightStore,
+    name: &str,
+    d_in: usize,
+    d_out: usize,
+    storage: StorageDtype,
+) -> Result<Linear> {
     let w = ws.f32_data(&format!("{name}.w"))?;
     let b = ws.f32_data(&format!("{name}.b"))?;
     if w.len() != d_in * d_out || b.len() != d_out {
@@ -168,7 +217,7 @@ fn get_linear(ws: &WeightStore, name: &str, d_in: usize, d_out: usize) -> Result
             d_out
         ));
     }
-    Ok(Linear::new(w, b, d_in, d_out))
+    Ok(Linear::with_storage(w, b, d_in, d_out, storage))
 }
 
 fn get_ln(ws: &WeightStore, name: &str) -> Result<Ln> {
@@ -178,11 +227,16 @@ fn get_ln(ws: &WeightStore, name: &str) -> Result<Ln> {
     })
 }
 
-fn synthetic_linear(rng: &mut Pcg64, d_in: usize, d_out: usize) -> Linear {
+fn synthetic_linear(
+    rng: &mut Pcg64,
+    d_in: usize,
+    d_out: usize,
+    storage: StorageDtype,
+) -> Linear {
     let s = 1.0 / (d_in as f32).sqrt();
     let w: Vec<f32> = rng.normal_vec(d_in * d_out).into_iter().map(|v| v * s).collect();
     let b: Vec<f32> = rng.normal_vec(d_out).into_iter().map(|v| v * 0.01).collect();
-    Linear::new(w, b, d_in, d_out)
+    Linear::with_storage(w, b, d_in, d_out, storage)
 }
 
 fn unit_ln(d: usize) -> Ln {
@@ -193,8 +247,18 @@ fn unit_ln(d: usize) -> Ln {
 }
 
 impl HostUVit {
-    /// Build from a weight store (names as exported by aot.py).
+    /// Build from a weight store (names as exported by aot.py), f32-stored.
     pub fn from_weights(info: &ModelInfo, ws: &WeightStore) -> Result<HostUVit> {
+        HostUVit::from_weights_with_storage(info, ws, StorageDtype::F32)
+    }
+
+    /// [`HostUVit::from_weights`] with every linear layer's packed panels
+    /// stored in `storage` (bf16/f16 halve the resident weight bytes).
+    pub fn from_weights_with_storage(
+        info: &ModelInfo,
+        ws: &WeightStore,
+        storage: StorageDtype,
+    ) -> Result<HostUVit> {
         let d = info.dim;
         let p_in = info.channels; // patch == 1
         let depth = ws
@@ -207,51 +271,65 @@ impl HostUVit {
             let p = format!("blocks.{i}");
             blocks.push(Block {
                 ln1: get_ln(ws, &format!("{p}.ln1"))?,
-                qkv: get_linear(ws, &format!("{p}.qkv"), d, 3 * d)?,
-                proj: get_linear(ws, &format!("{p}.proj"), d, d)?,
+                qkv: get_linear(ws, &format!("{p}.qkv"), d, 3 * d, storage)?,
+                proj: get_linear(ws, &format!("{p}.proj"), d, d, storage)?,
                 ln2: get_ln(ws, &format!("{p}.ln2"))?,
-                q_x: get_linear(ws, &format!("{p}.q_x"), d, d)?,
-                kv_c: get_linear(ws, &format!("{p}.kv_c"), d, 2 * d)?,
-                cproj: get_linear(ws, &format!("{p}.cproj"), d, d)?,
+                q_x: get_linear(ws, &format!("{p}.q_x"), d, d, storage)?,
+                kv_c: get_linear(ws, &format!("{p}.kv_c"), d, 2 * d, storage)?,
+                cproj: get_linear(ws, &format!("{p}.cproj"), d, d, storage)?,
                 ln3: get_ln(ws, &format!("{p}.ln3"))?,
-                mlp1: get_linear(ws, &format!("{p}.mlp1"), d, 4 * d)?,
-                mlp2: get_linear(ws, &format!("{p}.mlp2"), 4 * d, d)?,
+                mlp1: get_linear(ws, &format!("{p}.mlp1"), d, 4 * d, storage)?,
+                mlp2: get_linear(ws, &format!("{p}.mlp2"), 4 * d, d, storage)?,
             });
         }
         Ok(HostUVit {
             info: info.clone(),
             params: UVitParams {
-                patch: get_linear(ws, "patch", p_in, d)?,
+                patch: get_linear(ws, "patch", p_in, d, storage)?,
                 pos: ws.f32_data("pos")?,
-                time1: get_linear(ws, "time1", d, d)?,
-                time2: get_linear(ws, "time2", d, d)?,
-                txt: get_linear(ws, "txt", info.txt_dim, d)?,
+                time1: get_linear(ws, "time1", d, d, storage)?,
+                time2: get_linear(ws, "time2", d, d, storage)?,
+                txt: get_linear(ws, "txt", info.txt_dim, d, storage)?,
                 final_ln: get_ln(ws, "final_ln")?,
-                head: get_linear(ws, "head", d, p_in)?,
+                head: get_linear(ws, "head", d, p_in, storage)?,
                 blocks,
             },
             depth,
+            storage,
         })
     }
 
     /// Random-init model with the real architecture — the artifact-free
     /// substrate for the scheduler's tier-1 tests and the serve_sweep
-    /// bench (no weight npz or XLA toolchain needed).
+    /// bench (no weight npz or XLA toolchain needed). f32-stored.
     pub fn synthetic(info: &ModelInfo, depth: usize, seed: u64) -> HostUVit {
+        HostUVit::synthetic_with_storage(info, depth, seed, StorageDtype::F32)
+    }
+
+    /// [`HostUVit::synthetic`] with a chosen weight-panel storage dtype.
+    /// The parameter *draws* are storage-independent (the rng stream is
+    /// consumed before packing), so two storages of the same seed hold
+    /// roundings of identical weights.
+    pub fn synthetic_with_storage(
+        info: &ModelInfo,
+        depth: usize,
+        seed: u64,
+        storage: StorageDtype,
+    ) -> HostUVit {
         let d = info.dim;
         let mut rng = Pcg64::new(seed);
         let blocks: Vec<Block> = (0..depth)
             .map(|_| Block {
                 ln1: unit_ln(d),
-                qkv: synthetic_linear(&mut rng, d, 3 * d),
-                proj: synthetic_linear(&mut rng, d, d),
+                qkv: synthetic_linear(&mut rng, d, 3 * d, storage),
+                proj: synthetic_linear(&mut rng, d, d, storage),
                 ln2: unit_ln(d),
-                q_x: synthetic_linear(&mut rng, d, d),
-                kv_c: synthetic_linear(&mut rng, d, 2 * d),
-                cproj: synthetic_linear(&mut rng, d, d),
+                q_x: synthetic_linear(&mut rng, d, d, storage),
+                kv_c: synthetic_linear(&mut rng, d, 2 * d, storage),
+                cproj: synthetic_linear(&mut rng, d, d, storage),
                 ln3: unit_ln(d),
-                mlp1: synthetic_linear(&mut rng, d, 4 * d),
-                mlp2: synthetic_linear(&mut rng, 4 * d, d),
+                mlp1: synthetic_linear(&mut rng, d, 4 * d, storage),
+                mlp2: synthetic_linear(&mut rng, 4 * d, d, storage),
             })
             .collect();
         let pos: Vec<f32> = rng
@@ -262,17 +340,77 @@ impl HostUVit {
         HostUVit {
             info: info.clone(),
             params: UVitParams {
-                patch: synthetic_linear(&mut rng, info.channels, d),
+                patch: synthetic_linear(&mut rng, info.channels, d, storage),
                 pos,
-                time1: synthetic_linear(&mut rng, d, d),
-                time2: synthetic_linear(&mut rng, d, d),
-                txt: synthetic_linear(&mut rng, info.txt_dim, d),
+                time1: synthetic_linear(&mut rng, d, d, storage),
+                time2: synthetic_linear(&mut rng, d, d, storage),
+                txt: synthetic_linear(&mut rng, info.txt_dim, d, storage),
                 final_ln: unit_ln(d),
-                head: synthetic_linear(&mut rng, d, info.channels),
+                head: synthetic_linear(&mut rng, d, info.channels, storage),
                 blocks,
             },
             depth,
+            storage,
         }
+    }
+
+    /// Re-store every linear layer's packed panels in `storage`
+    /// (norm scales, biases and positional embeddings stay f32 — they
+    /// are O(d) and live on the activation path). Widening from a half
+    /// storage is exact; narrowing rounds to nearest even. The engine
+    /// layer uses this to honor a per-engine
+    /// [`EngineConfig::storage`](crate::coordinator::EngineConfig) from
+    /// one shared master model.
+    pub fn to_storage(&self, storage: StorageDtype) -> HostUVit {
+        let conv = |l: &Linear| l.to_storage(storage);
+        HostUVit {
+            info: self.info.clone(),
+            params: UVitParams {
+                patch: conv(&self.params.patch),
+                pos: self.params.pos.clone(),
+                time1: conv(&self.params.time1),
+                time2: conv(&self.params.time2),
+                txt: conv(&self.params.txt),
+                final_ln: self.params.final_ln.clone(),
+                head: conv(&self.params.head),
+                blocks: self
+                    .params
+                    .blocks
+                    .iter()
+                    .map(|b| Block {
+                        ln1: b.ln1.clone(),
+                        qkv: conv(&b.qkv),
+                        proj: conv(&b.proj),
+                        ln2: b.ln2.clone(),
+                        q_x: conv(&b.q_x),
+                        kv_c: conv(&b.kv_c),
+                        cproj: conv(&b.cproj),
+                        ln3: b.ln3.clone(),
+                        mlp1: conv(&b.mlp1),
+                        mlp2: conv(&b.mlp2),
+                    })
+                    .collect(),
+            },
+            depth: self.depth,
+            storage,
+        }
+    }
+
+    /// Total resident bytes of all packed weight panels (the footprint
+    /// the storage dtype halves; biases/norms/pos excluded).
+    pub fn weight_panel_bytes(&self) -> usize {
+        let p = &self.params;
+        let mut total = [&p.patch, &p.time1, &p.time2, &p.txt, &p.head]
+            .iter()
+            .map(|l| l.panel_bytes())
+            .sum::<usize>();
+        for b in &p.blocks {
+            total += [&b.qkv, &b.proj, &b.q_x, &b.kv_c, &b.cproj, &b.mlp1, &b.mlp2]
+                .iter()
+                .map(|l| l.panel_bytes())
+                .sum::<usize>();
+        }
+        total
     }
 
     /// Sinusoidal timestep embedding matching model.py.
@@ -714,6 +852,78 @@ mod tests {
         let y2 = lin.apply(&x2, 5);
         assert_eq!(&y_cat[..3 * d_out], &y1[..]);
         assert_eq!(&y_cat[3 * d_out..], &y2[..]);
+    }
+
+    #[test]
+    fn linear_half_storage_halves_panels_and_stays_fold_invariant() {
+        let mut rng = Pcg64::new(3);
+        let (d_in, d_out) = (24, 10);
+        let w = rng.normal_vec(d_in * d_out);
+        let b = rng.normal_vec(d_out);
+        let f32lin = Linear::new(w.clone(), b.clone(), d_in, d_out);
+        for storage in [StorageDtype::Bf16, StorageDtype::F16] {
+            let lin = Linear::with_storage(w.clone(), b.clone(), d_in, d_out, storage);
+            assert_eq!(lin.storage(), storage);
+            assert_eq!(lin.panel_bytes() * 2, f32lin.panel_bytes());
+            // Fold invariance is dtype-independent: the stored panels are
+            // the same values whatever the row count.
+            let x1 = rng.normal_vec(3 * d_in);
+            let x2 = rng.normal_vec(5 * d_in);
+            let mut cat = x1.clone();
+            cat.extend_from_slice(&x2);
+            let y_cat = lin.apply(&cat, 8);
+            assert_eq!(&y_cat[..3 * d_out], &lin.apply(&x1, 3)[..]);
+            assert_eq!(&y_cat[3 * d_out..], &lin.apply(&x2, 5)[..]);
+            // And the half output tracks the f32 one within rounding
+            // (coarse; pinned tolerances live in tests/precision.rs).
+            let yf = f32lin.apply(&x1, 3);
+            let yh = lin.apply(&x1, 3);
+            let tol = if storage == StorageDtype::Bf16 { 1e-1 } else { 1e-2 };
+            for (a, bv) in yh.iter().zip(&yf) {
+                assert!((a - bv).abs() <= tol * (1.0 + bv.abs()), "{a} vs {bv}");
+            }
+        }
+    }
+
+    #[test]
+    fn to_storage_round_trips_through_widening() {
+        let info = ModelInfo::synthetic("m", 4, 2, 16, 2, 3, 5);
+        let m32 = HostUVit::synthetic(&info, 1, 7);
+        let m16 = m32.to_storage(StorageDtype::Bf16);
+        assert_eq!(m16.storage, StorageDtype::Bf16);
+        assert_eq!(m16.weight_panel_bytes() * 2, m32.weight_panel_bytes());
+        // bf16 -> f32 -> bf16 is lossless, and synthetic_with_storage
+        // rounds the identical draws, so the two constructions agree.
+        let direct = HostUVit::synthetic_with_storage(&info, 1, 7, StorageDtype::Bf16);
+        let x = Pcg64::new(9).normal_vec(6 * 16);
+        assert_eq!(
+            m16.params.blocks[0].qkv.apply(&x, 6),
+            direct.params.blocks[0].qkv.apply(&x, 6),
+            "repacked and directly-constructed bf16 weights must agree"
+        );
+        let widened = m16.to_storage(StorageDtype::F32).to_storage(StorageDtype::Bf16);
+        assert_eq!(
+            widened.params.blocks[0].qkv.apply(&x, 6),
+            m16.params.blocks[0].qkv.apply(&x, 6)
+        );
+    }
+
+    #[test]
+    fn bf16_forward_tracks_f32_forward() {
+        let info = ModelInfo::synthetic("uvit_test", 4, 2, 16, 2, 3, 5);
+        let f32m = HostUVit::synthetic(&info, 2, 7);
+        let bf = f32m.to_storage(StorageDtype::Bf16);
+        let inputs = sample_inputs(&f32m, 1, 31);
+        let (x, t, c) = &inputs[0];
+        let ef = f32m.forward(x, *t, c, &HostReduce::None);
+        let eh = bf.forward(x, *t, c, &HostReduce::None);
+        assert_eq!(ef.len(), eh.len());
+        let mut max_rel = 0.0f32;
+        for (a, b) in ef.iter().zip(&eh) {
+            max_rel = max_rel.max((a - b).abs() / (1.0 + b.abs()));
+        }
+        assert!(max_rel > 0.0, "half storage should actually round something");
+        assert!(max_rel < 0.15, "bf16 forward drifted too far: {max_rel}");
     }
 
     #[test]

@@ -83,6 +83,41 @@ pub fn write_pgm_preview(
     Ok(())
 }
 
+/// Quality deltas between two precision trajectories of the *same*
+/// request (same seed/prompt/config, different weight-panel storage
+/// dtype) — the accuracy column of the mixed-precision tradeoff that the
+/// `gemm_dtype` bench and the Table-6-style f32-vs-bf16 row report.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PrecisionDelta {
+    /// DINO-proxy distance between the two latents (0 = identical).
+    pub dino_delta: f64,
+    /// Latent MSE (scaled 1e4, same convention as [`mse`]).
+    pub mse: f64,
+    /// Max absolute elementwise difference.
+    pub max_abs: f64,
+}
+
+/// Score how far a `candidate` latent (half-precision storage) drifted
+/// from its `reference` latent (f32 storage). Zero across the board iff
+/// the trajectories are bit-identical.
+pub fn precision_delta(
+    fx: &FeatureExtractor,
+    reference: &[f32],
+    candidate: &[f32],
+) -> PrecisionDelta {
+    assert_eq!(reference.len(), candidate.len());
+    let max_abs = reference
+        .iter()
+        .zip(candidate)
+        .map(|(a, b)| (a - b).abs() as f64)
+        .fold(0.0f64, f64::max);
+    PrecisionDelta {
+        dino_delta: dino_proxy(fx, reference, candidate),
+        mse: mse(reference, candidate),
+        max_abs,
+    }
+}
+
 fn cosine(a: &[f32], b: &[f32]) -> f64 {
     let mut dot = 0.0f64;
     let mut na = 0.0f64;
@@ -125,6 +160,26 @@ mod tests {
     fn mse_basic() {
         assert_eq!(mse(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
         assert!((mse(&[0.0], &[0.1]) - 100.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn precision_delta_zero_iff_identical_and_grows_with_noise() {
+        let fx = FeatureExtractor::new(128, 32, 7);
+        let mut rng = Pcg64::new(3);
+        let x = rng.normal_vec(128);
+        let same = precision_delta(&fx, &x, &x);
+        assert_eq!(same.mse, 0.0);
+        assert_eq!(same.max_abs, 0.0);
+        assert!(same.dino_delta < 1e-6);
+        // Simulated storage rounding: small perturbation => small deltas,
+        // larger perturbation => strictly larger deltas.
+        let mk = |noise: f32, rng: &mut Pcg64| -> Vec<f32> {
+            x.iter().map(|v| v + noise * rng.normal()).collect()
+        };
+        let small = precision_delta(&fx, &x, &mk(0.01, &mut rng));
+        let large = precision_delta(&fx, &x, &mk(0.5, &mut rng));
+        assert!(small.mse > 0.0 && small.mse < large.mse);
+        assert!(small.max_abs < large.max_abs);
     }
 
     #[test]

@@ -4,6 +4,22 @@
 //! source of truth for: which HLO files exist, their parameter order
 //! (model weights first, in tree-flatten order, then runtime inputs), input
 //! shapes/dtypes, and the ToMA metadata (variant, ratio, regions).
+//!
+//! Parameters may be declared in half precision — the storage side of the
+//! mixed-precision substrate (`tensor::element`). A model entry's `params`
+//! list looks like:
+//!
+//! ```json
+//! "params": [
+//!   {"name": "patch.w",        "shape": [4, 128],    "dtype": "f32"},
+//!   {"name": "blocks.0.qkv.w", "shape": [128, 384],  "dtype": "bf16"},
+//!   {"name": "blocks.0.qkv.b", "shape": [384],       "dtype": "bf16"}
+//! ]
+//! ```
+//!
+//! `bf16`/`f16` params are streamed to the device in their declared dtype
+//! (halving weight-upload and HBM bytes); runtime activations (`x_t`, `t`,
+//! `cond`) stay `f32` unless the artifact was lowered otherwise.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -23,18 +39,57 @@ pub enum ArtifactKind {
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Dtype {
     F32,
+    /// bfloat16 (half-precision param storage; see `tensor::element`).
+    BF16,
+    /// IEEE binary16.
+    F16,
     S32,
     U32,
 }
 
 impl Dtype {
-    fn parse(s: &str) -> Result<Dtype> {
+    /// Every dtype a manifest may declare, in the order error messages
+    /// list them.
+    pub const ACCEPTED: [Dtype; 5] =
+        [Dtype::F32, Dtype::BF16, Dtype::F16, Dtype::S32, Dtype::U32];
+
+    pub fn parse(s: &str) -> Result<Dtype> {
         match s {
             "f32" => Ok(Dtype::F32),
+            "bf16" => Ok(Dtype::BF16),
+            "f16" => Ok(Dtype::F16),
             "s32" => Ok(Dtype::S32),
             "u32" => Ok(Dtype::U32),
-            _ => Err(anyhow!("unknown dtype {s}")),
+            _ => Err(anyhow!(
+                "unknown dtype `{s}` (accepted: {})",
+                Dtype::ACCEPTED.map(|d| d.as_str()).join(", ")
+            )),
         }
+    }
+
+    /// Manifest spelling — `parse(d.as_str()) == Ok(d)` for every variant.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::BF16 => "bf16",
+            Dtype::F16 => "f16",
+            Dtype::S32 => "s32",
+            Dtype::U32 => "u32",
+        }
+    }
+
+    /// Bytes per element as stored/streamed.
+    pub fn size_bytes(self) -> usize {
+        match self {
+            Dtype::BF16 | Dtype::F16 => 2,
+            Dtype::F32 | Dtype::S32 | Dtype::U32 => 4,
+        }
+    }
+}
+
+impl std::fmt::Display for Dtype {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
     }
 }
 
@@ -51,20 +106,31 @@ impl TensorSpec {
         self.shape.iter().product()
     }
 
+    /// Bytes this tensor occupies as stored/streamed in its dtype.
+    pub fn bytes(&self) -> usize {
+        self.elements() * self.dtype.size_bytes()
+    }
+
     fn from_json(j: &Json) -> Result<TensorSpec> {
         let name = j
             .get("name")
             .and_then(Json::as_str)
             .unwrap_or("")
             .to_string();
+        // Errors below name the offending param so a bad manifest entry
+        // is findable among hundreds of weights.
+        let who = if name.is_empty() { "<unnamed>" } else { name.as_str() };
         let shape = j
             .get("shape")
             .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow!("missing shape"))?
+            .ok_or_else(|| anyhow!("param `{who}`: missing shape"))?
             .iter()
-            .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .map(|v| v.as_usize().ok_or_else(|| anyhow!("param `{who}`: bad dim")))
             .collect::<Result<Vec<_>>>()?;
-        let dtype = Dtype::parse(j.str_field("dtype").map_err(|e| anyhow!("{e}"))?)?;
+        let dtype = j
+            .str_field("dtype")
+            .map_err(|e| anyhow!("param `{who}`: {e}"))
+            .and_then(|s| Dtype::parse(s).map_err(|e| anyhow!("param `{who}`: {e}")))?;
         Ok(TensorSpec { name, shape, dtype })
     }
 }
@@ -432,5 +498,61 @@ mod tests {
         let m = load_fake();
         assert!(m.model("nope").is_err());
         assert!(m.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn dtype_parse_round_trips_all_accepted() {
+        for d in Dtype::ACCEPTED {
+            assert_eq!(Dtype::parse(d.as_str()).unwrap(), d);
+            assert_eq!(format!("{d}"), d.as_str());
+        }
+        assert_eq!(Dtype::BF16.size_bytes(), 2);
+        assert_eq!(Dtype::F16.size_bytes(), 2);
+        assert_eq!(Dtype::F32.size_bytes(), 4);
+    }
+
+    #[test]
+    fn half_precision_params_parse_and_halve_bytes() {
+        let dir = std::env::temp_dir().join(format!(
+            "toma_manifest_bf16_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let json = fake_manifest_json().replace(
+            r#"[{"name": "patch.w", "shape": [4, 128], "dtype": "f32"}]"#,
+            r#"[{"name": "patch.w", "shape": [4, 128], "dtype": "f32"},
+                {"name": "blocks.0.qkv.w", "shape": [128, 384], "dtype": "bf16"},
+                {"name": "blocks.0.mlp1.w", "shape": [128, 512], "dtype": "f16"}]"#,
+        );
+        std::fs::write(dir.join("manifest.json"), json).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let model = m.model("uvit_xs").unwrap();
+        assert_eq!(model.params.len(), 3);
+        assert_eq!(model.params[1].dtype, Dtype::BF16);
+        assert_eq!(model.params[2].dtype, Dtype::F16);
+        // The declared storage halves the streamed bytes vs f32.
+        assert_eq!(model.params[1].bytes(), 128 * 384 * 2);
+        assert_eq!(model.params[0].bytes(), 4 * 128 * 4);
+    }
+
+    #[test]
+    fn bad_dtype_error_names_param_and_lists_accepted() {
+        let dir = std::env::temp_dir().join(format!(
+            "toma_manifest_baddt_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let json = fake_manifest_json().replace(
+            r#"{"name": "patch.w", "shape": [4, 128], "dtype": "f32"}"#,
+            r#"{"name": "patch.w", "shape": [4, 128], "dtype": "f64"}"#,
+        );
+        std::fs::write(dir.join("manifest.json"), json).unwrap();
+        let err = Manifest::load(&dir).err().expect("must fail").to_string();
+        assert!(err.contains("patch.w"), "error must name the param: {err}");
+        assert!(err.contains("f64"), "error must quote the bad dtype: {err}");
+        assert!(
+            err.contains("bf16") && err.contains("f16") && err.contains("u32"),
+            "error must list accepted dtypes: {err}"
+        );
     }
 }

@@ -23,7 +23,7 @@ pub mod weights;
 #[path = "weights_stub.rs"]
 pub mod weights;
 
-pub use artifact::{ArtifactEntry, ArtifactKind, Manifest, ModelInfo, TensorSpec};
+pub use artifact::{ArtifactEntry, ArtifactKind, Dtype, Manifest, ModelInfo, TensorSpec};
 pub use executor::{Executor, Runtime};
 pub use weights::WeightStore;
 

@@ -1,0 +1,399 @@
+//! Storage-element abstraction: the dtype the GEMM substrate *streams*,
+//! decoupled from the dtype it *accumulates* (always f32).
+//!
+//! The paper's latency wins come from keeping merge/unmerge as dense
+//! matrix work in the GPU's native half precision; on the host the same
+//! lever is memory bandwidth — a bf16/f16 packed panel moves half the
+//! bytes of an f32 one through L1/L2, which is where the KC/JB-blocked
+//! kernel in [`super::gemm`] spends its time. This module provides:
+//!
+//! * [`Element`] — a sealed trait over the storable element types
+//!   ([`f32`], [`Bf16`], [`F16`]) with *widening* loads: the kernel reads
+//!   `E`, converts to f32, and accumulates in f32 registers, so C is
+//!   always f32-exact-accumulated over the (possibly rounded) operand.
+//! * [`Bf16`] / [`F16`] — explicit u16 bit-level conversions (round to
+//!   nearest even, subnormal/inf/NaN correct), no external crates.
+//! * [`StorageDtype`] — the runtime-facing selector (engine configs,
+//!   manifests, benches) with parse/format round-tripping.
+//!
+//! Guarantees the rest of the stack relies on:
+//!
+//! * `f32` storage is the identity: the generic kernels instantiated at
+//!   `E = f32` perform bitwise the same arithmetic as the PR 1 f32
+//!   kernels (same loop structure, `to_f32` is a no-op), so the default
+//!   path stays bit-exact.
+//! * `to_f32` is exact for every `Bf16`/`F16` value (widening is
+//!   lossless); `from_f32` rounds to nearest, ties to even, and
+//!   round-trips every representable half value — including subnormals,
+//!   infinities and NaN payloads — exactly (property-tested exhaustively
+//!   over all 2^16 bit patterns in `tests/precision.rs`).
+
+use std::fmt;
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for super::Bf16 {}
+    impl Sealed for super::F16 {}
+}
+
+/// A storable tensor element: converts to/from f32 at panel-pack and
+/// kernel-load time. Sealed — the kernel layer is written against exactly
+/// the three implementations below.
+pub trait Element:
+    sealed::Sealed + Copy + Send + Sync + PartialEq + fmt::Debug + 'static
+{
+    /// Additive identity in storage form (panel allocation fill).
+    const ZERO: Self;
+    /// Storage name as it appears in configs and manifests.
+    const NAME: &'static str;
+    /// Bytes per stored element (the panel-footprint unit).
+    const BYTES: usize;
+    /// The runtime-facing dtype tag.
+    const DTYPE: StorageDtype;
+    /// Round an f32 into storage (nearest even for the half types).
+    fn from_f32(v: f32) -> Self;
+    /// Widen back to f32 (exact for every representable value).
+    fn to_f32(self) -> f32;
+}
+
+impl Element for f32 {
+    const ZERO: f32 = 0.0;
+    const NAME: &'static str = "f32";
+    const BYTES: usize = 4;
+    const DTYPE: StorageDtype = StorageDtype::F32;
+
+    #[inline(always)]
+    fn from_f32(v: f32) -> f32 {
+        v
+    }
+
+    #[inline(always)]
+    fn to_f32(self) -> f32 {
+        self
+    }
+}
+
+/// bfloat16: f32 with the low 16 mantissa bits dropped (7 explicit
+/// mantissa bits, f32's exponent range). The GPU dtype the paper runs in.
+#[derive(Clone, Copy, PartialEq, Eq, Default)]
+#[repr(transparent)]
+pub struct Bf16(pub u16);
+
+impl Element for Bf16 {
+    const ZERO: Bf16 = Bf16(0);
+    const NAME: &'static str = "bf16";
+    const BYTES: usize = 2;
+    const DTYPE: StorageDtype = StorageDtype::Bf16;
+
+    #[inline(always)]
+    fn from_f32(v: f32) -> Bf16 {
+        Bf16(f32_to_bf16_bits(v))
+    }
+
+    #[inline(always)]
+    fn to_f32(self) -> f32 {
+        bf16_bits_to_f32(self.0)
+    }
+}
+
+impl fmt::Debug for Bf16 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}bf16", self.to_f32())
+    }
+}
+
+/// IEEE 754 binary16 (5 exponent / 10 mantissa bits): narrower range than
+/// bf16 but 3 extra mantissa bits — the better fit for pre-scaled weights.
+#[derive(Clone, Copy, PartialEq, Eq, Default)]
+#[repr(transparent)]
+pub struct F16(pub u16);
+
+impl Element for F16 {
+    const ZERO: F16 = F16(0);
+    const NAME: &'static str = "f16";
+    const BYTES: usize = 2;
+    const DTYPE: StorageDtype = StorageDtype::F16;
+
+    #[inline(always)]
+    fn from_f32(v: f32) -> F16 {
+        F16(f32_to_f16_bits(v))
+    }
+
+    #[inline(always)]
+    fn to_f32(self) -> f32 {
+        f16_bits_to_f32(self.0)
+    }
+}
+
+impl fmt::Debug for F16 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}f16", self.to_f32())
+    }
+}
+
+/// f32 -> bf16 bits, round to nearest even. NaNs keep their (high-half)
+/// payload; a NaN whose payload lives only in the low mantissa bits is
+/// quieted so the result stays a NaN instead of collapsing to infinity.
+#[inline]
+pub fn f32_to_bf16_bits(v: f32) -> u16 {
+    let bits = v.to_bits();
+    if v.is_nan() {
+        let m = (bits >> 16) as u16;
+        return if m & 0x007F == 0 { m | 0x0040 } else { m };
+    }
+    let lsb = (bits >> 16) & 1;
+    ((bits + 0x7FFF + lsb) >> 16) as u16
+}
+
+/// bf16 bits -> f32 (exact: bf16 is a prefix of the f32 encoding).
+#[inline]
+pub fn bf16_bits_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// f32 -> IEEE binary16 bits, round to nearest even, with gradual
+/// underflow into the half subnormal range and overflow to infinity.
+/// NaN payloads are truncated to the high 10 mantissa bits (quieted if
+/// that truncation would read as infinity).
+#[inline]
+pub fn f32_to_f16_bits(v: f32) -> u16 {
+    let bits = v.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let man = bits & 0x007F_FFFF;
+    if exp == 0xFF {
+        if man == 0 {
+            return sign | 0x7C00; // infinity
+        }
+        let payload = ((man >> 13) & 0x3FF) as u16;
+        return sign | 0x7C00 | if payload == 0 { 0x0200 } else { payload };
+    }
+    let e = exp - 127;
+    if e >= 16 {
+        return sign | 0x7C00; // above the half range: round to inf
+    }
+    if e >= -14 {
+        // Normal half: 10-bit mantissa + RNE on the 13 dropped bits. A
+        // carry out of the mantissa rolls into the exponent (and from
+        // the top binade into infinity), which is exactly RNE behavior.
+        let m = (man >> 13) as u16;
+        let rem = man & 0x1FFF;
+        let mut h = (sign as u32) | (((e + 15) as u32) << 10) | m as u32;
+        if rem > 0x1000 || (rem == 0x1000 && (m & 1) == 1) {
+            h += 1;
+        }
+        return h as u16;
+    }
+    if e < -25 {
+        return sign; // underflows past half of the smallest subnormal
+    }
+    // Subnormal half: shift the 24-bit significand down to the 2^-24
+    // grid with RNE; a carry out of 10 bits lands on the smallest
+    // normal, which the addition encodes correctly.
+    let full = man | 0x0080_0000;
+    let shift = (-e - 1) as u32; // 14..=24
+    let m = full >> shift;
+    let rem = full & ((1u32 << shift) - 1);
+    let halfway = 1u32 << (shift - 1);
+    let mut h = (sign as u32) | m;
+    if rem > halfway || (rem == halfway && (m & 1) == 1) {
+        h += 1;
+    }
+    h as u16
+}
+
+/// IEEE binary16 bits -> f32 (exact, including subnormals / inf / NaN).
+#[inline]
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h as u32) & 0x8000) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let man = (h & 0x3FF) as u32;
+    let bits = if exp == 0x1F {
+        sign | 0x7F80_0000 | (man << 13)
+    } else if exp != 0 {
+        sign | ((exp + 112) << 23) | (man << 13)
+    } else if man == 0 {
+        sign
+    } else {
+        // Subnormal: renormalize the mantissa into f32's implicit-one form.
+        let mut e = 113u32; // biased f32 exponent of 2^-14
+        let mut m = man << 13;
+        while m & 0x0080_0000 == 0 {
+            m <<= 1;
+            e -= 1;
+        }
+        sign | (e << 23) | (m & 0x007F_FFFF)
+    };
+    f32::from_bits(bits)
+}
+
+/// Runtime selector for the storage dtype of packed panels / weights —
+/// what an [`EngineConfig`](crate::coordinator::EngineConfig) carries and
+/// a manifest param declares.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum StorageDtype {
+    /// Bit-exact default: identical to the pre-dtype substrate.
+    #[default]
+    F32,
+    Bf16,
+    F16,
+}
+
+impl StorageDtype {
+    pub const ALL: [StorageDtype; 3] =
+        [StorageDtype::F32, StorageDtype::Bf16, StorageDtype::F16];
+
+    pub fn parse(s: &str) -> Option<StorageDtype> {
+        match s {
+            "f32" => Some(StorageDtype::F32),
+            "bf16" => Some(StorageDtype::Bf16),
+            "f16" => Some(StorageDtype::F16),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            StorageDtype::F32 => f32::NAME,
+            StorageDtype::Bf16 => Bf16::NAME,
+            StorageDtype::F16 => F16::NAME,
+        }
+    }
+
+    /// Bytes per stored element.
+    pub fn bytes(self) -> usize {
+        match self {
+            StorageDtype::F32 => f32::BYTES,
+            StorageDtype::Bf16 => Bf16::BYTES,
+            StorageDtype::F16 => F16::BYTES,
+        }
+    }
+
+    /// Round an f32 through this storage dtype and back — the exact value
+    /// a widening kernel load observes. Identity for `F32`.
+    pub fn round_trip(self, v: f32) -> f32 {
+        match self {
+            StorageDtype::F32 => v,
+            StorageDtype::Bf16 => Bf16::from_f32(v).to_f32(),
+            StorageDtype::F16 => F16::from_f32(v).to_f32(),
+        }
+    }
+}
+
+impl fmt::Display for StorageDtype {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bf16_known_values() {
+        assert_eq!(f32_to_bf16_bits(0.0), 0x0000);
+        assert_eq!(f32_to_bf16_bits(-0.0), 0x8000);
+        assert_eq!(f32_to_bf16_bits(1.0), 0x3F80);
+        assert_eq!(f32_to_bf16_bits(-2.0), 0xC000);
+        assert_eq!(f32_to_bf16_bits(f32::INFINITY), 0x7F80);
+        assert_eq!(f32_to_bf16_bits(f32::NEG_INFINITY), 0xFF80);
+        assert_eq!(bf16_bits_to_f32(0x3F80), 1.0);
+        // Round to nearest even on the dropped 16 bits.
+        assert_eq!(f32_to_bf16_bits(f32::from_bits(0x3F80_8000)), 0x3F80); // tie, even
+        assert_eq!(f32_to_bf16_bits(f32::from_bits(0x3F81_8000)), 0x3F82); // tie, odd
+        assert_eq!(f32_to_bf16_bits(f32::from_bits(0x3F80_8001)), 0x3F81); // above tie
+        // Max finite f32 rounds up to bf16 infinity under RNE.
+        assert_eq!(f32_to_bf16_bits(f32::MAX), 0x7F80);
+    }
+
+    #[test]
+    fn bf16_nan_stays_nan() {
+        let q = bf16_bits_to_f32(f32_to_bf16_bits(f32::NAN));
+        assert!(q.is_nan());
+        // Payload only in the low mantissa bits: must quiet, not become inf.
+        let low_payload = f32::from_bits(0x7F80_0001);
+        assert!(low_payload.is_nan());
+        let b = f32_to_bf16_bits(low_payload);
+        assert!(bf16_bits_to_f32(b).is_nan());
+    }
+
+    #[test]
+    fn f16_known_values() {
+        assert_eq!(f32_to_f16_bits(0.0), 0x0000);
+        assert_eq!(f32_to_f16_bits(-0.0), 0x8000);
+        assert_eq!(f32_to_f16_bits(1.0), 0x3C00);
+        assert_eq!(f32_to_f16_bits(0.5), 0x3800);
+        assert_eq!(f32_to_f16_bits(-2.0), 0xC000);
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7BFF); // max finite half
+        assert_eq!(f16_bits_to_f32(0x7BFF), 65504.0);
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7C00);
+        // 65520 is halfway between 65504 and 2^16: RNE rounds to inf.
+        assert_eq!(f32_to_f16_bits(65520.0), 0x7C00);
+        assert_eq!(f32_to_f16_bits(65519.9), 0x7BFF);
+        assert_eq!(f32_to_f16_bits(1e6), 0x7C00); // far overflow
+    }
+
+    #[test]
+    fn f16_subnormal_edges() {
+        let min_sub = f32::from_bits(0x3380_0000); // 2^-24
+        assert_eq!(f32_to_f16_bits(min_sub), 0x0001);
+        assert_eq!(f16_bits_to_f32(0x0001), min_sub);
+        let max_sub = f16_bits_to_f32(0x03FF); // 1023/1024 * 2^-14
+        assert_eq!(f32_to_f16_bits(max_sub), 0x03FF);
+        let min_norm = f16_bits_to_f32(0x0400); // 2^-14
+        assert_eq!(min_norm, f32::from_bits(0x3880_0000));
+        // 2^-25 is the tie between 0 and the smallest subnormal: RNE -> 0.
+        assert_eq!(f32_to_f16_bits(f32::from_bits(0x3300_0000)), 0x0000);
+        // Just above the tie rounds up to the smallest subnormal.
+        assert_eq!(f32_to_f16_bits(f32::from_bits(0x3300_0001)), 0x0001);
+        // Below half of the smallest subnormal underflows to signed zero.
+        assert_eq!(f32_to_f16_bits(1e-9), 0x0000);
+        assert_eq!(f32_to_f16_bits(-1e-9), 0x8000);
+    }
+
+    #[test]
+    fn f16_nan_stays_nan() {
+        let q = f16_bits_to_f32(f32_to_f16_bits(f32::NAN));
+        assert!(q.is_nan());
+        // Payload only in the low 13 mantissa bits: quiet, not infinity.
+        let low_payload = f32::from_bits(0x7F80_0001);
+        let h = f32_to_f16_bits(low_payload);
+        assert!(f16_bits_to_f32(h).is_nan());
+    }
+
+    #[test]
+    fn storage_dtype_parse_display_round_trip() {
+        for dt in StorageDtype::ALL {
+            assert_eq!(StorageDtype::parse(dt.as_str()), Some(dt));
+            assert_eq!(format!("{dt}"), dt.as_str());
+        }
+        assert_eq!(StorageDtype::parse("f64"), None);
+        assert_eq!(StorageDtype::default(), StorageDtype::F32);
+        assert_eq!(StorageDtype::F32.bytes(), 4);
+        assert_eq!(StorageDtype::Bf16.bytes(), 2);
+        assert_eq!(StorageDtype::F16.bytes(), 2);
+    }
+
+    #[test]
+    fn round_trip_is_identity_for_f32_and_rounds_halves() {
+        assert_eq!(StorageDtype::F32.round_trip(0.1), 0.1);
+        let v = 0.1f32;
+        let b = StorageDtype::Bf16.round_trip(v);
+        assert!((b - v).abs() < 1e-3 && b != v);
+        let h = StorageDtype::F16.round_trip(v);
+        assert!((h - v).abs() < 1e-4);
+    }
+
+    #[test]
+    fn element_constants_consistent() {
+        assert_eq!(<f32 as Element>::DTYPE.bytes(), f32::BYTES);
+        assert_eq!(Bf16::DTYPE.bytes(), Bf16::BYTES);
+        assert_eq!(F16::DTYPE.bytes(), F16::BYTES);
+        assert_eq!(std::mem::size_of::<Bf16>(), 2);
+        assert_eq!(std::mem::size_of::<F16>(), 2);
+        assert_eq!(Bf16::ZERO.to_f32(), 0.0);
+        assert_eq!(F16::ZERO.to_f32(), 0.0);
+    }
+}

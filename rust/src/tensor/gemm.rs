@@ -19,7 +19,17 @@
 //!
 //! `scalar` keeps the seed's naive loop nests as the reference
 //! implementation the property tests compare against.
+//!
+//! Since PR 3 the kernels are generic over the *storage* element of each
+//! operand ([`Element`]: `f32`, `Bf16`, `F16`): loads widen into f32
+//! registers and C always accumulates in f32, so a half-precision panel
+//! halves the bytes the panel sweep streams through L1/L2 without
+//! changing the accumulation order. Instantiated at `f32` the generics
+//! compile to exactly the PR 1 kernels (identity conversions), which is
+//! what keeps the default path bit-exact. [`Panels`] is the runtime-
+//! dispatch form for call sites whose dtype is a config value.
 
+use super::element::{Bf16, Element, StorageDtype, F16};
 use super::pool;
 
 /// k-panel depth: one A-row segment (KC floats) + a JB x KC B-panel stay
@@ -32,9 +42,10 @@ const JB: usize = 64;
 /// crossover points stay in sync.
 pub(crate) const PAR_MIN_MACS: usize = 1 << 17;
 
-/// Contiguous dot product, 8-wide accumulators (autovectorizes).
+/// Contiguous dot product, 8-wide accumulators (autovectorizes). Loads
+/// widen each operand's storage element to f32; accumulation is f32.
 #[inline(always)]
-pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+pub fn dot_e<A: Element, B: Element>(a: &[A], b: &[B]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
     let n8 = a.len() / 8 * 8;
     let mut acc = [0.0f32; 8];
@@ -43,7 +54,7 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
         let x = &a[i..i + 8];
         let y = &b[i..i + 8];
         for l in 0..8 {
-            acc[l] += x[l] * y[l];
+            acc[l] += x[l].to_f32() * y[l].to_f32();
         }
         i += 8;
     }
@@ -52,15 +63,22 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
         s += acc[l];
     }
     for j in n8..a.len() {
-        s += a[j] * b[j];
+        s += a[j].to_f32() * b[j].to_f32();
     }
     s
 }
 
-/// 1x4 register tile: one A row segment against four Bᵀ rows at once —
-/// each A load is reused 4x, quadrupling arithmetic intensity.
+/// f32 [`dot_e`] (the PR 1 entry point, kept for the f32 hot paths).
 #[inline(always)]
-fn dot4(a: &[f32], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32]) -> [f32; 4] {
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    dot_e(a, b)
+}
+
+/// 1x4 register tile: one A row segment against four Bᵀ rows at once —
+/// each A load is reused 4x, quadrupling arithmetic intensity. The
+/// widening `to_f32` is free for f32 and a shift/convert for the halves.
+#[inline(always)]
+fn dot4<A: Element, B: Element>(a: &[A], b0: &[B], b1: &[B], b2: &[B], b3: &[B]) -> [f32; 4] {
     let n = a.len();
     let n8 = n / 8 * 8;
     let mut a0 = [0.0f32; 8];
@@ -75,10 +93,11 @@ fn dot4(a: &[f32], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32]) -> [f32; 4] {
         let y2 = &b2[i..i + 8];
         let y3 = &b3[i..i + 8];
         for l in 0..8 {
-            a0[l] += x[l] * y0[l];
-            a1[l] += x[l] * y1[l];
-            a2[l] += x[l] * y2[l];
-            a3[l] += x[l] * y3[l];
+            let xv = x[l].to_f32();
+            a0[l] += xv * y0[l].to_f32();
+            a1[l] += xv * y1[l].to_f32();
+            a2[l] += xv * y2[l].to_f32();
+            a3[l] += xv * y3[l].to_f32();
         }
         i += 8;
     }
@@ -90,17 +109,27 @@ fn dot4(a: &[f32], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32]) -> [f32; 4] {
         out[3] += a3[l];
     }
     for j in n8..n {
-        out[0] += a[j] * b0[j];
-        out[1] += a[j] * b1[j];
-        out[2] += a[j] * b2[j];
-        out[3] += a[j] * b3[j];
+        let xv = a[j].to_f32();
+        out[0] += xv * b0[j].to_f32();
+        out[1] += xv * b1[j].to_f32();
+        out[2] += xv * b2[j].to_f32();
+        out[3] += xv * b3[j].to_f32();
     }
     out
 }
 
 /// Single-thread blocked kernel: `c` (rows r0..r1 of C, zeroed here)
-/// accumulates `A[r0..r1] · Bᵀ` where A is (m x k) and B is (n x k).
-fn bt_kernel_rows(a: &[f32], bt: &[f32], c: &mut [f32], r0: usize, r1: usize, k: usize, n: usize) {
+/// accumulates `A[r0..r1] · Bᵀ` where A is (m x k) and B is (n x k),
+/// each stored in its own element type, accumulated in f32.
+fn bt_kernel_rows<A: Element, B: Element>(
+    a: &[A],
+    bt: &[B],
+    c: &mut [f32],
+    r0: usize,
+    r1: usize,
+    k: usize,
+    n: usize,
+) {
     for v in c.iter_mut() {
         *v = 0.0;
     }
@@ -129,7 +158,7 @@ fn bt_kernel_rows(a: &[f32], bt: &[f32], c: &mut [f32], r0: usize, r1: usize, k:
                     j += 4;
                 }
                 while j < jend {
-                    crow[j] += dot(arow, &bt[j * k + kb..j * k + kend]);
+                    crow[j] += dot_e(arow, &bt[j * k + kb..j * k + kend]);
                     j += 1;
                 }
             }
@@ -139,8 +168,16 @@ fn bt_kernel_rows(a: &[f32], bt: &[f32], c: &mut [f32], r0: usize, r1: usize, k:
     }
 }
 
-/// C (m x n) = A (m x k) @ B (n x k)ᵀ, parallel over row blocks of C.
-pub fn matmul_bt_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+/// C (m x n) = A (m x k) @ B (n x k)ᵀ, parallel over row blocks of C,
+/// generic over each operand's storage element (C stays f32).
+pub fn matmul_bt_into_e<A: Element, B: Element>(
+    a: &[A],
+    b: &[B],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
     assert_eq!(a.len(), m * k, "A shape");
     assert_eq!(b.len(), n * k, "B shape");
     assert_eq!(c.len(), m * n, "C shape");
@@ -159,13 +196,19 @@ pub fn matmul_bt_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n
     });
 }
 
-/// Blocked (tile-transposed) out-of-place transpose: (rows x cols) ->
-/// (cols x rows). Parallel over output row blocks for large operands.
-pub fn transpose_into(a: &[f32], out: &mut [f32], rows: usize, cols: usize) {
+/// f32 [`matmul_bt_into_e`] (the PR 1 entry point for f32 operands).
+pub fn matmul_bt_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    matmul_bt_into_e(a, b, c, m, k, n);
+}
+
+/// Blocked (tile-transposed) out-of-place pack: (rows x cols) f32 ->
+/// (cols x rows) panels in the target storage element — the generic
+/// `Bᵀ`-pack (and `matmul_at`'s A-pack). Parallel over output row blocks.
+pub fn transpose_pack_into<E: Element>(a: &[f32], out: &mut [E], rows: usize, cols: usize) {
     assert_eq!(a.len(), rows * cols);
     assert_eq!(out.len(), rows * cols);
     const TB: usize = 32;
-    let tile = |out_chunk: &mut [f32], j0: usize, j1: usize| {
+    let tile = |out_chunk: &mut [E], j0: usize, j1: usize| {
         // out rows j0..j1 (original columns), blocked over the i axis.
         let mut ib = 0;
         while ib < rows {
@@ -173,7 +216,7 @@ pub fn transpose_into(a: &[f32], out: &mut [f32], rows: usize, cols: usize) {
             for j in j0..j1 {
                 let orow = &mut out_chunk[(j - j0) * rows..(j - j0) * rows + rows];
                 for i in ib..iend {
-                    orow[i] = a[i * cols + j];
+                    orow[i] = E::from_f32(a[i * cols + j]);
                 }
             }
             ib = iend;
@@ -189,6 +232,107 @@ pub fn transpose_into(a: &[f32], out: &mut [f32], rows: usize, cols: usize) {
         let j1 = j0 + chunk.len() / rows;
         tile(chunk, j0, j1);
     });
+}
+
+/// f32 [`transpose_pack_into`] (pure transpose, no rounding).
+pub fn transpose_into(a: &[f32], out: &mut [f32], rows: usize, cols: usize) {
+    transpose_pack_into(a, out, rows, cols);
+}
+
+/// Packed `Bᵀ` panels whose element type is a *runtime* value — the
+/// dispatch form for weights whose storage dtype comes from an
+/// `EngineConfig` or manifest rather than a type parameter. Holds the
+/// (n x k) row-major transposed panels ready for the bt kernel.
+#[derive(Clone, Debug)]
+pub enum Panels {
+    F32(Vec<f32>),
+    Bf16(Vec<Bf16>),
+    F16(Vec<F16>),
+}
+
+impl Panels {
+    /// Pack `b` ((rows x cols) row-major) into (cols x rows) `Bᵀ` panels
+    /// stored in `dtype`.
+    pub fn pack(b: &[f32], rows: usize, cols: usize, dtype: StorageDtype) -> Panels {
+        match dtype {
+            StorageDtype::F32 => {
+                let mut out = vec![0.0f32; b.len()];
+                transpose_pack_into(b, &mut out, rows, cols);
+                Panels::F32(out)
+            }
+            StorageDtype::Bf16 => {
+                let mut out = vec![Bf16::ZERO; b.len()];
+                transpose_pack_into(b, &mut out, rows, cols);
+                Panels::Bf16(out)
+            }
+            StorageDtype::F16 => {
+                let mut out = vec![F16::ZERO; b.len()];
+                transpose_pack_into(b, &mut out, rows, cols);
+                Panels::F16(out)
+            }
+        }
+    }
+
+    pub fn dtype(&self) -> StorageDtype {
+        match self {
+            Panels::F32(_) => StorageDtype::F32,
+            Panels::Bf16(_) => StorageDtype::Bf16,
+            Panels::F16(_) => StorageDtype::F16,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Panels::F32(v) => v.len(),
+            Panels::Bf16(v) => v.len(),
+            Panels::F16(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Resident panel footprint in bytes — the quantity the half dtypes
+    /// exist to halve.
+    pub fn bytes(&self) -> usize {
+        self.len() * self.dtype().bytes()
+    }
+
+    /// Widened f32 copy of the packed panels (same (n x k) layout).
+    pub fn to_f32_vec(&self) -> Vec<f32> {
+        match self {
+            Panels::F32(v) => v.clone(),
+            Panels::Bf16(v) => v.iter().map(|e| e.to_f32()).collect(),
+            Panels::F16(v) => v.iter().map(|e| e.to_f32()).collect(),
+        }
+    }
+
+    /// Re-store the packed panels in another dtype (elementwise; no
+    /// re-transpose). Widening is exact; narrowing rounds to nearest even.
+    pub fn convert(&self, dtype: StorageDtype) -> Panels {
+        if dtype == self.dtype() {
+            return self.clone();
+        }
+        let wide = self.to_f32_vec();
+        match dtype {
+            StorageDtype::F32 => Panels::F32(wide),
+            StorageDtype::Bf16 => {
+                Panels::Bf16(wide.into_iter().map(Bf16::from_f32).collect())
+            }
+            StorageDtype::F16 => Panels::F16(wide.into_iter().map(F16::from_f32).collect()),
+        }
+    }
+
+    /// `C (m x n) = A (m x k) @ panelsᵀ` with these panels as the (n x k)
+    /// packed operand, dispatched to the matching widening kernel.
+    pub fn matmul_bt_into(&self, a: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+        match self {
+            Panels::F32(v) => matmul_bt_into_e(a, v, c, m, k, n),
+            Panels::Bf16(v) => matmul_bt_into_e(a, v, c, m, k, n),
+            Panels::F16(v) => matmul_bt_into_e(a, v, c, m, k, n),
+        }
+    }
 }
 
 /// Seed reference kernels (naive loop nests, single-threaded). Kept as the
@@ -342,6 +486,78 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn half_precision_panels_match_scalar_within_rounding() {
+        let mut rng = Pcg64::new(11);
+        let (m, k, n) = (33, 65, 17);
+        let a = rng.normal_vec(m * k);
+        let b = rng.normal_vec(n * k);
+        let want = scalar::matmul_bt(&a, &b, m, k, n);
+        for dtype in [StorageDtype::Bf16, StorageDtype::F16] {
+            // Quantize B through storage, then the widening kernel must
+            // agree with the f32 reference run on the widened values.
+            let bq: Vec<f32> = b.iter().map(|&v| dtype.round_trip(v)).collect();
+            let want_q = scalar::matmul_bt(&a, &bq, m, k, n);
+            let mut c = vec![0.0f32; m * n];
+            match dtype {
+                StorageDtype::Bf16 => {
+                    let bh: Vec<Bf16> = b.iter().map(|&v| Bf16::from_f32(v)).collect();
+                    matmul_bt_into_e(&a, &bh, &mut c, m, k, n);
+                }
+                StorageDtype::F16 => {
+                    let bh: Vec<F16> = b.iter().map(|&v| F16::from_f32(v)).collect();
+                    matmul_bt_into_e(&a, &bh, &mut c, m, k, n);
+                }
+                StorageDtype::F32 => unreachable!(),
+            }
+            close(&c, &want_q, 1e-4);
+            // And stay near the unquantized f32 result (coarse sanity;
+            // the pinned-tolerance property tests live in tests/precision).
+            close(&c, &want, 1e-1);
+        }
+    }
+
+    #[test]
+    fn panels_pack_dispatch_and_convert() {
+        let mut rng = Pcg64::new(12);
+        let (m, k, n) = (5, 24, 9);
+        let a = rng.normal_vec(m * k);
+        let b_kn = rng.normal_vec(k * n); // (k x n) row-major, as ops::matmul sees B
+        let f32p = Panels::pack(&b_kn, k, n, StorageDtype::F32);
+        let bf = Panels::pack(&b_kn, k, n, StorageDtype::Bf16);
+        assert_eq!(f32p.dtype(), StorageDtype::F32);
+        assert_eq!(bf.dtype(), StorageDtype::Bf16);
+        assert_eq!(bf.bytes() * 2, f32p.bytes(), "bf16 panels halve the footprint");
+        // F32 panels reproduce ops::matmul exactly.
+        let mut c = vec![0.0f32; m * n];
+        f32p.matmul_bt_into(&a, &mut c, m, k, n);
+        let mut bt = vec![0.0f32; k * n];
+        transpose_into(&b_kn, &mut bt, k, n);
+        let mut want = vec![0.0f32; m * n];
+        matmul_bt_into(&a, &bt, &mut want, m, k, n);
+        assert_eq!(c, want, "f32 Panels path must be bitwise the f32 kernel");
+        // Widening convert is exact: bf16 -> f32 -> bf16 round-trips.
+        let back = bf.convert(StorageDtype::F32).convert(StorageDtype::Bf16);
+        match (&bf, &back) {
+            (Panels::Bf16(x), Panels::Bf16(y)) => assert_eq!(x, y),
+            _ => panic!("dtype changed"),
+        }
+        // And the bf16 panels agree with quantize-then-f32-kernel bitwise.
+        let bq = bf.convert(StorageDtype::F32);
+        let mut c_h = vec![0.0f32; m * n];
+        let mut c_q = vec![0.0f32; m * n];
+        bf.matmul_bt_into(&a, &mut c_h, m, k, n);
+        bq.matmul_bt_into(&a, &mut c_q, m, k, n);
+        assert_eq!(c_h, c_q, "widening loads == pre-widened f32 operand");
+    }
+
+    #[test]
+    fn dot_e_widens_both_operands() {
+        let a: Vec<Bf16> = [1.0f32, 2.0, 3.0].iter().map(|&v| Bf16::from_f32(v)).collect();
+        let b: Vec<F16> = [4.0f32, 5.0, 6.0].iter().map(|&v| F16::from_f32(v)).collect();
+        assert_eq!(dot_e(&a, &b), 32.0); // small integers are exact in both
     }
 
     #[test]

@@ -2,10 +2,13 @@
 //! ToMA host reference, the baselines and the quality metrics are built on.
 //!
 //! The kernels are layered: [`pool`] is a persistent `std::thread` worker
-//! pool with a scoped parallel-for, [`gemm`] the blocked/register-tiled
-//! GEMM microkernels fanned out over it, and [`ops`] the public kernel
-//! surface everything else calls.
+//! pool with a scoped parallel-for, [`element`] the storage-dtype
+//! abstraction (f32 / bf16 / f16 with widening loads), [`gemm`] the
+//! blocked/register-tiled GEMM microkernels fanned out over it (generic
+//! over each operand's storage element, accumulating in f32), and [`ops`]
+//! the public kernel surface everything else calls.
 
+pub mod element;
 pub mod gemm;
 pub mod kmeans;
 pub mod linalg;

@@ -7,7 +7,15 @@
 //! row-wise ops (softmax, layernorm, L2-normalize) parallelize over row
 //! blocks, and `softmax_cols` runs column-tiled so every pass is a
 //! contiguous row-major sweep instead of the seed's strided column walk.
+//!
+//! Since PR 3 the packing GEMMs also come in storage-dtype-parameterized
+//! forms ([`matmul_e`], [`matmul_at_e`]): the packed operand (`Bᵀ` panels
+//! for `matmul`, the A-pack for `matmul_at`) is stored in the chosen
+//! [`Element`] and widened to f32 on load, halving panel traffic for the
+//! half dtypes while C stays f32-accumulated. The f32 entry points are
+//! unchanged and bit-exact.
 
+use super::element::Element;
 use super::pool::PAR_MIN_ELEMS;
 use super::{gemm, pool, Tensor};
 
@@ -46,6 +54,38 @@ pub fn matmul_bt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32>
 /// [`matmul_bt`] into a caller-provided buffer (allocation-free hot path).
 pub fn matmul_bt_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
     gemm::matmul_bt_into(a, b, c, m, k, n);
+}
+
+/// [`matmul`] with the `Bᵀ` panels packed in storage dtype `E`: the
+/// panel sweep streams `E`-sized elements (half the bytes for bf16/f16)
+/// and widens on load; C accumulates in f32. `matmul_e::<f32>` runs the
+/// blocked pack-and-kernel path unconditionally, so it matches [`matmul`]
+/// bitwise only above `matmul`'s small-shape cutoff (below it `matmul`
+/// takes the seed scalar kernel, a different summation order — and skips
+/// the pack this function always pays); for tiny f32 products keep
+/// calling [`matmul`].
+pub fn matmul_e<E: Element>(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k, "A shape");
+    assert_eq!(b.len(), k * n, "B shape");
+    let mut bt = vec![E::ZERO; k * n];
+    gemm::transpose_pack_into(b, &mut bt, k, n);
+    let mut c = vec![0.0f32; m * n];
+    gemm::matmul_bt_into_e(a, &bt, &mut c, m, k, n);
+    c
+}
+
+/// [`matmul_at`] with the A-pack (the transposed-A operand) stored in
+/// dtype `E` and widened on load; B's panels and C stay f32.
+pub fn matmul_at_e<E: Element>(a: &[f32], b: &[f32], k: usize, m: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), k * m);
+    assert_eq!(b.len(), k * n);
+    let mut at = vec![E::ZERO; k * m];
+    gemm::transpose_pack_into(a, &mut at, k, m);
+    let mut bt = vec![0.0f32; k * n];
+    gemm::transpose_into(b, &mut bt, k, n);
+    let mut c = vec![0.0f32; m * n];
+    gemm::matmul_bt_into_e(&at, &bt, &mut c, m, k, n);
+    c
 }
 
 /// C = A^T @ B where A is (k x m), B is (k x n) -> (m x n).
@@ -295,6 +335,41 @@ mod tests {
         let b = vec![1.0, 0.0, 1.0, 2.0, 1.0, 0.0]; // 2x3 (as n x k)
         let bt = transpose(&b, 2, 3); // 3x2
         assert_eq!(matmul_bt(&a, &b, 2, 3, 2), matmul(&a, &bt, 2, 3, 2));
+    }
+
+    #[test]
+    fn matmul_e_f32_matches_matmul_bitwise() {
+        let mut rng = crate::util::Pcg64::new(21);
+        let (m, k, n) = (9, 31, 13);
+        let a = rng.normal_vec(m * k);
+        let b = rng.normal_vec(k * n);
+        assert_eq!(matmul_e::<f32>(&a, &b, m, k, n), {
+            // Same pack + kernel as the blocked path, no small-shape
+            // fallback — compare against the explicit pack-and-run.
+            let bt = transpose(&b, k, n);
+            matmul_bt(&a, &bt, m, k, n)
+        });
+    }
+
+    #[test]
+    fn half_packed_matmuls_track_f32() {
+        use crate::tensor::element::{Bf16, F16};
+        let mut rng = crate::util::Pcg64::new(22);
+        let (m, k, n) = (17, 48, 23);
+        let a = rng.normal_vec(m * k);
+        let b = rng.normal_vec(k * n);
+        let want = matmul(&a, &b, m, k, n);
+        for (got, tol) in [
+            // Coarse tracking bounds (the pinned tolerances live in
+            // tests/precision.rs over weight-scaled operands).
+            (matmul_e::<Bf16>(&a, &b, m, k, n), 1e-1f32),
+            (matmul_e::<F16>(&a, &b, m, k, n), 1e-2),
+            (matmul_at_e::<Bf16>(&transpose(&a, m, k), &b, k, m, n), 1e-1),
+        ] {
+            for (x, y) in got.iter().zip(&want) {
+                assert!((x - y).abs() <= tol * (1.0 + y.abs()), "{x} vs {y}");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,317 @@
+//! Mixed-precision acceptance tests.
+//!
+//! Three layers of guarantee, matching the storage-dtype substrate's
+//! contract (`tensor::element`):
+//!
+//! 1. **Conversions are exact where they must be**: every representable
+//!    bf16 and f16 bit pattern round-trips f32 → storage → f32 → storage
+//!    unchanged (exhaustive over all 2^16 patterns, NaN payloads
+//!    included), and the subnormal/inf/NaN edges behave per IEEE 754
+//!    round-to-nearest-even.
+//! 2. **The widening GEMM is the f32 kernel on widened values**: a half
+//!    packed-panel product is bitwise the f32 product over the
+//!    dequantized operand, and tracks the unquantized f32 `gemm::scalar`
+//!    reference within pinned tolerances at model shapes
+//!    (rel err ≤ 1e-2 for bf16, ≤ 1e-3 for f16).
+//! 3. **The serving stack is storage-consistent**: a bf16 cohort's
+//!    batched latents are bit-identical to the bf16 per-request engine
+//!    (fold invariance is dtype-independent), and bf16/f32 configs key
+//!    into distinct lanes.
+
+use std::sync::Arc;
+
+use toma::coordinator::scheduler::{BatchPolicy, HostBackend, HostEngine, Scheduler, DEFAULT_TAU};
+use toma::coordinator::{EngineConfig, GenRequest};
+use toma::model::HostUVit;
+use toma::runtime::ModelInfo;
+use toma::tensor::element::{
+    bf16_bits_to_f32, f16_bits_to_f32, f32_to_bf16_bits, f32_to_f16_bits, Bf16, Element,
+    StorageDtype, F16,
+};
+use toma::tensor::gemm;
+use toma::util::prop;
+
+// ---------------------------------------------------------------------
+// 1. Conversion exactness.
+// ---------------------------------------------------------------------
+
+/// Every representable bf16 value round-trips exactly — including every
+/// NaN payload, both infinities, both zeros and all subnormals.
+#[test]
+fn bf16_round_trip_exhaustive() {
+    for bits in 0..=u16::MAX {
+        let widened = bf16_bits_to_f32(bits);
+        let back = f32_to_bf16_bits(widened);
+        assert_eq!(
+            back, bits,
+            "bf16 {bits:#06x} widened to {widened} but re-narrowed to {back:#06x}"
+        );
+    }
+}
+
+/// Every representable f16 value round-trips exactly (same coverage).
+#[test]
+fn f16_round_trip_exhaustive() {
+    for bits in 0..=u16::MAX {
+        let widened = f16_bits_to_f32(bits);
+        let back = f32_to_f16_bits(widened);
+        assert_eq!(
+            back, bits,
+            "f16 {bits:#06x} widened to {widened} but re-narrowed to {back:#06x}"
+        );
+    }
+}
+
+/// Widening any f16 and re-rounding is idempotent, and quantization error
+/// is bounded by half a ulp of the target format across the normal range.
+#[test]
+fn f16_quantization_error_bounded() {
+    prop::check("f16 rounding within half ulp", 64, |g| {
+        let v = g.f32_in(-1000.0, 1000.0);
+        let q = f16_bits_to_f32(f32_to_f16_bits(v));
+        // Normal-range f16 spacing at |v| is 2^(floor(log2|v|) - 10).
+        let ulp = if v == 0.0 {
+            f32::EPSILON
+        } else {
+            (v.abs().log2().floor() - 10.0).exp2()
+        };
+        prop::assert_prop((q - v).abs() <= 0.5 * ulp + f32::MIN_POSITIVE, "half-ulp bound");
+        // Idempotence: re-quantizing a representable value is exact.
+        prop::assert_prop(
+            f32_to_f16_bits(q) == f32_to_f16_bits(v),
+            "re-quantization stability",
+        );
+    });
+}
+
+/// Same bound for bf16 (7 explicit mantissa bits: spacing 2^(e - 7)).
+#[test]
+fn bf16_quantization_error_bounded() {
+    prop::check("bf16 rounding within half ulp", 64, |g| {
+        let v = g.f32_in(-1e6, 1e6);
+        let q = bf16_bits_to_f32(f32_to_bf16_bits(v));
+        let ulp = if v == 0.0 {
+            f32::EPSILON
+        } else {
+            (v.abs().log2().floor() - 7.0).exp2()
+        };
+        prop::assert_prop((q - v).abs() <= 0.5 * ulp + f32::MIN_POSITIVE, "half-ulp bound");
+    });
+}
+
+// ---------------------------------------------------------------------
+// 2. Widening GEMM vs the f32 scalar reference.
+// ---------------------------------------------------------------------
+
+/// Model-ish GEMM shapes: (tokens x d) activations against packed
+/// (d_out x d_in) weight panels, at UViT/SDXL-like widths, plus ragged
+/// shapes that cross the KC/JB tile boundaries and the parallel cutoff.
+const MODEL_SHAPES: [(usize, usize, usize); 4] =
+    [(64, 16, 48), (257, 128, 384), (96, 300, 50), (33, 65, 17)];
+
+/// Weight-like operand: scaled 1/sqrt(k) like every model layer, so the
+/// dot products stay O(1) and the pinned relative tolerances are
+/// meaningful at every shape.
+fn weightish(g: &mut prop::Gen, n: usize, k: usize) -> Vec<f32> {
+    let s = 1.0 / (k as f32).sqrt();
+    g.normal_vec(n * k).into_iter().map(|v| v * s).collect()
+}
+
+/// Matrix-level relative error `||got - want||_F / ||want||_F` — the
+/// standard GEMM accuracy metric. (A per-element max would be dominated
+/// by the Gaussian tail of the quantization noise at large m·n and pin
+/// nothing about the kernel itself.)
+fn frob_rel_err(got: &[f32], want: &[f32]) -> f64 {
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (x, y) in got.iter().zip(want) {
+        num += ((x - y) as f64).powi(2);
+        den += (*y as f64).powi(2);
+    }
+    (num / den.max(1e-300)).sqrt()
+}
+
+fn max_rel_err(got: &[f32], want: &[f32]) -> f32 {
+    got.iter()
+        .zip(want)
+        .map(|(x, y)| (x - y).abs() / (1.0 + y.abs()))
+        .fold(0.0f32, f32::max)
+}
+
+/// bf16 packed-panel GEMM vs the unquantized f32 `gemm::scalar`
+/// reference: pinned rel err ≤ 1e-2 at model shapes.
+#[test]
+fn bf16_gemm_within_pinned_tolerance_of_f32_reference() {
+    prop::check("bf16 gemm tolerance", 12, |g| {
+        let &(m, k, n) = g.pick(&MODEL_SHAPES);
+        let a = g.normal_vec(m * k);
+        let b = weightish(g, n, k);
+        let want = gemm::scalar::matmul_bt(&a, &b, m, k, n);
+        let bh: Vec<Bf16> = b.iter().map(|&v| Bf16::from_f32(v)).collect();
+        let mut got = vec![0.0f32; m * n];
+        gemm::matmul_bt_into_e(&a, &bh, &mut got, m, k, n);
+        let err = frob_rel_err(&got, &want);
+        prop::assert_prop(err <= 1e-2, &format!("bf16 rel err {err} > 1e-2"));
+    });
+}
+
+/// f16 packed-panel GEMM vs the f32 reference: pinned rel err ≤ 1e-3.
+#[test]
+fn f16_gemm_within_pinned_tolerance_of_f32_reference() {
+    prop::check("f16 gemm tolerance", 12, |g| {
+        let &(m, k, n) = g.pick(&MODEL_SHAPES);
+        let a = g.normal_vec(m * k);
+        let b = weightish(g, n, k);
+        let want = gemm::scalar::matmul_bt(&a, &b, m, k, n);
+        let bh: Vec<F16> = b.iter().map(|&v| F16::from_f32(v)).collect();
+        let mut got = vec![0.0f32; m * n];
+        gemm::matmul_bt_into_e(&a, &bh, &mut got, m, k, n);
+        let err = frob_rel_err(&got, &want);
+        prop::assert_prop(err <= 1e-3, &format!("f16 rel err {err} > 1e-3"));
+    });
+}
+
+/// Kernel exactness: the widening kernel over half storage is *bitwise*
+/// the f32 kernel over the pre-widened operand — quantization is the only
+/// difference between the half and f32 paths.
+#[test]
+fn widening_kernel_is_bitwise_f32_kernel_on_widened_operand() {
+    prop::check("widen == pre-widen", 16, |g| {
+        let &(m, k, n) = g.pick(&MODEL_SHAPES);
+        let a = g.normal_vec(m * k);
+        let b = weightish(g, n, k);
+        for dtype in [StorageDtype::Bf16, StorageDtype::F16] {
+            let bq: Vec<f32> = b.iter().map(|&v| dtype.round_trip(v)).collect();
+            let mut want = vec![0.0f32; m * n];
+            gemm::matmul_bt_into_e(&a, &bq, &mut want, m, k, n);
+            let mut got = vec![0.0f32; m * n];
+            match dtype {
+                StorageDtype::Bf16 => {
+                    let bh: Vec<Bf16> = b.iter().map(|&v| Bf16::from_f32(v)).collect();
+                    gemm::matmul_bt_into_e(&a, &bh, &mut got, m, k, n);
+                }
+                StorageDtype::F16 => {
+                    let bh: Vec<F16> = b.iter().map(|&v| F16::from_f32(v)).collect();
+                    gemm::matmul_bt_into_e(&a, &bh, &mut got, m, k, n);
+                }
+                StorageDtype::F32 => unreachable!(),
+            }
+            prop::assert_prop(got == want, "widening load diverged from pre-widened f32");
+        }
+    });
+}
+
+/// The f32 instantiation of the generic kernel is the PR 1 kernel: it
+/// must still match the scalar reference to numerical-reassociation
+/// tolerance at every shape (parallel path included).
+#[test]
+fn f32_generic_kernel_matches_scalar_reference() {
+    prop::check("f32 generic == scalar", 12, |g| {
+        let &(m, k, n) = g.pick(&MODEL_SHAPES);
+        let a = g.normal_vec(m * k);
+        let b = g.normal_vec(n * k);
+        let want = gemm::scalar::matmul_bt(&a, &b, m, k, n);
+        let mut got = vec![0.0f32; m * n];
+        gemm::matmul_bt_into_e(&a, &b, &mut got, m, k, n);
+        let err = max_rel_err(&got, &want);
+        prop::assert_prop(err <= 1e-4, &format!("f32 rel err {err} > 1e-4"));
+    });
+}
+
+// ---------------------------------------------------------------------
+// 3. Storage dtype through the serving stack.
+// ---------------------------------------------------------------------
+
+fn model() -> Arc<HostUVit> {
+    let info = ModelInfo::synthetic("uvit_prec", 4, 2, 16, 2, 3, 5);
+    Arc::new(HostUVit::synthetic(&info, 2, 515))
+}
+
+fn toma_cfg(steps: usize, storage: StorageDtype) -> EngineConfig {
+    let mut cfg = EngineConfig::new("uvit_prec", "toma", Some(0.5)).with_storage(storage);
+    cfg.steps = steps;
+    cfg
+}
+
+const REGIONS: usize = 4;
+
+/// Batched bf16 serving is bit-identical to the bf16 per-request engine:
+/// fold invariance holds for any storage dtype, so the scheduler
+/// equivalence guarantee carries over to the half paths unchanged.
+#[test]
+fn bf16_cohort_latents_match_bf16_per_request_bitwise() {
+    let master = model();
+    let cfg = toma_cfg(8, StorageDtype::Bf16);
+    let seeds = [5u64, 6, 7];
+    // Per-request reference: HostEngine repacks the master to bf16 itself.
+    let engine = HostEngine::new(master.clone(), cfg.clone(), REGIONS, DEFAULT_TAU).unwrap();
+    let reference: Vec<Vec<f32>> = seeds
+        .iter()
+        .map(|&s| {
+            engine
+                .generate(&GenRequest::new(&format!("p{s}"), s))
+                .expect("reference")
+                .latent
+        })
+        .collect();
+    let m = master.clone();
+    let sched = Scheduler::new(
+        BatchPolicy {
+            max_batch: 3,
+            max_queue_wait_s: 0.25,
+            ..Default::default()
+        },
+        move |c: &EngineConfig| HostBackend::boxed(m.clone(), c.clone(), REGIONS, DEFAULT_TAU),
+    );
+    let reqs: Vec<GenRequest> = seeds
+        .iter()
+        .map(|&s| GenRequest::new(&format!("p{s}"), s))
+        .collect();
+    let results = sched.run_batch_ok(&cfg, reqs).expect("batch ok");
+    for (i, r) in results.iter().enumerate() {
+        assert_eq!(
+            r.latent, reference[i],
+            "bf16 cohort latent diverged from bf16 per-request engine (seed {})",
+            seeds[i]
+        );
+        assert!(r.latent.iter().all(|v| v.is_finite()));
+    }
+    sched.shutdown();
+}
+
+/// The storage dtype changes the latents (it is a real precision change)
+/// and therefore keys into a different lane than the f32 default.
+#[test]
+fn storage_dtypes_key_into_distinct_lanes_with_distinct_latents() {
+    let master = model();
+    let cfg32 = toma_cfg(6, StorageDtype::F32);
+    let cfg16 = toma_cfg(6, StorageDtype::Bf16);
+    assert_ne!(cfg32.key(), cfg16.key());
+    let m = master.clone();
+    let sched = Scheduler::new(
+        BatchPolicy::with_max_batch(2),
+        move |c: &EngineConfig| HostBackend::boxed(m.clone(), c.clone(), REGIONS, DEFAULT_TAU),
+    );
+    let lat32 = sched
+        .run_batch_ok(&cfg32, vec![GenRequest::new("p", 9)])
+        .expect("f32 ok")
+        .remove(0)
+        .latent;
+    let lat16 = sched
+        .run_batch_ok(&cfg16, vec![GenRequest::new("p", 9)])
+        .expect("bf16 ok")
+        .remove(0)
+        .latent;
+    assert_ne!(lat32, lat16, "bf16 storage must actually round the weights");
+    // The bf16 trajectory stays numerically sane (plan selection is
+    // discrete, so a flipped destination can legitimately move the latent
+    // well beyond rounding noise — only finiteness is pinned here; the
+    // continuous-path accuracy pins live in the GEMM tests above).
+    assert!(lat16.iter().all(|v| v.is_finite()));
+    // The f32 lane's engine model is the master itself (no repack): its
+    // latent must be bitwise what the f32 per-request engine computes.
+    let engine = HostEngine::new(master, cfg32.clone(), REGIONS, DEFAULT_TAU).unwrap();
+    let want = engine.generate(&GenRequest::new("p", 9)).unwrap().latent;
+    assert_eq!(lat32, want, "default f32 path must stay bit-exact");
+    sched.shutdown();
+}
