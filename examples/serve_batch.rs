@@ -2,8 +2,11 @@
 //!
 //! Part 1 — micro-batching scheduler (artifact-free): a synthetic host
 //! model serves a prompted batch through step-level cohorts at several
-//! batch sizes, showing the shared-plan amortization (`refresh_all` is
-//! per cohort step, not per request) and p50/p95/p99 latency.
+//! batch sizes and under both batch-formation policies (static window vs.
+//! load-adaptive), showing the shared-plan amortization (`refresh_all` is
+//! per cohort step, not per request) and p50/p95/p99 latency. All queuing
+//! runs through the unified lane front-end, whose lifecycle counters
+//! (`lane_spawned`, `shed_deadline`, ...) land in the rendered metrics.
 //!
 //! Part 2 — pjrt per-request server: the original per-request lanes over
 //! compiled artifacts; skipped with a note when no artifacts / `pjrt`
@@ -16,7 +19,9 @@
 
 use std::sync::Arc;
 
-use toma::coordinator::scheduler::{BatchPolicy, HostBackend, Scheduler, DEFAULT_TAU};
+use toma::coordinator::scheduler::{
+    AdaptivePolicy, BatchPolicy, HostBackend, LanePolicy, Scheduler, DEFAULT_TAU,
+};
 use toma::coordinator::{EngineConfig, GenRequest, Server};
 use toma::model::HostUVit;
 use toma::report::Table;
@@ -36,16 +41,26 @@ fn scheduler_demo(n: usize, steps: usize, ratio: f64) -> Result<()> {
         "micro-batch scheduler (synthetic host model): {n} requests, {steps} steps"
     ))
     .headers(&[
-        "Batch", "Wall (s)", "Img/s", "p50 svc (s)", "p99 svc (s)", "RefreshAll/req",
+        "Policy", "Batch", "Wall (s)", "Img/s", "p50 svc (s)", "p99 svc (s)",
+        "RefreshAll/req",
     ]);
-    for max_batch in [1usize, 4] {
+    let base = |max_batch: usize| BatchPolicy {
+        max_batch,
+        max_queue_wait_s: 0.1,
+        ..Default::default()
+    };
+    let runs: Vec<(&str, usize, LanePolicy)> = vec![
+        ("static", 1, base(1).into()),
+        ("static", 4, base(4).into()),
+        // Adaptive derives window/cap from observed arrivals against a
+        // generous p99 target — same bit-identical latents, same cohorts
+        // for this closed-loop batch.
+        ("adaptive", 4, AdaptivePolicy::new(base(4), 5.0).into()),
+    ];
+    for (policy_name, max_batch, policy) in runs {
         let m = model.clone();
         let sched = Scheduler::new(
-            BatchPolicy {
-                max_batch,
-                max_queue_wait_s: 0.1,
-                ..Default::default()
-            },
+            policy,
             move |c: &EngineConfig| HostBackend::boxed(m.clone(), c.clone(), 4, DEFAULT_TAU),
         );
         let mut cfg = EngineConfig::new("uvit_demo", "toma", Some(ratio));
@@ -64,6 +79,7 @@ fn scheduler_demo(n: usize, steps: usize, ratio: f64) -> Result<()> {
             .latency_summary("service_time")
             .expect("latency recorded");
         table.row(vec![
+            policy_name.to_string(),
             format!("{max_batch}"),
             format!("{wall:.2}"),
             format!("{:.3}", n as f64 / wall),

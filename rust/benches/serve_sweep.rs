@@ -1,18 +1,28 @@
 //! serve_sweep — micro-batching scheduler latency/throughput across cohort
-//! batch sizes and arrival rates (the batched-serving acceptance bench).
+//! batch sizes, arrival rates and batch-formation policies (the
+//! batched-serving acceptance bench).
 //!
 //! Runs artifact-free on the synthetic host model, so it works on a bare
 //! toolchain. For each cohort size it reports wall clock, images/s,
 //! tokens/s and the p50/p95/p99 service latency, plus the plan-cache
 //! counters that show the Sec. 4.3.2 amortization: `refresh_all` is
 //! counted once per cohort step, so the per-request selection/weights work
-//! must *strictly decrease* as the batch size grows — asserted below.
+//! must *strictly decrease* as the batch size grows — asserted below for
+//! **both** the static `BatchPolicy` and the load-adaptive
+//! `AdaptivePolicy` (the PR 4 autoscaling acceptance: adapting the window
+//! must not cost the cohort amortization).
+//!
+//! The Poisson-burst section times open-loop serving at a bursty arrival
+//! rate under static vs. adaptive formation; both cases land in
+//! `BENCH_serve_sweep.json` for the CI bench-diff trend gate.
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use toma::bench::Runner;
-use toma::coordinator::scheduler::{BatchPolicy, HostBackend, Scheduler, DEFAULT_TAU};
+use toma::coordinator::scheduler::{
+    AdaptivePolicy, BatchPolicy, HostBackend, LanePolicy, Scheduler, DEFAULT_TAU,
+};
 use toma::coordinator::{EngineConfig, GenRequest};
 use toma::model::HostUVit;
 use toma::report::Table;
@@ -39,16 +49,49 @@ fn cfg() -> EngineConfig {
     cfg
 }
 
-fn scheduler(model: &Arc<HostUVit>, max_batch: usize, window_s: f64) -> Scheduler {
+fn scheduler(model: &Arc<HostUVit>, policy: impl Into<LanePolicy>) -> Scheduler {
     let model = model.clone();
-    let policy = BatchPolicy {
-        max_batch,
-        max_queue_wait_s: window_s,
-        ..Default::default()
-    };
     Scheduler::new(policy, move |c: &EngineConfig| {
         HostBackend::boxed(model.clone(), c.clone(), REGIONS, DEFAULT_TAU)
     })
+}
+
+/// Closed-loop base limits: a generous 2 s formation *timeout* — it
+/// breaks as soon as the cohort is full, so it only matters if the
+/// submitting thread stalls mid-batch (keeps the strict-decrease
+/// assertions below from flaking on a loaded CI runner).
+fn closed_base(max_batch: usize) -> BatchPolicy {
+    BatchPolicy {
+        max_batch,
+        max_queue_wait_s: 2.0,
+        ..Default::default()
+    }
+}
+
+/// The closed-loop policy under test: static, or adaptive against a
+/// generous p99 target (its formation budget still dwarfs an in-process
+/// submit loop, so cohorts form identically when arrivals are instant).
+fn closed_policy(max_batch: usize, adaptive: bool) -> LanePolicy {
+    if adaptive {
+        AdaptivePolicy::new(closed_base(max_batch), 8.0).into()
+    } else {
+        closed_base(max_batch).into()
+    }
+}
+
+/// Open-loop (Poisson burst) policy: tight static window vs. adaptive
+/// deriving the window from the observed burst.
+fn burst_policy(adaptive: bool) -> LanePolicy {
+    let base = BatchPolicy {
+        max_batch: 8,
+        max_queue_wait_s: 0.02,
+        ..Default::default()
+    };
+    if adaptive {
+        AdaptivePolicy::new(base, 0.5).into()
+    } else {
+        base.into()
+    }
 }
 
 fn requests(n: usize, rate: f64) -> Vec<(GenRequest, f64)> {
@@ -60,12 +103,8 @@ fn requests(n: usize, rate: f64) -> Vec<(GenRequest, f64)> {
 }
 
 /// Closed-loop run; returns (wall_s, scheduler with populated metrics).
-/// The formation window is a generous 2 s *timeout* — it breaks as soon
-/// as the cohort is full, so it only matters if the submitting thread
-/// stalls mid-batch (keeps the strict-decrease assertion below from
-/// flaking on a loaded CI runner).
-fn run_closed(model: &Arc<HostUVit>, max_batch: usize) -> (f64, Scheduler) {
-    let s = scheduler(model, max_batch, 2.0);
+fn run_closed(model: &Arc<HostUVit>, policy: LanePolicy) -> (f64, Scheduler) {
+    let s = scheduler(model, policy);
     let reqs: Vec<GenRequest> = requests(REQUESTS, 0.0).into_iter().map(|(r, _)| r).collect();
     let t0 = Instant::now();
     let comps = s.run_batch(&cfg(), reqs);
@@ -75,29 +114,40 @@ fn run_closed(model: &Arc<HostUVit>, max_batch: usize) -> (f64, Scheduler) {
     (wall, s)
 }
 
-fn main() {
-    let mut runner = Runner::from_args();
-    let model = model();
-    let batch_sizes = [1usize, 2, 4, 8];
-
-    // Timed closed-loop sweep over cohort sizes.
-    for &bs in &batch_sizes {
-        runner.bench(&format!("serve_closed_bs{bs}"), || {
-            let _ = run_closed(&model, bs);
-        });
+/// Open-loop run honoring Poisson arrival offsets; all requests awaited.
+fn run_open(model: &Arc<HostUVit>, policy: LanePolicy, rate: f64) -> Scheduler {
+    let s = scheduler(model, policy);
+    let stream = requests(REQUESTS, rate);
+    let t_start = Instant::now();
+    let mut rxs = vec![];
+    for (req, arrival_s) in stream {
+        let dt = arrival_s - t_start.elapsed().as_secs_f64();
+        if dt > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(dt));
+        }
+        rxs.push(s.submit(&cfg(), req));
     }
+    for rx in rxs {
+        let _ = rx.recv().expect("completion");
+    }
+    s
+}
 
-    // Instrumented pass: plan-cache amortization + latency/throughput.
+/// Instrumented closed-loop sweep over cohort sizes for one policy kind;
+/// returns refresh_all/request per batch size and asserts the
+/// amortization (non-increasing adjacency, strict end-to-end decrease).
+fn amortization_sweep(model: &Arc<HostUVit>, batch_sizes: &[usize], adaptive: bool) -> Vec<f64> {
+    let label = if adaptive { "adaptive" } else { "static" };
     let mut table = Table::new(&format!(
-        "serve_sweep: {REQUESTS} requests, {STEPS} steps, closed loop"
+        "serve_sweep [{label}]: {REQUESTS} requests, {STEPS} steps, closed loop"
     ))
     .headers(&[
         "Batch", "Wall (s)", "Img/s", "Tok/s", "p50 (s)", "p95 (s)", "p99 (s)",
         "RefreshAll/req", "Reuse/step",
     ]);
     let mut refresh_per_req = vec![];
-    for &bs in &batch_sizes {
-        let (wall, s) = run_closed(&model, bs);
+    for &bs in batch_sizes {
+        let (wall, s) = run_closed(model, closed_policy(bs, adaptive));
         let refresh_all = s.metrics.counter("cohort_refresh_all");
         let cohort_steps = s.metrics.counter("cohort_steps").max(1);
         let reuses = s.metrics.counter("cohort_reuses");
@@ -122,39 +172,93 @@ fn main() {
 
     // Acceptance: shared PlanStats.refresh_all counted once per cohort
     // step means per-request selection work decreases as cohort size
-    // grows. Adjacent sizes may tie if a cohort splits under extreme
-    // scheduler stall (CI noise), so adjacency is checked non-strict and
-    // the end-to-end decrease strictly.
+    // grows — under both formation policies. Adjacent sizes may tie if a
+    // cohort splits under extreme scheduler stall (CI noise), so
+    // adjacency is checked non-strict and the end-to-end decrease
+    // strictly.
     for w in refresh_per_req.windows(2) {
         assert!(
             w[1] <= w[0],
-            "selection work per request must not increase with batch size: {refresh_per_req:?}"
+            "[{label}] selection work per request must not increase with \
+             batch size: {refresh_per_req:?}"
         );
     }
     assert!(
         refresh_per_req.last().unwrap() < refresh_per_req.first().unwrap(),
-        "selection work per request must decrease from bs=1 to bs=8: {refresh_per_req:?}"
+        "[{label}] selection work per request must decrease from bs=1 to \
+         bs=8: {refresh_per_req:?}"
     );
-    println!("amortization confirmed: refresh_all/request {refresh_per_req:?}");
+    println!("[{label}] amortization confirmed: refresh_all/request {refresh_per_req:?}");
+    refresh_per_req
+}
+
+fn main() {
+    let mut runner = Runner::from_args();
+    let model = model();
+    let batch_sizes = [1usize, 2, 4, 8];
+
+    // Timed closed-loop sweep over cohort sizes (static policy).
+    for &bs in &batch_sizes {
+        runner.bench(&format!("serve_closed_bs{bs}"), || {
+            let _ = run_closed(&model, closed_policy(bs, false));
+        });
+    }
+
+    // Instrumented amortization pass for both policy kinds.
+    amortization_sweep(&model, &batch_sizes, false);
+    amortization_sweep(&model, &batch_sizes, true);
+
+    // Poisson-burst section: open-loop serving at a bursty arrival rate,
+    // static window vs. adaptive formation. Both are timed into
+    // BENCH_serve_sweep.json for the CI bench-diff trend gate; the table
+    // reuses the final timed run's metrics instead of serving the stream
+    // again (a dedicated run only happens when `--filter` skipped the
+    // bench case).
+    const BURST_RATE: f64 = 64.0;
+    let mut burst = Table::new(&format!(
+        "serve_sweep: poisson burst, rate {BURST_RATE:.0} req/s, batch<=8"
+    ))
+    .headers(&[
+        "Policy", "p50 e2e (s)", "p99 e2e (s)", "RefreshAll/req", "Joins", "Shed",
+    ]);
+    for (name, adaptive) in [("serve_burst_static", false), ("serve_burst_adaptive", true)] {
+        // Schedulers are parked (not shut down) inside the timed closure
+        // so lane-thread joins never contaminate the measured serve time;
+        // an idle parked lane is one thread blocked on recv, and the
+        // runner caps iterations (~5 full / ~3 quick), so the pile stays
+        // tiny until the untimed drain below.
+        let mut runs: Vec<Scheduler> = vec![];
+        runner.bench(name, || {
+            runs.push(run_open(&model, burst_policy(adaptive), BURST_RATE));
+        });
+        let s = runs
+            .pop()
+            .unwrap_or_else(|| run_open(&model, burst_policy(adaptive), BURST_RATE));
+        for prev in runs.drain(..) {
+            prev.shutdown();
+        }
+        let e2e = s.metrics.latency_summary("e2e_time");
+        let (p50, p99) = e2e.map(|l| (l.p50_s, l.p99_s)).unwrap_or((0.0, 0.0));
+        burst.row(vec![
+            if adaptive { "adaptive" } else { "static" }.to_string(),
+            format!("{p50:.4}"),
+            format!("{p99:.4}"),
+            format!(
+                "{:.3}",
+                s.metrics.counter("cohort_refresh_all") as f64 / REQUESTS as f64
+            ),
+            format!("{}", s.metrics.counter("cohort_joins")),
+            format!("{}", s.metrics.counter("shed_deadline")),
+        ]);
+        s.shutdown();
+    }
+    println!("\n{}", burst.render());
 
     // Open-loop arrival sweep (Poisson): end-to-end latency under load.
     let mut open = Table::new("serve_sweep: open loop, batch<=8")
         .headers(&["Rate (req/s)", "p50 e2e (s)", "p99 e2e (s)", "Shed"]);
     for rate in [16.0f64, 64.0] {
-        let s = scheduler(&model, 8, 0.02);
-        let stream = requests(REQUESTS, rate);
-        let t_start = Instant::now();
-        let mut rxs = vec![];
-        for (req, arrival_s) in stream {
-            let dt = arrival_s - t_start.elapsed().as_secs_f64();
-            if dt > 0.0 {
-                std::thread::sleep(std::time::Duration::from_secs_f64(dt));
-            }
-            rxs.push(s.submit(&cfg(), req));
-        }
-        for rx in rxs {
-            let _ = rx.recv().expect("completion");
-        }
+        let s = run_open(&model, burst_policy(false), rate);
         let e2e = s.metrics.latency_summary("e2e_time");
         let (p50, p99) = e2e.map(|l| (l.p50_s, l.p99_s)).unwrap_or((0.0, 0.0));
         open.row(vec![

@@ -17,7 +17,12 @@ use toma::report::{fmt_delta, Table};
 use toma::runtime::Runtime;
 
 fn cost(variant: Variant, ratio: f64) -> f64 {
-    toma::gpucost::calibrate::calibrated_sec_per_img(PaperModel::SdxlBase, variant, ratio, GpuModel::Rtx6000)
+    toma::gpucost::calibrate::calibrated_sec_per_img(
+        PaperModel::SdxlBase,
+        variant,
+        ratio,
+        GpuModel::Rtx6000,
+    )
 }
 
 fn main() {

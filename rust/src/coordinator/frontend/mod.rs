@@ -1,0 +1,586 @@
+//! Unified bounded-lane serving front-end — the one submit/respawn
+//! substrate under both [`Server`](crate::coordinator::Server) and
+//! [`Scheduler`](crate::coordinator::Scheduler).
+//!
+//! Before PR 4 the two serving front-ends carried twin copies of the same
+//! machinery (lane map keyed by [`EngineConfig::key`], bounded
+//! sync-channel queues, blocking `submit` / fail-fast `try_submit`
+//! backpressure, `run_batch`, and the generation-checked dead-lane
+//! eviction from PR 3) — and the eviction-race fix had to be written
+//! twice. [`LaneFrontEnd`] owns all of it once, generically; what remains
+//! per subsystem is only the [`LaneJob`]: how a lane's worker thread(s)
+//! drain their queue (one engine per worker vs. one cohort stepping
+//! continuously). Both instantiations therefore share the *stricter* of
+//! the two semantics: the `Server` inherits the `Scheduler`'s deadline
+//! shedding (via [`Job::shed_if_overdue`], the single shedding
+//! implementation), and both share one eviction implementation plus the
+//! lane-lifecycle counters below.
+//!
+//! Lifecycle counters exported into [`Metrics`] (rendered by
+//! `toma-serve serve` / [`Metrics::render`]):
+//!
+//! * `lane_spawned` — every lane creation (first spawn and respawn);
+//! * `lane_respawned` — spawns into a key that had a lane before
+//!   (dead-lane recovery);
+//! * `lane_evicted` — generation-checked evictions that actually removed
+//!   a lane (stale no-ops are not counted);
+//! * `shed_deadline` — jobs rejected for exceeding their admission
+//!   deadline in queue;
+//! * `rejected_backpressure` — fail-fast `try_submit` rejections at the
+//!   queue bound.
+//!
+//! This seam is also where a future PJRT cohort backend plugs in: a
+//! `LaneJob` whose workers drive compiled variable-batch step artifacts
+//! gets the whole lane lifecycle for free (see ROADMAP "PJRT batched
+//! cohort backend").
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::anyhow;
+use crate::util::error::Result;
+
+use super::metrics::Metrics;
+use super::request::{EngineConfig, GenRequest, GenResult};
+
+/// A completed request with timing info.
+pub struct Completion {
+    pub request: GenRequest,
+    pub result: Result<GenResult>,
+    pub queued_s: f64,
+    pub service_s: f64,
+}
+
+/// One queued request: the submission plus its completion channel.
+/// Workers receive these from the lane queue and answer on `done`.
+pub struct Job {
+    pub request: GenRequest,
+    pub enqueued: Instant,
+    pub done: Sender<Completion>,
+}
+
+impl Job {
+    /// Seconds this job has spent queued since submission.
+    pub fn queued_s(&self) -> f64 {
+        self.enqueued.elapsed().as_secs_f64()
+    }
+
+    /// Fail the job with an error completion (counted as `requests_err`).
+    pub fn fail(self, metrics: &Metrics, msg: &str) {
+        metrics.inc("requests_err");
+        let queued_s = self.queued_s();
+        let _ = self.done.send(Completion {
+            request: self.request,
+            result: Err(anyhow!("{msg}")),
+            queued_s,
+            service_s: 0.0,
+        });
+    }
+
+    /// The one deadline-shedding implementation (previously
+    /// Scheduler-only, now shared by every lane): a job still queued past
+    /// its admission deadline is rejected with an error completion
+    /// instead of served hopelessly late. Returns the job back when it is
+    /// still admissible; `None` disables shedding.
+    pub fn shed_if_overdue(self, deadline_s: Option<f64>, metrics: &Metrics) -> Option<Job> {
+        let queued_s = self.queued_s();
+        match deadline_s {
+            Some(dl) if queued_s > dl => {
+                metrics.inc("shed_deadline");
+                metrics.inc("requests_shed");
+                let _ = self.done.send(Completion {
+                    request: self.request,
+                    result: Err(anyhow!(
+                        "deadline exceeded in queue ({queued_s:.3}s > {dl:.3}s)"
+                    )),
+                    queued_s,
+                    service_s: 0.0,
+                });
+                None
+            }
+            _ => Some(self),
+        }
+    }
+}
+
+/// The per-lane worker behavior a [`LaneFrontEnd`] instantiates: the
+/// per-request engine job ([`Server`](crate::coordinator::Server)) or the
+/// cohort-step job ([`Scheduler`](crate::coordinator::Scheduler)).
+/// Everything else — lane map, bounded queues, backpressure, the
+/// generation-checked evict/respawn lifecycle, deadline shedding,
+/// lifecycle counters — lives in the shared front-end and cannot drift
+/// between instantiations.
+pub trait LaneJob: Send + Sync + 'static {
+    /// Subsystem name used in error messages ("server" / "scheduler").
+    fn kind(&self) -> &'static str;
+
+    /// Per-lane bounded queue depth — the backpressure watermark:
+    /// [`LaneFrontEnd::submit`] blocks at the bound,
+    /// [`LaneFrontEnd::try_submit`] fails fast.
+    fn queue_depth(&self) -> usize;
+
+    /// Spawn the worker thread(s) that drain `rx` until it disconnects.
+    /// Workers shed overdue jobs with [`Job::shed_if_overdue`] — the one
+    /// deadline-shedding implementation — before serving.
+    /// Workers own whatever heavy state they need (a PJRT client, a
+    /// cohort backend); the front-end only joins the handles on shutdown.
+    fn spawn_workers(
+        &self,
+        cfg: &EngineConfig,
+        rx: Receiver<Job>,
+        metrics: Arc<Metrics>,
+    ) -> Vec<JoinHandle<()>>;
+}
+
+/// One worker lane: a bounded job queue drained by the job's threads.
+struct Lane {
+    tx: SyncSender<Job>,
+    handles: Vec<JoinHandle<()>>,
+    /// Identity of this lane incarnation. Dead-lane eviction is
+    /// generation-checked: a submitter that observed generation `g` fail
+    /// may only evict generation `g` — never a lane respawned (g+1) by a
+    /// concurrent submitter in the window between the failed send and the
+    /// eviction (the PR 3 "stale sender evicts healthy lane" race, fixed
+    /// once here for every instantiation).
+    generation: u64,
+}
+
+/// The lane map plus per-key spawn history (for the respawn counter).
+struct LaneTable {
+    lanes: BTreeMap<String, Lane>,
+    /// Keys that ever had a lane — a spawn into such a key is a respawn.
+    seen: BTreeSet<String>,
+}
+
+/// Generic bounded-lane front-end: requests with the same
+/// [`EngineConfig::key`] share a lane; distinct keys get their own.
+pub struct LaneFrontEnd<J: LaneJob> {
+    job: J,
+    pub metrics: Arc<Metrics>,
+    table: Mutex<LaneTable>,
+    next_generation: AtomicU64,
+}
+
+impl<J: LaneJob> LaneFrontEnd<J> {
+    pub fn new(job: J) -> LaneFrontEnd<J> {
+        LaneFrontEnd {
+            job,
+            metrics: Arc::new(Metrics::new()),
+            table: Mutex::new(LaneTable {
+                lanes: BTreeMap::new(),
+                seen: BTreeSet::new(),
+            }),
+            next_generation: AtomicU64::new(1),
+        }
+    }
+
+    /// The job this front-end instantiates its lanes with.
+    pub fn job(&self) -> &J {
+        &self.job
+    }
+
+    /// Mutable job access for builder-style configuration; applies to
+    /// lanes spawned after the call.
+    pub(crate) fn job_mut(&mut self) -> &mut J {
+        &mut self.job
+    }
+
+    fn spawn_lane(&self, cfg: &EngineConfig) -> Lane {
+        let (tx, rx) = sync_channel::<Job>(self.job.queue_depth().max(1));
+        let handles = self.job.spawn_workers(cfg, rx, self.metrics.clone());
+        let generation = self.next_generation.fetch_add(1, Ordering::Relaxed);
+        Lane {
+            tx,
+            handles,
+            generation,
+        }
+    }
+
+    /// The lane's sender plus the generation it belongs to — the identity
+    /// a failed submit must present to [`LaneFrontEnd::evict_lane`].
+    pub(crate) fn lane_tx(&self, cfg: &EngineConfig) -> (SyncSender<Job>, u64) {
+        let key = cfg.key();
+        let mut table = self.table.lock().unwrap();
+        if !table.lanes.contains_key(&key) {
+            let lane = self.spawn_lane(cfg);
+            self.metrics.inc("lane_spawned");
+            if !table.seen.insert(key.clone()) {
+                self.metrics.inc("lane_respawned");
+            }
+            table.lanes.insert(key.clone(), lane);
+        }
+        let lane = table.lanes.get(&key).expect("just ensured");
+        (lane.tx.clone(), lane.generation)
+    }
+
+    /// Remove the lane for `key` only if it is still the `generation` the
+    /// caller observed failing. A submitter racing a respawn would
+    /// otherwise evict the *fresh, healthy* lane another submitter just
+    /// spawned — generation mismatch makes the stale eviction a no-op.
+    /// Returns whether a lane was evicted (and counts `lane_evicted`).
+    pub(crate) fn evict_lane(&self, key: &str, generation: u64) -> bool {
+        let mut table = self.table.lock().unwrap();
+        if table.lanes.get(key).map(|l| l.generation) == Some(generation) {
+            table.lanes.remove(key);
+            self.metrics.inc("lane_evicted");
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Is there currently a live lane for `key`? (Test introspection.)
+    #[cfg(test)]
+    pub(crate) fn has_lane(&self, key: &str) -> bool {
+        self.table.lock().unwrap().lanes.contains_key(key)
+    }
+
+    /// Submit a request; the completion arrives on the returned channel.
+    /// Blocks when the lane queue is at its bound (backpressure). A dead
+    /// lane (panicked workers) fails the request with an error completion
+    /// and is respawned on the next submit — one bad request must not
+    /// poison the serving process.
+    pub fn submit(&self, cfg: &EngineConfig, request: GenRequest) -> Receiver<Completion> {
+        let (tx, generation) = self.lane_tx(cfg);
+        let (done_tx, done_rx) = channel();
+        self.metrics.inc("requests_submitted");
+        let job = Job {
+            request,
+            enqueued: Instant::now(),
+            done: done_tx,
+        };
+        if let Err(std::sync::mpsc::SendError(job)) = tx.send(job) {
+            self.metrics.inc("requests_err");
+            self.evict_lane(&cfg.key(), generation);
+            let _ = job.done.send(Completion {
+                request: job.request,
+                result: Err(anyhow!("{} lane died; resubmit", self.job.kind())),
+                queued_s: 0.0,
+                service_s: 0.0,
+            });
+        }
+        done_rx
+    }
+
+    /// Non-blocking submit: fails fast when the lane queue is at its
+    /// bound, so upstream load balancers see backpressure instead of
+    /// silent queueing.
+    pub fn try_submit(
+        &self,
+        cfg: &EngineConfig,
+        request: GenRequest,
+    ) -> Result<Receiver<Completion>> {
+        let (tx, generation) = self.lane_tx(cfg);
+        let (done_tx, done_rx) = channel();
+        match tx.try_send(Job {
+            request,
+            enqueued: Instant::now(),
+            done: done_tx,
+        }) {
+            Ok(()) => {
+                self.metrics.inc("requests_submitted");
+                Ok(done_rx)
+            }
+            Err(TrySendError::Full(_)) => {
+                self.metrics.inc("requests_rejected");
+                self.metrics.inc("rejected_backpressure");
+                Err(anyhow!(
+                    "lane queue full ({} deep): backpressure",
+                    self.job.queue_depth()
+                ))
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                // Dead lane: drop *this incarnation* so the next submit
+                // respawns fresh (generation-checked: never a healthy
+                // respawn that beat us to it).
+                self.evict_lane(&cfg.key(), generation);
+                Err(anyhow!("{} lane died; resubmit", self.job.kind()))
+            }
+        }
+    }
+
+    /// Run a batch to completion (closed loop), preserving submission
+    /// order in the result. A lane dying mid-request yields error
+    /// completions for the affected requests rather than a panic.
+    pub fn run_batch(&self, cfg: &EngineConfig, requests: Vec<GenRequest>) -> Vec<Completion> {
+        let pairs: Vec<(GenRequest, Receiver<Completion>)> = requests
+            .into_iter()
+            .map(|r| {
+                let rx = self.submit(cfg, r.clone());
+                (r, rx)
+            })
+            .collect();
+        pairs
+            .into_iter()
+            .map(|(request, rx)| {
+                rx.recv().unwrap_or_else(|_| Completion {
+                    request,
+                    result: Err(anyhow!("{} lane died mid-request", self.job.kind())),
+                    queued_s: 0.0,
+                    service_s: 0.0,
+                })
+            })
+            .collect()
+    }
+
+    /// Convenience: run a batch and return the successful results.
+    pub fn run_batch_ok(
+        &self,
+        cfg: &EngineConfig,
+        requests: Vec<GenRequest>,
+    ) -> Result<Vec<GenResult>> {
+        self.run_batch(cfg, requests)
+            .into_iter()
+            .map(|c| c.result)
+            .collect()
+    }
+
+    /// Drop all lanes, joining worker threads. Idempotent.
+    pub fn shutdown(&self) {
+        let drained: Vec<Lane> = {
+            let mut table = self.table.lock().unwrap();
+            std::mem::take(&mut table.lanes).into_values().collect()
+        };
+        for lane in drained {
+            drop(lane.tx);
+            for h in lane.handles {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+impl<J: LaneJob> Drop for LaneFrontEnd<J> {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Shared lane-lifecycle test scenarios, run against *both* `LaneJob`
+/// instantiations (the `Server`'s engine job and the `Scheduler`'s cohort
+/// job) from their respective test modules — one harness, no copy-pasted
+/// twins.
+#[cfg(test)]
+pub(crate) mod harness {
+    use super::*;
+
+    /// Queue-full backpressure: with the lane wedged (its init gate held
+    /// closed by the caller's factory) and `queue_depth` 1, the first
+    /// submit fills the channel and the second `try_submit` must fail
+    /// fast. `release` opens the gate so the queued job drains before
+    /// shutdown.
+    pub(crate) fn assert_try_submit_backpressure<J: LaneJob>(
+        front: &LaneFrontEnd<J>,
+        cfg: &EngineConfig,
+        release: &dyn Fn(),
+    ) {
+        let rx1 = front.submit(cfg, GenRequest::new("a", 1));
+        let err = front
+            .try_submit(cfg, GenRequest::new("b", 2))
+            .err()
+            .expect("second submit must hit backpressure");
+        assert!(err.to_string().contains("backpressure"), "{err}");
+        assert_eq!(front.metrics.counter("requests_rejected"), 1);
+        assert_eq!(front.metrics.counter("rejected_backpressure"), 1);
+        release();
+        let c = rx1.recv().expect("completion");
+        assert!(c.result.is_err(), "gated lane must fail its queued job");
+        front.shutdown();
+    }
+
+    /// Forced lane death then resubmit: the first lane incarnation dies
+    /// (injected worker panic in the caller's factory); resubmitting must
+    /// reach a healthy respawned lane within a few attempts, the dead
+    /// generation must not be able to evict the respawn, and the
+    /// lifecycle counters record the evict + respawn. `served` decides
+    /// whether a completion proves a *live* lane handled the job (`is_ok`
+    /// for a real backend; a recognizable init error for an engine
+    /// without artifacts).
+    pub(crate) fn assert_forced_death_respawns<J: LaneJob>(
+        front: &LaneFrontEnd<J>,
+        cfg: &EngineConfig,
+        served: &dyn Fn(&Completion) -> bool,
+    ) {
+        // Depending on timing the dying lane either drops the completion
+        // sender (recv errors) or the submit itself observes the dead
+        // channel (error completion). Either way, resubmitting must reach
+        // a healthy respawned lane within a few attempts.
+        let mut ok = false;
+        for attempt in 0..4u64 {
+            let rx = front.submit(cfg, GenRequest::new("retry", attempt));
+            if let Ok(c) = rx.recv() {
+                if served(&c) {
+                    ok = true;
+                    break;
+                }
+            }
+        }
+        assert!(ok, "resubmit after forced lane death must be served");
+        // The healthy lane is a fresh incarnation; the dead lane's
+        // generation is permanently stale and cannot evict it.
+        let (_tx, fresh) = front.lane_tx(cfg);
+        assert!(fresh > 1, "respawn must advance the generation");
+        assert!(!front.evict_lane(&cfg.key(), fresh - 1));
+        assert!(
+            front.has_lane(&cfg.key()),
+            "stale eviction must not remove the healthy lane"
+        );
+        // The current generation is the only one that may evict.
+        assert!(front.evict_lane(&cfg.key(), fresh));
+        // Lifecycle accounting: the dead lane was evicted once on the
+        // resubmit path and once explicitly just above; the healthy lane
+        // was a respawn into a previously-seen key.
+        assert!(front.metrics.counter("lane_evicted") >= 2);
+        assert!(front.metrics.counter("lane_respawned") >= 1);
+        assert!(front.metrics.counter("lane_spawned") >= 2);
+        front.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::GenStats;
+
+    /// Minimal job: one worker per lane that sheds overdue jobs and
+    /// answers the rest with an empty-latent success — enough to exercise
+    /// every front-end mechanism without a model.
+    struct EchoJob {
+        queue_depth: usize,
+        deadline_s: Option<f64>,
+    }
+
+    impl LaneJob for EchoJob {
+        fn kind(&self) -> &'static str {
+            "echo"
+        }
+
+        fn queue_depth(&self) -> usize {
+            self.queue_depth
+        }
+
+        fn spawn_workers(
+            &self,
+            _cfg: &EngineConfig,
+            rx: Receiver<Job>,
+            metrics: Arc<Metrics>,
+        ) -> Vec<JoinHandle<()>> {
+            let deadline_s = self.deadline_s;
+            vec![std::thread::Builder::new()
+                .name("toma-echo".to_string())
+                .spawn(move || {
+                    while let Ok(job) = rx.recv() {
+                        let dl = job.request.deadline_s.or(deadline_s);
+                        let Some(job) = job.shed_if_overdue(dl, &metrics) else {
+                            continue;
+                        };
+                        metrics.inc("requests_ok");
+                        let queued_s = job.queued_s();
+                        let _ = job.done.send(Completion {
+                            request: job.request,
+                            result: Ok(GenResult {
+                                latent: vec![],
+                                stats: GenStats::default(),
+                                dest_trace: vec![],
+                            }),
+                            queued_s,
+                            service_s: 0.0,
+                        });
+                    }
+                })
+                .expect("spawn echo worker")]
+        }
+    }
+
+    fn front(queue_depth: usize) -> LaneFrontEnd<EchoJob> {
+        LaneFrontEnd::new(EchoJob {
+            queue_depth,
+            deadline_s: None,
+        })
+    }
+
+    fn cfg() -> EngineConfig {
+        EngineConfig::new("uvit_front", "baseline", None)
+    }
+
+    #[test]
+    fn stale_generation_cannot_evict_fresh_lane() {
+        let fe = front(8);
+        let c = cfg();
+        let (_tx, gen1) = fe.lane_tx(&c);
+        // A submitter that observed an *older* incarnation fail must not
+        // evict the current lane.
+        assert!(!fe.evict_lane(&c.key(), gen1 + 1));
+        assert!(!fe.evict_lane(&c.key(), gen1.wrapping_sub(1)));
+        assert!(fe.has_lane(&c.key()), "stale eviction must be a no-op");
+        assert_eq!(fe.metrics.counter("lane_evicted"), 0);
+        // The matching generation does evict.
+        assert!(fe.evict_lane(&c.key(), gen1));
+        assert!(!fe.has_lane(&c.key()));
+        assert_eq!(fe.metrics.counter("lane_evicted"), 1);
+        // A respawn gets a fresh identity, so the old generation is now
+        // permanently stale — and the respawn is counted.
+        let (_tx, gen2) = fe.lane_tx(&c);
+        assert!(gen2 > gen1);
+        assert!(!fe.evict_lane(&c.key(), gen1));
+        assert_eq!(fe.metrics.counter("lane_spawned"), 2);
+        assert_eq!(fe.metrics.counter("lane_respawned"), 1);
+        fe.shutdown();
+    }
+
+    #[test]
+    fn distinct_lanes_get_distinct_generations() {
+        let fe = front(8);
+        let a = cfg();
+        let mut b = cfg();
+        b.steps = 7; // different key
+        let (_ta, ga) = fe.lane_tx(&a);
+        let (_tb, gb) = fe.lane_tx(&b);
+        assert_ne!(ga, gb);
+        // Re-fetching an existing lane reports the same generation and
+        // does not spawn again.
+        assert_eq!(fe.lane_tx(&a).1, ga);
+        assert_eq!(fe.metrics.counter("lane_spawned"), 2);
+        assert_eq!(fe.metrics.counter("lane_respawned"), 0);
+        fe.shutdown();
+    }
+
+    #[test]
+    fn run_batch_preserves_order_and_completes() {
+        let fe = front(8);
+        let reqs: Vec<GenRequest> = (0..5).map(|i| GenRequest::new(&format!("p{i}"), i)).collect();
+        let comps = fe.run_batch(&cfg(), reqs);
+        assert_eq!(comps.len(), 5);
+        for (i, c) in comps.iter().enumerate() {
+            assert_eq!(c.request.prompt, format!("p{i}"), "submission order kept");
+            assert!(c.result.is_ok());
+        }
+        assert_eq!(fe.metrics.counter("requests_submitted"), 5);
+        assert_eq!(fe.metrics.counter("requests_ok"), 5);
+        fe.shutdown();
+    }
+
+    #[test]
+    fn zero_deadline_jobs_are_shed_with_counters() {
+        let fe = front(8);
+        let rx = fe.submit(&cfg(), GenRequest::new("late", 1).with_deadline(0.0));
+        let c = rx.recv().expect("completion");
+        let err = c.result.err().expect("shed").to_string();
+        assert!(err.contains("deadline"), "unexpected error: {err}");
+        assert_eq!(fe.metrics.counter("shed_deadline"), 1);
+        assert_eq!(fe.metrics.counter("requests_shed"), 1);
+        fe.shutdown();
+    }
+
+    #[test]
+    fn shutdown_is_idempotent() {
+        let fe = front(2);
+        let _ = fe.run_batch(&cfg(), vec![GenRequest::new("x", 0)]);
+        fe.shutdown();
+        fe.shutdown(); // second call must be a no-op (Drop calls it again)
+    }
+}

@@ -8,6 +8,14 @@
 //! [`Metrics::record_plan_stats`], which the scheduler lane calls with a
 //! one-step delta after every cohort step (so `cohort_refresh_all` counts
 //! refreshes per cohort step, not per request — the amortization metric).
+//!
+//! The unified lane front-end (`coordinator::frontend`) exports its
+//! lifecycle counters here — `lane_spawned`, `lane_respawned`,
+//! `lane_evicted`, `shed_deadline`, `rejected_backpressure` — so
+//! `toma-serve serve` and [`Metrics::render`] show lane health (respawn
+//! churn, shedding, backpressure) next to the request counters. The
+//! adaptive batch policy reads the `e2e_time` histogram's p99 from here
+//! as its overload-feedback signal ([`Metrics::quantile_s`]).
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;

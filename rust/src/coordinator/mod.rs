@@ -3,15 +3,21 @@
 //! layouts + reuse schedules) lives here as scheduling/caching policy over
 //! the AOT artifacts.
 //!
-//! Two serving front-ends share the request/metrics types:
+//! Two serving front-ends share one substrate, [`frontend::LaneFrontEnd`]
+//! — the generic bounded-lane machinery (lane map keyed by
+//! [`EngineConfig::key`], submit/try_submit backpressure, deadline
+//! shedding, generation-checked evict/respawn, lifecycle counters) —
+//! each as a thin [`frontend::LaneJob`] instantiation:
 //!
 //! * [`Server`] — one engine per worker thread, one request at a time
 //!   (the pjrt path; each worker owns its PJRT client).
 //! * [`Scheduler`] — step-level continuous micro-batching: requests with
 //!   the same plan key form *cohorts* that advance through batched steps
-//!   sharing a single [`PlanSlot`] (see [`scheduler`]).
+//!   sharing a single [`PlanSlot`] (see [`scheduler`]), governed by a
+//!   static or load-adaptive [`LanePolicy`].
 
 pub mod engine;
+pub mod frontend;
 pub mod metrics;
 pub mod plan_cache;
 pub mod request;
@@ -19,10 +25,12 @@ pub mod scheduler;
 pub mod server;
 
 pub use engine::Engine;
+pub use frontend::{Job, LaneFrontEnd, LaneJob};
 pub use metrics::{LatencySummary, Metrics};
 pub use plan_cache::{PlanSlot, PlanStats};
 pub use request::{EngineConfig, GenRequest, GenResult, GenStats};
 pub use scheduler::{
-    BatchPolicy, Cohort, CohortBackend, HostBackend, HostEngine, Scheduler,
+    AdaptivePolicy, BatchPolicy, Cohort, CohortBackend, HostBackend, HostEngine, LanePolicy,
+    Scheduler,
 };
 pub use server::{Completion, Server};

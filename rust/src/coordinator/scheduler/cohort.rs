@@ -43,7 +43,11 @@ pub struct MemberState {
 
 /// The batched execution backend a cohort drives. [`super::HostBackend`]
 /// implements it on the pure-Rust model; a PJRT batched-step backend can
-/// plug in here once variable-batch artifacts exist.
+/// plug in here once variable-batch artifacts exist — it inherits the
+/// whole lane lifecycle (bounded queues, backpressure, evict/respawn,
+/// deadline shedding, adaptive formation) from the unified
+/// [`LaneFrontEnd`](crate::coordinator::LaneFrontEnd) for free, since the
+/// scheduler's cohort job is already generic over this trait.
 pub trait CohortBackend: Send {
     fn cfg(&self) -> &EngineConfig;
     /// Plan groups contributed per member (the region count; 1 for

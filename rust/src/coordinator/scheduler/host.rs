@@ -15,7 +15,10 @@
 //! [`HostEngine::generate`] run — asserted by `tests/scheduler_equivalence`.
 //!
 //! Both run artifact-free (synthetic or npz-loaded weights), which is what
-//! lets the scheduler's acceptance tests sit in tier 1.
+//! lets the scheduler's acceptance tests sit in tier 1. Neither type knows
+//! about queuing: lanes, backpressure and respawn live in the unified
+//! [`LaneFrontEnd`](crate::coordinator::LaneFrontEnd), so these backends
+//! stay pure execution.
 
 use std::sync::Arc;
 use std::time::Instant;

@@ -17,9 +17,13 @@
 //!   which is bitwise fold-invariant — batched latents equal per-request
 //!   latents for the same seeds (see `tests/scheduler_equivalence.rs`).
 //!
-//! [`BatchPolicy`] bounds the cohort size, the formation window, the lane
-//! queue depth (backpressure: `try_submit` fails fast) and admission
-//! deadlines (overdue requests are shed, not served late).
+//! Since PR 4 the submit/respawn machinery (lane map, bounded queues,
+//! backpressure, generation-checked eviction, deadline shedding) is the
+//! shared [`LaneFrontEnd`](crate::coordinator::LaneFrontEnd); the
+//! [`Scheduler`] is its cohort-step [`LaneJob`] instantiation, and the
+//! formation window / batch cap come from a [`LanePolicy`] — either the
+//! static [`BatchPolicy`] or the load-adaptive [`AdaptivePolicy`]
+//! (`--policy static|adaptive`).
 
 pub mod cohort;
 pub mod host;
@@ -27,14 +31,11 @@ pub mod policy;
 
 pub use cohort::{Cohort, CohortBackend, CohortCompletion, MemberState, StepOutcome};
 pub use host::{HostBackend, HostContext, HostEngine, DEFAULT_TAU};
-pub use policy::BatchPolicy;
+pub use policy::{AdaptivePolicy, ArrivalEstimator, BatchPolicy, Formation, LanePolicy};
 
 use std::collections::{BTreeMap, VecDeque};
-use std::sync::mpsc::{
-    channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TryRecvError,
-    TrySendError,
-};
-use std::sync::{Arc, Mutex};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -42,125 +43,80 @@ use crate::anyhow;
 use crate::toma::plan::PlanAction;
 use crate::util::error::Result;
 
+use super::frontend::{Completion, Job, LaneFrontEnd, LaneJob};
 use super::metrics::Metrics;
 use super::plan_cache::PlanStats;
 use super::request::{EngineConfig, GenRequest, GenResult};
-use super::server::Completion;
 
 /// Creates the batched backend for a new lane (one lane per engine key).
-pub type BackendFactory =
-    dyn Fn(&EngineConfig) -> Result<Box<dyn CohortBackend>> + Send + Sync;
+pub type BackendFactory = dyn Fn(&EngineConfig) -> Result<Box<dyn CohortBackend>> + Send + Sync;
 
-struct SchedJob {
-    request: GenRequest,
-    enqueued: Instant,
-    done: Sender<Completion>,
+/// The cohort-step [`LaneJob`]: each lane is one thread running a cohort
+/// that steps continuously, draining its bounded queue between steps.
+pub struct CohortJob {
+    policy: LanePolicy,
+    factory: Arc<BackendFactory>,
 }
 
-struct SchedLane {
-    tx: SyncSender<SchedJob>,
-    handle: JoinHandle<()>,
-    /// Identity of this lane incarnation (see [`Scheduler::evict_lane`]).
-    generation: u64,
+impl LaneJob for CohortJob {
+    fn kind(&self) -> &'static str {
+        "scheduler"
+    }
+
+    fn queue_depth(&self) -> usize {
+        self.policy.base().queue_depth
+    }
+
+    fn spawn_workers(
+        &self,
+        cfg: &EngineConfig,
+        rx: Receiver<Job>,
+        metrics: Arc<Metrics>,
+    ) -> Vec<JoinHandle<()>> {
+        let cfg = cfg.clone();
+        let policy = self.policy;
+        let factory = self.factory.clone();
+        vec![std::thread::Builder::new()
+            .name("toma-sched".to_string())
+            .spawn(move || lane_loop(&cfg, policy, &factory, &metrics, rx))
+            .expect("spawn scheduler lane")]
+    }
 }
 
 /// The micro-batching front-end: submit requests, get completions.
 pub struct Scheduler {
-    policy: BatchPolicy,
+    front: LaneFrontEnd<CohortJob>,
     pub metrics: Arc<Metrics>,
-    factory: Arc<BackendFactory>,
-    lanes: Mutex<BTreeMap<String, SchedLane>>,
-    next_generation: std::sync::atomic::AtomicU64,
 }
 
 impl Scheduler {
-    pub fn new<F>(policy: BatchPolicy, factory: F) -> Scheduler
+    pub fn new<P, F>(policy: P, factory: F) -> Scheduler
     where
+        P: Into<LanePolicy>,
         F: Fn(&EngineConfig) -> Result<Box<dyn CohortBackend>> + Send + Sync + 'static,
     {
-        Scheduler {
-            policy: policy.normalized(),
-            metrics: Arc::new(Metrics::new()),
+        let front = LaneFrontEnd::new(CohortJob {
+            policy: policy.into().normalized(),
             factory: Arc::new(factory),
-            lanes: Mutex::new(BTreeMap::new()),
-            next_generation: std::sync::atomic::AtomicU64::new(1),
-        }
+        });
+        let metrics = front.metrics.clone();
+        Scheduler { front, metrics }
     }
 
-    pub fn policy(&self) -> &BatchPolicy {
-        &self.policy
+    pub fn policy(&self) -> &LanePolicy {
+        &self.front.job().policy
     }
 
-    /// The lane's sender plus the generation it belongs to — the identity
-    /// a failed submit must present to [`Scheduler::evict_lane`].
-    fn lane_tx(&self, cfg: &EngineConfig) -> (SyncSender<SchedJob>, u64) {
-        let mut lanes = self.lanes.lock().unwrap();
-        let lane = lanes
-            .entry(cfg.key())
-            .or_insert_with(|| self.spawn_lane(cfg));
-        (lane.tx.clone(), lane.generation)
-    }
-
-    /// Remove the lane for `key` only if it is still the `generation` the
-    /// caller observed failing. A submitter racing a respawn would
-    /// otherwise evict the *fresh, healthy* lane another submitter just
-    /// spawned (the ROADMAP dead-lane race) — generation mismatch makes
-    /// the stale eviction a no-op. Returns whether a lane was evicted.
-    fn evict_lane(&self, key: &str, generation: u64) -> bool {
-        let mut lanes = self.lanes.lock().unwrap();
-        if lanes.get(key).map(|l| l.generation) == Some(generation) {
-            lanes.remove(key);
-            true
-        } else {
-            false
-        }
-    }
-
-    fn spawn_lane(&self, cfg: &EngineConfig) -> SchedLane {
-        let (tx, rx) = sync_channel::<SchedJob>(self.policy.queue_depth);
-        let policy = self.policy;
-        let metrics = self.metrics.clone();
-        let factory = self.factory.clone();
-        let cfg = cfg.clone();
-        let handle = std::thread::Builder::new()
-            .name("toma-sched".to_string())
-            .spawn(move || lane_loop(&cfg, policy, &factory, &metrics, rx))
-            .expect("spawn scheduler lane");
-        let generation = self
-            .next_generation
-            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        SchedLane {
-            tx,
-            handle,
-            generation,
-        }
+    /// The unified lane front-end (shared test harness + introspection).
+    #[cfg(test)]
+    pub(crate) fn front(&self) -> &LaneFrontEnd<CohortJob> {
+        &self.front
     }
 
     /// Submit a request; blocks when the lane queue is full
     /// (backpressure). The completion arrives on the returned channel.
-    /// A dead lane (e.g. a panicked backend) fails the request with an
-    /// error completion and is respawned on the next submit — one bad
-    /// request must not poison the serving process.
     pub fn submit(&self, cfg: &EngineConfig, request: GenRequest) -> Receiver<Completion> {
-        let (tx, generation) = self.lane_tx(cfg);
-        let (done_tx, done_rx) = channel();
-        self.metrics.inc("requests_submitted");
-        let job = SchedJob {
-            request,
-            enqueued: Instant::now(),
-            done: done_tx,
-        };
-        if let Err(std::sync::mpsc::SendError(job)) = tx.send(job) {
-            self.metrics.inc("requests_err");
-            self.evict_lane(&cfg.key(), generation);
-            let _ = job.done.send(Completion {
-                request: job.request,
-                result: Err(anyhow!("scheduler lane died; resubmit")),
-                queued_s: 0.0,
-                service_s: 0.0,
-            });
-        }
-        done_rx
+        self.front.submit(cfg, request)
     }
 
     /// Non-blocking submit: fails fast when the lane queue is at its
@@ -170,55 +126,13 @@ impl Scheduler {
         cfg: &EngineConfig,
         request: GenRequest,
     ) -> Result<Receiver<Completion>> {
-        let (tx, generation) = self.lane_tx(cfg);
-        let (done_tx, done_rx) = channel();
-        match tx.try_send(SchedJob {
-            request,
-            enqueued: Instant::now(),
-            done: done_tx,
-        }) {
-            Ok(()) => {
-                self.metrics.inc("requests_submitted");
-                Ok(done_rx)
-            }
-            Err(TrySendError::Full(_)) => {
-                self.metrics.inc("requests_rejected");
-                Err(anyhow!(
-                    "lane queue full ({} deep): backpressure",
-                    self.policy.queue_depth
-                ))
-            }
-            Err(TrySendError::Disconnected(_)) => {
-                // Dead lane: drop *this incarnation* so the next submit
-                // respawns fresh (never a healthy respawn that beat us).
-                self.evict_lane(&cfg.key(), generation);
-                Err(anyhow!("scheduler lane died; resubmit"))
-            }
-        }
+        self.front.try_submit(cfg, request)
     }
 
     /// Run a batch to completion (closed loop), preserving submission
-    /// order in the result. A lane dying mid-request yields an error
-    /// completion for the affected requests rather than a panic.
+    /// order in the result.
     pub fn run_batch(&self, cfg: &EngineConfig, requests: Vec<GenRequest>) -> Vec<Completion> {
-        let pairs: Vec<(GenRequest, Receiver<Completion>)> = requests
-            .into_iter()
-            .map(|r| {
-                let rx = self.submit(cfg, r.clone());
-                (r, rx)
-            })
-            .collect();
-        pairs
-            .into_iter()
-            .map(|(request, rx)| {
-                rx.recv().unwrap_or_else(|_| Completion {
-                    request,
-                    result: Err(anyhow!("scheduler lane died mid-request")),
-                    queued_s: 0.0,
-                    service_s: 0.0,
-                })
-            })
-            .collect()
+        self.front.run_batch(cfg, requests)
     }
 
     /// Convenience: run a batch and return the successful results.
@@ -227,26 +141,12 @@ impl Scheduler {
         cfg: &EngineConfig,
         requests: Vec<GenRequest>,
     ) -> Result<Vec<GenResult>> {
-        self.run_batch(cfg, requests)
-            .into_iter()
-            .map(|c| c.result)
-            .collect()
+        self.front.run_batch_ok(cfg, requests)
     }
 
     /// Drop all lanes, joining scheduler threads.
     pub fn shutdown(&self) {
-        let drained: Vec<SchedLane> =
-            std::mem::take(&mut *self.lanes.lock().unwrap()).into_values().collect();
-        for lane in drained {
-            drop(lane.tx);
-            let _ = lane.handle.join();
-        }
-    }
-}
-
-impl Drop for Scheduler {
-    fn drop(&mut self) {
-        self.shutdown();
+        self.front.shutdown();
     }
 }
 
@@ -259,8 +159,8 @@ struct JobMeta {
 
 /// The instant by which `job` must be admitted (submission time plus its
 /// effective deadline), if it has one.
-fn admission_deadline(policy: &BatchPolicy, job: &SchedJob) -> Option<Instant> {
-    let dl = policy.deadline_for(job.request.deadline_s)?;
+fn admission_deadline(base: &BatchPolicy, job: &Job) -> Option<Instant> {
+    let dl = base.deadline_for(job.request.deadline_s)?;
     let d = Duration::try_from_secs_f64(dl.max(0.0)).ok()?;
     job.enqueued.checked_add(d)
 }
@@ -276,35 +176,52 @@ fn fail(metrics: &Metrics, meta: JobMeta, msg: &str) {
     });
 }
 
+/// Feed the lane's arrival estimator with a job's submission offset.
+fn note_arrival(est: &mut ArrivalEstimator, epoch: Instant, job: &Job) {
+    est.on_arrival(job.enqueued.saturating_duration_since(epoch).as_secs_f64());
+}
+
 /// One lane: a bounded queue drained by a single cohort that steps
-/// continuously. The loop blocks only while completely idle.
+/// continuously. The loop blocks only while completely idle. The active
+/// [`LanePolicy`] derives each round's formation window and batch cap —
+/// statically, or from the observed arrival gap and served p99.
 fn lane_loop(
     cfg: &EngineConfig,
-    policy: BatchPolicy,
+    policy: LanePolicy,
     factory: &BackendFactory,
     metrics: &Metrics,
-    rx: Receiver<SchedJob>,
+    rx: Receiver<Job>,
 ) {
+    // Epoch before backend init: requests queued while a slow factory
+    // (e.g. a compiling PJRT backend) boots must keep their real arrival
+    // offsets, not collapse to "all at once" and fake a burst.
+    let epoch = Instant::now();
     let backend = match factory(cfg) {
         Ok(b) => b,
         Err(e) => {
             // Fail every job this lane would serve.
             let msg = format!("backend init failed: {e}");
             while let Ok(job) = rx.recv() {
-                metrics.inc("requests_err");
-                let _ = job.done.send(Completion {
-                    request: job.request,
-                    result: Err(anyhow!("{msg}")),
-                    queued_s: job.enqueued.elapsed().as_secs_f64(),
-                    service_s: 0.0,
-                });
+                job.fail(metrics, &msg);
             }
             return;
         }
     };
+    let base = *policy.base();
+    let adaptive = matches!(policy, LanePolicy::Adaptive(_));
+    // Served-tail feedback for the adaptive policy; the static path never
+    // pays the histogram lock for a value it would discard.
+    let observed_p99 = |metrics: &Metrics| {
+        if adaptive {
+            metrics.quantile_s("e2e_time", 0.99)
+        } else {
+            None
+        }
+    };
+    let mut est = policy.estimator();
     let tokens_per_member = backend.tokens_per_member_step();
     let mut cohort = Cohort::new(backend);
-    let mut pending: VecDeque<SchedJob> = VecDeque::new();
+    let mut pending: VecDeque<Job> = VecDeque::new();
     let mut inflight: BTreeMap<u64, JobMeta> = BTreeMap::new();
     let mut open = true;
 
@@ -318,22 +235,28 @@ fn lane_loop(
             // pending request is held past its admission deadline just to
             // wait for company.
             match rx.recv() {
-                Ok(j) => pending.push_back(j),
+                Ok(j) => {
+                    note_arrival(&mut est, epoch, &j);
+                    pending.push_back(j);
+                }
                 Err(_) => break,
             }
-            let window = Duration::from_secs_f64(policy.max_queue_wait_s);
+            let f = policy.formation(&est, observed_p99(metrics));
+            let window_s = f.window_s.clamp(0.0, BatchPolicy::MAX_QUEUE_WAIT_S);
+            let window = Duration::from_secs_f64(window_s);
             let mut wait_until = Instant::now() + window;
-            if let Some(dl) = pending.back().and_then(|j| admission_deadline(&policy, j)) {
+            if let Some(dl) = pending.back().and_then(|j| admission_deadline(&base, j)) {
                 wait_until = wait_until.min(dl);
             }
-            while pending.len() < policy.max_batch {
+            while pending.len() < f.max_batch {
                 let remaining = wait_until.saturating_duration_since(Instant::now());
                 if remaining.is_zero() {
                     break;
                 }
                 match rx.recv_timeout(remaining) {
                     Ok(j) => {
-                        if let Some(dl) = admission_deadline(&policy, &j) {
+                        note_arrival(&mut est, epoch, &j);
+                        if let Some(dl) = admission_deadline(&base, &j) {
                             wait_until = wait_until.min(dl);
                         }
                         pending.push_back(j);
@@ -349,12 +272,15 @@ fn lane_loop(
             // Mid-flight: drain the channel into `pending` (bounded by
             // queue_depth) so the deadline shed below sees every waiting
             // request each step, even while the cohort is full; admission
-            // still gates joins on boundaries and max_batch. Effective
-            // buffering is therefore up to queue_depth in `pending` plus
-            // queue_depth in the channel.
-            while pending.len() < policy.queue_depth {
+            // still gates joins on boundaries and the policy's cap.
+            // Effective buffering is therefore up to queue_depth in
+            // `pending` plus queue_depth in the channel.
+            while pending.len() < base.queue_depth {
                 match rx.try_recv() {
-                    Ok(j) => pending.push_back(j),
+                    Ok(j) => {
+                        note_arrival(&mut est, epoch, &j);
+                        pending.push_back(j);
+                    }
                     Err(TryRecvError::Empty) => break,
                     Err(TryRecvError::Disconnected) => {
                         open = false;
@@ -366,31 +292,30 @@ fn lane_loop(
 
         // Deadline-aware draining: shed overdue requests *every* loop
         // iteration, not just at join boundaries — a dead request must be
-        // rejected promptly, not after waiting out a reuse window.
+        // rejected promptly, not after waiting out a reuse window. The
+        // shedding itself is the front-end's single implementation.
         let mut kept = VecDeque::with_capacity(pending.len());
         for job in pending.drain(..) {
-            let queued_s = job.enqueued.elapsed().as_secs_f64();
-            match policy.deadline_for(job.request.deadline_s) {
-                Some(dl) if queued_s > dl => {
-                    metrics.inc("requests_shed");
-                    let _ = job.done.send(Completion {
-                        request: job.request,
-                        result: Err(anyhow!(
-                            "deadline exceeded in queue ({queued_s:.3}s > {dl:.3}s)"
-                        )),
-                        queued_s,
-                        service_s: 0.0,
-                    });
-                }
-                _ => kept.push_back(job),
+            let dl = base.deadline_for(job.request.deadline_s);
+            if let Some(job) = job.shed_if_overdue(dl, metrics) {
+                kept.push_back(job);
             }
         }
         pending = kept;
 
-        // Admit at join boundaries.
-        while cohort.len() < policy.max_batch && !pending.is_empty() && cohort.can_join() {
+        // Admit at join boundaries. The derived cap bounds companion
+        // *waiting* (the formation loop above) — it must never throttle a
+        // backlog that already arrived: batching queued work costs zero
+        // extra formation latency, so admission widens to the backlog up
+        // to the hard `base.max_batch` ceiling. (Otherwise a sparse-lane
+        // cap of 1 would serialize an accumulated queue and collapse
+        // throughput below the arrival rate.)
+        let f_cap = policy.formation(&est, observed_p99(metrics)).max_batch;
+        let backlog = pending.len() + cohort.len();
+        let cap = f_cap.max(backlog.min(base.max_batch));
+        while cohort.len() < cap && !pending.is_empty() && cohort.can_join() {
             let job = pending.pop_front().expect("non-empty");
-            let queued_s = job.enqueued.elapsed().as_secs_f64();
+            let queued_s = job.queued_s();
             metrics.observe_s("queue_wait", queued_s);
             // A join into a cohort that already stepped is a mid-flight
             // join; formation-batch admits (cohort_step 0) are not.
@@ -490,22 +415,18 @@ fn lane_loop(
 
     // Lane closing: anything still pending was never admitted.
     for job in pending {
-        metrics.inc("requests_err");
-        let _ = job.done.send(Completion {
-            request: job.request,
-            result: Err(anyhow!("scheduler lane shut down before admission")),
-            queued_s: job.enqueued.elapsed().as_secs_f64(),
-            service_s: 0.0,
-        });
+        job.fail(metrics, "scheduler lane shut down before admission");
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::frontend::harness;
     use crate::coordinator::request::GenStats;
     use crate::model::HostUVit;
     use crate::runtime::ModelInfo;
+    use std::sync::Mutex;
 
     fn tiny_model() -> Arc<HostUVit> {
         let info = ModelInfo::synthetic("uvit_sched", 4, 2, 16, 2, 3, 5);
@@ -518,7 +439,7 @@ mod tests {
         cfg
     }
 
-    fn host_scheduler(policy: BatchPolicy) -> Scheduler {
+    fn host_scheduler<P: Into<LanePolicy>>(policy: P) -> Scheduler {
         let model = tiny_model();
         Scheduler::new(policy, move |cfg: &EngineConfig| {
             HostBackend::boxed(model.clone(), cfg.clone(), 4, DEFAULT_TAU)
@@ -548,6 +469,30 @@ mod tests {
         // (5 requests would need 5 RefreshAll at batch size 1).
         assert!(s.metrics.counter("cohort_refresh_all") < 5);
         assert!(s.metrics.counter("tokens_denoised") > 0);
+        // Unified front-end lifecycle accounting: one healthy lane.
+        assert_eq!(s.metrics.counter("lane_spawned"), 1);
+        assert_eq!(s.metrics.counter("lane_evicted"), 0);
+        s.shutdown();
+    }
+
+    #[test]
+    fn adaptive_policy_serves_closed_loop_identically() {
+        // The adaptive policy only reshapes queuing: a closed-loop batch
+        // must still complete fully and amortize selection.
+        let base = BatchPolicy {
+            max_batch: 4,
+            max_queue_wait_s: 0.25,
+            ..Default::default()
+        };
+        let s = host_scheduler(AdaptivePolicy::new(base, 5.0));
+        let reqs: Vec<GenRequest> = (0..5).map(|i| GenRequest::new("cat", i)).collect();
+        let comps = s.run_batch(&toma_cfg(6), reqs);
+        assert_eq!(comps.len(), 5);
+        for c in &comps {
+            assert!(c.result.is_ok());
+        }
+        assert_eq!(s.metrics.counter("requests_ok"), 5);
+        assert!(s.metrics.counter("cohort_refresh_all") < 5);
         s.shutdown();
     }
 
@@ -560,9 +505,12 @@ mod tests {
         let err = c.result.err().expect("shed").to_string();
         assert!(err.contains("deadline"), "unexpected error: {err}");
         assert_eq!(s.metrics.counter("requests_shed"), 1);
+        assert_eq!(s.metrics.counter("shed_deadline"), 1);
         s.shutdown();
     }
 
+    /// Backpressure through the shared front-end harness (the Server runs
+    /// the same scenario against its engine job — no copy-pasted twins).
     #[test]
     fn try_submit_rejects_when_lane_queue_full() {
         // Hold the lane's backend factory on a condvar so the lane never
@@ -584,31 +532,19 @@ mod tests {
                 Err(anyhow!("factory released"))
             },
         );
-        let cfg = toma_cfg(2);
-        let rx1 = s.submit(&cfg, GenRequest::new("a", 1));
-        let err = s
-            .try_submit(&cfg, GenRequest::new("b", 2))
-            .err()
-            .expect("second submit must hit backpressure");
-        assert!(err.to_string().contains("backpressure"), "{err}");
-        assert_eq!(s.metrics.counter("requests_rejected"), 1);
-        // Release the lane; the queued request fails with the factory
-        // error instead of hanging.
-        {
+        harness::assert_try_submit_backpressure(s.front(), &toma_cfg(2), &move || {
             let (lock, cv) = &*gate;
             *lock.lock().unwrap() = true;
             cv.notify_all();
-        }
-        let c = rx1.recv().expect("completion");
-        assert!(c.result.is_err());
-        s.shutdown();
+        });
     }
 
+    /// Death/respawn through the shared front-end harness: first factory
+    /// call panics, killing the lane thread mid-flight; subsequent calls
+    /// build a healthy host backend. Exercises the full death ->
+    /// stale-sender-detect -> evict -> respawn path.
     #[test]
     fn forced_lane_death_then_resubmit_respawns_generation_checked() {
-        // First factory call panics, killing the lane thread mid-flight;
-        // subsequent calls build a healthy host backend. This exercises
-        // the full death -> stale-sender-detect -> evict -> respawn path.
         let model = tiny_model();
         let died = Arc::new(std::sync::atomic::AtomicBool::new(false));
         let d2 = died.clone();
@@ -625,35 +561,8 @@ mod tests {
                 HostBackend::boxed(model.clone(), cfg.clone(), 4, DEFAULT_TAU)
             },
         );
-        let cfg = toma_cfg(3);
-        // Depending on timing the dying lane either drops the completion
-        // sender (recv errors) or the submit itself observes the dead
-        // channel (error completion). Either way, resubmitting must reach
-        // a healthy respawned lane within a few attempts.
-        let mut served = false;
-        for attempt in 0..4u64 {
-            let rx = s.submit(&cfg, GenRequest::new("retry", attempt));
-            if let Ok(c) = rx.recv() {
-                if c.result.is_ok() {
-                    served = true;
-                    break;
-                }
-            }
-        }
-        assert!(served, "resubmit after forced lane death must be served");
+        harness::assert_forced_death_respawns(s.front(), &toma_cfg(3), &|c| c.result.is_ok());
         assert!(died.load(std::sync::atomic::Ordering::SeqCst));
-        // The healthy lane is a fresh incarnation; the dead lane's
-        // generation is permanently stale and cannot evict it.
-        let (_tx, fresh) = s.lane_tx(&cfg);
-        assert!(fresh > 1, "respawn must advance the generation");
-        assert!(!s.evict_lane(&cfg.key(), fresh - 1));
-        assert!(
-            s.lanes.lock().unwrap().contains_key(&cfg.key()),
-            "stale eviction must not remove the healthy lane"
-        );
-        // The current generation is the only one that may evict.
-        assert!(s.evict_lane(&cfg.key(), fresh));
-        s.shutdown();
     }
 
     #[test]

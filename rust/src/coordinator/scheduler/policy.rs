@@ -1,6 +1,24 @@
 //! Admission policy for the micro-batching scheduler: cohort size, the
 //! cohort-formation window, queue bounds (backpressure) and admission
 //! deadlines (load shedding).
+//!
+//! Two policy kinds sit behind [`LanePolicy`]:
+//!
+//! * [`BatchPolicy`] — static limits, fixed per lane (the PR 2 behavior);
+//! * [`AdaptivePolicy`] — the ROADMAP "Scheduler autoscaling" item: the
+//!   formation window and batch cap are *derived per formation round*
+//!   from the lane's observed inter-arrival times (an EWMA estimate fed
+//!   by the lane loop, [`ArrivalEstimator`]) and a p99 latency target,
+//!   with feedback from the served `e2e_time` p99 histogram in
+//!   `coordinator::metrics`. Under bursty arrivals the window widens (up
+//!   to the latency budget) so cohorts grow and the Sec. 4.3.2
+//!   selection/weights amortization survives; on an idle lane it
+//!   collapses to zero so a lone request is never held waiting for
+//!   company that will not come.
+//!
+//! The policy only shapes *queuing* (when a cohort starts and how large
+//! it may grow) — never the numeric path, so batched latents stay
+//! bit-identical to per-request ones under either kind.
 
 /// Limits governing how a lane forms cohorts and drains its queue.
 #[derive(Clone, Copy, Debug)]
@@ -67,6 +85,245 @@ impl BatchPolicy {
     }
 }
 
+/// Formation parameters for one cohort round, derived by the lane policy:
+/// how long the cohort opener waits for companions and how many members
+/// the cohort may grow to this round.
+#[derive(Clone, Copy, Debug)]
+pub struct Formation {
+    pub window_s: f64,
+    pub max_batch: usize,
+}
+
+/// EWMA estimate of a lane's request inter-arrival gap. Driven with
+/// explicit offsets (seconds since the lane epoch), never wall-clock
+/// reads of its own, so policies derived from it are deterministic under
+/// synthetic arrival traces (see the tests below).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ArrivalEstimator {
+    alpha: f64,
+    last_s: Option<f64>,
+    ewma_gap_s: Option<f64>,
+}
+
+impl ArrivalEstimator {
+    pub fn new(alpha: f64) -> ArrivalEstimator {
+        ArrivalEstimator {
+            alpha: if alpha.is_finite() {
+                alpha.clamp(0.01, 1.0)
+            } else {
+                AdaptivePolicy::DEFAULT_ALPHA
+            },
+            last_s: None,
+            ewma_gap_s: None,
+        }
+    }
+
+    /// Record an arrival at `t_s` seconds since the lane epoch. Gaps are
+    /// clamped non-negative (queue reordering never yields time travel).
+    pub fn on_arrival(&mut self, t_s: f64) {
+        if let Some(last) = self.last_s {
+            let gap = (t_s - last).max(0.0);
+            self.ewma_gap_s = Some(match self.ewma_gap_s {
+                Some(g) => (1.0 - self.alpha) * g + self.alpha * gap,
+                None => gap,
+            });
+        }
+        self.last_s = Some(match self.last_s {
+            Some(last) => last.max(t_s),
+            None => t_s,
+        });
+    }
+
+    /// Smoothed inter-arrival gap in seconds (`None` until two arrivals
+    /// have been observed — the cold-start case).
+    pub fn gap_s(&self) -> Option<f64> {
+        self.ewma_gap_s
+    }
+
+    /// Smoothed arrival rate in requests/second.
+    pub fn rate_hz(&self) -> Option<f64> {
+        self.ewma_gap_s.map(|g| 1.0 / g.max(1e-9))
+    }
+}
+
+/// Load-adaptive batch policy: derives each round's formation window and
+/// batch cap from the observed arrival gap and a p99 latency target.
+///
+/// * **burst** (gap ≪ budget): companions are imminent — widen the window
+///   to the time needed to gather a full cohort, capped by the budget, so
+///   the cohort amortization grows;
+/// * **idle** (gap ≥ budget): no companion is expected within the latency
+///   budget — collapse the window to zero and serve solo;
+/// * **overload feedback**: when the served e2e p99 already exceeds the
+///   target, the window is scaled down proportionally, giving the latency
+///   budget back to queue draining.
+///
+/// The `base` [`BatchPolicy`] supplies hard ceilings: the derived batch
+/// cap never exceeds `base.max_batch`, the window never exceeds the
+/// formation budget (`p99_target_s * window_share`), and `queue_depth` /
+/// `deadline_s` apply unchanged.
+#[derive(Clone, Copy, Debug)]
+pub struct AdaptivePolicy {
+    pub base: BatchPolicy,
+    /// End-to-end tail-latency target (seconds) the formation window must
+    /// respect.
+    pub p99_target_s: f64,
+    /// EWMA smoothing factor for the inter-arrival estimate, in
+    /// (0.01, 1.0].
+    pub alpha: f64,
+    /// Fraction of the p99 target spendable on cohort formation.
+    pub window_share: f64,
+}
+
+impl AdaptivePolicy {
+    pub const DEFAULT_ALPHA: f64 = 0.2;
+    pub const DEFAULT_WINDOW_SHARE: f64 = 0.25;
+
+    pub fn new(base: BatchPolicy, p99_target_s: f64) -> AdaptivePolicy {
+        AdaptivePolicy {
+            base,
+            p99_target_s,
+            alpha: Self::DEFAULT_ALPHA,
+            window_share: Self::DEFAULT_WINDOW_SHARE,
+        }
+        .normalized()
+    }
+
+    /// Clamp degenerate values to servable bounds (mirrors
+    /// [`BatchPolicy::normalized`]).
+    pub fn normalized(mut self) -> AdaptivePolicy {
+        self.base = self.base.normalized();
+        if !(self.p99_target_s > 0.0) || !self.p99_target_s.is_finite() {
+            self.p99_target_s = 1.0; // non-positive, NaN or inf
+        }
+        if !(self.alpha > 0.0) || !self.alpha.is_finite() {
+            self.alpha = Self::DEFAULT_ALPHA;
+        }
+        self.alpha = self.alpha.clamp(0.01, 1.0);
+        if !(self.window_share > 0.0 && self.window_share <= 1.0) {
+            self.window_share = Self::DEFAULT_WINDOW_SHARE;
+        }
+        self
+    }
+
+    /// The slice of the p99 target spendable waiting for companions.
+    pub fn budget_s(&self) -> f64 {
+        (self.p99_target_s * self.window_share).min(BatchPolicy::MAX_QUEUE_WAIT_S)
+    }
+
+    /// Derive this round's formation window and batch cap.
+    /// `observed_p99_s` is the served end-to-end p99 so far (the
+    /// `e2e_time` histogram), `None` before any completion.
+    pub fn formation(&self, est: &ArrivalEstimator, observed_p99_s: Option<f64>) -> Formation {
+        let budget = self.budget_s();
+        let Some(gap) = est.gap_s() else {
+            // Cold start: no estimate yet — behave like the static base,
+            // but never beyond the latency budget.
+            return Formation {
+                window_s: self.base.max_queue_wait_s.min(budget),
+                max_batch: self.base.max_batch,
+            };
+        };
+        let (mut window_s, max_batch) = if gap <= 0.0 {
+            // Back-to-back burst: the cohort fills instantly, no waiting.
+            (0.0, self.base.max_batch)
+        } else {
+            // Companions expected within the formation budget (+1 for the
+            // request that opens the cohort). An idle lane (gap ≥ budget)
+            // expects none: cap 1, window 0 — waiting only adds latency.
+            let expected = (budget / gap).floor();
+            let cap = (1.0 + expected).min(self.base.max_batch as f64) as usize;
+            let window = ((cap.max(1) - 1) as f64 * gap).min(budget);
+            (window, cap.max(1))
+        };
+        // Overload feedback: already missing the target ⇒ shrink the
+        // window proportionally instead of adding formation latency.
+        // The factor is floored at 1/4 because the `e2e_time` histogram
+        // is lifetime-cumulative (it never decays): a transient overload
+        // episode must dampen batching, not quasi-permanently disable the
+        // amortization it exists to protect. A decayed/sliding-window
+        // per-lane p99 is the ROADMAP follow-up.
+        if let Some(p99) = observed_p99_s {
+            if p99 > self.p99_target_s {
+                window_s *= (self.p99_target_s / p99).clamp(0.25, 1.0);
+            }
+        }
+        Formation {
+            window_s: window_s.max(0.0),
+            max_batch,
+        }
+    }
+}
+
+/// Which batch-formation policy a scheduler lane runs — selected with
+/// `--policy static|adaptive` in `toma-serve serve`.
+#[derive(Clone, Copy, Debug)]
+pub enum LanePolicy {
+    /// Fixed formation window and batch cap (the PR 2 behavior).
+    Static(BatchPolicy),
+    /// Window/cap derived per round from observed arrivals and the p99
+    /// target.
+    Adaptive(AdaptivePolicy),
+}
+
+impl LanePolicy {
+    pub fn normalized(self) -> LanePolicy {
+        match self {
+            LanePolicy::Static(p) => LanePolicy::Static(p.normalized()),
+            LanePolicy::Adaptive(a) => LanePolicy::Adaptive(a.normalized()),
+        }
+    }
+
+    /// The hard bounds shared by both kinds (queue depth, deadlines, the
+    /// batch/window ceilings).
+    pub fn base(&self) -> &BatchPolicy {
+        match self {
+            LanePolicy::Static(p) => p,
+            LanePolicy::Adaptive(a) => &a.base,
+        }
+    }
+
+    /// Per-round formation parameters (static kinds ignore the estimate).
+    pub fn formation(&self, est: &ArrivalEstimator, observed_p99_s: Option<f64>) -> Formation {
+        match self {
+            LanePolicy::Static(p) => Formation {
+                window_s: p.max_queue_wait_s,
+                max_batch: p.max_batch,
+            },
+            LanePolicy::Adaptive(a) => a.formation(est, observed_p99_s),
+        }
+    }
+
+    /// A fresh per-lane arrival estimator with this policy's smoothing.
+    pub fn estimator(&self) -> ArrivalEstimator {
+        match self {
+            LanePolicy::Static(_) => ArrivalEstimator::new(AdaptivePolicy::DEFAULT_ALPHA),
+            LanePolicy::Adaptive(a) => ArrivalEstimator::new(a.alpha),
+        }
+    }
+
+    /// Parse the `--policy` CLI value over a configured base.
+    pub fn parse(name: &str, base: BatchPolicy, p99_target_s: f64) -> Option<LanePolicy> {
+        match name {
+            "static" => Some(LanePolicy::Static(base.normalized())),
+            "adaptive" => Some(LanePolicy::Adaptive(AdaptivePolicy::new(base, p99_target_s))),
+            _ => None,
+        }
+    }
+}
+
+impl From<BatchPolicy> for LanePolicy {
+    fn from(p: BatchPolicy) -> LanePolicy {
+        LanePolicy::Static(p)
+    }
+}
+
+impl From<AdaptivePolicy> for LanePolicy {
+    fn from(a: AdaptivePolicy) -> LanePolicy {
+        LanePolicy::Adaptive(a)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -128,5 +385,161 @@ mod tests {
     fn with_max_batch_sets_cap() {
         assert_eq!(BatchPolicy::with_max_batch(4).max_batch, 4);
         assert_eq!(BatchPolicy::with_max_batch(0).max_batch, 1);
+    }
+
+    // -- adaptive policy: deterministic arrival traces, no wall-clock --
+
+    fn adaptive() -> AdaptivePolicy {
+        // budget = p99_target * share = 1.0 * 0.25 = 0.25 s
+        AdaptivePolicy::new(
+            BatchPolicy {
+                max_batch: 8,
+                max_queue_wait_s: 0.5,
+                ..Default::default()
+            },
+            1.0,
+        )
+    }
+
+    /// Feed a fixed-gap trace: arrivals at 0, gap, 2*gap, ...
+    fn trace(alpha: f64, gap_s: f64, n: usize) -> ArrivalEstimator {
+        let mut est = ArrivalEstimator::new(alpha);
+        for i in 0..n {
+            est.on_arrival(i as f64 * gap_s);
+        }
+        est
+    }
+
+    #[test]
+    fn adaptive_window_collapses_when_arrivals_are_sparse() {
+        let p = adaptive();
+        // 1 s gaps, far beyond the 0.25 s budget: no companion expected.
+        let est = trace(p.alpha, 1.0, 10);
+        let f = p.formation(&est, None);
+        assert_eq!(f.window_s, 0.0, "idle lane must not hold the opener");
+        assert_eq!(f.max_batch, 1, "no companions ⇒ solo cohort");
+    }
+
+    #[test]
+    fn adaptive_window_grows_under_burst_within_p99_target() {
+        let p = adaptive();
+        // 1 ms gaps: a full cohort forms well inside the budget.
+        let est = trace(p.alpha, 0.001, 20);
+        let f = p.formation(&est, None);
+        assert!(f.window_s > 0.0, "burst must open a formation window");
+        // Time to gather the 7 companions of an 8-cohort at 1 ms gaps.
+        assert!((f.window_s - 0.007).abs() < 1e-9, "window {}", f.window_s);
+        assert!(f.window_s <= p.budget_s());
+        assert!(f.window_s <= p.p99_target_s, "never beyond the p99 target");
+        assert_eq!(f.max_batch, 8, "burst fills up to the configured max");
+        // Sparse vs burst ordering: the adaptive window is wider under
+        // burst than when idle.
+        let sparse = p.formation(&trace(p.alpha, 1.0, 10), None);
+        assert!(f.window_s > sparse.window_s);
+    }
+
+    #[test]
+    fn adaptive_cap_tracks_rate_and_never_exceeds_configured_max() {
+        let p = adaptive();
+        // 0.1 s gaps against a 0.25 s budget: 2 companions expected.
+        let est = trace(p.alpha, 0.1, 10);
+        let f = p.formation(&est, None);
+        assert_eq!(f.max_batch, 3);
+        assert!((f.window_s - 0.2).abs() < 1e-9, "window {}", f.window_s);
+        // Even an extreme burst cannot exceed the configured ceiling.
+        let f = p.formation(&trace(p.alpha, 1e-6, 50), None);
+        assert!(f.max_batch <= p.base.max_batch);
+        // Zero-gap (all at once): cohort fills instantly, no waiting.
+        let f = p.formation(&trace(p.alpha, 0.0, 5), None);
+        assert_eq!(f.window_s, 0.0);
+        assert_eq!(f.max_batch, 8);
+    }
+
+    #[test]
+    fn adaptive_cold_start_uses_base_window_capped_by_budget() {
+        let p = adaptive();
+        // No arrivals at all, and a single arrival (no gap yet): both are
+        // cold starts — static base behavior, clipped to the budget.
+        for est in [ArrivalEstimator::new(p.alpha), trace(p.alpha, 0.1, 1)] {
+            let f = p.formation(&est, None);
+            assert_eq!(f.max_batch, p.base.max_batch);
+            assert!((f.window_s - 0.25).abs() < 1e-9, "base 0.5 clips to budget");
+        }
+    }
+
+    #[test]
+    fn adaptive_overload_feedback_shrinks_window_with_floor() {
+        let p = adaptive();
+        let est = trace(p.alpha, 0.001, 20);
+        let relaxed = p.formation(&est, Some(0.5)).window_s; // under target
+        let stressed = p.formation(&est, Some(2.0)).window_s; // 2x over
+        assert!((relaxed - 0.007).abs() < 1e-9, "meeting the target: no cut");
+        assert!((stressed - 0.0035).abs() < 1e-9, "2x over ⇒ half window");
+        // The cumulative histogram can stay elevated long after an
+        // overload: the shrink floors at 1/4 so batching is dampened,
+        // never disabled.
+        let swamped = p.formation(&est, Some(100.0)).window_s;
+        assert!((swamped - 0.007 * 0.25).abs() < 1e-9, "floor at 1/4");
+    }
+
+    #[test]
+    fn estimator_ewma_tracks_burst_transitions() {
+        let mut est = ArrivalEstimator::new(0.2);
+        assert!(est.gap_s().is_none(), "cold start has no estimate");
+        est.on_arrival(0.0);
+        assert!(est.gap_s().is_none(), "one arrival is still no gap");
+        for i in 1..=5 {
+            est.on_arrival(i as f64);
+        }
+        let sparse_gap = est.gap_s().expect("estimate");
+        assert!((sparse_gap - 1.0).abs() < 1e-12);
+        // A burst pulls the EWMA down monotonically toward the new gap.
+        let mut t = 5.0;
+        let mut prev = sparse_gap;
+        for _ in 0..20 {
+            t += 0.001;
+            est.on_arrival(t);
+            let g = est.gap_s().expect("estimate");
+            assert!(g < prev, "EWMA must decrease through the burst");
+            prev = g;
+        }
+        assert!(prev < 0.1, "after 20 burst arrivals the gap is small");
+        // Out-of-order timestamps clamp to non-negative gaps.
+        est.on_arrival(t - 1.0);
+        assert!(est.gap_s().expect("estimate") >= 0.0);
+    }
+
+    #[test]
+    fn adaptive_normalized_clamps_degenerate_values() {
+        let p = AdaptivePolicy {
+            base: BatchPolicy {
+                max_batch: 0,
+                ..Default::default()
+            },
+            p99_target_s: f64::NAN,
+            alpha: -3.0,
+            window_share: 7.0,
+        }
+        .normalized();
+        assert_eq!(p.base.max_batch, 1);
+        assert_eq!(p.p99_target_s, 1.0);
+        assert_eq!(p.alpha, AdaptivePolicy::DEFAULT_ALPHA);
+        assert_eq!(p.window_share, AdaptivePolicy::DEFAULT_WINDOW_SHARE);
+        // LanePolicy plumbing: parse + base + From.
+        let base = BatchPolicy::default();
+        assert!(matches!(
+            LanePolicy::parse("static", base, 1.0),
+            Some(LanePolicy::Static(_))
+        ));
+        assert!(matches!(
+            LanePolicy::parse("adaptive", base, 1.0),
+            Some(LanePolicy::Adaptive(_))
+        ));
+        assert!(LanePolicy::parse("bogus", base, 1.0).is_none());
+        let lp: LanePolicy = base.into();
+        assert_eq!(lp.base().max_batch, base.max_batch);
+        let f = lp.formation(&ArrivalEstimator::new(0.2), None);
+        assert_eq!(f.max_batch, base.max_batch);
+        assert_eq!(f.window_s, base.max_queue_wait_s);
     }
 }

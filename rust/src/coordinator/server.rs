@@ -1,6 +1,5 @@
-//! Threaded serving front-end: a request queue + a worker pool per engine
-//! key. Requests with the same (model, variant, ratio, schedule) share a
-//! lane; distinct keys get their own lane.
+//! Threaded per-request serving front-end: one engine per worker thread,
+//! one request at a time, over the unified [`LaneFrontEnd`].
 //!
 //! The `xla` crate's PJRT handles are deliberately single-threaded (`Rc` +
 //! raw pointers), so each worker thread owns a full `Runtime` + `Engine` —
@@ -9,91 +8,70 @@
 //! (std threads + channels: the vendored crate set has no tokio; the
 //! workload is compute-bound through PJRT, so a thread pool is the right
 //! shape anyway.)
+//!
+//! Since PR 4 the `Server` is a thin [`LaneJob`] instantiation
+//! ([`EngineJob`]) of the generic front-end: the lane map, bounded queues,
+//! backpressure, generation-checked eviction/respawn and lifecycle
+//! counters are shared with the [`Scheduler`](super::Scheduler), and the
+//! `Server` inherits the scheduler's deadline shedding — an overdue
+//! request is rejected at dequeue instead of served hopelessly late
+//! (per-request `GenRequest::deadline_s`, or a server-wide default via
+//! [`Server::with_deadline`]).
 
-use std::collections::BTreeMap;
 use std::path::PathBuf;
-use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TrySendError};
+use std::sync::mpsc::Receiver;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use crate::anyhow;
 use crate::util::error::Result;
 
 use super::engine::Engine;
+use super::frontend::{Job, LaneFrontEnd, LaneJob};
 use super::metrics::Metrics;
 use super::request::{EngineConfig, GenRequest, GenResult};
 use crate::runtime::Runtime;
 
-/// A completed request with timing info.
-pub struct Completion {
-    pub request: GenRequest,
-    pub result: Result<GenResult>,
-    pub queued_s: f64,
-    pub service_s: f64,
-}
+pub use super::frontend::Completion;
 
-struct Job {
-    request: GenRequest,
-    enqueued: Instant,
-    done: Sender<Completion>,
-}
+/// Builds a worker's engine. Called on the worker thread itself, so the
+/// engine never has to be `Send` (PJRT handles are thread-local). The
+/// default factory boots a `Runtime` over the artifact directory; tests
+/// and alternative runtimes inject their own.
+pub type EngineFactory = dyn Fn(&EngineConfig) -> Result<Engine> + Send + Sync;
 
-/// One worker lane: a bounded job queue drained by N engine-owning
-/// threads. The bound provides backpressure: [`Server::submit`] blocks at
-/// the high-water mark, [`Server::try_submit`] fails fast.
-struct Lane {
-    tx: SyncSender<Job>,
-    handles: Vec<JoinHandle<()>>,
-    /// Identity of this lane incarnation. Dead-lane eviction is
-    /// generation-checked: a submitter that observed generation `g` fail
-    /// may only evict generation `g` — never a lane respawned (g+1) by a
-    /// concurrent submitter in the window between the failed send and the
-    /// eviction (the ROADMAP "stale sender evicts healthy lane" race).
-    generation: u64,
-}
-
-pub struct Server {
-    artifact_dir: PathBuf,
-    pub metrics: Arc<Metrics>,
+/// The per-request engine [`LaneJob`]: N workers per lane, each owning a
+/// full engine, draining one bounded queue.
+pub struct EngineJob {
+    factory: Arc<EngineFactory>,
     workers_per_lane: usize,
     queue_depth: usize,
-    lanes: Mutex<BTreeMap<String, Lane>>,
-    next_generation: std::sync::atomic::AtomicU64,
+    deadline_s: Option<f64>,
 }
 
-impl Server {
-    pub fn new(artifact_dir: PathBuf, workers_per_lane: usize) -> Server {
-        Server {
-            artifact_dir,
-            metrics: Arc::new(Metrics::new()),
-            workers_per_lane: workers_per_lane.max(1),
-            queue_depth: 1024,
-            lanes: Mutex::new(BTreeMap::new()),
-            next_generation: std::sync::atomic::AtomicU64::new(1),
-        }
+impl LaneJob for EngineJob {
+    fn kind(&self) -> &'static str {
+        "server"
     }
 
-    pub fn with_default_dir(workers_per_lane: usize) -> Server {
-        Server::new(crate::default_artifact_dir(), workers_per_lane)
+    fn queue_depth(&self) -> usize {
+        self.queue_depth
     }
 
-    /// Bound each lane's queue (backpressure watermark). Applies to lanes
-    /// spawned after the call.
-    pub fn with_queue_depth(mut self, depth: usize) -> Server {
-        self.queue_depth = depth.max(1);
-        self
-    }
-
-    fn spawn_lane(&self, cfg: &EngineConfig) -> Lane {
-        let (tx, rx) = sync_channel::<Job>(self.queue_depth);
+    fn spawn_workers(
+        &self,
+        cfg: &EngineConfig,
+        rx: Receiver<Job>,
+        metrics: Arc<Metrics>,
+    ) -> Vec<JoinHandle<()>> {
         let rx = Arc::new(Mutex::new(rx));
         let mut handles = vec![];
         for w in 0..self.workers_per_lane {
             let rx: Arc<Mutex<Receiver<Job>>> = rx.clone();
-            let metrics = self.metrics.clone();
+            let metrics = metrics.clone();
             let cfg = cfg.clone();
-            let dir = self.artifact_dir.clone();
+            let factory = self.factory.clone();
+            let deadline_s = self.deadline_s;
             let name = format!("toma-worker-{w}");
             handles.push(
                 std::thread::Builder::new()
@@ -101,10 +79,7 @@ impl Server {
                     .spawn(move || {
                         // Each worker owns its PJRT client + compiled
                         // executables for the lifetime of the lane.
-                        let engine = Runtime::new(dir)
-                            .map(Arc::new)
-                            .and_then(|rt| Engine::new(rt, cfg.clone()));
-                        let engine = match engine {
+                        let engine = match factory(&cfg) {
                             Ok(e) => e,
                             Err(e) => {
                                 // Fail every job this worker would serve.
@@ -114,13 +89,13 @@ impl Server {
                                         Ok(j) => j,
                                         Err(_) => return,
                                     };
-                                    metrics.inc("requests_err");
-                                    let _ = job.done.send(Completion {
-                                        request: job.request,
-                                        result: Err(anyhow!("{msg}")),
-                                        queued_s: 0.0,
-                                        service_s: 0.0,
-                                    });
+                                    // Overdue jobs still shed first: the
+                                    // deadline error is the truthful one.
+                                    let dl = job.request.deadline_s.or(deadline_s);
+                                    let Some(job) = job.shed_if_overdue(dl, &metrics) else {
+                                        continue;
+                                    };
+                                    job.fail(&metrics, &msg);
                                 }
                             }
                         };
@@ -132,12 +107,19 @@ impl Server {
                                     Err(_) => return, // queue closed
                                 }
                             };
-                            let queued_s = job.enqueued.elapsed().as_secs_f64();
+                            // Deadline shedding inherited from the
+                            // scheduler: one shared implementation.
+                            let dl = job.request.deadline_s.or(deadline_s);
+                            let Some(job) = job.shed_if_overdue(dl, &metrics) else {
+                                continue;
+                            };
+                            let queued_s = job.queued_s();
                             metrics.observe_s("queue_wait", queued_s);
                             let t0 = Instant::now();
                             let result = engine.generate(&job.request);
                             let service_s = t0.elapsed().as_secs_f64();
                             metrics.observe_s("service_time", service_s);
+                            metrics.observe_s("e2e_time", queued_s + service_s);
                             metrics.inc(if result.is_ok() {
                                 "requests_ok"
                             } else {
@@ -159,37 +141,68 @@ impl Server {
                     .expect("spawn worker"),
             );
         }
-        let generation = self
-            .next_generation
-            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        Lane {
-            tx,
-            handles,
-            generation,
-        }
+        handles
+    }
+}
+
+/// The per-request serving front-end (one engine per worker thread).
+pub struct Server {
+    front: LaneFrontEnd<EngineJob>,
+    pub metrics: Arc<Metrics>,
+}
+
+impl Server {
+    pub fn new(artifact_dir: PathBuf, workers_per_lane: usize) -> Server {
+        Server::with_engine_factory(
+            move |cfg: &EngineConfig| {
+                Runtime::new(artifact_dir.clone())
+                    .map(Arc::new)
+                    .and_then(|rt| Engine::new(rt, cfg.clone()))
+            },
+            workers_per_lane,
+        )
     }
 
-    /// The lane's sender plus the generation it belongs to — the identity
-    /// a failed submit must present to [`Server::evict_lane`].
-    fn lane_tx(&self, cfg: &EngineConfig) -> (SyncSender<Job>, u64) {
-        let mut lanes = self.lanes.lock().unwrap();
-        let lane = lanes
-            .entry(cfg.key())
-            .or_insert_with(|| self.spawn_lane(cfg));
-        (lane.tx.clone(), lane.generation)
+    /// Build a server whose workers construct engines through `factory`
+    /// (the injection seam the shared lane tests use; also the hook for
+    /// alternative runtimes).
+    pub fn with_engine_factory<F>(factory: F, workers_per_lane: usize) -> Server
+    where
+        F: Fn(&EngineConfig) -> Result<Engine> + Send + Sync + 'static,
+    {
+        let front = LaneFrontEnd::new(EngineJob {
+            factory: Arc::new(factory),
+            workers_per_lane: workers_per_lane.max(1),
+            queue_depth: 1024,
+            deadline_s: None,
+        });
+        let metrics = front.metrics.clone();
+        Server { front, metrics }
     }
 
-    /// Remove the lane for `key` only if it is still the `generation` the
-    /// caller observed failing. Returns whether a lane was evicted; a
-    /// fresher lane (respawned by a concurrent submitter) is left alone.
-    fn evict_lane(&self, key: &str, generation: u64) -> bool {
-        let mut lanes = self.lanes.lock().unwrap();
-        if lanes.get(key).map(|l| l.generation) == Some(generation) {
-            lanes.remove(key);
-            true
-        } else {
-            false
-        }
+    pub fn with_default_dir(workers_per_lane: usize) -> Server {
+        Server::new(crate::default_artifact_dir(), workers_per_lane)
+    }
+
+    /// Bound each lane's queue (backpressure watermark). Applies to lanes
+    /// spawned after the call.
+    pub fn with_queue_depth(mut self, depth: usize) -> Server {
+        self.front.job_mut().queue_depth = depth.max(1);
+        self
+    }
+
+    /// Default admission deadline (seconds from submission): a request
+    /// still queued past it is shed instead of served late. Per-request
+    /// `GenRequest::deadline_s` overrides it.
+    pub fn with_deadline(mut self, deadline_s: f64) -> Server {
+        self.front.job_mut().deadline_s = Some(deadline_s.max(0.0));
+        self
+    }
+
+    /// The unified lane front-end (shared test harness + introspection).
+    #[cfg(test)]
+    pub(crate) fn front(&self) -> &LaneFrontEnd<EngineJob> {
+        &self.front
     }
 
     /// Submit a request; the completion arrives on the returned channel.
@@ -197,25 +210,7 @@ impl Server {
     /// lane (panicked workers) fails the request with an error completion
     /// and is respawned on the next submit.
     pub fn submit(&self, cfg: &EngineConfig, request: GenRequest) -> Receiver<Completion> {
-        let (tx, generation) = self.lane_tx(cfg);
-        let (done_tx, done_rx) = channel();
-        self.metrics.inc("requests_submitted");
-        let job = Job {
-            request,
-            enqueued: Instant::now(),
-            done: done_tx,
-        };
-        if let Err(std::sync::mpsc::SendError(job)) = tx.send(job) {
-            self.metrics.inc("requests_err");
-            self.evict_lane(&cfg.key(), generation);
-            let _ = job.done.send(Completion {
-                request: job.request,
-                result: Err(anyhow!("server lane died; resubmit")),
-                queued_s: 0.0,
-                service_s: 0.0,
-            });
-        }
-        done_rx
+        self.front.submit(cfg, request)
     }
 
     /// Non-blocking submit: fails fast when the lane queue is full, so
@@ -225,88 +220,35 @@ impl Server {
         cfg: &EngineConfig,
         request: GenRequest,
     ) -> Result<Receiver<Completion>> {
-        let (tx, generation) = self.lane_tx(cfg);
-        let (done_tx, done_rx) = channel();
-        match tx.try_send(Job {
-            request,
-            enqueued: Instant::now(),
-            done: done_tx,
-        }) {
-            Ok(()) => {
-                self.metrics.inc("requests_submitted");
-                Ok(done_rx)
-            }
-            Err(TrySendError::Full(_)) => {
-                self.metrics.inc("requests_rejected");
-                Err(anyhow!(
-                    "lane queue full ({} deep): backpressure",
-                    self.queue_depth
-                ))
-            }
-            Err(TrySendError::Disconnected(_)) => {
-                // Dead lane: drop *this incarnation* so the next submit
-                // respawns fresh (generation-checked: never a healthy
-                // respawn that beat us to it).
-                self.evict_lane(&cfg.key(), generation);
-                Err(anyhow!("server lane died; resubmit"))
-            }
-        }
+        self.front.try_submit(cfg, request)
     }
 
     /// Run a batch to completion (closed-loop), returning completions in
-    /// submission order. A lane dying mid-request yields error
-    /// completions for the affected requests rather than a panic.
+    /// submission order.
     pub fn run_batch(&self, cfg: &EngineConfig, requests: Vec<GenRequest>) -> Vec<Completion> {
-        let pairs: Vec<(GenRequest, Receiver<Completion>)> = requests
-            .into_iter()
-            .map(|r| {
-                let rx = self.submit(cfg, r.clone());
-                (r, rx)
-            })
-            .collect();
-        pairs
-            .into_iter()
-            .map(|(request, rx)| {
-                rx.recv().unwrap_or_else(|_| Completion {
-                    request,
-                    result: Err(anyhow!("server lane died mid-request")),
-                    queued_s: 0.0,
-                    service_s: 0.0,
-                })
-            })
-            .collect()
+        self.front.run_batch(cfg, requests)
     }
 
     /// Convenience: run a batch and return the successful results.
-    pub fn run_batch_ok(&self, cfg: &EngineConfig, requests: Vec<GenRequest>) -> Result<Vec<GenResult>> {
-        self.run_batch(cfg, requests)
-            .into_iter()
-            .map(|c| c.result)
-            .collect()
+    pub fn run_batch_ok(
+        &self,
+        cfg: &EngineConfig,
+        requests: Vec<GenRequest>,
+    ) -> Result<Vec<GenResult>> {
+        self.front.run_batch_ok(cfg, requests)
     }
 
     /// Drop all lanes, joining worker threads.
     pub fn shutdown(&self) {
-        let mut lanes = self.lanes.lock().unwrap();
-        let drained: Vec<Lane> = std::mem::take(&mut *lanes).into_values().collect();
-        for lane in drained {
-            drop(lane.tx);
-            for h in lane.handles {
-                let _ = h.join();
-            }
-        }
-    }
-}
-
-impl Drop for Server {
-    fn drop(&mut self) {
-        self.shutdown();
+        self.front.shutdown();
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::anyhow;
+    use crate::coordinator::frontend::harness;
 
     fn cfg() -> EngineConfig {
         EngineConfig::new("uvit_none", "baseline", None)
@@ -314,51 +256,9 @@ mod tests {
 
     /// Server against a directory with no artifacts: lanes spawn, their
     /// engines fail init, and every job gets a clean error completion —
-    /// which is all these eviction tests need (a live lane to evict).
+    /// which is all the init-failure test needs (a live lane to probe).
     fn dead_dir_server() -> Server {
-        Server::new(
-            std::env::temp_dir().join("toma_no_such_artifacts"),
-            1,
-        )
-    }
-
-    #[test]
-    fn stale_generation_cannot_evict_fresh_lane() {
-        let server = dead_dir_server();
-        let c = cfg();
-        let (_tx, gen1) = server.lane_tx(&c);
-        // A submitter that observed an *older* incarnation fail must not
-        // evict the current lane.
-        assert!(!server.evict_lane(&c.key(), gen1 + 1));
-        assert!(!server.evict_lane(&c.key(), gen1.wrapping_sub(1)));
-        assert_eq!(
-            server.lanes.lock().unwrap().get(&c.key()).map(|l| l.generation),
-            Some(gen1),
-            "stale eviction must leave the live lane in place"
-        );
-        // The matching generation does evict.
-        assert!(server.evict_lane(&c.key(), gen1));
-        assert!(server.lanes.lock().unwrap().get(&c.key()).is_none());
-        // A respawn gets a fresh identity, so the old generation is now
-        // permanently stale.
-        let (_tx, gen2) = server.lane_tx(&c);
-        assert!(gen2 > gen1);
-        assert!(!server.evict_lane(&c.key(), gen1));
-        server.shutdown();
-    }
-
-    #[test]
-    fn distinct_lanes_get_distinct_generations() {
-        let server = dead_dir_server();
-        let a = cfg();
-        let mut b = cfg();
-        b.steps = 7; // different key
-        let (_ta, ga) = server.lane_tx(&a);
-        let (_tb, gb) = server.lane_tx(&b);
-        assert_ne!(ga, gb);
-        // Re-fetching an existing lane reports the same generation.
-        assert_eq!(server.lane_tx(&a).1, ga);
-        server.shutdown();
+        Server::new(std::env::temp_dir().join("toma_no_such_artifacts"), 1)
     }
 
     #[test]
@@ -370,7 +270,76 @@ mod tests {
         let err = comp.result.err().expect("init must fail").to_string();
         assert!(err.contains("engine init failed"), "{err}");
         // The lane survives (init failure is not lane death).
-        assert!(server.lanes.lock().unwrap().contains_key(&c.key()));
+        assert!(server.front().has_lane(&c.key()));
+        assert_eq!(server.metrics.counter("lane_evicted"), 0);
+        server.shutdown();
+    }
+
+    /// Backpressure through the shared front-end harness — the Server-side
+    /// twin of the scheduler's queue-full test, with no copy-pasted body
+    /// (the PR 4 test-gap satellite).
+    #[test]
+    fn try_submit_rejects_when_lane_queue_full() {
+        // Hold the engine factory on a condvar so the single worker never
+        // starts draining; with queue_depth 1, the first submit fills the
+        // channel and the second must fail fast with backpressure.
+        let gate = Arc::new((Mutex::new(false), std::sync::Condvar::new()));
+        let g2 = gate.clone();
+        let server = Server::with_engine_factory(
+            move |_cfg: &EngineConfig| {
+                let (lock, cv) = &*g2;
+                let mut open = lock.lock().unwrap();
+                while !*open {
+                    open = cv.wait(open).unwrap();
+                }
+                Err(anyhow!("factory released"))
+            },
+            1,
+        )
+        .with_queue_depth(1);
+        harness::assert_try_submit_backpressure(server.front(), &cfg(), &move || {
+            let (lock, cv) = &*gate;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+        });
+    }
+
+    /// Death/respawn through the shared front-end harness: the first
+    /// factory call panics (killing the lane's only worker); resubmits
+    /// must reach a respawned lane whose live worker answers — here with
+    /// the healthy factory's init error, since there are no artifacts.
+    #[test]
+    fn forced_lane_death_then_resubmit_respawns_generation_checked() {
+        let died = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let d2 = died.clone();
+        let server = Server::with_engine_factory(
+            move |_cfg: &EngineConfig| {
+                if !d2.swap(true, std::sync::atomic::Ordering::SeqCst) {
+                    panic!("injected lane death");
+                }
+                Err(anyhow!("healthy respawn, artifact-free"))
+            },
+            1,
+        );
+        harness::assert_forced_death_respawns(server.front(), &cfg(), &|c| {
+            c.result
+                .as_ref()
+                .err()
+                .is_some_and(|e| e.to_string().contains("engine init failed"))
+        });
+        assert!(died.load(std::sync::atomic::Ordering::SeqCst));
+    }
+
+    /// The server-wide deadline (inherited scheduler semantics): a request
+    /// older than the deadline is shed at dequeue, not served.
+    #[test]
+    fn server_deadline_sheds_overdue_requests() {
+        let server = dead_dir_server().with_deadline(0.0);
+        let rx = server.submit(&cfg(), GenRequest::new("late", 1));
+        let c = rx.recv().expect("completion");
+        let err = c.result.err().expect("shed").to_string();
+        assert!(err.contains("deadline"), "unexpected error: {err}");
+        assert_eq!(server.metrics.counter("shed_deadline"), 1);
         server.shutdown();
     }
 }

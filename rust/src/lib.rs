@@ -16,16 +16,26 @@
 //!   selection (incremental-gain lazy greedy since PR 1), attention merge,
 //!   transpose/pinv unmerge, region layouts.
 //! * [`baselines`] — ToMeSD / ToFu / ToDo / TLB reimplementations.
-//! * [`coordinator`] — engine, plan cache, per-request server, metrics
-//!   (latency histograms with p50/p95/p99), and — since PR 2 —
-//!   [`coordinator::scheduler`]: step-level continuous micro-batching.
-//!   Plan-compatible requests form *cohorts* that advance through batched
-//!   denoising steps sharing one `PlanSlot` (selection/weights amortize
-//!   across the batch), join mid-flight at refresh boundaries, leave on
-//!   completion, and are governed by a `BatchPolicy` (batch size cap,
-//!   formation window, bounded queues with backpressure, deadline
-//!   shedding). Batched latents are bit-identical to per-request ones
-//!   (`tests/scheduler_equivalence.rs`).
+//! * [`coordinator`] — engine, plan cache, metrics (latency histograms
+//!   with p50/p95/p99), and the two serving front-ends. Since PR 4 both
+//!   are thin instantiations of [`coordinator::frontend`]'s generic
+//!   `LaneFrontEnd<J: LaneJob>` — one shared implementation of the lane
+//!   map, bounded queues with submit/try_submit backpressure, deadline
+//!   shedding, generation-checked dead-lane evict/respawn and the
+//!   lane-lifecycle counters (`lane_spawned` / `lane_respawned` /
+//!   `lane_evicted` / `shed_deadline` / `rejected_backpressure`):
+//!   the per-request `Server` (one engine per worker thread) and — since
+//!   PR 2 — [`coordinator::scheduler`]: step-level continuous
+//!   micro-batching. Plan-compatible requests form *cohorts* that advance
+//!   through batched denoising steps sharing one `PlanSlot`
+//!   (selection/weights amortize across the batch), join mid-flight at
+//!   refresh boundaries, leave on completion, and are governed by a
+//!   `LanePolicy` — the static `BatchPolicy`, or the PR 4
+//!   `AdaptivePolicy` deriving each lane's formation window and batch cap
+//!   from observed inter-arrival times and a p99 target
+//!   (`--policy static|adaptive`). Batched latents are bit-identical to
+//!   per-request ones (`tests/scheduler_equivalence.rs`); the `frontend`
+//!   seam is where a future PJRT cohort backend plugs in.
 //! * [`runtime`] — PJRT client, artifact registry, weight store. The
 //!   XLA-backed layer sits behind the `pjrt` cargo feature; the default
 //!   build compiles same-API pure-Rust stubs, so no XLA toolchain is

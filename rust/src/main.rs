@@ -13,13 +13,15 @@
 use std::sync::Arc;
 
 use toma::anyhow;
-use toma::coordinator::{EngineConfig, GenRequest, Server};
+use toma::coordinator::scheduler::{BatchPolicy, HostBackend, LanePolicy, DEFAULT_TAU};
+use toma::coordinator::{EngineConfig, GenRequest, Scheduler, Server};
+use toma::model::HostUVit;
 use toma::tensor::element::StorageDtype;
 use toma::util::error::Result;
-use toma::runtime::Runtime;
+use toma::runtime::{ModelInfo, Runtime};
 use toma::toma::plan::ReuseSchedule;
 use toma::util::argparse::Args;
-use toma::workload::{request_stream, PromptSet};
+use toma::workload::{request_stream, PromptSet, RequestSpec};
 
 fn usage() -> String {
     "usage: toma-serve <command> [options]\n\
@@ -27,7 +29,17 @@ fn usage() -> String {
      commands:\n\
        generate   --model uvit_s --variant toma --ratio 0.5 --steps 20 --seed 0\n\
        serve      --model uvit_xs --variant toma --ratio 0.5 --requests 8 --workers 2\n\
-                  (both take --storage f32|bf16|f16: weight-panel storage dtype)\n\
+                  --backend pjrt|host   pjrt: per-request server over compiled\n\
+                                        artifacts; host: artifact-free micro-batching\n\
+                                        scheduler on a synthetic host model\n\
+                  --policy static|adaptive   batch formation policy (host backend):\n\
+                                        static uses --max-batch/--window as-is;\n\
+                                        adaptive derives the window and batch cap\n\
+                                        per lane from observed inter-arrival times\n\
+                                        and --p99-target (see scheduler::policy)\n\
+                  --max-batch 8 --window 0.005 --p99-target 2.0 --rate 0\n\
+                  --deadline <s>        shed requests queued longer than this\n\
+                  (generate/serve take --storage f32|bf16|f16: weight-panel dtype)\n\
        table      --id {1,2,3,4,5,7,8,9,10,C} [--device rtx6000] [--full]\n\
        artifacts  [--compile <name>]\n\
        info\n\
@@ -124,25 +136,82 @@ fn cmd_generate(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_serve(args: &Args) -> Result<()> {
-    let cfg = engine_config(args)?;
-    let n = args.get_usize("requests", 8);
-    let workers = args.get_usize("workers", 2);
-    let rate = args.get_f64("rate", 0.0);
-    let prompts = if args.get_str("prompts", "gemrec") == "imagenet" {
-        PromptSet::imagenet()
-    } else {
-        PromptSet::gemrec()
-    };
-    let stream = request_stream(&prompts, n, rate, args.get_u64("seed", 0));
+/// `--deadline <s>`: absent is fine (shedding off), malformed is an
+/// error — a typo must not silently disable shedding.
+fn parse_deadline(args: &Args) -> Result<Option<f64>> {
+    match args.get("deadline") {
+        None => Ok(None),
+        Some(v) => v
+            .parse::<f64>()
+            .map(Some)
+            .map_err(|_| anyhow!("invalid --deadline `{v}` (expected seconds)")),
+    }
+}
 
-    let server = Server::with_default_dir(workers);
+/// The serve batch-formation policy from `--policy` / `--max-batch` /
+/// `--window` / `--p99-target` (host backend only).
+fn lane_policy(args: &Args) -> Result<LanePolicy> {
+    let base = BatchPolicy {
+        max_batch: args.get_usize("max-batch", 8),
+        max_queue_wait_s: args.get_f64("window", 0.005),
+        deadline_s: parse_deadline(args)?,
+        ..Default::default()
+    };
+    let name = args.get_str("policy", "static");
+    LanePolicy::parse(&name, base, args.get_f64("p99-target", 2.0))
+        .ok_or_else(|| anyhow!("unknown --policy `{name}` (accepted: static, adaptive)"))
+}
+
+/// Artifact-free serving through the micro-batching scheduler on a
+/// synthetic host model — the path that exercises `--policy` and prints
+/// the unified front-end's lane-lifecycle counters.
+fn serve_host(args: &Args, cfg: &EngineConfig, stream: &[RequestSpec]) -> Result<()> {
+    let policy = lane_policy(args)?;
+    println!("host backend, policy: {policy:?}");
+    let info = ModelInfo::synthetic(&cfg.model, 8, 3, 32, 4, 4, 8);
+    let model = Arc::new(HostUVit::synthetic(&info, 2, 7));
+    let sched = Scheduler::new(policy, move |c: &EngineConfig| {
+        HostBackend::boxed(model.clone(), c.clone(), 4, DEFAULT_TAU)
+    });
+    let t0 = std::time::Instant::now();
+    let mut rxs = vec![];
+    for r in stream {
+        // Open loop: honor the stream's Poisson arrival offsets.
+        let dt = r.arrival_s - t0.elapsed().as_secs_f64();
+        if dt > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(dt));
+        }
+        rxs.push(sched.submit(cfg, GenRequest::new(&r.prompt, r.seed)));
+    }
+    let ok = rxs
+        .into_iter()
+        .filter(|rx| rx.recv().map(|c| c.result.is_ok()).unwrap_or(false))
+        .count();
+    let wall = t0.elapsed().as_secs_f64();
+    let n = stream.len();
+    println!(
+        "\nserved {ok}/{n} requests in {wall:.2}s  ({:.3} img/s)",
+        ok as f64 / wall
+    );
+    println!("{}", sched.metrics.render());
+    sched.shutdown();
+    Ok(())
+}
+
+/// Per-request serving over compiled artifacts (the pjrt path).
+fn serve_pjrt(args: &Args, cfg: &EngineConfig, stream: &[RequestSpec]) -> Result<()> {
+    let workers = args.get_usize("workers", 2);
+    let n = stream.len();
+    let mut server = Server::with_default_dir(workers);
+    if let Some(dl) = parse_deadline(args)? {
+        server = server.with_deadline(dl);
+    }
     let t0 = std::time::Instant::now();
     let reqs: Vec<GenRequest> = stream
         .iter()
         .map(|r| GenRequest::new(&r.prompt, r.seed))
         .collect();
-    let completions = server.run_batch(&cfg, reqs);
+    let completions = server.run_batch(cfg, reqs);
     let wall = t0.elapsed().as_secs_f64();
 
     let ok = completions.iter().filter(|c| c.result.is_ok()).count();
@@ -163,6 +232,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     }
     Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = engine_config(args)?;
+    let n = args.get_usize("requests", 8);
+    let rate = args.get_f64("rate", 0.0);
+    let prompts = if args.get_str("prompts", "gemrec") == "imagenet" {
+        PromptSet::imagenet()
+    } else {
+        PromptSet::gemrec()
+    };
+    let stream = request_stream(&prompts, n, rate, args.get_u64("seed", 0));
+    match args.get_str("backend", "pjrt").as_str() {
+        "host" => serve_host(args, &cfg, &stream),
+        "pjrt" => serve_pjrt(args, &cfg, &stream),
+        other => Err(anyhow!("unknown --backend `{other}` (accepted: pjrt, host)")),
+    }
 }
 
 fn cmd_artifacts(args: &Args) -> Result<()> {

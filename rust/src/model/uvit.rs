@@ -435,7 +435,15 @@ impl HostUVit {
     /// packs its head panels (q pre-scaled by 1/sqrt(dh), V transposed)
     /// and runs the two blocked GEMMs serially on its worker — the same
     /// arithmetic per head regardless of how many samples are folded.
-    fn mha(&self, q: &[f32], k: &[f32], v: &[f32], samples: usize, nq: usize, nk: usize) -> Vec<f32> {
+    fn mha(
+        &self,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        samples: usize,
+        nq: usize,
+        nk: usize,
+    ) -> Vec<f32> {
         let d = self.info.dim;
         let h = self.info.heads;
         let dh = d / h;
@@ -982,7 +990,11 @@ mod tests {
                 k: k_loc,
                 n: n_loc,
             };
-            let single = model.forward(x, *t, c, &HostReduce::Toma { weights: &w, layout: &layout });
+            let reduce = HostReduce::Toma {
+                weights: &w,
+                layout: &layout,
+            };
+            let single = model.forward(x, *t, c, &reduce);
             assert_eq!(batched[i], single, "toma sample {i} diverged under batching");
         }
     }

@@ -602,11 +602,21 @@ pub fn table10(_args: &Args) -> Result<String> {
 }
 
 pub fn table_c(_args: &Args) -> Result<String> {
-    let mut t = Table::new("App. C — ideal vs practical speedup (N=4096, d=640)")
-        .headers(&["Merge ratio", "Kept r", "Ideal", "Practical (closed form)", "Cost model (RTX6000)"]);
+    let mut t = Table::new("App. C — ideal vs practical speedup (N=4096, d=640)").headers(&[
+        "Merge ratio",
+        "Kept r",
+        "Ideal",
+        "Practical (closed form)",
+        "Cost model (RTX6000)",
+    ]);
     let base = cost_sec_per_img(PaperModel::SdxlBase, Variant::Baseline, 0.0, GpuModel::Rtx6000);
     for ratio in [0.1, 0.25, 0.5, 0.75, 0.9] {
-        let sec = cost_sec_per_img(PaperModel::SdxlBase, Variant::toma_default(), ratio, GpuModel::Rtx6000);
+        let sec = cost_sec_per_img(
+            PaperModel::SdxlBase,
+            Variant::toma_default(),
+            ratio,
+            GpuModel::Rtx6000,
+        );
         t.row(vec![
             format!("{ratio:.2}"),
             format!("{:.2}", 1.0 - ratio),

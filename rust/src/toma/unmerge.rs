@@ -38,7 +38,13 @@ mod tests {
     use crate::toma::merge::{build_merge_weights, merge};
     use crate::util::{prop, Pcg64};
 
-    fn setup(n: usize, d: usize, k: usize, tau: f32, seed: u64) -> (Vec<f32>, MergeWeights, Vec<f32>) {
+    fn setup(
+        n: usize,
+        d: usize,
+        k: usize,
+        tau: f32,
+        seed: u64,
+    ) -> (Vec<f32>, MergeWeights, Vec<f32>) {
         let x = Pcg64::new(seed).normal_vec(n * d);
         let sim = similarity_matrix(&x, n, d);
         let idx = fl_select(&sim, n, k);
