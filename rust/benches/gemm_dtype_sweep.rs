@@ -6,6 +6,14 @@
 //! bytes per dtype — and asserting the bf16 footprint is *exactly* half
 //! of f32's, which is the entire point of the storage abstraction.
 //!
+//! Part 1b (`kernel_dispatch`) pins the PR 5 microkernel seam: the same
+//! packed-panel GEMM forced through the scalar reference vs the explicit
+//! AVX2+FMA SIMD kernels, per storage dtype — and asserts, on hosts where
+//! the SIMD dispatch is supported, that the bf16/f16 widening kernels are
+//! strictly faster than scalar (the whole point of hand-vectorizing the
+//! widening loads). The rows land in `BENCH_gemm_dtype.json`, so the CI
+//! bench-diff gate tracks both kernel paths' trends.
+//!
 //! Part 2 is a Table-6-style latency/accuracy row: the same request
 //! generated end-to-end through the per-request host engine with f32 vs
 //! bf16 vs f16 weight panels, with the quality deltas
@@ -29,6 +37,7 @@ use toma::report::{fmt_secs, Table};
 use toma::runtime::ModelInfo;
 use toma::tensor::element::StorageDtype;
 use toma::tensor::gemm::Panels;
+use toma::tensor::kernel::{self, Dispatch};
 use toma::util::Pcg64;
 
 /// UViT linear-layer shapes at width 512 (m = tokens, k = d_in, n = d_out).
@@ -40,6 +49,8 @@ const SHAPES: [(&str, usize, usize, usize); 3] = [
 
 fn main() {
     let mut runner = Runner::from_args();
+    runner.note("kernel_dispatch", kernel::report());
+    println!("kernel dispatch: {}", kernel::report());
     let mut rng = Pcg64::new(0xD7E);
 
     // --- Part 1: kernel sweep over storage dtypes. ---------------------
@@ -81,6 +92,52 @@ fn main() {
     }
     println!("\n{}", table.render());
 
+    // --- Part 1b: kernel_dispatch — scalar vs explicit SIMD per dtype. --
+    let mut kd = Table::new("kernel_dispatch — scalar vs SIMD microkernel (proj 256x512x512)")
+        .headers(&["Dtype", "Kernel", "Median", "GFLOP/s"]);
+    let (m, k, n) = (256usize, 512usize, 512usize);
+    let a = rng.normal_vec(m * k);
+    let scale = 1.0 / (k as f32).sqrt();
+    let w: Vec<f32> = rng.normal_vec(k * n).into_iter().map(|v| v * scale).collect();
+    let flops = 2.0 * (m * k * n) as f64;
+    for dtype in StorageDtype::ALL {
+        let panels = Panels::pack(&w, k, n, dtype);
+        let mut medians = std::collections::BTreeMap::new();
+        for (disp, tag) in [(Dispatch::Scalar, "scalar"), (Dispatch::Avx2Fma, "simd")] {
+            if !disp.supported() {
+                continue;
+            }
+            let mut c = vec![0.0f32; m * n];
+            let label = format!("kernel_dispatch_{dtype}_{tag}");
+            let med = runner.bench(&label, || {
+                panels.matmul_bt_into_as(disp, &a, &mut c, m, k, n);
+                std::hint::black_box(&c);
+            });
+            if med > 0.0 {
+                kd.row(vec![
+                    dtype.to_string(),
+                    tag.into(),
+                    fmt_secs(med),
+                    format!("{:.2}", flops / med / 1e9),
+                ]);
+                medians.insert(tag, med);
+            }
+        }
+        // The acceptance pin: where the SIMD dispatch runs, the
+        // hand-vectorized widening kernels must beat the scalar path at
+        // model shapes (f32 is reported but not asserted — it is the
+        // bit-identity path, not the bandwidth play).
+        if let (Some(&sc), Some(&si)) = (medians.get("scalar"), medians.get("simd")) {
+            if dtype != StorageDtype::F32 {
+                assert!(
+                    si < sc,
+                    "{dtype}: SIMD widening kernel must beat scalar ({si:.3e}s vs {sc:.3e}s)"
+                );
+            }
+        }
+    }
+    println!("\n{}", kd.render());
+
     // --- Part 2: table6-style f32-vs-half latency/accuracy row. --------
     // Timed on a separate un-JSON'd runner: these are wall-clock e2e
     // generations, which the CI gate's own policy keeps warn-only — only
@@ -92,6 +149,7 @@ fn main() {
         max_iters: runner.max_iters,
         results: vec![],
         json: None,
+        notes: vec![],
     };
     let info = ModelInfo::synthetic("uvit_dtype", 8, 2, 64, 4, 4, 8);
     let master = Arc::new(HostUVit::synthetic(&info, 2, 0x5EED));

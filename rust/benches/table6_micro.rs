@@ -26,6 +26,11 @@ const GRID: usize = 32;
 
 fn main() {
     let mut runner = Runner::from_args();
+    // Record which microkernel path actually serviced the GEMMs, so the
+    // JSON medians stay comparable across hosts (a scalar-only box and an
+    // AVX2 box are different baselines, not regressions).
+    runner.note("kernel_dispatch", toma::tensor::kernel::report());
+    println!("kernel dispatch: {}", toma::tensor::kernel::report());
     let mut rng = Pcg64::new(0);
     let x = rng.normal_vec(N * D);
 

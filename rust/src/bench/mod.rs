@@ -50,6 +50,10 @@ pub struct Runner {
     pub results: Vec<BenchResult>,
     /// Where to write the JSON record on drop (`--json <path>`).
     pub json: Option<PathBuf>,
+    /// Free-form environment annotations serialized into the JSON record
+    /// (e.g. which microkernel dispatch actually ran), so records stay
+    /// comparable across hosts. Ignored by `bench::diff`.
+    pub notes: Vec<(String, String)>,
 }
 
 impl Default for Runner {
@@ -67,7 +71,15 @@ impl Runner {
             max_iters: 1000,
             results: vec![],
             json: None,
+            notes: vec![],
         }
+    }
+
+    /// Record an environment annotation for the JSON record (last write
+    /// wins for a repeated key).
+    pub fn note(&mut self, key: &str, value: &str) {
+        self.notes.retain(|(k, _)| k != key);
+        self.notes.push((key.to_string(), value.to_string()));
     }
 
     /// Configure from `cargo bench -- [filter] [--quick] [--json <path>]`
@@ -149,9 +161,15 @@ impl Runner {
                 )
             })
             .collect();
+        let notes: Vec<String> = self
+            .notes
+            .iter()
+            .map(|(k, v)| format!("\"{}\": \"{}\"", esc(k), esc(v)))
+            .collect();
         format!(
-            "{{\"bench\": \"{}\", \"results\": [\n{}\n]}}\n",
+            "{{\"bench\": \"{}\", \"notes\": {{{}}}, \"results\": [\n{}\n]}}\n",
             esc(&Self::target_name()),
+            notes.join(", "),
             rows.join(",\n")
         )
     }
@@ -283,6 +301,30 @@ mod tests {
         let rows = parsed.get("results").and_then(|v| v.as_arr()).unwrap();
         assert_eq!(rows.len(), 1);
         assert!(rows[0].get("iters").and_then(|v| v.as_usize()).unwrap() >= 1);
+    }
+
+    #[test]
+    fn notes_serialize_and_dedupe() {
+        let mut r = Runner::new();
+        r.min_time_s = 0.001;
+        r.max_iters = 3;
+        r.note("kernel_dispatch", "scalar");
+        r.note("kernel_dispatch", "avx2+fma"); // last write wins
+        r.bench("noted", || {
+            std::hint::black_box((0..10).sum::<u64>());
+        });
+        let j = r.to_json();
+        assert!(j.contains("\"kernel_dispatch\": \"avx2+fma\""));
+        assert!(!j.contains("\"kernel_dispatch\": \"scalar\""));
+        let parsed = crate::util::json::Json::parse(&j).expect("valid json");
+        let note = parsed
+            .get("notes")
+            .and_then(|n| n.get("kernel_dispatch"))
+            .and_then(|v| v.as_str())
+            .expect("note present");
+        assert_eq!(note, "avx2+fma");
+        // diff still reads the results regardless of notes.
+        assert!(diff::parse_medians(&j).expect("medians").contains_key("noted"));
     }
 
     #[test]

@@ -13,9 +13,12 @@
 //! lifecycle counters here — `lane_spawned`, `lane_respawned`,
 //! `lane_evicted`, `shed_deadline`, `rejected_backpressure` — so
 //! `toma-serve serve` and [`Metrics::render`] show lane health (respawn
-//! churn, shedding, backpressure) next to the request counters. The
-//! adaptive batch policy reads the `e2e_time` histogram's p99 from here
-//! as its overload-feedback signal ([`Metrics::quantile_s`]).
+//! churn, shedding, backpressure) next to the request counters. (The
+//! adaptive batch policy's overload feedback no longer reads the
+//! cumulative `e2e_time` histogram here — since PR 5 each scheduler lane
+//! feeds its own exponentially-decayed tail,
+//! `coordinator::scheduler::DecayedTail`; this registry stays the
+//! rendering/acceptance surface.)
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
@@ -88,7 +91,11 @@ impl Metrics {
         self.add(&format!("{prefix}_reuses"), s.reuses);
     }
 
-    /// One quantile (seconds) of a histogram, `q` in [0, 1].
+    /// One quantile (seconds) of a histogram, `q` in [0, 1]. Rendering /
+    /// inspection helper only: these histograms are lifetime-cumulative,
+    /// so since PR 5 no policy feedback reads them — the adaptive batch
+    /// policy consumes each lane's decayed `scheduler::DecayedTail`
+    /// instead. Do not wire new control loops to this accessor.
     pub fn quantile_s(&self, name: &str, q: f64) -> Option<f64> {
         let h = self.histograms.lock().unwrap();
         Some(h.get(name)?.quantile_us(q) / 1e6)

@@ -23,7 +23,9 @@
 //! [`Scheduler`] is its cohort-step [`LaneJob`] instantiation, and the
 //! formation window / batch cap come from a [`LanePolicy`] — either the
 //! static [`BatchPolicy`] or the load-adaptive [`AdaptivePolicy`]
-//! (`--policy static|adaptive`).
+//! (`--policy static|adaptive`), whose overload feedback reads each
+//! lane's own exponentially-decayed served tail ([`DecayedTail`]) rather
+//! than the shared lifetime-cumulative metrics histogram.
 
 pub mod cohort;
 pub mod host;
@@ -31,7 +33,9 @@ pub mod policy;
 
 pub use cohort::{Cohort, CohortBackend, CohortCompletion, MemberState, StepOutcome};
 pub use host::{HostBackend, HostContext, HostEngine, DEFAULT_TAU};
-pub use policy::{AdaptivePolicy, ArrivalEstimator, BatchPolicy, Formation, LanePolicy};
+pub use policy::{
+    AdaptivePolicy, ArrivalEstimator, BatchPolicy, DecayedTail, Formation, LanePolicy,
+};
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, TryRecvError};
@@ -181,6 +185,17 @@ fn note_arrival(est: &mut ArrivalEstimator, epoch: Instant, job: &Job) {
     est.on_arrival(job.enqueued.saturating_duration_since(epoch).as_secs_f64());
 }
 
+/// The adaptive policy's overload signal: this lane's decayed served p99
+/// as of now. One implementation for every formation read in the lane
+/// loop (static lanes always read `None` and never pay the quantile).
+fn observed_tail(adaptive: bool, tail: &DecayedTail, epoch: Instant) -> Option<f64> {
+    if adaptive {
+        tail.p99_at(epoch.elapsed().as_secs_f64())
+    } else {
+        None
+    }
+}
+
 /// One lane: a bounded queue drained by a single cohort that steps
 /// continuously. The loop blocks only while completely idle. The active
 /// [`LanePolicy`] derives each round's formation window and batch cap —
@@ -209,15 +224,12 @@ fn lane_loop(
     };
     let base = *policy.base();
     let adaptive = matches!(policy, LanePolicy::Adaptive(_));
-    // Served-tail feedback for the adaptive policy; the static path never
-    // pays the histogram lock for a value it would discard.
-    let observed_p99 = |metrics: &Metrics| {
-        if adaptive {
-            metrics.quantile_s("e2e_time", 0.99)
-        } else {
-            None
-        }
-    };
+    // Served-tail feedback for the adaptive policy: a *per-lane*
+    // exponentially-decayed reservoir, so the signal tracks this lane's
+    // current load — not the lifetime-cumulative, all-lanes `e2e_time`
+    // histogram (which still feeds metrics/rendering below). The static
+    // path never records into it.
+    let mut tail = DecayedTail::new(DecayedTail::DEFAULT_HALF_LIFE_S);
     let mut est = policy.estimator();
     let tokens_per_member = backend.tokens_per_member_step();
     let mut cohort = Cohort::new(backend);
@@ -241,7 +253,7 @@ fn lane_loop(
                 }
                 Err(_) => break,
             }
-            let f = policy.formation(&est, observed_p99(metrics));
+            let f = policy.formation(&est, observed_tail(adaptive, &tail, epoch));
             let window_s = f.window_s.clamp(0.0, BatchPolicy::MAX_QUEUE_WAIT_S);
             let window = Duration::from_secs_f64(window_s);
             let mut wait_until = Instant::now() + window;
@@ -310,7 +322,7 @@ fn lane_loop(
         // to the hard `base.max_batch` ceiling. (Otherwise a sparse-lane
         // cap of 1 would serialize an accumulated queue and collapse
         // throughput below the arrival rate.)
-        let f_cap = policy.formation(&est, observed_p99(metrics)).max_batch;
+        let f_cap = policy.formation(&est, observed_tail(adaptive, &tail, epoch)).max_batch;
         let backlog = pending.len() + cohort.len();
         let cap = f_cap.max(backlog.min(base.max_batch));
         while cohort.len() < cap && !pending.is_empty() && cohort.can_join() {
@@ -386,7 +398,11 @@ fn lane_loop(
                         r.stats.total_s = service_s;
                     }
                     metrics.observe_s("service_time", service_s);
-                    metrics.observe_s("e2e_time", meta.queued_s + service_s);
+                    let e2e_s = meta.queued_s + service_s;
+                    metrics.observe_s("e2e_time", e2e_s);
+                    if adaptive {
+                        tail.observe(epoch.elapsed().as_secs_f64(), e2e_s);
+                    }
                     metrics.inc(if c.result.is_ok() {
                         "requests_ok"
                     } else {

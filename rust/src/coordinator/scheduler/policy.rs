@@ -9,12 +9,14 @@
 //!   formation window and batch cap are *derived per formation round*
 //!   from the lane's observed inter-arrival times (an EWMA estimate fed
 //!   by the lane loop, [`ArrivalEstimator`]) and a p99 latency target,
-//!   with feedback from the served `e2e_time` p99 histogram in
-//!   `coordinator::metrics`. Under bursty arrivals the window widens (up
-//!   to the latency budget) so cohorts grow and the Sec. 4.3.2
-//!   selection/weights amortization survives; on an idle lane it
-//!   collapses to zero so a lone request is never held waiting for
-//!   company that will not come.
+//!   with overload feedback from a **per-lane exponentially-decayed**
+//!   served-latency reservoir ([`DecayedTail`]) — not the
+//!   lifetime-cumulative `e2e_time` histogram it replaced, whose
+//!   never-forgetting tail forced PR 4's 1/4 shrink floor. Under bursty
+//!   arrivals the window widens (up to the latency budget) so cohorts
+//!   grow and the Sec. 4.3.2 selection/weights amortization survives; on
+//!   an idle lane it collapses to zero so a lone request is never held
+//!   waiting for company that will not come.
 //!
 //! The policy only shapes *queuing* (when a cohort starts and how large
 //! it may grow) — never the numeric path, so batched latents stay
@@ -146,6 +148,145 @@ impl ArrivalEstimator {
     }
 }
 
+/// Exponentially-decayed per-lane latency reservoir: the overload-feedback
+/// signal for [`AdaptivePolicy`].
+///
+/// The lifetime-cumulative `e2e_time` histogram this replaces never
+/// forgets: one overload episode kept the served p99 elevated for the
+/// lane's whole life, which is why PR 4 floored the adaptive window
+/// shrink at 1/4. Here every recorded completion loses half its vote per
+/// `half_life_s`, so the p99 tracks *current* load — the floor is gone
+/// (see [`AdaptivePolicy::formation`]) — and each lane owns its own
+/// reservoir instead of reading a histogram shared across all lanes.
+///
+/// Like [`ArrivalEstimator`], it is driven with explicit time offsets
+/// (seconds since the lane epoch) and never reads wall-clock itself, so
+/// policy tests stay deterministic. Because decay scales all bucket
+/// weights uniformly, quantiles only move when *new* completions arrive
+/// to outweigh old ones; a lane that goes fully idle instead expires —
+/// once the decayed total weight falls below a threshold the reservoir
+/// reads as empty ([`DecayedTail::p99_at`] returns `None`).
+#[derive(Clone, Debug)]
+pub struct DecayedTail {
+    half_life_s: f64,
+    bounds_us: Vec<f64>,
+    weights: Vec<f64>,
+    total: f64,
+    last_s: f64,
+    max_us: f64,
+}
+
+impl DecayedTail {
+    /// Default half-life: a completion loses half its vote every 30 s.
+    pub const DEFAULT_HALF_LIFE_S: f64 = 30.0;
+
+    /// Decayed total weight below which the reservoir reads as empty
+    /// (a single observation expires after ~10 half-lives).
+    const MIN_TOTAL: f64 = 1e-3;
+
+    pub fn new(half_life_s: f64) -> DecayedTail {
+        let bounds_us = crate::util::stats::latency_bounds_us();
+        let n = bounds_us.len();
+        DecayedTail {
+            half_life_s: if half_life_s.is_finite() && half_life_s > 0.0 {
+                half_life_s
+            } else {
+                Self::DEFAULT_HALF_LIFE_S
+            },
+            bounds_us,
+            weights: vec![0.0; n + 1],
+            total: 0.0,
+            last_s: 0.0,
+            max_us: 0.0,
+        }
+    }
+
+    /// Record a served latency `v_s` observed at `now_s` seconds since
+    /// the lane epoch (decays everything recorded earlier first). If the
+    /// reservoir had fully expired while idle, the history — including
+    /// the overflow-bucket maximum, which decay alone never ages out — is
+    /// discarded before recording, so a long-faded spike cannot resurface
+    /// as the reported tail once traffic resumes.
+    pub fn observe(&mut self, now_s: f64, v_s: f64) {
+        self.decay_to(now_s);
+        if self.total < Self::MIN_TOTAL {
+            self.weights.iter_mut().for_each(|w| *w = 0.0);
+            self.total = 0.0;
+            self.max_us = 0.0;
+        }
+        let us = v_s.max(0.0) * 1e6;
+        let i = self.bounds_us.partition_point(|b| *b < us);
+        self.weights[i] += 1.0;
+        self.total += 1.0;
+        if us > self.max_us {
+            self.max_us = us;
+        }
+    }
+
+    fn decay_to(&mut self, now_s: f64) {
+        let dt = (now_s - self.last_s).max(0.0);
+        if dt > 0.0 && self.total > 0.0 {
+            let f = 0.5f64.powf(dt / self.half_life_s);
+            for w in &mut self.weights {
+                *w *= f;
+            }
+            self.total *= f;
+            // The overflow bucket reports `max_us`, which a pure weight
+            // decay would never age out while the lane stays busy (the
+            // expiry reset in `observe` only fires on idle lanes). Fade
+            // its excess over the top finite bound on the same half-life,
+            // so an ancient extreme spike converges to the bucket
+            // boundary instead of being reported as the current tail
+            // forever; fresh overflow observations push it back up.
+            let top = self.bounds_us.last().copied().unwrap_or(0.0);
+            if self.max_us > top {
+                self.max_us = top + (self.max_us - top) * f;
+            }
+        }
+        if now_s > self.last_s {
+            self.last_s = now_s;
+        }
+    }
+
+    /// Total decayed weight as seen at `now_s` (read-only virtual decay).
+    fn total_at(&self, now_s: f64) -> f64 {
+        if self.total <= 0.0 {
+            return 0.0;
+        }
+        let dt = (now_s - self.last_s).max(0.0);
+        self.total * 0.5f64.powf(dt / self.half_life_s)
+    }
+
+    /// Decayed-weight quantile in seconds; `None` while (effectively)
+    /// empty — fresh lanes, and lanes whose history has fully decayed.
+    pub fn quantile_s_at(&self, now_s: f64, q: f64) -> Option<f64> {
+        if self.total_at(now_s) < Self::MIN_TOTAL {
+            return None;
+        }
+        // Uniform decay cancels out of the quantile itself: rank over the
+        // undecayed-relative weights.
+        let target = q.clamp(0.0, 1.0) * self.total;
+        let mut acc = 0.0;
+        for (i, w) in self.weights.iter().enumerate() {
+            acc += w;
+            if acc >= target {
+                let us = if i < self.bounds_us.len() {
+                    self.bounds_us[i]
+                } else {
+                    self.max_us
+                };
+                return Some(us / 1e6);
+            }
+        }
+        Some(self.max_us / 1e6)
+    }
+
+    /// The decayed served p99 — what the adaptive policy feeds on.
+    pub fn p99_at(&self, now_s: f64) -> Option<f64> {
+        self.quantile_s_at(now_s, 0.99)
+    }
+}
+
 /// Load-adaptive batch policy: derives each round's formation window and
 /// batch cap from the observed arrival gap and a p99 latency target.
 ///
@@ -212,8 +353,9 @@ impl AdaptivePolicy {
     }
 
     /// Derive this round's formation window and batch cap.
-    /// `observed_p99_s` is the served end-to-end p99 so far (the
-    /// `e2e_time` histogram), `None` before any completion.
+    /// `observed_p99_s` is the lane's decayed served end-to-end p99
+    /// ([`DecayedTail::p99_at`]) — `None` before any completion, or once
+    /// an idle lane's history has fully decayed.
     pub fn formation(&self, est: &ArrivalEstimator, observed_p99_s: Option<f64>) -> Formation {
         let budget = self.budget_s();
         let Some(gap) = est.gap_s() else {
@@ -237,15 +379,16 @@ impl AdaptivePolicy {
             (window, cap.max(1))
         };
         // Overload feedback: already missing the target ⇒ shrink the
-        // window proportionally instead of adding formation latency.
-        // The factor is floored at 1/4 because the `e2e_time` histogram
-        // is lifetime-cumulative (it never decays): a transient overload
-        // episode must dampen batching, not quasi-permanently disable the
-        // amortization it exists to protect. A decayed/sliding-window
-        // per-lane p99 is the ROADMAP follow-up.
+        // window proportionally, giving the latency budget back to queue
+        // draining. The signal is the lane's *decayed* p99
+        // ([`DecayedTail`]), so a past episode fades on its half-life and
+        // no shrink floor is needed: a lane currently 10x over target may
+        // collapse its window toward zero, and it recovers as soon as the
+        // decayed tail does (PR 4's 1/4 floor only existed because the
+        // old cumulative histogram could never recover).
         if let Some(p99) = observed_p99_s {
             if p99 > self.p99_target_s {
-                window_s *= (self.p99_target_s / p99).clamp(0.25, 1.0);
+                window_s *= (self.p99_target_s / p99).min(1.0);
             }
         }
         Formation {
@@ -468,18 +611,88 @@ mod tests {
     }
 
     #[test]
-    fn adaptive_overload_feedback_shrinks_window_with_floor() {
+    fn adaptive_overload_feedback_shrinks_window_unfloored() {
         let p = adaptive();
         let est = trace(p.alpha, 0.001, 20);
         let relaxed = p.formation(&est, Some(0.5)).window_s; // under target
         let stressed = p.formation(&est, Some(2.0)).window_s; // 2x over
         assert!((relaxed - 0.007).abs() < 1e-9, "meeting the target: no cut");
         assert!((stressed - 0.0035).abs() < 1e-9, "2x over ⇒ half window");
-        // The cumulative histogram can stay elevated long after an
-        // overload: the shrink floors at 1/4 so batching is dampened,
-        // never disabled.
+        // The decayed signal recovers on its own, so unlike the PR 4
+        // cumulative-histogram feedback there is no 1/4 floor: a lane
+        // currently 100x over target cuts formation to 1%.
         let swamped = p.formation(&est, Some(100.0)).window_s;
-        assert!((swamped - 0.007 * 0.25).abs() < 1e-9, "floor at 1/4");
+        assert!((swamped - 0.007 * 0.01).abs() < 1e-9, "100x over ⇒ 1% window");
+    }
+
+    // -- decayed per-lane tail: deterministic offset-driven traces --
+
+    #[test]
+    fn decayed_tail_p99_tracks_current_load() {
+        let mut t = DecayedTail::new(10.0);
+        assert!(t.p99_at(0.0).is_none(), "empty reservoir has no signal");
+        for i in 0..100 {
+            t.observe(i as f64 * 0.01, 2.0); // overloaded: 2 s e2e
+        }
+        let hot = t.p99_at(1.0).expect("signal");
+        assert!(hot > 1.0, "p99 must see the 2 s tail: {hot}");
+        // Fast completions 8 half-lives later outweigh the stale tail
+        // (the old weight has decayed to ~0.4 of 200 fresh votes).
+        for i in 0..200 {
+            t.observe(80.0 + i as f64 * 0.01, 0.01);
+        }
+        let cooled = t.p99_at(82.0).expect("signal");
+        assert!(cooled < 0.1, "decayed tail must recover: {cooled}");
+    }
+
+    #[test]
+    fn decayed_tail_expires_when_idle() {
+        let mut t = DecayedTail::new(5.0);
+        t.observe(0.0, 3.0);
+        let p = t.p99_at(1.0).expect("fresh signal");
+        assert!(p >= 2.0 && p < 6.0, "bucketed p99 near 3 s: {p}");
+        // Quantiles are decay-invariant while the signal lives (uniform
+        // scaling cancels)...
+        assert_eq!(t.p99_at(20.0), t.p99_at(1.0));
+        // ...but an idle lane's reservoir expires entirely (~10
+        // half-lives for a single vote), unlike the cumulative histogram.
+        assert!(t.p99_at(300.0).is_none(), "stale signal must expire");
+        // And once expired, the first new completion starts a fresh
+        // history: the old 3 s spike (and its overflow-style maximum)
+        // must not resurface in the reported tail.
+        t.observe(300.0, 0.01);
+        let fresh = t.p99_at(300.5).expect("fresh signal");
+        assert!(fresh < 0.1, "expired history must not resurface: {fresh}");
+    }
+
+    #[test]
+    fn decayed_tail_overflow_spike_fades_under_sustained_traffic() {
+        // The overflow bucket (> the ~56 s top bound) reports `max_us`.
+        // An old 600 s spike must not be quoted as the current p99 once
+        // sustained (still-slow) traffic has aged it out: the excess over
+        // the top bound fades on the half-life. The 30 s gap is 6
+        // half-lives — total decays to ~0.016, well above MIN_TOTAL, so
+        // the idle expiry reset does NOT fire and this exercises the
+        // fade itself: without it, max_us stays 600 s and the first
+        // assertion fails.
+        let mut t = DecayedTail::new(5.0);
+        t.observe(0.0, 600.0);
+        for i in 0..100 {
+            t.observe(30.0 + i as f64 * 0.01, 60.0); // current tail: 60 s
+        }
+        let p = t.p99_at(31.5).expect("signal");
+        assert!(p < 70.0, "old 600 s spike must have faded: {p}");
+        assert!(p > 50.0, "the genuine 60 s overflow tail still shows: {p}");
+    }
+
+    #[test]
+    fn decayed_tail_clamps_degenerate_half_life_and_time() {
+        let mut t = DecayedTail::new(f64::NAN);
+        t.observe(5.0, 1.0);
+        // Out-of-order reads/writes clamp to non-negative elapsed time.
+        t.observe(1.0, 1.0);
+        assert!(t.p99_at(0.0).is_some());
+        assert!(t.quantile_s_at(5.0, 0.5).expect("median") > 0.5);
     }
 
     #[test]

@@ -33,7 +33,9 @@
 //!   `LanePolicy` — the static `BatchPolicy`, or the PR 4
 //!   `AdaptivePolicy` deriving each lane's formation window and batch cap
 //!   from observed inter-arrival times and a p99 target
-//!   (`--policy static|adaptive`). Batched latents are bit-identical to
+//!   (`--policy static|adaptive`), with overload feedback from a per-lane
+//!   exponentially-decayed served tail (`DecayedTail`, PR 5 — no shrink
+//!   floor needed). Batched latents are bit-identical to
 //!   per-request ones (`tests/scheduler_equivalence.rs`); the `frontend`
 //!   seam is where a future PJRT cohort backend plugs in.
 //! * [`runtime`] — PJRT client, artifact registry, weight store. The
@@ -56,13 +58,18 @@
 //!   worker pool + scoped parallel-for), [`tensor::element`] (sealed
 //!   storage-dtype abstraction: f32 / bf16 / f16 with exact u16 bit
 //!   conversions and widening loads; `StorageDtype` is the runtime
-//!   selector), [`tensor::gemm`] (blocked, register-tiled, multithreaded
-//!   GEMM, generic over each operand's storage element and accumulating
-//!   in f32, with the seed's scalar kernels kept as `gemm::scalar`
-//!   references and `gemm::Panels` as the runtime-dtype dispatch), and
-//!   [`tensor::ops`] (public kernel surface: GEMMs — including the
-//!   dtype-parameterized `matmul_e`/`matmul_at_e` — tiled column softmax,
-//!   parallel row ops).
+//!   selector), [`tensor::kernel`] (the PR 5 pluggable microkernel seam:
+//!   a sealed `MicroKernel` trait with the scalar reference loops and
+//!   explicit AVX2+FMA `std::arch` kernels — hand-vectorized bf16/f16
+//!   widening loads, 2x4 register tile — behind once-per-process runtime
+//!   dispatch with a `TOMA_KERNEL=scalar|auto` override; f32 results are
+//!   bit-identical under every dispatch), [`tensor::gemm`] (blocked,
+//!   register-tiled, multithreaded GEMM lowered onto that seam, generic
+//!   over each operand's storage element and accumulating in f32, with
+//!   the seed's scalar loop nests kept as `gemm::scalar` references and
+//!   `gemm::Panels` as the runtime-dtype dispatch), and [`tensor::ops`]
+//!   (public kernel surface: GEMMs — including the dtype-parameterized
+//!   `matmul_e`/`matmul_at_e` — tiled column softmax, parallel row ops).
 //! * [`util`], [`workload`], [`report`], [`bench`] — substrates
 //!   (`util::error` is the crate's dependency-free `anyhow` stand-in;
 //!   `bench::Runner` understands `--quick` and `--json <path>`, and

@@ -17,6 +17,13 @@
 //! row-local with shapes that do not change under batching. A sample's
 //! eps is therefore identical whether it runs alone or in a cohort of any
 //! size — the property the scheduler's equivalence tests pin down.
+//!
+//! Since PR 5 the GEMM substrate routes its inner loops through the
+//! pluggable microkernel seam (`tensor::kernel`: scalar reference or
+//! explicit AVX2+FMA SIMD, runtime-dispatched). This layer keeps its
+//! entry points and simply inherits the kernels — f32 results are
+//! bit-identical under every dispatch, so both invariants above are
+//! unaffected by `TOMA_KERNEL`.
 
 use crate::anyhow;
 use crate::runtime::{ModelInfo, WeightStore};

@@ -10,12 +10,20 @@
 //!   (n x k) blocked transpose), `matmul_at` packs `A`.
 //! * The kernel is tiled three ways: `KC`-deep k-panels (operand panel
 //!   fits L1/L2), `JB`-wide column tiles (the `Bᵀ` panel is reused across
-//!   every row of the block), and a 1x4 register tile (`dot4`) whose
-//!   unrolled-by-8 inner loops are written with exact-size slices so LLVM
-//!   autovectorizes them.
+//!   every row of the block), and a register tile (1x4, or 2x4 under the
+//!   SIMD kernel) over the innermost dots.
 //! * Work is split over the M dimension across the [`super::pool`] worker
 //!   pool; each worker owns a disjoint row-block of `C`, so no locks and
 //!   no false sharing on the hot path.
+//!
+//! Since PR 5 the innermost loops live behind the pluggable microkernel
+//! seam in [`super::kernel`]: `dot_e` and the blocked sweep here are thin
+//! dispatchers onto [`kernel::dot_e`] / [`kernel::bt_rows_as`], which route
+//! to either the scalar reference (`kernel::scalar`, verbatim the seed's
+//! 8-accumulator loops) or the explicit AVX2+FMA `std::arch` kernels
+//! (runtime-detected, `TOMA_KERNEL=scalar|auto` override). The f32 path
+//! is bit-identical under every dispatch; the `*_as` entry points take an
+//! explicit [`kernel::Dispatch`] so tests and benches can compare paths.
 //!
 //! `scalar` keeps the seed's naive loop nests as the reference
 //! implementation the property tests compare against.
@@ -24,48 +32,23 @@
 //! operand ([`Element`]: `f32`, `Bf16`, `F16`): loads widen into f32
 //! registers and C always accumulates in f32, so a half-precision panel
 //! halves the bytes the panel sweep streams through L1/L2 without
-//! changing the accumulation order. Instantiated at `f32` the generics
-//! compile to exactly the PR 1 kernels (identity conversions), which is
-//! what keeps the default path bit-exact. [`Panels`] is the runtime-
-//! dispatch form for call sites whose dtype is a config value.
+//! changing the accumulation order. [`Panels`] is the runtime-dispatch
+//! form for call sites whose dtype is a config value.
 
 use super::element::{Bf16, Element, StorageDtype, F16};
+use super::kernel::{self, Dispatch};
 use super::pool;
 
-/// k-panel depth: one A-row segment (KC floats) + a JB x KC B-panel stay
-/// resident in L1/L2 while the panel is swept.
-const KC: usize = 256;
-/// Column-tile width of C (rows of Bᵀ reused per panel sweep).
-const JB: usize = 64;
 /// Below this many multiply-adds the dispatch overhead beats parallelism.
 /// Shared with the model layer's attention dispatch so the serial/parallel
 /// crossover points stay in sync.
 pub(crate) const PAR_MIN_MACS: usize = 1 << 17;
 
-/// Contiguous dot product, 8-wide accumulators (autovectorizes). Loads
-/// widen each operand's storage element to f32; accumulation is f32.
+/// Contiguous widening dot product on the active microkernel — kept as
+/// the historical entry point; the implementation is [`kernel::dot_e`].
 #[inline(always)]
 pub fn dot_e<A: Element, B: Element>(a: &[A], b: &[B]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let n8 = a.len() / 8 * 8;
-    let mut acc = [0.0f32; 8];
-    let mut i = 0;
-    while i < n8 {
-        let x = &a[i..i + 8];
-        let y = &b[i..i + 8];
-        for l in 0..8 {
-            acc[l] += x[l].to_f32() * y[l].to_f32();
-        }
-        i += 8;
-    }
-    let mut s = 0.0f32;
-    for l in 0..8 {
-        s += acc[l];
-    }
-    for j in n8..a.len() {
-        s += a[j].to_f32() * b[j].to_f32();
-    }
-    s
+    kernel::dot_e(a, b)
 }
 
 /// f32 [`dot_e`] (the PR 1 entry point, kept for the f32 hot paths).
@@ -74,103 +57,24 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     dot_e(a, b)
 }
 
-/// 1x4 register tile: one A row segment against four Bᵀ rows at once —
-/// each A load is reused 4x, quadrupling arithmetic intensity. The
-/// widening `to_f32` is free for f32 and a shift/convert for the halves.
-#[inline(always)]
-fn dot4<A: Element, B: Element>(a: &[A], b0: &[B], b1: &[B], b2: &[B], b3: &[B]) -> [f32; 4] {
-    let n = a.len();
-    let n8 = n / 8 * 8;
-    let mut a0 = [0.0f32; 8];
-    let mut a1 = [0.0f32; 8];
-    let mut a2 = [0.0f32; 8];
-    let mut a3 = [0.0f32; 8];
-    let mut i = 0;
-    while i < n8 {
-        let x = &a[i..i + 8];
-        let y0 = &b0[i..i + 8];
-        let y1 = &b1[i..i + 8];
-        let y2 = &b2[i..i + 8];
-        let y3 = &b3[i..i + 8];
-        for l in 0..8 {
-            let xv = x[l].to_f32();
-            a0[l] += xv * y0[l].to_f32();
-            a1[l] += xv * y1[l].to_f32();
-            a2[l] += xv * y2[l].to_f32();
-            a3[l] += xv * y3[l].to_f32();
-        }
-        i += 8;
-    }
-    let mut out = [0.0f32; 4];
-    for l in 0..8 {
-        out[0] += a0[l];
-        out[1] += a1[l];
-        out[2] += a2[l];
-        out[3] += a3[l];
-    }
-    for j in n8..n {
-        let xv = a[j].to_f32();
-        out[0] += xv * b0[j].to_f32();
-        out[1] += xv * b1[j].to_f32();
-        out[2] += xv * b2[j].to_f32();
-        out[3] += xv * b3[j].to_f32();
-    }
-    out
-}
-
-/// Single-thread blocked kernel: `c` (rows r0..r1 of C, zeroed here)
-/// accumulates `A[r0..r1] · Bᵀ` where A is (m x k) and B is (n x k),
-/// each stored in its own element type, accumulated in f32.
-fn bt_kernel_rows<A: Element, B: Element>(
-    a: &[A],
-    bt: &[B],
-    c: &mut [f32],
-    r0: usize,
-    r1: usize,
-    k: usize,
-    n: usize,
-) {
-    for v in c.iter_mut() {
-        *v = 0.0;
-    }
-    let mut kb = 0;
-    while kb < k {
-        let kend = (kb + KC).min(k);
-        let mut jb = 0;
-        while jb < n {
-            let jend = (jb + JB).min(n);
-            for i in r0..r1 {
-                let arow = &a[i * k + kb..i * k + kend];
-                let crow = &mut c[(i - r0) * n..(i - r0) * n + n];
-                let mut j = jb;
-                while j + 4 <= jend {
-                    let s = dot4(
-                        arow,
-                        &bt[j * k + kb..j * k + kend],
-                        &bt[(j + 1) * k + kb..(j + 1) * k + kend],
-                        &bt[(j + 2) * k + kb..(j + 2) * k + kend],
-                        &bt[(j + 3) * k + kb..(j + 3) * k + kend],
-                    );
-                    crow[j] += s[0];
-                    crow[j + 1] += s[1];
-                    crow[j + 2] += s[2];
-                    crow[j + 3] += s[3];
-                    j += 4;
-                }
-                while j < jend {
-                    crow[j] += dot_e(arow, &bt[j * k + kb..j * k + kend]);
-                    j += 1;
-                }
-            }
-            jb = jend;
-        }
-        kb = kend;
-    }
-}
-
 /// C (m x n) = A (m x k) @ B (n x k)ᵀ, parallel over row blocks of C,
 /// generic over each operand's storage element (C stays f32).
 pub fn matmul_bt_into_e<A: Element, B: Element>(
+    a: &[A],
+    b: &[B],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    matmul_bt_into_e_as(kernel::active(), a, b, c, m, k, n)
+}
+
+/// [`matmul_bt_into_e`] on an explicit microkernel dispatch (unsupported
+/// dispatches fall back to scalar) — the bench/test seam for comparing
+/// kernel paths on the full blocked, pool-parallel GEMM.
+pub fn matmul_bt_into_e_as<A: Element, B: Element>(
+    d: Dispatch,
     a: &[A],
     b: &[B],
     c: &mut [f32],
@@ -185,14 +89,14 @@ pub fn matmul_bt_into_e<A: Element, B: Element>(
         return;
     }
     if m * k.max(1) * n < PAR_MIN_MACS {
-        bt_kernel_rows(a, b, c, 0, m, k, n);
+        kernel::bt_rows_as(d, a, b, c, 0, m, k, n);
         return;
     }
     let rows_per = pool::rows_per_task(m);
     pool::parallel_chunks_mut(c, rows_per * n, |ci, chunk| {
         let r0 = ci * rows_per;
         let r1 = r0 + chunk.len() / n;
-        bt_kernel_rows(a, b, chunk, r0, r1, k, n);
+        kernel::bt_rows_as(d, a, b, chunk, r0, r1, k, n);
     });
 }
 
@@ -327,10 +231,25 @@ impl Panels {
     /// `C (m x n) = A (m x k) @ panelsᵀ` with these panels as the (n x k)
     /// packed operand, dispatched to the matching widening kernel.
     pub fn matmul_bt_into(&self, a: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+        self.matmul_bt_into_as(kernel::active(), a, c, m, k, n)
+    }
+
+    /// [`Panels::matmul_bt_into`] on an explicit microkernel dispatch —
+    /// covers both the dtype arm *and* the kernel path in one call (the
+    /// `kernel_dispatch` bench section and the dispatch property tests).
+    pub fn matmul_bt_into_as(
+        &self,
+        d: Dispatch,
+        a: &[f32],
+        c: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) {
         match self {
-            Panels::F32(v) => matmul_bt_into_e(a, v, c, m, k, n),
-            Panels::Bf16(v) => matmul_bt_into_e(a, v, c, m, k, n),
-            Panels::F16(v) => matmul_bt_into_e(a, v, c, m, k, n),
+            Panels::F32(v) => matmul_bt_into_e_as(d, a, v, c, m, k, n),
+            Panels::Bf16(v) => matmul_bt_into_e_as(d, a, v, c, m, k, n),
+            Panels::F16(v) => matmul_bt_into_e_as(d, a, v, c, m, k, n),
         }
     }
 }
@@ -558,6 +477,28 @@ mod tests {
         let a: Vec<Bf16> = [1.0f32, 2.0, 3.0].iter().map(|&v| Bf16::from_f32(v)).collect();
         let b: Vec<F16> = [4.0f32, 5.0, 6.0].iter().map(|&v| F16::from_f32(v)).collect();
         assert_eq!(dot_e(&a, &b), 32.0); // small integers are exact in both
+    }
+
+    #[test]
+    fn forced_dispatches_agree_on_f32_bitwise() {
+        // The seam contract in one unit test: whatever kernel is active,
+        // forcing scalar must reproduce the f32 product bit-for-bit (the
+        // exhaustive remainder-shape property tests live in
+        // tests/kernel_dispatch.rs).
+        let mut rng = Pcg64::new(13);
+        let (m, k, n) = (17, 70, 9);
+        let a = rng.normal_vec(m * k);
+        let b = rng.normal_vec(n * k);
+        let mut auto = vec![0.0f32; m * n];
+        matmul_bt_into_e(&a, &b, &mut auto, m, k, n);
+        let mut forced = vec![0.0f32; m * n];
+        matmul_bt_into_e_as(Dispatch::Scalar, &a, &b, &mut forced, m, k, n);
+        assert_eq!(auto, forced);
+        if Dispatch::Avx2Fma.supported() {
+            let mut simd = vec![0.0f32; m * n];
+            matmul_bt_into_e_as(Dispatch::Avx2Fma, &a, &b, &mut simd, m, k, n);
+            assert_eq!(simd, forced, "f32 SIMD kernel must be bit-identical");
+        }
     }
 
     #[test]

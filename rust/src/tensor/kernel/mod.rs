@@ -1,0 +1,403 @@
+//! Pluggable microkernel layer: the single seam every dense inner loop in
+//! the repo lowers onto (ROADMAP "explicit SIMD kernel path", compute
+//! half).
+//!
+//! PR 3 landed half-precision *storage* (packed bf16/f16 panels halve
+//! resident bytes); this module supplies the matching *compute*: a sealed
+//! [`MicroKernel`] trait with two implementations —
+//!
+//! * [`scalar::Scalar`] — verbatim the seed's 8-accumulator loop nests
+//!   (the reference every other kernel is tested against);
+//! * `x86::Avx2Fma` — explicit AVX2+FMA `std::arch` kernels with
+//!   hand-vectorized bf16/f16→f32 widening loads and a widened 2x4
+//!   register tile (two C rows per Bᵀ panel sweep).
+//!
+//! Dispatch is resolved **once per process** ([`active`]): AVX2+FMA+F16C
+//! hosts take the SIMD path, everything else falls back to scalar, and
+//! `TOMA_KERNEL=scalar|auto` overrides detection for A/B testing (any
+//! other value warns and means `auto`). [`report`] renders the decision
+//! for bench records and serve logs.
+//!
+//! Numeric contract — what lets the entire stack above (cohort keys,
+//! `tests/scheduler_equivalence.rs`, the plan cache, and PR 3's
+//! "widening load == pre-widened f32 operand" pin) ignore dispatch:
+//! **results are bit-identical under every kernel, for every dtype
+//! pair.** The SIMD path keeps the scalar kernel's 8-lane accumulator
+//! split, its multiply-then-add rounding (never fused — a `vfmadd` would
+//! change results), its sequential lane reduction, and its scalar tail
+//! (see `scalar`'s loop-shape contract); its speed comes from vector
+//! widening loads and the wider register tile. The dispatch property
+//! tests pin f32 bitwise and the halves to ≤ 1e-6 relative
+//! (`tests/kernel_dispatch.rs`).
+
+pub mod scalar;
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod x86;
+
+use std::sync::OnceLock;
+
+use crate::tensor::element::Element;
+
+mod sealed {
+    pub trait Sealed {}
+}
+
+/// k-panel depth: one A-row segment (KC elements) + a JB x KC Bᵀ panel
+/// stay resident in L1/L2 while the panel is swept.
+pub const KC: usize = 256;
+/// Column-tile width of C (rows of Bᵀ reused per panel sweep).
+pub const JB: usize = 64;
+
+/// A microkernel: the innermost register-tiled loops of the GEMM
+/// substrate, generic over each operand's storage element (loads widen to
+/// f32; accumulation is f32). Sealed — the dispatch layer is written
+/// against exactly the implementations in this module.
+pub trait MicroKernel: sealed::Sealed {
+    /// Contiguous widening dot product (the scalar 8-lane loop shape).
+    fn dot<A: Element, B: Element>(a: &[A], b: &[B]) -> f32;
+
+    /// 1x4 register tile: one A segment against four Bᵀ rows.
+    fn dot4<A: Element, B: Element>(a: &[A], b0: &[B], b1: &[B], b2: &[B], b3: &[B]) -> [f32; 4];
+
+    /// 2x4 register tile: two A rows share the four Bᵀ row loads. The
+    /// default runs [`Self::dot4`] twice, which is element-for-element
+    /// the same arithmetic — implementations may only widen the tile,
+    /// never change per-element order.
+    fn dot2x4<A: Element, B: Element>(
+        a0: &[A],
+        a1: &[A],
+        b0: &[B],
+        b1: &[B],
+        b2: &[B],
+        b3: &[B],
+    ) -> [[f32; 4]; 2] {
+        [Self::dot4(a0, b0, b1, b2, b3), Self::dot4(a1, b0, b1, b2, b3)]
+    }
+
+    /// Rectified marginal gain `sum_j max(0, row[j] - m[j])` — the
+    /// facility-location scan, bit-identical across implementations (same
+    /// 8-lane shape as [`Self::dot`]; see `scalar::relu_gain`).
+    fn relu_gain(row: &[f32], m: &[f32]) -> f32;
+}
+
+/// Which microkernel services the seam.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Dispatch {
+    /// The reference loops — always available, forced by
+    /// `TOMA_KERNEL=scalar`.
+    Scalar,
+    /// Explicit AVX2+FMA(+F16C) kernels; selectable only where
+    /// [`supported`](Dispatch::supported). Requesting it elsewhere falls
+    /// back to [`Dispatch::Scalar`].
+    Avx2Fma,
+}
+
+impl Dispatch {
+    /// Can this dispatch actually run on the current host?
+    pub fn supported(self) -> bool {
+        match self {
+            Dispatch::Scalar => true,
+            Dispatch::Avx2Fma => simd_supported(),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Dispatch::Scalar => "scalar",
+            Dispatch::Avx2Fma => "avx2+fma",
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn simd_supported() -> bool {
+    is_x86_feature_detected!("avx2")
+        && is_x86_feature_detected!("fma")
+        && is_x86_feature_detected!("f16c")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn simd_supported() -> bool {
+    false
+}
+
+static ACTIVE: OnceLock<(Dispatch, &'static str)> = OnceLock::new();
+
+/// The dispatch servicing kernel calls in this process, resolved once:
+/// `TOMA_KERNEL=scalar` forces the reference path; `auto` (or unset)
+/// feature-detects AVX2+FMA+F16C with scalar fallback.
+pub fn active() -> Dispatch {
+    resolved().0
+}
+
+/// Human-readable dispatch decision ("which kernel path actually ran") —
+/// recorded by the bench targets so their JSONs compare across hosts.
+pub fn report() -> &'static str {
+    resolved().1
+}
+
+fn resolved() -> (Dispatch, &'static str) {
+    *ACTIVE.get_or_init(|| match std::env::var("TOMA_KERNEL").as_deref() {
+        Ok("scalar") => (Dispatch::Scalar, "scalar (TOMA_KERNEL=scalar)"),
+        Ok("auto") | Err(_) => detected(),
+        Ok(other) => {
+            eprintln!("[toma] unknown TOMA_KERNEL={other:?} (want scalar|auto); using auto");
+            detected()
+        }
+    })
+}
+
+fn detected() -> (Dispatch, &'static str) {
+    if Dispatch::Avx2Fma.supported() {
+        (Dispatch::Avx2Fma, "x86_64 avx2+fma+f16c")
+    } else {
+        (Dispatch::Scalar, "scalar (no avx2+fma+f16c)")
+    }
+}
+
+/// Widening dot product on the active kernel.
+#[inline]
+pub fn dot_e<A: Element, B: Element>(a: &[A], b: &[B]) -> f32 {
+    dot_as(active(), a, b)
+}
+
+/// [`dot_e`] on an explicit dispatch, so tests and benches can compare
+/// both paths in one process. Unsupported dispatches fall back to scalar.
+#[inline]
+pub fn dot_as<A: Element, B: Element>(d: Dispatch, a: &[A], b: &[B]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if d == Dispatch::Avx2Fma && d.supported() {
+            return x86::Avx2Fma::dot(a, b);
+        }
+    }
+    let _ = d;
+    scalar::Scalar::dot(a, b)
+}
+
+/// Facility-location gain scan on the active kernel (bit-identical across
+/// dispatches — selections never depend on `TOMA_KERNEL`).
+#[inline]
+pub fn relu_gain(row: &[f32], m: &[f32]) -> f32 {
+    relu_gain_as(active(), row, m)
+}
+
+/// [`relu_gain`] on an explicit dispatch.
+#[inline]
+pub fn relu_gain_as(d: Dispatch, row: &[f32], m: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if d == Dispatch::Avx2Fma && d.supported() {
+            return x86::Avx2Fma::relu_gain(row, m);
+        }
+    }
+    let _ = d;
+    scalar::Scalar::relu_gain(row, m)
+}
+
+/// Single-thread blocked panel sweep on an explicit dispatch: `c` (rows
+/// r0..r1 of C, zeroed here) accumulates `A[r0..r1] · Bᵀ` where A is
+/// (m x k) and B is (n x k), each in its own storage element. The
+/// active-dispatch caller is `gemm::matmul_bt_into_e` (which passes
+/// [`active`]); unsupported dispatches fall back to scalar.
+pub fn bt_rows_as<A: Element, B: Element>(
+    d: Dispatch,
+    a: &[A],
+    bt: &[B],
+    c: &mut [f32],
+    r0: usize,
+    r1: usize,
+    k: usize,
+    n: usize,
+) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if d == Dispatch::Avx2Fma && d.supported() {
+            return bt_rows_impl::<A, B, x86::Avx2Fma>(a, bt, c, r0, r1, k, n);
+        }
+    }
+    let _ = d;
+    bt_rows_impl::<A, B, scalar::Scalar>(a, bt, c, r0, r1, k, n)
+}
+
+/// The KC/JB-blocked sweep, written once over the kernel seam. Rows are
+/// walked in pairs (the 2x4 tile) with a 1x4 remainder row; per C element
+/// the dots run over the same panel segments in the same kb order as the
+/// pre-seam kernel, so results are invariant to the restructuring.
+fn bt_rows_impl<A: Element, B: Element, K: MicroKernel>(
+    a: &[A],
+    bt: &[B],
+    c: &mut [f32],
+    r0: usize,
+    r1: usize,
+    k: usize,
+    n: usize,
+) {
+    for v in c.iter_mut() {
+        *v = 0.0;
+    }
+    let mut kb = 0;
+    while kb < k {
+        let kend = (kb + KC).min(k);
+        let mut jb = 0;
+        while jb < n {
+            let jend = (jb + JB).min(n);
+            let mut i = r0;
+            while i + 2 <= r1 {
+                let li = i - r0;
+                let a0 = &a[i * k + kb..i * k + kend];
+                let a1 = &a[(i + 1) * k + kb..(i + 1) * k + kend];
+                let (head, tail) = c.split_at_mut((li + 1) * n);
+                let c0 = &mut head[li * n..];
+                let c1 = &mut tail[..n];
+                let mut j = jb;
+                while j + 4 <= jend {
+                    let s = K::dot2x4(
+                        a0,
+                        a1,
+                        &bt[j * k + kb..j * k + kend],
+                        &bt[(j + 1) * k + kb..(j + 1) * k + kend],
+                        &bt[(j + 2) * k + kb..(j + 2) * k + kend],
+                        &bt[(j + 3) * k + kb..(j + 3) * k + kend],
+                    );
+                    for t in 0..4 {
+                        c0[j + t] += s[0][t];
+                        c1[j + t] += s[1][t];
+                    }
+                    j += 4;
+                }
+                while j < jend {
+                    let brow = &bt[j * k + kb..j * k + kend];
+                    c0[j] += K::dot(a0, brow);
+                    c1[j] += K::dot(a1, brow);
+                    j += 1;
+                }
+                i += 2;
+            }
+            if i < r1 {
+                let li = i - r0;
+                let arow = &a[i * k + kb..i * k + kend];
+                let crow = &mut c[li * n..li * n + n];
+                let mut j = jb;
+                while j + 4 <= jend {
+                    let s = K::dot4(
+                        arow,
+                        &bt[j * k + kb..j * k + kend],
+                        &bt[(j + 1) * k + kb..(j + 1) * k + kend],
+                        &bt[(j + 2) * k + kb..(j + 2) * k + kend],
+                        &bt[(j + 3) * k + kb..(j + 3) * k + kend],
+                    );
+                    for t in 0..4 {
+                        crow[j + t] += s[t];
+                    }
+                    j += 4;
+                }
+                while j < jend {
+                    crow[j] += K::dot(arow, &bt[j * k + kb..j * k + kend]);
+                    j += 1;
+                }
+            }
+            jb = jend;
+        }
+        kb = kend;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn dispatch_resolves_to_a_supported_kernel() {
+        assert!(Dispatch::Scalar.supported(), "scalar is always available");
+        assert!(active().supported());
+        assert!(!report().is_empty());
+        assert_eq!(Dispatch::Scalar.as_str(), "scalar");
+        assert_eq!(Dispatch::Avx2Fma.as_str(), "avx2+fma");
+        if std::env::var("TOMA_KERNEL").as_deref() == Ok("scalar") {
+            assert_eq!(active(), Dispatch::Scalar, "env override must win");
+        }
+    }
+
+    #[test]
+    fn scalar_dot2x4_default_is_two_dot4() {
+        let mut rng = Pcg64::new(31);
+        for n in [0usize, 1, 7, 8, 9, 31] {
+            let a0 = rng.normal_vec(n);
+            let a1 = rng.normal_vec(n);
+            let b: Vec<Vec<f32>> = (0..4).map(|_| rng.normal_vec(n)).collect();
+            let t = scalar::Scalar::dot2x4(&a0, &a1, &b[0], &b[1], &b[2], &b[3]);
+            assert_eq!(t[0], scalar::Scalar::dot4(&a0, &b[0], &b[1], &b[2], &b[3]));
+            assert_eq!(t[1], scalar::Scalar::dot4(&a1, &b[0], &b[1], &b[2], &b[3]));
+        }
+    }
+
+    #[test]
+    fn bt_rows_row_pairing_matches_row_at_a_time_reference() {
+        // The 2-row sweep must be bitwise the old one-row-at-a-time sweep:
+        // run the same kernel over a one-row-window partition and the
+        // full-range pair walk, and compare.
+        let mut rng = Pcg64::new(32);
+        for (m, k, n) in [(1, 5, 3), (2, 9, 4), (5, 300, 70), (7, 257, 66)] {
+            let a = rng.normal_vec(m * k);
+            let bt = rng.normal_vec(n * k);
+            let mut paired = vec![0.0f32; m * n];
+            bt_rows_as(Dispatch::Scalar, &a, &bt, &mut paired, 0, m, k, n);
+            let mut single = vec![0.0f32; m * n];
+            for r in 0..m {
+                bt_rows_as(
+                    Dispatch::Scalar,
+                    &a,
+                    &bt,
+                    &mut single[r * n..(r + 1) * n],
+                    r,
+                    r + 1,
+                    k,
+                    n,
+                );
+            }
+            assert_eq!(paired, single, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn simd_f32_dot_bitwise_equals_scalar() {
+        if !Dispatch::Avx2Fma.supported() {
+            return;
+        }
+        let mut rng = Pcg64::new(33);
+        for n in [0usize, 1, 7, 8, 9, 31, 255, 256, 257] {
+            let a = rng.normal_vec(n);
+            let b = rng.normal_vec(n);
+            assert_eq!(
+                dot_as(Dispatch::Avx2Fma, &a, &b),
+                dot_as(Dispatch::Scalar, &a, &b),
+                "len {n}"
+            );
+        }
+    }
+
+    #[test]
+    fn relu_gain_bitwise_across_dispatches() {
+        let mut rng = Pcg64::new(34);
+        for n in [0usize, 1, 7, 8, 9, 31, 257] {
+            let row = rng.normal_vec(n);
+            // Mix of dominating / dominated entries and exact zero gains.
+            let m: Vec<f32> = row
+                .iter()
+                .enumerate()
+                .map(|(i, &v)| match i % 3 {
+                    0 => v, // zero gain
+                    1 => v - 0.5,
+                    _ => v + 0.5,
+                })
+                .collect();
+            let want = relu_gain_as(Dispatch::Scalar, &row, &m);
+            assert_eq!(relu_gain(&row, &m), want, "active dispatch, len {n}");
+            if Dispatch::Avx2Fma.supported() {
+                assert_eq!(relu_gain_as(Dispatch::Avx2Fma, &row, &m), want, "len {n}");
+            }
+        }
+    }
+}

@@ -1,0 +1,154 @@
+//! The reference microkernel: verbatim the seed's 8-accumulator loop
+//! nests (PR 1's `dot_e`/`dot4`, autovectorized by LLVM). This is the
+//! ground truth the SIMD kernels are property-tested against, the
+//! fallback on every non-x86_64 arch, and the path `TOMA_KERNEL=scalar`
+//! forces for A/B testing.
+//!
+//! Loop-shape contract (what "bit-identical" means for this layer):
+//!
+//! * the main loop splits the accumulation over 8 independent lanes,
+//!   lane `l` summing the products at indices `i + l` for `i = 0, 8, ...`;
+//! * the horizontal reduction folds the 8 lanes *sequentially in lane
+//!   order* (`s += acc[0]; s += acc[1]; ...`);
+//! * the `len % 8` tail is accumulated scalar-wise, in index order, after
+//!   the reduction.
+//!
+//! Any kernel implementing [`MicroKernel`](super::MicroKernel) must
+//! reproduce exactly this shape — for every operand pair, since widening
+//! loads are exact and the arithmetic after them is dtype-independent.
+
+use super::MicroKernel;
+use crate::tensor::element::Element;
+
+/// The scalar reference kernel (always available).
+pub struct Scalar;
+
+impl super::sealed::Sealed for Scalar {}
+
+/// Contiguous widening dot product, 8-wide accumulators.
+#[inline(always)]
+pub(crate) fn dot<A: Element, B: Element>(a: &[A], b: &[B]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n8 = a.len() / 8 * 8;
+    let mut acc = [0.0f32; 8];
+    let mut i = 0;
+    while i < n8 {
+        let x = &a[i..i + 8];
+        let y = &b[i..i + 8];
+        for l in 0..8 {
+            acc[l] += x[l].to_f32() * y[l].to_f32();
+        }
+        i += 8;
+    }
+    let mut s = 0.0f32;
+    for l in 0..8 {
+        s += acc[l];
+    }
+    for j in n8..a.len() {
+        s += a[j].to_f32() * b[j].to_f32();
+    }
+    s
+}
+
+/// 1x4 register tile: one A row segment against four Bᵀ rows at once —
+/// each A load is reused 4x, quadrupling arithmetic intensity.
+#[inline(always)]
+pub(crate) fn dot4<A: Element, B: Element>(
+    a: &[A],
+    b0: &[B],
+    b1: &[B],
+    b2: &[B],
+    b3: &[B],
+) -> [f32; 4] {
+    let n = a.len();
+    let n8 = n / 8 * 8;
+    let mut a0 = [0.0f32; 8];
+    let mut a1 = [0.0f32; 8];
+    let mut a2 = [0.0f32; 8];
+    let mut a3 = [0.0f32; 8];
+    let mut i = 0;
+    while i < n8 {
+        let x = &a[i..i + 8];
+        let y0 = &b0[i..i + 8];
+        let y1 = &b1[i..i + 8];
+        let y2 = &b2[i..i + 8];
+        let y3 = &b3[i..i + 8];
+        for l in 0..8 {
+            let xv = x[l].to_f32();
+            a0[l] += xv * y0[l].to_f32();
+            a1[l] += xv * y1[l].to_f32();
+            a2[l] += xv * y2[l].to_f32();
+            a3[l] += xv * y3[l].to_f32();
+        }
+        i += 8;
+    }
+    let mut out = [0.0f32; 4];
+    for l in 0..8 {
+        out[0] += a0[l];
+        out[1] += a1[l];
+        out[2] += a2[l];
+        out[3] += a3[l];
+    }
+    for j in n8..n {
+        let xv = a[j].to_f32();
+        out[0] += xv * b0[j].to_f32();
+        out[1] += xv * b1[j].to_f32();
+        out[2] += xv * b2[j].to_f32();
+        out[3] += xv * b3[j].to_f32();
+    }
+    out
+}
+
+/// Rectified marginal gain `sum_j max(0, row[j] - m[j])` — the facility-
+/// location inner scan, in the same 8-lane split as [`dot`] so the SIMD
+/// kernel can reproduce it bit-for-bit (lane sums only ever add
+/// non-negative terms, and adding `+0.0` to a non-negative lane is a
+/// bitwise no-op, so "skip non-positive" and "add the clamped zero" agree
+/// exactly).
+#[inline(always)]
+pub(crate) fn relu_gain(row: &[f32], m: &[f32]) -> f32 {
+    debug_assert_eq!(row.len(), m.len());
+    let n = row.len().min(m.len());
+    let n8 = n / 8 * 8;
+    let mut acc = [0.0f32; 8];
+    let mut i = 0;
+    while i < n8 {
+        let s = &row[i..i + 8];
+        let mm = &m[i..i + 8];
+        for l in 0..8 {
+            let g = s[l] - mm[l];
+            if g > 0.0 {
+                acc[l] += g;
+            }
+        }
+        i += 8;
+    }
+    let mut total = 0.0f32;
+    for l in 0..8 {
+        total += acc[l];
+    }
+    for j in n8..n {
+        let g = row[j] - m[j];
+        if g > 0.0 {
+            total += g;
+        }
+    }
+    total
+}
+
+impl MicroKernel for Scalar {
+    #[inline(always)]
+    fn dot<A: Element, B: Element>(a: &[A], b: &[B]) -> f32 {
+        dot(a, b)
+    }
+
+    #[inline(always)]
+    fn dot4<A: Element, B: Element>(a: &[A], b0: &[B], b1: &[B], b2: &[B], b3: &[B]) -> [f32; 4] {
+        dot4(a, b0, b1, b2, b3)
+    }
+
+    #[inline(always)]
+    fn relu_gain(row: &[f32], m: &[f32]) -> f32 {
+        relu_gain(row, m)
+    }
+}

@@ -1,0 +1,386 @@
+//! Explicit x86_64 AVX2+FMA microkernels (`std::arch`, zero deps).
+//!
+//! One macro instantiates the three kernel shapes (`dot`, `dot4`, and the
+//! widened `dot2x4` register tile) for every `(A, B)` storage-element
+//! pair; the [`MicroKernel`] impl dispatches on the pair's const
+//! [`StorageDtype`] tags, which monomorphizes to a direct call.
+//!
+//! Numeric contract: **every dtype pair is bit-identical to the scalar
+//! reference.** The 8-lane accumulator is one `__m256` whose lane `l`
+//! performs exactly the scalar kernel's `acc[l] += x * y` — multiply then
+//! add, deliberately *unfused* (a `vfmadd` would drop the product
+//! rounding, breaking both the f32 bit-identity the serving stack relies
+//! on and PR 3's pinned "widening load == pre-widened f32 operand"
+//! guarantee in `tests/precision.rs`) — and the horizontal reduction
+//! stores the vector and folds the lanes sequentially in lane order, like
+//! the scalar loop. The speedup comes from the hand-vectorized widening
+//! loads (`vpmovzxwd`+`vpslld` for bf16, `vcvtph2ps` for f16 — the
+//! shift/convert LLVM only partially autovectorizes through the scalar
+//! path) and from the widened 2x4 register tile, not from contraction.
+//!
+//! Safety: every `target_feature` function in this module requires
+//! AVX2+FMA+F16C at runtime (FMA rides along with the detection contract
+//! even though the current kernels keep multiplies unfused; F16C drives
+//! `vcvtph2ps`). The safe [`MicroKernel`] methods re-check detection
+//! themselves (a cached atomic load in `std`) and fall back to the scalar
+//! reference, so no safe path — not even a future caller that skips the
+//! [`super`] dispatch layer — can reach the intrinsics unguarded.
+
+use std::arch::x86_64::{
+    __m128i, __m256, _mm256_add_ps, _mm256_castsi256_ps, _mm256_cvtepu16_epi32, _mm256_cvtph_ps,
+    _mm256_loadu_ps, _mm256_max_ps, _mm256_mul_ps, _mm256_setzero_ps, _mm256_slli_epi32,
+    _mm256_storeu_ps, _mm256_sub_ps, _mm_loadu_si128,
+};
+
+use super::MicroKernel;
+use crate::tensor::element::{Bf16, Element, StorageDtype as D, F16};
+
+/// The explicit AVX2+FMA kernel. Constructed nowhere; used as a type-level
+/// tag by the dispatch layer once runtime detection has passed.
+pub(crate) struct Avx2Fma;
+
+impl super::sealed::Sealed for Avx2Fma {}
+
+/// Reinterpret a slice of one sealed element type as its concrete type.
+///
+/// Safety: caller must guarantee `T` and `U` are the same type (the
+/// dispatch below matches on `Element::DTYPE`, which uniquely identifies
+/// the sealed implementations) — the sizes are debug-checked.
+#[inline(always)]
+unsafe fn cast<T, U>(s: &[T]) -> &[U] {
+    debug_assert_eq!(std::mem::size_of::<T>(), std::mem::size_of::<U>());
+    std::slice::from_raw_parts(s.as_ptr() as *const U, s.len())
+}
+
+#[target_feature(enable = "avx2", enable = "fma", enable = "f16c")]
+#[inline]
+unsafe fn ld_f32(p: *const f32) -> __m256 {
+    _mm256_loadu_ps(p)
+}
+
+/// 8 bf16 -> 8 f32: zero-extend each u16 into a dword lane, shift the
+/// bf16 bits into the f32 high half (bf16 is an f32 prefix — exact).
+#[target_feature(enable = "avx2", enable = "fma", enable = "f16c")]
+#[inline]
+unsafe fn ld_bf16(p: *const Bf16) -> __m256 {
+    let h = _mm_loadu_si128(p as *const __m128i);
+    _mm256_castsi256_ps(_mm256_slli_epi32::<16>(_mm256_cvtepu16_epi32(h)))
+}
+
+/// 8 f16 -> 8 f32 via `vcvtph2ps` (exact for all finite/inf values).
+#[target_feature(enable = "avx2", enable = "fma", enable = "f16c")]
+#[inline]
+unsafe fn ld_f16(p: *const F16) -> __m256 {
+    _mm256_cvtph_ps(_mm_loadu_si128(p as *const __m128i))
+}
+
+/// Multiply-then-add — the scalar kernel's exact rounding (never fused;
+/// see the module contract).
+#[target_feature(enable = "avx2", enable = "fma", enable = "f16c")]
+#[inline]
+unsafe fn madd(acc: __m256, x: __m256, y: __m256) -> __m256 {
+    _mm256_add_ps(acc, _mm256_mul_ps(x, y))
+}
+
+/// Horizontal sum in the scalar reference's order: store the 8 lanes and
+/// fold them sequentially (`s += lanes[0]; s += lanes[1]; ...`).
+#[target_feature(enable = "avx2", enable = "fma", enable = "f16c")]
+#[inline]
+unsafe fn hsum_ordered(v: __m256) -> f32 {
+    let mut lanes = [0.0f32; 8];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), v);
+    let mut s = 0.0f32;
+    for l in lanes {
+        s += l;
+    }
+    s
+}
+
+macro_rules! avx_combo {
+    ($dot:ident, $dot4:ident, $dot2x4:ident, $at:ty, $bt:ty, $lda:ident, $ldb:ident) => {
+        #[target_feature(enable = "avx2", enable = "fma", enable = "f16c")]
+        unsafe fn $dot(a: &[$at], b: &[$bt]) -> f32 {
+            // Hard assert (release too): the pointer loads below are
+            // sized by `a.len()`, and the scalar kernel's slice indexing
+            // panics on mismatch in release — this path must match that,
+            // never read out of bounds.
+            assert_eq!(a.len(), b.len(), "dot operand lengths diverge");
+            let n = a.len();
+            let n8 = n / 8 * 8;
+            let mut acc = _mm256_setzero_ps();
+            let ap = a.as_ptr();
+            let bp = b.as_ptr();
+            let mut i = 0;
+            while i < n8 {
+                acc = madd(acc, $lda(ap.add(i)), $ldb(bp.add(i)));
+                i += 8;
+            }
+            let mut s = hsum_ordered(acc);
+            for j in n8..n {
+                s += a[j].to_f32() * b[j].to_f32();
+            }
+            s
+        }
+
+        #[target_feature(enable = "avx2", enable = "fma", enable = "f16c")]
+        unsafe fn $dot4(a: &[$at], b0: &[$bt], b1: &[$bt], b2: &[$bt], b3: &[$bt]) -> [f32; 4] {
+            let n = a.len();
+            // Hard assert (release too): the b-row loads below are sized
+            // by `a.len()`, and the scalar kernel's slice indexing panics
+            // on mismatch in release — a buggy caller must trip here, not
+            // silently read out of bounds.
+            assert!(
+                b0.len() == n && b1.len() == n && b2.len() == n && b3.len() == n,
+                "dot4 operand lengths diverge"
+            );
+            let n8 = n / 8 * 8;
+            let mut c0 = _mm256_setzero_ps();
+            let mut c1 = _mm256_setzero_ps();
+            let mut c2 = _mm256_setzero_ps();
+            let mut c3 = _mm256_setzero_ps();
+            let ap = a.as_ptr();
+            let (p0, p1, p2, p3) = (b0.as_ptr(), b1.as_ptr(), b2.as_ptr(), b3.as_ptr());
+            let mut i = 0;
+            while i < n8 {
+                let x = $lda(ap.add(i));
+                c0 = madd(c0, x, $ldb(p0.add(i)));
+                c1 = madd(c1, x, $ldb(p1.add(i)));
+                c2 = madd(c2, x, $ldb(p2.add(i)));
+                c3 = madd(c3, x, $ldb(p3.add(i)));
+                i += 8;
+            }
+            let mut out = [
+                hsum_ordered(c0),
+                hsum_ordered(c1),
+                hsum_ordered(c2),
+                hsum_ordered(c3),
+            ];
+            for j in n8..n {
+                let xv = a[j].to_f32();
+                out[0] += xv * b0[j].to_f32();
+                out[1] += xv * b1[j].to_f32();
+                out[2] += xv * b2[j].to_f32();
+                out[3] += xv * b3[j].to_f32();
+            }
+            out
+        }
+
+        /// 2x4 register tile: the four Bᵀ panel loads amortize over two A
+        /// rows (8 accumulators + 2 A + 1 B vector = 11 of 16 ymm regs).
+        /// Per C element the lane arithmetic and reduction are exactly
+        /// [`$dot4`]'s, so tiling height never changes results.
+        #[target_feature(enable = "avx2", enable = "fma", enable = "f16c")]
+        unsafe fn $dot2x4(
+            a0: &[$at],
+            a1: &[$at],
+            b0: &[$bt],
+            b1: &[$bt],
+            b2: &[$bt],
+            b3: &[$bt],
+        ) -> [[f32; 4]; 2] {
+            let n = a0.len();
+            // Hard assert (release too) — same out-of-bounds rationale as
+            // the 1x4 tile above.
+            assert!(
+                a1.len() == n
+                    && b0.len() == n
+                    && b1.len() == n
+                    && b2.len() == n
+                    && b3.len() == n,
+                "dot2x4 operand lengths diverge"
+            );
+            let n8 = n / 8 * 8;
+            let mut c00 = _mm256_setzero_ps();
+            let mut c01 = _mm256_setzero_ps();
+            let mut c02 = _mm256_setzero_ps();
+            let mut c03 = _mm256_setzero_ps();
+            let mut c10 = _mm256_setzero_ps();
+            let mut c11 = _mm256_setzero_ps();
+            let mut c12 = _mm256_setzero_ps();
+            let mut c13 = _mm256_setzero_ps();
+            let (q0, q1) = (a0.as_ptr(), a1.as_ptr());
+            let (p0, p1, p2, p3) = (b0.as_ptr(), b1.as_ptr(), b2.as_ptr(), b3.as_ptr());
+            let mut i = 0;
+            while i < n8 {
+                let x0 = $lda(q0.add(i));
+                let x1 = $lda(q1.add(i));
+                let y = $ldb(p0.add(i));
+                c00 = madd(c00, x0, y);
+                c10 = madd(c10, x1, y);
+                let y = $ldb(p1.add(i));
+                c01 = madd(c01, x0, y);
+                c11 = madd(c11, x1, y);
+                let y = $ldb(p2.add(i));
+                c02 = madd(c02, x0, y);
+                c12 = madd(c12, x1, y);
+                let y = $ldb(p3.add(i));
+                c03 = madd(c03, x0, y);
+                c13 = madd(c13, x1, y);
+                i += 8;
+            }
+            let mut out = [
+                [
+                    hsum_ordered(c00),
+                    hsum_ordered(c01),
+                    hsum_ordered(c02),
+                    hsum_ordered(c03),
+                ],
+                [
+                    hsum_ordered(c10),
+                    hsum_ordered(c11),
+                    hsum_ordered(c12),
+                    hsum_ordered(c13),
+                ],
+            ];
+            for j in n8..n {
+                let x0 = a0[j].to_f32();
+                let x1 = a1[j].to_f32();
+                let (y0, y1) = (b0[j].to_f32(), b1[j].to_f32());
+                let (y2, y3) = (b2[j].to_f32(), b3[j].to_f32());
+                out[0][0] += x0 * y0;
+                out[0][1] += x0 * y1;
+                out[0][2] += x0 * y2;
+                out[0][3] += x0 * y3;
+                out[1][0] += x1 * y0;
+                out[1][1] += x1 * y1;
+                out[1][2] += x1 * y2;
+                out[1][3] += x1 * y3;
+            }
+            out
+        }
+    };
+}
+
+avx_combo!(dot_ff, dot4_ff, dot2x4_ff, f32, f32, ld_f32, ld_f32);
+avx_combo!(dot_fb, dot4_fb, dot2x4_fb, f32, Bf16, ld_f32, ld_bf16);
+avx_combo!(dot_fh, dot4_fh, dot2x4_fh, f32, F16, ld_f32, ld_f16);
+avx_combo!(dot_bf, dot4_bf, dot2x4_bf, Bf16, f32, ld_bf16, ld_f32);
+avx_combo!(dot_bb, dot4_bb, dot2x4_bb, Bf16, Bf16, ld_bf16, ld_bf16);
+avx_combo!(dot_bh, dot4_bh, dot2x4_bh, Bf16, F16, ld_bf16, ld_f16);
+avx_combo!(dot_hf, dot4_hf, dot2x4_hf, F16, f32, ld_f16, ld_f32);
+avx_combo!(dot_hb, dot4_hb, dot2x4_hb, F16, Bf16, ld_f16, ld_bf16);
+avx_combo!(dot_hh, dot4_hh, dot2x4_hh, F16, F16, ld_f16, ld_f16);
+
+/// Rectified gain scan: `acc += max(row - m, 0)` lane-wise. `vmaxps(x, 0)`
+/// returns `+0.0` for non-positive (and NaN) lanes, and adding `+0.0` to
+/// the non-negative accumulator is a bitwise no-op — exactly the scalar
+/// reference's skip (see `scalar::relu_gain`).
+#[target_feature(enable = "avx2", enable = "fma", enable = "f16c")]
+unsafe fn relu_gain_avx2(row: &[f32], m: &[f32]) -> f32 {
+    debug_assert_eq!(row.len(), m.len());
+    let n = row.len().min(m.len());
+    let n8 = n / 8 * 8;
+    let zero = _mm256_setzero_ps();
+    let mut acc = zero;
+    let (rp, mp) = (row.as_ptr(), m.as_ptr());
+    let mut i = 0;
+    while i < n8 {
+        let g = _mm256_sub_ps(ld_f32(rp.add(i)), ld_f32(mp.add(i)));
+        acc = _mm256_add_ps(acc, _mm256_max_ps(g, zero));
+        i += 8;
+    }
+    let mut total = hsum_ordered(acc);
+    for j in n8..n {
+        let g = row[j] - m[j];
+        if g > 0.0 {
+            total += g;
+        }
+    }
+    total
+}
+
+impl MicroKernel for Avx2Fma {
+    fn dot<A: Element, B: Element>(a: &[A], b: &[B]) -> f32 {
+        if !super::simd_supported() {
+            return super::scalar::Scalar::dot(a, b);
+        }
+        // Safety: avx2+fma+f16c presence checked just above (the dispatch
+        // layer checks too); the casts are tag-checked (sealed).
+        unsafe {
+            match (A::DTYPE, B::DTYPE) {
+                (D::F32, D::F32) => dot_ff(cast(a), cast(b)),
+                (D::F32, D::Bf16) => dot_fb(cast(a), cast(b)),
+                (D::F32, D::F16) => dot_fh(cast(a), cast(b)),
+                (D::Bf16, D::F32) => dot_bf(cast(a), cast(b)),
+                (D::Bf16, D::Bf16) => dot_bb(cast(a), cast(b)),
+                (D::Bf16, D::F16) => dot_bh(cast(a), cast(b)),
+                (D::F16, D::F32) => dot_hf(cast(a), cast(b)),
+                (D::F16, D::Bf16) => dot_hb(cast(a), cast(b)),
+                (D::F16, D::F16) => dot_hh(cast(a), cast(b)),
+            }
+        }
+    }
+
+    fn dot4<A: Element, B: Element>(a: &[A], b0: &[B], b1: &[B], b2: &[B], b3: &[B]) -> [f32; 4] {
+        if !super::simd_supported() {
+            return super::scalar::Scalar::dot4(a, b0, b1, b2, b3);
+        }
+        // Safety: as in `dot`.
+        unsafe {
+            match (A::DTYPE, B::DTYPE) {
+                (D::F32, D::F32) => dot4_ff(cast(a), cast(b0), cast(b1), cast(b2), cast(b3)),
+                (D::F32, D::Bf16) => dot4_fb(cast(a), cast(b0), cast(b1), cast(b2), cast(b3)),
+                (D::F32, D::F16) => dot4_fh(cast(a), cast(b0), cast(b1), cast(b2), cast(b3)),
+                (D::Bf16, D::F32) => dot4_bf(cast(a), cast(b0), cast(b1), cast(b2), cast(b3)),
+                (D::Bf16, D::Bf16) => dot4_bb(cast(a), cast(b0), cast(b1), cast(b2), cast(b3)),
+                (D::Bf16, D::F16) => dot4_bh(cast(a), cast(b0), cast(b1), cast(b2), cast(b3)),
+                (D::F16, D::F32) => dot4_hf(cast(a), cast(b0), cast(b1), cast(b2), cast(b3)),
+                (D::F16, D::Bf16) => dot4_hb(cast(a), cast(b0), cast(b1), cast(b2), cast(b3)),
+                (D::F16, D::F16) => dot4_hh(cast(a), cast(b0), cast(b1), cast(b2), cast(b3)),
+            }
+        }
+    }
+
+    fn dot2x4<A: Element, B: Element>(
+        a0: &[A],
+        a1: &[A],
+        b0: &[B],
+        b1: &[B],
+        b2: &[B],
+        b3: &[B],
+    ) -> [[f32; 4]; 2] {
+        if !super::simd_supported() {
+            return super::scalar::Scalar::dot2x4(a0, a1, b0, b1, b2, b3);
+        }
+        // Safety: as in `dot`.
+        unsafe {
+            match (A::DTYPE, B::DTYPE) {
+                (D::F32, D::F32) => {
+                    dot2x4_ff(cast(a0), cast(a1), cast(b0), cast(b1), cast(b2), cast(b3))
+                }
+                (D::F32, D::Bf16) => {
+                    dot2x4_fb(cast(a0), cast(a1), cast(b0), cast(b1), cast(b2), cast(b3))
+                }
+                (D::F32, D::F16) => {
+                    dot2x4_fh(cast(a0), cast(a1), cast(b0), cast(b1), cast(b2), cast(b3))
+                }
+                (D::Bf16, D::F32) => {
+                    dot2x4_bf(cast(a0), cast(a1), cast(b0), cast(b1), cast(b2), cast(b3))
+                }
+                (D::Bf16, D::Bf16) => {
+                    dot2x4_bb(cast(a0), cast(a1), cast(b0), cast(b1), cast(b2), cast(b3))
+                }
+                (D::Bf16, D::F16) => {
+                    dot2x4_bh(cast(a0), cast(a1), cast(b0), cast(b1), cast(b2), cast(b3))
+                }
+                (D::F16, D::F32) => {
+                    dot2x4_hf(cast(a0), cast(a1), cast(b0), cast(b1), cast(b2), cast(b3))
+                }
+                (D::F16, D::Bf16) => {
+                    dot2x4_hb(cast(a0), cast(a1), cast(b0), cast(b1), cast(b2), cast(b3))
+                }
+                (D::F16, D::F16) => {
+                    dot2x4_hh(cast(a0), cast(a1), cast(b0), cast(b1), cast(b2), cast(b3))
+                }
+            }
+        }
+    }
+
+    fn relu_gain(row: &[f32], m: &[f32]) -> f32 {
+        if !super::simd_supported() {
+            return super::scalar::Scalar::relu_gain(row, m);
+        }
+        // Safety: as in `dot` (f32-only, no casts needed).
+        unsafe { relu_gain_avx2(row, m) }
+    }
+}

@@ -1,7 +1,16 @@
 //! k-means (Lloyd's algorithm, k-means++ seeding) for the latent-locality
 //! analysis of Fig. 3 / Fig. 9: clustering hidden states and measuring how
 //! spatially coherent the clusters are across blocks and denoising steps.
+//!
+//! Since PR 5 the Lloyd assignment step — the O(n·k·d) hot loop, formerly
+//! a naive per-pair `dist2` scan — is lowered onto the tensor substrate:
+//! nearest centroids come from one `X · Cᵀ` GEMM per round on the
+//! microkernel seam (`argmin_c ||x−c||² = argmin_c (||c||² − 2 x·c)`),
+//! with the chosen centroid's exact squared distance feeding the inertia
+//! as before. Seeding keeps the per-pair scan (it is O(n·d) per round and
+//! feeds a weighted draw, not an argmin).
 
+use super::{kernel, ops};
 use crate::util::Pcg64;
 
 pub struct KMeans {
@@ -14,6 +23,52 @@ pub struct KMeans {
 
 fn dist2(a: &[f32], b: &[f32]) -> f32 {
     a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// One assignment pass: nearest centroid per point via the GEMM-scored
+/// rule `argmin_c (||c||² − 2 x·c)`, writing `assignments` and returning
+/// the exact inertia (sum of true squared distances to the chosen
+/// centroids).
+///
+/// Accuracy caveat (the standard GEMM k-means tradeoff, same as
+/// scikit-learn's `euclidean_distances`): dropping the common `||x||²`
+/// term is exact in real arithmetic but the score's rounding error is
+/// relative to `||x||·||c||`, not to the distance gap — so for points
+/// with a large common offset (uncentered features) the winner can flip
+/// between *nearly* equidistant centroids, not just exact ties. The
+/// latent-locality features this clusters are roughly centered, and the
+/// inertia is always recomputed from the true distance of the pick.
+fn assign(
+    x: &[f32],
+    n: usize,
+    d: usize,
+    centroids: &[f32],
+    k: usize,
+    assignments: &mut [usize],
+) -> f32 {
+    let xc = ops::matmul_bt(x, centroids, n, d, k);
+    let cnorm: Vec<f32> = (0..k)
+        .map(|c| {
+            let row = &centroids[c * d..(c + 1) * d];
+            kernel::dot_e(row, row)
+        })
+        .collect();
+    let mut inertia = 0.0f32;
+    for i in 0..n {
+        let scores = &xc[i * k..(i + 1) * k];
+        let mut best = 0;
+        let mut bs = f32::INFINITY;
+        for c in 0..k {
+            let s = cnorm[c] - 2.0 * scores[c];
+            if s < bs {
+                bs = s;
+                best = c;
+            }
+        }
+        assignments[i] = best;
+        inertia += dist2(&x[i * d..(i + 1) * d], &centroids[best * d..(best + 1) * d]);
+    }
+    inertia
 }
 
 /// Cluster `n` points of dim `d` into `k` clusters.
@@ -55,22 +110,9 @@ pub fn kmeans(x: &[f32], n: usize, d: usize, k: usize, iters: usize, rng: &mut P
     let mut assignments = vec![0usize; n];
     let mut inertia = 0.0;
     for _ in 0..iters {
-        // Assign.
-        inertia = 0.0;
-        for i in 0..n {
-            let p = &x[i * d..(i + 1) * d];
-            let mut best = 0;
-            let mut bd = f32::INFINITY;
-            for c in 0..k {
-                let dd = dist2(p, &centroids[c * d..(c + 1) * d]);
-                if dd < bd {
-                    bd = dd;
-                    best = c;
-                }
-            }
-            assignments[i] = best;
-            inertia += bd;
-        }
+        // Assign: one X · Cᵀ GEMM on the kernel seam scores every
+        // (point, centroid) pair; inertia stays the exact distance.
+        inertia = assign(x, n, d, &centroids, k, &mut assignments);
         // Update.
         let mut sums = vec![0.0f32; k * d];
         let mut counts = vec![0usize; k];
@@ -172,6 +214,44 @@ mod tests {
         let cr = spatial_coherence(&random, 8, 8);
         assert!(cb > 0.9, "blocky {cb}");
         assert!(cb > cr, "blocky {cb} vs random {cr}");
+    }
+
+    #[test]
+    fn gemm_assignment_matches_naive_dist2_scan() {
+        // Equivalence with the seed's per-pair scan on (roughly
+        // centered) data like the latent features this module clusters:
+        // the GEMM-scored winner's *true* distance must match the naive
+        // minimum to float tolerance — score rounding may flip the pick
+        // only between near-equidistant centroids (see `assign`'s
+        // accuracy caveat for the uncentered-data limits).
+        let mut rng = Pcg64::new(9);
+        for trial in 0..10usize {
+            let n = 40 + trial;
+            let d = 3 + trial % 5;
+            let k = 2 + trial % 7;
+            let x = rng.normal_vec(n * d);
+            let c = rng.normal_vec(k * d);
+            let mut got = vec![0usize; n];
+            let inertia = assign(&x, n, d, &c, k, &mut got);
+            let mut naive_inertia = 0.0f32;
+            for i in 0..n {
+                let p = &x[i * d..(i + 1) * d];
+                let mut bd = f32::INFINITY;
+                for cc in 0..k {
+                    let dd = dist2(p, &c[cc * d..(cc + 1) * d]);
+                    if dd < bd {
+                        bd = dd;
+                    }
+                }
+                naive_inertia += bd;
+                let dd_got = dist2(p, &c[got[i] * d..(got[i] + 1) * d]);
+                assert!(
+                    (dd_got - bd).abs() <= 1e-4 * (1.0 + bd),
+                    "point {i}: picked dist {dd_got} vs naive min {bd}"
+                );
+            }
+            assert!((inertia - naive_inertia).abs() <= 1e-3 * (1.0 + naive_inertia));
+        }
     }
 
     #[test]

@@ -1,6 +1,11 @@
 //! Small dense linear algebra: Cholesky, symmetric solve, Moore–Penrose
 //! pseudo-inverse for the unmerge ablation (Table 7).
+//!
+//! Since PR 5 the Cholesky inner sum — previously a hand-rolled scalar
+//! dot loop — is lowered onto the microkernel seam ([`super::kernel`]),
+//! like the GEMMs the solve/pinv paths were already built from.
 
+use super::kernel;
 #[cfg(test)]
 use super::ops::matmul;
 use super::ops::{matmul_at, matmul_bt};
@@ -12,10 +17,9 @@ pub fn cholesky(a: &[f32], n: usize) -> Option<Vec<f32>> {
     let mut l = vec![0.0f32; n * n];
     for i in 0..n {
         for j in 0..=i {
-            let mut s = a[i * n + j];
-            for k in 0..j {
-                s -= l[i * n + k] * l[j * n + k];
-            }
+            // The k-sum over the two factor-row prefixes is a contiguous
+            // dot on the kernel seam (SIMD-dispatched for larger rows).
+            let s = a[i * n + j] - kernel::dot_e(&l[i * n..i * n + j], &l[j * n..j * n + j]);
             if i == j {
                 if s <= 0.0 {
                     return None;
@@ -183,6 +187,44 @@ mod tests {
         let lt: Vec<f32> = super::super::ops::transpose(&l, 5, 5);
         let back = matmul(&l, &lt, 5, 5, 5);
         assert!(fro_dist(&a, &back) < 1e-3 * fro_dist(&a, &vec![0.0; 25]));
+    }
+
+    /// The seed's sequential-subtract Cholesky loop, kept as the
+    /// equivalence reference for the kernel-seam lowering.
+    fn cholesky_seed_ref(a: &[f32], n: usize) -> Option<Vec<f32>> {
+        let mut l = vec![0.0f32; n * n];
+        for i in 0..n {
+            for j in 0..=i {
+                let mut s = a[i * n + j];
+                for k in 0..j {
+                    s -= l[i * n + k] * l[j * n + k];
+                }
+                if i == j {
+                    if s <= 0.0 {
+                        return None;
+                    }
+                    l[i * n + j] = s.sqrt();
+                } else {
+                    l[i * n + j] = s / l[j * n + j];
+                }
+            }
+        }
+        Some(l)
+    }
+
+    #[test]
+    fn cholesky_matches_seed_reference() {
+        // Kernel-seam lowering reassociates the inner sum (8-lane split);
+        // the factor must agree with the seed loop to float tolerance at
+        // sizes crossing the unroll boundary.
+        for n in [1usize, 2, 5, 9, 16, 33] {
+            let a = random_spd(n, 40 + n as u64);
+            let l_new = cholesky(&a, n).expect("spd");
+            let l_old = cholesky_seed_ref(&a, n).expect("spd");
+            for (x, y) in l_new.iter().zip(&l_old) {
+                assert!((x - y).abs() <= 1e-4 * (1.0 + y.abs()), "{x} vs {y} (n={n})");
+            }
+        }
     }
 
     #[test]

@@ -3,13 +3,17 @@
 //!
 //! The kernels are layered: [`pool`] is a persistent `std::thread` worker
 //! pool with a scoped parallel-for, [`element`] the storage-dtype
-//! abstraction (f32 / bf16 / f16 with widening loads), [`gemm`] the
-//! blocked/register-tiled GEMM microkernels fanned out over it (generic
-//! over each operand's storage element, accumulating in f32), and [`ops`]
-//! the public kernel surface everything else calls.
+//! abstraction (f32 / bf16 / f16 with widening loads), [`kernel`] the
+//! pluggable microkernel seam (scalar reference + explicit AVX2+FMA SIMD
+//! behind runtime dispatch with a `TOMA_KERNEL=scalar|auto` override),
+//! [`gemm`] the blocked/register-tiled GEMM lowered onto that seam and
+//! fanned out over the pool (generic over each operand's storage element,
+//! accumulating in f32), and [`ops`] the public kernel surface everything
+//! else calls.
 
 pub mod element;
 pub mod gemm;
+pub mod kernel;
 pub mod kmeans;
 pub mod linalg;
 pub mod ops;

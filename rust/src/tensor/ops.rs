@@ -14,10 +14,15 @@
 //! [`Element`] and widened to f32 on load, halving panel traffic for the
 //! half dtypes while C stays f32-accumulated. The f32 entry points are
 //! unchanged and bit-exact.
+//!
+//! Since PR 5 every dot-shaped reduction here rides the microkernel seam
+//! ([`super::kernel`]) — the GEMMs through `gemm`, and row reductions
+//! like [`l2_normalize_rows`] directly — so the scalar/SIMD dispatch
+//! decision is made in exactly one place.
 
 use super::element::Element;
 use super::pool::PAR_MIN_ELEMS;
-use super::{gemm, pool, Tensor};
+use super::{gemm, kernel, pool, Tensor};
 
 /// C (m x n) = A (m x k) @ B (k x n).
 pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
@@ -206,10 +211,13 @@ pub fn normalize_rows(x: &mut [f32], rows: usize, cols: usize) {
     });
 }
 
-/// L2-normalize each row; zero rows stay zero.
+/// L2-normalize each row; zero rows stay zero. The squared norm is a
+/// self-dot on the microkernel seam — identical under either dispatch, so
+/// similarity matrices built on top never depend on `TOMA_KERNEL`.
 pub fn l2_normalize_rows(x: &mut [f32], rows: usize, cols: usize) {
     for_each_row(x, rows, cols, |row| {
-        let n: f32 = row.iter().map(|v| v * v).sum::<f32>().sqrt();
+        let r: &[f32] = row;
+        let n = kernel::dot_e(r, r).sqrt();
         let inv = 1.0 / (n + 1e-8);
         for v in row.iter_mut() {
             *v *= inv;

@@ -13,11 +13,17 @@
 //! gain tops the heap. Per-round cost drops from the seed's full O(n²)
 //! rescan to O(n · rescored), with rescored typically a handful.
 //!
-//! The rescore uses byte-for-byte the seed's row scan (same summation
-//! order), and ties break toward the smaller index exactly like the seed's
-//! strict-`>` ascending argmax — so the selected index set is identical to
-//! [`fl_select_ref`], which the property tests assert.
+//! Since PR 5 the gain scan itself is lowered onto the microkernel seam
+//! ([`tensor::kernel::relu_gain`](crate::tensor::kernel::relu_gain)): an
+//! 8-lane rectified sum that the scalar and SIMD kernels compute
+//! **bit-identically**, so selections never depend on `TOMA_KERNEL`.
+//! Every gain in this module — cached, re-scored, and the reference's —
+//! goes through the same single function with the same summation order,
+//! and ties break toward the smaller index exactly like the seed's
+//! strict-`>` ascending argmax — so the selected index set is identical
+//! to [`fl_select_ref`], which the property tests assert.
 
+use crate::tensor::kernel;
 use crate::tensor::ops::l2_normalize_rows;
 use crate::tensor::pool;
 
@@ -29,19 +35,15 @@ pub fn similarity_matrix(x: &[f32], n: usize, d: usize) -> Vec<f32> {
     crate::tensor::ops::matmul_bt(&xn, &xn, n, d, n)
 }
 
-/// Marginal gain of one similarity row against the cached maxima `m` —
-/// the seed's exact scan, kept as a single summation order so cached and
-/// re-scored gains are bit-identical.
+/// Marginal gain of one similarity row against the cached maxima `m`,
+/// lowered onto the microkernel seam. One summation order everywhere
+/// (greedy loop, heap rescore, and [`fl_select_ref`] all call this), and
+/// the seam guarantees scalar and SIMD dispatches agree bitwise — so
+/// cached and re-scored gains stay bit-identical and the CELF equivalence
+/// property survives both the lowering and any `TOMA_KERNEL` setting.
 #[inline]
 fn gain_row(row: &[f32], m: &[f32]) -> f32 {
-    let mut gain = 0.0f32;
-    for (s, mm) in row.iter().zip(m) {
-        let g = s - mm;
-        if g > 0.0 {
-            gain += g;
-        }
-    }
-    gain
+    kernel::relu_gain(row, m)
 }
 
 /// Max-heap entry: cached gain + the round it was computed in.

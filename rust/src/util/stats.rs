@@ -79,6 +79,21 @@ pub fn median(xs: &[f64]) -> f64 {
     percentile(xs, 50.0)
 }
 
+/// Log-spaced latency bucket boundaries (1us .. ~100s, 4 per decade) —
+/// shared by [`LatencyHistogram`] and the scheduler's decayed per-lane
+/// tail estimator (`coordinator::scheduler::DecayedTail`).
+pub fn latency_bounds_us() -> Vec<f64> {
+    let mut bounds = vec![];
+    let mut b = 1.0f64;
+    while b < 1e8 {
+        for m in [1.0, 1.78, 3.16, 5.62] {
+            bounds.push(b * m);
+        }
+        b *= 10.0;
+    }
+    bounds
+}
+
 /// Fixed-boundary latency histogram (microsecond buckets, log-spaced).
 #[derive(Clone, Debug)]
 pub struct LatencyHistogram {
@@ -97,15 +112,7 @@ impl Default for LatencyHistogram {
 
 impl LatencyHistogram {
     pub fn new() -> Self {
-        // 1us .. ~100s, 4 buckets per decade.
-        let mut bounds = vec![];
-        let mut b = 1.0f64;
-        while b < 1e8 {
-            for m in [1.0, 1.78, 3.16, 5.62] {
-                bounds.push(b * m);
-            }
-            b *= 10.0;
-        }
+        let bounds = latency_bounds_us();
         let n = bounds.len();
         LatencyHistogram {
             bounds_us: bounds,
