@@ -15,6 +15,12 @@
 //! The Poisson-burst section times open-loop serving at a bursty arrival
 //! rate under static vs. adaptive formation; both cases land in
 //! `BENCH_serve_sweep.json` for the CI bench-diff trend gate.
+//!
+//! The `serve_chaos` section (PR 6) times the same closed-loop workload
+//! under injected fault schedules (0 / 1 / 5 % per-probe rate, latency
+//! jitter + retryable step errors) served through the transparent retry
+//! layer; the supervision counters (injections, retries, respawns,
+//! panics, quarantines) land in the JSON as notes.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -23,7 +29,7 @@ use toma::bench::Runner;
 use toma::coordinator::scheduler::{
     AdaptivePolicy, BatchPolicy, HostBackend, LanePolicy, Scheduler, DEFAULT_TAU,
 };
-use toma::coordinator::{EngineConfig, GenRequest};
+use toma::coordinator::{EngineConfig, FaultKind, FaultPlan, GenRequest, RetryPolicy};
 use toma::model::HostUVit;
 use toma::report::Table;
 use toma::runtime::ModelInfo;
@@ -111,6 +117,31 @@ fn run_closed(model: &Arc<HostUVit>, policy: LanePolicy) -> (f64, Scheduler) {
     let wall = t0.elapsed().as_secs_f64();
     let ok = comps.iter().filter(|c| c.result.is_ok()).count();
     assert_eq!(ok, REQUESTS, "all requests must succeed");
+    (wall, s)
+}
+
+/// Closed-loop chaos run (PR 6): the same closed-loop workload under an
+/// injected fault schedule (latency jitter + retryable step errors),
+/// served through the transparent retry layer. Every request must still
+/// succeed; returns (wall_s, scheduler with populated metrics).
+fn run_chaos(model: &Arc<HostUVit>, rate: f64, seed: u64) -> (f64, Scheduler) {
+    let plan = FaultPlan::default()
+        .with_rate(rate, seed)
+        .with_kinds(&[FaultKind::SlowStep, FaultKind::ErrorReturn]);
+    let s = scheduler(model, closed_policy(8, false)).with_faults(plan);
+    let reqs: Vec<GenRequest> = requests(REQUESTS, 0.0).into_iter().map(|(r, _)| r).collect();
+    let t0 = Instant::now();
+    let comps = s.run_batch_retry(
+        &cfg(),
+        reqs,
+        RetryPolicy {
+            max_attempts: 8,
+            quarantine_strikes: 3,
+        },
+    );
+    let wall = t0.elapsed().as_secs_f64();
+    let ok = comps.iter().filter(|c| c.result.is_ok()).count();
+    assert_eq!(ok, REQUESTS, "chaos faults must be transparently recovered");
     (wall, s)
 }
 
@@ -253,6 +284,52 @@ fn main() {
         s.shutdown();
     }
     println!("\n{}", burst.render());
+
+    // Chaos section (PR 6): closed-loop throughput + tail latency vs the
+    // injected-fault rate (0 / 1 / 5 %). The supervision counters land in
+    // BENCH_serve_sweep.json as notes so the bench-diff trend gate can
+    // watch recovery overhead drift alongside the timings.
+    let mut chaos = Table::new("serve_chaos: closed loop, batch<=8, injected faults")
+        .headers(&["Rate", "Wall (s)", "Img/s", "p99 (s)", "Injected", "Retries", "Respawns"]);
+    for (name, rate) in [
+        ("serve_chaos_r0", 0.0),
+        ("serve_chaos_r1", 0.01),
+        ("serve_chaos_r5", 0.05),
+    ] {
+        let mut runs: Vec<(f64, Scheduler)> = vec![];
+        runner.bench(name, || {
+            runs.push(run_chaos(&model, rate, 0xC4A0));
+        });
+        let (wall, s) = runs.pop().unwrap_or_else(|| run_chaos(&model, rate, 0xC4A0));
+        for (_, prev) in runs.drain(..) {
+            prev.shutdown();
+        }
+        // Join lanes before reading counters so fault/retry accounting
+        // from the last run is final.
+        s.shutdown();
+        let lat = s.metrics.latency_summary("service_time");
+        let p99 = lat.map(|l| l.p99_s).unwrap_or(0.0);
+        let injected = s.metrics.counter("fault_injected");
+        let retries = s.metrics.counter("retry_attempted");
+        let respawns = s.metrics.counter("lane_respawned");
+        let panics = s.metrics.counter("worker_panic");
+        let quarantined = s.metrics.counter("quarantined");
+        chaos.row(vec![
+            format!("{:.0}%", rate * 100.0),
+            format!("{wall:.3}"),
+            format!("{:.2}", REQUESTS as f64 / wall),
+            format!("{p99:.4}"),
+            format!("{injected}"),
+            format!("{retries}"),
+            format!("{respawns}"),
+        ]);
+        runner.note(&format!("{name}_fault_injected"), &injected.to_string());
+        runner.note(&format!("{name}_retry_attempted"), &retries.to_string());
+        runner.note(&format!("{name}_lane_respawned"), &respawns.to_string());
+        runner.note(&format!("{name}_worker_panic"), &panics.to_string());
+        runner.note(&format!("{name}_quarantined"), &quarantined.to_string());
+    }
+    println!("\n{}", chaos.render());
 
     // Open-loop arrival sweep (Poisson): end-to-end latency under load.
     let mut open = Table::new("serve_sweep: open loop, batch<=8")

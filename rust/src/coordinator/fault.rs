@@ -1,0 +1,528 @@
+//! Deterministic fault injection for the serving coordinator — the chaos
+//! substrate the supervision layer (and, per ROADMAP, the future
+//! distributed tier) is tested against.
+//!
+//! A [`FaultPlan`] describes *when* faults fire; a [`FaultInjector`]
+//! (cheaply cloneable, shared across a lane's workers and respawned
+//! incarnations) evaluates it at named probe sites threaded through both
+//! `LaneJob` drain loops (`server.step`, `scheduler.step`) and the host
+//! cohort backend (`host.step_batch`). Three trigger families, all
+//! deterministic — no wall-clock reads, no global RNG:
+//!
+//! * **at-rules** — fire `kind` on the `nth` probe of a site (exact,
+//!   counter-based: "panic on the 3rd cohort step");
+//! * **poison rules** — fire whenever a request with a matching seed is
+//!   in flight at the probe (the poison-pill: the *same* request kills
+//!   every lane incarnation it reaches, which is what the quarantine
+//!   logic must contain);
+//! * **rate rules** — fire at a fixed probability per probe, drawn from
+//!   a splitmix64 hash of `(plan.seed, site, probe_counter)` so the
+//!   schedule is a pure function of the plan and the probe sequence.
+//!
+//! The injector is compiled in but inert by default: an unset plan makes
+//! [`FaultInjector::fire`] a single `Option::is_none` check. It is
+//! enabled per front-end via config (`Server::with_faults` /
+//! `Scheduler::with_faults`) or process-wide via the `TOMA_FAULTS` env
+//! var (`FaultPlan::from_env`), e.g. `TOMA_FAULTS=rate=0.05` — rate mode
+//! defaults to the always-safe [`FaultKind::SlowStep`] (latency jitter
+//! only; results unchanged), so the whole test suite can run under it as
+//! a smoke gate. Disruptive kinds (`panic`, `error`, `stall`) are opted
+//! into explicitly (`kinds=slow+error+panic`) or via at/poison rules.
+//!
+//! Fault *consequences* are owned by the probing code: `Panic` unwinds
+//! (caught by the lane's `catch_unwind` supervision), `ErrorReturn`
+//! yields a typed error carrying [`INJECTED`], `SlowStep`/`Stall` are
+//! bounded sleeps (`Stall` long enough to trip deadlines, never
+//! unbounded — injected faults must surface as typed error completions,
+//! never hangs).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+use crate::anyhow;
+use crate::util::error::Result;
+use crate::util::lock_unpoisoned;
+
+use super::metrics::Metrics;
+
+/// Marker substring present in every injected-fault error message.
+/// The retry layer treats such errors as transient and retryable.
+pub const INJECTED: &str = "injected fault";
+
+/// What an injection point does when it fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// `panic!` at the probe — a worker crash, caught by the lane's
+    /// supervision layer (never escapes the lane thread).
+    Panic,
+    /// Sleep briefly (`FaultPlan::slow_ms`) — latency jitter; results
+    /// unchanged. The only kind rate mode draws by default.
+    SlowStep,
+    /// Return a typed `Err` carrying [`INJECTED`] from the probe.
+    ErrorReturn,
+    /// Sleep long (`FaultPlan::stall_ms`) — long enough to trip
+    /// admission deadlines, still strictly bounded.
+    Stall,
+}
+
+impl FaultKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FaultKind::Panic => "panic",
+            FaultKind::SlowStep => "slow",
+            FaultKind::ErrorReturn => "error",
+            FaultKind::Stall => "stall",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<FaultKind> {
+        match s {
+            "panic" => Some(FaultKind::Panic),
+            "slow" | "slow-step" | "slowstep" => Some(FaultKind::SlowStep),
+            "error" | "error-return" => Some(FaultKind::ErrorReturn),
+            "stall" => Some(FaultKind::Stall),
+            _ => None,
+        }
+    }
+}
+
+/// Exact trigger: fire `kind` on the `nth` (1-based) probe of `site`.
+#[derive(Clone, Debug)]
+pub struct AtRule {
+    pub site: String,
+    pub nth: u64,
+    pub kind: FaultKind,
+}
+
+/// Deterministic fault schedule. `FaultPlan::default()` is inert.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    /// Probability per probe that a rate fault fires (0 disables).
+    pub rate: f64,
+    /// Seed for the rate draw (part of the deterministic schedule).
+    pub seed: u64,
+    /// Kinds the rate draw cycles through; empty means [`SlowStep`] only.
+    pub kinds: Vec<FaultKind>,
+    /// Exact site/counter triggers (highest priority).
+    pub at: Vec<AtRule>,
+    /// Poison pills: fire `kind` whenever a request with this seed is in
+    /// flight at the probe (second priority).
+    pub poison: Vec<(u64, FaultKind)>,
+    /// `SlowStep` sleep, milliseconds (bounded).
+    pub slow_ms: u64,
+    /// `Stall` sleep, milliseconds (bounded).
+    pub stall_ms: u64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            rate: 0.0,
+            seed: 0,
+            kinds: vec![],
+            at: vec![],
+            poison: vec![],
+            slow_ms: 2,
+            stall_ms: 100,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// Is there anything in this plan that could ever fire?
+    pub fn is_inert(&self) -> bool {
+        self.rate <= 0.0 && self.at.is_empty() && self.poison.is_empty()
+    }
+
+    /// Builder: rate-based schedule (kinds default to `SlowStep`).
+    pub fn with_rate(mut self, rate: f64, seed: u64) -> Self {
+        self.rate = rate.clamp(0.0, 1.0);
+        self.seed = seed;
+        self
+    }
+
+    /// Builder: add an exact site/counter trigger.
+    pub fn at(mut self, site: &str, nth: u64, kind: FaultKind) -> Self {
+        self.at.push(AtRule {
+            site: site.to_string(),
+            nth: nth.max(1),
+            kind,
+        });
+        self
+    }
+
+    /// Builder: poison a request seed.
+    pub fn poison(mut self, seed: u64, kind: FaultKind) -> Self {
+        self.poison.push((seed, kind));
+        self
+    }
+
+    /// Builder: widen the kinds the rate draw cycles through.
+    pub fn with_kinds(mut self, kinds: &[FaultKind]) -> Self {
+        self.kinds = kinds.to_vec();
+        self
+    }
+
+    /// Parse a `TOMA_FAULTS` spec: either a bare rate (`0.05`) or
+    /// comma-separated `key=value` pairs — `rate=0.05`, `seed=7`,
+    /// `kinds=slow+error+panic+stall`, `slow-ms=2`, `stall-ms=100`.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        let spec = spec.trim();
+        if spec.is_empty() {
+            return Ok(plan);
+        }
+        if let Ok(rate) = spec.parse::<f64>() {
+            plan.rate = rate.clamp(0.0, 1.0);
+            return Ok(plan);
+        }
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (key, value) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow!("TOMA_FAULTS: expected key=value, got `{part}`"))?;
+            match key.trim() {
+                "rate" => {
+                    let r: f64 = value
+                        .parse()
+                        .map_err(|_| anyhow!("TOMA_FAULTS: bad rate `{value}`"))?;
+                    plan.rate = r.clamp(0.0, 1.0);
+                }
+                "seed" => {
+                    plan.seed = value
+                        .parse()
+                        .map_err(|_| anyhow!("TOMA_FAULTS: bad seed `{value}`"))?;
+                }
+                "kinds" => {
+                    plan.kinds = value
+                        .split('+')
+                        .map(|k| {
+                            FaultKind::parse(k.trim()).ok_or_else(|| {
+                                anyhow!(
+                                    "TOMA_FAULTS: unknown kind `{k}` \
+                                     (accepted: panic, slow, error, stall)"
+                                )
+                            })
+                        })
+                        .collect::<Result<Vec<_>>>()?;
+                }
+                "slow-ms" => {
+                    plan.slow_ms = value
+                        .parse()
+                        .map_err(|_| anyhow!("TOMA_FAULTS: bad slow-ms `{value}`"))?;
+                }
+                "stall-ms" => {
+                    plan.stall_ms = value
+                        .parse()
+                        .map_err(|_| anyhow!("TOMA_FAULTS: bad stall-ms `{value}`"))?;
+                }
+                other => {
+                    return Err(anyhow!("TOMA_FAULTS: unknown key `{other}`"));
+                }
+            }
+        }
+        Ok(plan)
+    }
+
+    /// The process-wide plan from `TOMA_FAULTS` (cached; `None` when the
+    /// var is unset or empty). A malformed spec panics at first use — a
+    /// chaos run with a typo must not silently run fault-free.
+    pub fn from_env() -> Option<FaultPlan> {
+        static CACHE: OnceLock<Option<FaultPlan>> = OnceLock::new();
+        CACHE
+            .get_or_init(|| {
+                let spec = std::env::var("TOMA_FAULTS").ok()?;
+                if spec.trim().is_empty() {
+                    return None;
+                }
+                let plan = FaultPlan::parse(&spec)
+                    .unwrap_or_else(|e| panic!("invalid TOMA_FAULTS: {e}"));
+                (!plan.is_inert()).then_some(plan)
+            })
+            .clone()
+    }
+}
+
+/// splitmix64 — the deterministic per-probe hash for the rate draw.
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+fn hash_site(site: &str) -> u64 {
+    // FNV-1a: stable across platforms, good enough to decorrelate sites.
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in site.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Shared state behind cloned injectors: the plan plus per-site probe
+/// counters (so at-rules and the rate draw see one deterministic probe
+/// sequence across every worker and lane incarnation).
+struct Shared {
+    plan: FaultPlan,
+    counters: Mutex<BTreeMap<String, u64>>,
+    injected: AtomicU64,
+}
+
+/// Probe-site evaluator for a [`FaultPlan`]. Clone freely — clones share
+/// the plan, the probe counters and the injected-fault tally.
+#[derive(Clone, Default)]
+pub struct FaultInjector {
+    shared: Option<Arc<Shared>>,
+}
+
+impl FaultInjector {
+    /// An injector that never fires (the default).
+    pub fn inert() -> FaultInjector {
+        FaultInjector::default()
+    }
+
+    pub fn new(plan: FaultPlan) -> FaultInjector {
+        if plan.is_inert() {
+            return FaultInjector::inert();
+        }
+        FaultInjector {
+            shared: Some(Arc::new(Shared {
+                plan,
+                counters: Mutex::new(BTreeMap::new()),
+                injected: AtomicU64::new(0),
+            })),
+        }
+    }
+
+    /// The `TOMA_FAULTS` process-wide injector (inert when unset).
+    pub fn from_env() -> FaultInjector {
+        match FaultPlan::from_env() {
+            Some(plan) => FaultInjector::new(plan),
+            None => FaultInjector::inert(),
+        }
+    }
+
+    pub fn is_inert(&self) -> bool {
+        self.shared.is_none()
+    }
+
+    /// Total faults fired so far (all kinds, all sites).
+    pub fn injected_total(&self) -> u64 {
+        self.shared
+            .as_ref()
+            .map(|s| s.injected.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    /// Evaluate one probe: bump the site counter and return the fault to
+    /// fire, if any. `seeds` are the request seeds in flight at the site
+    /// (poison-rule matching). Pure bookkeeping — the *consequence* is
+    /// [`FaultInjector::fire`].
+    pub fn probe(&self, site: &str, seeds: &[u64]) -> Option<FaultKind> {
+        let shared = self.shared.as_ref()?;
+        let plan = &shared.plan;
+        let n = {
+            let mut counters = lock_unpoisoned(&shared.counters);
+            let c = counters.entry(site.to_string()).or_insert(0);
+            *c += 1;
+            *c
+        };
+        // 1. Exact at-rules.
+        for rule in &plan.at {
+            if rule.site == site && rule.nth == n {
+                return Some(rule.kind);
+            }
+        }
+        // 2. Poison pills: any in-flight seed matches.
+        for &(seed, kind) in &plan.poison {
+            if seeds.contains(&seed) {
+                return Some(kind);
+            }
+        }
+        // 3. Rate draw: pure function of (plan.seed, site, counter).
+        if plan.rate > 0.0 {
+            let h = splitmix64(plan.seed ^ hash_site(site) ^ n.wrapping_mul(0x9E37));
+            let u = (h >> 11) as f64 / (1u64 << 53) as f64;
+            if u < plan.rate {
+                let kinds: &[FaultKind] = if plan.kinds.is_empty() {
+                    &[FaultKind::SlowStep]
+                } else {
+                    &plan.kinds
+                };
+                return Some(kinds[(h % kinds.len() as u64) as usize]);
+            }
+        }
+        None
+    }
+
+    /// Probe and, when a fault is due, *execute* it: `Panic` unwinds
+    /// (count first — the caller's `catch_unwind` owns the aftermath),
+    /// `SlowStep`/`Stall` sleep their bounded durations and return `Ok`,
+    /// `ErrorReturn` returns a typed [`INJECTED`] error. `metrics` (when
+    /// the site has a registry) counts `fault_injected`.
+    pub fn fire(&self, site: &str, seeds: &[u64], metrics: Option<&Metrics>) -> Result<()> {
+        // Fast path: inert injectors cost one Option check.
+        let Some(shared) = self.shared.as_ref() else {
+            return Ok(());
+        };
+        let Some(kind) = self.probe(site, seeds) else {
+            return Ok(());
+        };
+        shared.injected.fetch_add(1, Ordering::Relaxed);
+        if let Some(m) = metrics {
+            m.inc("fault_injected");
+            m.inc(&format!("fault_injected_{}", kind.as_str()));
+        }
+        match kind {
+            FaultKind::Panic => panic!("{INJECTED}: panic at {site}"),
+            FaultKind::SlowStep => {
+                std::thread::sleep(Duration::from_millis(shared.plan.slow_ms));
+                Ok(())
+            }
+            FaultKind::Stall => {
+                std::thread::sleep(Duration::from_millis(shared.plan.stall_ms));
+                Ok(())
+            }
+            FaultKind::ErrorReturn => Err(anyhow!("{INJECTED}: error return at {site}")),
+        }
+    }
+}
+
+/// Is this error an injected fault (and therefore transient/retryable)?
+pub fn is_injected(e: &crate::util::error::Error) -> bool {
+    e.to_string().contains(INJECTED)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inert_by_default() {
+        let inj = FaultInjector::inert();
+        assert!(inj.is_inert());
+        for _ in 0..100 {
+            assert!(inj.fire("server.step", &[1], None).is_ok());
+        }
+        assert_eq!(inj.injected_total(), 0);
+        assert!(FaultPlan::default().is_inert());
+        assert!(FaultInjector::new(FaultPlan::default()).is_inert());
+    }
+
+    #[test]
+    fn at_rule_fires_on_exact_probe() {
+        let inj = FaultInjector::new(FaultPlan::default().at(
+            "scheduler.step",
+            3,
+            FaultKind::ErrorReturn,
+        ));
+        assert!(inj.probe("scheduler.step", &[]).is_none()); // 1
+        assert!(inj.probe("server.step", &[]).is_none()); // other site
+        assert!(inj.probe("scheduler.step", &[]).is_none()); // 2
+        assert_eq!(
+            inj.probe("scheduler.step", &[]),
+            Some(FaultKind::ErrorReturn) // 3
+        );
+        assert!(inj.probe("scheduler.step", &[]).is_none()); // 4: one-shot
+    }
+
+    #[test]
+    fn poison_rule_matches_in_flight_seed() {
+        let inj = FaultInjector::new(FaultPlan::default().poison(666, FaultKind::Panic));
+        assert!(inj.probe("scheduler.step", &[1, 2, 3]).is_none());
+        assert_eq!(
+            inj.probe("scheduler.step", &[1, 666, 3]),
+            Some(FaultKind::Panic)
+        );
+        // Poison keeps firing — every incarnation it reaches dies.
+        assert_eq!(inj.probe("scheduler.step", &[666]), Some(FaultKind::Panic));
+    }
+
+    #[test]
+    fn rate_schedule_is_deterministic_and_roughly_calibrated() {
+        let draw = |seed: u64| -> Vec<bool> {
+            let inj = FaultInjector::new(FaultPlan::default().with_rate(0.2, seed));
+            (0..500)
+                .map(|_| inj.probe("s", &[]).is_some())
+                .collect()
+        };
+        let a = draw(7);
+        let b = draw(7);
+        assert_eq!(a, b, "same plan => same schedule");
+        let hits = a.iter().filter(|&&x| x).count();
+        assert!(
+            (40..=160).contains(&hits),
+            "rate 0.2 over 500 probes fired {hits} times"
+        );
+        let c = draw(8);
+        assert_ne!(a, c, "different seed => different schedule");
+    }
+
+    #[test]
+    fn rate_mode_defaults_to_slow_step_only() {
+        let inj = FaultInjector::new(FaultPlan::default().with_rate(1.0, 1));
+        for _ in 0..20 {
+            assert_eq!(inj.probe("s", &[]), Some(FaultKind::SlowStep));
+        }
+    }
+
+    #[test]
+    fn fire_error_return_is_typed_and_counted() {
+        let m = Metrics::new();
+        let inj = FaultInjector::new(
+            FaultPlan::default()
+                .with_rate(1.0, 0)
+                .with_kinds(&[FaultKind::ErrorReturn]),
+        );
+        let err = inj.fire("server.step", &[], Some(&m)).unwrap_err();
+        assert!(is_injected(&err), "{err}");
+        assert!(err.to_string().contains("server.step"));
+        assert_eq!(m.counter("fault_injected"), 1);
+        assert_eq!(m.counter("fault_injected_error"), 1);
+        assert_eq!(inj.injected_total(), 1);
+    }
+
+    #[test]
+    fn fire_panic_is_counted_before_unwinding() {
+        let m = Metrics::new();
+        let inj = FaultInjector::new(FaultPlan::default().poison(9, FaultKind::Panic));
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = inj.fire("server.step", &[9], Some(&m));
+        }));
+        assert!(r.is_err(), "panic kind must unwind");
+        assert_eq!(m.counter("fault_injected_panic"), 1);
+    }
+
+    #[test]
+    fn parse_specs() {
+        let p = FaultPlan::parse("0.05").unwrap();
+        assert_eq!(p.rate, 0.05);
+        assert!(p.kinds.is_empty());
+
+        let p = FaultPlan::parse("rate=0.1,seed=42,kinds=slow+error,slow-ms=1").unwrap();
+        assert_eq!(p.rate, 0.1);
+        assert_eq!(p.seed, 42);
+        assert_eq!(p.kinds, vec![FaultKind::SlowStep, FaultKind::ErrorReturn]);
+        assert_eq!(p.slow_ms, 1);
+
+        assert!(FaultPlan::parse("kinds=bogus").is_err());
+        assert!(FaultPlan::parse("nonsense").is_err());
+        assert!(FaultPlan::parse("rate=abc").is_err());
+        assert!(FaultPlan::parse("").unwrap().is_inert());
+    }
+
+    #[test]
+    fn clones_share_counters() {
+        let a = FaultInjector::new(FaultPlan::default().at("s", 2, FaultKind::Stall));
+        let b = a.clone();
+        assert!(a.probe("s", &[]).is_none()); // 1 via a
+        assert_eq!(b.probe("s", &[]), Some(FaultKind::Stall)); // 2 via b
+    }
+}

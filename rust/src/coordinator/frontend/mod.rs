@@ -16,6 +16,32 @@
 //! implementation), and both share one eviction implementation plus the
 //! lane-lifecycle counters below.
 //!
+//! # Supervision (PR 6)
+//!
+//! Worker panics are *contained*, not fatal: both `LaneJob` drain loops
+//! wrap their fallible bodies in [`catch_panic`], so a panicking worker
+//! fails its in-flight jobs with error completions carrying the
+//! [`LANE_DEATH`] marker instead of dropping their senders, then records
+//! the death with the front-end's supervisor and exits. The supervisor
+//! ([`SupervisionPolicy`]) gates respawns: dead lanes are respawned
+//! lazily on the next submit (generation-checked, the PR 3/4 lifecycle)
+//! under exponential backoff, and a crash storm — more consecutive
+//! deaths than the respawn budget without an intervening healthy serve —
+//! opens a **circuit breaker**: submissions fail fast with a
+//! `lane unhealthy` error until the probe cool-down lets one half-open
+//! respawn through (a healthy serve closes the breaker). Orthogonally,
+//! the submit-side [`RetryPolicy`] ([`LaneFrontEnd::run_batch_retry`])
+//! transparently re-runs requests whose completions are retryable (lane
+//! deaths, stale-lane submits, injected faults) — innocent cohort
+//! members killed alongside a poison request come back bit-identical,
+//! since latents are deterministic in the recorded seed — while a
+//! request in flight across `quarantine_strikes` consecutive lane
+//! crashes is failed with a distinct `quarantined` error instead of
+//! killing the respawned lane forever. The distinction matters: the
+//! breaker is per-*lane* (every incarnation dies, e.g. a broken
+//! artifact), quarantine is per-*request* (one poison input kills
+//! otherwise-healthy lanes).
+//!
 //! Lifecycle counters exported into [`Metrics`] (rendered by
 //! `toma-serve serve` / [`Metrics::render`]):
 //!
@@ -27,15 +53,23 @@
 //! * `shed_deadline` — jobs rejected for exceeding their admission
 //!   deadline in queue;
 //! * `rejected_backpressure` — fail-fast `try_submit` rejections at the
-//!   queue bound.
+//!   queue bound;
+//! * `worker_panic` — panics caught at a lane's unwind boundary;
+//! * `lane_unhealthy` — circuit-breaker openings (crash storms);
+//! * `rejected_unhealthy` / `rejected_backoff` — submissions refused by
+//!   an open breaker / a backoff window;
+//! * `retry_attempted` — transparent resubmissions by `run_batch_retry`;
+//! * `quarantined` — poison requests failed after repeated lane crashes;
+//! * `shed_shutdown` — queued jobs drained with explicit "shutting down"
+//!   completions during graceful shutdown.
 //!
 //! This seam is also where a future PJRT cohort backend plugs in: a
 //! `LaneJob` whose workers drive compiled variable-batch step artifacts
-//! gets the whole lane lifecycle for free (see ROADMAP "PJRT batched
-//! cohort backend").
+//! gets the whole lane lifecycle — including supervision — for free (see
+//! ROADMAP "PJRT batched cohort backend").
 
 use std::collections::{BTreeMap, BTreeSet};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -43,9 +77,47 @@ use std::time::Instant;
 
 use crate::anyhow;
 use crate::util::error::Result;
+use crate::util::lock_unpoisoned;
 
+use super::fault::INJECTED;
 use super::metrics::Metrics;
 use super::request::{EngineConfig, GenRequest, GenResult};
+
+/// Marker substring carried by every completion whose lane's worker
+/// panicked with the request in flight. The retry layer treats such
+/// errors as retryable *and* strike-worthy (see [`RetryPolicy`]).
+pub const LANE_DEATH: &str = "lane death";
+
+/// Marker substring for submissions that tripped over an already-dead
+/// lane (the corpse between a crash and its eviction) or were queued
+/// behind one. Retryable, but *not* a quarantine strike — the lane was
+/// not killed by this request.
+pub const LANE_STALE: &str = "lane stale";
+
+/// Is this error transient — worth transparently resubmitting? True for
+/// lane deaths, stale-lane submits, and injected faults; false for real
+/// engine errors, deadline sheds, breaker fail-fasts and quarantines.
+pub fn is_retryable(e: &crate::util::error::Error) -> bool {
+    let s = e.to_string();
+    s.contains(LANE_DEATH) || s.contains(LANE_STALE) || s.contains(INJECTED)
+}
+
+/// Run `f` behind an unwind boundary, rendering a panic payload into a
+/// plain message. This is the containment primitive both `LaneJob` drain
+/// loops wrap their fallible bodies in: a panic becomes an `Err(String)`
+/// the worker turns into error completions, never an unwinding thread
+/// that drops in-flight completion senders.
+pub fn catch_panic<R>(f: impl FnOnce() -> R) -> std::result::Result<R, String> {
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)).map_err(|p| {
+        if let Some(s) = p.downcast_ref::<&str>() {
+            (*s).to_string()
+        } else if let Some(s) = p.downcast_ref::<String>() {
+            s.clone()
+        } else {
+            "non-string panic payload".to_string()
+        }
+    })
+}
 
 /// A completed request with timing info.
 pub struct Completion {
@@ -53,6 +125,18 @@ pub struct Completion {
     pub result: Result<GenResult>,
     pub queued_s: f64,
     pub service_s: f64,
+}
+
+impl Completion {
+    /// Did a lane crash with this request in flight? (Quarantine strike.)
+    pub fn is_lane_death(&self) -> bool {
+        matches!(&self.result, Err(e) if e.to_string().contains(LANE_DEATH))
+    }
+
+    /// Would the retry layer transparently resubmit this request?
+    pub fn is_retryable(&self) -> bool {
+        matches!(&self.result, Err(e) if is_retryable(e))
+    }
 }
 
 /// One queued request: the submission plus its completion channel.
@@ -81,6 +165,14 @@ impl Job {
         });
     }
 
+    /// Graceful-shutdown drain: a still-queued job is failed with an
+    /// explicit "shutting down" completion (counted as `shed_shutdown`)
+    /// instead of letting its receiver observe a bare disconnect.
+    pub fn fail_shutdown(self, metrics: &Metrics) {
+        metrics.inc("shed_shutdown");
+        self.fail(metrics, "shutting down: request drained before service");
+    }
+
     /// The one deadline-shedding implementation (previously
     /// Scheduler-only, now shared by every lane): a job still queued past
     /// its admission deadline is rejected with an error completion
@@ -107,13 +199,222 @@ impl Job {
     }
 }
 
+/// Best-effort drain of a dying lane's queue: every job still buffered
+/// gets an explicit stale-lane error completion (retryable, no strike)
+/// instead of a dropped sender. Called by the last worker of a lane on
+/// its way out of a panic.
+pub fn drain_dead(rx: &Receiver<Job>, metrics: &Metrics, kind: &str) {
+    while let Ok(job) = rx.try_recv() {
+        job.fail(
+            metrics,
+            &format!("{kind} {LANE_STALE}: lane died before serving queued request; resubmit"),
+        );
+    }
+}
+
+/// Exponential-backoff + circuit-breaker policy for lane respawns.
+///
+/// Every caught worker panic records a *death* against the lane key; a
+/// healthy serve resets the streak. Respawns (which happen lazily, on
+/// the first submit after the corpse is evicted) are gated:
+///
+/// * while the streak is below `respawn_budget`, a respawn must wait out
+///   `backoff_base_s * 2^(deaths-1)` (capped at `backoff_max_s`) since
+///   the last death — submissions inside the window fail fast with a
+///   "backing off" error (`rejected_backoff`);
+/// * at `respawn_budget` consecutive deaths the breaker opens
+///   (`lane_unhealthy`): submissions fail fast with a "lane unhealthy"
+///   error (`rejected_unhealthy`) until `breaker_probe_s` has passed,
+///   after which a single half-open respawn probe is let through — the
+///   breaker closes only when a serve succeeds.
+///
+/// The default `backoff_base_s` of 0 disables the backoff window (every
+/// eviction may respawn immediately) while keeping the breaker armed.
+#[derive(Clone, Copy, Debug)]
+pub struct SupervisionPolicy {
+    /// Backoff before the first respawn after a death (seconds; 0
+    /// disables backoff).
+    pub backoff_base_s: f64,
+    /// Cap on the exponential backoff (seconds).
+    pub backoff_max_s: f64,
+    /// Consecutive deaths (without a healthy serve) that open the
+    /// circuit breaker.
+    pub respawn_budget: u32,
+    /// Cool-down before an open breaker lets a half-open respawn probe
+    /// through (seconds).
+    pub breaker_probe_s: f64,
+}
+
+impl Default for SupervisionPolicy {
+    fn default() -> Self {
+        SupervisionPolicy {
+            backoff_base_s: 0.0,
+            backoff_max_s: 2.0,
+            respawn_budget: 8,
+            breaker_probe_s: 5.0,
+        }
+    }
+}
+
+/// Per-key crash bookkeeping. Time is kept as offsets from a lane-table
+/// epoch (the `DecayedTail` pattern) so tests can exercise backoff and
+/// breaker transitions deterministically without wall-clock sleeps.
+#[derive(Clone, Copy, Default)]
+struct LaneHealth {
+    consecutive_deaths: u32,
+    last_death_off: f64,
+    breaker_open: bool,
+}
+
+/// The front-end's supervisor: records deaths/healthy serves per lane
+/// key and gates respawns per the [`SupervisionPolicy`]. Shared (via
+/// [`LaneGuard`]) with every worker incarnation of every lane.
+pub(crate) struct Supervision {
+    policy: SupervisionPolicy,
+    epoch: Instant,
+    health: Mutex<BTreeMap<String, LaneHealth>>,
+}
+
+impl Supervision {
+    fn new(policy: SupervisionPolicy) -> Supervision {
+        Supervision {
+            policy,
+            epoch: Instant::now(),
+            health: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    fn now_off(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    fn record_death(&self, key: &str, metrics: &Metrics) {
+        let now = self.now_off();
+        let mut health = lock_unpoisoned(&self.health);
+        let h = health.entry(key.to_string()).or_default();
+        h.consecutive_deaths = h.consecutive_deaths.saturating_add(1);
+        h.last_death_off = now;
+        if !h.breaker_open && h.consecutive_deaths >= self.policy.respawn_budget.max(1) {
+            h.breaker_open = true;
+            metrics.inc("lane_unhealthy");
+        }
+    }
+
+    fn record_healthy(&self, key: &str) {
+        let mut health = lock_unpoisoned(&self.health);
+        if let Some(h) = health.get_mut(key) {
+            h.consecutive_deaths = 0;
+            h.breaker_open = false;
+        }
+    }
+
+    /// May a new lane spawn for `key` right now? Err = fail-fast.
+    fn spawn_gate(&self, key: &str, metrics: &Metrics) -> Result<()> {
+        let now = self.now_off();
+        let mut health = lock_unpoisoned(&self.health);
+        let Some(h) = health.get_mut(key) else {
+            return Ok(());
+        };
+        if h.consecutive_deaths == 0 {
+            return Ok(());
+        }
+        let since = now - h.last_death_off;
+        if h.breaker_open {
+            if since >= self.policy.breaker_probe_s {
+                // Half-open: let one respawn probe through, pacing
+                // further probes; only a healthy serve closes the
+                // breaker (record_healthy).
+                h.last_death_off = now;
+                return Ok(());
+            }
+            metrics.inc("rejected_unhealthy");
+            return Err(anyhow!(
+                "lane unhealthy (circuit open after {} consecutive deaths); failing fast",
+                h.consecutive_deaths
+            ));
+        }
+        let exp = h.consecutive_deaths.saturating_sub(1).min(16);
+        let delay =
+            (self.policy.backoff_base_s * (1u64 << exp) as f64).min(self.policy.backoff_max_s);
+        if since < delay {
+            metrics.inc("rejected_backoff");
+            return Err(anyhow!(
+                "lane respawn backing off ({since:.3}s of {delay:.3}s after {} deaths); \
+                 retry later",
+                h.consecutive_deaths
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// A worker's handle back to its lane's supervision state: the graceful
+/// shutdown flag plus death/healthy reporting. Cheap to clone — every
+/// worker thread of a lane holds one.
+#[derive(Clone)]
+pub struct LaneGuard {
+    key: String,
+    supervision: Arc<Supervision>,
+    draining: Arc<AtomicBool>,
+}
+
+impl LaneGuard {
+    /// Has graceful shutdown begun? Workers fail queued jobs with
+    /// [`Job::fail_shutdown`] instead of serving them once this is set.
+    pub fn draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+
+    /// Report a caught worker panic: counts `worker_panic` and records a
+    /// death against the lane's health (backoff / breaker bookkeeping).
+    pub fn record_panic(&self, metrics: &Metrics) {
+        metrics.inc("worker_panic");
+        self.supervision.record_death(&self.key, metrics);
+    }
+
+    /// Report a successful serve: resets the lane's death streak and
+    /// closes an open breaker (the half-open probe succeeded).
+    pub fn record_healthy(&self) {
+        self.supervision.record_healthy(&self.key);
+    }
+}
+
+/// Everything a [`LaneJob`] needs to run one lane's workers: the job
+/// queue, the shared metrics registry, and the supervision guard.
+pub struct WorkerCtx {
+    pub rx: Receiver<Job>,
+    pub metrics: Arc<Metrics>,
+    pub guard: LaneGuard,
+}
+
+/// Submit-side transparent-retry policy for
+/// [`LaneFrontEnd::run_batch_retry`].
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Total submissions per request (first attempt included).
+    pub max_attempts: u32,
+    /// Lane crashes with this request in flight before it is failed with
+    /// a `quarantined` error instead of resubmitted (the poison-pill
+    /// containment: K strikes and the request is out).
+    pub quarantine_strikes: u32,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 4,
+            quarantine_strikes: 3,
+        }
+    }
+}
+
 /// The per-lane worker behavior a [`LaneFrontEnd`] instantiates: the
 /// per-request engine job ([`Server`](crate::coordinator::Server)) or the
 /// cohort-step job ([`Scheduler`](crate::coordinator::Scheduler)).
 /// Everything else — lane map, bounded queues, backpressure, the
 /// generation-checked evict/respawn lifecycle, deadline shedding,
-/// lifecycle counters — lives in the shared front-end and cannot drift
-/// between instantiations.
+/// supervision, lifecycle counters — lives in the shared front-end and
+/// cannot drift between instantiations.
 pub trait LaneJob: Send + Sync + 'static {
     /// Subsystem name used in error messages ("server" / "scheduler").
     fn kind(&self) -> &'static str;
@@ -123,17 +424,16 @@ pub trait LaneJob: Send + Sync + 'static {
     /// [`LaneFrontEnd::try_submit`] fails fast.
     fn queue_depth(&self) -> usize;
 
-    /// Spawn the worker thread(s) that drain `rx` until it disconnects.
-    /// Workers shed overdue jobs with [`Job::shed_if_overdue`] — the one
-    /// deadline-shedding implementation — before serving.
+    /// Spawn the worker thread(s) that drain `ctx.rx` until it
+    /// disconnects. Workers shed overdue jobs with
+    /// [`Job::shed_if_overdue`] — the one deadline-shedding
+    /// implementation — before serving, honor `ctx.guard.draining()`,
+    /// and wrap fallible bodies in [`catch_panic`] so a panic yields
+    /// [`LANE_DEATH`] error completions (reported via
+    /// [`LaneGuard::record_panic`]) rather than dropped senders.
     /// Workers own whatever heavy state they need (a PJRT client, a
     /// cohort backend); the front-end only joins the handles on shutdown.
-    fn spawn_workers(
-        &self,
-        cfg: &EngineConfig,
-        rx: Receiver<Job>,
-        metrics: Arc<Metrics>,
-    ) -> Vec<JoinHandle<()>>;
+    fn spawn_workers(&self, cfg: &EngineConfig, ctx: WorkerCtx) -> Vec<JoinHandle<()>>;
 }
 
 /// One worker lane: a bounded job queue drained by the job's threads.
@@ -163,6 +463,8 @@ pub struct LaneFrontEnd<J: LaneJob> {
     pub metrics: Arc<Metrics>,
     table: Mutex<LaneTable>,
     next_generation: AtomicU64,
+    supervision: Arc<Supervision>,
+    draining: Arc<AtomicBool>,
 }
 
 impl<J: LaneJob> LaneFrontEnd<J> {
@@ -175,6 +477,8 @@ impl<J: LaneJob> LaneFrontEnd<J> {
                 seen: BTreeSet::new(),
             }),
             next_generation: AtomicU64::new(1),
+            supervision: Arc::new(Supervision::new(SupervisionPolicy::default())),
+            draining: Arc::new(AtomicBool::new(false)),
         }
     }
 
@@ -189,9 +493,24 @@ impl<J: LaneJob> LaneFrontEnd<J> {
         &mut self.job
     }
 
+    /// Replace the supervision policy (builder-time only: guards already
+    /// cloned into running lanes keep the previous supervisor).
+    pub(crate) fn set_supervision(&mut self, policy: SupervisionPolicy) {
+        self.supervision = Arc::new(Supervision::new(policy));
+    }
+
     fn spawn_lane(&self, cfg: &EngineConfig) -> Lane {
         let (tx, rx) = sync_channel::<Job>(self.job.queue_depth().max(1));
-        let handles = self.job.spawn_workers(cfg, rx, self.metrics.clone());
+        let ctx = WorkerCtx {
+            rx,
+            metrics: self.metrics.clone(),
+            guard: LaneGuard {
+                key: cfg.key(),
+                supervision: self.supervision.clone(),
+                draining: self.draining.clone(),
+            },
+        };
+        let handles = self.job.spawn_workers(cfg, ctx);
         let generation = self.next_generation.fetch_add(1, Ordering::Relaxed);
         Lane {
             tx,
@@ -202,10 +521,13 @@ impl<J: LaneJob> LaneFrontEnd<J> {
 
     /// The lane's sender plus the generation it belongs to — the identity
     /// a failed submit must present to [`LaneFrontEnd::evict_lane`].
-    pub(crate) fn lane_tx(&self, cfg: &EngineConfig) -> (SyncSender<Job>, u64) {
+    /// Fallible since PR 6: spawning into a crash-looping key is gated by
+    /// the supervisor (backoff window or open circuit breaker).
+    pub(crate) fn lane_tx(&self, cfg: &EngineConfig) -> Result<(SyncSender<Job>, u64)> {
         let key = cfg.key();
-        let mut table = self.table.lock().unwrap();
+        let mut table = lock_unpoisoned(&self.table);
         if !table.lanes.contains_key(&key) {
+            self.supervision.spawn_gate(&key, &self.metrics)?;
             let lane = self.spawn_lane(cfg);
             self.metrics.inc("lane_spawned");
             if !table.seen.insert(key.clone()) {
@@ -214,7 +536,7 @@ impl<J: LaneJob> LaneFrontEnd<J> {
             table.lanes.insert(key.clone(), lane);
         }
         let lane = table.lanes.get(&key).expect("just ensured");
-        (lane.tx.clone(), lane.generation)
+        Ok((lane.tx.clone(), lane.generation))
     }
 
     /// Remove the lane for `key` only if it is still the `generation` the
@@ -223,7 +545,7 @@ impl<J: LaneJob> LaneFrontEnd<J> {
     /// spawned — generation mismatch makes the stale eviction a no-op.
     /// Returns whether a lane was evicted (and counts `lane_evicted`).
     pub(crate) fn evict_lane(&self, key: &str, generation: u64) -> bool {
-        let mut table = self.table.lock().unwrap();
+        let mut table = lock_unpoisoned(&self.table);
         if table.lanes.get(key).map(|l| l.generation) == Some(generation) {
             table.lanes.remove(key);
             self.metrics.inc("lane_evicted");
@@ -236,29 +558,39 @@ impl<J: LaneJob> LaneFrontEnd<J> {
     /// Is there currently a live lane for `key`? (Test introspection.)
     #[cfg(test)]
     pub(crate) fn has_lane(&self, key: &str) -> bool {
-        self.table.lock().unwrap().lanes.contains_key(key)
+        lock_unpoisoned(&self.table).lanes.contains_key(key)
     }
 
     /// Submit a request; the completion arrives on the returned channel.
     /// Blocks when the lane queue is at its bound (backpressure). A dead
     /// lane (panicked workers) fails the request with an error completion
     /// and is respawned on the next submit — one bad request must not
-    /// poison the serving process.
+    /// poison the serving process. A supervisor refusal (backoff /
+    /// breaker) also arrives as an error completion.
     pub fn submit(&self, cfg: &EngineConfig, request: GenRequest) -> Receiver<Completion> {
-        let (tx, generation) = self.lane_tx(cfg);
         let (done_tx, done_rx) = channel();
-        self.metrics.inc("requests_submitted");
         let job = Job {
             request,
             enqueued: Instant::now(),
             done: done_tx,
         };
+        let (tx, generation) = match self.lane_tx(cfg) {
+            Ok(t) => t,
+            Err(e) => {
+                job.fail(&self.metrics, &e.to_string());
+                return done_rx;
+            }
+        };
+        self.metrics.inc("requests_submitted");
         if let Err(std::sync::mpsc::SendError(job)) = tx.send(job) {
             self.metrics.inc("requests_err");
             self.evict_lane(&cfg.key(), generation);
             let _ = job.done.send(Completion {
                 request: job.request,
-                result: Err(anyhow!("{} lane died; resubmit", self.job.kind())),
+                result: Err(anyhow!(
+                    "{} {LANE_STALE}: lane was dead at submit; resubmit",
+                    self.job.kind()
+                )),
                 queued_s: 0.0,
                 service_s: 0.0,
             });
@@ -274,7 +606,7 @@ impl<J: LaneJob> LaneFrontEnd<J> {
         cfg: &EngineConfig,
         request: GenRequest,
     ) -> Result<Receiver<Completion>> {
-        let (tx, generation) = self.lane_tx(cfg);
+        let (tx, generation) = self.lane_tx(cfg)?;
         let (done_tx, done_rx) = channel();
         match tx.try_send(Job {
             request,
@@ -298,7 +630,10 @@ impl<J: LaneJob> LaneFrontEnd<J> {
                 // respawns fresh (generation-checked: never a healthy
                 // respawn that beat us to it).
                 self.evict_lane(&cfg.key(), generation);
-                Err(anyhow!("{} lane died; resubmit", self.job.kind()))
+                Err(anyhow!(
+                    "{} {LANE_STALE}: lane was dead at submit; resubmit",
+                    self.job.kind()
+                ))
             }
         }
     }
@@ -319,7 +654,10 @@ impl<J: LaneJob> LaneFrontEnd<J> {
             .map(|(request, rx)| {
                 rx.recv().unwrap_or_else(|_| Completion {
                     request,
-                    result: Err(anyhow!("{} lane died mid-request", self.job.kind())),
+                    result: Err(anyhow!(
+                        "{} {LANE_STALE}: lane died mid-request; resubmit",
+                        self.job.kind()
+                    )),
                     queued_s: 0.0,
                     service_s: 0.0,
                 })
@@ -339,10 +677,77 @@ impl<J: LaneJob> LaneFrontEnd<J> {
             .collect()
     }
 
-    /// Drop all lanes, joining worker threads. Idempotent.
+    /// [`LaneFrontEnd::run_batch`] with transparent retry: requests whose
+    /// completions are retryable (lane deaths, stale-lane submits,
+    /// injected faults) are resubmitted — sequentially, one request at a
+    /// time, so a poison request is never re-batched with innocents mid
+    /// recovery — up to `retry.max_attempts` total attempts each. A
+    /// request in flight across `retry.quarantine_strikes` lane crashes
+    /// is failed with a `quarantined` error instead (counted). Retried
+    /// requests reproduce their original latents bit-identically: the
+    /// latent is deterministic in the recorded seed.
+    pub fn run_batch_retry(
+        &self,
+        cfg: &EngineConfig,
+        requests: Vec<GenRequest>,
+        retry: RetryPolicy,
+    ) -> Vec<Completion> {
+        let mut comps = self.run_batch(cfg, requests);
+        let max_attempts = retry.max_attempts.max(1);
+        let quarantine = retry.quarantine_strikes.max(1);
+        for slot in comps.iter_mut() {
+            let mut attempts: u32 = 1;
+            let mut strikes: u32 = u32::from(slot.is_lane_death());
+            loop {
+                if !slot.is_retryable() {
+                    break;
+                }
+                if strikes >= quarantine {
+                    self.metrics.inc("quarantined");
+                    slot.result = Err(anyhow!(
+                        "request quarantined after {strikes} strikes (in flight across \
+                         {strikes} consecutive lane crashes — poison request?); not retried"
+                    ));
+                    break;
+                }
+                if attempts >= max_attempts {
+                    break;
+                }
+                attempts += 1;
+                self.metrics.inc("retry_attempted");
+                let request = slot.request.clone();
+                let rx = self.submit(cfg, request.clone());
+                let c = rx.recv().unwrap_or_else(|_| Completion {
+                    request,
+                    result: Err(anyhow!(
+                        "{} {LANE_STALE}: lane died mid-retry; resubmit",
+                        self.job.kind()
+                    )),
+                    queued_s: 0.0,
+                    service_s: 0.0,
+                });
+                strikes += u32::from(c.is_lane_death());
+                *slot = c;
+            }
+        }
+        comps
+    }
+
+    /// Begin graceful shutdown: workers start failing queued jobs with
+    /// explicit "shutting down" completions (`shed_shutdown`) instead of
+    /// serving them. Irreversible for this front-end.
+    pub fn begin_drain(&self) {
+        self.draining.store(true, Ordering::SeqCst);
+    }
+
+    /// Graceful shutdown: flag the drain, then drop all lanes and join
+    /// worker threads — queued jobs receive explicit "shutting down"
+    /// error completions from their workers, never a bare disconnect.
+    /// Idempotent.
     pub fn shutdown(&self) {
+        self.begin_drain();
         let drained: Vec<Lane> = {
-            let mut table = self.table.lock().unwrap();
+            let mut table = lock_unpoisoned(&self.table);
             std::mem::take(&mut table.lanes).into_values().collect()
         };
         for lane in drained {
@@ -363,7 +768,8 @@ impl<J: LaneJob> Drop for LaneFrontEnd<J> {
 /// Shared lane-lifecycle test scenarios, run against *both* `LaneJob`
 /// instantiations (the `Server`'s engine job and the `Scheduler`'s cohort
 /// job) from their respective test modules — one harness, no copy-pasted
-/// twins.
+/// twins. PR 6 adds the chaos scenarios: panic containment, crash-storm
+/// breaker, and poison-pill quarantine with transparent innocent retry.
 #[cfg(test)]
 pub(crate) mod harness {
     use super::*;
@@ -405,10 +811,10 @@ pub(crate) mod harness {
         cfg: &EngineConfig,
         served: &dyn Fn(&Completion) -> bool,
     ) {
-        // Depending on timing the dying lane either drops the completion
-        // sender (recv errors) or the submit itself observes the dead
-        // channel (error completion). Either way, resubmitting must reach
-        // a healthy respawned lane within a few attempts.
+        // Depending on timing the dying lane either fails the job with an
+        // explicit stale/death completion or the submit itself observes
+        // the dead channel. Either way, resubmitting must reach a healthy
+        // respawned lane within a few attempts.
         let mut ok = false;
         for attempt in 0..4u64 {
             let rx = front.submit(cfg, GenRequest::new("retry", attempt));
@@ -422,7 +828,7 @@ pub(crate) mod harness {
         assert!(ok, "resubmit after forced lane death must be served");
         // The healthy lane is a fresh incarnation; the dead lane's
         // generation is permanently stale and cannot evict it.
-        let (_tx, fresh) = front.lane_tx(cfg);
+        let (_tx, fresh) = front.lane_tx(cfg).expect("healthy lane");
         assert!(fresh > 1, "respawn must advance the generation");
         assert!(!front.evict_lane(&cfg.key(), fresh - 1));
         assert!(
@@ -439,6 +845,120 @@ pub(crate) mod harness {
         assert!(front.metrics.counter("lane_spawned") >= 2);
         front.shutdown();
     }
+
+    /// Panic containment: the caller's front is configured (fault
+    /// injector or job wiring) so that serving `poison` panics the
+    /// worker. The submitter must still receive an error *completion*
+    /// carrying the lane-death marker — never a dropped sender — and the
+    /// panic must be counted.
+    pub(crate) fn assert_worker_panic_fails_inflight<J: LaneJob>(
+        front: &LaneFrontEnd<J>,
+        cfg: &EngineConfig,
+        poison: GenRequest,
+    ) {
+        let rx = front.submit(cfg, poison);
+        let c = rx
+            .recv()
+            .expect("panic must yield an error completion, not a dropped sender");
+        assert!(
+            c.is_lane_death(),
+            "completion must carry the lane-death marker, got {:?}",
+            c.result.as_ref().err().map(|e| e.to_string())
+        );
+        // Join workers before reading the counter: the dying worker
+        // records its panic *after* sending the completion.
+        front.shutdown();
+        assert!(front.metrics.counter("worker_panic") >= 1);
+    }
+
+    /// Crash storm -> circuit breaker. The caller's front must be set up
+    /// so *every* serve of `poison` kills a lane incarnation, under a
+    /// supervision policy with a small respawn budget and a distant
+    /// breaker probe. Repeated resubmission must trip the breaker
+    /// exactly once, after which submissions fail fast with an
+    /// "unhealthy" completion instead of spawning.
+    pub(crate) fn assert_crash_storm_opens_breaker<J: LaneJob>(
+        front: &LaneFrontEnd<J>,
+        cfg: &EngineConfig,
+        poison: &GenRequest,
+    ) {
+        let mut opened = false;
+        for _ in 0..32 {
+            let rx = front.submit(cfg, poison.clone());
+            let Ok(c) = rx.recv() else { continue };
+            let Err(e) = &c.result else {
+                panic!("poison request must never be served");
+            };
+            if e.to_string().contains("unhealthy") {
+                opened = true;
+                break;
+            }
+        }
+        assert!(opened, "crash storm must open the circuit breaker");
+        assert_eq!(
+            front.metrics.counter("lane_unhealthy"),
+            1,
+            "breaker opens exactly once"
+        );
+        assert!(front.metrics.counter("rejected_unhealthy") >= 1);
+        assert!(front.metrics.counter("worker_panic") >= 2);
+        front.shutdown();
+    }
+
+    /// Poison-pill quarantine with transparent innocent retry, via
+    /// `run_batch_retry`: `poison` crashes every lane incarnation that
+    /// serves it; the innocents must come back (`served` decides what a
+    /// healthy serve looks like), the poison must be failed with a
+    /// quarantine error after 2 strikes, and the supervisor must have
+    /// respawned lanes rather than opened the breaker (healthy serves
+    /// between crashes reset the streak).
+    pub(crate) fn assert_poison_quarantined_innocents_served<J: LaneJob>(
+        front: &LaneFrontEnd<J>,
+        cfg: &EngineConfig,
+        innocents: Vec<GenRequest>,
+        poison: GenRequest,
+        served: &dyn Fn(&Completion) -> bool,
+    ) {
+        let mut requests = innocents;
+        let pi = requests.len();
+        requests.push(poison);
+        let comps = front.run_batch_retry(
+            cfg,
+            requests,
+            RetryPolicy {
+                max_attempts: 8,
+                quarantine_strikes: 2,
+            },
+        );
+        for (i, c) in comps.iter().enumerate() {
+            if i == pi {
+                continue;
+            }
+            assert!(
+                served(c),
+                "innocent {i} must be transparently served, got {:?}",
+                c.result.as_ref().err().map(|e| e.to_string())
+            );
+        }
+        let err = comps[pi]
+            .result
+            .as_ref()
+            .err()
+            .expect("poison must fail")
+            .to_string();
+        assert!(err.contains("quarantined"), "poison must be quarantined: {err}");
+        // Join workers before reading counters: the last dying worker
+        // records its panic *after* sending the quarantining completion.
+        front.shutdown();
+        assert_eq!(front.metrics.counter("quarantined"), 1);
+        assert!(front.metrics.counter("retry_attempted") >= 1);
+        assert!(front.metrics.counter("worker_panic") >= 2);
+        assert_eq!(
+            front.metrics.counter("lane_unhealthy"),
+            0,
+            "quarantine must contain the poison before the breaker opens"
+        );
+    }
 }
 
 #[cfg(test)]
@@ -446,12 +966,15 @@ mod tests {
     use super::*;
     use crate::coordinator::request::GenStats;
 
-    /// Minimal job: one worker per lane that sheds overdue jobs and
-    /// answers the rest with an empty-latent success — enough to exercise
-    /// every front-end mechanism without a model.
+    /// Minimal job: one worker per lane that sheds overdue jobs, honors
+    /// the drain flag, and answers the rest with a tiny success — plus an
+    /// optional poison seed whose serve panics, exercising the full
+    /// containment path (catch_panic, LANE_DEATH completion,
+    /// record_panic, best-effort queue drain) without a model.
     struct EchoJob {
         queue_depth: usize,
         deadline_s: Option<f64>,
+        panic_seed: Option<u64>,
     }
 
     impl LaneJob for EchoJob {
@@ -463,33 +986,60 @@ mod tests {
             self.queue_depth
         }
 
-        fn spawn_workers(
-            &self,
-            _cfg: &EngineConfig,
-            rx: Receiver<Job>,
-            metrics: Arc<Metrics>,
-        ) -> Vec<JoinHandle<()>> {
+        fn spawn_workers(&self, _cfg: &EngineConfig, ctx: WorkerCtx) -> Vec<JoinHandle<()>> {
+            let WorkerCtx { rx, metrics, guard } = ctx;
             let deadline_s = self.deadline_s;
+            let panic_seed = self.panic_seed;
             vec![std::thread::Builder::new()
                 .name("toma-echo".to_string())
                 .spawn(move || {
                     while let Ok(job) = rx.recv() {
+                        if guard.draining() {
+                            job.fail_shutdown(&metrics);
+                            continue;
+                        }
                         let dl = job.request.deadline_s.or(deadline_s);
                         let Some(job) = job.shed_if_overdue(dl, &metrics) else {
                             continue;
                         };
-                        metrics.inc("requests_ok");
                         let queued_s = job.queued_s();
-                        let _ = job.done.send(Completion {
-                            request: job.request,
-                            result: Ok(GenResult {
-                                latent: vec![],
+                        let Job { request, done, .. } = job;
+                        let served = catch_panic(|| {
+                            if Some(request.seed) == panic_seed {
+                                panic!("echo poison");
+                            }
+                            GenResult {
+                                latent: vec![request.seed as f32],
                                 stats: GenStats::default(),
                                 dest_trace: vec![],
-                            }),
-                            queued_s,
-                            service_s: 0.0,
+                            }
                         });
+                        match served {
+                            Ok(r) => {
+                                metrics.inc("requests_ok");
+                                let _ = done.send(Completion {
+                                    request,
+                                    result: Ok(r),
+                                    queued_s,
+                                    service_s: 0.0,
+                                });
+                                guard.record_healthy();
+                            }
+                            Err(msg) => {
+                                metrics.inc("requests_err");
+                                let _ = done.send(Completion {
+                                    request,
+                                    result: Err(anyhow!(
+                                        "echo {LANE_DEATH}: worker panicked: {msg}"
+                                    )),
+                                    queued_s,
+                                    service_s: 0.0,
+                                });
+                                guard.record_panic(&metrics);
+                                drain_dead(&rx, &metrics, "echo");
+                                return;
+                            }
+                        }
                     }
                 })
                 .expect("spawn echo worker")]
@@ -500,6 +1050,15 @@ mod tests {
         LaneFrontEnd::new(EchoJob {
             queue_depth,
             deadline_s: None,
+            panic_seed: None,
+        })
+    }
+
+    fn poison_front(panic_seed: u64) -> LaneFrontEnd<EchoJob> {
+        LaneFrontEnd::new(EchoJob {
+            queue_depth: 8,
+            deadline_s: None,
+            panic_seed: Some(panic_seed),
         })
     }
 
@@ -511,7 +1070,7 @@ mod tests {
     fn stale_generation_cannot_evict_fresh_lane() {
         let fe = front(8);
         let c = cfg();
-        let (_tx, gen1) = fe.lane_tx(&c);
+        let (_tx, gen1) = fe.lane_tx(&c).expect("lane");
         // A submitter that observed an *older* incarnation fail must not
         // evict the current lane.
         assert!(!fe.evict_lane(&c.key(), gen1 + 1));
@@ -524,7 +1083,7 @@ mod tests {
         assert_eq!(fe.metrics.counter("lane_evicted"), 1);
         // A respawn gets a fresh identity, so the old generation is now
         // permanently stale — and the respawn is counted.
-        let (_tx, gen2) = fe.lane_tx(&c);
+        let (_tx, gen2) = fe.lane_tx(&c).expect("lane");
         assert!(gen2 > gen1);
         assert!(!fe.evict_lane(&c.key(), gen1));
         assert_eq!(fe.metrics.counter("lane_spawned"), 2);
@@ -538,12 +1097,12 @@ mod tests {
         let a = cfg();
         let mut b = cfg();
         b.steps = 7; // different key
-        let (_ta, ga) = fe.lane_tx(&a);
-        let (_tb, gb) = fe.lane_tx(&b);
+        let (_ta, ga) = fe.lane_tx(&a).expect("lane a");
+        let (_tb, gb) = fe.lane_tx(&b).expect("lane b");
         assert_ne!(ga, gb);
         // Re-fetching an existing lane reports the same generation and
         // does not spawn again.
-        assert_eq!(fe.lane_tx(&a).1, ga);
+        assert_eq!(fe.lane_tx(&a).expect("lane a again").1, ga);
         assert_eq!(fe.metrics.counter("lane_spawned"), 2);
         assert_eq!(fe.metrics.counter("lane_respawned"), 0);
         fe.shutdown();
@@ -582,5 +1141,141 @@ mod tests {
         let _ = fe.run_batch(&cfg(), vec![GenRequest::new("x", 0)]);
         fe.shutdown();
         fe.shutdown(); // second call must be a no-op (Drop calls it again)
+    }
+
+    #[test]
+    fn begin_drain_fails_queued_jobs_with_shutdown_completions() {
+        let fe = front(8);
+        // Prove the lane serves before the drain flag flips...
+        let ok = fe.run_batch(&cfg(), vec![GenRequest::new("pre", 1)]);
+        assert!(ok[0].result.is_ok());
+        // ...then everything after begin_drain is failed explicitly.
+        fe.begin_drain();
+        let rx = fe.submit(&cfg(), GenRequest::new("post", 2));
+        let c = rx.recv().expect("drain must answer, not disconnect");
+        let err = c.result.err().expect("drained").to_string();
+        assert!(err.contains("shutting down"), "unexpected error: {err}");
+        assert_eq!(fe.metrics.counter("shed_shutdown"), 1);
+        fe.shutdown();
+    }
+
+    #[test]
+    fn worker_panic_yields_lane_death_completion_and_respawn() {
+        let fe = poison_front(13);
+        let c = cfg();
+        harness::assert_worker_panic_fails_inflight(&fe, &c, GenRequest::new("poison", 13));
+    }
+
+    #[test]
+    fn run_batch_retry_serves_innocents_and_quarantines_poison() {
+        let fe = poison_front(13);
+        harness::assert_poison_quarantined_innocents_served(
+            &fe,
+            &cfg(),
+            vec![GenRequest::new("a", 1), GenRequest::new("b", 2)],
+            GenRequest::new("poison", 13),
+            &|c| c.result.is_ok(),
+        );
+    }
+
+    #[test]
+    fn crash_storm_opens_breaker_and_fails_fast() {
+        let mut fe = poison_front(13);
+        fe.set_supervision(SupervisionPolicy {
+            backoff_base_s: 0.0,
+            backoff_max_s: 2.0,
+            respawn_budget: 2,
+            breaker_probe_s: 3600.0,
+        });
+        harness::assert_crash_storm_opens_breaker(&fe, &cfg(), &GenRequest::new("poison", 13));
+    }
+
+    #[test]
+    fn half_open_probe_closes_breaker_on_healthy_serve() {
+        let mut fe = poison_front(13);
+        fe.set_supervision(SupervisionPolicy {
+            backoff_base_s: 0.0,
+            backoff_max_s: 2.0,
+            respawn_budget: 1, // first death opens the breaker
+            breaker_probe_s: 0.0, // probes allowed immediately
+        });
+        let c = cfg();
+        // Death 1: breaker opens.
+        let rx = fe.submit(&c, GenRequest::new("poison", 13));
+        assert!(rx.recv().expect("completion").is_lane_death());
+        assert_eq!(fe.metrics.counter("lane_unhealthy"), 1);
+        // An innocent serve must get through: the corpse is evicted, the
+        // half-open probe respawns, and the healthy serve closes the
+        // breaker. At most one stale hop on the corpse.
+        let mut served = false;
+        for attempt in 0..3u64 {
+            let rx = fe.submit(&c, GenRequest::new("innocent", attempt));
+            if let Ok(comp) = rx.recv() {
+                if comp.result.is_ok() {
+                    served = true;
+                    break;
+                }
+            }
+        }
+        assert!(served, "half-open probe must let an innocent serve through");
+        // Breaker is closed again: further serves never see "unhealthy".
+        let comp = fe
+            .run_batch(&c, vec![GenRequest::new("after", 99)])
+            .pop()
+            .expect("completion");
+        assert!(comp.result.is_ok());
+        assert_eq!(fe.metrics.counter("rejected_unhealthy"), 0);
+        fe.shutdown();
+    }
+
+    #[test]
+    fn backoff_window_rejects_immediate_respawn() {
+        let mut fe = poison_front(13);
+        fe.set_supervision(SupervisionPolicy {
+            backoff_base_s: 3600.0, // no respawn within this test's lifetime
+            backoff_max_s: 3600.0,
+            respawn_budget: 8,
+            breaker_probe_s: 3600.0,
+        });
+        let c = cfg();
+        // Death 1.
+        let rx = fe.submit(&c, GenRequest::new("poison", 13));
+        assert!(rx.recv().expect("completion").is_lane_death());
+        // The corpse takes a stale hop or two to evict (depending on how
+        // far the dying worker got); after that every submit must be
+        // gated by the backoff window and fail fast without spawning.
+        let mut gated = false;
+        for attempt in 0..4u64 {
+            let rx = fe.submit(&c, GenRequest::new("innocent", attempt));
+            let Ok(comp) = rx.recv() else { continue };
+            let msg = comp.result.err().expect("never served in window").to_string();
+            if msg.contains("backing off") {
+                gated = true;
+                break;
+            }
+            assert!(msg.contains(LANE_STALE), "unexpected error: {msg}");
+        }
+        assert!(gated, "backoff window must reject the respawn");
+        assert_eq!(fe.metrics.counter("rejected_backoff"), 1);
+        assert!(!fe.has_lane(&c.key()), "no lane may spawn inside the window");
+        fe.shutdown();
+    }
+
+    #[test]
+    fn retryable_markers_are_distinct() {
+        // The quarantine / breaker / backoff messages must never be
+        // mistaken for retryable lane-death errors.
+        assert!(is_retryable(&anyhow!("server {LANE_DEATH}: worker panicked: x")));
+        assert!(is_retryable(&anyhow!("echo {LANE_STALE}: resubmit")));
+        assert!(is_retryable(&anyhow!("{INJECTED}: error return at s")));
+        assert!(!is_retryable(&anyhow!(
+            "request quarantined after 2 strikes (poison request?)"
+        )));
+        assert!(!is_retryable(&anyhow!(
+            "lane unhealthy (circuit open after 8 consecutive deaths); failing fast"
+        )));
+        assert!(!is_retryable(&anyhow!(
+            "lane respawn backing off (0.001s of 2.000s after 3 deaths); retry later"
+        )));
     }
 }

@@ -11,9 +11,17 @@
 //!
 //! The unified lane front-end (`coordinator::frontend`) exports its
 //! lifecycle counters here — `lane_spawned`, `lane_respawned`,
-//! `lane_evicted`, `shed_deadline`, `rejected_backpressure` — so
+//! `lane_evicted`, `shed_deadline`, `rejected_backpressure`, and since
+//! PR 6 the supervision counters `worker_panic`, `lane_unhealthy`,
+//! `rejected_unhealthy`, `rejected_backoff`, `retry_attempted`,
+//! `quarantined`, `shed_shutdown`, plus `fault_injected` from the
+//! deterministic fault injector (`coordinator::fault`) — so
 //! `toma-serve serve` and [`Metrics::render`] show lane health (respawn
-//! churn, shedding, backpressure) next to the request counters. (The
+//! churn, shedding, backpressure, crash containment) next to the request
+//! counters. All lock sites here go through
+//! [`lock_unpoisoned`](crate::util::lock_unpoisoned): a worker that
+//! panics while counting must not poison the registry and cascade the
+//! crash into every other lane. (The
 //! adaptive batch policy's overload feedback no longer reads the
 //! cumulative `e2e_time` histogram here — since PR 5 each scheduler lane
 //! feeds its own exponentially-decayed tail,
@@ -22,6 +30,8 @@
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
+
+use crate::util::lock_unpoisoned;
 use std::time::Duration;
 
 use super::plan_cache::PlanStats;
@@ -53,27 +63,17 @@ impl Metrics {
     }
 
     pub fn add(&self, name: &str, v: u64) {
-        *self
-            .counters
-            .lock()
-            .unwrap()
+        *lock_unpoisoned(&self.counters)
             .entry(name.to_string())
             .or_insert(0) += v;
     }
 
     pub fn counter(&self, name: &str) -> u64 {
-        self.counters
-            .lock()
-            .unwrap()
-            .get(name)
-            .copied()
-            .unwrap_or(0)
+        lock_unpoisoned(&self.counters).get(name).copied().unwrap_or(0)
     }
 
     pub fn observe(&self, name: &str, d: Duration) {
-        self.histograms
-            .lock()
-            .unwrap()
+        lock_unpoisoned(&self.histograms)
             .entry(name.to_string())
             .or_default()
             .record(d);
@@ -97,13 +97,13 @@ impl Metrics {
     /// policy consumes each lane's decayed `scheduler::DecayedTail`
     /// instead. Do not wire new control loops to this accessor.
     pub fn quantile_s(&self, name: &str, q: f64) -> Option<f64> {
-        let h = self.histograms.lock().unwrap();
+        let h = lock_unpoisoned(&self.histograms);
         Some(h.get(name)?.quantile_us(q) / 1e6)
     }
 
     /// Count / mean / p50 / p95 / p99 of a histogram.
     pub fn latency_summary(&self, name: &str) -> Option<LatencySummary> {
-        let h = self.histograms.lock().unwrap();
+        let h = lock_unpoisoned(&self.histograms);
         let h = h.get(name)?;
         Some(LatencySummary {
             count: h.count(),
@@ -116,10 +116,10 @@ impl Metrics {
 
     pub fn render(&self) -> String {
         let mut out = String::from("-- metrics --\n");
-        for (k, v) in self.counters.lock().unwrap().iter() {
+        for (k, v) in lock_unpoisoned(&self.counters).iter() {
             out.push_str(&format!("{k:<40} {v}\n"));
         }
-        for (k, h) in self.histograms.lock().unwrap().iter() {
+        for (k, h) in lock_unpoisoned(&self.histograms).iter() {
             out.push_str(&format!(
                 "{k:<40} n={} mean={:.3}s p50={:.3}s p95={:.3}s p99={:.3}s\n",
                 h.count(),

@@ -15,8 +15,17 @@
 //!   the same plan key form *cohorts* that advance through batched steps
 //!   sharing a single [`PlanSlot`] (see [`scheduler`]), governed by a
 //!   static or load-adaptive [`LanePolicy`].
+//!
+//! Since PR 6 the substrate is *supervised* (see [`frontend`]): worker
+//! panics are caught at lane unwind boundaries and surfaced as retryable
+//! error completions, dead lanes respawn under backoff with a
+//! circuit breaker for crash storms, poison requests are quarantined
+//! while innocent cohort members are transparently retried
+//! ([`RetryPolicy`]), and the deterministic chaos substrate lives in
+//! [`fault`] (`TOMA_FAULTS`, [`FaultPlan`]).
 
 pub mod engine;
+pub mod fault;
 pub mod frontend;
 pub mod metrics;
 pub mod plan_cache;
@@ -25,7 +34,8 @@ pub mod scheduler;
 pub mod server;
 
 pub use engine::Engine;
-pub use frontend::{Job, LaneFrontEnd, LaneJob};
+pub use fault::{FaultInjector, FaultKind, FaultPlan};
+pub use frontend::{Job, LaneFrontEnd, LaneJob, RetryPolicy, SupervisionPolicy};
 pub use metrics::{LatencySummary, Metrics};
 pub use plan_cache::{PlanSlot, PlanStats};
 pub use request::{EngineConfig, GenRequest, GenResult, GenStats};

@@ -138,6 +138,14 @@ impl Cohort {
         self.backend.tokens_per_member_step()
     }
 
+    /// Seeds of every current member, in member order — the "in flight"
+    /// set the fault injector's poison rules match against at the
+    /// `scheduler.step` probe (and the quarantine layer's notion of who
+    /// was aboard when a lane died).
+    pub fn member_seeds(&self) -> Vec<u64> {
+        self.members.iter().map(|m| m.request.seed).collect()
+    }
+
     /// Can a request join right now? Plan-bearing cohorts accept members
     /// only when the *next* step's action is `RefreshAll`, so the
     /// newcomer's local cadence is exactly the per-request one.

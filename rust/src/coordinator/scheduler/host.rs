@@ -18,7 +18,13 @@
 //! lets the scheduler's acceptance tests sit in tier 1. Neither type knows
 //! about queuing: lanes, backpressure and respawn live in the unified
 //! [`LaneFrontEnd`](crate::coordinator::LaneFrontEnd), so these backends
-//! stay pure execution.
+//! stay pure execution. That purity extends to fault handling (PR 6):
+//! backends are free to return `Err` or even panic mid-step — the
+//! scheduler lane probes its fault injector and catches unwinds at the
+//! `scheduler.step` boundary *around* every backend call, so a crashing
+//! backend becomes retryable error completions and a respawned lane, and
+//! a re-admitted member reproduces its latent bit-identically (state is
+//! derived from the request seed alone, never from lane history).
 
 use std::sync::Arc;
 use std::time::Instant;

@@ -26,6 +26,18 @@
 //! (`--policy static|adaptive`), whose overload feedback reads each
 //! lane's own exponentially-decayed served tail ([`DecayedTail`]) rather
 //! than the shared lifetime-cumulative metrics histogram.
+//!
+//! Since PR 6 the lane loop is supervised: backend init and every cohort
+//! step run behind `catch_panic`, so a panic mid-step fails the whole
+//! cohort (and anything still pending) with retryable `LANE_DEATH` /
+//! `LANE_STALE` error completions instead of dropping senders, records
+//! the death with the front-end's supervisor (backoff + circuit breaker,
+//! see `coordinator::frontend`), and retires the lane for a
+//! generation-checked respawn. The deterministic fault injector probes
+//! each cohort step at site `scheduler.step` with the member seeds in
+//! flight (enabled via [`Scheduler::with_faults`] or `TOMA_FAULTS`; inert
+//! by default), which is how the chaos suite kills specific cohorts
+//! deterministically.
 
 pub mod cohort;
 pub mod host;
@@ -47,7 +59,11 @@ use crate::anyhow;
 use crate::toma::plan::PlanAction;
 use crate::util::error::Result;
 
-use super::frontend::{Completion, Job, LaneFrontEnd, LaneJob};
+use super::fault::{FaultInjector, FaultPlan};
+use super::frontend::{
+    catch_panic, drain_dead, Completion, Job, LaneFrontEnd, LaneGuard, LaneJob, RetryPolicy,
+    SupervisionPolicy, WorkerCtx, LANE_DEATH, LANE_STALE,
+};
 use super::metrics::Metrics;
 use super::plan_cache::PlanStats;
 use super::request::{EngineConfig, GenRequest, GenResult};
@@ -60,6 +76,7 @@ pub type BackendFactory = dyn Fn(&EngineConfig) -> Result<Box<dyn CohortBackend>
 pub struct CohortJob {
     policy: LanePolicy,
     factory: Arc<BackendFactory>,
+    faults: FaultInjector,
 }
 
 impl LaneJob for CohortJob {
@@ -71,18 +88,27 @@ impl LaneJob for CohortJob {
         self.policy.base().queue_depth
     }
 
-    fn spawn_workers(
-        &self,
-        cfg: &EngineConfig,
-        rx: Receiver<Job>,
-        metrics: Arc<Metrics>,
-    ) -> Vec<JoinHandle<()>> {
+    fn spawn_workers(&self, cfg: &EngineConfig, ctx: WorkerCtx) -> Vec<JoinHandle<()>> {
         let cfg = cfg.clone();
         let policy = self.policy;
         let factory = self.factory.clone();
+        let faults = self.faults.clone();
         vec![std::thread::Builder::new()
             .name("toma-sched".to_string())
-            .spawn(move || lane_loop(&cfg, policy, &factory, &metrics, rx))
+            .spawn(move || {
+                let WorkerCtx { rx, metrics, guard } = ctx;
+                // Safety net around the whole loop: `lane_loop` already
+                // contains panics at its fallible boundaries (init, step),
+                // but a panic anywhere else must still retire the lane
+                // cleanly — reported, queue drained, no dropped senders.
+                let crashed = catch_panic(|| {
+                    lane_loop(&cfg, policy, &factory, &faults, &metrics, &rx, &guard)
+                });
+                if crashed.is_err() {
+                    guard.record_panic(&metrics);
+                    drain_dead(&rx, &metrics, "scheduler");
+                }
+            })
             .expect("spawn scheduler lane")]
     }
 }
@@ -102,6 +128,7 @@ impl Scheduler {
         let front = LaneFrontEnd::new(CohortJob {
             policy: policy.into().normalized(),
             factory: Arc::new(factory),
+            faults: FaultInjector::from_env(),
         });
         let metrics = front.metrics.clone();
         Scheduler { front, metrics }
@@ -109,6 +136,20 @@ impl Scheduler {
 
     pub fn policy(&self) -> &LanePolicy {
         &self.front.job().policy
+    }
+
+    /// Install a deterministic fault schedule (chaos testing); replaces
+    /// the process-wide `TOMA_FAULTS` injector for this scheduler.
+    /// Applies to lanes spawned after the call.
+    pub fn with_faults(mut self, plan: FaultPlan) -> Scheduler {
+        self.front.job_mut().faults = FaultInjector::new(plan);
+        self
+    }
+
+    /// Replace the respawn/circuit-breaker policy (builder-time only).
+    pub fn with_supervision(mut self, policy: SupervisionPolicy) -> Scheduler {
+        self.front.set_supervision(policy);
+        self
     }
 
     /// The unified lane front-end (shared test harness + introspection).
@@ -148,7 +189,29 @@ impl Scheduler {
         self.front.run_batch_ok(cfg, requests)
     }
 
-    /// Drop all lanes, joining scheduler threads.
+    /// [`Scheduler::run_batch`] with transparent retry of lane deaths and
+    /// injected faults, and poison-pill quarantine (see [`RetryPolicy`]).
+    /// Innocent cohort members killed alongside a poison request come
+    /// back bit-identical — latents are deterministic in the seed.
+    pub fn run_batch_retry(
+        &self,
+        cfg: &EngineConfig,
+        requests: Vec<GenRequest>,
+        retry: RetryPolicy,
+    ) -> Vec<Completion> {
+        self.front.run_batch_retry(cfg, requests, retry)
+    }
+
+    /// Begin graceful shutdown: queued jobs are failed with explicit
+    /// "shutting down" completions instead of admitted; cohorts already
+    /// in flight finish their members.
+    pub fn begin_drain(&self) {
+        self.front.begin_drain();
+    }
+
+    /// Drop all lanes, joining scheduler threads (graceful: queued jobs
+    /// get explicit "shutting down" completions, never a bare
+    /// disconnect).
     pub fn shutdown(&self) {
         self.front.shutdown();
     }
@@ -204,21 +267,35 @@ fn lane_loop(
     cfg: &EngineConfig,
     policy: LanePolicy,
     factory: &BackendFactory,
+    faults: &FaultInjector,
     metrics: &Metrics,
-    rx: Receiver<Job>,
+    rx: &Receiver<Job>,
+    guard: &LaneGuard,
 ) {
     // Epoch before backend init: requests queued while a slow factory
     // (e.g. a compiling PJRT backend) boots must keep their real arrival
     // offsets, not collapse to "all at once" and fake a burst.
     let epoch = Instant::now();
-    let backend = match factory(cfg) {
-        Ok(b) => b,
-        Err(e) => {
+    // Init behind the unwind boundary: a panicking factory is a lane
+    // death (reported, queue drained), not an unwinding thread.
+    let built = catch_panic(|| factory(cfg));
+    let backend = match built {
+        Ok(Ok(b)) => b,
+        Ok(Err(e)) => {
             // Fail every job this lane would serve.
             let msg = format!("backend init failed: {e}");
             while let Ok(job) = rx.recv() {
-                job.fail(metrics, &msg);
+                if guard.draining() {
+                    job.fail_shutdown(metrics);
+                } else {
+                    job.fail(metrics, &msg);
+                }
             }
+            return;
+        }
+        Err(_panic) => {
+            guard.record_panic(metrics);
+            drain_dead(rx, metrics, "scheduler");
             return;
         }
     };
@@ -302,6 +379,16 @@ fn lane_loop(
             }
         }
 
+        // Graceful shutdown: once the front-end's drain flag flips, jobs
+        // not yet admitted are failed with explicit "shutting down"
+        // completions (counted `shed_shutdown`); members already in a
+        // cohort finish their remaining steps below.
+        if guard.draining() {
+            for job in pending.drain(..) {
+                job.fail_shutdown(metrics);
+            }
+        }
+
         // Deadline-aware draining: shed overdue requests *every* loop
         // iteration, not just at join boundaries — a dead request must be
         // rejected promptly, not after waiting out a reuse window. The
@@ -366,10 +453,37 @@ fn lane_loop(
             continue;
         }
 
-        // One batched step for the whole cohort.
+        // One batched step for the whole cohort, behind the unwind
+        // boundary: a panic mid-step (model bug, poison request, injected
+        // fault) fails everyone aboard with retryable LANE_DEATH
+        // completions and retires the lane — innocents are re-run
+        // bit-identically by the submit-side retry layer.
         let t0 = Instant::now();
-        match cohort.step() {
-            Ok(out) => {
+        let seeds = cohort.member_seeds();
+        let stepped = catch_panic(|| {
+            faults.fire("scheduler.step", &seeds, Some(metrics))?;
+            cohort.step()
+        });
+        match stepped {
+            Err(panic_msg) => {
+                let msg = format!("scheduler {LANE_DEATH}: worker panicked mid-step: {panic_msg}");
+                for (_tag, meta) in std::mem::take(&mut inflight) {
+                    fail(metrics, meta, &msg);
+                }
+                for job in pending.drain(..) {
+                    job.fail(
+                        metrics,
+                        &format!(
+                            "scheduler {LANE_STALE}: lane died before serving queued request; \
+                             resubmit"
+                        ),
+                    );
+                }
+                guard.record_panic(metrics);
+                drain_dead(rx, metrics, "scheduler");
+                return;
+            }
+            Ok(Ok(out)) => {
                 metrics.inc("cohort_steps");
                 metrics.add("cohort_member_steps", out.active_members as u64);
                 metrics.add(
@@ -415,10 +529,15 @@ fn lane_loop(
                         service_s,
                     });
                 }
+                // A completed step is a healthy serve: reset the lane's
+                // death streak and close a half-open breaker probe.
+                guard.record_healthy();
             }
-            Err(e) => {
+            Ok(Err(e)) => {
                 // A deterministic backend should never fail mid-step; if it
-                // does, fail the whole cohort rather than wedging the lane.
+                // does (including an injected ErrorReturn fault, which is
+                // retryable), fail the whole cohort rather than wedging
+                // the lane.
                 let msg = format!("cohort step failed: {e}");
                 for (tag, _req) in cohort.drain() {
                     if let Some(meta) = inflight.remove(&tag) {
@@ -438,6 +557,7 @@ fn lane_loop(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::fault::FaultKind;
     use crate::coordinator::frontend::harness;
     use crate::coordinator::request::GenStats;
     use crate::model::HostUVit;
@@ -590,6 +710,104 @@ mod tests {
         let c = rx.recv().expect("completion");
         let err = c.result.err().expect("must fail").to_string();
         assert!(err.contains("backend init failed"), "{err}");
+        s.shutdown();
+    }
+
+    /// Artifact-free chaos fixture: a real host backend plus a poison
+    /// seed whose cohort step panics via the fault injector.
+    fn poison_scheduler(seed: u64) -> Scheduler {
+        host_scheduler(BatchPolicy {
+            max_batch: 4,
+            max_queue_wait_s: 0.05,
+            ..Default::default()
+        })
+        .with_faults(FaultPlan::default().poison(seed, FaultKind::Panic))
+    }
+
+    /// Chaos via the shared harness: an injector-driven panic mid cohort
+    /// step must surface as a LANE_DEATH error completion, never a
+    /// dropped sender.
+    #[test]
+    fn injected_panic_fails_inflight_with_completion() {
+        let s = poison_scheduler(13);
+        harness::assert_worker_panic_fails_inflight(
+            s.front(),
+            &toma_cfg(3),
+            GenRequest::new("poison", 13),
+        );
+    }
+
+    /// Chaos via the shared harness: a crash-storming lane opens the
+    /// circuit breaker and submissions fail fast.
+    #[test]
+    fn crash_storm_opens_breaker() {
+        let s = poison_scheduler(13).with_supervision(SupervisionPolicy {
+            backoff_base_s: 0.0,
+            backoff_max_s: 2.0,
+            respawn_budget: 2,
+            breaker_probe_s: 3600.0,
+        });
+        harness::assert_crash_storm_opens_breaker(
+            s.front(),
+            &toma_cfg(3),
+            &GenRequest::new("poison", 13),
+        );
+    }
+
+    /// Chaos via the shared harness: the poison request is quarantined
+    /// after two strikes while innocents caught in the same cohort are
+    /// transparently retried to successful completions.
+    #[test]
+    fn poison_request_quarantined_innocents_retried() {
+        let s = poison_scheduler(13);
+        harness::assert_poison_quarantined_innocents_served(
+            s.front(),
+            &toma_cfg(3),
+            vec![GenRequest::new("a", 1), GenRequest::new("b", 2)],
+            GenRequest::new("poison", 13),
+            &|c| c.result.is_ok(),
+        );
+    }
+
+    /// An injected error-return fault fails the cohort with a retryable
+    /// error but does NOT kill the lane; `run_batch_retry` recovers the
+    /// request on the same (still-live) lane.
+    #[test]
+    fn injected_error_fails_cohort_retryably_without_lane_death() {
+        let s = host_scheduler(BatchPolicy::with_max_batch(2)).with_faults(
+            FaultPlan::default().at("scheduler.step", 1, FaultKind::ErrorReturn),
+        );
+        let comps = s.run_batch_retry(
+            &toma_cfg(3),
+            vec![GenRequest::new("x", 7)],
+            RetryPolicy::default(),
+        );
+        assert!(comps[0].result.is_ok(), "retry must recover the injected error");
+        assert_eq!(s.metrics.counter("retry_attempted"), 1);
+        assert_eq!(s.metrics.counter("fault_injected"), 1);
+        assert_eq!(s.metrics.counter("worker_panic"), 0);
+        assert_eq!(s.metrics.counter("lane_evicted"), 0);
+        s.shutdown();
+    }
+
+    /// Graceful shutdown: after `begin_drain`, not-yet-admitted jobs are
+    /// failed with explicit "shutting down" completions (counted), never
+    /// a bare disconnect.
+    #[test]
+    fn drain_fails_unadmitted_jobs_with_shutdown_completions() {
+        let s = host_scheduler(BatchPolicy {
+            max_batch: 1,
+            max_queue_wait_s: 0.0,
+            ..Default::default()
+        });
+        let ok = s.run_batch(&toma_cfg(2), vec![GenRequest::new("pre", 1)]);
+        assert!(ok[0].result.is_ok());
+        s.begin_drain();
+        let rx = s.submit(&toma_cfg(2), GenRequest::new("post", 2));
+        let c = rx.recv().expect("drain must answer, not disconnect");
+        let err = c.result.err().expect("drained").to_string();
+        assert!(err.contains("shutting down"), "unexpected error: {err}");
+        assert_eq!(s.metrics.counter("shed_shutdown"), 1);
         s.shutdown();
     }
 

@@ -17,6 +17,16 @@
 //! request is rejected at dequeue instead of served hopelessly late
 //! (per-request `GenRequest::deadline_s`, or a server-wide default via
 //! [`Server::with_deadline`]).
+//!
+//! Since PR 6 the worker drain loop is supervised: the engine factory and
+//! every serve run behind [`catch_panic`], so a panicking worker fails
+//! its in-flight job with a [`LANE_DEATH`] error completion, reports the
+//! death ([`LaneGuard::record_panic`](super::frontend::LaneGuard)), and —
+//! if it is the lane's last worker — drains the queue with stale-lane
+//! completions before exiting. The deterministic fault injector probes
+//! every dequeue at site `server.step` (enabled via
+//! [`Server::with_faults`] or `TOMA_FAULTS`; inert by default), including
+//! on init-failed lanes, so chaos scenarios run artifact-free.
 
 use std::path::PathBuf;
 use std::sync::mpsc::Receiver;
@@ -24,10 +34,16 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
+use crate::anyhow;
 use crate::util::error::Result;
+use crate::util::lock_unpoisoned;
 
 use super::engine::Engine;
-use super::frontend::{Job, LaneFrontEnd, LaneJob};
+use super::fault::{FaultInjector, FaultPlan};
+use super::frontend::{
+    catch_panic, drain_dead, Job, LaneFrontEnd, LaneJob, RetryPolicy, SupervisionPolicy,
+    WorkerCtx, LANE_DEATH,
+};
 use super::metrics::Metrics;
 use super::request::{EngineConfig, GenRequest, GenResult};
 use crate::runtime::Runtime;
@@ -47,6 +63,7 @@ pub struct EngineJob {
     workers_per_lane: usize,
     queue_depth: usize,
     deadline_s: Option<f64>,
+    faults: FaultInjector,
 }
 
 impl LaneJob for EngineJob {
@@ -58,55 +75,105 @@ impl LaneJob for EngineJob {
         self.queue_depth
     }
 
-    fn spawn_workers(
-        &self,
-        cfg: &EngineConfig,
-        rx: Receiver<Job>,
-        metrics: Arc<Metrics>,
-    ) -> Vec<JoinHandle<()>> {
+    fn spawn_workers(&self, cfg: &EngineConfig, ctx: WorkerCtx) -> Vec<JoinHandle<()>> {
+        let WorkerCtx { rx, metrics, guard } = ctx;
         let rx = Arc::new(Mutex::new(rx));
         let mut handles = vec![];
         for w in 0..self.workers_per_lane {
             let rx: Arc<Mutex<Receiver<Job>>> = rx.clone();
             let metrics = metrics.clone();
+            let guard = guard.clone();
             let cfg = cfg.clone();
             let factory = self.factory.clone();
+            let faults = self.faults.clone();
             let deadline_s = self.deadline_s;
             let name = format!("toma-worker-{w}");
             handles.push(
                 std::thread::Builder::new()
                     .name(name)
                     .spawn(move || {
+                        // A panicking worker on its way out: report the
+                        // death and, if it holds the last living clone of
+                        // the queue, fail what is still buffered so no
+                        // sender is silently dropped.
+                        let die = || {
+                            guard.record_panic(&metrics);
+                            if Arc::strong_count(&rx) == 1 {
+                                let q = lock_unpoisoned(&rx);
+                                drain_dead(&q, &metrics, "server");
+                            }
+                        };
                         // Each worker owns its PJRT client + compiled
-                        // executables for the lifetime of the lane.
-                        let engine = match factory(&cfg) {
-                            Ok(e) => e,
-                            Err(e) => {
+                        // executables for the lifetime of the lane. The
+                        // factory runs behind the unwind boundary: a
+                        // panicking factory is a lane death, not an
+                        // unwinding thread.
+                        let engine = match catch_panic(|| factory(&cfg)) {
+                            Ok(Ok(e)) => e,
+                            Ok(Err(e)) => {
                                 // Fail every job this worker would serve.
+                                // Fault probes stay live so chaos
+                                // scenarios run artifact-free.
                                 let msg = format!("engine init failed: {e:#}");
                                 loop {
-                                    let job = match rx.lock().unwrap().recv() {
+                                    let job = match lock_unpoisoned(&rx).recv() {
                                         Ok(j) => j,
                                         Err(_) => return,
                                     };
+                                    if guard.draining() {
+                                        job.fail_shutdown(&metrics);
+                                        continue;
+                                    }
                                     // Overdue jobs still shed first: the
                                     // deadline error is the truthful one.
                                     let dl = job.request.deadline_s.or(deadline_s);
                                     let Some(job) = job.shed_if_overdue(dl, &metrics) else {
                                         continue;
                                     };
-                                    job.fail(&metrics, &msg);
+                                    let probed = catch_panic(|| {
+                                        faults.fire(
+                                            "server.step",
+                                            &[job.request.seed],
+                                            Some(&metrics),
+                                        )
+                                    });
+                                    match probed {
+                                        Ok(Ok(())) => {
+                                            job.fail(&metrics, &msg);
+                                            guard.record_healthy();
+                                        }
+                                        Ok(Err(inj)) => job.fail(&metrics, &inj.to_string()),
+                                        Err(panic_msg) => {
+                                            job.fail(
+                                                &metrics,
+                                                &format!(
+                                                    "server {LANE_DEATH}: worker panicked: \
+                                                     {panic_msg}"
+                                                ),
+                                            );
+                                            die();
+                                            return;
+                                        }
+                                    }
                                 }
+                            }
+                            Err(_panic) => {
+                                die();
+                                return;
                             }
                         };
                         loop {
                             let job = {
-                                let guard = rx.lock().unwrap();
-                                match guard.recv() {
+                                let q = lock_unpoisoned(&rx);
+                                match q.recv() {
                                     Ok(j) => j,
                                     Err(_) => return, // queue closed
                                 }
                             };
+                            if guard.draining() {
+                                job.fail_shutdown(&metrics);
+                                continue;
+                            }
                             // Deadline shedding inherited from the
                             // scheduler: one shared implementation.
                             let dl = job.request.deadline_s.or(deadline_s);
@@ -115,27 +182,55 @@ impl LaneJob for EngineJob {
                             };
                             let queued_s = job.queued_s();
                             metrics.observe_s("queue_wait", queued_s);
+                            // The completion sender stays *outside* the
+                            // unwind boundary: a panicking serve answers
+                            // with a LANE_DEATH completion instead of
+                            // dropping the sender mid-unwind.
+                            let Job { request, done, .. } = job;
                             let t0 = Instant::now();
-                            let result = engine.generate(&job.request);
+                            let outcome = catch_panic(|| {
+                                faults.fire("server.step", &[request.seed], Some(&metrics))?;
+                                engine.generate(&request)
+                            });
                             let service_s = t0.elapsed().as_secs_f64();
-                            metrics.observe_s("service_time", service_s);
-                            metrics.observe_s("e2e_time", queued_s + service_s);
-                            metrics.inc(if result.is_ok() {
-                                "requests_ok"
-                            } else {
-                                "requests_err"
-                            });
-                            if let Ok(r) = &result {
-                                metrics.observe_s("select_time", r.stats.select_s);
-                                metrics.add("plan_reuses", r.stats.plan_reuses as u64);
-                                metrics.add("select_calls", r.stats.select_calls as u64);
+                            match outcome {
+                                Ok(result) => {
+                                    metrics.observe_s("service_time", service_s);
+                                    metrics.observe_s("e2e_time", queued_s + service_s);
+                                    metrics.inc(if result.is_ok() {
+                                        "requests_ok"
+                                    } else {
+                                        "requests_err"
+                                    });
+                                    if let Ok(r) = &result {
+                                        metrics.observe_s("select_time", r.stats.select_s);
+                                        metrics.add("plan_reuses", r.stats.plan_reuses as u64);
+                                        metrics.add("select_calls", r.stats.select_calls as u64);
+                                    }
+                                    let _ = done.send(Completion {
+                                        request,
+                                        result,
+                                        queued_s,
+                                        service_s,
+                                    });
+                                    guard.record_healthy();
+                                }
+                                Err(panic_msg) => {
+                                    metrics.inc("requests_err");
+                                    let _ = done.send(Completion {
+                                        request,
+                                        result: Err(anyhow!(
+                                            "server {LANE_DEATH}: worker panicked: {panic_msg}"
+                                        )),
+                                        queued_s,
+                                        service_s,
+                                    });
+                                    // The engine may be corrupted by the
+                                    // unwind: this worker retires.
+                                    die();
+                                    return;
+                                }
                             }
-                            let _ = job.done.send(Completion {
-                                request: job.request,
-                                result,
-                                queued_s,
-                                service_s,
-                            });
                         }
                     })
                     .expect("spawn worker"),
@@ -175,6 +270,7 @@ impl Server {
             workers_per_lane: workers_per_lane.max(1),
             queue_depth: 1024,
             deadline_s: None,
+            faults: FaultInjector::from_env(),
         });
         let metrics = front.metrics.clone();
         Server { front, metrics }
@@ -196,6 +292,20 @@ impl Server {
     /// `GenRequest::deadline_s` overrides it.
     pub fn with_deadline(mut self, deadline_s: f64) -> Server {
         self.front.job_mut().deadline_s = Some(deadline_s.max(0.0));
+        self
+    }
+
+    /// Install a deterministic fault schedule (chaos testing); replaces
+    /// the process-wide `TOMA_FAULTS` injector for this server. Applies
+    /// to lanes spawned after the call.
+    pub fn with_faults(mut self, plan: FaultPlan) -> Server {
+        self.front.job_mut().faults = FaultInjector::new(plan);
+        self
+    }
+
+    /// Replace the respawn/circuit-breaker policy (builder-time only).
+    pub fn with_supervision(mut self, policy: SupervisionPolicy) -> Server {
+        self.front.set_supervision(policy);
         self
     }
 
@@ -238,7 +348,26 @@ impl Server {
         self.front.run_batch_ok(cfg, requests)
     }
 
-    /// Drop all lanes, joining worker threads.
+    /// [`Server::run_batch`] with transparent retry of lane deaths and
+    /// injected faults, and poison-pill quarantine (see
+    /// [`RetryPolicy`]).
+    pub fn run_batch_retry(
+        &self,
+        cfg: &EngineConfig,
+        requests: Vec<GenRequest>,
+        retry: RetryPolicy,
+    ) -> Vec<Completion> {
+        self.front.run_batch_retry(cfg, requests, retry)
+    }
+
+    /// Begin graceful shutdown: queued jobs are failed with explicit
+    /// "shutting down" completions instead of served.
+    pub fn begin_drain(&self) {
+        self.front.begin_drain();
+    }
+
+    /// Drop all lanes, joining worker threads (graceful: queued jobs get
+    /// explicit "shutting down" completions, never a bare disconnect).
     pub fn shutdown(&self) {
         self.front.shutdown();
     }
@@ -247,7 +376,7 @@ impl Server {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::anyhow;
+    use crate::coordinator::fault::FaultKind;
     use crate::coordinator::frontend::harness;
 
     fn cfg() -> EngineConfig {
@@ -259,6 +388,22 @@ mod tests {
     /// which is all the init-failure test needs (a live lane to probe).
     fn dead_dir_server() -> Server {
         Server::new(std::env::temp_dir().join("toma_no_such_artifacts"), 1)
+    }
+
+    /// Artifact-free server with a single worker per lane and a poison
+    /// seed whose dequeue panics via the fault injector — the chaos
+    /// fixture the shared harness scenarios run against.
+    fn poison_server(seed: u64) -> Server {
+        dead_dir_server().with_faults(FaultPlan::default().poison(seed, FaultKind::Panic))
+    }
+
+    /// A completion served by a *live* artifact-free lane: the healthy
+    /// worker answers with its engine-init error.
+    fn served_init_err(c: &Completion) -> bool {
+        c.result
+            .as_ref()
+            .err()
+            .is_some_and(|e| e.to_string().contains("engine init failed"))
     }
 
     #[test]
@@ -321,13 +466,11 @@ mod tests {
             },
             1,
         );
-        harness::assert_forced_death_respawns(server.front(), &cfg(), &|c| {
-            c.result
-                .as_ref()
-                .err()
-                .is_some_and(|e| e.to_string().contains("engine init failed"))
-        });
+        harness::assert_forced_death_respawns(server.front(), &cfg(), &served_init_err);
         assert!(died.load(std::sync::atomic::Ordering::SeqCst));
+        // The factory panic was caught at the unwind boundary, not left
+        // to kill the thread silently.
+        assert!(server.metrics.counter("worker_panic") >= 1);
     }
 
     /// The server-wide deadline (inherited scheduler semantics): a request
@@ -340,6 +483,71 @@ mod tests {
         let err = c.result.err().expect("shed").to_string();
         assert!(err.contains("deadline"), "unexpected error: {err}");
         assert_eq!(server.metrics.counter("shed_deadline"), 1);
+        server.shutdown();
+    }
+
+    /// Chaos via the shared harness: an injector-driven worker panic must
+    /// surface as a LANE_DEATH error completion, never a dropped sender.
+    #[test]
+    fn injected_panic_fails_inflight_with_completion() {
+        let server = poison_server(13);
+        harness::assert_worker_panic_fails_inflight(
+            server.front(),
+            &cfg(),
+            GenRequest::new("poison", 13),
+        );
+    }
+
+    /// Chaos via the shared harness: a crash-storming lane opens the
+    /// circuit breaker and submissions fail fast.
+    #[test]
+    fn crash_storm_opens_breaker() {
+        let server = poison_server(13).with_supervision(SupervisionPolicy {
+            backoff_base_s: 0.0,
+            backoff_max_s: 2.0,
+            respawn_budget: 2,
+            breaker_probe_s: 3600.0,
+        });
+        harness::assert_crash_storm_opens_breaker(
+            server.front(),
+            &cfg(),
+            &GenRequest::new("poison", 13),
+        );
+    }
+
+    /// Chaos via the shared harness: the poison request is quarantined
+    /// after two strikes while innocents are transparently retried onto
+    /// healthy respawned lanes.
+    #[test]
+    fn poison_request_quarantined_innocents_retried() {
+        let server = poison_server(13);
+        harness::assert_poison_quarantined_innocents_served(
+            server.front(),
+            &cfg(),
+            vec![GenRequest::new("a", 1), GenRequest::new("b", 2)],
+            GenRequest::new("poison", 13),
+            &served_init_err,
+        );
+    }
+
+    /// An injected error-return fault surfaces as a typed retryable error
+    /// without killing the lane, and `run_batch_retry` recovers it.
+    #[test]
+    fn injected_error_is_retried_without_lane_death() {
+        let server = dead_dir_server()
+            .with_faults(FaultPlan::default().at("server.step", 1, FaultKind::ErrorReturn));
+        let comps = server.run_batch_retry(
+            &cfg(),
+            vec![GenRequest::new("x", 1)],
+            RetryPolicy::default(),
+        );
+        // Retried once past the one-shot fault; the healthy lane then
+        // answers with its init error (artifact-free).
+        assert!(served_init_err(&comps[0]));
+        assert_eq!(server.metrics.counter("retry_attempted"), 1);
+        assert_eq!(server.metrics.counter("fault_injected"), 1);
+        assert_eq!(server.metrics.counter("worker_panic"), 0);
+        assert_eq!(server.metrics.counter("lane_evicted"), 0);
         server.shutdown();
     }
 }

@@ -37,7 +37,19 @@
 //!   exponentially-decayed served tail (`DecayedTail`, PR 5 — no shrink
 //!   floor needed). Batched latents are bit-identical to
 //!   per-request ones (`tests/scheduler_equivalence.rs`); the `frontend`
-//!   seam is where a future PJRT cohort backend plugs in.
+//!   seam is where a future PJRT cohort backend plugs in. Since PR 6 the
+//!   shared substrate is *supervised*: worker panics are caught at the
+//!   lane unwind boundary and surfaced as retryable error completions
+//!   (never a dropped sender), dead lanes respawn under exponential
+//!   backoff with a crash-storm circuit breaker (`lane_unhealthy` →
+//!   fail-fast, half-open probes), poison requests are quarantined after
+//!   K consecutive lane deaths while innocent cohort members are
+//!   transparently re-run bit-identically (`RetryPolicy`), and graceful
+//!   drain answers queued jobs with explicit "shutting down"
+//!   completions. The deterministic chaos substrate behind it is
+//!   [`coordinator::fault`] (`TOMA_FAULTS`, `FaultPlan`:
+//!   panic/slow/error/stall at the `server.step` / `scheduler.step`
+//!   probes), driving `tests/chaos.rs` against both front-ends.
 //! * [`runtime`] — PJRT client, artifact registry, weight store. The
 //!   XLA-backed layer sits behind the `pjrt` cargo feature; the default
 //!   build compiles same-API pure-Rust stubs, so no XLA toolchain is

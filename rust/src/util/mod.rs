@@ -1,5 +1,5 @@
 //! Substrate utilities: RNG, statistics, JSON, CLI parsing, property
-//! tests, and the crate-wide error plumbing.
+//! tests, poison-tolerant locking, and the crate-wide error plumbing.
 
 pub mod argparse;
 pub mod error;
@@ -7,5 +7,7 @@ pub mod json;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 
 pub use rng::Pcg64;
+pub use sync::lock_unpoisoned;

@@ -1,0 +1,92 @@
+//! Poison-tolerant locking for the serving coordinator.
+//!
+//! `std::sync::Mutex` poisons itself when a thread panics while holding
+//! the guard, and every later `lock().unwrap()` then panics too. In the
+//! coordinator that is a *cascade*: one panicking worker holding the
+//! shared [`Metrics`](crate::coordinator::Metrics) registry (or the lane
+//! table) would crash every other lane the next time it counted a
+//! request — turning one bad request into a process-wide outage. The
+//! supervision layer (PR 6) deliberately keeps serving through worker
+//! panics, so every coordinator lock site goes through
+//! [`lock_unpoisoned`] instead: poisoning is recovered, not propagated.
+//!
+//! Recovery is sound here because all coordinator-shared state is
+//! panic-consistent: counters and histograms are updated with single
+//! in-place operations, and the lane table is only mutated through
+//! insert/remove of whole entries — there is no multi-step invariant a
+//! mid-update panic could tear.
+
+use std::sync::{Mutex, MutexGuard};
+
+/// Lock `m`, recovering the guard if a previous holder panicked.
+///
+/// Equivalent to `m.lock().unwrap()` on the happy path; on a poisoned
+/// mutex it returns the inner guard instead of propagating the panic to
+/// this (innocent) thread.
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::sync::Mutex;
+
+    #[test]
+    fn recovers_poisoned_mutex() {
+        let m = Mutex::new(7u32);
+        // Poison: panic while holding the guard.
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            let _g = m.lock().unwrap();
+            panic!("poison");
+        }));
+        assert!(r.is_err());
+        assert!(m.is_poisoned(), "mutex must be poisoned by the panic");
+        // A plain lock().unwrap() would panic here; the helper recovers.
+        {
+            let mut g = lock_unpoisoned(&m);
+            assert_eq!(*g, 7);
+            *g = 8;
+        }
+        assert_eq!(*lock_unpoisoned(&m), 8, "state usable after recovery");
+    }
+
+    #[test]
+    fn plain_lock_on_healthy_mutex() {
+        let m = Mutex::new(vec![1, 2]);
+        lock_unpoisoned(&m).push(3);
+        assert_eq!(*lock_unpoisoned(&m), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn concurrent_increments_survive_a_poisoning_thread() {
+        use std::sync::Arc;
+        let m = Arc::new(Mutex::new(0u64));
+        let m2 = m.clone();
+        let killer = std::thread::spawn(move || {
+            let _ = catch_unwind(AssertUnwindSafe(|| {
+                let _g = m2.lock().unwrap();
+                panic!("die holding the lock");
+            }));
+        });
+        killer.join().unwrap();
+        // Innocent threads keep counting after the poisoning.
+        let mut handles = vec![];
+        for _ in 0..4 {
+            let m = m.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..100 {
+                    *lock_unpoisoned(&m) += 1;
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(*lock_unpoisoned(&m), 400);
+    }
+}

@@ -1,0 +1,311 @@
+//! Chaos acceptance tests for the PR 6 supervision layer, driven through
+//! the public API against **both** `LaneJob` instantiations — the
+//! `Scheduler`'s cohort lane (real host backend, artifact-free) and the
+//! `Server`'s engine lane (init-failed engines still probe faults, so the
+//! lifecycle runs artifact-free too). Every scenario is deterministic:
+//! faults fire on injector schedules (exact probe counts or poisoned
+//! seeds), never timers, and no test sleeps on wall clock.
+//!
+//! The behaviors under test: a worker panic surfaces as a retryable error
+//! *completion* (never a dropped sender), dead lanes respawn
+//! generation-checked, a poison request is quarantined after K strikes
+//! while innocents are transparently re-run, a crash storm opens the
+//! circuit breaker exactly once, a half-open probe closes it again on a
+//! healthy serve, and graceful drain answers queued jobs with explicit
+//! "shutting down" completions.
+
+use std::sync::Arc;
+
+use toma::coordinator::scheduler::{BatchPolicy, HostBackend, DEFAULT_TAU};
+use toma::coordinator::{
+    Completion, EngineConfig, FaultKind, FaultPlan, GenRequest, RetryPolicy, Scheduler, Server,
+    SupervisionPolicy,
+};
+use toma::model::HostUVit;
+use toma::runtime::ModelInfo;
+use toma::toma::plan::ReuseSchedule;
+
+const REGIONS: usize = 4;
+
+fn model() -> Arc<HostUVit> {
+    let info = ModelInfo::synthetic("uvit_chaos", 4, 2, 16, 2, 3, 5);
+    Arc::new(HostUVit::synthetic(&info, 2, 4242))
+}
+
+fn toma_cfg(steps: usize) -> EngineConfig {
+    let mut cfg = EngineConfig::new("uvit_chaos", "toma", Some(0.5));
+    cfg.steps = steps;
+    cfg.select_mode = "tile".to_string();
+    cfg.schedule = ReuseSchedule::default();
+    cfg
+}
+
+fn host_scheduler(plan: FaultPlan) -> Scheduler {
+    let m = model();
+    Scheduler::new(
+        BatchPolicy {
+            max_batch: 4,
+            max_queue_wait_s: 0.05,
+            ..Default::default()
+        },
+        move |c: &EngineConfig| HostBackend::boxed(m.clone(), c.clone(), REGIONS, DEFAULT_TAU),
+    )
+    .with_faults(plan)
+}
+
+/// An artifact-free server: every lane spawns, fails engine init, and
+/// serves every job a clean "engine init failed" completion — a live lane
+/// whose dequeue path still probes the fault injector.
+fn dead_dir_server(plan: FaultPlan) -> Server {
+    Server::new(std::env::temp_dir().join("toma_chaos_no_artifacts"), 1).with_faults(plan)
+}
+
+fn err_text(c: &Completion) -> String {
+    c.result
+        .as_ref()
+        .err()
+        .map(|e| e.to_string())
+        .unwrap_or_default()
+}
+
+// ---------------------------------------------------------------- scheduler
+
+/// A poisoned cohort member panics the lane; the poison is quarantined
+/// after two strikes while the innocents caught in the blast radius are
+/// transparently re-run to successful completions.
+#[test]
+fn scheduler_poison_quarantined_innocents_recovered() {
+    let sched = host_scheduler(FaultPlan::default().poison(666, FaultKind::Panic));
+    let cfg = toma_cfg(3);
+    let reqs = vec![
+        GenRequest::new("a", 1),
+        GenRequest::new("b", 2),
+        GenRequest::new("poison", 666),
+    ];
+    let comps = sched.run_batch_retry(
+        &cfg,
+        reqs,
+        RetryPolicy {
+            max_attempts: 8,
+            quarantine_strikes: 2,
+        },
+    );
+    assert!(comps[0].result.is_ok(), "innocent a: {}", err_text(&comps[0]));
+    assert!(comps[1].result.is_ok(), "innocent b: {}", err_text(&comps[1]));
+    let poison_err = err_text(&comps[2]);
+    assert!(poison_err.contains("quarantined"), "poison: {poison_err}");
+    // Join lane threads before reading counters: a dying worker records
+    // its panic *after* sending the completion.
+    sched.shutdown();
+    assert_eq!(sched.metrics.counter("quarantined"), 1);
+    assert!(sched.metrics.counter("worker_panic") >= 2);
+    assert!(sched.metrics.counter("retry_attempted") >= 1);
+    assert!(sched.metrics.counter("lane_respawned") >= 1);
+    assert_eq!(
+        sched.metrics.counter("lane_unhealthy"),
+        0,
+        "quarantine must contain the poison before the breaker trips"
+    );
+}
+
+/// Resubmitting a crash-looping request past the respawn budget opens the
+/// circuit breaker exactly once; afterwards submissions fail fast with an
+/// "unhealthy" completion instead of burning respawns.
+#[test]
+fn scheduler_crash_storm_opens_breaker_and_fails_fast() {
+    let sched = host_scheduler(FaultPlan::default().poison(666, FaultKind::Panic))
+        .with_supervision(SupervisionPolicy {
+            backoff_base_s: 0.0,
+            backoff_max_s: 2.0,
+            respawn_budget: 2,
+            breaker_probe_s: 3600.0,
+        });
+    let cfg = toma_cfg(3);
+    let mut opened = false;
+    for _ in 0..32 {
+        let rx = sched.submit(&cfg, GenRequest::new("poison", 666));
+        let Ok(c) = rx.recv() else { continue };
+        assert!(c.result.is_err(), "poison must never be served");
+        if err_text(&c).contains("unhealthy") {
+            opened = true;
+            break;
+        }
+    }
+    assert!(opened, "crash storm must trip the breaker");
+    sched.shutdown();
+    assert_eq!(sched.metrics.counter("lane_unhealthy"), 1, "breaker opens exactly once");
+    assert!(sched.metrics.counter("rejected_unhealthy") >= 1);
+    assert!(sched.metrics.counter("worker_panic") >= 2);
+}
+
+/// With an immediate probe cool-down, the breaker half-opens after the
+/// crash and a healthy serve closes it: innocents recover the lane.
+#[test]
+fn scheduler_breaker_half_open_probe_recovers_on_healthy_serve() {
+    let sched = host_scheduler(FaultPlan::default().poison(666, FaultKind::Panic))
+        .with_supervision(SupervisionPolicy {
+            backoff_base_s: 0.0,
+            backoff_max_s: 2.0,
+            respawn_budget: 1,    // the first death opens the breaker
+            breaker_probe_s: 0.0, // probes allowed immediately
+        });
+    let cfg = toma_cfg(3);
+    let rx = sched.submit(&cfg, GenRequest::new("poison", 666));
+    let c = rx.recv().expect("panic must answer with a completion");
+    assert!(err_text(&c).contains("worker panicked"), "{}", err_text(&c));
+    // The corpse may take one stale hop to evict; within a few attempts a
+    // half-open probe must respawn the lane and serve an innocent.
+    let mut served = false;
+    for attempt in 0..4u64 {
+        let rx = sched.submit(&cfg, GenRequest::new("innocent", attempt));
+        if let Ok(c) = rx.recv() {
+            if c.result.is_ok() {
+                served = true;
+                break;
+            }
+        }
+    }
+    assert!(served, "half-open probe must let an innocent close the breaker");
+    sched.shutdown();
+    assert_eq!(sched.metrics.counter("lane_unhealthy"), 1, "the crash opened the breaker");
+    assert_eq!(sched.metrics.counter("rejected_unhealthy"), 0, "probes, not rejections");
+}
+
+/// An injected error-return fails the cohort with a retryable error but
+/// leaves the lane alive; the retry layer recovers on the same lane.
+#[test]
+fn scheduler_injected_error_recovered_without_respawn() {
+    let sched =
+        host_scheduler(FaultPlan::default().at("scheduler.step", 1, FaultKind::ErrorReturn));
+    let reqs = vec![GenRequest::new("x", 9)];
+    let comps = sched.run_batch_retry(&toma_cfg(3), reqs, RetryPolicy::default());
+    assert!(comps[0].result.is_ok(), "{}", err_text(&comps[0]));
+    assert_eq!(sched.metrics.counter("retry_attempted"), 1);
+    assert_eq!(sched.metrics.counter("fault_injected"), 1);
+    assert_eq!(sched.metrics.counter("worker_panic"), 0);
+    assert_eq!(sched.metrics.counter("lane_respawned"), 0);
+    sched.shutdown();
+}
+
+/// Graceful drain: after `begin_drain`, un-admitted jobs get explicit,
+/// counted "shutting down" completions — never a bare disconnect.
+#[test]
+fn scheduler_drain_answers_queued_jobs() {
+    let sched = host_scheduler(FaultPlan::default());
+    let cfg = toma_cfg(2);
+    let pre = sched.run_batch(&cfg, vec![GenRequest::new("pre", 1)]);
+    assert!(pre[0].result.is_ok());
+    sched.begin_drain();
+    let rx = sched.submit(&cfg, GenRequest::new("post", 2));
+    let c = rx.recv().expect("drain must answer");
+    assert!(err_text(&c).contains("shutting down"), "{}", err_text(&c));
+    assert_eq!(sched.metrics.counter("shed_shutdown"), 1);
+    sched.shutdown();
+}
+
+// ------------------------------------------------------------------- server
+
+/// A server worker panic (injector-driven at the dequeue probe) surfaces
+/// as an error completion and the lane respawns: a later innocent gets
+/// the healthy lane's answer.
+#[test]
+fn server_injected_panic_answers_and_respawns() {
+    let server = dead_dir_server(FaultPlan::default().poison(666, FaultKind::Panic));
+    let cfg = EngineConfig::new("uvit_none", "baseline", None);
+    let rx = server.submit(&cfg, GenRequest::new("poison", 666));
+    let c = rx.recv().expect("panic must answer with a completion");
+    assert!(err_text(&c).contains("worker panicked"), "{}", err_text(&c));
+    // Respawn: an innocent must reach a live lane (its init-failed worker
+    // answers with the engine error) within a few attempts.
+    let mut served = false;
+    for attempt in 0..4u64 {
+        let rx = server.submit(&cfg, GenRequest::new("innocent", attempt));
+        if let Ok(c) = rx.recv() {
+            if err_text(&c).contains("engine init failed") {
+                served = true;
+                break;
+            }
+        }
+    }
+    assert!(served, "lane must respawn after the injected panic");
+    server.shutdown();
+    assert!(server.metrics.counter("worker_panic") >= 1);
+    assert!(server.metrics.counter("lane_respawned") >= 1);
+}
+
+/// Same poison-pill containment on the server lane: quarantine the
+/// poison, transparently re-serve the innocents.
+#[test]
+fn server_poison_quarantined_innocents_recovered() {
+    let server = dead_dir_server(FaultPlan::default().poison(666, FaultKind::Panic));
+    let cfg = EngineConfig::new("uvit_none", "baseline", None);
+    let comps = server.run_batch_retry(
+        &cfg,
+        vec![
+            GenRequest::new("a", 1),
+            GenRequest::new("b", 2),
+            GenRequest::new("poison", 666),
+        ],
+        RetryPolicy {
+            max_attempts: 8,
+            quarantine_strikes: 2,
+        },
+    );
+    for c in &comps[..2] {
+        assert!(
+            err_text(c).contains("engine init failed"),
+            "innocent must reach a live lane: {}",
+            err_text(c)
+        );
+    }
+    assert!(err_text(&comps[2]).contains("quarantined"), "{}", err_text(&comps[2]));
+    server.shutdown();
+    assert_eq!(server.metrics.counter("quarantined"), 1);
+    assert!(server.metrics.counter("worker_panic") >= 2);
+}
+
+/// A one-shot injected error on the server dequeue is retried
+/// transparently; the lane survives (no panic, no eviction).
+#[test]
+fn server_injected_error_recovered_without_lane_death() {
+    let server = dead_dir_server(FaultPlan::default().at("server.step", 1, FaultKind::ErrorReturn));
+    let cfg = EngineConfig::new("uvit_none", "baseline", None);
+    let reqs = vec![GenRequest::new("x", 1)];
+    let comps = server.run_batch_retry(&cfg, reqs, RetryPolicy::default());
+    assert!(err_text(&comps[0]).contains("engine init failed"), "{}", err_text(&comps[0]));
+    assert_eq!(server.metrics.counter("retry_attempted"), 1);
+    assert_eq!(server.metrics.counter("worker_panic"), 0);
+    assert_eq!(server.metrics.counter("lane_evicted"), 0);
+    server.shutdown();
+}
+
+/// Server-side graceful drain mirrors the scheduler's: explicit counted
+/// completions for queued jobs once the drain flag flips.
+#[test]
+fn server_drain_answers_queued_jobs() {
+    let server = dead_dir_server(FaultPlan::default());
+    let cfg = EngineConfig::new("uvit_none", "baseline", None);
+    let pre = server.run_batch(&cfg, vec![GenRequest::new("pre", 1)]);
+    assert!(err_text(&pre[0]).contains("engine init failed"));
+    server.begin_drain();
+    let rx = server.submit(&cfg, GenRequest::new("post", 2));
+    let c = rx.recv().expect("drain must answer");
+    assert!(err_text(&c).contains("shutting down"), "{}", err_text(&c));
+    assert_eq!(server.metrics.counter("shed_shutdown"), 1);
+    server.shutdown();
+}
+
+/// The `TOMA_FAULTS`-style rate schedule in its always-safe default
+/// (slow-step only) leaves results correct end to end: a full batch under
+/// a 20% latency-jitter schedule completes every request successfully.
+#[test]
+fn rate_slow_faults_never_change_results() {
+    let sched = host_scheduler(FaultPlan::default().with_rate(0.2, 42));
+    let comps = sched.run_batch(&toma_cfg(4), (0..4).map(|i| GenRequest::new("r", i)).collect());
+    for c in &comps {
+        assert!(c.result.is_ok(), "{}", err_text(c));
+    }
+    assert_eq!(sched.metrics.counter("requests_ok"), 4);
+    assert_eq!(sched.metrics.counter("worker_panic"), 0);
+    sched.shutdown();
+}

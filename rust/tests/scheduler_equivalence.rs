@@ -9,7 +9,7 @@ use std::sync::Arc;
 use toma::coordinator::scheduler::{
     BatchPolicy, Cohort, HostBackend, HostEngine, Scheduler, DEFAULT_TAU,
 };
-use toma::coordinator::{EngineConfig, GenRequest};
+use toma::coordinator::{EngineConfig, FaultKind, FaultPlan, GenRequest, RetryPolicy};
 use toma::model::HostUVit;
 use toma::runtime::ModelInfo;
 use toma::toma::plan::ReuseSchedule;
@@ -202,4 +202,58 @@ fn degenerate_single_member_cohort_matches_per_request() {
     assert_eq!(result.stats.weight_refreshes, reference.stats.weight_refreshes);
     assert_eq!(result.stats.plan_reuses, reference.stats.plan_reuses);
     assert_eq!(result.stats.steps, reference.stats.steps);
+}
+
+/// Chaos equivalence (PR 6): a deterministic injected panic kills the
+/// lane mid-cohort-step; the submit-side retry layer transparently
+/// re-runs every member, and the recovered latents are **bit-identical**
+/// to the per-request reference. Seeded and wall-clock free — the fault
+/// fires on an exact probe count, never a timer.
+#[test]
+fn injected_panic_mid_step_retried_bit_identical() {
+    let model = model();
+    let cfg = toma_cfg(12);
+    let seeds: Vec<u64> = vec![11, 22, 33, 44];
+    let reference = reference_latents(&model, &cfg, &seeds);
+
+    let m = model.clone();
+    let sched = Scheduler::new(
+        BatchPolicy {
+            max_batch: 4,
+            max_queue_wait_s: 0.25,
+            ..Default::default()
+        },
+        move |c: &EngineConfig| HostBackend::boxed(m.clone(), c.clone(), REGIONS, TAU),
+    )
+    .with_faults(FaultPlan::default().at("scheduler.step", 3, FaultKind::Panic));
+    let reqs: Vec<GenRequest> = seeds
+        .iter()
+        .map(|&seed| GenRequest::new(&format!("prompt {seed}"), seed))
+        .collect();
+    let comps = sched.run_batch_retry(
+        &cfg,
+        reqs,
+        RetryPolicy {
+            max_attempts: 8,
+            quarantine_strikes: 3,
+        },
+    );
+    for (i, c) in comps.iter().enumerate() {
+        let r = c
+            .result
+            .as_ref()
+            .unwrap_or_else(|e| panic!("seed {} must be transparently recovered: {e}", seeds[i]));
+        assert_eq!(
+            r.latent, reference[i],
+            "seed {}: latent diverged after the chaos retry",
+            seeds[i]
+        );
+    }
+    // Join lane threads before reading counters (the dying worker records
+    // its panic after sending the death completions).
+    sched.shutdown();
+    assert_eq!(sched.metrics.counter("worker_panic"), 1, "exactly the one injected panic");
+    assert_eq!(sched.metrics.counter("fault_injected"), 1);
+    assert!(sched.metrics.counter("retry_attempted") >= 4, "every member transparently retried");
+    assert_eq!(sched.metrics.counter("quarantined"), 0, "no member is poison");
 }
