@@ -21,6 +21,12 @@
 //! jitter + retryable step errors) served through the transparent retry
 //! layer; the supervision counters (injections, retries, respawns,
 //! panics, quarantines) land in the JSON as notes.
+//!
+//! The `serve_trace` section (PR 7) times the bs=8 closed-loop workload
+//! with the span ring off vs. on; both medians land in the JSON and an
+//! in-bench gate holds tracing-on to < 3% median overhead. When
+//! `TOMA_TRACE_DIR` is set, the last traced run is exported there as
+//! `TRACE_serve_sweep.json` + `.bin` (the CI trace artifact).
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -29,7 +35,8 @@ use toma::bench::Runner;
 use toma::coordinator::scheduler::{
     AdaptivePolicy, BatchPolicy, HostBackend, LanePolicy, Scheduler, DEFAULT_TAU,
 };
-use toma::coordinator::{EngineConfig, FaultKind, FaultPlan, GenRequest, RetryPolicy};
+use toma::coordinator::trace::{export, DEFAULT_CAPACITY};
+use toma::coordinator::{EngineConfig, FaultKind, FaultPlan, GenRequest, RetryPolicy, Tracer};
 use toma::model::HostUVit;
 use toma::report::Table;
 use toma::runtime::ModelInfo;
@@ -142,6 +149,20 @@ fn run_chaos(model: &Arc<HostUVit>, rate: f64, seed: u64) -> (f64, Scheduler) {
     let wall = t0.elapsed().as_secs_f64();
     let ok = comps.iter().filter(|c| c.result.is_ok()).count();
     assert_eq!(ok, REQUESTS, "chaos faults must be transparently recovered");
+    (wall, s)
+}
+
+/// [`run_closed`] with the span ring enabled (PR 7): the same bs=8
+/// closed-loop workload, recording spans for every submit / formation /
+/// queue-wait / plan / gemm edge.
+fn run_traced(model: &Arc<HostUVit>) -> (f64, Scheduler) {
+    let s = scheduler(model, closed_policy(8, false)).with_trace(Tracer::new(DEFAULT_CAPACITY));
+    let reqs: Vec<GenRequest> = requests(REQUESTS, 0.0).into_iter().map(|(r, _)| r).collect();
+    let t0 = Instant::now();
+    let comps = s.run_batch(&cfg(), reqs);
+    let wall = t0.elapsed().as_secs_f64();
+    let ok = comps.iter().filter(|c| c.result.is_ok()).count();
+    assert_eq!(ok, REQUESTS, "all requests must succeed");
     (wall, s)
 }
 
@@ -330,6 +351,61 @@ fn main() {
         runner.note(&format!("{name}_quarantined"), &quarantined.to_string());
     }
     println!("\n{}", chaos.render());
+
+    // Trace-overhead section (PR 7): the bs=8 closed-loop workload with
+    // the span ring off vs. on. Both medians land in
+    // BENCH_serve_sweep.json; the in-bench gate holds tracing-on to
+    // < 3% median overhead (with a small absolute floor so sub-second
+    // medians don't flake on timer noise). Schedulers are parked inside
+    // the timed closures — identical shape for both cases — and drained
+    // untimed afterwards.
+    let mut offs: Vec<Scheduler> = vec![];
+    let off_s = runner.bench("serve_trace_off", || {
+        offs.push(run_closed(&model, closed_policy(8, false)).1);
+    });
+    for prev in offs.drain(..) {
+        prev.shutdown();
+    }
+    let mut ons: Vec<Scheduler> = vec![];
+    let on_s = runner.bench("serve_trace_on", || {
+        ons.push(run_traced(&model).1);
+    });
+    let s = ons.pop().unwrap_or_else(|| run_traced(&model).1);
+    for prev in ons.drain(..) {
+        prev.shutdown();
+    }
+    s.shutdown();
+    let spans = s.tracer().drain();
+    let dropped = s.tracer().dropped_spans();
+    runner.note("serve_trace_spans", &spans.len().to_string());
+    runner.note("serve_trace_dropped", &dropped.to_string());
+    // Export the last traced run next to the bench JSON when asked (the
+    // CI trace artifact) — both encodings, the binary being the
+    // compressed form `toma-serve trace` also accepts.
+    if let Some(dir) = std::env::var_os("TOMA_TRACE_DIR") {
+        let dir = std::path::PathBuf::from(dir);
+        std::fs::write(
+            dir.join("TRACE_serve_sweep.json"),
+            export::encode_json(&spans, dropped),
+        )
+        .expect("write trace json");
+        std::fs::write(
+            dir.join("TRACE_serve_sweep.bin"),
+            export::encode_binary(&spans, dropped),
+        )
+        .expect("write trace bin");
+    }
+    let slack = (off_s * 0.03).max(0.02);
+    assert!(
+        on_s <= off_s + slack,
+        "tracing-on median {on_s:.4}s exceeds tracing-off {off_s:.4}s + slack {slack:.4}s"
+    );
+    println!(
+        "\nserve_trace overhead: off {off_s:.4}s, on {on_s:.4}s ({:+.2}%), \
+         {} spans ({dropped} dropped)",
+        (on_s / off_s - 1.0) * 100.0,
+        spans.len()
+    );
 
     // Open-loop arrival sweep (Poisson): end-to-end latency under load.
     let mut open = Table::new("serve_sweep: open loop, batch<=8")

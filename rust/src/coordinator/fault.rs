@@ -46,6 +46,7 @@ use crate::util::error::Result;
 use crate::util::lock_unpoisoned;
 
 use super::metrics::Metrics;
+use super::trace::{Site as TraceSite, Span, SpanKind, Tracer};
 
 /// Marker substring present in every injected-fault error message.
 /// The retry layer treats such errors as transient and retryable.
@@ -74,6 +75,17 @@ impl FaultKind {
             FaultKind::SlowStep => "slow",
             FaultKind::ErrorReturn => "error",
             FaultKind::Stall => "stall",
+        }
+    }
+
+    /// Static per-kind metrics key (`fault_injected_<kind>`), so counting
+    /// an injection never allocates on the probe path.
+    pub fn counter_name(&self) -> &'static str {
+        match self {
+            FaultKind::Panic => "fault_injected_panic",
+            FaultKind::SlowStep => "fault_injected_slow",
+            FaultKind::ErrorReturn => "fault_injected_error",
+            FaultKind::Stall => "fault_injected_stall",
         }
     }
 
@@ -256,7 +268,9 @@ fn splitmix64(mut z: u64) -> u64 {
     z ^ (z >> 31)
 }
 
-fn hash_site(site: &str) -> u64 {
+/// FNV-1a site/key hash — also the construction `trace::lane_hash` uses,
+/// so fault spans and lane spans hash the same strings identically.
+pub fn hash_site(site: &str) -> u64 {
     // FNV-1a: stable across platforms, good enough to decorrelate sites.
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
     for b in site.as_bytes() {
@@ -368,6 +382,21 @@ impl FaultInjector {
     /// `ErrorReturn` returns a typed [`INJECTED`] error. `metrics` (when
     /// the site has a registry) counts `fault_injected`.
     pub fn fire(&self, site: &str, seeds: &[u64], metrics: Option<&Metrics>) -> Result<()> {
+        self.fire_traced(site, seeds, metrics, &Tracer::off(), 0)
+    }
+
+    /// [`FaultInjector::fire`] that also records a `SpanKind::Fault` span
+    /// when tracing is active. `lane` is the caller's lane-key hash (0
+    /// when unknown); the span is recorded *before* the consequence
+    /// executes so a `Panic` injection still leaves its trace.
+    pub fn fire_traced(
+        &self,
+        site: &str,
+        seeds: &[u64],
+        metrics: Option<&Metrics>,
+        tracer: &Tracer,
+        lane: u64,
+    ) -> Result<()> {
         // Fast path: inert injectors cost one Option check.
         let Some(shared) = self.shared.as_ref() else {
             return Ok(());
@@ -378,7 +407,23 @@ impl FaultInjector {
         shared.injected.fetch_add(1, Ordering::Relaxed);
         if let Some(m) = metrics {
             m.inc("fault_injected");
-            m.inc(&format!("fault_injected_{}", kind.as_str()));
+            m.inc(kind.counter_name());
+        }
+        if tracer.enabled() {
+            let dur_us = match kind {
+                FaultKind::SlowStep => shared.plan.slow_ms * 1000,
+                FaultKind::Stall => shared.plan.stall_ms * 1000,
+                FaultKind::Panic | FaultKind::ErrorReturn => 0,
+            };
+            tracer.record(Span {
+                site: TraceSite::from_probe(site),
+                kind: SpanKind::Fault,
+                lane,
+                id: seeds.first().copied().unwrap_or(0),
+                step: 0,
+                start_us: tracer.now_us(),
+                dur_us,
+            });
         }
         match kind {
             FaultKind::Panic => panic!("{INJECTED}: panic at {site}"),
@@ -498,6 +543,24 @@ mod tests {
         }));
         assert!(r.is_err(), "panic kind must unwind");
         assert_eq!(m.counter("fault_injected_panic"), 1);
+    }
+
+    #[test]
+    fn fire_traced_records_fault_span() {
+        let tracer = Tracer::new(64);
+        let inj = FaultInjector::new(
+            FaultPlan::default()
+                .with_rate(1.0, 0)
+                .with_kinds(&[FaultKind::ErrorReturn]),
+        );
+        let lane = hash_site("lane-key");
+        assert!(inj.fire_traced("scheduler.step", &[5], None, &tracer, lane).is_err());
+        let spans = tracer.drain();
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].kind, SpanKind::Fault);
+        assert_eq!(spans[0].site, TraceSite::Scheduler);
+        assert_eq!(spans[0].lane, lane);
+        assert_eq!(spans[0].id, 5);
     }
 
     #[test]

@@ -61,7 +61,23 @@
 //! * `retry_attempted` — transparent resubmissions by `run_batch_retry`;
 //! * `quarantined` — poison requests failed after repeated lane crashes;
 //! * `shed_shutdown` — queued jobs drained with explicit "shutting down"
-//!   completions during graceful shutdown.
+//!   completions during graceful shutdown;
+//! * `lane_degrading` / `lane_recovered` — anomaly-flag transitions from
+//!   the per-lane detector (see below); `lane_degrading` is registered at
+//!   zero so serve output always renders the health line.
+//!
+//! # Tracing (PR 7)
+//!
+//! The front-end carries an optional [`Tracer`] (default: the inert
+//! [`Tracer::off`], one `Option` check per site — the serving path stays
+//! bit-identical) threaded into every lane's [`WorkerCtx`]. The shared
+//! sites recorded here: `submit` spans on admission, `retry` spans for
+//! both lane respawns and `run_batch_retry` resubmissions, and `fault`
+//! spans for caught worker panics and supervisor fail-fasts. Per-lane
+//! step/queue instrumentation lives with each [`LaneJob`]. Orthogonally,
+//! an always-on [`AnomalyDetector`] watches each lane's retry-rate
+//! stream here (the jobs feed step-latency and queue-depth), flagging
+//! `lane_degrading` long before cumulative histograms move.
 //!
 //! This seam is also where a future PJRT cohort backend plugs in: a
 //! `LaneJob` whose workers drive compiled variable-batch step artifacts
@@ -82,6 +98,7 @@ use crate::util::lock_unpoisoned;
 use super::fault::INJECTED;
 use super::metrics::Metrics;
 use super::request::{EngineConfig, GenRequest, GenResult};
+use super::trace::{lane_hash, AnomalyDetector, Channel, Site, Span, SpanKind, Tracer};
 
 /// Marker substring carried by every completion whose lane's worker
 /// panicked with the request in flight. The retry layer treats such
@@ -356,6 +373,7 @@ pub struct LaneGuard {
     key: String,
     supervision: Arc<Supervision>,
     draining: Arc<AtomicBool>,
+    tracer: Tracer,
 }
 
 impl LaneGuard {
@@ -365,10 +383,27 @@ impl LaneGuard {
         self.draining.load(Ordering::SeqCst)
     }
 
-    /// Report a caught worker panic: counts `worker_panic` and records a
-    /// death against the lane's health (backoff / breaker bookkeeping).
+    /// This lane's key under [`lane_hash`] — the identity its spans carry.
+    pub fn lane(&self) -> u64 {
+        lane_hash(&self.key)
+    }
+
+    /// Report a caught worker panic: counts `worker_panic`, records a
+    /// `fault` span, and records a death against the lane's health
+    /// (backoff / breaker bookkeeping).
     pub fn record_panic(&self, metrics: &Metrics) {
         metrics.inc("worker_panic");
+        if self.tracer.enabled() {
+            self.tracer.record(Span {
+                site: Site::Frontend,
+                kind: SpanKind::Fault,
+                lane: lane_hash(&self.key),
+                id: 0,
+                step: 0,
+                start_us: self.tracer.now_us(),
+                dur_us: 0,
+            });
+        }
         self.supervision.record_death(&self.key, metrics);
     }
 
@@ -380,11 +415,14 @@ impl LaneGuard {
 }
 
 /// Everything a [`LaneJob`] needs to run one lane's workers: the job
-/// queue, the shared metrics registry, and the supervision guard.
+/// queue, the shared metrics registry, the supervision guard, the
+/// tracing handle (inert by default), and the shared anomaly detector.
 pub struct WorkerCtx {
     pub rx: Receiver<Job>,
     pub metrics: Arc<Metrics>,
     pub guard: LaneGuard,
+    pub tracer: Tracer,
+    pub anomaly: AnomalyDetector,
 }
 
 /// Submit-side transparent-retry policy for
@@ -465,13 +503,19 @@ pub struct LaneFrontEnd<J: LaneJob> {
     next_generation: AtomicU64,
     supervision: Arc<Supervision>,
     draining: Arc<AtomicBool>,
+    tracer: Tracer,
+    anomaly: AnomalyDetector,
 }
 
 impl<J: LaneJob> LaneFrontEnd<J> {
     pub fn new(job: J) -> LaneFrontEnd<J> {
+        let metrics = Arc::new(Metrics::new());
+        // Register the anomaly flag at zero so `Metrics::render` always
+        // shows the lane-health counter, flagged or not.
+        metrics.add("lane_degrading", 0);
         LaneFrontEnd {
             job,
-            metrics: Arc::new(Metrics::new()),
+            metrics,
             table: Mutex::new(LaneTable {
                 lanes: BTreeMap::new(),
                 seen: BTreeSet::new(),
@@ -479,6 +523,8 @@ impl<J: LaneJob> LaneFrontEnd<J> {
             next_generation: AtomicU64::new(1),
             supervision: Arc::new(Supervision::new(SupervisionPolicy::default())),
             draining: Arc::new(AtomicBool::new(false)),
+            tracer: Tracer::off(),
+            anomaly: AnomalyDetector::default(),
         }
     }
 
@@ -499,6 +545,23 @@ impl<J: LaneJob> LaneFrontEnd<J> {
         self.supervision = Arc::new(Supervision::new(policy));
     }
 
+    /// Install an active tracer (builder-time: lanes spawn lazily, so
+    /// every worker spawned afterwards records spans). The default is the
+    /// inert [`Tracer::off`] — the bit-identical serving path.
+    pub(crate) fn set_tracer(&mut self, tracer: Tracer) {
+        self.tracer = tracer;
+    }
+
+    /// The tracing handle this front-end threads into its lanes.
+    pub fn tracer(&self) -> &Tracer {
+        &self.tracer
+    }
+
+    /// The always-on per-lane anomaly detector (shared with every lane).
+    pub fn anomaly(&self) -> &AnomalyDetector {
+        &self.anomaly
+    }
+
     fn spawn_lane(&self, cfg: &EngineConfig) -> Lane {
         let (tx, rx) = sync_channel::<Job>(self.job.queue_depth().max(1));
         let ctx = WorkerCtx {
@@ -508,7 +571,10 @@ impl<J: LaneJob> LaneFrontEnd<J> {
                 key: cfg.key(),
                 supervision: self.supervision.clone(),
                 draining: self.draining.clone(),
+                tracer: self.tracer.clone(),
             },
+            tracer: self.tracer.clone(),
+            anomaly: self.anomaly.clone(),
         };
         let handles = self.job.spawn_workers(cfg, ctx);
         let generation = self.next_generation.fetch_add(1, Ordering::Relaxed);
@@ -532,6 +598,20 @@ impl<J: LaneJob> LaneFrontEnd<J> {
             self.metrics.inc("lane_spawned");
             if !table.seen.insert(key.clone()) {
                 self.metrics.inc("lane_respawned");
+                if self.tracer.enabled() {
+                    // A respawn is the lane-level retry: record it so the
+                    // inspector can line crash recovery up against the
+                    // requests it delayed.
+                    self.tracer.record(Span {
+                        site: Site::Frontend,
+                        kind: SpanKind::Retry,
+                        lane: lane_hash(&key),
+                        id: lane.generation,
+                        step: 0,
+                        start_us: self.tracer.now_us(),
+                        dur_us: 0,
+                    });
+                }
             }
             table.lanes.insert(key.clone(), lane);
         }
@@ -569,6 +649,7 @@ impl<J: LaneJob> LaneFrontEnd<J> {
     /// breaker) also arrives as an error completion.
     pub fn submit(&self, cfg: &EngineConfig, request: GenRequest) -> Receiver<Completion> {
         let (done_tx, done_rx) = channel();
+        let seed = request.seed;
         let job = Job {
             request,
             enqueued: Instant::now(),
@@ -577,11 +658,34 @@ impl<J: LaneJob> LaneFrontEnd<J> {
         let (tx, generation) = match self.lane_tx(cfg) {
             Ok(t) => t,
             Err(e) => {
+                if self.tracer.enabled() {
+                    // Supervisor refusal: backoff window or open breaker.
+                    self.tracer.record(Span {
+                        site: Site::Frontend,
+                        kind: SpanKind::Fault,
+                        lane: lane_hash(&cfg.key()),
+                        id: seed,
+                        step: 0,
+                        start_us: self.tracer.now_us(),
+                        dur_us: 0,
+                    });
+                }
                 job.fail(&self.metrics, &e.to_string());
                 return done_rx;
             }
         };
         self.metrics.inc("requests_submitted");
+        if self.tracer.enabled() {
+            self.tracer.record(Span {
+                site: Site::Frontend,
+                kind: SpanKind::Submit,
+                lane: lane_hash(&cfg.key()),
+                id: seed,
+                step: 0,
+                start_us: self.tracer.now_us(),
+                dur_us: 0,
+            });
+        }
         if let Err(std::sync::mpsc::SendError(job)) = tx.send(job) {
             self.metrics.inc("requests_err");
             self.evict_lane(&cfg.key(), generation);
@@ -608,6 +712,7 @@ impl<J: LaneJob> LaneFrontEnd<J> {
     ) -> Result<Receiver<Completion>> {
         let (tx, generation) = self.lane_tx(cfg)?;
         let (done_tx, done_rx) = channel();
+        let seed = request.seed;
         match tx.try_send(Job {
             request,
             enqueued: Instant::now(),
@@ -615,6 +720,17 @@ impl<J: LaneJob> LaneFrontEnd<J> {
         }) {
             Ok(()) => {
                 self.metrics.inc("requests_submitted");
+                if self.tracer.enabled() {
+                    self.tracer.record(Span {
+                        site: Site::Frontend,
+                        kind: SpanKind::Submit,
+                        lane: lane_hash(&cfg.key()),
+                        id: seed,
+                        step: 0,
+                        start_us: self.tracer.now_us(),
+                        dur_us: 0,
+                    });
+                }
                 Ok(done_rx)
             }
             Err(TrySendError::Full(_)) => {
@@ -715,6 +831,17 @@ impl<J: LaneJob> LaneFrontEnd<J> {
                 }
                 attempts += 1;
                 self.metrics.inc("retry_attempted");
+                if self.tracer.enabled() {
+                    self.tracer.record(Span {
+                        site: Site::Frontend,
+                        kind: SpanKind::Retry,
+                        lane: lane_hash(&cfg.key()),
+                        id: slot.request.seed,
+                        step: attempts,
+                        start_us: self.tracer.now_us(),
+                        dur_us: 0,
+                    });
+                }
                 let request = slot.request.clone();
                 let rx = self.submit(cfg, request.clone());
                 let c = rx.recv().unwrap_or_else(|_| Completion {
@@ -729,6 +856,16 @@ impl<J: LaneJob> LaneFrontEnd<J> {
                 strikes += u32::from(c.is_lane_death());
                 *slot = c;
             }
+            // Feed the per-request retry count into the lane's retry-rate
+            // channel: a healthy lane streams zeros, so a burst of
+            // transparent resubmissions stands out against its own
+            // baseline long before cumulative error counters move.
+            self.anomaly.observe_with_metrics(
+                &cfg.key(),
+                Channel::RetryRate,
+                f64::from(attempts - 1),
+                &self.metrics,
+            );
         }
         comps
     }
@@ -987,7 +1124,7 @@ mod tests {
         }
 
         fn spawn_workers(&self, _cfg: &EngineConfig, ctx: WorkerCtx) -> Vec<JoinHandle<()>> {
-            let WorkerCtx { rx, metrics, guard } = ctx;
+            let WorkerCtx { rx, metrics, guard, .. } = ctx;
             let deadline_s = self.deadline_s;
             let panic_seed = self.panic_seed;
             vec![std::thread::Builder::new()

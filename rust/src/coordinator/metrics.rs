@@ -18,16 +18,35 @@
 //! deterministic fault injector (`coordinator::fault`) — so
 //! `toma-serve serve` and [`Metrics::render`] show lane health (respawn
 //! churn, shedding, backpressure, crash containment) next to the request
-//! counters. All lock sites here go through
+//! counters. Since PR 7 the tracing pipeline (`coordinator::trace`) adds
+//! `lane_degrading` / `lane_recovered`, counted by the online per-lane
+//! anomaly detector on flag transitions.
+//!
+//! Counter and histogram keys are `&'static str` on the hot paths
+//! ([`Metrics::inc`] / [`Metrics::add`] / [`Metrics::observe`]): the
+//! per-step counting in the drain loops allocates nothing. Dynamically
+//! built names go through the `*_owned` variants, which intern the key
+//! once on first touch.
+//!
+//! All lock sites here go through
 //! [`lock_unpoisoned`](crate::util::lock_unpoisoned): a worker that
 //! panics while counting must not poison the registry and cascade the
-//! crash into every other lane. (The
-//! adaptive batch policy's overload feedback no longer reads the
-//! cumulative `e2e_time` histogram here — since PR 5 each scheduler lane
-//! feeds its own exponentially-decayed tail,
-//! `coordinator::scheduler::DecayedTail`; this registry stays the
-//! rendering/acceptance surface.)
+//! crash into every other lane. Readers that need counters and
+//! histograms to agree take [`Metrics::snapshot`], which holds both
+//! locks at once (lock order: counters, then histograms — the only
+//! place both are held); [`Metrics::render`] is built on it, so a
+//! rendered report is a consistent point-in-time view, not two
+//! sequentially-locked halves.
+//!
+//! **No new control loops on cumulative registries.** Histograms here
+//! are lifetime-cumulative: they answer "how did serving go", never
+//! "how is this lane doing *now*". Policy feedback consumes signals
+//! that decay — each lane's `scheduler::DecayedTail` reservoir, or the
+//! trace pipeline's `trace::AnomalyFlags` — as the adaptive batch
+//! policy (PR 5) and the anomaly detector (PR 7) do. This registry
+//! stays the rendering/acceptance surface.
 
+use std::borrow::Cow;
 use std::collections::BTreeMap;
 use std::sync::Mutex;
 
@@ -47,10 +66,20 @@ pub struct LatencySummary {
     pub p99_s: f64,
 }
 
+/// Point-in-time view of the whole registry, taken under both locks —
+/// counters and histogram summaries are mutually consistent.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsSnapshot {
+    pub counters: Vec<(String, u64)>,
+    pub latencies: Vec<(String, LatencySummary)>,
+}
+
+type Key = Cow<'static, str>;
+
 #[derive(Default)]
 pub struct Metrics {
-    counters: Mutex<BTreeMap<String, u64>>,
-    histograms: Mutex<BTreeMap<String, LatencyHistogram>>,
+    counters: Mutex<BTreeMap<Key, u64>>,
+    histograms: Mutex<BTreeMap<Key, LatencyHistogram>>,
 }
 
 impl Metrics {
@@ -58,78 +87,114 @@ impl Metrics {
         Self::default()
     }
 
-    pub fn inc(&self, name: &str) {
+    /// Bump a counter by 1. Allocation-free: static keys are borrowed
+    /// into the map, never copied.
+    pub fn inc(&self, name: &'static str) {
         self.add(name, 1);
     }
 
-    pub fn add(&self, name: &str, v: u64) {
-        *lock_unpoisoned(&self.counters)
-            .entry(name.to_string())
-            .or_insert(0) += v;
+    pub fn add(&self, name: &'static str, v: u64) {
+        let mut c = lock_unpoisoned(&self.counters);
+        match c.get_mut(name) {
+            Some(slot) => *slot += v,
+            None => {
+                c.insert(Cow::Borrowed(name), v);
+            }
+        }
+    }
+
+    /// [`Metrics::add`] for dynamically-built names: the key string is
+    /// interned once on first touch, later bumps allocate nothing.
+    pub fn add_owned(&self, name: &str, v: u64) {
+        let mut c = lock_unpoisoned(&self.counters);
+        match c.get_mut(name) {
+            Some(slot) => *slot += v,
+            None => {
+                c.insert(Cow::Owned(name.to_string()), v);
+            }
+        }
     }
 
     pub fn counter(&self, name: &str) -> u64 {
         lock_unpoisoned(&self.counters).get(name).copied().unwrap_or(0)
     }
 
-    pub fn observe(&self, name: &str, d: Duration) {
-        lock_unpoisoned(&self.histograms)
-            .entry(name.to_string())
-            .or_default()
-            .record(d);
+    pub fn observe(&self, name: &'static str, d: Duration) {
+        let mut h = lock_unpoisoned(&self.histograms);
+        match h.get_mut(name) {
+            Some(hist) => hist.record(d),
+            None => {
+                h.entry(Cow::Borrowed(name)).or_default().record(d);
+            }
+        }
     }
 
-    pub fn observe_s(&self, name: &str, secs: f64) {
+    pub fn observe_s(&self, name: &'static str, secs: f64) {
         self.observe(name, Duration::from_secs_f64(secs.max(0.0)));
     }
 
     /// Aggregate one cohort's plan-cache statistics into counters
     /// (`<prefix>_refresh_all` / `_refresh_weights` / `_reuses`).
     pub fn record_plan_stats(&self, prefix: &str, s: &PlanStats) {
-        self.add(&format!("{prefix}_refresh_all"), s.refresh_all);
-        self.add(&format!("{prefix}_refresh_weights"), s.refresh_weights);
-        self.add(&format!("{prefix}_reuses"), s.reuses);
+        self.add_owned(&format!("{prefix}_refresh_all"), s.refresh_all);
+        self.add_owned(&format!("{prefix}_refresh_weights"), s.refresh_weights);
+        self.add_owned(&format!("{prefix}_reuses"), s.reuses);
     }
 
     /// One quantile (seconds) of a histogram, `q` in [0, 1]. Rendering /
     /// inspection helper only: these histograms are lifetime-cumulative,
     /// so since PR 5 no policy feedback reads them — the adaptive batch
-    /// policy consumes each lane's decayed `scheduler::DecayedTail`
-    /// instead. Do not wire new control loops to this accessor.
+    /// policy consumes each lane's decayed `scheduler::DecayedTail`, and
+    /// lane-health triggers consume `trace::AnomalyFlags`. Do not wire
+    /// new control loops to this accessor.
     pub fn quantile_s(&self, name: &str, q: f64) -> Option<f64> {
         let h = lock_unpoisoned(&self.histograms);
         Some(h.get(name)?.quantile_us(q) / 1e6)
     }
 
-    /// Count / mean / p50 / p95 / p99 of a histogram.
+    /// Count / mean / p50 / p95 / p99 of a histogram. Single-histogram
+    /// reads are internally consistent; use [`Metrics::snapshot`] when
+    /// counters and histograms must agree with each other.
     pub fn latency_summary(&self, name: &str) -> Option<LatencySummary> {
         let h = lock_unpoisoned(&self.histograms);
-        let h = h.get(name)?;
-        Some(LatencySummary {
-            count: h.count(),
-            mean_s: h.mean_us() / 1e6,
-            p50_s: h.quantile_us(0.5) / 1e6,
-            p95_s: h.quantile_us(0.95) / 1e6,
-            p99_s: h.quantile_us(0.99) / 1e6,
-        })
+        Some(summarize(h.get(name)?))
+    }
+
+    /// Consistent view of every counter and histogram, taken with both
+    /// locks held (counters first, then histograms — keep that order if
+    /// you ever add another two-lock path).
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let counters = lock_unpoisoned(&self.counters);
+        let histograms = lock_unpoisoned(&self.histograms);
+        MetricsSnapshot {
+            counters: counters.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+            latencies: histograms.iter().map(|(k, h)| (k.to_string(), summarize(h))).collect(),
+        }
     }
 
     pub fn render(&self) -> String {
+        let snap = self.snapshot();
         let mut out = String::from("-- metrics --\n");
-        for (k, v) in lock_unpoisoned(&self.counters).iter() {
+        for (k, v) in &snap.counters {
             out.push_str(&format!("{k:<40} {v}\n"));
         }
-        for (k, h) in lock_unpoisoned(&self.histograms).iter() {
+        for (k, s) in &snap.latencies {
             out.push_str(&format!(
                 "{k:<40} n={} mean={:.3}s p50={:.3}s p95={:.3}s p99={:.3}s\n",
-                h.count(),
-                h.mean_us() / 1e6,
-                h.quantile_us(0.5) / 1e6,
-                h.quantile_us(0.95) / 1e6,
-                h.quantile_us(0.99) / 1e6
+                s.count, s.mean_s, s.p50_s, s.p95_s, s.p99_s
             ));
         }
         out
+    }
+}
+
+fn summarize(h: &LatencyHistogram) -> LatencySummary {
+    LatencySummary {
+        count: h.count(),
+        mean_s: h.mean_us() / 1e6,
+        p50_s: h.quantile_us(0.5) / 1e6,
+        p95_s: h.quantile_us(0.95) / 1e6,
+        p99_s: h.quantile_us(0.99) / 1e6,
     }
 }
 
@@ -144,6 +209,16 @@ mod tests {
         m.add("req", 4);
         assert_eq!(m.counter("req"), 5);
         assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn owned_and_static_keys_share_one_namespace() {
+        let m = Metrics::new();
+        m.add_owned(&format!("{}_total", "req"), 2);
+        m.add("req_total", 3); // static bump lands on the interned key
+        assert_eq!(m.counter("req_total"), 5);
+        let snap = m.snapshot();
+        assert_eq!(snap.counters.iter().filter(|(k, _)| k == "req_total").count(), 1);
     }
 
     #[test]
@@ -185,6 +260,55 @@ mod tests {
         assert_eq!(m.counter("cohort_refresh_all"), 4);
         assert_eq!(m.counter("cohort_refresh_weights"), 6);
         assert_eq!(m.counter("cohort_reuses"), 30);
+    }
+
+    #[test]
+    fn snapshot_is_consistent_and_complete() {
+        let m = Metrics::new();
+        m.inc("served");
+        m.observe_s("lat", 0.25);
+        let snap = m.snapshot();
+        assert_eq!(snap.counters, vec![("served".to_string(), 1)]);
+        assert_eq!(snap.latencies.len(), 1);
+        assert_eq!(snap.latencies[0].0, "lat");
+        assert_eq!(snap.latencies[0].1.count, 1);
+    }
+
+    #[test]
+    fn snapshot_under_concurrent_writers_stays_coherent() {
+        let m = std::sync::Arc::new(Metrics::new());
+        // Writers keep `pairs` and the `lat` histogram in lockstep; a
+        // snapshot taken under both locks can only see counter >= count
+        // if counters are bumped after the observe — so bump first and
+        // assert counter <= histogram count from the read side.
+        let mut handles = vec![];
+        for _ in 0..4 {
+            let m = m.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..500 {
+                    m.observe_s("lat", 0.001);
+                    m.inc("pairs");
+                }
+            }));
+        }
+        for _ in 0..50 {
+            let snap = m.snapshot();
+            let pairs = snap
+                .counters
+                .iter()
+                .find(|(k, _)| k == "pairs")
+                .map_or(0, |(_, v)| *v);
+            let lat = snap.latencies.iter().find(|(k, _)| k == "lat").map_or(0, |(_, s)| s.count);
+            assert!(
+                pairs <= lat,
+                "snapshot saw counter {pairs} ahead of histogram {lat}: torn read"
+            );
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let snap = m.snapshot();
+        assert_eq!(snap.counters.iter().find(|(k, _)| k == "pairs").unwrap().1, 2000);
     }
 
     #[test]

@@ -23,6 +23,17 @@
 //! while innocent cohort members are transparently retried
 //! ([`RetryPolicy`]), and the deterministic chaos substrate lives in
 //! [`fault`] (`TOMA_FAULTS`, [`FaultPlan`]).
+//!
+//! Since PR 7 the stack is *observable* (see [`trace`]): an optional
+//! [`Tracer`] threads through both front-ends recording compact spans
+//! (submit, queue wait, formation, select/refresh/step timing, retries,
+//! faults) onto a lock-free ring, exported OTLP-shaped or delta+RLE
+//! binary via `toma-serve serve --trace` / inspected by `toma-serve
+//! trace`; an always-on per-lane EWMA z-score detector
+//! ([`trace::AnomalyDetector`]) watches step latency, queue depth and
+//! retry rate, flagging `lane_degrading` before cumulative p99 moves.
+//! Control loops consume [`AnomalyFlags`] or `scheduler::DecayedTail` —
+//! never the cumulative histograms in [`metrics`] (see its header).
 
 pub mod engine;
 pub mod fault;
@@ -32,11 +43,12 @@ pub mod plan_cache;
 pub mod request;
 pub mod scheduler;
 pub mod server;
+pub mod trace;
 
 pub use engine::Engine;
 pub use fault::{FaultInjector, FaultKind, FaultPlan};
 pub use frontend::{Job, LaneFrontEnd, LaneJob, RetryPolicy, SupervisionPolicy};
-pub use metrics::{LatencySummary, Metrics};
+pub use metrics::{LatencySummary, Metrics, MetricsSnapshot};
 pub use plan_cache::{PlanSlot, PlanStats};
 pub use request::{EngineConfig, GenRequest, GenResult, GenStats};
 pub use scheduler::{
@@ -44,3 +56,4 @@ pub use scheduler::{
     Scheduler,
 };
 pub use server::{Completion, Server};
+pub use trace::{AnomalyDetector, AnomalyFlags, AnomalyPolicy, Span, SpanKind, Tracer};

@@ -18,6 +18,8 @@
 //!   mid-window; survivors keep their slices and the cadence bookkeeping
 //!   (`dest_step` / `weight_step`) is untouched.
 
+use std::time::Instant;
+
 use crate::coordinator::plan_cache::{PlanSlot, PlanStats};
 use crate::coordinator::request::{EngineConfig, GenRequest, GenResult, GenStats};
 use crate::toma::plan::PlanAction;
@@ -85,12 +87,17 @@ pub struct CohortCompletion {
     pub result: Result<GenResult>,
 }
 
-/// What one cohort step did (the lane turns this into metrics).
+/// What one cohort step did (the lane turns this into metrics/spans).
 pub struct StepOutcome {
     /// The shared slot's decision (None for plan-less variants).
     pub action: Option<PlanAction>,
     /// Members that took part in this step.
     pub active_members: usize,
+    /// Seconds spent on shared plan work this step (destination
+    /// selection or weight refresh; 0 on reuse / plan-less variants).
+    pub plan_s: f64,
+    /// Seconds spent in the batched model step (the GEMM work).
+    pub gemm_s: f64,
     pub completions: Vec<CohortCompletion>,
 }
 
@@ -194,13 +201,17 @@ impl Cohort {
             return Ok(StepOutcome {
                 action: None,
                 active_members: 0,
+                plan_s: 0.0,
+                gemm_s: 0.0,
                 completions: vec![],
             });
         }
         let needs_plan = self.backend.cfg().needs_plan();
         let schedule = self.backend.cfg().schedule;
         let mut action = None;
+        let mut plan_s = 0.0;
         if needs_plan {
+            let t_plan = Instant::now();
             let a = self.slot.decide(&schedule, self.cohort_step);
             match a {
                 PlanAction::RefreshAll => {
@@ -222,12 +233,15 @@ impl Cohort {
                 }
             }
             action = Some(a);
+            plan_s = t_plan.elapsed().as_secs_f64();
         }
         let size = self.members.len();
         for m in &mut self.members {
             m.stats.cohort_size = m.stats.cohort_size.max(size);
         }
+        let t_gemm = Instant::now();
         self.backend.step_batch(&mut self.members, &self.slot)?;
+        let gemm_s = t_gemm.elapsed().as_secs_f64();
         for m in &mut self.members {
             m.stats.steps += 1;
         }
@@ -268,6 +282,8 @@ impl Cohort {
         Ok(StepOutcome {
             action,
             active_members: size,
+            plan_s,
+            gemm_s,
             completions,
         })
     }

@@ -38,6 +38,14 @@
 //! flight (enabled via [`Scheduler::with_faults`] or `TOMA_FAULTS`; inert
 //! by default), which is how the chaos suite kills specific cohorts
 //! deterministically.
+//!
+//! Since PR 7 the lane loop is traced ([`Scheduler::with_trace`]):
+//! formation rounds, per-request queue waits, and each cohort step's
+//! select/refresh vs GEMM split are recorded as spans (inert by
+//! default), and every step's latency plus the observed queue depth
+//! feed the front-end's always-on per-lane anomaly detector
+//! ([`Scheduler::anomaly_flags`]) — the leading `lane_degrading`
+//! signal, ahead of the cumulative histograms.
 
 pub mod cohort;
 pub mod host;
@@ -67,6 +75,7 @@ use super::frontend::{
 use super::metrics::Metrics;
 use super::plan_cache::PlanStats;
 use super::request::{EngineConfig, GenRequest, GenResult};
+use super::trace::{AnomalyDetector, AnomalyFlags, Channel, Site, Span, SpanKind, Tracer};
 
 /// Creates the batched backend for a new lane (one lane per engine key).
 pub type BackendFactory = dyn Fn(&EngineConfig) -> Result<Box<dyn CohortBackend>> + Send + Sync;
@@ -96,13 +105,23 @@ impl LaneJob for CohortJob {
         vec![std::thread::Builder::new()
             .name("toma-sched".to_string())
             .spawn(move || {
-                let WorkerCtx { rx, metrics, guard } = ctx;
+                let WorkerCtx { rx, metrics, guard, tracer, anomaly } = ctx;
                 // Safety net around the whole loop: `lane_loop` already
                 // contains panics at its fallible boundaries (init, step),
                 // but a panic anywhere else must still retire the lane
                 // cleanly — reported, queue drained, no dropped senders.
                 let crashed = catch_panic(|| {
-                    lane_loop(&cfg, policy, &factory, &faults, &metrics, &rx, &guard)
+                    lane_loop(
+                        &cfg,
+                        policy,
+                        &factory,
+                        &faults,
+                        &metrics,
+                        &rx,
+                        &guard,
+                        &tracer,
+                        &anomaly,
+                    )
                 });
                 if crashed.is_err() {
                     guard.record_panic(&metrics);
@@ -150,6 +169,27 @@ impl Scheduler {
     pub fn with_supervision(mut self, policy: SupervisionPolicy) -> Scheduler {
         self.front.set_supervision(policy);
         self
+    }
+
+    /// Install an active tracer (builder-time only; lanes spawn lazily,
+    /// so every lane records spans). The default is the inert
+    /// [`Tracer::off`] — the bit-identical serving path.
+    pub fn with_trace(mut self, tracer: Tracer) -> Scheduler {
+        self.front.set_tracer(tracer);
+        self
+    }
+
+    /// The tracing handle (inert unless [`Scheduler::with_trace`]
+    /// installed an active one); drain it to export spans.
+    pub fn tracer(&self) -> &Tracer {
+        self.front.tracer()
+    }
+
+    /// Lanes currently flagged as degrading by the always-on per-lane
+    /// anomaly detector — the programmatic health signal control loops
+    /// consume (never the cumulative histograms).
+    pub fn anomaly_flags(&self) -> AnomalyFlags {
+        self.front.anomaly().flags()
     }
 
     /// The unified lane front-end (shared test harness + introspection).
@@ -263,6 +303,7 @@ fn observed_tail(adaptive: bool, tail: &DecayedTail, epoch: Instant) -> Option<f
 /// continuously. The loop blocks only while completely idle. The active
 /// [`LanePolicy`] derives each round's formation window and batch cap —
 /// statically, or from the observed arrival gap and served p99.
+#[allow(clippy::too_many_arguments)]
 fn lane_loop(
     cfg: &EngineConfig,
     policy: LanePolicy,
@@ -271,11 +312,17 @@ fn lane_loop(
     metrics: &Metrics,
     rx: &Receiver<Job>,
     guard: &LaneGuard,
+    tracer: &Tracer,
+    anomaly: &AnomalyDetector,
 ) {
     // Epoch before backend init: requests queued while a slow factory
     // (e.g. a compiling PJRT backend) boots must keep their real arrival
     // offsets, not collapse to "all at once" and fake a burst.
     let epoch = Instant::now();
+    // Span identity for every record below; the detector keys on the
+    // readable lane key, spans on its stable hash.
+    let lane = guard.lane();
+    let lane_key = cfg.key();
     // Init behind the unwind boundary: a panicking factory is a lane
     // death (reported, queue drained), not an unwinding thread.
     let built = catch_panic(|| factory(cfg));
@@ -330,6 +377,7 @@ fn lane_loop(
                 }
                 Err(_) => break,
             }
+            let form_start_us = tracer.now_us();
             let f = policy.formation(&est, observed_tail(adaptive, &tail, epoch));
             let window_s = f.window_s.clamp(0.0, BatchPolicy::MAX_QUEUE_WAIT_S);
             let window = Duration::from_secs_f64(window_s);
@@ -357,6 +405,27 @@ fn lane_loop(
                     }
                 }
             }
+            if tracer.enabled() {
+                // One formation round: first arrival to window close; the
+                // id carries how many companions the window gathered.
+                tracer.record_since(
+                    Site::Scheduler,
+                    SpanKind::Formation,
+                    lane,
+                    pending.len() as u64,
+                    cohort.cohort_step() as u32,
+                    form_start_us,
+                );
+            }
+            // Queue depth at formation close — one of the detector's
+            // leading channels (a backing-up lane deepens before it
+            // slows).
+            anomaly.observe_with_metrics(
+                &lane_key,
+                Channel::QueueDepth,
+                pending.len() as f64,
+                metrics,
+            );
         } else if open {
             // Mid-flight: drain the channel into `pending` (bounded by
             // queue_depth) so the deadline shed below sees every waiting
@@ -416,6 +485,22 @@ fn lane_loop(
             let job = pending.pop_front().expect("non-empty");
             let queued_s = job.queued_s();
             metrics.observe_s("queue_wait", queued_s);
+            if tracer.enabled() {
+                // Queue wait ends at admission: the span closes before the
+                // step it joins, so the inspector can subtract wait from
+                // the step's critical path.
+                let waited_us = (queued_s * 1e6) as u64;
+                let now_us = tracer.now_us();
+                tracer.record(Span {
+                    site: Site::Scheduler,
+                    kind: SpanKind::QueueWait,
+                    lane,
+                    id: job.request.seed,
+                    step: cohort.cohort_step() as u32,
+                    start_us: now_us.saturating_sub(waited_us),
+                    dur_us: waited_us,
+                });
+            }
             // A join into a cohort that already stepped is a mid-flight
             // join; formation-batch admits (cohort_step 0) are not.
             let mid_flight = cohort.cohort_step() > 0 && !cohort.is_empty();
@@ -459,9 +544,11 @@ fn lane_loop(
         // completions and retires the lane — innocents are re-run
         // bit-identically by the submit-side retry layer.
         let t0 = Instant::now();
+        let t0_us = tracer.now_us();
+        let step_no = cohort.cohort_step() as u32;
         let seeds = cohort.member_seeds();
         let stepped = catch_panic(|| {
-            faults.fire("scheduler.step", &seeds, Some(metrics))?;
+            faults.fire_traced("scheduler.step", &seeds, Some(metrics), tracer, lane)?;
             cohort.step()
         });
         match stepped {
@@ -499,7 +586,46 @@ fn lane_loop(
                     }
                     metrics.record_plan_stats("cohort", &delta);
                 }
-                metrics.observe_s("cohort_step_time", t0.elapsed().as_secs_f64());
+                let step_s = t0.elapsed().as_secs_f64();
+                metrics.observe_s("cohort_step_time", step_s);
+                if tracer.enabled() {
+                    // The per-step critical path: plan work (select or
+                    // weight refresh; skipped on reuse) then the batched
+                    // GEMM step, laid out back-to-back from the step's
+                    // start offset. The id carries the cohort size.
+                    let plan_us = (out.plan_s * 1e6) as u64;
+                    let gemm_us = (out.gemm_s * 1e6) as u64;
+                    let members = out.active_members as u64;
+                    let plan_kind = match out.action {
+                        Some(PlanAction::RefreshAll) => Some(SpanKind::Select),
+                        Some(PlanAction::RefreshWeights) => Some(SpanKind::Refresh),
+                        _ => None,
+                    };
+                    if let Some(kind) = plan_kind {
+                        tracer.record(Span {
+                            site: Site::Scheduler,
+                            kind,
+                            lane,
+                            id: members,
+                            step: step_no,
+                            start_us: t0_us,
+                            dur_us: plan_us,
+                        });
+                    }
+                    tracer.record(Span {
+                        site: Site::Scheduler,
+                        kind: SpanKind::Step,
+                        lane,
+                        id: members,
+                        step: step_no,
+                        start_us: t0_us + plan_us,
+                        dur_us: gemm_us,
+                    });
+                }
+                // Step latency is the detector's primary channel: a lane
+                // whose steps slow down flags `lane_degrading` while the
+                // cumulative histograms still average it away.
+                anomaly.observe_with_metrics(&lane_key, Channel::StepLatency, step_s, metrics);
                 for mut c in out.completions {
                     let Some(meta) = inflight.remove(&c.tag) else {
                         continue;

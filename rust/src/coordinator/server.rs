@@ -27,6 +27,13 @@
 //! every dequeue at site `server.step` (enabled via
 //! [`Server::with_faults`] or `TOMA_FAULTS`; inert by default), including
 //! on init-failed lanes, so chaos scenarios run artifact-free.
+//!
+//! Since PR 7 the drain loop is traced ([`Server::with_trace`]): each
+//! request's queue wait, its engine serve (with the select share split
+//! out of the serve span), and injected faults are recorded as spans
+//! (inert by default), and per-request service latency feeds the
+//! front-end's always-on per-lane anomaly detector
+//! ([`Server::anomaly_flags`]).
 
 use std::path::PathBuf;
 use std::sync::mpsc::Receiver;
@@ -46,6 +53,7 @@ use super::frontend::{
 };
 use super::metrics::Metrics;
 use super::request::{EngineConfig, GenRequest, GenResult};
+use super::trace::{AnomalyFlags, Channel, Site, Span, SpanKind, Tracer};
 use crate::runtime::Runtime;
 
 pub use super::frontend::Completion;
@@ -76,13 +84,15 @@ impl LaneJob for EngineJob {
     }
 
     fn spawn_workers(&self, cfg: &EngineConfig, ctx: WorkerCtx) -> Vec<JoinHandle<()>> {
-        let WorkerCtx { rx, metrics, guard } = ctx;
+        let WorkerCtx { rx, metrics, guard, tracer, anomaly } = ctx;
         let rx = Arc::new(Mutex::new(rx));
         let mut handles = vec![];
         for w in 0..self.workers_per_lane {
             let rx: Arc<Mutex<Receiver<Job>>> = rx.clone();
             let metrics = metrics.clone();
             let guard = guard.clone();
+            let tracer = tracer.clone();
+            let anomaly = anomaly.clone();
             let cfg = cfg.clone();
             let factory = self.factory.clone();
             let faults = self.faults.clone();
@@ -92,6 +102,10 @@ impl LaneJob for EngineJob {
                 std::thread::Builder::new()
                     .name(name)
                     .spawn(move || {
+                        // Span identity: spans key on the lane hash, the
+                        // detector on the readable lane key.
+                        let lane = guard.lane();
+                        let lane_key = cfg.key();
                         // A panicking worker on its way out: report the
                         // death and, if it holds the last living clone of
                         // the queue, fail what is still buffered so no
@@ -131,10 +145,12 @@ impl LaneJob for EngineJob {
                                         continue;
                                     };
                                     let probed = catch_panic(|| {
-                                        faults.fire(
+                                        faults.fire_traced(
                                             "server.step",
                                             &[job.request.seed],
                                             Some(&metrics),
+                                            &tracer,
+                                            lane,
                                         )
                                     });
                                     match probed {
@@ -182,14 +198,36 @@ impl LaneJob for EngineJob {
                             };
                             let queued_s = job.queued_s();
                             metrics.observe_s("queue_wait", queued_s);
+                            if tracer.enabled() {
+                                // Queue wait ends at dequeue, just before
+                                // the serve span opens.
+                                let waited_us = (queued_s * 1e6) as u64;
+                                let now_us = tracer.now_us();
+                                tracer.record(Span {
+                                    site: Site::Server,
+                                    kind: SpanKind::QueueWait,
+                                    lane,
+                                    id: job.request.seed,
+                                    step: 0,
+                                    start_us: now_us.saturating_sub(waited_us),
+                                    dur_us: waited_us,
+                                });
+                            }
                             // The completion sender stays *outside* the
                             // unwind boundary: a panicking serve answers
                             // with a LANE_DEATH completion instead of
                             // dropping the sender mid-unwind.
                             let Job { request, done, .. } = job;
                             let t0 = Instant::now();
+                            let t0_us = tracer.now_us();
                             let outcome = catch_panic(|| {
-                                faults.fire("server.step", &[request.seed], Some(&metrics))?;
+                                faults.fire_traced(
+                                    "server.step",
+                                    &[request.seed],
+                                    Some(&metrics),
+                                    &tracer,
+                                    lane,
+                                )?;
                                 engine.generate(&request)
                             });
                             let service_s = t0.elapsed().as_secs_f64();
@@ -207,6 +245,43 @@ impl LaneJob for EngineJob {
                                         metrics.add("plan_reuses", r.stats.plan_reuses as u64);
                                         metrics.add("select_calls", r.stats.select_calls as u64);
                                     }
+                                    if tracer.enabled() {
+                                        // The serve span covers the whole
+                                        // engine run; the select share is
+                                        // split out so the inspector can
+                                        // show select vs GEMM per request.
+                                        if let Ok(r) = &result {
+                                            let select_us = (r.stats.select_s * 1e6) as u64;
+                                            if select_us > 0 {
+                                                tracer.record(Span {
+                                                    site: Site::Server,
+                                                    kind: SpanKind::Select,
+                                                    lane,
+                                                    id: request.seed,
+                                                    step: 0,
+                                                    start_us: t0_us,
+                                                    dur_us: select_us,
+                                                });
+                                            }
+                                        }
+                                        tracer.record(Span {
+                                            site: Site::Server,
+                                            kind: SpanKind::Step,
+                                            lane,
+                                            id: request.seed,
+                                            step: 0,
+                                            start_us: t0_us,
+                                            dur_us: (service_s * 1e6) as u64,
+                                        });
+                                    }
+                                    // Per-request service latency is this
+                                    // job's step-latency stream.
+                                    anomaly.observe_with_metrics(
+                                        &lane_key,
+                                        Channel::StepLatency,
+                                        service_s,
+                                        &metrics,
+                                    );
                                     let _ = done.send(Completion {
                                         request,
                                         result,
@@ -307,6 +382,27 @@ impl Server {
     pub fn with_supervision(mut self, policy: SupervisionPolicy) -> Server {
         self.front.set_supervision(policy);
         self
+    }
+
+    /// Install an active tracer (builder-time only; lanes spawn lazily,
+    /// so every lane records spans). The default is the inert
+    /// [`Tracer::off`] — the bit-identical serving path.
+    pub fn with_trace(mut self, tracer: Tracer) -> Server {
+        self.front.set_tracer(tracer);
+        self
+    }
+
+    /// The tracing handle (inert unless [`Server::with_trace`] installed
+    /// an active one); drain it to export spans.
+    pub fn tracer(&self) -> &Tracer {
+        self.front.tracer()
+    }
+
+    /// Lanes currently flagged as degrading by the always-on per-lane
+    /// anomaly detector — the programmatic health signal control loops
+    /// consume (never the cumulative histograms).
+    pub fn anomaly_flags(&self) -> AnomalyFlags {
+        self.front.anomaly().flags()
     }
 
     /// The unified lane front-end (shared test harness + introspection).

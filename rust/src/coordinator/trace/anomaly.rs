@@ -1,0 +1,361 @@
+//! Online per-lane anomaly detection: EWMA mean/variance z-score over
+//! the per-lane step-latency stream, plus queue-depth and retry-rate
+//! channels.
+//!
+//! The detector is the *leading* health signal: cumulative histograms
+//! (`Metrics::quantile_s`) move only after minutes of damage is already
+//! in the books, while the per-lane `DecayedTail` reservoir and this
+//! detector see each served step as it happens. A lane is flagged
+//! `lane_degrading` after [`AnomalyPolicy::consecutive`] observations
+//! breach the z-threshold on any channel, and the flag clears once every
+//! channel calms down — both transitions are counted into [`Metrics`]
+//! (`lane_degrading` / `lane_recovered`) and exposed programmatically as
+//! [`AnomalyFlags`], which the future cross-lane formation controller
+//! and the distributed tier's health checks consume. **Do not build new
+//! control loops on cumulative histograms** — consume `AnomalyFlags` or
+//! `DecayedTail`, which decay; see `coordinator::metrics`.
+//!
+//! Everything is observation-driven: `observe` takes explicit values,
+//! never reads a clock, so tests drive the detector with synthetic
+//! streams (e.g. replaying a `FaultPlan`) fully deterministically —
+//! the same offset discipline as `scheduler::DecayedTail`.
+//!
+//! EWMA updates are *robust*: once armed (past warmup), samples that
+//! breach the threshold are **not** folded into mean/variance, so a
+//! degrading lane cannot drag its own baseline up and mask itself.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::sync::Mutex;
+
+use crate::coordinator::metrics::Metrics;
+use crate::util::lock_unpoisoned;
+
+/// Signal channels tracked independently per lane.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Channel {
+    /// Seconds per cohort/engine step (the `DecayedTail` stream).
+    StepLatency = 0,
+    /// Jobs waiting when a formation round closed / a worker dequeued.
+    QueueDepth = 1,
+    /// 0/1 stream: was this completion a retry/respawn event?
+    RetryRate = 2,
+}
+
+pub const CHANNEL_COUNT: usize = 3;
+
+impl Channel {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Channel::StepLatency => "step-latency",
+            Channel::QueueDepth => "queue-depth",
+            Channel::RetryRate => "retry-rate",
+        }
+    }
+}
+
+/// Detector tuning. Defaults are deliberately conservative: a lane must
+/// breach 4 sigma on three consecutive observations before flagging.
+#[derive(Clone, Copy, Debug)]
+pub struct AnomalyPolicy {
+    /// EWMA weight for mean/variance updates.
+    pub alpha: f64,
+    /// One-sided z-score breach threshold (high side only: slow steps,
+    /// deep queues, and retries are anomalies; fast/empty never is).
+    pub z_threshold: f64,
+    /// Observations per channel before the detector arms.
+    pub warmup: u32,
+    /// Consecutive breaches to raise the flag; consecutive normal
+    /// observations (on some channel, with all channels calm) to clear.
+    pub consecutive: u32,
+    /// Variance floor as a fraction of the mean, so a perfectly steady
+    /// baseline (variance zero) still yields finite z-scores.
+    pub sigma_floor_frac: f64,
+}
+
+impl Default for AnomalyPolicy {
+    fn default() -> Self {
+        AnomalyPolicy {
+            alpha: 0.1,
+            z_threshold: 4.0,
+            warmup: 16,
+            consecutive: 3,
+            sigma_floor_frac: 0.1,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Default)]
+struct ChannelState {
+    mean: f64,
+    var: f64,
+    count: u64,
+    breaches: u32,
+    normals: u32,
+}
+
+#[derive(Default)]
+struct LaneState {
+    channels: [ChannelState; CHANNEL_COUNT],
+    degrading: bool,
+}
+
+/// Snapshot of currently-flagged lanes — the programmatic trigger for
+/// the cross-lane controller and distributed health checks.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct AnomalyFlags {
+    /// Sorted keys of lanes currently flagged as degrading.
+    pub lanes: Vec<String>,
+}
+
+impl AnomalyFlags {
+    pub fn is_empty(&self) -> bool {
+        self.lanes.is_empty()
+    }
+
+    pub fn contains(&self, lane: &str) -> bool {
+        self.lanes.iter().any(|l| l == lane)
+    }
+}
+
+struct Inner {
+    policy: AnomalyPolicy,
+    lanes: Mutex<BTreeMap<String, LaneState>>,
+}
+
+/// Shared online detector; cheap to clone (one `Arc`), one mutexed map
+/// update per observation — observations happen per cohort step / per
+/// request completion, never per token, so this is far off the GEMM
+/// hot path.
+#[derive(Clone)]
+pub struct AnomalyDetector {
+    inner: Arc<Inner>,
+}
+
+impl Default for AnomalyDetector {
+    fn default() -> Self {
+        AnomalyDetector::new(AnomalyPolicy::default())
+    }
+}
+
+impl AnomalyDetector {
+    pub fn new(policy: AnomalyPolicy) -> Self {
+        AnomalyDetector {
+            inner: Arc::new(Inner {
+                policy,
+                lanes: Mutex::new(BTreeMap::new()),
+            }),
+        }
+    }
+
+    pub fn policy(&self) -> AnomalyPolicy {
+        self.inner.policy
+    }
+
+    /// Feed one observation. Returns `Some(true)` when this observation
+    /// raised the lane's degrading flag, `Some(false)` when it cleared
+    /// it, `None` on no transition.
+    pub fn observe(&self, lane: &str, channel: Channel, value: f64) -> Option<bool> {
+        let p = self.inner.policy;
+        let mut lanes = lock_unpoisoned(&self.inner.lanes);
+        let st = match lanes.get_mut(lane) {
+            Some(st) => st,
+            // Allocates the lane key once per lane lifetime, not per call.
+            None => lanes.entry(lane.to_string()).or_default(),
+        };
+        let cs = &mut st.channels[channel as usize];
+        cs.count += 1;
+        if cs.count == 1 {
+            cs.mean = value;
+            cs.var = 0.0;
+            return None;
+        }
+        let diff = value - cs.mean;
+        let sigma = cs.var.sqrt().max(p.sigma_floor_frac * cs.mean.abs()).max(1e-12);
+        let armed = cs.count > p.warmup as u64;
+        if armed && diff / sigma > p.z_threshold {
+            cs.breaches += 1;
+            cs.normals = 0;
+            // Robust EWMA: anomalous samples are not learned.
+        } else {
+            cs.breaches = 0;
+            cs.normals = cs.normals.saturating_add(1);
+            let incr = p.alpha * diff;
+            cs.mean += incr;
+            cs.var = (1.0 - p.alpha) * (cs.var + diff * incr);
+        }
+        let was = st.degrading;
+        let breached = st.channels.iter().any(|c| c.breaches >= p.consecutive);
+        if !was && breached {
+            st.degrading = true;
+            return Some(true);
+        }
+        let calm = st.channels.iter().all(|c| c.breaches == 0);
+        let settled = st.channels.iter().any(|c| c.normals >= p.consecutive);
+        if was && calm && settled {
+            st.degrading = false;
+            return Some(false);
+        }
+        None
+    }
+
+    /// [`AnomalyDetector::observe`], counting flag transitions into the
+    /// metrics registry (`lane_degrading` / `lane_recovered`).
+    pub fn observe_with_metrics(
+        &self,
+        lane: &str,
+        channel: Channel,
+        value: f64,
+        metrics: &Metrics,
+    ) {
+        match self.observe(lane, channel, value) {
+            Some(true) => metrics.inc("lane_degrading"),
+            Some(false) => metrics.inc("lane_recovered"),
+            None => {}
+        }
+    }
+
+    pub fn is_degrading(&self, lane: &str) -> bool {
+        lock_unpoisoned(&self.inner.lanes).get(lane).is_some_and(|st| st.degrading)
+    }
+
+    /// Snapshot of currently-flagged lanes (sorted by lane key).
+    pub fn flags(&self) -> AnomalyFlags {
+        let lanes = lock_unpoisoned(&self.inner.lanes);
+        AnomalyFlags {
+            lanes: lanes
+                .iter()
+                .filter(|(_, st)| st.degrading)
+                .map(|(k, _)| k.clone())
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_policy() -> AnomalyPolicy {
+        AnomalyPolicy {
+            warmup: 8,
+            consecutive: 3,
+            ..AnomalyPolicy::default()
+        }
+    }
+
+    /// Feed `n` baseline observations with a deterministic ±5% jitter.
+    fn warm(d: &AnomalyDetector, lane: &str, ch: Channel, base: f64, n: usize) {
+        for i in 0..n {
+            let jitter = 1.0 + 0.05 * if i % 2 == 0 { 1.0 } else { -1.0 };
+            assert_eq!(d.observe(lane, ch, base * jitter), None, "baseline must not flag");
+        }
+    }
+
+    #[test]
+    fn spike_flags_after_consecutive_breaches() {
+        let d = AnomalyDetector::new(fast_policy());
+        warm(&d, "lane-a", Channel::StepLatency, 0.001, 32);
+        // 20x latency: two breaches are not enough, the third flips it.
+        assert_eq!(d.observe("lane-a", Channel::StepLatency, 0.02), None);
+        assert_eq!(d.observe("lane-a", Channel::StepLatency, 0.02), None);
+        assert_eq!(d.observe("lane-a", Channel::StepLatency, 0.02), Some(true));
+        assert!(d.is_degrading("lane-a"));
+        assert_eq!(d.flags().lanes, vec!["lane-a".to_string()]);
+    }
+
+    #[test]
+    fn spike_during_warmup_does_not_flag() {
+        let d = AnomalyDetector::new(fast_policy());
+        for _ in 0..4 {
+            assert_eq!(d.observe("lane-a", Channel::StepLatency, 0.001), None);
+        }
+        assert_eq!(d.observe("lane-a", Channel::StepLatency, 0.05), None);
+        assert!(!d.is_degrading("lane-a"));
+    }
+
+    #[test]
+    fn steady_baseline_with_zero_variance_still_detects() {
+        let d = AnomalyDetector::new(fast_policy());
+        for _ in 0..32 {
+            d.observe("lane-a", Channel::QueueDepth, 4.0);
+        }
+        for _ in 0..2 {
+            assert_eq!(d.observe("lane-a", Channel::QueueDepth, 64.0), None);
+        }
+        assert_eq!(d.observe("lane-a", Channel::QueueDepth, 64.0), Some(true));
+    }
+
+    #[test]
+    fn jitter_does_not_flag() {
+        let d = AnomalyDetector::new(fast_policy());
+        warm(&d, "lane-a", Channel::StepLatency, 0.001, 200);
+        assert!(!d.is_degrading("lane-a"));
+        assert!(d.flags().is_empty());
+    }
+
+    #[test]
+    fn flag_is_per_lane_and_per_channel() {
+        let d = AnomalyDetector::new(fast_policy());
+        warm(&d, "lane-a", Channel::StepLatency, 0.001, 32);
+        warm(&d, "lane-b", Channel::StepLatency, 0.001, 32);
+        for _ in 0..5 {
+            d.observe("lane-a", Channel::StepLatency, 0.02);
+        }
+        assert!(d.is_degrading("lane-a"));
+        assert!(!d.is_degrading("lane-b"), "healthy lane must stay unflagged");
+        let flags = d.flags();
+        assert!(flags.contains("lane-a") && !flags.contains("lane-b"));
+    }
+
+    #[test]
+    fn recovery_clears_flag() {
+        let d = AnomalyDetector::new(fast_policy());
+        warm(&d, "lane-a", Channel::StepLatency, 0.001, 32);
+        for _ in 0..5 {
+            d.observe("lane-a", Channel::StepLatency, 0.02);
+        }
+        assert!(d.is_degrading("lane-a"));
+        let mut cleared = None;
+        for _ in 0..8 {
+            if let Some(false) = d.observe("lane-a", Channel::StepLatency, 0.001) {
+                cleared = Some(false);
+                break;
+            }
+        }
+        assert_eq!(cleared, Some(false), "flag must clear after calm observations");
+        assert!(!d.is_degrading("lane-a"));
+        assert!(d.flags().is_empty());
+    }
+
+    #[test]
+    fn baseline_is_not_dragged_by_anomalies() {
+        // Sustained 20x degradation must keep breaching: robust EWMA
+        // refuses to learn the anomalous level as the new normal.
+        let d = AnomalyDetector::new(fast_policy());
+        warm(&d, "lane-a", Channel::StepLatency, 0.001, 32);
+        for _ in 0..5 {
+            d.observe("lane-a", Channel::StepLatency, 0.02);
+        }
+        assert!(d.is_degrading("lane-a"));
+        for _ in 0..100 {
+            d.observe("lane-a", Channel::StepLatency, 0.02);
+        }
+        assert!(d.is_degrading("lane-a"), "sustained anomaly must stay flagged");
+    }
+
+    #[test]
+    fn transitions_count_into_metrics() {
+        let m = Metrics::new();
+        let d = AnomalyDetector::new(fast_policy());
+        warm(&d, "lane-a", Channel::StepLatency, 0.001, 32);
+        for _ in 0..5 {
+            d.observe_with_metrics("lane-a", Channel::StepLatency, 0.02, &m);
+        }
+        assert_eq!(m.counter("lane_degrading"), 1, "one transition, one count");
+        for _ in 0..8 {
+            d.observe_with_metrics("lane-a", Channel::StepLatency, 0.001, &m);
+        }
+        assert_eq!(m.counter("lane_recovered"), 1);
+    }
+}

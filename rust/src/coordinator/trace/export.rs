@@ -1,0 +1,589 @@
+//! Trace export: OTLP-shaped JSON and a delta+RLE-compressed binary
+//! form, plus the per-lane step-time breakdown behind `toma-serve trace`.
+//!
+//! Same zero-dependency serialization discipline as `runtime/artifact.rs`:
+//! hand-rolled writers, `util::json` for parsing, descriptive errors, and
+//! round-trip tests pinning both formats. 64-bit fields are emitted as
+//! JSON *strings* (OTLP convention — JSON numbers are lossy past 2^53);
+//! lane hashes render as fixed-width hex.
+//!
+//! The binary layout is columnar: per-field columns over the span list,
+//! run-length encoded where values repeat (site/kind/lane — traces are
+//! dominated by long same-lane runs) and zigzag-delta varint encoded
+//! where values are near-monotonic (id/step/start offsets). A typical
+//! serving trace compresses ~10x against its OTLP JSON rendering.
+
+use std::collections::BTreeMap;
+
+use super::span::{Site, Span, SpanKind};
+use crate::report::{fmt_secs, Table};
+use crate::util::error::Result;
+use crate::util::json::Json;
+
+/// Binary trace magic: format version bumps the trailing digits.
+pub const MAGIC: &[u8; 8] = b"TOMATR01";
+
+// ---------------------------------------------------------------------
+// varint / zigzag primitives
+// ---------------------------------------------------------------------
+
+fn put_varint(out: &mut Vec<u8>, mut v: u64) {
+    while v >= 0x80 {
+        out.push((v as u8) | 0x80);
+        v >>= 7;
+    }
+    out.push(v as u8);
+}
+
+fn get_varint(buf: &[u8], pos: &mut usize) -> Result<u64> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let b = *buf
+            .get(*pos)
+            .ok_or_else(|| crate::anyhow!("trace binary truncated in varint at byte {}", *pos))?;
+        *pos += 1;
+        crate::ensure!(shift < 64, "trace binary varint overflows u64 at byte {}", *pos);
+        v |= ((b & 0x7f) as u64) << shift;
+        if b & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+    }
+}
+
+fn zigzag(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+fn unzigzag(v: u64) -> i64 {
+    ((v >> 1) as i64) ^ -((v & 1) as i64)
+}
+
+// ---------------------------------------------------------------------
+// columns
+// ---------------------------------------------------------------------
+
+/// RLE column: (run length, value) pairs until `n` values are covered.
+fn put_rle(out: &mut Vec<u8>, values: impl Iterator<Item = u64>) {
+    let mut run: Option<(u64, u64)> = None;
+    for v in values {
+        match run {
+            Some((rv, n)) if rv == v => run = Some((rv, n + 1)),
+            Some((rv, n)) => {
+                put_varint(out, n);
+                put_varint(out, rv);
+                run = Some((v, 1));
+            }
+            None => run = Some((v, 1)),
+        }
+    }
+    if let Some((rv, n)) = run {
+        put_varint(out, n);
+        put_varint(out, rv);
+    }
+}
+
+fn get_rle(buf: &[u8], pos: &mut usize, n: usize) -> Result<Vec<u64>> {
+    let mut out = Vec::with_capacity(n);
+    while out.len() < n {
+        let run = get_varint(buf, pos)?;
+        let v = get_varint(buf, pos)?;
+        crate::ensure!(
+            run >= 1 && out.len() + run as usize <= n,
+            "trace binary RLE run of {run} overflows column of {n}"
+        );
+        out.extend(std::iter::repeat(v).take(run as usize));
+    }
+    Ok(out)
+}
+
+/// Delta column: zigzag varint of successive differences.
+fn put_delta(out: &mut Vec<u8>, values: impl Iterator<Item = u64>) {
+    let mut prev = 0i64;
+    for v in values {
+        let v = v as i64;
+        put_varint(out, zigzag(v.wrapping_sub(prev)));
+        prev = v;
+    }
+}
+
+fn get_delta(buf: &[u8], pos: &mut usize, n: usize) -> Result<Vec<u64>> {
+    let mut out = Vec::with_capacity(n);
+    let mut prev = 0i64;
+    for _ in 0..n {
+        prev = prev.wrapping_add(unzigzag(get_varint(buf, pos)?));
+        out.push(prev as u64);
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------
+// binary format
+// ---------------------------------------------------------------------
+
+/// Serialize spans (+ the dropped-span count) into the compressed
+/// columnar binary form.
+pub fn encode_binary(spans: &[Span], dropped: u64) -> Vec<u8> {
+    let mut out = Vec::with_capacity(16 + spans.len() * 4);
+    out.extend_from_slice(MAGIC);
+    put_varint(&mut out, spans.len() as u64);
+    put_varint(&mut out, dropped);
+    put_rle(&mut out, spans.iter().map(|s| s.site as u64));
+    put_rle(&mut out, spans.iter().map(|s| s.kind as u64));
+    put_rle(&mut out, spans.iter().map(|s| s.lane));
+    put_delta(&mut out, spans.iter().map(|s| s.id));
+    put_delta(&mut out, spans.iter().map(|s| s.step as u64));
+    put_delta(&mut out, spans.iter().map(|s| s.start_us));
+    put_delta(&mut out, spans.iter().map(|s| s.dur_us));
+    out
+}
+
+/// Inverse of [`encode_binary`]. Returns `(spans, dropped)`.
+pub fn decode_binary(buf: &[u8]) -> Result<(Vec<Span>, u64)> {
+    crate::ensure!(
+        buf.len() >= MAGIC.len() && &buf[..MAGIC.len()] == MAGIC,
+        "not a ToMA binary trace: expected magic {:?}",
+        std::str::from_utf8(MAGIC).unwrap()
+    );
+    let mut pos = MAGIC.len();
+    let n = get_varint(buf, &mut pos)? as usize;
+    let dropped = get_varint(buf, &mut pos)?;
+    let sites = get_rle(buf, &mut pos, n)?;
+    let kinds = get_rle(buf, &mut pos, n)?;
+    let lanes = get_rle(buf, &mut pos, n)?;
+    let ids = get_delta(buf, &mut pos, n)?;
+    let steps = get_delta(buf, &mut pos, n)?;
+    let starts = get_delta(buf, &mut pos, n)?;
+    let durs = get_delta(buf, &mut pos, n)?;
+    let mut spans = Vec::with_capacity(n);
+    for i in 0..n {
+        let site = Site::from_u8(sites[i] as u8)
+            .ok_or_else(|| crate::anyhow!("trace binary: invalid site byte {}", sites[i]))?;
+        let kind = SpanKind::from_u8(kinds[i] as u8)
+            .ok_or_else(|| crate::anyhow!("trace binary: invalid kind byte {}", kinds[i]))?;
+        spans.push(Span {
+            site,
+            kind,
+            lane: lanes[i],
+            id: ids[i],
+            step: steps[i] as u32,
+            start_us: starts[i],
+            dur_us: durs[i],
+        });
+    }
+    Ok((spans, dropped))
+}
+
+// ---------------------------------------------------------------------
+// OTLP-shaped JSON
+// ---------------------------------------------------------------------
+
+fn push_attr_str(out: &mut String, key: &str, value: &str, last: bool) {
+    out.push_str(&format!(
+        "{{\"key\": \"{key}\", \"value\": {{\"stringValue\": \"{value}\"}}}}{}",
+        if last { "" } else { ", " }
+    ));
+}
+
+fn push_attr_int(out: &mut String, key: &str, value: u64, last: bool) {
+    // OTLP JSON renders 64-bit ints as strings.
+    out.push_str(&format!(
+        "{{\"key\": \"{key}\", \"value\": {{\"intValue\": \"{value}\"}}}}{}",
+        if last { "" } else { ", " }
+    ));
+}
+
+/// Serialize spans into an OTLP-shaped JSON document (one resource, one
+/// scope, one span entry per record; ToMA fields ride as attributes).
+pub fn encode_json(spans: &[Span], dropped: u64) -> String {
+    let mut rows = Vec::with_capacity(spans.len());
+    for (i, s) in spans.iter().enumerate() {
+        let mut attrs = String::new();
+        push_attr_str(&mut attrs, "toma.site", s.site.as_str(), false);
+        push_attr_str(&mut attrs, "toma.lane", &format!("{:016x}", s.lane), false);
+        push_attr_int(&mut attrs, "toma.id", s.id, false);
+        push_attr_int(&mut attrs, "toma.step", s.step as u64, true);
+        rows.push(format!(
+            "        {{\"name\": \"{name}\", \"traceId\": \"{lane:016x}{lane:016x}\", \
+             \"spanId\": \"{sid:016x}\", \"startTimeUnixNano\": \"{start}\", \
+             \"endTimeUnixNano\": \"{end}\", \"attributes\": [{attrs}]}}",
+            name = s.kind.as_str(),
+            lane = s.lane,
+            sid = i as u64 + 1,
+            start = s.start_us.saturating_mul(1000),
+            end = s.end_us().saturating_mul(1000),
+        ));
+    }
+    format!(
+        "{{\"resourceSpans\": [{{\
+         \"resource\": {{\"attributes\": [{{\"key\": \"service.name\", \
+         \"value\": {{\"stringValue\": \"toma-serve\"}}}}]}}, \
+         \"scopeSpans\": [{{\"scope\": {{\"name\": \"toma.coordinator\"}}, \"spans\": [\n{}\n\
+         ]}}]}}], \"droppedSpans\": \"{}\"}}\n",
+        rows.join(",\n"),
+        dropped
+    )
+}
+
+fn attr_map(span: &Json) -> BTreeMap<String, String> {
+    let mut out = BTreeMap::new();
+    let Some(attrs) = span.get("attributes").and_then(|a| a.as_arr()) else {
+        return out;
+    };
+    for a in attrs {
+        let Some(key) = a.get("key").and_then(|k| k.as_str()) else {
+            continue;
+        };
+        let Some(value) = a.get("value") else { continue };
+        let v = value
+            .get("stringValue")
+            .and_then(|v| v.as_str())
+            .map(str::to_string)
+            .or_else(|| value.get("intValue").and_then(|v| v.as_str()).map(str::to_string));
+        if let Some(v) = v {
+            out.insert(key.to_string(), v);
+        }
+    }
+    out
+}
+
+fn parse_u64(field: &str, v: &str) -> Result<u64> {
+    v.parse::<u64>().map_err(|e| crate::anyhow!("trace JSON: bad {field} {v:?}: {e}"))
+}
+
+/// Inverse of [`encode_json`]. Returns `(spans, dropped)`.
+pub fn decode_json(text: &str) -> Result<(Vec<Span>, u64)> {
+    let doc = Json::parse(text)?;
+    let dropped = match doc.get("droppedSpans") {
+        Some(d) => match d.as_str() {
+            Some(s) => parse_u64("droppedSpans", s)?,
+            None => d.as_f64().unwrap_or(0.0) as u64,
+        },
+        None => 0,
+    };
+    let mut spans = Vec::new();
+    let resources = doc
+        .get("resourceSpans")
+        .and_then(|r| r.as_arr())
+        .ok_or_else(|| crate::anyhow!("trace JSON: missing resourceSpans array"))?;
+    for res in resources {
+        let scopes = res
+            .get("scopeSpans")
+            .and_then(|s| s.as_arr())
+            .ok_or_else(|| crate::anyhow!("trace JSON: missing scopeSpans array"))?;
+        for scope in scopes {
+            let rows = scope
+                .get("spans")
+                .and_then(|s| s.as_arr())
+                .ok_or_else(|| crate::anyhow!("trace JSON: missing spans array"))?;
+            for row in rows {
+                let name = row
+                    .get("name")
+                    .and_then(|n| n.as_str())
+                    .ok_or_else(|| crate::anyhow!("trace JSON: span without name"))?;
+                let kind = SpanKind::parse(name)
+                    .ok_or_else(|| crate::anyhow!("trace JSON: unknown span kind {name:?}"))?;
+                let attrs = attr_map(row);
+                let site_s = attrs
+                    .get("toma.site")
+                    .ok_or_else(|| crate::anyhow!("trace JSON: span missing toma.site"))?;
+                let site = Site::parse(site_s)
+                    .ok_or_else(|| crate::anyhow!("trace JSON: unknown site {site_s:?}"))?;
+                let lane_s = attrs
+                    .get("toma.lane")
+                    .ok_or_else(|| crate::anyhow!("trace JSON: span missing toma.lane"))?;
+                let lane = u64::from_str_radix(lane_s, 16)
+                    .map_err(|e| crate::anyhow!("trace JSON: bad toma.lane {lane_s:?}: {e}"))?;
+                let id = parse_u64("toma.id", attrs.get("toma.id").map_or("0", String::as_str))?;
+                let step =
+                    parse_u64("toma.step", attrs.get("toma.step").map_or("0", String::as_str))?;
+                let start_ns = row
+                    .get("startTimeUnixNano")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| crate::anyhow!("trace JSON: span missing startTimeUnixNano"))?;
+                let end_ns = row
+                    .get("endTimeUnixNano")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| crate::anyhow!("trace JSON: span missing endTimeUnixNano"))?;
+                let start_us = parse_u64("startTimeUnixNano", start_ns)? / 1000;
+                let end_us = parse_u64("endTimeUnixNano", end_ns)? / 1000;
+                spans.push(Span {
+                    site,
+                    kind,
+                    lane,
+                    id,
+                    step: step as u32,
+                    start_us,
+                    dur_us: end_us.saturating_sub(start_us),
+                });
+            }
+        }
+    }
+    Ok((spans, dropped))
+}
+
+/// Load a trace from raw file bytes, sniffing binary (magic) vs JSON.
+pub fn decode_auto(bytes: &[u8]) -> Result<(Vec<Span>, u64)> {
+    if bytes.len() >= MAGIC.len() && &bytes[..MAGIC.len()] == MAGIC {
+        return decode_binary(bytes);
+    }
+    let text = std::str::from_utf8(bytes)
+        .map_err(|e| crate::anyhow!("trace file is neither binary (bad magic) nor UTF-8: {e}"))?;
+    decode_json(text)
+}
+
+// ---------------------------------------------------------------------
+// per-lane critical-path / self-time breakdown
+// ---------------------------------------------------------------------
+
+const KIND_COUNT: usize = 8;
+
+/// Aggregate self-time per lane and per kind, plus the slowest cohort
+/// step's critical path — the `toma-serve trace` inspector body.
+pub fn breakdown(spans: &[Span], dropped: u64) -> String {
+    let mut lanes: BTreeMap<u64, ([u64; KIND_COUNT], [u64; KIND_COUNT])> = BTreeMap::new();
+    for s in spans {
+        let (dur, count) = lanes.entry(s.lane).or_insert(([0; KIND_COUNT], [0; KIND_COUNT]));
+        dur[s.kind as usize] += s.dur_us;
+        count[s.kind as usize] += 1;
+    }
+    let mut t = Table::new("per-lane self-time (where each lane's budget went)").headers(&[
+        "lane",
+        "spans",
+        "queue-wait",
+        "formation",
+        "select",
+        "refresh",
+        "step(gemm)",
+        "retry",
+        "fault",
+    ]);
+    for (lane, (dur, count)) in &lanes {
+        let spans_n: u64 = count.iter().sum();
+        t.row(vec![
+            format!("{lane:016x}"),
+            spans_n.to_string(),
+            fmt_secs(dur[SpanKind::QueueWait as usize] as f64 * 1e-6),
+            fmt_secs(dur[SpanKind::Formation as usize] as f64 * 1e-6),
+            fmt_secs(dur[SpanKind::Select as usize] as f64 * 1e-6),
+            fmt_secs(dur[SpanKind::Refresh as usize] as f64 * 1e-6),
+            fmt_secs(dur[SpanKind::Step as usize] as f64 * 1e-6),
+            fmt_secs(dur[SpanKind::Retry as usize] as f64 * 1e-6),
+            fmt_secs(dur[SpanKind::Fault as usize] as f64 * 1e-6),
+        ]);
+    }
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{} spans across {} lane(s), {} dropped\n\n",
+        spans.len(),
+        lanes.len(),
+        dropped
+    ));
+    out.push_str(&t.render());
+    if let Some(line) = slowest_step(spans) {
+        out.push('\n');
+        out.push_str(&line);
+        out.push('\n');
+    }
+    out
+}
+
+/// Critical path of the slowest cohort step: its GEMM (`Step`) span plus
+/// the same-(lane, step) plan spans and the queue waits that preceded it.
+fn slowest_step(spans: &[Span]) -> Option<String> {
+    let gemm = spans
+        .iter()
+        .filter(|s| s.kind == SpanKind::Step && s.site != Site::Server)
+        .max_by_key(|s| s.dur_us)?;
+    let mut select_us = 0u64;
+    let mut refresh_us = 0u64;
+    let mut queue_us = 0u64;
+    for s in spans {
+        if s.lane != gemm.lane {
+            continue;
+        }
+        match s.kind {
+            SpanKind::Select if s.step == gemm.step => select_us += s.dur_us,
+            SpanKind::Refresh if s.step == gemm.step => refresh_us += s.dur_us,
+            SpanKind::QueueWait if s.end_us() <= gemm.start_us => queue_us += s.dur_us,
+            _ => {}
+        }
+    }
+    let total = (gemm.dur_us + select_us + refresh_us).max(1);
+    let share = |v: u64| format!("{:.0}%", v as f64 * 100.0 / total as f64);
+    Some(format!(
+        "slowest cohort step: lane {:016x} step {} — critical path {} = select {} ({}) + \
+         refresh {} ({}) + gemm {} ({}); members waited {} in queue beforehand",
+        gemm.lane,
+        gemm.step,
+        fmt_secs(total as f64 * 1e-6),
+        fmt_secs(select_us as f64 * 1e-6),
+        share(select_us),
+        fmt_secs(refresh_us as f64 * 1e-6),
+        share(refresh_us),
+        fmt_secs(gemm.dur_us as f64 * 1e-6),
+        share(gemm.dur_us),
+        fmt_secs(queue_us as f64 * 1e-6),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::trace::span::lane_hash;
+
+    fn sample_spans() -> Vec<Span> {
+        let lane_a = lane_hash("lane-a");
+        let lane_b = lane_hash("lane-b");
+        let mut spans = vec![];
+        for step in 0..4u32 {
+            let base = 1000 * step as u64;
+            spans.push(Span {
+                site: Site::Frontend,
+                kind: SpanKind::Submit,
+                lane: lane_a,
+                id: 100 + step as u64,
+                step: 0,
+                start_us: base,
+                dur_us: 0,
+            });
+            spans.push(Span {
+                site: Site::Scheduler,
+                kind: SpanKind::QueueWait,
+                lane: lane_a,
+                id: 100 + step as u64,
+                step: 0,
+                start_us: base,
+                dur_us: 40,
+            });
+            spans.push(Span {
+                site: Site::Scheduler,
+                kind: SpanKind::Select,
+                lane: lane_a,
+                id: 7,
+                step,
+                start_us: base + 50,
+                dur_us: 300,
+            });
+            spans.push(Span {
+                site: Site::Scheduler,
+                kind: SpanKind::Step,
+                lane: lane_a,
+                id: 7,
+                step,
+                start_us: base + 350,
+                dur_us: 200 + step as u64,
+            });
+        }
+        spans.push(Span {
+            site: Site::Server,
+            kind: SpanKind::Step,
+            lane: lane_b,
+            id: 9,
+            step: 0,
+            start_us: 5000,
+            dur_us: 2500,
+        });
+        spans.push(Span {
+            site: Site::Fault,
+            kind: SpanKind::Fault,
+            lane: lane_b,
+            id: 9,
+            step: 0,
+            start_us: 5100,
+            dur_us: 2,
+        });
+        spans
+    }
+
+    #[test]
+    fn binary_roundtrip_identical() {
+        let spans = sample_spans();
+        let buf = encode_binary(&spans, 3);
+        let (back, dropped) = decode_binary(&buf).expect("decode");
+        assert_eq!(back, spans);
+        assert_eq!(dropped, 3);
+    }
+
+    #[test]
+    fn json_roundtrip_identical() {
+        let spans = sample_spans();
+        let text = encode_json(&spans, 5);
+        let (back, dropped) = decode_json(&text).expect("decode");
+        assert_eq!(back, spans);
+        assert_eq!(dropped, 5);
+    }
+
+    #[test]
+    fn auto_detects_both_formats() {
+        let spans = sample_spans();
+        let (b, _) = decode_auto(&encode_binary(&spans, 0)).expect("binary");
+        let (j, _) = decode_auto(encode_json(&spans, 0).as_bytes()).expect("json");
+        assert_eq!(b, spans);
+        assert_eq!(j, spans);
+    }
+
+    #[test]
+    fn empty_trace_roundtrips() {
+        let (b, d) = decode_binary(&encode_binary(&[], 9)).expect("binary");
+        assert!(b.is_empty());
+        assert_eq!(d, 9);
+        let (j, d) = decode_json(&encode_json(&[], 9)).expect("json");
+        assert!(j.is_empty());
+        assert_eq!(d, 9);
+    }
+
+    #[test]
+    fn binary_smaller_than_json() {
+        let spans = sample_spans();
+        let bin = encode_binary(&spans, 0);
+        let json = encode_json(&spans, 0);
+        assert!(
+            bin.len() * 4 < json.len(),
+            "delta+RLE should compress well: {} vs {}",
+            bin.len(),
+            json.len()
+        );
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(decode_binary(b"NOTATRACE").is_err());
+        assert!(decode_json("{\"resourceSpans\": 3}").is_err());
+        let mut buf = encode_binary(&sample_spans(), 0);
+        buf.truncate(buf.len() - 2);
+        assert!(decode_binary(&buf).is_err(), "truncated binary must not decode");
+    }
+
+    #[test]
+    fn varint_extremes() {
+        for v in [0u64, 1, 127, 128, 300, u32::MAX as u64, u64::MAX] {
+            let mut buf = vec![];
+            put_varint(&mut buf, v);
+            let mut pos = 0;
+            assert_eq!(get_varint(&buf, &mut pos).unwrap(), v);
+            assert_eq!(pos, buf.len());
+        }
+        for v in [0i64, 1, -1, 63, -64, i64::MAX, i64::MIN] {
+            assert_eq!(unzigzag(zigzag(v)), v);
+        }
+    }
+
+    #[test]
+    fn breakdown_names_slowest_scheduler_step() {
+        let spans = sample_spans();
+        let report = breakdown(&spans, 1);
+        // Slowest *scheduler* step is step 3 (dur 203); the 2.5 ms server
+        // span must not win — it is a per-request step, not a cohort step.
+        assert!(report.contains("step 3"), "report:\n{report}");
+        assert!(report.contains("slowest cohort step"), "report:\n{report}");
+        assert!(report.contains("1 dropped"), "report:\n{report}");
+    }
+
+    #[test]
+    fn breakdown_empty_is_calm() {
+        let report = breakdown(&[], 0);
+        assert!(report.contains("0 spans"));
+    }
+}

@@ -1,0 +1,191 @@
+//! Always-on tracing pipeline: lock-free span recording, compressed
+//! export, and online per-lane anomaly detection.
+//!
+//! Layout:
+//!
+//! * [`span`] — compact `Copy` span records (site, kind, lane hash,
+//!   request/cohort id, microsecond offsets from the tracer epoch) and
+//!   their packed ring encoding.
+//! * [`ring`] — the fixed-capacity lock-free MPSC ring: atomics only on
+//!   the write path, overwrite-oldest, exact dropped-span accounting.
+//! * [`export`] — OTLP-shaped JSON and delta+RLE binary serialization
+//!   (round-trip tested, `runtime/artifact.rs` discipline) plus the
+//!   per-lane critical-path breakdown behind `toma-serve trace`.
+//! * [`anomaly`] — EWMA mean/variance z-score detector per lane over
+//!   step-latency / queue-depth / retry-rate channels; raises
+//!   `lane_degrading` into `Metrics` and exposes [`AnomalyFlags`] for
+//!   the cross-lane controller and distributed health checks.
+//!
+//! The [`Tracer`] handle is the single seam the serving stack sees: an
+//! inert tracer ([`Tracer::off`], the default) is one `Option` check per
+//! instrumentation site — no ring, no epoch reads, no timestamps — so
+//! the tracing-off serving path stays bit-identical and within bench
+//! tolerance. An active tracer ([`Tracer::new`]) timestamps spans as
+//! microsecond offsets from its construction epoch; tests bypass the
+//! clock entirely by recording spans with explicit offsets.
+
+pub mod anomaly;
+pub mod export;
+pub mod ring;
+pub mod span;
+
+pub use anomaly::{AnomalyDetector, AnomalyFlags, AnomalyPolicy, Channel};
+pub use ring::{SpanRing, DEFAULT_CAPACITY};
+pub use span::{lane_hash, Site, Span, SpanKind};
+
+use std::sync::Arc;
+use std::time::Instant;
+
+struct Inner {
+    ring: SpanRing,
+    epoch: Instant,
+}
+
+/// Cheap-to-clone tracing handle threaded through the serving stack.
+/// `Tracer::default()` / [`Tracer::off`] is inert: every method is a
+/// single `Option` check, recording nothing.
+#[derive(Clone, Default)]
+pub struct Tracer(Option<Arc<Inner>>);
+
+impl Tracer {
+    /// The inert tracer — the default serving configuration.
+    pub fn off() -> Tracer {
+        Tracer(None)
+    }
+
+    /// An active tracer with a ring of (at least) `capacity` spans,
+    /// epoch pinned at construction.
+    pub fn new(capacity: usize) -> Tracer {
+        Tracer(Some(Arc::new(Inner {
+            ring: SpanRing::new(capacity),
+            epoch: Instant::now(),
+        })))
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// Microseconds since the tracer epoch (0 when inert — gate span
+    /// construction on [`Tracer::enabled`] to skip even this).
+    pub fn now_us(&self) -> u64 {
+        match &self.0 {
+            Some(inner) => inner.epoch.elapsed().as_micros() as u64,
+            None => 0,
+        }
+    }
+
+    /// Record one span (no-op when inert). Lock-free, allocation-free.
+    pub fn record(&self, span: Span) {
+        if let Some(inner) = &self.0 {
+            inner.ring.push(&span);
+        }
+    }
+
+    /// Record a span that started at offset `start_us` and ends now.
+    #[allow(clippy::too_many_arguments)]
+    pub fn record_since(
+        &self,
+        site: Site,
+        kind: SpanKind,
+        lane: u64,
+        id: u64,
+        step: u32,
+        start_us: u64,
+    ) {
+        if let Some(inner) = &self.0 {
+            let now = inner.epoch.elapsed().as_micros() as u64;
+            inner.ring.push(&Span {
+                site,
+                kind,
+                lane,
+                id,
+                step,
+                start_us,
+                dur_us: now.saturating_sub(start_us),
+            });
+        }
+    }
+
+    /// Drain all published spans in record order (empty when inert).
+    pub fn drain(&self) -> Vec<Span> {
+        match &self.0 {
+            Some(inner) => inner.ring.drain(),
+            None => Vec::new(),
+        }
+    }
+
+    /// Spans lost to overwrite (exact as of the last drain).
+    pub fn dropped_spans(&self) -> u64 {
+        self.0.as_ref().map_or(0, |i| i.ring.dropped_spans())
+    }
+
+    /// Total spans ever offered.
+    pub fn pushed(&self) -> u64 {
+        self.0.as_ref().map_or(0, |i| i.ring.pushed())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(id: u64) -> Span {
+        Span {
+            site: Site::Scheduler,
+            kind: SpanKind::Step,
+            lane: lane_hash("lane"),
+            id,
+            step: 0,
+            start_us: id * 10,
+            dur_us: 5,
+        }
+    }
+
+    #[test]
+    fn off_tracer_is_inert() {
+        let t = Tracer::off();
+        assert!(!t.enabled());
+        assert_eq!(t.now_us(), 0);
+        t.record(span(1));
+        t.record_since(Site::Server, SpanKind::Step, 1, 2, 3, 0);
+        assert!(t.drain().is_empty());
+        assert_eq!(t.pushed(), 0);
+        assert_eq!(t.dropped_spans(), 0);
+        assert!(!Tracer::default().enabled(), "default is off");
+    }
+
+    #[test]
+    fn active_tracer_records_and_drains() {
+        let t = Tracer::new(64);
+        assert!(t.enabled());
+        for i in 0..5 {
+            t.record(span(i)); // explicit offsets: no clock involved
+        }
+        let spans = t.drain();
+        assert_eq!(spans.len(), 5);
+        assert_eq!(spans[4], span(4));
+        assert_eq!(t.pushed(), 5);
+        assert!(t.drain().is_empty());
+    }
+
+    #[test]
+    fn record_since_measures_from_epoch() {
+        let t = Tracer::new(64);
+        let start = t.now_us();
+        t.record_since(Site::Server, SpanKind::Step, 7, 8, 9, start);
+        let spans = t.drain();
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].lane, 7);
+        assert_eq!(spans[0].start_us, start);
+        assert!(spans[0].dur_us < 5_000_000, "duration is an offset, not absolute time");
+    }
+
+    #[test]
+    fn clones_share_the_ring() {
+        let t = Tracer::new(64);
+        let t2 = t.clone();
+        t2.record(span(1));
+        assert_eq!(t.drain().len(), 1);
+    }
+}

@@ -1,0 +1,337 @@
+//! Fixed-capacity, lock-free MPSC span ring — atomics only on the write
+//! path, overwrite-oldest, with exact dropped-span accounting.
+//!
+//! Producers are the serving hot paths (lane workers, the scheduler lane
+//! loop, the fault injector); the single consumer is the trace exporter
+//! draining at shutdown or on demand. The write path performs **zero
+//! allocation and takes no lock**: one `fetch_add` to claim a ticket, one
+//! CAS to claim the slot, [`span::SPAN_WORDS`] relaxed stores, one
+//! release store to publish.
+//!
+//! ## Slot protocol
+//!
+//! Publish ticket `i` (monotonic from `head.fetch_add`) maps to slot
+//! `i % capacity`. Each slot carries a sequence word:
+//!
+//! * `WRITING(i) = 2*i + 1` (odd)  — ticket `i`'s writer owns the slot.
+//! * `DONE(i)    = 2*i + 2` (even) — ticket `i`'s span is readable.
+//!
+//! A writer claims its slot by CAS from an *even* (completed, older)
+//! sequence to `WRITING(i)`. If the slot shows an odd sequence — a
+//! straggler from a full ring-wrap ago is still mid-write — the new span
+//! is abandoned rather than racing the straggler's field stores; that is
+//! the only way two writers could ever touch the same slot words, so
+//! payloads are never torn by construction. Overwrite-oldest is the
+//! common case: claiming over `DONE(j)` (`j = i - capacity`) discards the
+//! old span.
+//!
+//! The consumer validates `DONE(i)` before **and** after copying the
+//! words (seqlock read); any ticket in the drained range that does not
+//! yield a validated span — overwritten, abandoned, or still in flight —
+//! increments `dropped`, so `drained + dropped` always equals the number
+//! of tickets issued. All slot words are atomics: a torn read is
+//! *rejected*, never undefined behavior.
+
+use std::sync::atomic::{fence, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::span::{Span, SPAN_WORDS};
+use crate::util::lock_unpoisoned;
+
+/// Default ring capacity (spans). 64Ki spans ≈ 3 MiB resident.
+pub const DEFAULT_CAPACITY: usize = 1 << 16;
+
+struct Slot {
+    seq: AtomicU64,
+    words: [AtomicU64; SPAN_WORDS],
+}
+
+impl Slot {
+    fn new() -> Slot {
+        Slot {
+            seq: AtomicU64::new(0),
+            words: [const { AtomicU64::new(0) }; SPAN_WORDS],
+        }
+    }
+}
+
+/// Lock-free MPSC span ring. See module docs for the slot protocol.
+pub struct SpanRing {
+    slots: Box<[Slot]>,
+    /// Next publish ticket; `head - tail` bounds the undrained backlog.
+    head: AtomicU64,
+    /// Consumer cursor (next ticket to drain) — single consumer,
+    /// serialized by this mutex; producers never touch it.
+    tail: Mutex<u64>,
+    /// Tickets that never yielded a drained span (overwritten, abandoned
+    /// on straggler collision, or unfinished when drained past).
+    dropped: AtomicU64,
+    mask: u64,
+}
+
+#[inline]
+fn writing_tag(ticket: u64) -> u64 {
+    2 * ticket + 1
+}
+
+#[inline]
+fn done_tag(ticket: u64) -> u64 {
+    2 * ticket + 2
+}
+
+impl SpanRing {
+    /// `capacity` is rounded up to a power of two (minimum 8).
+    pub fn new(capacity: usize) -> SpanRing {
+        let cap = capacity.max(8).next_power_of_two();
+        let slots: Vec<Slot> = (0..cap).map(|_| Slot::new()).collect();
+        SpanRing {
+            slots: slots.into_boxed_slice(),
+            head: AtomicU64::new(0),
+            tail: Mutex::new(0),
+            dropped: AtomicU64::new(0),
+            mask: (cap - 1) as u64,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Record one span. Never blocks, never allocates; on the rare
+    /// straggler collision (see module docs) the span is dropped and
+    /// accounted at the next drain.
+    pub fn push(&self, span: &Span) {
+        let ticket = self.head.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[(ticket & self.mask) as usize];
+        let writing = writing_tag(ticket);
+        // Claim: only ever CAS from an even (completed, strictly older)
+        // sequence, so slot words have exactly one writer at a time.
+        let mut cur = slot.seq.load(Ordering::Acquire);
+        loop {
+            if cur >= writing || cur & 1 == 1 {
+                // A newer ticket took the slot, or a straggler from a
+                // previous wrap is mid-write: abandon this span. The
+                // ticket is accounted as dropped when drain passes it.
+                return;
+            }
+            match slot
+                .seq
+                .compare_exchange_weak(cur, writing, Ordering::AcqRel, Ordering::Acquire)
+            {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+        let words = span.encode();
+        for (w, v) in slot.words.iter().zip(words) {
+            w.store(v, Ordering::Relaxed);
+        }
+        // Publish. No CAS needed: later writers back off from the odd
+        // sequence, so nobody else can have touched `seq` since claim.
+        slot.seq.store(done_tag(ticket), Ordering::Release);
+    }
+
+    /// Total spans ever offered via [`SpanRing::push`].
+    pub fn pushed(&self) -> u64 {
+        self.head.load(Ordering::Relaxed)
+    }
+
+    /// Spans lost so far (exact as of the last [`SpanRing::drain`]).
+    pub fn dropped_spans(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Undrained backlog upper bound (for display; racy by nature).
+    pub fn len(&self) -> usize {
+        let head = self.head.load(Ordering::Relaxed);
+        let tail = *lock_unpoisoned(&self.tail);
+        ((head - tail).min(self.slots.len() as u64)) as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drain all currently published spans in ticket order. Tickets that
+    /// cannot be recovered (overwritten before this drain, abandoned on
+    /// collision, or mid-write right now) are added to the dropped
+    /// counter, so `drained_total + dropped == pushed()` holds whenever
+    /// producers are quiescent.
+    pub fn drain(&self) -> Vec<Span> {
+        let mut tail = lock_unpoisoned(&self.tail);
+        let head = self.head.load(Ordering::Acquire);
+        let cap = self.slots.len() as u64;
+        // Tickets older than one full ring behind head are gone for sure.
+        let start = head.saturating_sub(cap).max(*tail);
+        let mut dropped = start - *tail;
+        let mut out = Vec::with_capacity((head - start) as usize);
+        for ticket in start..head {
+            let slot = &self.slots[(ticket & self.mask) as usize];
+            let expect = done_tag(ticket);
+            let seq1 = slot.seq.load(Ordering::Acquire);
+            if seq1 != expect {
+                dropped += 1;
+                continue;
+            }
+            let mut words = [0u64; SPAN_WORDS];
+            for (v, w) in words.iter_mut().zip(slot.words.iter()) {
+                *v = w.load(Ordering::Relaxed);
+            }
+            // Seqlock validation: if the sequence moved while we copied,
+            // the words may mix two spans — reject, count as dropped.
+            fence(Ordering::Acquire);
+            let seq2 = slot.seq.load(Ordering::Relaxed);
+            match (seq2 == expect).then(|| Span::decode(words)).flatten() {
+                Some(span) => out.push(span),
+                None => dropped += 1,
+            }
+        }
+        *tail = head;
+        self.dropped.fetch_add(dropped, Ordering::Relaxed);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::trace::span::{Site, SpanKind};
+
+    /// Self-checking span: `dur_us` is derived from `id` so any cross-slot
+    /// tearing (fields from two different spans) is detectable.
+    fn span(id: u64) -> Span {
+        Span {
+            site: Site::Scheduler,
+            kind: SpanKind::Step,
+            lane: id.wrapping_mul(0x9e37_79b9_7f4a_7c15),
+            id,
+            step: id as u32,
+            start_us: id * 3,
+            dur_us: id * 2 + 1,
+        }
+    }
+
+    fn check(s: &Span) {
+        assert_eq!(s.lane, s.id.wrapping_mul(0x9e37_79b9_7f4a_7c15), "torn span: {s:?}");
+        assert_eq!(s.dur_us, s.id * 2 + 1, "torn span: {s:?}");
+        assert_eq!(s.start_us, s.id * 3, "torn span: {s:?}");
+    }
+
+    #[test]
+    fn capacity_rounds_to_power_of_two() {
+        assert_eq!(SpanRing::new(0).capacity(), 8);
+        assert_eq!(SpanRing::new(100).capacity(), 128);
+        assert_eq!(SpanRing::new(256).capacity(), 256);
+    }
+
+    #[test]
+    fn fill_and_drain_in_order() {
+        let ring = SpanRing::new(16);
+        for i in 0..10 {
+            ring.push(&span(i));
+        }
+        let got = ring.drain();
+        assert_eq!(got.len(), 10);
+        for (i, s) in got.iter().enumerate() {
+            assert_eq!(s.id, i as u64);
+            check(s);
+        }
+        assert_eq!(ring.dropped_spans(), 0);
+        assert!(ring.drain().is_empty(), "second drain yields nothing new");
+    }
+
+    #[test]
+    fn overwrite_oldest_keeps_newest_and_counts_dropped() {
+        let ring = SpanRing::new(16); // capacity exactly 16
+        for i in 0..48 {
+            ring.push(&span(i));
+        }
+        let got = ring.drain();
+        // Only the live window survives: tickets 32..48.
+        assert_eq!(got.len(), 16);
+        for (k, s) in got.iter().enumerate() {
+            assert_eq!(s.id, 32 + k as u64);
+            check(s);
+        }
+        assert_eq!(ring.dropped_spans(), 32);
+        assert_eq!(got.len() as u64 + ring.dropped_spans(), ring.pushed());
+    }
+
+    #[test]
+    fn interleaved_drains_account_exactly() {
+        let ring = SpanRing::new(8);
+        let mut drained = 0u64;
+        for round in 0..5u64 {
+            for i in 0..20 {
+                ring.push(&span(round * 20 + i));
+            }
+            let got = ring.drain();
+            for s in &got {
+                check(s);
+            }
+            drained += got.len() as u64;
+            assert_eq!(drained + ring.dropped_spans(), ring.pushed());
+        }
+    }
+
+    #[test]
+    fn concurrent_writers_never_corrupt_and_account_exactly() {
+        let ring = std::sync::Arc::new(SpanRing::new(256));
+        let threads = 8u64;
+        let per_thread = 4_000u64;
+        let mut handles = vec![];
+        for t in 0..threads {
+            let r = ring.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..per_thread {
+                    r.push(&span(t * per_thread + i));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let got = ring.drain();
+        let total = threads * per_thread;
+        assert!(got.len() <= 256);
+        assert!(!got.is_empty());
+        for s in &got {
+            check(s); // no torn payloads, ever
+        }
+        assert_eq!(got.len() as u64 + ring.dropped_spans(), total);
+        assert_eq!(ring.pushed(), total);
+    }
+
+    #[test]
+    fn drain_races_writers_without_losing_accounting() {
+        let ring = std::sync::Arc::new(SpanRing::new(64));
+        let stop = std::sync::Arc::new(AtomicU64::new(0));
+        let mut handles = vec![];
+        for t in 0..4u64 {
+            let r = ring.clone();
+            let s = stop.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut i = 0;
+                while s.load(Ordering::Relaxed) == 0 {
+                    r.push(&span(t * 1_000_000 + i));
+                    i += 1;
+                }
+            }));
+        }
+        let mut drained = 0u64;
+        for _ in 0..50 {
+            let got = ring.drain();
+            for s in &got {
+                check(s);
+            }
+            drained += got.len() as u64;
+        }
+        stop.store(1, Ordering::Relaxed);
+        for h in handles {
+            h.join().unwrap();
+        }
+        drained += ring.drain().len() as u64;
+        // Producers quiescent: the ledger must balance exactly.
+        assert_eq!(drained + ring.dropped_spans(), ring.pushed());
+    }
+}

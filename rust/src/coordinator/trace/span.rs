@@ -1,0 +1,274 @@
+//! Compact span records for the always-on tracing pipeline.
+//!
+//! A [`Span`] is a fixed-size, `Copy` timing record: which instrumentation
+//! [`Site`] produced it, what [`SpanKind`] of work it covers, the FNV-1a
+//! hash of the owning lane key ([`lane_hash`]), a request/cohort id, and
+//! `start`/`duration` offsets in **microseconds from the tracer epoch** —
+//! the same offset-from-epoch discipline `scheduler::DecayedTail` uses, so
+//! tests drive spans with explicit offsets and never read the wall clock.
+//!
+//! Spans are stored in the ring buffer as [`SPAN_WORDS`] packed `u64`
+//! words ([`Span::encode`] / [`Span::decode`]) so the hot-path writer is a
+//! handful of atomic stores: no allocation, no locks, no `Instant` math
+//! beyond one subtraction at the record site.
+
+/// Instrumentation site that produced a span (the *where*).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Site {
+    /// `frontend::LaneFrontEnd` — submit path, lane lifecycle events.
+    Frontend = 0,
+    /// `scheduler` lane loop — cohort formation and batched steps.
+    Scheduler = 1,
+    /// `server` worker loop — per-request engine steps.
+    Server = 2,
+    /// `fault::FaultInjector` — deterministic chaos injections.
+    Fault = 3,
+}
+
+impl Site {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Site::Frontend => "frontend",
+            Site::Scheduler => "scheduler",
+            Site::Server => "server",
+            Site::Fault => "fault",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Site> {
+        match s {
+            "frontend" => Some(Site::Frontend),
+            "scheduler" => Some(Site::Scheduler),
+            "server" => Some(Site::Server),
+            "fault" => Some(Site::Fault),
+            _ => None,
+        }
+    }
+
+    pub fn from_u8(b: u8) -> Option<Site> {
+        match b {
+            0 => Some(Site::Frontend),
+            1 => Some(Site::Scheduler),
+            2 => Some(Site::Server),
+            3 => Some(Site::Fault),
+            _ => None,
+        }
+    }
+
+    /// Map a fault-probe site string (`"server.step"`, `"scheduler.step"`)
+    /// onto the span site taxonomy; unknown probes fall back to `Fault`.
+    pub fn from_probe(probe: &str) -> Site {
+        match probe.split('.').next() {
+            Some("server") => Site::Server,
+            Some("scheduler") => Site::Scheduler,
+            Some("frontend") => Site::Frontend,
+            _ => Site::Fault,
+        }
+    }
+}
+
+/// What kind of work a span covers (the *what*).
+///
+/// Lifecycle events map onto this taxonomy rather than growing it: a lane
+/// respawn is recorded as `Retry` (the lane is being retried) and a
+/// breaker trip or contained worker panic as `Fault`, both at
+/// `Site::Frontend`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum SpanKind {
+    /// Request accepted by a front-end submit path.
+    Submit = 0,
+    /// Time a job waited in a lane queue before being picked up.
+    QueueWait = 1,
+    /// Cohort formation window (admission batching) in the scheduler.
+    Formation = 2,
+    /// Destination selection (`refresh_all`: `fl_select` + weights).
+    Select = 3,
+    /// Batched denoising GEMM work (`step_batch`) or a full engine step.
+    Step = 4,
+    /// Weight-only plan refresh (`refresh_weights`).
+    Refresh = 5,
+    /// A retry: quarantine-policy re-run or a lane respawn.
+    Retry = 6,
+    /// Fault: an injected fault, contained panic, or breaker trip.
+    Fault = 7,
+}
+
+impl SpanKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SpanKind::Submit => "submit",
+            SpanKind::QueueWait => "queue-wait",
+            SpanKind::Formation => "formation",
+            SpanKind::Select => "select",
+            SpanKind::Step => "step",
+            SpanKind::Refresh => "refresh",
+            SpanKind::Retry => "retry",
+            SpanKind::Fault => "fault",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SpanKind> {
+        match s {
+            "submit" => Some(SpanKind::Submit),
+            "queue-wait" => Some(SpanKind::QueueWait),
+            "formation" => Some(SpanKind::Formation),
+            "select" => Some(SpanKind::Select),
+            "step" => Some(SpanKind::Step),
+            "refresh" => Some(SpanKind::Refresh),
+            "retry" => Some(SpanKind::Retry),
+            "fault" => Some(SpanKind::Fault),
+            _ => None,
+        }
+    }
+
+    pub fn from_u8(b: u8) -> Option<SpanKind> {
+        match b {
+            0 => Some(SpanKind::Submit),
+            1 => Some(SpanKind::QueueWait),
+            2 => Some(SpanKind::Formation),
+            3 => Some(SpanKind::Select),
+            4 => Some(SpanKind::Step),
+            5 => Some(SpanKind::Refresh),
+            6 => Some(SpanKind::Retry),
+            7 => Some(SpanKind::Fault),
+            _ => None,
+        }
+    }
+}
+
+/// Number of packed `u64` words a span occupies in a ring slot.
+pub const SPAN_WORDS: usize = 5;
+
+/// One timing record. `start_us`/`dur_us` are offsets from the tracer
+/// epoch in microseconds; `lane` is [`lane_hash`] of the lane key; `id`
+/// is a request seed or per-lane cohort ordinal; `step` is the cohort
+/// step ordinal (0 when not applicable).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Span {
+    pub site: Site,
+    pub kind: SpanKind,
+    pub lane: u64,
+    pub id: u64,
+    pub step: u32,
+    pub start_us: u64,
+    pub dur_us: u64,
+}
+
+impl Span {
+    /// Pack into ring-slot words: word 0 carries site | kind | step, the
+    /// rest are the wide fields verbatim.
+    pub fn encode(&self) -> [u64; SPAN_WORDS] {
+        let w0 = (self.site as u64) | ((self.kind as u64) << 8) | ((self.step as u64) << 32);
+        [w0, self.lane, self.id, self.start_us, self.dur_us]
+    }
+
+    /// Inverse of [`Span::encode`]; `None` on an invalid site/kind byte
+    /// (a slot that was never written, or a torn record the ring's
+    /// sequence check should already have rejected).
+    pub fn decode(w: [u64; SPAN_WORDS]) -> Option<Span> {
+        let site = Site::from_u8((w[0] & 0xff) as u8)?;
+        let kind = SpanKind::from_u8(((w[0] >> 8) & 0xff) as u8)?;
+        Some(Span {
+            site,
+            kind,
+            lane: w[1],
+            id: w[2],
+            step: (w[0] >> 32) as u32,
+            start_us: w[3],
+            dur_us: w[4],
+        })
+    }
+
+    pub fn end_us(&self) -> u64 {
+        self.start_us.saturating_add(self.dur_us)
+    }
+}
+
+/// FNV-1a hash of a lane key — the same construction as
+/// `fault::hash_site`, duplicated here so `trace` stays a leaf module.
+/// Stable across processes: exported traces from different runs of the
+/// same config hash lanes identically.
+pub fn lane_hash(key: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in key.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Span {
+        Span {
+            site: Site::Scheduler,
+            kind: SpanKind::Select,
+            lane: lane_hash("uvit:f32"),
+            id: 42,
+            step: 7,
+            start_us: 1_234_567,
+            dur_us: 890,
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let s = sample();
+        assert_eq!(Span::decode(s.encode()), Some(s));
+    }
+
+    #[test]
+    fn roundtrip_all_sites_and_kinds() {
+        for sb in 0..=4u8 {
+            for kb in 0..=8u8 {
+                let (site, kind) = match (Site::from_u8(sb), SpanKind::from_u8(kb)) {
+                    (Some(s), Some(k)) => (s, k),
+                    _ => continue,
+                };
+                let s = Span { site, kind, ..sample() };
+                assert_eq!(Span::decode(s.encode()), Some(s));
+                assert_eq!(Site::parse(site.as_str()), Some(site));
+                assert_eq!(SpanKind::parse(kind.as_str()), Some(kind));
+            }
+        }
+    }
+
+    #[test]
+    fn decode_rejects_bad_bytes() {
+        assert_eq!(Span::decode([0xff, 0, 0, 0, 0]), None);
+        assert_eq!(Span::decode([0x0900, 0, 0, 0, 0]), None); // kind byte 9
+    }
+
+    #[test]
+    fn extreme_field_values_survive() {
+        let s = Span {
+            site: Site::Fault,
+            kind: SpanKind::Fault,
+            lane: u64::MAX,
+            id: u64::MAX,
+            step: u32::MAX,
+            start_us: u64::MAX,
+            dur_us: u64::MAX,
+        };
+        assert_eq!(Span::decode(s.encode()), Some(s));
+        assert_eq!(s.end_us(), u64::MAX); // saturates, no overflow
+    }
+
+    #[test]
+    fn lane_hash_matches_fault_site_hash() {
+        // Same FNV-1a construction: keep the two in lockstep.
+        assert_eq!(lane_hash("server.step"), crate::coordinator::fault::hash_site("server.step"));
+        assert_ne!(lane_hash("a"), lane_hash("b"));
+    }
+
+    #[test]
+    fn probe_site_mapping() {
+        assert_eq!(Site::from_probe("server.step"), Site::Server);
+        assert_eq!(Site::from_probe("scheduler.step"), Site::Scheduler);
+        assert_eq!(Site::from_probe("mystery.site"), Site::Fault);
+    }
+}

@@ -49,7 +49,18 @@
 //!   completions. The deterministic chaos substrate behind it is
 //!   [`coordinator::fault`] (`TOMA_FAULTS`, `FaultPlan`:
 //!   panic/slow/error/stall at the `server.step` / `scheduler.step`
-//!   probes), driving `tests/chaos.rs` against both front-ends.
+//!   probes), driving `tests/chaos.rs` against both front-ends. Since
+//!   PR 7 the stack is *observable* ([`coordinator::trace`]): an
+//!   optional `Tracer` records compact spans (submit / queue-wait /
+//!   formation / select / refresh / step / retry / fault) onto a
+//!   lock-free overwrite-oldest ring with exact dropped-span
+//!   accounting, exported as OTLP-shaped JSON or a delta+RLE binary
+//!   (`toma-serve serve --trace`, inspected by `toma-serve trace`);
+//!   the default tracing-off path is bit-identical. An always-on
+//!   per-lane EWMA z-score detector (`AnomalyDetector`: step-latency /
+//!   queue-depth / retry-rate channels) raises `lane_degrading` before
+//!   cumulative p99 moves — control loops consume its `AnomalyFlags`
+//!   or `DecayedTail`, never the cumulative histograms.
 //! * [`runtime`] — PJRT client, artifact registry, weight store. The
 //!   XLA-backed layer sits behind the `pjrt` cargo feature; the default
 //!   build compiles same-API pure-Rust stubs, so no XLA toolchain is

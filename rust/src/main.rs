@@ -9,12 +9,16 @@
 //!   info        print manifest + runtime info
 //!   bench-diff  compare two BENCH_<target>.json records; non-zero exit on
 //!               median regressions beyond --tolerance (CI perf gate)
+//!   trace       inspect an exported trace (JSON or .bin): per-lane
+//!               self-time breakdown + the slowest cohort step's critical
+//!               path (select vs GEMM vs queue wait)
 
 use std::sync::Arc;
 
 use toma::anyhow;
 use toma::coordinator::scheduler::{BatchPolicy, HostBackend, LanePolicy, DEFAULT_TAU};
-use toma::coordinator::{EngineConfig, GenRequest, Scheduler, Server};
+use toma::coordinator::trace::{export, DEFAULT_CAPACITY};
+use toma::coordinator::{EngineConfig, GenRequest, Scheduler, Server, Tracer};
 use toma::model::HostUVit;
 use toma::tensor::element::StorageDtype;
 use toma::util::error::Result;
@@ -39,11 +43,14 @@ fn usage() -> String {
                                         and --p99-target (see scheduler::policy)\n\
                   --max-batch 8 --window 0.005 --p99-target 2.0 --rate 0\n\
                   --deadline <s>        shed requests queued longer than this\n\
+                  --trace <path>        export spans: OTLP-shaped JSON at <path>,\n\
+                                        delta+RLE binary at <path>.bin\n\
                   (generate/serve take --storage f32|bf16|f16: weight-panel dtype)\n\
        table      --id {1,2,3,4,5,7,8,9,10,C} [--device rtx6000] [--full]\n\
        artifacts  [--compile <name>]\n\
        info\n\
-       bench-diff <old.json> <new.json> [--tolerance 0.15] [--min-median-us 50]\n"
+       bench-diff <old.json> <new.json> [--tolerance 0.15] [--min-median-us 50]\n\
+       trace      <file>   per-lane breakdown of an exported trace (JSON or .bin)\n"
         .to_string()
 }
 
@@ -162,6 +169,24 @@ fn lane_policy(args: &Args) -> Result<LanePolicy> {
         .ok_or_else(|| anyhow!("unknown --policy `{name}` (accepted: static, adaptive)"))
 }
 
+/// `serve --trace <path>`: drain the tracer and export both encodings —
+/// OTLP-shaped JSON at `path`, delta+RLE binary at `path.bin`.
+fn export_trace(tracer: &Tracer, path: &str) -> Result<()> {
+    let spans = tracer.drain();
+    let dropped = tracer.dropped_spans();
+    std::fs::write(path, export::encode_json(&spans, dropped))
+        .map_err(|e| anyhow!("writing {path}: {e}"))?;
+    let bin_path = format!("{path}.bin");
+    std::fs::write(&bin_path, export::encode_binary(&spans, dropped))
+        .map_err(|e| anyhow!("writing {bin_path}: {e}"))?;
+    println!(
+        "trace: {} spans ({} dropped) -> {path} + {bin_path}",
+        spans.len(),
+        dropped
+    );
+    Ok(())
+}
+
 /// Artifact-free serving through the micro-batching scheduler on a
 /// synthetic host model — the path that exercises `--policy` and prints
 /// the unified front-end's lane-lifecycle counters.
@@ -170,9 +195,12 @@ fn serve_host(args: &Args, cfg: &EngineConfig, stream: &[RequestSpec]) -> Result
     println!("host backend, policy: {policy:?}");
     let info = ModelInfo::synthetic(&cfg.model, 8, 3, 32, 4, 4, 8);
     let model = Arc::new(HostUVit::synthetic(&info, 2, 7));
-    let sched = Scheduler::new(policy, move |c: &EngineConfig| {
+    let mut sched = Scheduler::new(policy, move |c: &EngineConfig| {
         HostBackend::boxed(model.clone(), c.clone(), 4, DEFAULT_TAU)
     });
+    if args.get("trace").is_some() {
+        sched = sched.with_trace(Tracer::new(DEFAULT_CAPACITY));
+    }
     let t0 = std::time::Instant::now();
     let mut rxs = vec![];
     for r in stream {
@@ -194,6 +222,13 @@ fn serve_host(args: &Args, cfg: &EngineConfig, stream: &[RequestSpec]) -> Result
         ok as f64 / wall
     );
     println!("{}", sched.metrics.render());
+    let flags = sched.anomaly_flags();
+    if !flags.is_empty() {
+        println!("degrading lanes: {}", flags.lanes.join(", "));
+    }
+    if let Some(path) = args.get("trace") {
+        export_trace(sched.tracer(), path)?;
+    }
     sched.shutdown();
     Ok(())
 }
@@ -205,6 +240,9 @@ fn serve_pjrt(args: &Args, cfg: &EngineConfig, stream: &[RequestSpec]) -> Result
     let mut server = Server::with_default_dir(workers);
     if let Some(dl) = parse_deadline(args)? {
         server = server.with_deadline(dl);
+    }
+    if args.get("trace").is_some() {
+        server = server.with_trace(Tracer::new(DEFAULT_CAPACITY));
     }
     let t0 = std::time::Instant::now();
     let reqs: Vec<GenRequest> = stream
@@ -220,6 +258,13 @@ fn serve_pjrt(args: &Args, cfg: &EngineConfig, stream: &[RequestSpec]) -> Result
         ok as f64 / wall
     );
     println!("{}", server.metrics.render());
+    let flags = server.anomaly_flags();
+    if !flags.is_empty() {
+        println!("degrading lanes: {}", flags.lanes.join(", "));
+    }
+    if let Some(path) = args.get("trace") {
+        export_trace(server.tracer(), path)?;
+    }
     for c in completions.iter().take(3) {
         if let Ok(r) = &c.result {
             println!(
@@ -279,6 +324,20 @@ fn cmd_artifacts(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `trace <file>`: decode an exported trace (format sniffed from the
+/// binary magic) and print the per-lane self-time breakdown plus the
+/// slowest cohort step's critical path.
+fn cmd_trace(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("trace needs <file> (a serve --trace export, JSON or .bin)"))?;
+    let bytes = std::fs::read(path).map_err(|e| anyhow!("reading {path}: {e}"))?;
+    let (spans, dropped) = export::decode_auto(&bytes)?;
+    print!("{}", export::breakdown(&spans, dropped));
+    Ok(())
+}
+
 fn cmd_info() -> Result<()> {
     let runtime = Runtime::with_default_dir()?;
     println!(
@@ -319,6 +378,7 @@ fn main() -> Result<()> {
         "artifacts" => cmd_artifacts(&args),
         "info" => cmd_info(),
         "bench-diff" => cmd_bench_diff(&args),
+        "trace" => cmd_trace(&args),
         _ => {
             print!("{}", usage());
             if cmd != "help" {

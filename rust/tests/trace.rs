@@ -1,0 +1,246 @@
+//! Integration tests for the PR 7 tracing pipeline (ISSUE 7): ring
+//! overflow under concurrent writers, export round-trips through both
+//! encodings, the deterministic injector-driven anomaly story — a
+//! slow-step poison flags exactly the poisoned lane *before* its
+//! cumulative p99 moves — and end-to-end span recording through a real
+//! scheduler run.
+//!
+//! Everything here is offset-driven: fault schedules come from
+//! [`FaultInjector::probe`] replay and synthetic latency values, never
+//! from wall-clock sleeps, so the tests are deterministic on any CI box.
+
+use std::sync::Arc;
+use std::thread;
+
+use toma::coordinator::scheduler::{BatchPolicy, HostBackend, DEFAULT_TAU};
+use toma::coordinator::trace::{
+    export, lane_hash, AnomalyDetector, Channel, Site, Span, SpanKind, SpanRing, Tracer,
+};
+use toma::coordinator::{
+    EngineConfig, FaultInjector, FaultKind, FaultPlan, GenRequest, Metrics, Scheduler,
+};
+use toma::model::HostUVit;
+use toma::runtime::ModelInfo;
+
+fn span(site: Site, kind: SpanKind, id: u64) -> Span {
+    Span {
+        site,
+        kind,
+        lane: lane_hash("lane"),
+        id,
+        step: (id % 7) as u32,
+        start_us: id * 3,
+        dur_us: id + 1,
+    }
+}
+
+/// Satellite (c): concurrent writers pushing far past capacity never
+/// block and never corrupt — every drained span decodes to a value some
+/// writer actually pushed, and `dropped + drained == pushed` exactly
+/// once the writers are quiescent.
+#[test]
+fn ring_overflow_under_concurrent_writers_accounts_exactly() {
+    let ring = Arc::new(SpanRing::new(128));
+    let writers = 4u64;
+    let per = 1000u64;
+    let mut handles = vec![];
+    for w in 0..writers {
+        let r = ring.clone();
+        handles.push(thread::spawn(move || {
+            for i in 0..per {
+                r.push(&span(Site::Scheduler, SpanKind::Step, w * per + i));
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(ring.pushed(), writers * per);
+    let drained = ring.drain();
+    assert!(drained.len() <= ring.capacity());
+    assert_eq!(drained.len() as u64 + ring.dropped_spans(), writers * per);
+    // No torn payloads: every live span is internally consistent with
+    // how its writer constructed it.
+    for s in &drained {
+        assert!(s.id < writers * per);
+        assert_eq!(s.start_us, s.id * 3);
+        assert_eq!(s.dur_us, s.id + 1);
+        assert_eq!(s.step, (s.id % 7) as u32);
+    }
+}
+
+/// Satellite (c): a wrapped ring exports only the live tail, in push
+/// order, and the export round-trips with the exact drop count.
+#[test]
+fn wrapped_ring_exports_only_live_spans_in_order() {
+    let ring = SpanRing::new(16);
+    let cap = ring.capacity() as u64;
+    let total = cap * 3;
+    for i in 0..total {
+        ring.push(&span(Site::Frontend, SpanKind::Submit, i));
+    }
+    let live = ring.drain();
+    assert_eq!(live.len() as u64, cap);
+    assert_eq!(ring.dropped_spans(), total - cap);
+    let ids: Vec<u64> = live.iter().map(|s| s.id).collect();
+    let expect: Vec<u64> = (total - cap..total).collect();
+    assert_eq!(ids, expect, "drain yields the newest `capacity` spans in push order");
+    let bin = export::encode_binary(&live, ring.dropped_spans());
+    let (rt, dropped) = export::decode_binary(&bin).expect("binary round-trip");
+    assert_eq!(rt, live);
+    assert_eq!(dropped, total - cap);
+}
+
+/// Tentpole acceptance: both encodings round-trip a mixed-site,
+/// mixed-kind trace bit-exactly, and `decode_auto` sniffs each format.
+#[test]
+fn export_round_trips_both_encodings() {
+    let spans: Vec<Span> = (0..50u64)
+        .map(|i| Span {
+            site: if i % 2 == 0 { Site::Scheduler } else { Site::Server },
+            kind: match i % 4 {
+                0 => SpanKind::Select,
+                1 => SpanKind::Step,
+                2 => SpanKind::QueueWait,
+                _ => SpanKind::Retry,
+            },
+            lane: lane_hash(if i % 3 == 0 { "lane-a" } else { "lane-b" }),
+            id: i,
+            step: (i / 4) as u32,
+            start_us: 1_000 + 37 * i,
+            dur_us: 11 * i,
+        })
+        .collect();
+    let (bin_spans, bin_dropped) =
+        export::decode_auto(&export::encode_binary(&spans, 7)).expect("binary via auto");
+    assert_eq!(bin_spans, spans);
+    assert_eq!(bin_dropped, 7);
+    let json = export::encode_json(&spans, 7);
+    let (json_spans, json_dropped) = export::decode_auto(json.as_bytes()).expect("json via auto");
+    assert_eq!(json_spans, spans);
+    assert_eq!(json_dropped, 7);
+}
+
+/// Tentpole acceptance: replay a deterministic fault schedule — a
+/// slow-step poison request joins one lane late in a long run — and the
+/// detector flags that lane (and only that lane) on the third slow
+/// step, while the lane's *cumulative* p99 still reads the baseline:
+/// three slow samples in four hundred are under the 1% tail, which is
+/// exactly why control loops must consume `AnomalyFlags`, not the
+/// cumulative histograms.
+#[test]
+fn injected_slow_step_flags_only_the_poisoned_lane_before_p99_moves() {
+    let mut plan = FaultPlan::default().poison(13, FaultKind::SlowStep);
+    plan.slow_ms = 50; // well past the z threshold over a 10ms baseline
+    let slow_s = plan.slow_ms as f64 / 1e3;
+    let injector = FaultInjector::new(plan);
+    let detector = AnomalyDetector::default();
+    let metrics = Metrics::new();
+    let base = 0.010;
+    let mut flagged_at = None;
+    for step in 0..500u64 {
+        // Two lanes step in lockstep; the poison request (seed 13)
+        // joins lane-a's cohort at step 400.
+        let lanes: [(&str, &'static str, [u64; 2]); 2] = [
+            ("lane-a", "lane_a_step", [1, if step >= 400 { 13 } else { 2 }]),
+            ("lane-b", "lane_b_step", [3, 4]),
+        ];
+        for (lane, hist, seeds) in lanes {
+            let mut latency = base;
+            if let Some(kind) = injector.probe("scheduler.step", &seeds) {
+                assert_eq!(kind, FaultKind::SlowStep, "only the slow poison is scheduled");
+                assert_eq!(lane, "lane-a", "only the poisoned lane draws faults");
+                assert!(step >= 400);
+                latency += slow_s;
+            }
+            metrics.observe_s(hist, latency);
+            detector.observe_with_metrics(lane, Channel::StepLatency, latency, &metrics);
+        }
+        if detector.is_degrading("lane-a") {
+            flagged_at = Some(step);
+            break;
+        }
+    }
+    let flagged_at = flagged_at.expect("poisoned lane must flag");
+    assert_eq!(flagged_at, 402, "deterministic: the third slow step flips the flag");
+    assert!(!detector.is_degrading("lane-b"));
+    assert_eq!(detector.flags().lanes, vec!["lane-a".to_string()]);
+    // The flag leads the cumulative signal: lane-a's own p99 is still
+    // on the baseline bucket, nowhere near the slow value.
+    let p99 = metrics.quantile_s("lane_a_step", 0.99).expect("lane-a histogram");
+    assert!(p99 < base + slow_s / 2.0, "flag must lead cumulative p99 (p99={p99})");
+    let summary = metrics.latency_summary("lane_a_step").expect("summary");
+    assert_eq!(summary.count, 403);
+    // The transition was counted for rendering: `lane_degrading` shows
+    // up in the serve metrics dump.
+    assert_eq!(metrics.counter("lane_degrading"), 1);
+    assert_eq!(metrics.counter("lane_recovered"), 0);
+    assert!(metrics.render().contains("lane_degrading"));
+}
+
+fn tiny_model() -> Arc<HostUVit> {
+    let info = ModelInfo::synthetic("uvit_trace", 4, 2, 16, 2, 3, 5);
+    Arc::new(HostUVit::synthetic(&info, 1, 99))
+}
+
+fn toma_cfg(steps: usize) -> EngineConfig {
+    let mut cfg = EngineConfig::new("uvit_trace", "toma", Some(0.5));
+    cfg.steps = steps;
+    cfg
+}
+
+/// Tentpole end-to-end: a traced scheduler run records the expected
+/// span kinds with consistent lane identity and step alignment, the
+/// trace exports and round-trips, and the inspector renders a critical
+/// path for the slowest cohort step.
+#[test]
+fn scheduler_records_spans_end_to_end() {
+    let model = tiny_model();
+    let sched = Scheduler::new(
+        BatchPolicy {
+            max_batch: 4,
+            max_queue_wait_s: 0.25,
+            ..Default::default()
+        },
+        move |cfg: &EngineConfig| HostBackend::boxed(model.clone(), cfg.clone(), 4, DEFAULT_TAU),
+    )
+    .with_trace(Tracer::new(1 << 12));
+    let cfg = toma_cfg(6);
+    let reqs: Vec<GenRequest> = (0..3).map(|i| GenRequest::new("cat", i)).collect();
+    let comps = sched.run_batch(&cfg, reqs);
+    assert_eq!(comps.len(), 3);
+    assert!(comps.iter().all(|c| c.result.is_ok()));
+    sched.shutdown();
+
+    let spans = sched.tracer().drain();
+    let lane = lane_hash(&cfg.key());
+    assert!(spans.iter().all(|s| s.lane == lane), "one lane config => one lane hash");
+    assert!(spans.iter().all(|s| s.kind != SpanKind::Fault), "no faults injected");
+    let kinds = |k: SpanKind| spans.iter().filter(|s| s.kind == k).count();
+    assert_eq!(kinds(SpanKind::Submit), 3, "one submit span per request");
+    assert_eq!(kinds(SpanKind::QueueWait), 3, "one queue-wait span per admission");
+    assert!(kinds(SpanKind::Step) >= 6, "at least one gemm span per cohort step");
+    assert!(kinds(SpanKind::Select) >= 1, "step 0 is a RefreshAll");
+    assert!(kinds(SpanKind::Formation) >= 1, "the idle lane ran a formation round");
+    // Step alignment: every select/refresh span abuts its own step's
+    // gemm span exactly — the gemm starts where the plan work ended.
+    for s in spans.iter().filter(|s| s.kind == SpanKind::Select || s.kind == SpanKind::Refresh) {
+        assert!(
+            spans.iter().any(|g| g.kind == SpanKind::Step
+                && g.site == Site::Scheduler
+                && g.step == s.step
+                && g.start_us == s.end_us()),
+            "no gemm span abuts plan span at step {}",
+            s.step
+        );
+    }
+    // The drained trace exports, round-trips, and renders a breakdown.
+    let json = export::encode_json(&spans, sched.tracer().dropped_spans());
+    let (rt, _) = export::decode_json(&json).expect("round-trip");
+    assert_eq!(rt, spans);
+    let text = export::breakdown(&spans, 0);
+    assert!(text.contains("slowest cohort step"), "inspector output:\n{text}");
+    // The lane-health counter always renders, even when never raised.
+    assert_eq!(sched.anomaly_flags().lanes.len(), 0);
+    assert!(sched.metrics.render().contains("lane_degrading"));
+}
