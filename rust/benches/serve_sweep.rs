@@ -27,6 +27,16 @@
 //! in-bench gate holds tracing-on to < 3% median overhead. When
 //! `TOMA_TRACE_DIR` is set, the last traced run is exported there as
 //! `TRACE_serve_sweep.json` + `.bin` (the CI trace artifact).
+//!
+//! The `serve_plan_cache` section (PR 8) serves a same-seed, same-prompt
+//! request family one-at-a-time on a single lane while sweeping the
+//! fingerprinted plan-cache tolerance off → 0 (exact) → loose. Hit /
+//! miss / evict counters, per-request refresh counts and hit rates land
+//! in the JSON as notes; in-bench asserts require the actual selection
+//! count (`cohort_refresh_all` after downgrade accounting) to strictly
+//! decrease as the tolerance grows, tolerance 0 to stay bit-identical to
+//! the uncached baseline, and the loose-tolerance latent to stay inside
+//! a documented `precision_delta` envelope.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -38,6 +48,7 @@ use toma::coordinator::scheduler::{
 use toma::coordinator::trace::{export, DEFAULT_CAPACITY};
 use toma::coordinator::{EngineConfig, FaultKind, FaultPlan, GenRequest, RetryPolicy, Tracer};
 use toma::model::HostUVit;
+use toma::quality::{precision_delta, FeatureExtractor, PrecisionDelta};
 use toma::report::Table;
 use toma::runtime::ModelInfo;
 use toma::toma::plan::ReuseSchedule;
@@ -164,6 +175,32 @@ fn run_traced(model: &Arc<HostUVit>) -> (f64, Scheduler) {
     let ok = comps.iter().filter(|c| c.result.is_ok()).count();
     assert_eq!(ok, REQUESTS, "all requests must succeed");
     (wall, s)
+}
+
+/// Same-seed, same-prompt family served one-at-a-time on a single lane
+/// (PR 8): cohorts of one, so every `RefreshAll` boundary is a
+/// plan-cache opportunity — within request 1 (band reuse under a loose
+/// tolerance) and across requests 2..N (exact replay of a bit-identical
+/// trajectory). Returns (wall_s, one family latent, scheduler).
+fn run_family(model: &Arc<HostUVit>, cfg: &EngineConfig) -> (f64, Vec<f32>, Scheduler) {
+    let s = scheduler(model, closed_base(1));
+    let reqs: Vec<GenRequest> = (0..REQUESTS)
+        .map(|_| GenRequest::new("a photo of a goldfish", 0xFA117))
+        .collect();
+    let t0 = Instant::now();
+    let comps = s.run_batch(cfg, reqs);
+    let wall = t0.elapsed().as_secs_f64();
+    let ok = comps.iter().filter(|c| c.result.is_ok()).count();
+    assert_eq!(ok, REQUESTS, "all family requests must succeed");
+    let latent = comps
+        .last()
+        .unwrap()
+        .result
+        .as_ref()
+        .expect("family completion")
+        .latent
+        .clone();
+    (wall, latent, s)
 }
 
 /// Open-loop run honoring Poisson arrival offsets; all requests awaited.
@@ -423,4 +460,121 @@ fn main() {
         s.shutdown();
     }
     println!("\n{}", open.render());
+
+    // Plan-cache section (PR 8): a same-seed, same-prompt family served
+    // as cohorts of one on a single lane, sweeping the fingerprint
+    // tolerance off -> 0 (exact) -> loose. dest_every=2 gives five
+    // RefreshAll boundaries per request (steps 0,2,4,6,8); the cache
+    // band window 4*dest_every=8 puts steps 0-6 in band 0 and step 8 in
+    // band 1. Expected selection counts (`cohort_refresh_all` after the
+    // hit-downgrade accounting), asserted as a strict decrease:
+    //   off   — every boundary selects:                  8*5 = 40
+    //   tol 0 — within-request latents drift bitwise, so request 1
+    //           misses all five boundaries; requests 2-8 replay a
+    //           bit-identical trajectory and hit everything:     5
+    //   loose — request 1 additionally reuses its own band-0 entry
+    //           at steps 2/4/6, leaving one selection per band:   2
+    // Quality gate: tolerance 0 must be bit-identical to the uncached
+    // baseline (precision_delta exactly zero). The loose latent may
+    // drift — stale plans reshuffle merges — but must stay inside a
+    // sanity envelope: dino_delta < 0.5 (feature cosine > 0.5) and a
+    // finite max|d|; staleness must degrade, never derail, the image.
+    let mut pc_cfg = cfg();
+    pc_cfg.schedule = ReuseSchedule {
+        dest_every: 2,
+        weight_every: 5,
+    };
+    let mut pc_table = Table::new(&format!(
+        "serve_plan_cache: {REQUESTS} same-seed requests, {STEPS} steps, dest_every=2, batch=1"
+    ))
+    .headers(&[
+        "Tolerance", "Wall (s)", "Selects", "Hits", "Misses", "Evicts", "Hit rate", "DINO d",
+        "MSE", "Max |d|",
+    ]);
+    let mut pc_selects: Vec<u64> = vec![];
+    let mut pc_deltas: Vec<PrecisionDelta> = vec![];
+    let mut pc_reference: Vec<f32> = vec![];
+    for (name, tol) in [
+        ("serve_plan_cache_off", None),
+        ("serve_plan_cache_tol0", Some(0.0f64)),
+        ("serve_plan_cache_loose", Some(10.0f64)),
+    ] {
+        let case_cfg = match tol {
+            Some(t) => pc_cfg.clone().with_plan_tolerance(t),
+            None => pc_cfg.clone(),
+        };
+        let mut runs: Vec<(f64, Vec<f32>, Scheduler)> = vec![];
+        let wall = runner.bench(name, || {
+            runs.push(run_family(&model, &case_cfg));
+        });
+        let (_, latent, s) = runs.pop().unwrap_or_else(|| run_family(&model, &case_cfg));
+        for (_, _, prev) in runs.drain(..) {
+            prev.shutdown();
+        }
+        // Join lanes before reading counters so plan accounting is final.
+        s.shutdown();
+        let selects = s.metrics.counter("cohort_refresh_all");
+        let hits = s.metrics.counter("cohort_cache_hits");
+        let misses = s.metrics.counter("cohort_cache_misses");
+        let evicts = s.metrics.counter("cohort_cache_evictions");
+        let probes = hits + misses;
+        let hit_rate = if probes > 0 { hits as f64 / probes as f64 } else { 0.0 };
+        let delta = if pc_reference.is_empty() {
+            pc_reference = latent;
+            PrecisionDelta::default()
+        } else {
+            let fx = FeatureExtractor::new(pc_reference.len(), 64, 11);
+            precision_delta(&fx, &pc_reference, &latent)
+        };
+        pc_table.row(vec![
+            tol.map_or("off".to_string(), |t| format!("{t}")),
+            format!("{wall:.3}"),
+            format!("{selects}"),
+            format!("{hits}"),
+            format!("{misses}"),
+            format!("{evicts}"),
+            format!("{:.0}%", hit_rate * 100.0),
+            format!("{:.4}", delta.dino_delta),
+            format!("{:.4}", delta.mse),
+            format!("{:.2e}", delta.max_abs),
+        ]);
+        runner.note(&format!("{name}_selections"), &selects.to_string());
+        runner.note(&format!("{name}_cache_hits"), &hits.to_string());
+        runner.note(&format!("{name}_cache_misses"), &misses.to_string());
+        runner.note(&format!("{name}_cache_evictions"), &evicts.to_string());
+        runner.note(
+            &format!("{name}_refresh_per_req"),
+            &format!("{:.3}", selects as f64 / REQUESTS as f64),
+        );
+        runner.note(&format!("{name}_hit_rate"), &format!("{hit_rate:.3}"));
+        pc_selects.push(selects);
+        pc_deltas.push(delta);
+    }
+    println!("\n{}", pc_table.render());
+
+    // Acceptance: the cache must skip real selection work, more of it as
+    // the tolerance loosens — strictly fewer `fl_select_regions`
+    // invocations at each step of the sweep.
+    assert!(
+        pc_selects[0] > pc_selects[1] && pc_selects[1] > pc_selects[2],
+        "selection count must strictly decrease as tolerance grows \
+         (off > tol0 > loose): {pc_selects:?}"
+    );
+    // Exact-sketch reuse is bit-identical to the uncached baseline.
+    assert!(
+        pc_deltas[1].mse == 0.0 && pc_deltas[1].max_abs == 0.0,
+        "tolerance-0 reuse must be bit-identical to the uncached run: {:?}",
+        pc_deltas[1]
+    );
+    // Loose reuse: drift allowed, inside the documented envelope above.
+    assert!(
+        pc_deltas[2].dino_delta < 0.5 && pc_deltas[2].max_abs.is_finite(),
+        "loose-tolerance drift escaped the sanity envelope: {:?}",
+        pc_deltas[2]
+    );
+    println!(
+        "serve_plan_cache: selections off/tol0/loose {pc_selects:?}, \
+         loose drift dino {:.4} mse {:.4}",
+        pc_deltas[2].dino_delta, pc_deltas[2].mse
+    );
 }

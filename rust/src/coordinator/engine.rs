@@ -11,20 +11,21 @@
 //! Everything heavy runs inside XLA; the engine's own overhead is tracked
 //! separately (`GenStats::host_s`) and asserted small in the perf pass.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use super::plan_cache::PlanSlot;
+use super::plan_cache::{CacheKey, PlanCache, PlanSlot};
 use super::request::{EngineConfig, GenRequest, GenResult, GenStats};
 use crate::anyhow;
 use crate::diffusion::{cfg_mix, ddim_update, euler_update, NoiseSchedule, SamplerKind};
 use crate::runtime::executor::{Arg, DeviceInput, Input};
 use crate::runtime::{ArtifactEntry, Dtype, Executor, Literal, ModelInfo, Runtime};
 use crate::tensor::element::StorageDtype;
-use crate::util::error::Result;
+use crate::toma::fingerprint::fingerprint;
 use crate::toma::plan::{MergePlan, PlanAction};
 use crate::toma::regions::{RegionLayout, RegionMode};
-use crate::util::Pcg64;
+use crate::util::error::Result;
+use crate::util::{lock_unpoisoned, Pcg64};
 use crate::workload::prompts::embed_prompt;
 
 /// Initial latent noise shared by every engine implementation: one
@@ -63,6 +64,9 @@ pub struct Engine {
     /// Region layout of the selection artifact (global-id translation for
     /// the Globalize path and the Fig. 4 trace).
     select_layout: Option<RegionLayout>,
+    /// PR 8 fingerprinted plan cache, shared across this engine's
+    /// generations (same-seed request families hit across requests).
+    plan_cache: Mutex<PlanCache>,
 }
 
 impl Engine {
@@ -144,6 +148,7 @@ impl Engine {
 
         let sampler = SamplerKind::for_model_kind(&info.kind);
         let schedule = NoiseSchedule::new(sampler, cfg.steps);
+        let plan_cache = Mutex::new(PlanCache::from_config(&cfg));
         Ok(Engine {
             cfg,
             runtime,
@@ -154,6 +159,7 @@ impl Engine {
             schedule,
             plan_path,
             select_layout,
+            plan_cache,
         })
     }
 
@@ -388,11 +394,42 @@ impl Engine {
                 match slot.decide(&self.cfg.schedule, step as u64) {
                     PlanAction::RefreshAll => {
                         let t0 = Instant::now();
-                        let (img, txt) =
-                            self.run_select(&x_t, &tv, &cond, step as u64, req.seed)?;
-                        slot.install(img, txt);
-                        plan_dev = self.upload_plan(&slot)?;
-                        stats.select_calls += 1;
+                        // PR 8: sketch the latent the selection would read
+                        // and ask the cache before running selection. The
+                        // (C, H, W) latent is viewed as C regions of H
+                        // rows of W features — any fixed deterministic
+                        // view works for a sketch.
+                        let mut cache = lock_unpoisoned(&self.plan_cache);
+                        let probe = cache.enabled().then(|| {
+                            let (g, n, d) =
+                                (info.channels, info.latent_hw, info.latent_hw);
+                            let fp = fingerprint(&x_t[..per], g, n, d);
+                            (CacheKey::new(step as u64, &self.cfg.schedule, g, n, d), fp)
+                        });
+                        let hit = match &probe {
+                            Some((key, fp)) => {
+                                cache.try_serve(&mut slot, key, fp, step as u64)
+                            }
+                            None => false,
+                        };
+                        if hit {
+                            // The cached plan still needs device residency.
+                            plan_dev = self.upload_plan(&slot)?;
+                            stats.plan_cache_hits += 1;
+                        } else {
+                            if probe.is_some() {
+                                stats.plan_cache_misses += 1;
+                            }
+                            let (img, txt) =
+                                self.run_select(&x_t, &tv, &cond, step as u64, req.seed)?;
+                            slot.install(img, txt);
+                            if let Some((key, fp)) = probe {
+                                cache.admit(&mut slot, key, fp);
+                            }
+                            plan_dev = self.upload_plan(&slot)?;
+                            stats.select_calls += 1;
+                        }
+                        drop(cache);
                         stats.select_s += t0.elapsed().as_secs_f64();
                     }
                     PlanAction::RefreshWeights => {
@@ -405,6 +442,9 @@ impl Engine {
                     }
                     PlanAction::Reuse => {
                         stats.plan_reuses += 1;
+                    }
+                    PlanAction::ReuseCached => {
+                        unreachable!("decide never yields ReuseCached")
                     }
                 }
                 if req.trace {

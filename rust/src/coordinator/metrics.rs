@@ -134,11 +134,23 @@ impl Metrics {
     }
 
     /// Aggregate one cohort's plan-cache statistics into counters
-    /// (`<prefix>_refresh_all` / `_refresh_weights` / `_reuses`).
+    /// (`<prefix>_refresh_all` / `_refresh_weights` / `_reuses`, plus the
+    /// PR 8 `_cache_hits` / `_cache_misses` / `_cache_evictions` trio —
+    /// emitted only when nonzero, so cache-disabled lanes don't grow
+    /// three permanently-zero counters per prefix).
     pub fn record_plan_stats(&self, prefix: &str, s: &PlanStats) {
         self.add_owned(&format!("{prefix}_refresh_all"), s.refresh_all);
         self.add_owned(&format!("{prefix}_refresh_weights"), s.refresh_weights);
         self.add_owned(&format!("{prefix}_reuses"), s.reuses);
+        if s.cache_hits > 0 {
+            self.add_owned(&format!("{prefix}_cache_hits"), s.cache_hits);
+        }
+        if s.cache_misses > 0 {
+            self.add_owned(&format!("{prefix}_cache_misses"), s.cache_misses);
+        }
+        if s.cache_evictions > 0 {
+            self.add_owned(&format!("{prefix}_cache_evictions"), s.cache_evictions);
+        }
     }
 
     /// One quantile (seconds) of a histogram, `q` in [0, 1]. Rendering /
@@ -254,12 +266,21 @@ mod tests {
             refresh_all: 2,
             refresh_weights: 3,
             reuses: 15,
+            ..PlanStats::default()
         };
         m.record_plan_stats("cohort", &s);
         m.record_plan_stats("cohort", &s);
         assert_eq!(m.counter("cohort_refresh_all"), 4);
         assert_eq!(m.counter("cohort_refresh_weights"), 6);
         assert_eq!(m.counter("cohort_reuses"), 30);
+        // No cache activity: the cache trio must not appear at all.
+        let snap = m.snapshot();
+        assert!(snap.counters.iter().all(|(k, _)| !k.contains("cache")), "{snap:?}");
+        let c = PlanStats { cache_hits: 5, cache_misses: 2, ..PlanStats::default() };
+        m.record_plan_stats("cohort", &c);
+        assert_eq!(m.counter("cohort_cache_hits"), 5);
+        assert_eq!(m.counter("cohort_cache_misses"), 2);
+        assert_eq!(m.counter("cohort_cache_evictions"), 0);
     }
 
     #[test]

@@ -34,6 +34,19 @@
 //! retry rate, flagging `lane_degrading` before cumulative p99 moves.
 //! Control loops consume [`AnomalyFlags`] or `scheduler::DecayedTail` —
 //! never the cumulative histograms in [`metrics`] (see its header).
+//!
+//! Since PR 8 refreshes are *memoized* (see [`plan_cache`]): an opt-in
+//! fingerprinted [`PlanCache`] per lane sketches each `RefreshAll` input
+//! (seeded random projections, `toma::fingerprint`) and downgrades the
+//! refresh to a cache install on a match within the configured tolerance
+//! (`EngineConfig::plan_tolerance` / `TOMA_PLAN_TOLERANCE`), skipping
+//! `similarity_matrix` + `fl_select_regions` entirely — within a request,
+//! across cohort admissions, and across requests on the same lane. A
+//! non-default tolerance keys its own lanes ([`EngineConfig::key`]), so
+//! the default path stays bit-exact; `tolerance = 0` is exact-sketch
+//! reuse and bit-identical by construction. Hit/miss/evict counts flow
+//! into [`PlanStats`], `cache-hit`/`cache-miss` spans, and the anomaly
+//! detector's `cache-miss` channel.
 
 pub mod engine;
 pub mod fault;
@@ -49,7 +62,7 @@ pub use engine::Engine;
 pub use fault::{FaultInjector, FaultKind, FaultPlan};
 pub use frontend::{Job, LaneFrontEnd, LaneJob, RetryPolicy, SupervisionPolicy};
 pub use metrics::{LatencySummary, Metrics, MetricsSnapshot};
-pub use plan_cache::{PlanSlot, PlanStats};
+pub use plan_cache::{CacheKey, PlanCache, PlanSlot, PlanStats};
 pub use request::{EngineConfig, GenRequest, GenResult, GenStats};
 pub use scheduler::{
     AdaptivePolicy, BatchPolicy, Cohort, CohortBackend, HostBackend, HostEngine, LanePolicy,

@@ -1,11 +1,48 @@
-//! The merge-plan cache — the runtime embodiment of Sec. 4.3.2.
+//! The merge-plan cache — the runtime embodiment of Sec. 4.3.2, grown in
+//! PR 8 from a per-generation slot into a fingerprint-keyed reuse cache.
 //!
-//! Each in-flight generation owns a [`PlanSlot`] holding the current
-//! [`MergePlan`] (destinations + `A~`); the reuse schedule decides per step
-//! whether the coordinator reruns the selection artifact, rebuilds weights
-//! only, or reuses the cached plan. Aggregate hit statistics feed the
-//! metrics registry and the Table 8 harness.
+//! Two layers:
+//!
+//! * [`PlanSlot`] — per-cohort/per-request state: the current [`MergePlan`]
+//!   (destinations + `A~`), driven step-by-step by the [`ReuseSchedule`]
+//!   cadence (recompute / weights-only / reuse), with [`PlanStats`]
+//!   accounting.
+//! * [`PlanCache`] — the PR 8 tentpole: a bounded, LRU-evicted map from
+//!   *fingerprints* of refresh inputs to completed plans. At every
+//!   `RefreshAll` boundary the refresh site sketches the hidden states it
+//!   is about to select over ([`crate::toma::fingerprint`]: seeded
+//!   random-projection linear sums + quadratic Gram energies per region,
+//!   fixed width, no sorting) and asks the cache first. On a match within
+//!   the opt-in tolerance the `RefreshAll` is *downgraded* to a cache
+//!   install ([`PlanAction::ReuseCached`]) — `similarity_matrix` and
+//!   `fl_select_regions` are skipped entirely, not merely rescheduled.
+//!
+//! **Key structure.** Entries are keyed by [`CacheKey`]: a *step band*
+//! (`step / (4·dest_every)` — refresh inputs from the same phase of the
+//! denoising trajectory may match; early and late diffusion never do) plus
+//! the exact `(groups, n_loc, d)` shape of the selection input. The two
+//! remaining axes of the ISSUE's per-(step-band, shape, storage-dtype)
+//! contract are carried by *lane keying*, one level up: caches live per
+//! lane (one `Cohort` or `Engine` per lane), lanes are keyed by
+//! [`EngineConfig::key`], and both the storage dtype and the plan tolerance
+//! are part of that key. A non-default tolerance therefore keys its own
+//! lanes exactly like non-f32 storage does — the bit-exact default path
+//! (tolerance unset) never shares a lane, a cache, or a plan with a
+//! tolerant one.
+//!
+//! **Eviction rule.** Bounded capacity ([`DEFAULT_PLAN_CACHE_CAPACITY`]);
+//! on overflow the least-recently-*used* entry is evicted (hits refresh
+//! recency; inserts count as first use), and every eviction is recorded in
+//! `PlanStats::cache_evictions`.
+//!
+//! **Accounting.** A downgraded refresh moves one unit from
+//! `refresh_all` to `cache_hits` in the same [`PlanStats`], so
+//! `total()` still counts every decided step exactly once and the
+//! serve-path counters (`cohort_refresh_all`, select-call asserts in the
+//! benches) directly reflect the selections actually run.
 
+use crate::coordinator::request::EngineConfig;
+use crate::toma::fingerprint::{self, Fingerprint};
 use crate::toma::plan::{MergePlan, PlanAction, ReuseSchedule};
 
 /// Cached plan state for one generation (and for DiT, the text modality).
@@ -21,19 +58,49 @@ pub struct PlanStats {
     pub refresh_all: u64,
     pub refresh_weights: u64,
     pub reuses: u64,
+    /// RefreshAll boundaries downgraded to a plan-cache install.
+    pub cache_hits: u64,
+    /// RefreshAll boundaries that probed the cache and ran selection.
+    pub cache_misses: u64,
+    /// Entries evicted to honor the cache capacity bound.
+    pub cache_evictions: u64,
 }
 
 impl PlanStats {
+    /// Steps decided (cache hits were decided as RefreshAll then
+    /// reclassified, so the sum still counts each step once).
     pub fn total(&self) -> u64 {
-        self.refresh_all + self.refresh_weights + self.reuses
+        self.refresh_all + self.refresh_weights + self.reuses + self.cache_hits
     }
 
-    /// Fraction of steps served without any recompute.
+    /// Fraction of steps served without any recompute (schedule reuses
+    /// plus plan-cache hits).
     pub fn hit_rate(&self) -> f64 {
         if self.total() == 0 {
             return 0.0;
         }
-        self.reuses as f64 / self.total() as f64
+        (self.reuses + self.cache_hits) as f64 / self.total() as f64
+    }
+
+    /// Fraction of cache probes that hit (0.0 before any probe).
+    pub fn cache_hit_rate(&self) -> f64 {
+        let probes = self.cache_hits + self.cache_misses;
+        if probes == 0 {
+            return 0.0;
+        }
+        self.cache_hits as f64 / probes as f64
+    }
+
+    /// Field-wise difference since `prev` (both monotone across steps).
+    pub fn delta_since(&self, prev: &PlanStats) -> PlanStats {
+        PlanStats {
+            refresh_all: self.refresh_all.saturating_sub(prev.refresh_all),
+            refresh_weights: self.refresh_weights.saturating_sub(prev.refresh_weights),
+            reuses: self.reuses.saturating_sub(prev.reuses),
+            cache_hits: self.cache_hits.saturating_sub(prev.cache_hits),
+            cache_misses: self.cache_misses.saturating_sub(prev.cache_misses),
+            cache_evictions: self.cache_evictions.saturating_sub(prev.cache_evictions),
+        }
     }
 }
 
@@ -45,6 +112,7 @@ impl PlanSlot {
             PlanAction::RefreshAll => self.stats.refresh_all += 1,
             PlanAction::RefreshWeights => self.stats.refresh_weights += 1,
             PlanAction::Reuse => self.stats.reuses += 1,
+            PlanAction::ReuseCached => unreachable!("schedule.action never yields ReuseCached"),
         }
         action
     }
@@ -65,7 +133,9 @@ impl PlanSlot {
     }
 
     /// Reset for a fresh cohort: drop the cached plans and zero the
-    /// statistics, returning the accumulated stats for aggregation.
+    /// statistics, returning the accumulated stats for aggregation. The
+    /// sibling [`PlanCache`] is deliberately *not* reset — it outlives
+    /// cohorts so same-family requests hit across admissions.
     pub fn reset(&mut self) -> PlanStats {
         let stats = self.stats;
         *self = PlanSlot::default();
@@ -73,9 +143,158 @@ impl PlanSlot {
     }
 }
 
+/// Default bound on live [`PlanCache`] entries per lane.
+pub const DEFAULT_PLAN_CACHE_CAPACITY: usize = 32;
+
+/// Cache key: step band + exact selection-input shape (see module docs for
+/// why storage dtype and tolerance are *not* here — lane keying carries
+/// them).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CacheKey {
+    /// `step / (4·dest_every)`: four refresh windows per band, so nearby
+    /// boundaries may share plans while early/late diffusion never mix.
+    pub band: u64,
+    pub groups: usize,
+    pub n_loc: usize,
+    pub d: usize,
+}
+
+impl CacheKey {
+    pub fn new(step: u64, schedule: &ReuseSchedule, groups: usize, n_loc: usize, d: usize) -> Self {
+        let window = (4 * schedule.dest_every).max(1);
+        CacheKey { band: step / window, groups, n_loc, d }
+    }
+}
+
+struct CacheEntry {
+    key: CacheKey,
+    fp: Fingerprint,
+    img: MergePlan,
+    txt: Option<MergePlan>,
+    last_used: u64,
+}
+
+/// Fingerprint-keyed plan cache (see module docs). One per lane: a field
+/// of the scheduler's `Cohort` (surviving `PlanSlot::reset` across
+/// admissions) and of the pjrt `Engine` (shared across that worker's
+/// requests). Disabled (`tolerance == None`) it is inert and free: callers
+/// gate the fingerprint computation on [`PlanCache::enabled`].
+pub struct PlanCache {
+    tolerance: Option<f64>,
+    capacity: usize,
+    entries: Vec<CacheEntry>,
+    tick: u64,
+}
+
+impl PlanCache {
+    pub fn new(tolerance: Option<f64>, capacity: usize) -> Self {
+        PlanCache { tolerance, capacity: capacity.max(1), entries: Vec::new(), tick: 0 }
+    }
+
+    /// Cache for one lane of `cfg`: enabled iff a plan tolerance is
+    /// resolved (config field, else the `TOMA_PLAN_TOLERANCE` ambient).
+    pub fn from_config(cfg: &EngineConfig) -> Self {
+        PlanCache::new(cfg.resolved_plan_tolerance(), DEFAULT_PLAN_CACHE_CAPACITY)
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.tolerance.is_some()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Probe the cache at a `RefreshAll` boundary. On a hit, installs the
+    /// cached plans into `slot` with `dest_step`/`weight_step` restamped
+    /// to `step` (so the reuse cadence continues exactly as after a real
+    /// selection), moves the decided `refresh_all` unit to `cache_hits`,
+    /// and returns `true`. On a miss records `cache_misses` and returns
+    /// `false`; the caller runs selection and should [`PlanCache::admit`]
+    /// the result.
+    pub fn try_serve(
+        &mut self,
+        slot: &mut PlanSlot,
+        key: &CacheKey,
+        fp: &Fingerprint,
+        step: u64,
+    ) -> bool {
+        let tolerance = match self.tolerance {
+            Some(t) => t,
+            None => return false,
+        };
+        self.tick += 1;
+        let hit = self
+            .entries
+            .iter_mut()
+            .find(|e| e.key == *key && fingerprint::matches(&e.fp, fp, tolerance));
+        match hit {
+            Some(entry) => {
+                entry.last_used = self.tick;
+                let mut img = entry.img.clone();
+                img.dest_step = step;
+                img.weight_step = step;
+                let txt = entry.txt.clone().map(|mut t| {
+                    t.dest_step = step;
+                    t.weight_step = step;
+                    t
+                });
+                slot.install(img, txt);
+                slot.stats.refresh_all = slot.stats.refresh_all.saturating_sub(1);
+                slot.stats.cache_hits += 1;
+                true
+            }
+            None => {
+                slot.stats.cache_misses += 1;
+                false
+            }
+        }
+    }
+
+    /// Admit the freshly selected plans now installed in `slot` under
+    /// `(key, fp)`, evicting the least-recently-used entry if full
+    /// (recorded in `slot.stats.cache_evictions`). No-op when disabled or
+    /// when the slot holds no plan.
+    pub fn admit(&mut self, slot: &mut PlanSlot, key: CacheKey, fp: Fingerprint) {
+        if !self.enabled() {
+            return;
+        }
+        let img = match &slot.img {
+            Some(p) => p.clone(),
+            None => return,
+        };
+        self.tick += 1;
+        if self.entries.len() >= self.capacity {
+            if let Some(lru) = self
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(i, _)| i)
+            {
+                self.entries.swap_remove(lru);
+                slot.stats.cache_evictions += 1;
+            }
+        }
+        self.entries.push(CacheEntry {
+            key,
+            fp,
+            img,
+            txt: slot.txt.clone(),
+            last_used: self.tick,
+        });
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::toma::fingerprint::fingerprint;
+    use crate::util::rng::Pcg64;
 
     fn plan(dest_step: u64, weight_step: u64) -> MergePlan {
         MergePlan {
@@ -104,7 +323,7 @@ mod tests {
                 PlanAction::RefreshWeights => {
                     slot.refresh_weights(vec![1.0], vec![], step);
                 }
-                PlanAction::Reuse => {}
+                PlanAction::Reuse | PlanAction::ReuseCached => {}
             }
         }
         assert_eq!(slot.stats.refresh_all, 5);
@@ -167,7 +386,7 @@ mod tests {
                 match a {
                     PlanAction::RefreshAll => shared.install(plan(step, step), None),
                     PlanAction::RefreshWeights => shared.refresh_weights(vec![1.0], vec![], step),
-                    PlanAction::Reuse => {}
+                    PlanAction::Reuse | PlanAction::ReuseCached => {}
                 }
                 shared_actions.push(a);
             }
@@ -181,7 +400,7 @@ mod tests {
                 match a {
                     PlanAction::RefreshAll => own.install(plan(step, step), None),
                     PlanAction::RefreshWeights => own.refresh_weights(vec![1.0], vec![], step),
-                    PlanAction::Reuse => {}
+                    PlanAction::Reuse | PlanAction::ReuseCached => {}
                 }
                 own_actions.push(a);
             }
@@ -204,7 +423,7 @@ mod tests {
             match slot.decide(&schedule, step) {
                 PlanAction::RefreshAll => slot.install(plan(step, step), None),
                 PlanAction::RefreshWeights => slot.refresh_weights(vec![1.0], vec![], step),
-                PlanAction::Reuse => {}
+                PlanAction::Reuse | PlanAction::ReuseCached => {}
             }
         }
         assert_eq!(slot.stats.refresh_all, 2); // steps 0 and 10
@@ -222,5 +441,115 @@ mod tests {
         assert_eq!(p.a_tilde, vec![0.5]);
         assert_eq!(p.weight_step, 5);
         assert_eq!(p.dest_step, 0);
+    }
+
+    // ---- PlanCache (PR 8) ----
+
+    fn fp(seed: u64) -> Fingerprint {
+        fingerprint(&Pcg64::new(seed).normal_vec(4 * 8), 1, 4, 8)
+    }
+
+    fn key(band: u64) -> CacheKey {
+        CacheKey { band, groups: 1, n_loc: 4, d: 8 }
+    }
+
+    #[test]
+    fn disabled_cache_is_inert() {
+        let mut cache = PlanCache::new(None, 4);
+        assert!(!cache.enabled());
+        let mut slot = PlanSlot::default();
+        slot.install(plan(0, 0), None);
+        cache.admit(&mut slot, key(0), fp(1));
+        assert!(cache.is_empty());
+        assert!(!cache.try_serve(&mut slot, &key(0), &fp(1), 0));
+        // A disabled probe records nothing — the default path is untouched.
+        assert_eq!(slot.stats, PlanStats::default());
+    }
+
+    #[test]
+    fn exact_hit_installs_restamped_plan_and_reclassifies() {
+        let mut cache = PlanCache::new(Some(0.0), 4);
+        let mut slot = PlanSlot::default();
+        // Selection happened at step 0; admit under band 0.
+        slot.stats.refresh_all = 1;
+        slot.stats.cache_misses = 1;
+        slot.install(plan(0, 0), None);
+        cache.admit(&mut slot, key(0), fp(7));
+        assert_eq!(cache.len(), 1);
+
+        // Same fingerprint probed at step 10 (same band): hit.
+        let mut slot2 = PlanSlot::default();
+        slot2.stats.refresh_all = 1; // decide() already ran
+        assert!(cache.try_serve(&mut slot2, &key(0), &fp(7), 10));
+        let p = slot2.img.as_ref().expect("plan installed");
+        assert_eq!(p.dest_step, 10, "cadence restamped to the serving step");
+        assert_eq!(p.weight_step, 10);
+        assert_eq!(p.idx, plan(0, 0).idx);
+        assert_eq!(slot2.stats.refresh_all, 0, "RefreshAll downgraded");
+        assert_eq!(slot2.stats.cache_hits, 1);
+        assert_eq!(slot2.stats.total(), 1, "the step is still counted once");
+        assert!((slot2.stats.cache_hit_rate() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn exact_mode_misses_on_different_fingerprint_or_key() {
+        let mut cache = PlanCache::new(Some(0.0), 4);
+        let mut slot = PlanSlot::default();
+        slot.install(plan(0, 0), None);
+        cache.admit(&mut slot, key(0), fp(7));
+        let mut probe = PlanSlot::default();
+        assert!(!cache.try_serve(&mut probe, &key(0), &fp(8), 1), "different sketch");
+        assert!(!cache.try_serve(&mut probe, &key(1), &fp(7), 41), "different band");
+        let other_shape = CacheKey { band: 0, groups: 2, n_loc: 4, d: 8 };
+        assert!(!cache.try_serve(&mut probe, &other_shape, &fp(7), 1), "different shape");
+        assert_eq!(probe.stats.cache_misses, 3);
+        assert_eq!(probe.stats.cache_hits, 0);
+    }
+
+    #[test]
+    fn tolerant_mode_accepts_near_sketches() {
+        let base = Pcg64::new(9).normal_vec(4 * 8);
+        let drifted: Vec<f32> = base.iter().map(|v| v * (1.0 + 1e-4)).collect();
+        let fa = fingerprint(&base, 1, 4, 8);
+        let fb = fingerprint(&drifted, 1, 4, 8);
+
+        let mut exact = PlanCache::new(Some(0.0), 4);
+        let mut slot = PlanSlot::default();
+        slot.install(plan(0, 0), None);
+        exact.admit(&mut slot, key(0), fa.clone());
+        let mut probe = PlanSlot::default();
+        assert!(!exact.try_serve(&mut probe, &key(0), &fb, 1), "exact mode rejects drift");
+
+        let mut loose = PlanCache::new(Some(0.01), 4);
+        loose.admit(&mut slot, key(0), fa);
+        assert!(loose.try_serve(&mut probe, &key(0), &fb, 1), "1% tolerance accepts 1e-4 drift");
+    }
+
+    #[test]
+    fn lru_eviction_is_bounded_and_counted() {
+        let mut cache = PlanCache::new(Some(0.0), 2);
+        let mut slot = PlanSlot::default();
+        slot.install(plan(0, 0), None);
+        cache.admit(&mut slot, key(0), fp(1));
+        cache.admit(&mut slot, key(0), fp(2));
+        // Touch fp(1) so fp(2) becomes the LRU entry.
+        let mut probe = PlanSlot::default();
+        assert!(cache.try_serve(&mut probe, &key(0), &fp(1), 1));
+        cache.admit(&mut slot, key(0), fp(3));
+        assert_eq!(cache.len(), 2, "capacity bound holds");
+        assert_eq!(slot.stats.cache_evictions, 1);
+        assert!(cache.try_serve(&mut probe, &key(0), &fp(1), 2), "recently used survived");
+        assert!(!cache.try_serve(&mut probe, &key(0), &fp(2), 3), "LRU entry evicted");
+        assert!(cache.try_serve(&mut probe, &key(0), &fp(3), 4));
+    }
+
+    #[test]
+    fn cache_key_bands_group_four_refresh_windows() {
+        let s = ReuseSchedule::default(); // dest_every 10
+        let k0 = CacheKey::new(0, &s, 1, 4, 8);
+        let k30 = CacheKey::new(30, &s, 1, 4, 8);
+        let k40 = CacheKey::new(40, &s, 1, 4, 8);
+        assert_eq!(k0, k30, "steps 0..39 share band 0");
+        assert_ne!(k0, k40, "step 40 starts band 1");
     }
 }

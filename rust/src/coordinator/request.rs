@@ -24,6 +24,14 @@ pub struct EngineConfig {
     /// own lanes/cohorts (latents are storage-dependent, so mixing
     /// storages in one cohort would break plan compatibility).
     pub storage: StorageDtype,
+    /// Opt-in plan-cache tolerance (PR 8). `None` (the default) disables
+    /// the fingerprinted merge-plan cache entirely and keeps the
+    /// historical [`EngineConfig::key`] unchanged; `Some(t)` enables
+    /// similarity-thresholded plan reuse at refresh boundaries and keys
+    /// its own lanes, exactly like non-f32 storage — a tolerant lane
+    /// never shares plans with the bit-exact default path. `Some(0.0)`
+    /// is exact-fingerprint reuse (bit-identical by construction).
+    pub plan_tolerance: Option<f64>,
 }
 
 impl EngineConfig {
@@ -37,6 +45,7 @@ impl EngineConfig {
             schedule: ReuseSchedule::default(),
             select_mode: "tile".to_string(),
             storage: StorageDtype::F32,
+            plan_tolerance: None,
         }
     }
 
@@ -44,6 +53,26 @@ impl EngineConfig {
     pub fn with_storage(mut self, storage: StorageDtype) -> Self {
         self.storage = storage;
         self
+    }
+
+    /// Builder: enable the fingerprinted plan cache at `tolerance`.
+    pub fn with_plan_tolerance(mut self, tolerance: f64) -> Self {
+        self.plan_tolerance = Some(tolerance);
+        self
+    }
+
+    /// The effective plan-cache tolerance: the config field, or — when
+    /// unset — the `TOMA_PLAN_TOLERANCE` ambient (read at engine/cohort
+    /// construction, mirroring `FaultInjector::from_env`, so [`key`] stays
+    /// purely field-driven and ambient smoke runs don't re-key lanes).
+    ///
+    /// [`key`]: EngineConfig::key
+    pub fn resolved_plan_tolerance(&self) -> Option<f64> {
+        self.plan_tolerance.or_else(|| {
+            std::env::var("TOMA_PLAN_TOLERANCE")
+                .ok()
+                .and_then(|s| s.trim().parse::<f64>().ok())
+        })
     }
 
     /// Does this variant consume ToMA merge weights at runtime?
@@ -58,14 +87,20 @@ impl EngineConfig {
     /// shortest-roundtrip `Display` form, so distinct values never
     /// collide in the key. The storage dtype appears only when it is not
     /// the f32 default, so pre-dtype cohort keys (and any baselines keyed
-    /// on them) are unchanged.
+    /// on them) are unchanged; likewise the plan tolerance appears only
+    /// when explicitly set, so tolerant lanes are segregated from the
+    /// bit-exact default path without perturbing historical keys.
     pub fn key(&self) -> String {
         let storage = match self.storage {
             StorageDtype::F32 => String::new(),
             other => format!(":dt{other}"),
         };
+        let tolerance = match self.plan_tolerance {
+            None => String::new(),
+            Some(t) => format!(":tol{t}"),
+        };
         format!(
-            "{}:{}:{}:{}:{}+{}:s{}:g{}{}",
+            "{}:{}:{}:{}:{}+{}:s{}:g{}{}{}",
             self.model,
             self.variant,
             self.ratio.map(|r| r.to_string()).unwrap_or_default(),
@@ -74,7 +109,8 @@ impl EngineConfig {
             self.schedule.weight_every,
             self.steps,
             self.guidance,
-            storage
+            storage,
+            tolerance
         )
     }
 }
@@ -120,6 +156,12 @@ pub struct GenStats {
     pub select_calls: usize,
     pub weight_refreshes: usize,
     pub plan_reuses: usize,
+    /// RefreshAll boundaries served from the fingerprinted plan cache
+    /// (PR 8) instead of running selection. Always 0 when the cache is
+    /// disabled (plan tolerance unset).
+    pub plan_cache_hits: usize,
+    /// RefreshAll boundaries that probed the cache and ran selection.
+    pub plan_cache_misses: usize,
     /// Largest cohort this request was batched with (micro-batching
     /// scheduler only; 0 for the per-request engines).
     pub cohort_size: usize,
@@ -193,5 +235,34 @@ mod tests {
             a.clone().with_storage(StorageDtype::F16).key(),
             "each storage dtype gets its own cohort"
         );
+    }
+
+    #[test]
+    fn plan_tolerance_keys_its_own_lanes() {
+        let a = EngineConfig::new("uvit_s", "toma", Some(0.5));
+        assert!(a.plan_tolerance.is_none());
+        // Unset tolerance: the exact historical key, no suffix.
+        assert_eq!(a.key(), "uvit_s:toma:0.5:tile:10+5:s50:g5");
+        let b = a.clone().with_plan_tolerance(0.0);
+        assert_eq!(b.key(), "uvit_s:toma:0.5:tile:10+5:s50:g5:tol0");
+        let c = a.clone().with_plan_tolerance(0.05);
+        assert_eq!(c.key(), "uvit_s:toma:0.5:tile:10+5:s50:g5:tol0.05");
+        assert_ne!(b.key(), c.key(), "each tolerance gets its own lanes");
+        // Tolerance and storage suffixes compose.
+        let d = a.clone().with_storage(StorageDtype::Bf16).with_plan_tolerance(0.0);
+        assert_eq!(d.key(), "uvit_s:toma:0.5:tile:10+5:s50:g5:dtbf16:tol0");
+    }
+
+    #[test]
+    fn resolved_tolerance_prefers_explicit_field() {
+        let a = EngineConfig::new("uvit_s", "toma", Some(0.5));
+        let b = a.clone().with_plan_tolerance(0.25);
+        assert_eq!(b.resolved_plan_tolerance(), Some(0.25));
+        // The ambient fallback is covered by the CI TOMA_PLAN_TOLERANCE=0
+        // pass (env mutation in-process would race parallel tests); with
+        // no env and no field it resolves to None on a default test run.
+        if std::env::var("TOMA_PLAN_TOLERANCE").is_err() {
+            assert_eq!(a.resolved_plan_tolerance(), None);
+        }
     }
 }

@@ -17,10 +17,17 @@
 //!   steps). Its group block is dropped from the shared [`MergePlan`]
 //!   mid-window; survivors keep their slices and the cadence bookkeeping
 //!   (`dest_step` / `weight_step`) is untouched.
+//!
+//! Since PR 8 the cohort also owns a [`PlanCache`] *sibling* to the slot:
+//! at every `RefreshAll` boundary the backend fingerprints its refresh
+//! input and may downgrade the refresh to a cache install
+//! ([`PlanAction::ReuseCached`]), skipping selection entirely. The cache
+//! deliberately survives `PlanSlot::reset` across admissions, so
+//! same-seed/same-prompt request families hit across requests on one lane.
 
 use std::time::Instant;
 
-use crate::coordinator::plan_cache::{PlanSlot, PlanStats};
+use crate::coordinator::plan_cache::{PlanCache, PlanSlot, PlanStats};
 use crate::coordinator::request::{EngineConfig, GenRequest, GenResult, GenStats};
 use crate::toma::plan::PlanAction;
 use crate::util::error::Result;
@@ -62,12 +69,19 @@ pub trait CohortBackend: Send {
     fn admit(&self, request: &GenRequest) -> MemberState;
     /// Rerun destination selection and rebuild weights for every member
     /// in one batched call, installing the shared plan into `slot`.
+    /// Probes `cache` first (PR 8): returns
+    /// [`PlanAction::ReuseCached`] when the fingerprint of the refresh
+    /// input matched a completed plan within the cache tolerance (the
+    /// cache installed it into `slot`), [`PlanAction::RefreshAll`] when
+    /// selection actually ran. With the cache disabled this is always
+    /// `RefreshAll` and costs no fingerprint.
     fn refresh_all(
         &self,
         members: &[MemberState],
         slot: &mut PlanSlot,
+        cache: &mut PlanCache,
         cohort_step: u64,
-    ) -> Result<()>;
+    ) -> Result<PlanAction>;
     /// Rebuild merge weights only, keeping the cached destinations.
     fn refresh_weights(
         &self,
@@ -89,8 +103,13 @@ pub struct CohortCompletion {
 
 /// What one cohort step did (the lane turns this into metrics/spans).
 pub struct StepOutcome {
-    /// The shared slot's decision (None for plan-less variants).
+    /// The *effective* shared-slot action (None for plan-less variants):
+    /// a scheduled `RefreshAll` that hit the plan cache surfaces here as
+    /// [`PlanAction::ReuseCached`].
     pub action: Option<PlanAction>,
+    /// Exact [`PlanStats`] movement this step (includes cache hit / miss /
+    /// eviction counts the action alone cannot convey).
+    pub plan_delta: PlanStats,
     /// Members that took part in this step.
     pub active_members: usize,
     /// Seconds spent on shared plan work this step (destination
@@ -105,19 +124,29 @@ pub struct Cohort {
     backend: Box<dyn CohortBackend>,
     members: Vec<MemberState>,
     slot: PlanSlot,
+    /// PR 8 fingerprint cache — a sibling of `slot`, so `slot.reset()` on
+    /// re-admission leaves completed plans reusable across requests.
+    cache: PlanCache,
     cohort_step: u64,
     next_tag: u64,
 }
 
 impl Cohort {
     pub fn new(backend: Box<dyn CohortBackend>) -> Cohort {
+        let cache = PlanCache::from_config(backend.cfg());
         Cohort {
             backend,
             members: Vec::new(),
             slot: PlanSlot::default(),
+            cache,
             cohort_step: 0,
             next_tag: 0,
         }
+    }
+
+    /// Is the fingerprinted plan cache active on this cohort's lane?
+    pub fn cache_enabled(&self) -> bool {
+        self.cache.enabled()
     }
 
     pub fn len(&self) -> usize {
@@ -200,6 +229,7 @@ impl Cohort {
         if self.members.is_empty() {
             return Ok(StepOutcome {
                 action: None,
+                plan_delta: PlanStats::default(),
                 active_members: 0,
                 plan_s: 0.0,
                 gemm_s: 0.0,
@@ -210,26 +240,41 @@ impl Cohort {
         let schedule = self.backend.cfg().schedule;
         let mut action = None;
         let mut plan_s = 0.0;
+        let stats_before = self.slot.stats;
         if needs_plan {
             let t_plan = Instant::now();
-            let a = self.slot.decide(&schedule, self.cohort_step);
+            let mut a = self.slot.decide(&schedule, self.cohort_step);
             match a {
                 PlanAction::RefreshAll => {
-                    self.backend
-                        .refresh_all(&self.members, &mut self.slot, self.cohort_step)?
+                    // The backend may downgrade to ReuseCached on a
+                    // fingerprint hit (PR 8).
+                    a = self.backend.refresh_all(
+                        &self.members,
+                        &mut self.slot,
+                        &mut self.cache,
+                        self.cohort_step,
+                    )?;
                 }
                 PlanAction::RefreshWeights => {
                     self.backend
                         .refresh_weights(&self.members, &mut self.slot, self.cohort_step)?
                 }
                 PlanAction::Reuse => {}
+                PlanAction::ReuseCached => unreachable!("decide never yields ReuseCached"),
             }
             // Per-member stats mirror what a dedicated engine would count.
+            let cache_on = self.cache.enabled();
             for m in &mut self.members {
                 match a {
-                    PlanAction::RefreshAll => m.stats.select_calls += 1,
+                    PlanAction::RefreshAll => {
+                        m.stats.select_calls += 1;
+                        if cache_on {
+                            m.stats.plan_cache_misses += 1;
+                        }
+                    }
                     PlanAction::RefreshWeights => m.stats.weight_refreshes += 1,
                     PlanAction::Reuse => m.stats.plan_reuses += 1,
+                    PlanAction::ReuseCached => m.stats.plan_cache_hits += 1,
                 }
             }
             action = Some(a);
@@ -281,6 +326,7 @@ impl Cohort {
         completions.reverse(); // admission order among leavers
         Ok(StepOutcome {
             action,
+            plan_delta: self.slot.stats.delta_since(&stats_before),
             active_members: size,
             plan_s,
             gemm_s,

@@ -25,21 +25,30 @@
 //! backend becomes retryable error completions and a respawned lane, and
 //! a re-admitted member reproduces its latent bit-identically (state is
 //! derived from the request seed alone, never from lane history).
+//!
+//! Since PR 8 both paths probe a fingerprinted [`PlanCache`] at every
+//! `RefreshAll` boundary when the config resolves a plan tolerance: the
+//! hidden states are sketched (`toma::fingerprint`) *before* selection,
+//! and a match installs the cached plan instead of running
+//! `fl_select_regions` — [`HostEngine`] holds its own cache across
+//! generate calls, [`HostBackend`] uses the cohort's.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::anyhow;
 use crate::coordinator::engine::initial_noise;
-use crate::coordinator::plan_cache::PlanSlot;
+use crate::coordinator::plan_cache::{CacheKey, PlanCache, PlanSlot};
 use crate::coordinator::request::{EngineConfig, GenRequest, GenResult, GenStats};
 use crate::diffusion::{cfg_mix, ddim_update, euler_update, NoiseSchedule, SamplerKind};
 use crate::model::uvit::{BatchReduce, BatchSample, HostReduce, HostUVit};
 use crate::toma::facility::fl_select_regions;
+use crate::toma::fingerprint::fingerprint;
 use crate::toma::merge::{build_merge_weights, MergeWeights};
 use crate::toma::plan::{MergePlan, PlanAction};
 use crate::toma::regions::{RegionLayout, RegionMode};
 use crate::util::error::Result;
+use crate::util::lock_unpoisoned;
 use crate::workload::prompts::embed_prompt;
 
 use super::cohort::{CohortBackend, MemberState};
@@ -172,6 +181,10 @@ impl HostContext {
 /// the batched scheduler must reproduce bit-for-bit.
 pub struct HostEngine {
     pub ctx: HostContext,
+    /// PR 8 fingerprint cache, shared across this engine's requests (so
+    /// same-seed families hit across generate calls). Inert unless the
+    /// config resolves a plan tolerance.
+    cache: Mutex<PlanCache>,
 }
 
 impl HostEngine {
@@ -181,8 +194,10 @@ impl HostEngine {
         regions: usize,
         tau: f32,
     ) -> Result<HostEngine> {
+        let cache = Mutex::new(PlanCache::from_config(&cfg));
         Ok(HostEngine {
             ctx: HostContext::new(model, cfg, regions, tau)?,
+            cache,
         })
     }
 
@@ -209,33 +224,57 @@ impl HostEngine {
             let t = ctx.schedule.timesteps[step];
             if ctx.cfg.needs_plan() {
                 let t0 = Instant::now();
-                let action = slot.decide(&ctx.cfg.schedule, step as u64);
+                let mut action = slot.decide(&ctx.cfg.schedule, step as u64);
                 match action {
                     PlanAction::RefreshAll => {
                         let layout = ctx.layout.as_ref().expect("plan variant");
                         let p = layout.regions;
                         let n_loc = layout.tokens_per_region();
                         let hs = ctx.split_features(&x, t);
-                        let idx: Vec<i32> =
-                            fl_select_regions(&hs, p, n_loc, info.dim, ctx.k_loc)
-                                .into_iter()
-                                .map(|i| i as i32)
-                                .collect();
-                        let a_tilde = ctx.weights_from_split(&hs, &idx);
-                        slot.install(
-                            MergePlan {
-                                idx,
-                                a_tilde,
-                                a: vec![],
-                                groups: p,
-                                d_loc: ctx.k_loc,
-                                n_loc,
-                                dest_step: step as u64,
-                                weight_step: step as u64,
-                            },
-                            None,
-                        );
-                        stats.select_calls += 1;
+                        // PR 8: fingerprint the selection input and probe
+                        // the plan cache before paying for selection.
+                        let mut cache = lock_unpoisoned(&self.cache);
+                        let probe = cache.enabled().then(|| {
+                            (
+                                CacheKey::new(step as u64, &ctx.cfg.schedule, p, n_loc, info.dim),
+                                fingerprint(&hs, p, n_loc, info.dim),
+                            )
+                        });
+                        let hit = match &probe {
+                            Some((key, fp)) => cache.try_serve(&mut slot, key, fp, step as u64),
+                            None => false,
+                        };
+                        if hit {
+                            stats.plan_cache_hits += 1;
+                            action = PlanAction::ReuseCached;
+                        } else {
+                            if probe.is_some() {
+                                stats.plan_cache_misses += 1;
+                            }
+                            let idx: Vec<i32> =
+                                fl_select_regions(&hs, p, n_loc, info.dim, ctx.k_loc)
+                                    .into_iter()
+                                    .map(|i| i as i32)
+                                    .collect();
+                            let a_tilde = ctx.weights_from_split(&hs, &idx);
+                            slot.install(
+                                MergePlan {
+                                    idx,
+                                    a_tilde,
+                                    a: vec![],
+                                    groups: p,
+                                    d_loc: ctx.k_loc,
+                                    n_loc,
+                                    dest_step: step as u64,
+                                    weight_step: step as u64,
+                                },
+                                None,
+                            );
+                            stats.select_calls += 1;
+                            if let Some((key, fp)) = probe {
+                                cache.admit(&mut slot, key, fp);
+                            }
+                        }
                     }
                     PlanAction::RefreshWeights => {
                         let hs = ctx.split_features(&x, t);
@@ -245,6 +284,9 @@ impl HostEngine {
                         stats.weight_refreshes += 1;
                     }
                     PlanAction::Reuse => stats.plan_reuses += 1,
+                    PlanAction::ReuseCached => {
+                        unreachable!("decide never yields ReuseCached")
+                    }
                 }
                 if action != PlanAction::Reuse {
                     weights = slot.img.as_ref().map(|p| MergeWeights {
@@ -347,8 +389,9 @@ impl CohortBackend for HostBackend {
         &self,
         members: &[MemberState],
         slot: &mut PlanSlot,
+        cache: &mut PlanCache,
         cohort_step: u64,
-    ) -> Result<()> {
+    ) -> Result<PlanAction> {
         let ctx = &self.ctx;
         let layout = ctx
             .layout
@@ -367,6 +410,20 @@ impl CohortBackend for HostBackend {
             let t = ctx.schedule.timesteps[member.local_step];
             let hs = ctx.split_features(&member.x, t);
             hs_all[m * p * n_loc * d..(m + 1) * p * n_loc * d].copy_from_slice(&hs);
+        }
+        // PR 8: probe the lane's plan cache with a sketch of the exact
+        // selection input; a hit skips fl_select_regions + weight builds.
+        let groups = members.len() * p;
+        let probe = cache.enabled().then(|| {
+            (
+                CacheKey::new(cohort_step, &ctx.cfg.schedule, groups, n_loc, d),
+                fingerprint(&hs_all, groups, n_loc, d),
+            )
+        });
+        if let Some((key, fp)) = &probe {
+            if cache.try_serve(slot, key, fp, cohort_step) {
+                return Ok(PlanAction::ReuseCached);
+            }
         }
         let idx_all: Vec<i32> =
             fl_select_regions(&hs_all, members.len() * p, n_loc, d, k)
@@ -394,7 +451,10 @@ impl CohortBackend for HostBackend {
             },
             None,
         );
-        Ok(())
+        if let Some((key, fp)) = probe {
+            cache.admit(slot, key, fp);
+        }
+        Ok(PlanAction::RefreshAll)
     }
 
     fn refresh_weights(

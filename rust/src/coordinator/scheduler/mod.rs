@@ -46,6 +46,16 @@
 //! feed the front-end's always-on per-lane anomaly detector
 //! ([`Scheduler::anomaly_flags`]) — the leading `lane_degrading`
 //! signal, ahead of the cumulative histograms.
+//!
+//! Since PR 8 each cohort owns a fingerprinted
+//! [`PlanCache`](crate::coordinator::plan_cache::PlanCache) (opt-in via
+//! `EngineConfig::plan_tolerance` / `TOMA_PLAN_TOLERANCE`): scheduled
+//! `RefreshAll` boundaries may downgrade to
+//! [`PlanAction::ReuseCached`] installs, plan stats are recorded both
+//! aggregate (`cohort_*`) and per lane (`plan[<lane key>]_*`), cache
+//! hits/misses become spans, and the per-step miss indicator feeds the
+//! detector's fourth channel — a lane whose hit rate collapses flags
+//! `lane_degrading` before its step latency moves.
 
 pub mod cohort;
 pub mod host;
@@ -73,7 +83,6 @@ use super::frontend::{
     SupervisionPolicy, WorkerCtx, LANE_DEATH, LANE_STALE,
 };
 use super::metrics::Metrics;
-use super::plan_cache::PlanStats;
 use super::request::{EngineConfig, GenRequest, GenResult};
 use super::trace::{AnomalyDetector, AnomalyFlags, Channel, Site, Span, SpanKind, Tracer};
 
@@ -577,14 +586,13 @@ fn lane_loop(
                     "tokens_denoised",
                     (out.active_members * tokens_per_member) as u64,
                 );
-                if let Some(a) = out.action {
-                    let mut delta = PlanStats::default();
-                    match a {
-                        PlanAction::RefreshAll => delta.refresh_all = 1,
-                        PlanAction::RefreshWeights => delta.refresh_weights = 1,
-                        PlanAction::Reuse => delta.reuses = 1,
-                    }
-                    metrics.record_plan_stats("cohort", &delta);
+                if out.action.is_some() {
+                    // The cohort reports the exact stats movement (incl.
+                    // cache hit/miss/evict counts); record it aggregate
+                    // and per lane, so `toma-serve serve` can render
+                    // hit rates lane-by-lane like the lifecycle counters.
+                    metrics.record_plan_stats("cohort", &out.plan_delta);
+                    metrics.record_plan_stats(&format!("plan[{lane_key}]"), &out.plan_delta);
                 }
                 let step_s = t0.elapsed().as_secs_f64();
                 metrics.observe_s("cohort_step_time", step_s);
@@ -599,6 +607,10 @@ fn lane_loop(
                     let plan_kind = match out.action {
                         Some(PlanAction::RefreshAll) => Some(SpanKind::Select),
                         Some(PlanAction::RefreshWeights) => Some(SpanKind::Refresh),
+                        // A downgraded refresh: the plan span *is* the
+                        // cache hit (its duration is the fingerprint
+                        // probe + install — the whole point of the cache).
+                        Some(PlanAction::ReuseCached) => Some(SpanKind::CacheHit),
                         _ => None,
                     };
                     if let Some(kind) = plan_kind {
@@ -610,6 +622,19 @@ fn lane_loop(
                             step: step_no,
                             start_us: t0_us,
                             dur_us: plan_us,
+                        });
+                    }
+                    if out.plan_delta.cache_misses > 0 {
+                        // Marker span: this Select paid a failed cache
+                        // probe first (duration lives in the Select span).
+                        tracer.record(Span {
+                            site: Site::Scheduler,
+                            kind: SpanKind::CacheMiss,
+                            lane,
+                            id: members,
+                            step: step_no,
+                            start_us: t0_us,
+                            dur_us: 0,
                         });
                     }
                     tracer.record(Span {
@@ -626,6 +651,20 @@ fn lane_loop(
                 // whose steps slow down flags `lane_degrading` while the
                 // cumulative histograms still average it away.
                 anomaly.observe_with_metrics(&lane_key, Channel::StepLatency, step_s, metrics);
+                // Cache-miss indicator (PR 8, fourth channel): 1 on a
+                // refresh that ran selection, 0 on a cache hit. A lane
+                // whose hit rate collapses shows a rising miss mean and
+                // flags `lane_degrading` before its step latency moves.
+                if cohort.cache_enabled() {
+                    let miss = match out.action {
+                        Some(PlanAction::RefreshAll) => Some(1.0),
+                        Some(PlanAction::ReuseCached) => Some(0.0),
+                        _ => None,
+                    };
+                    if let Some(v) = miss {
+                        anomaly.observe_with_metrics(&lane_key, Channel::CacheMiss, v, metrics);
+                    }
+                }
                 for mut c in out.completions {
                     let Some(meta) = inflight.remove(&c.tag) else {
                         continue;

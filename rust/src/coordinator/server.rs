@@ -34,6 +34,14 @@
 //! (inert by default), and per-request service latency feeds the
 //! front-end's always-on per-lane anomaly detector
 //! ([`Server::anomaly_flags`]).
+//!
+//! Since PR 8 each worker's engine owns a fingerprinted merge-plan cache
+//! (`coordinator::plan_cache`, enabled by `EngineConfig::plan_tolerance`
+//! or the `TOMA_PLAN_TOLERANCE` ambient): on cache-enabled lanes the
+//! drain loop aggregates `plan_cache_hits`/`plan_cache_misses`, records
+//! per-lane `plan[<lane key>]_*` counters, emits cache-hit/miss marker
+//! spans, and feeds the per-request miss ratio to the anomaly detector's
+//! `cache-miss` channel.
 
 use std::path::PathBuf;
 use std::sync::mpsc::Receiver;
@@ -52,6 +60,7 @@ use super::frontend::{
     WorkerCtx, LANE_DEATH,
 };
 use super::metrics::Metrics;
+use super::plan_cache::PlanStats;
 use super::request::{EngineConfig, GenRequest, GenResult};
 use super::trace::{AnomalyFlags, Channel, Site, Span, SpanKind, Tracer};
 use crate::runtime::Runtime;
@@ -106,6 +115,10 @@ impl LaneJob for EngineJob {
                         // detector on the readable lane key.
                         let lane = guard.lane();
                         let lane_key = cfg.key();
+                        // PR 8: is the fingerprinted plan cache live on
+                        // this lane? (Field, else the ambient env — read
+                        // once per worker, mirroring the engine.)
+                        let cache_on = cfg.resolved_plan_tolerance().is_some();
                         // A panicking worker on its way out: report the
                         // death and, if it holds the last living clone of
                         // the queue, fail what is still buffered so no
@@ -244,6 +257,34 @@ impl LaneJob for EngineJob {
                                         metrics.observe_s("select_time", r.stats.select_s);
                                         metrics.add("plan_reuses", r.stats.plan_reuses as u64);
                                         metrics.add("select_calls", r.stats.select_calls as u64);
+                                        if cache_on {
+                                            metrics.add(
+                                                "plan_cache_hits",
+                                                r.stats.plan_cache_hits as u64,
+                                            );
+                                            metrics.add(
+                                                "plan_cache_misses",
+                                                r.stats.plan_cache_misses as u64,
+                                            );
+                                        }
+                                        // Per-lane plan counters: the same
+                                        // `plan[<lane key>]` prefix the
+                                        // scheduler lanes use, so the serve
+                                        // report renders both uniformly.
+                                        if cfg.needs_plan() {
+                                            let delta = PlanStats {
+                                                refresh_all: r.stats.select_calls as u64,
+                                                refresh_weights: r.stats.weight_refreshes as u64,
+                                                reuses: r.stats.plan_reuses as u64,
+                                                cache_hits: r.stats.plan_cache_hits as u64,
+                                                cache_misses: r.stats.plan_cache_misses as u64,
+                                                cache_evictions: 0,
+                                            };
+                                            metrics.record_plan_stats(
+                                                &format!("plan[{lane_key}]"),
+                                                &delta,
+                                            );
+                                        }
                                     }
                                     if tracer.enabled() {
                                         // The serve span covers the whole
@@ -262,6 +303,26 @@ impl LaneJob for EngineJob {
                                                     start_us: t0_us,
                                                     dur_us: select_us,
                                                 });
+                                            }
+                                            // PR 8: zero-duration markers,
+                                            // one per refresh boundary that
+                                            // hit / missed the plan cache
+                                            // (bounded by the refresh count).
+                                            for (kind, n) in [
+                                                (SpanKind::CacheHit, r.stats.plan_cache_hits),
+                                                (SpanKind::CacheMiss, r.stats.plan_cache_misses),
+                                            ] {
+                                                for _ in 0..n {
+                                                    tracer.record(Span {
+                                                        site: Site::Server,
+                                                        kind,
+                                                        lane,
+                                                        id: request.seed,
+                                                        step: 0,
+                                                        start_us: t0_us,
+                                                        dur_us: 0,
+                                                    });
+                                                }
                                             }
                                         }
                                         tracer.record(Span {
@@ -282,6 +343,24 @@ impl LaneJob for EngineJob {
                                         service_s,
                                         &metrics,
                                     );
+                                    // PR 8: per-request cache-miss ratio —
+                                    // a collapsing hit rate flags the lane
+                                    // before step latency moves.
+                                    if cache_on {
+                                        if let Ok(r) = &result {
+                                            let probes = r.stats.plan_cache_hits
+                                                + r.stats.plan_cache_misses;
+                                            if probes > 0 {
+                                                anomaly.observe_with_metrics(
+                                                    &lane_key,
+                                                    Channel::CacheMiss,
+                                                    r.stats.plan_cache_misses as f64
+                                                        / probes as f64,
+                                                    &metrics,
+                                                );
+                                            }
+                                        }
+                                    }
                                     let _ = done.send(Completion {
                                         request,
                                         result,

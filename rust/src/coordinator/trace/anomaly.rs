@@ -1,6 +1,6 @@
 //! Online per-lane anomaly detection: EWMA mean/variance z-score over
-//! the per-lane step-latency stream, plus queue-depth and retry-rate
-//! channels.
+//! the per-lane step-latency stream, plus queue-depth, retry-rate and
+//! (on cache-enabled lanes) plan-cache-miss channels.
 //!
 //! The detector is the *leading* health signal: cumulative histograms
 //! (`Metrics::quantile_s`) move only after minutes of damage is already
@@ -40,9 +40,14 @@ pub enum Channel {
     QueueDepth = 1,
     /// 0/1 stream: was this completion a retry/respawn event?
     RetryRate = 2,
+    /// 0/1 stream (PR 8): did this refresh boundary miss the plan cache?
+    /// Only fed on cache-enabled lanes; a collapsing hit rate raises
+    /// `lane_degrading` before the lost selections show up in step
+    /// latency.
+    CacheMiss = 3,
 }
 
-pub const CHANNEL_COUNT: usize = 3;
+pub const CHANNEL_COUNT: usize = 4;
 
 impl Channel {
     pub fn as_str(&self) -> &'static str {
@@ -50,6 +55,7 @@ impl Channel {
             Channel::StepLatency => "step-latency",
             Channel::QueueDepth => "queue-depth",
             Channel::RetryRate => "retry-rate",
+            Channel::CacheMiss => "cache-miss",
         }
     }
 }
@@ -342,6 +348,21 @@ mod tests {
             d.observe("lane-a", Channel::StepLatency, 0.02);
         }
         assert!(d.is_degrading("lane-a"), "sustained anomaly must stay flagged");
+    }
+
+    #[test]
+    fn cache_miss_stream_flags_on_collapsing_hit_rate() {
+        // PR 8: the scheduler feeds a 0/1 miss indicator per refresh
+        // boundary. A steady all-hit lane that starts missing every
+        // probe must flag on the miss channel alone.
+        let d = AnomalyDetector::new(fast_policy());
+        for _ in 0..32 {
+            assert_eq!(d.observe("lane-a", Channel::CacheMiss, 0.0), None);
+        }
+        assert_eq!(d.observe("lane-a", Channel::CacheMiss, 1.0), None);
+        assert_eq!(d.observe("lane-a", Channel::CacheMiss, 1.0), None);
+        assert_eq!(d.observe("lane-a", Channel::CacheMiss, 1.0), Some(true));
+        assert!(d.is_degrading("lane-a"));
     }
 
     #[test]

@@ -337,7 +337,7 @@ pub fn decode_auto(bytes: &[u8]) -> Result<(Vec<Span>, u64)> {
 // per-lane critical-path / self-time breakdown
 // ---------------------------------------------------------------------
 
-const KIND_COUNT: usize = 8;
+const KIND_COUNT: usize = 10;
 
 /// Aggregate self-time per lane and per kind, plus the slowest cohort
 /// step's critical path — the `toma-serve trace` inspector body.
@@ -358,6 +358,8 @@ pub fn breakdown(spans: &[Span], dropped: u64) -> String {
         "step(gemm)",
         "retry",
         "fault",
+        "cache-hit",
+        "cache-miss(n)",
     ]);
     for (lane, (dur, count)) in &lanes {
         let spans_n: u64 = count.iter().sum();
@@ -371,6 +373,10 @@ pub fn breakdown(spans: &[Span], dropped: u64) -> String {
             fmt_secs(dur[SpanKind::Step as usize] as f64 * 1e-6),
             fmt_secs(dur[SpanKind::Retry as usize] as f64 * 1e-6),
             fmt_secs(dur[SpanKind::Fault as usize] as f64 * 1e-6),
+            // Hit time is the probe+install cost that replaced a Select;
+            // misses are zero-duration markers, so a count is the signal.
+            fmt_secs(dur[SpanKind::CacheHit as usize] as f64 * 1e-6),
+            count[SpanKind::CacheMiss as usize].to_string(),
         ]);
     }
     let mut out = String::new();
@@ -476,6 +482,26 @@ mod tests {
                 dur_us: 200 + step as u64,
             });
         }
+        // PR 8 cache spans: a hit (probe+install time) and a zero-duration
+        // miss marker — the breakdown must index both without panicking.
+        spans.push(Span {
+            site: Site::Scheduler,
+            kind: SpanKind::CacheHit,
+            lane: lane_a,
+            id: 7,
+            step: 2,
+            start_us: 2040,
+            dur_us: 12,
+        });
+        spans.push(Span {
+            site: Site::Scheduler,
+            kind: SpanKind::CacheMiss,
+            lane: lane_a,
+            id: 7,
+            step: 1,
+            start_us: 1050,
+            dur_us: 0,
+        });
         spans.push(Span {
             site: Site::Server,
             kind: SpanKind::Step,

@@ -93,6 +93,13 @@ pub enum SpanKind {
     Retry = 6,
     /// Fault: an injected fault, contained panic, or breaker trip.
     Fault = 7,
+    /// A scheduled RefreshAll downgraded to a plan-cache install (PR 8):
+    /// the duration is the fingerprint probe + install, the work the
+    /// skipped `Select` would otherwise have cost.
+    CacheHit = 8,
+    /// Marker: a refresh probed the plan cache and missed before running
+    /// selection (the selection cost lives in the adjacent `Select`).
+    CacheMiss = 9,
 }
 
 impl SpanKind {
@@ -106,6 +113,8 @@ impl SpanKind {
             SpanKind::Refresh => "refresh",
             SpanKind::Retry => "retry",
             SpanKind::Fault => "fault",
+            SpanKind::CacheHit => "cache-hit",
+            SpanKind::CacheMiss => "cache-miss",
         }
     }
 
@@ -119,6 +128,8 @@ impl SpanKind {
             "refresh" => Some(SpanKind::Refresh),
             "retry" => Some(SpanKind::Retry),
             "fault" => Some(SpanKind::Fault),
+            "cache-hit" => Some(SpanKind::CacheHit),
+            "cache-miss" => Some(SpanKind::CacheMiss),
             _ => None,
         }
     }
@@ -133,6 +144,8 @@ impl SpanKind {
             5 => Some(SpanKind::Refresh),
             6 => Some(SpanKind::Retry),
             7 => Some(SpanKind::Fault),
+            8 => Some(SpanKind::CacheHit),
+            9 => Some(SpanKind::CacheMiss),
             _ => None,
         }
     }
@@ -224,7 +237,7 @@ mod tests {
     #[test]
     fn roundtrip_all_sites_and_kinds() {
         for sb in 0..=4u8 {
-            for kb in 0..=8u8 {
+            for kb in 0..=10u8 {
                 let (site, kind) = match (Site::from_u8(sb), SpanKind::from_u8(kb)) {
                     (Some(s), Some(k)) => (s, k),
                     _ => continue,
@@ -240,7 +253,7 @@ mod tests {
     #[test]
     fn decode_rejects_bad_bytes() {
         assert_eq!(Span::decode([0xff, 0, 0, 0, 0]), None);
-        assert_eq!(Span::decode([0x0900, 0, 0, 0, 0]), None); // kind byte 9
+        assert_eq!(Span::decode([0x0a00, 0, 0, 0, 0]), None); // kind byte 10
     }
 
     #[test]

@@ -60,7 +60,21 @@
 //!   per-lane EWMA z-score detector (`AnomalyDetector`: step-latency /
 //!   queue-depth / retry-rate channels) raises `lane_degrading` before
 //!   cumulative p99 moves — control loops consume its `AnomalyFlags`
-//!   or `DecayedTail`, never the cumulative histograms.
+//!   or `DecayedTail`, never the cumulative histograms. Since PR 8
+//!   refreshes are *memoized* ([`coordinator::plan_cache`]): an opt-in
+//!   fingerprinted `PlanCache` per lane sketches each `RefreshAll` input
+//!   with seeded random projections ([`toma::fingerprint`]) and
+//!   downgrades the refresh to a cache install on a match within the
+//!   configured tolerance (`EngineConfig::plan_tolerance` /
+//!   `--plan-tolerance` / `TOMA_PLAN_TOLERANCE`), skipping selection
+//!   entirely — within a request, across cohort admissions, and across
+//!   same-seed request families on one lane. Non-default tolerances key
+//!   their own lanes, the default path stays bit-exact, and
+//!   `tolerance = 0` is exact-sketch reuse, bit-identical by
+//!   construction (`tests/scheduler_equivalence.rs`); hit / miss /
+//!   evict counts flow into `PlanStats`, per-lane `plan[...]` counters,
+//!   `cache-hit`/`cache-miss` spans and the anomaly detector's fourth
+//!   `cache-miss` channel.
 //! * [`runtime`] — PJRT client, artifact registry, weight store. The
 //!   XLA-backed layer sits behind the `pjrt` cargo feature; the default
 //!   build compiles same-API pure-Rust stubs, so no XLA toolchain is

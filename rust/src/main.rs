@@ -18,7 +18,9 @@ use std::sync::Arc;
 use toma::anyhow;
 use toma::coordinator::scheduler::{BatchPolicy, HostBackend, LanePolicy, DEFAULT_TAU};
 use toma::coordinator::trace::{export, DEFAULT_CAPACITY};
-use toma::coordinator::{EngineConfig, GenRequest, Scheduler, Server, Tracer};
+use toma::coordinator::{
+    EngineConfig, GenRequest, MetricsSnapshot, PlanStats, Scheduler, Server, Tracer,
+};
 use toma::model::HostUVit;
 use toma::tensor::element::StorageDtype;
 use toma::util::error::Result;
@@ -46,6 +48,11 @@ fn usage() -> String {
                   --trace <path>        export spans: OTLP-shaped JSON at <path>,\n\
                                         delta+RLE binary at <path>.bin\n\
                   (generate/serve take --storage f32|bf16|f16: weight-panel dtype)\n\
+                  (generate/serve take --plan-tolerance <t>: fingerprinted\n\
+                                        merge-plan cache — reuse a completed plan when\n\
+                                        the refresh input's sketch matches within <t>;\n\
+                                        0 = exact match, bit-identical reuse; absent =\n\
+                                        cache off, the historical bit-exact path)\n\
        table      --id {1,2,3,4,5,7,8,9,10,C} [--device rtx6000] [--full]\n\
        artifacts  [--compile <name>]\n\
        info\n\
@@ -106,7 +113,54 @@ fn engine_config(args: &Args) -> Result<EngineConfig> {
     let storage = args.get_str("storage", "f32");
     cfg.storage = StorageDtype::parse(&storage)
         .ok_or_else(|| anyhow!("unknown --storage `{storage}` (accepted: f32, bf16, f16)"))?;
+    // PR 8: opt-in fingerprinted plan cache. Absent keeps the bit-exact
+    // default path; malformed is an error — a typo must not silently
+    // disable (or enable) plan reuse.
+    if let Some(v) = args.get("plan-tolerance") {
+        let t = v.parse::<f64>().map_err(|_| {
+            anyhow!("invalid --plan-tolerance `{v}` (expected a number, e.g. 0 or 0.05)")
+        })?;
+        toma::ensure!(t >= 0.0, "--plan-tolerance must be >= 0, got {t}");
+        cfg.plan_tolerance = Some(t);
+    }
     Ok(cfg)
+}
+
+/// Per-lane plan/cache statistics (PR 8): reconstruct [`PlanStats`] from
+/// the `plan[<lane key>]_*` counters both front-ends record and render
+/// hit rates per lane, not just the aggregate `cohort_*` counters.
+fn render_plan_lanes(snapshot: &MetricsSnapshot) -> String {
+    let mut lanes: std::collections::BTreeMap<String, PlanStats> = Default::default();
+    for (k, v) in &snapshot.counters {
+        let Some(rest) = k.strip_prefix("plan[") else { continue };
+        let Some(close) = rest.rfind(']') else { continue };
+        let s = lanes.entry(rest[..close].to_string()).or_default();
+        match &rest[close + 1..] {
+            "_refresh_all" => s.refresh_all = *v,
+            "_refresh_weights" => s.refresh_weights = *v,
+            "_reuses" => s.reuses = *v,
+            "_cache_hits" => s.cache_hits = *v,
+            "_cache_misses" => s.cache_misses = *v,
+            "_cache_evictions" => s.cache_evictions = *v,
+            _ => {}
+        }
+    }
+    let mut out = String::new();
+    for (lane, s) in &lanes {
+        out.push_str(&format!(
+            "plan lane {lane}: hit-rate {:.0}% (cache {:.0}%)  selects={} weights={} \
+             reuses={} cache={}h/{}m/{}e\n",
+            100.0 * s.hit_rate(),
+            100.0 * s.cache_hit_rate(),
+            s.refresh_all,
+            s.refresh_weights,
+            s.reuses,
+            s.cache_hits,
+            s.cache_misses,
+            s.cache_evictions,
+        ));
+    }
+    out
 }
 
 fn cmd_generate(args: &Args) -> Result<()> {
@@ -131,6 +185,12 @@ fn cmd_generate(args: &Args) -> Result<()> {
         "plan: {} selects, {} weight refreshes, {} reuses",
         s.select_calls, s.weight_refreshes, s.plan_reuses
     );
+    if s.plan_cache_hits + s.plan_cache_misses > 0 {
+        println!(
+            "plan cache: {} hits, {} misses",
+            s.plan_cache_hits, s.plan_cache_misses
+        );
+    }
     if let Some(out) = args.get("out") {
         toma::quality::write_pgm_preview(
             &result.latent,
@@ -222,6 +282,7 @@ fn serve_host(args: &Args, cfg: &EngineConfig, stream: &[RequestSpec]) -> Result
         ok as f64 / wall
     );
     println!("{}", sched.metrics.render());
+    print!("{}", render_plan_lanes(&sched.metrics.snapshot()));
     let flags = sched.anomaly_flags();
     if !flags.is_empty() {
         println!("degrading lanes: {}", flags.lanes.join(", "));
@@ -258,6 +319,7 @@ fn serve_pjrt(args: &Args, cfg: &EngineConfig, stream: &[RequestSpec]) -> Result
         ok as f64 / wall
     );
     println!("{}", server.metrics.render());
+    print!("{}", render_plan_lanes(&server.metrics.snapshot()));
     let flags = server.anomaly_flags();
     if !flags.is_empty() {
         println!("degrading lanes: {}", flags.lanes.join(", "));

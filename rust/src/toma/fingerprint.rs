@@ -1,0 +1,170 @@
+//! Deterministic similarity-structure sketches for merge-plan reuse.
+//!
+//! The plan cache (PR 8, `coordinator::plan_cache`) needs a *cheap* answer
+//! to "would selection pick (nearly) the same destinations again?" without
+//! paying for `similarity_matrix` (O(n² d)) or `fl_select_regions`. This
+//! module computes a fixed-width sketch of the hidden states per region:
+//! project every token row onto [`FP_WIDTH`] seeded random directions and
+//! keep, per region and direction `w`, the linear sum `Σᵢ yᵢ` and the
+//! quadratic energy `Σᵢ yᵢ²` of the projections `yᵢ = hᵢ·pᵂ`. The quadratic
+//! term equals `pᵂᵀ (HᵀH) pᵂ` — a Johnson–Lindenstrauss-style probe of the
+//! Gram matrix whose normalized form *is* the similarity structure the
+//! facility-location objective ranks — so latents whose sketches agree
+//! produce (near-)identical merge plans. Cost is O(groups·n_loc·W·d), a
+//! vanishing fraction of one selection.
+//!
+//! Projections are derived from a fixed seed forked by `d`, never from
+//! request state, so equal inputs sketch equally across requests, lanes and
+//! processes — the property the cross-request cache relies on. At tolerance
+//! 0 the cache compares sketches bit-for-bit; since the denoising loop is
+//! deterministic from the seed, two same-seed requests produce bitwise-equal
+//! hidden states and therefore bitwise-equal sketches, making exact reuse
+//! safe by construction.
+
+use crate::util::rng::Pcg64;
+
+/// Number of random projection directions per sketch. 8 directions × 2
+/// moments each gives 16 floats per region — wide enough that distinct
+/// similarity structures collide with negligible probability, narrow enough
+/// that comparing fingerprints is a handful of nanoseconds.
+pub const FP_WIDTH: usize = 8;
+
+/// Root seed for the projection stream (forked by `d`, see module docs).
+const FP_SEED: u64 = 0xF16E_5EED;
+
+/// A fixed-width sketch of the similarity structure of one refresh input:
+/// `groups * 2 * FP_WIDTH` floats, laid out per group as `FP_WIDTH` linear
+/// sums followed by `FP_WIDTH` quadratic energies.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Fingerprint {
+    pub values: Vec<f32>,
+}
+
+impl Fingerprint {
+    /// Number of groups this sketch covers.
+    pub fn groups(&self) -> usize {
+        self.values.len() / (2 * FP_WIDTH)
+    }
+}
+
+/// The deterministic projection directions for row dimension `d`,
+/// `(FP_WIDTH, d)` flattened. Exposed for tests; `fingerprint` calls it
+/// internally.
+pub fn projections(d: usize) -> Vec<f32> {
+    Pcg64::new(FP_SEED).fork(d as u64).normal_vec(FP_WIDTH * d)
+}
+
+/// Sketch `hs`, a `(groups, n_loc, d)` flattened hidden-state block — the
+/// exact input `fl_select_regions` would consume.
+pub fn fingerprint(hs: &[f32], groups: usize, n_loc: usize, d: usize) -> Fingerprint {
+    assert_eq!(hs.len(), groups * n_loc * d, "fingerprint: hs shape mismatch");
+    let proj = projections(d);
+    let mut values = vec![0f32; groups * 2 * FP_WIDTH];
+    for g in 0..groups {
+        let vals = &mut values[g * 2 * FP_WIDTH..(g + 1) * 2 * FP_WIDTH];
+        for i in 0..n_loc {
+            let row = &hs[(g * n_loc + i) * d..(g * n_loc + i + 1) * d];
+            for (w, p) in proj.chunks_exact(d).enumerate() {
+                let y: f32 = row.iter().zip(p).map(|(a, b)| a * b).sum();
+                vals[w] += y;
+                vals[FP_WIDTH + w] += y * y;
+            }
+        }
+    }
+    Fingerprint { values }
+}
+
+/// Whether `b` is within `tolerance` of `a`. Tolerance ≤ 0 demands bitwise
+/// equality (the exact-reuse mode); a positive tolerance accepts sketches
+/// whose worst per-component deviation is at most `tolerance` times the
+/// sketch's own magnitude (max |value|, floored to dodge division blowup on
+/// near-zero sketches). Shape mismatch never matches.
+pub fn matches(a: &Fingerprint, b: &Fingerprint, tolerance: f64) -> bool {
+    if a.values.len() != b.values.len() {
+        return false;
+    }
+    if tolerance <= 0.0 {
+        return a.values == b.values;
+    }
+    let scale = a.values.iter().fold(1e-6f32, |m, v| m.max(v.abs())) as f64;
+    a.values
+        .iter()
+        .zip(&b.values)
+        .all(|(x, y)| ((x - y).abs() as f64) <= tolerance * scale)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn block(seed: u64, groups: usize, n_loc: usize, d: usize) -> Vec<f32> {
+        Pcg64::new(seed).normal_vec(groups * n_loc * d)
+    }
+
+    #[test]
+    fn deterministic_across_calls() {
+        let hs = block(7, 2, 6, 16);
+        let a = fingerprint(&hs, 2, 6, 16);
+        let b = fingerprint(&hs, 2, 6, 16);
+        assert_eq!(a, b, "same input must sketch bitwise-equally");
+        assert_eq!(a.values.len(), 2 * 2 * FP_WIDTH);
+        assert_eq!(a.groups(), 2);
+    }
+
+    #[test]
+    fn distinct_inputs_sketch_apart() {
+        let a = fingerprint(&block(1, 1, 8, 16), 1, 8, 16);
+        let b = fingerprint(&block(2, 1, 8, 16), 1, 8, 16);
+        assert!(!matches(&a, &b, 0.0));
+        assert!(!matches(&a, &b, 0.01), "independent normals are far apart");
+    }
+
+    #[test]
+    fn small_perturbation_within_loose_tolerance_only() {
+        let hs = block(3, 1, 8, 16);
+        let mut hs2 = hs.clone();
+        for v in hs2.iter_mut() {
+            *v *= 1.0 + 1e-4;
+        }
+        let a = fingerprint(&hs, 1, 8, 16);
+        let b = fingerprint(&hs2, 1, 8, 16);
+        assert!(!matches(&a, &b, 0.0), "exact mode rejects any drift");
+        assert!(matches(&a, &b, 0.01), "1e-4 relative drift sits inside 1% tolerance");
+    }
+
+    #[test]
+    fn exact_mode_is_bitwise() {
+        let hs = block(4, 2, 4, 8);
+        let a = fingerprint(&hs, 2, 4, 8);
+        assert!(matches(&a, &a.clone(), 0.0));
+        let mut b = a.clone();
+        b.values[0] = f32::from_bits(b.values[0].to_bits() ^ 1);
+        assert!(!matches(&a, &b, 0.0), "one flipped mantissa bit must miss");
+    }
+
+    #[test]
+    fn shape_mismatch_never_matches() {
+        let a = fingerprint(&block(5, 1, 4, 8), 1, 4, 8);
+        let b = fingerprint(&block(5, 2, 4, 8), 2, 4, 8);
+        assert!(!matches(&a, &b, f64::INFINITY));
+    }
+
+    #[test]
+    fn projections_fixed_by_dimension() {
+        assert_eq!(projections(16), projections(16));
+        assert_ne!(projections(16), projections(32)[..FP_WIDTH * 16].to_vec());
+    }
+
+    #[test]
+    fn quadratic_term_tracks_gram_energy() {
+        // Scaling every row by c scales linear sums by c and energies by c².
+        let hs = block(6, 1, 5, 8);
+        let scaled: Vec<f32> = hs.iter().map(|v| v * 2.0).collect();
+        let a = fingerprint(&hs, 1, 5, 8);
+        let b = fingerprint(&scaled, 1, 5, 8);
+        for w in 0..FP_WIDTH {
+            assert!((b.values[w] - 2.0 * a.values[w]).abs() < 1e-3);
+            assert!((b.values[FP_WIDTH + w] - 4.0 * a.values[FP_WIDTH + w]).abs() < 1e-2);
+        }
+    }
+}

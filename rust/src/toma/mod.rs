@@ -10,12 +10,14 @@
 //!    merge against `baselines::tome`'s sort + gather/scatter merge.
 
 pub mod facility;
+pub mod fingerprint;
 pub mod merge;
 pub mod plan;
 pub mod regions;
 pub mod unmerge;
 
 pub use facility::{fl_objective, fl_select, similarity_matrix};
+pub use fingerprint::{fingerprint, Fingerprint, FP_WIDTH};
 pub use merge::{build_merge_weights, merge, MergeWeights};
 pub use plan::{MergePlan, ReuseSchedule};
 pub use regions::{RegionLayout, RegionMode};

@@ -93,6 +93,13 @@ pub enum PlanAction {
     RefreshWeights,
     /// Reuse the cached plan untouched.
     Reuse,
+    /// A [`RefreshAll`](PlanAction::RefreshAll) that was downgraded to a
+    /// plan-cache install: the fingerprint of the refresh input matched a
+    /// completed plan within the configured tolerance, so selection and
+    /// weight building were skipped entirely. Never returned by
+    /// [`ReuseSchedule::action`] — only the refresh sites produce it, after
+    /// consulting `coordinator::plan_cache::PlanCache`.
+    ReuseCached,
 }
 
 impl ReuseSchedule {

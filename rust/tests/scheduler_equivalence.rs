@@ -1,8 +1,9 @@
 //! Acceptance tests for the micro-batching scheduler: batched serving
 //! must produce **bit-identical** latents to the per-request host engine
 //! for the same seeds, across cohort sizes, joins at refresh boundaries
-//! and mid-window leaves. Runs artifact-free on the synthetic model
-//! (tier 1).
+//! and mid-window leaves — including under chaos retries (PR 6) and
+//! exact (`tolerance = 0`) plan-cache reuse (PR 8). Runs artifact-free
+//! on the synthetic model (tier 1).
 
 use std::sync::Arc;
 
@@ -256,4 +257,59 @@ fn injected_panic_mid_step_retried_bit_identical() {
     assert_eq!(sched.metrics.counter("fault_injected"), 1);
     assert!(sched.metrics.counter("retry_attempted") >= 4, "every member transparently retried");
     assert_eq!(sched.metrics.counter("quarantined"), 0, "no member is poison");
+}
+
+/// Plan-cache equivalence (PR 8): at `tolerance = 0` the fingerprint
+/// cache serves only *bitwise-equal* refresh inputs, so a same-seed
+/// replay must stay bit-identical to the tolerance-off reference while
+/// skipping every selection — both within one engine (two generates)
+/// and across two admissions of one cohort, where the cache
+/// deliberately survives the slot reset between requests.
+#[test]
+fn exact_plan_reuse_stays_bit_identical() {
+    let model = model();
+    let base = toma_cfg(12); // RefreshAll boundaries at steps 0 and 10
+    let cfg = base.clone().with_plan_tolerance(0.0);
+    let seed = 4321u64;
+    let req = GenRequest::new(&format!("prompt {seed}"), seed);
+    let reference = reference_latents(&model, &base, &[seed]);
+
+    // Engine path: a cold first run misses both boundaries and selects;
+    // the replay hits both and never selects, yet lands on the exact
+    // same latent as the cache-free reference.
+    let engine = HostEngine::new(model.clone(), cfg.clone(), REGIONS, TAU).expect("engine");
+    let first = engine.generate(&req).expect("first generate");
+    assert_eq!(first.latent, reference[0], "cache-enabled cold run diverged");
+    assert_eq!(first.stats.plan_cache_misses, 2, "both boundaries miss cold");
+    assert_eq!(first.stats.plan_cache_hits, 0);
+    assert_eq!(first.stats.select_calls, 2);
+    let second = engine.generate(&req).expect("second generate");
+    assert_eq!(second.latent, reference[0], "exact replay diverged");
+    assert_eq!(second.stats.plan_cache_hits, 2, "both boundaries served from cache");
+    assert_eq!(second.stats.plan_cache_misses, 0);
+    assert_eq!(second.stats.select_calls, 0, "selection skipped entirely");
+
+    // Cohort path: admit the same request twice in sequence on one
+    // cohort. `admit` resets the slot between requests but the cache is
+    // a sibling and survives, so the second admission replays from it.
+    let backend =
+        HostBackend::boxed(model.clone(), cfg.clone(), REGIONS, TAU).expect("backend");
+    let mut cohort = Cohort::new(backend);
+    assert!(cohort.cache_enabled(), "tolerance 0 still enables the cache");
+    let mut done = vec![];
+    for admission in 0..2usize {
+        cohort.admit(&req).expect("admit");
+        for _ in 0..12 {
+            done.extend(cohort.step().expect("step").completions);
+        }
+        assert_eq!(done.len(), admission + 1, "request completed");
+    }
+    let a = done[0].result.as_ref().expect("first admission ok");
+    let b = done[1].result.as_ref().expect("second admission ok");
+    assert_eq!(a.latent, reference[0], "first admission diverged");
+    assert_eq!(b.latent, reference[0], "second admission diverged");
+    assert_eq!(a.stats.plan_cache_misses, 2);
+    assert_eq!(a.stats.select_calls, 2);
+    assert_eq!(b.stats.plan_cache_hits, 2, "cache survived the slot reset");
+    assert_eq!(b.stats.select_calls, 0);
 }
