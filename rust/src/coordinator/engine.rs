@@ -93,6 +93,19 @@ impl Engine {
                 cfg.storage
             );
         }
+        // Attention is baked into the XLA step artifacts at lowering time
+        // — the pjrt engine cannot swap SDPA implementations at runtime.
+        // Only the host backends honor the fused streaming path; reject
+        // the override here rather than silently serving materialized
+        // latents under a `:attn-fused` lane key.
+        crate::ensure!(
+            cfg.attn == crate::tensor::attention::AttnMode::Materialized,
+            "model `{}`: attn={} is host-only (pjrt artifacts carry their \
+             own attention lowering); drop the --attn override or serve \
+             through a host scheduler backend",
+            cfg.model,
+            cfg.attn
+        );
         let step_name = runtime
             .manifest
             .step_name(&cfg.model, &cfg.variant, cfg.ratio)?;

@@ -1,5 +1,6 @@
 //! Request / result types for the serving coordinator.
 
+use crate::tensor::attention::{self, AttnMode};
 use crate::tensor::element::StorageDtype;
 use crate::toma::plan::ReuseSchedule;
 
@@ -32,6 +33,13 @@ pub struct EngineConfig {
     /// never shares plans with the bit-exact default path. `Some(0.0)`
     /// is exact-fingerprint reuse (bit-identical by construction).
     pub plan_tolerance: Option<f64>,
+    /// SDPA implementation for this engine's host model (PR 9).
+    /// `Materialized` (the default) is bit-exact and keeps the historical
+    /// [`EngineConfig::key`] unchanged; `Fused` runs online-softmax
+    /// streaming attention — within a pinned ≤1e-5 relative envelope but
+    /// NOT bit-identical (the reduction is reordered) — and keys its own
+    /// lanes/cohorts, exactly like non-f32 storage.
+    pub attn: AttnMode,
 }
 
 impl EngineConfig {
@@ -46,7 +54,14 @@ impl EngineConfig {
             select_mode: "tile".to_string(),
             storage: StorageDtype::F32,
             plan_tolerance: None,
+            attn: AttnMode::Materialized,
         }
+    }
+
+    /// Builder: select the SDPA implementation.
+    pub fn with_attn(mut self, attn: AttnMode) -> Self {
+        self.attn = attn;
+        self
     }
 
     /// Builder: select the weight-panel storage dtype.
@@ -75,6 +90,19 @@ impl EngineConfig {
         })
     }
 
+    /// The effective attention mode: the config field, or — when it is
+    /// the materialized default — the `TOMA_ATTN` ambient (read at
+    /// engine/cohort construction, mirroring
+    /// [`resolved_plan_tolerance`](EngineConfig::resolved_plan_tolerance),
+    /// so [`key`](EngineConfig::key) stays purely field-driven and the CI
+    /// `TOMA_ATTN=fused` smoke leg doesn't re-key lanes).
+    pub fn resolved_attn(&self) -> AttnMode {
+        match self.attn {
+            AttnMode::Fused => AttnMode::Fused,
+            AttnMode::Materialized => attention::ambient(),
+        }
+    }
+
     /// Does this variant consume ToMA merge weights at runtime?
     pub fn needs_plan(&self) -> bool {
         self.variant.starts_with("toma")
@@ -89,7 +117,10 @@ impl EngineConfig {
     /// the f32 default, so pre-dtype cohort keys (and any baselines keyed
     /// on them) are unchanged; likewise the plan tolerance appears only
     /// when explicitly set, so tolerant lanes are segregated from the
-    /// bit-exact default path without perturbing historical keys.
+    /// bit-exact default path without perturbing historical keys. The
+    /// attention mode follows the same rule: only `fused` appends a
+    /// suffix (`:attn-fused`), because fused latents are numerically
+    /// different and must never share a cohort with materialized ones.
     pub fn key(&self) -> String {
         let storage = match self.storage {
             StorageDtype::F32 => String::new(),
@@ -99,8 +130,12 @@ impl EngineConfig {
             None => String::new(),
             Some(t) => format!(":tol{t}"),
         };
+        let attn = match self.attn {
+            AttnMode::Materialized => String::new(),
+            AttnMode::Fused => ":attn-fused".to_string(),
+        };
         format!(
-            "{}:{}:{}:{}:{}+{}:s{}:g{}{}{}",
+            "{}:{}:{}:{}:{}+{}:s{}:g{}{}{}{}",
             self.model,
             self.variant,
             self.ratio.map(|r| r.to_string()).unwrap_or_default(),
@@ -110,7 +145,8 @@ impl EngineConfig {
             self.steps,
             self.guidance,
             storage,
-            tolerance
+            tolerance,
+            attn
         )
     }
 }
@@ -251,6 +287,38 @@ mod tests {
         // Tolerance and storage suffixes compose.
         let d = a.clone().with_storage(StorageDtype::Bf16).with_plan_tolerance(0.0);
         assert_eq!(d.key(), "uvit_s:toma:0.5:tile:10+5:s50:g5:dtbf16:tol0");
+    }
+
+    #[test]
+    fn fused_attn_keys_its_own_lanes() {
+        use crate::tensor::attention::AttnMode;
+        let a = EngineConfig::new("uvit_s", "toma", Some(0.5));
+        assert_eq!(a.attn, AttnMode::Materialized);
+        // Materialized default: the exact historical key, no suffix.
+        assert_eq!(a.key(), "uvit_s:toma:0.5:tile:10+5:s50:g5");
+        let b = a.clone().with_attn(AttnMode::Fused);
+        assert_eq!(b.key(), "uvit_s:toma:0.5:tile:10+5:s50:g5:attn-fused");
+        // Composes after the storage and tolerance suffixes.
+        let c = a
+            .clone()
+            .with_storage(StorageDtype::Bf16)
+            .with_plan_tolerance(0.05)
+            .with_attn(AttnMode::Fused);
+        assert_eq!(c.key(), "uvit_s:toma:0.5:tile:10+5:s50:g5:dtbf16:tol0.05:attn-fused");
+    }
+
+    #[test]
+    fn resolved_attn_prefers_explicit_field() {
+        use crate::tensor::attention::AttnMode;
+        let a = EngineConfig::new("uvit_s", "toma", Some(0.5));
+        let b = a.clone().with_attn(AttnMode::Fused);
+        assert_eq!(b.resolved_attn(), AttnMode::Fused);
+        // The ambient fallback is covered by the CI TOMA_ATTN=fused leg
+        // (env mutation in-process would race parallel tests); with no
+        // env and no field it resolves to the materialized default.
+        if std::env::var("TOMA_ATTN").is_err() {
+            assert_eq!(a.resolved_attn(), AttnMode::Materialized);
+        }
     }
 
     #[test]

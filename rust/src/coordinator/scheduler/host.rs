@@ -86,10 +86,19 @@ impl HostContext {
         // lanes of one half dtype should pass a master already stored in
         // that dtype (HostUVit::to_storage once, outside the factory)
         // so every lane shares the same Arc.
-        let model = if model.storage == cfg.storage {
+        // Per-engine attention mode (PR 9): resolved here — field first,
+        // TOMA_ATTN ambient as the fallback — so lane keys stay purely
+        // field-driven. with_attn is a cheap params clone (shared panel
+        // Vecs, no repacking), so only the mode flag is per-lane.
+        let attn = cfg.resolved_attn();
+        let model = if model.storage == cfg.storage && model.attn == attn {
             model
+        } else if model.storage == cfg.storage {
+            Arc::new(model.with_attn(attn))
         } else {
-            Arc::new(model.to_storage(cfg.storage))
+            let mut converted = model.to_storage(cfg.storage);
+            converted.attn = attn;
+            Arc::new(converted)
         };
         let info = &model.info;
         let sampler = SamplerKind::for_model_kind(&info.kind);

@@ -81,10 +81,11 @@
 //!   needed to build, test, or run the host benches.
 //! * [`diffusion`] — DDIM / Euler samplers and noise schedules.
 //! * [`model`] — pure-Rust UVitLite forward (cross-validation substrate),
-//!   with multi-head attention lowered onto the parallel GEMM kernels.
+//!   with multi-head attention lowered onto [`tensor::attention`].
 //!   `HostUVit::forward_batch` is the scheduler's batch-folded step path
 //!   (one GEMM per linear layer across the whole cohort, attention fanned
-//!   out per (sample, head)); `model::Linear` caches its packed Bᵀ panels
+//!   out per (sample, head) — per (sample, head, q-block) on the fused
+//!   path); `model::Linear` caches its packed Bᵀ panels
 //!   at construction — since PR 3 in a configurable storage dtype
 //!   (`EngineConfig::storage`: f32 default, or bf16/f16 which halve the
 //!   resident weight bytes) — so step weights are never repacked per call.
@@ -104,9 +105,19 @@
 //!   register-tiled, multithreaded GEMM lowered onto that seam, generic
 //!   over each operand's storage element and accumulating in f32, with
 //!   the seed's scalar loop nests kept as `gemm::scalar` references and
-//!   `gemm::Panels` as the runtime-dtype dispatch), and [`tensor::ops`]
+//!   `gemm::Panels` as the runtime-dtype dispatch), [`tensor::ops`]
 //!   (public kernel surface: GEMMs — including the dtype-parameterized
-//!   `matmul_e`/`matmul_at_e` — tiled column softmax, parallel row ops).
+//!   `matmul_e`/`matmul_at_e` — tiled column softmax, parallel row ops),
+//!   and — since PR 9 — [`tensor::attention`]: multi-head SDPA with two
+//!   implementations behind `EngineConfig::attn` / `--attn` /
+//!   `TOMA_ATTN`. `materialized` (default) is the bit-exact three-pass
+//!   reference; `fused` is online-softmax streaming tiles on the
+//!   microkernel seam (`row_max`/`scale`/`axpy` fused primitives,
+//!   hand-vectorized in the AVX2 arm) — `O(Bq·Bk + Bq·dh)` scratch per
+//!   task instead of materializing `O(nq·nk)` logits, NOT bit-identical
+//!   to materialized (reduction reorder; pinned ≤1e-5 relative envelope)
+//!   but still dispatch- and fold-invariant, keying its own lanes
+//!   (`:attn-fused`).
 //! * [`util`], [`workload`], [`report`], [`bench`] — substrates
 //!   (`util::error` is the crate's dependency-free `anyhow` stand-in;
 //!   `bench::Runner` understands `--quick` and `--json <path>`, and

@@ -22,6 +22,7 @@ use toma::coordinator::{
     EngineConfig, GenRequest, MetricsSnapshot, PlanStats, Scheduler, Server, Tracer,
 };
 use toma::model::HostUVit;
+use toma::tensor::attention::AttnMode;
 use toma::tensor::element::StorageDtype;
 use toma::util::error::Result;
 use toma::runtime::{ModelInfo, Runtime};
@@ -48,6 +49,9 @@ fn usage() -> String {
                   --trace <path>        export spans: OTLP-shaped JSON at <path>,\n\
                                         delta+RLE binary at <path>.bin\n\
                   (generate/serve take --storage f32|bf16|f16: weight-panel dtype)\n\
+                  (generate/serve take --attn materialized|fused: SDPA path —\n\
+                                        fused = online-softmax streaming tiles, host\n\
+                                        backends only, lanes keyed separately)\n\
                   (generate/serve take --plan-tolerance <t>: fingerprinted\n\
                                         merge-plan cache — reuse a completed plan when\n\
                                         the refresh input's sketch matches within <t>;\n\
@@ -122,6 +126,14 @@ fn engine_config(args: &Args) -> Result<EngineConfig> {
         })?;
         toma::ensure!(t >= 0.0, "--plan-tolerance must be >= 0, got {t}");
         cfg.plan_tolerance = Some(t);
+    }
+    // PR 9: SDPA implementation. Absent keeps the bit-exact materialized
+    // default (the TOMA_ATTN ambient can still flip host backends);
+    // malformed is an error — a typo must not silently serve the wrong
+    // numerics under the wrong lane key.
+    if let Some(v) = args.get("attn") {
+        cfg.attn = AttnMode::parse(&v)
+            .ok_or_else(|| anyhow!("unknown --attn `{v}` (accepted: materialized, fused)"))?;
     }
     Ok(cfg)
 }

@@ -24,13 +24,21 @@
 //! entry points and simply inherits the kernels — f32 results are
 //! bit-identical under every dispatch, so both invariants above are
 //! unaffected by `TOMA_KERNEL`.
+//!
+//! Since PR 9 attention itself lives in `tensor::attention` behind the
+//! [`HostUVit::attn`] mode. The materialized default is bitwise the old
+//! in-module path; the fused streaming path is *not* bit-identical to it
+//! (online softmax reorders the reduction) but keeps both invariants
+//! above **within a mode**: fused results are still dispatch-invariant
+//! and fold-invariant, so the scheduler-equivalence property holds for
+//! fused lanes too — they just key separately from materialized ones.
 
 use crate::anyhow;
 use crate::runtime::{ModelInfo, WeightStore};
+use crate::tensor::attention::{self, AttnMode};
 use crate::tensor::element::StorageDtype;
 use crate::tensor::gemm::Panels;
-use crate::tensor::ops::{gelu, layernorm, silu, softmax_rows};
-use crate::tensor::{gemm, pool};
+use crate::tensor::ops::{gelu, layernorm, silu};
 use crate::toma::merge::MergeWeights;
 use crate::toma::regions::RegionLayout;
 use crate::toma::unmerge::unmerge_transpose;
@@ -143,6 +151,7 @@ pub struct Block {
 }
 
 /// All UVitLite parameters on the host.
+#[derive(Clone)]
 pub struct UVitParams {
     pub patch: Linear,
     pub pos: Vec<f32>, // (tokens x dim)
@@ -195,16 +204,14 @@ pub struct HostUVit {
     pub depth: usize,
     /// Storage dtype of every linear layer's packed weight panels.
     pub storage: StorageDtype,
-}
-
-thread_local! {
-    /// Per-thread MHA packing scratch (qh | kh | vht | logits), reused
-    /// across (sample, head) attention tasks: keeps the hot path
-    /// allocation-free per worker thread while the tasks fan out over
-    /// the pool. Every region is fully overwritten before use (the GEMM
-    /// kernel zeroes its output), so stale contents are harmless.
-    static MHA_SCRATCH: std::cell::RefCell<Vec<f32>> =
-        const { std::cell::RefCell::new(Vec::new()) };
+    /// SDPA implementation every attention call routes through
+    /// (`tensor::attention`). `Materialized` is the bit-exact default;
+    /// `Fused` trades bit-identity for streaming tiles within a pinned
+    /// relative-error envelope — engines honoring an
+    /// [`EngineConfig::attn`](crate::coordinator::EngineConfig) override
+    /// rebuild the model view with [`HostUVit::with_attn`], exactly like
+    /// `to_storage` for dtype.
+    pub attn: AttnMode,
 }
 
 fn get_linear(
@@ -303,6 +310,7 @@ impl HostUVit {
             },
             depth,
             storage,
+            attn: attention::ambient(),
         })
     }
 
@@ -358,6 +366,7 @@ impl HostUVit {
             },
             depth,
             storage,
+            attn: attention::ambient(),
         }
     }
 
@@ -400,6 +409,20 @@ impl HostUVit {
             },
             depth: self.depth,
             storage,
+            attn: self.attn,
+        }
+    }
+
+    /// The same model with attention routed through `attn` — a cheap
+    /// params clone (packed panels are shared `Vec` clones, no repacking)
+    /// so per-engine overrides never mutate the shared master model.
+    pub fn with_attn(&self, attn: AttnMode) -> HostUVit {
+        HostUVit {
+            info: self.info.clone(),
+            params: self.params.clone(),
+            depth: self.depth,
+            storage: self.storage,
+            attn,
         }
     }
 
@@ -436,12 +459,12 @@ impl HostUVit {
 
     /// Multi-head SDPA over `samples` independent row groups: q is
     /// (samples*nq x d), k/v are (samples*nk x d); attention never crosses
-    /// a sample boundary.
+    /// a sample boundary. Delegates to [`tensor::attention::sdpa_into`]
+    /// under this model's [`attn`](HostUVit::attn) mode; both modes fan
+    /// their tasks out across the worker pool and compute per-task
+    /// arithmetic independent of how many samples are folded.
     ///
-    /// The (sample x head) tasks fan out across the worker pool; each task
-    /// packs its head panels (q pre-scaled by 1/sqrt(dh), V transposed)
-    /// and runs the two blocked GEMMs serially on its worker — the same
-    /// arithmetic per head regardless of how many samples are folded.
+    /// [`tensor::attention::sdpa_into`]: attention::sdpa_into
     fn mha(
         &self,
         q: &[f32],
@@ -453,76 +476,8 @@ impl HostUVit {
     ) -> Vec<f32> {
         let d = self.info.dim;
         let h = self.info.heads;
-        let dh = d / h;
-        debug_assert_eq!(dh * h, d, "heads must divide dim");
-        let scale = 1.0 / (dh as f32).sqrt();
-        debug_assert_eq!(q.len(), samples * nq * d);
-        debug_assert_eq!(k.len(), samples * nk * d);
-        debug_assert_eq!(v.len(), samples * nk * d);
-        // (samples*h, nq, dh) head outputs, one contiguous chunk per task.
-        let mut heads_out = vec![0.0f32; samples * h * nq * dh];
-        let attend = |ti: usize, out_h: &mut [f32]| {
-            let s = ti / h;
-            let off = (ti % h) * dh;
-            let qs = &q[s * nq * d..(s + 1) * nq * d];
-            let ks = &k[s * nk * d..(s + 1) * nk * d];
-            let vs = &v[s * nk * d..(s + 1) * nk * d];
-            MHA_SCRATCH.with(|cell| {
-                let mut buf = cell.borrow_mut();
-                let need = nq * dh + nk * dh + dh * nk + nq * nk;
-                if buf.len() < need {
-                    buf.resize(need, 0.0);
-                }
-                let (qh, rest) = buf.split_at_mut(nq * dh);
-                let (kh, rest) = rest.split_at_mut(nk * dh);
-                let (vht, rest) = rest.split_at_mut(dh * nk);
-                let logits = &mut rest[..nq * nk];
-                // Fold the 1/sqrt(dh) scale into the O(nq*dh) q-panel
-                // pack — nk/dh times cheaper than rescaling the
-                // (nq x nk) logits.
-                for i in 0..nq {
-                    for c in 0..dh {
-                        qh[i * dh + c] = qs[i * d + off + c] * scale;
-                    }
-                }
-                // Pack V directly transposed (dh x nk) so the PV
-                // reduction is a bt-GEMM with no internal packing
-                // allocation.
-                for j in 0..nk {
-                    kh[j * dh..(j + 1) * dh]
-                        .copy_from_slice(&ks[j * d + off..j * d + off + dh]);
-                    for c in 0..dh {
-                        vht[c * nk + j] = vs[j * d + off + c];
-                    }
-                }
-                gemm::matmul_bt_into(qh, kh, logits, nq, dh, nk);
-                softmax_rows(logits, nq, nk);
-                gemm::matmul_bt_into(logits, vht, out_h, nq, nk, dh);
-            });
-        };
-        // Below this many multiply-adds across all tasks, pool dispatch
-        // costs more than the attention math; results are bit-identical
-        // either way.
-        let macs = samples * h * nq * nk * dh;
-        if samples * h == 1 || macs < gemm::PAR_MIN_MACS {
-            for (ti, chunk) in heads_out.chunks_mut(nq * dh).enumerate() {
-                attend(ti, chunk);
-            }
-        } else {
-            pool::parallel_chunks_mut(&mut heads_out, nq * dh, |ti, chunk| attend(ti, chunk));
-        }
-        // Repack (s, head, i, c) -> (s*nq + i, head*dh + c).
         let mut out = vec![0.0f32; samples * nq * d];
-        for s in 0..samples {
-            for head in 0..h {
-                let base = (s * h + head) * nq * dh;
-                let off = head * dh;
-                for i in 0..nq {
-                    out[(s * nq + i) * d + off..(s * nq + i) * d + off + dh]
-                        .copy_from_slice(&heads_out[base + i * dh..base + (i + 1) * dh]);
-                }
-            }
-        }
+        attention::sdpa_into(self.attn, q, k, v, samples, nq, nk, d, h, &mut out);
         out
     }
 

@@ -1,0 +1,506 @@
+//! Scaled-dot-product attention: the materialized reference and the PR 9
+//! fused streaming-tile path, behind one entry point ([`sdpa_into`]).
+//!
+//! * [`AttnMode::Materialized`] (default) — the three-pass reference:
+//!   per (sample, head) task, pack the head panels, run `QKᵀ` as one
+//!   blocked GEMM into an (nq x nk) logits buffer, `softmax_rows` over
+//!   it, then the PV GEMM. Bit-exact with the pre-PR 9 `HostUVit::mha`,
+//!   and — like every f32 kernel on the microkernel seam — bit-identical
+//!   across `TOMA_KERNEL` dispatches and batch folding.
+//! * [`AttnMode::Fused`] — online-softmax streaming tiles
+//!   (FlashAttention-style, on the CPU cache hierarchy): per
+//!   (sample, head, q-block) task, walk K/V in [`BK`]-sized key blocks
+//!   maintaining a running row max `m`, a running exp-sum `l`, and a
+//!   rescaled (Bq x dh) output accumulator. The (nq x nk) logits matrix
+//!   is never materialized, so per-task scratch is `O(Bq·Bk + Bq·dh)`
+//!   ([`task_scratch_elems`]) instead of `O(nq·nk)`, and the logits'
+//!   3-4 passes of DRAM traffic disappear — K/V restream from cache
+//!   instead. Inner loops (score dots, running-max update, fused
+//!   exp-scale-accumulate) run on the sealed microkernel seam
+//!   (`kernel::dot4` / `row_max` / `scale` / `axpy`; `exp` stays scalar
+//!   to keep the numerics boring).
+//!
+//! Numeric contract — read this before comparing the two modes:
+//!
+//! **The fused path is NOT bit-identical to the materialized one.**
+//! Online softmax reorders the reduction: the exp-sum accumulates per key
+//! block under a running max (with multiplicative rescales when the max
+//! moves) instead of one index-order pass under the global row max, and
+//! the PV reduction interleaves with it. Both compute the same value to
+//! within a ≤ 1e-5 relative envelope (pinned by `tests/attention_fused.rs`
+//! and asserted in `benches/attention.rs` at SDXL scale), but the default
+//! serving path stays materialized and `EngineConfig::attn = fused` keys
+//! its own lanes/cohorts, exactly like non-f32 storage.
+//!
+//! What the fused path DOES keep, by construction on the kernel seam:
+//! dispatch invariance (every fused primitive is bit-identical under
+//! `TOMA_KERNEL=scalar` and the AVX2 arm, so fused results never depend
+//! on dispatch) and fold invariance (tasks are per (sample, head,
+//! q-block) with sample-count-independent arithmetic, so batched ==
+//! single bitwise *within* a mode — the scheduler-equivalence property).
+
+use std::cell::RefCell;
+use std::fmt;
+use std::sync::OnceLock;
+
+use crate::tensor::kernel::{self, Dispatch};
+use crate::tensor::ops::softmax_rows;
+use crate::tensor::{gemm, pool};
+
+/// Which SDPA implementation services a call (an [`EngineConfig`] field
+/// on the serving path; `TOMA_ATTN` sets the process [`ambient`]).
+///
+/// [`EngineConfig`]: crate::coordinator::EngineConfig
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum AttnMode {
+    /// Three-pass reference (GEMM -> softmax -> GEMM over materialized
+    /// logits). Bit-exact default.
+    #[default]
+    Materialized,
+    /// Online-softmax streaming tiles; never materializes logits. Within
+    /// a ≤ 1e-5 relative envelope of [`AttnMode::Materialized`], not
+    /// bit-identical (see the module contract).
+    Fused,
+}
+
+impl AttnMode {
+    pub fn parse(s: &str) -> Option<AttnMode> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "materialized" | "mat" => Some(AttnMode::Materialized),
+            "fused" => Some(AttnMode::Fused),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            AttnMode::Materialized => "materialized",
+            AttnMode::Fused => "fused",
+        }
+    }
+}
+
+impl fmt::Display for AttnMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+static AMBIENT: OnceLock<AttnMode> = OnceLock::new();
+
+/// The process-ambient attention mode, resolved once (mirroring
+/// `kernel::active`): `TOMA_ATTN=fused` selects the streaming path for
+/// every model built without an explicit override; `materialized`, `auto`
+/// or unset keep the bit-exact default (any other value warns and means
+/// the default). `EngineConfig::resolved_attn` consults this only when
+/// its own field is the default, so lane keys stay purely field-driven
+/// and ambient smoke runs (the CI `TOMA_ATTN=fused` leg) don't re-key
+/// lanes.
+pub fn ambient() -> AttnMode {
+    *AMBIENT.get_or_init(|| match std::env::var("TOMA_ATTN").as_deref() {
+        Ok("fused") => AttnMode::Fused,
+        Ok("materialized") | Ok("auto") | Err(_) => AttnMode::Materialized,
+        Ok(other) => {
+            eprintln!(
+                "[toma] unknown TOMA_ATTN={other:?} (want materialized|fused|auto); \
+                 using materialized"
+            );
+            AttnMode::Materialized
+        }
+    })
+}
+
+/// Fused q-block height: rows of Q processed per task.
+pub const BQ: usize = 32;
+/// Fused key-block width: K/V rows streamed per inner iteration. The
+/// (BQ x BK) score tile plus a (BQ x dh) q panel stay L1/L2-resident
+/// while a key block's K and V rows stream through.
+pub const BK: usize = 128;
+
+/// High-water cap (elements) on the per-thread attention scratch. A task
+/// needing more is served from a one-shot allocation and the retained
+/// buffer is released, so one giant materialized request (its logits are
+/// O(nq·nk)) cannot pin tens of MB per worker for the process lifetime.
+/// 2^23 f32 = 32 MiB — generous for steady-state serving shapes, below
+/// SDXL-scale materialized logits (which the fused path avoids anyway).
+pub const SCRATCH_CAP_ELEMS: usize = 1 << 23;
+
+thread_local! {
+    /// Per-thread attention scratch, reused across tasks (keeps the hot
+    /// path allocation-free per worker). Every region is fully
+    /// overwritten before it is read, so stale contents are harmless;
+    /// growth is bounded by [`SCRATCH_CAP_ELEMS`].
+    static SCRATCH: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Run `f` over a `need`-element scratch slice: thread-local reuse under
+/// the cap, one-shot allocation (plus release of the retained buffer)
+/// above it.
+fn with_scratch<R>(need: usize, f: impl FnOnce(&mut [f32]) -> R) -> R {
+    SCRATCH.with(|cell| {
+        let mut buf = cell.borrow_mut();
+        if need > SCRATCH_CAP_ELEMS {
+            if buf.capacity() > 0 {
+                *buf = Vec::new();
+            }
+            drop(buf);
+            let mut tmp = vec![0.0f32; need];
+            return f(&mut tmp);
+        }
+        if buf.len() < need {
+            buf.resize(need, 0.0);
+        }
+        f(&mut buf[..need])
+    })
+}
+
+/// Current thread's retained scratch length (test/diagnostic accessor —
+/// the scratch-bound acceptance tests read this).
+pub fn thread_scratch_len() -> usize {
+    SCRATCH.with(|cell| cell.borrow().len())
+}
+
+/// Scratch elements one attention task needs. Materialized is dominated
+/// by the (nq x nk) logits; fused is `O(Bq·Bk + Bq·dh)` — independent of
+/// nq and nk, which is the whole point of streaming.
+pub fn task_scratch_elems(mode: AttnMode, nq: usize, nk: usize, dh: usize) -> usize {
+    match mode {
+        AttnMode::Materialized => nq * dh + nk * dh + dh * nk + nq * nk,
+        AttnMode::Fused => BQ * dh + BQ * BK + 2 * BQ,
+    }
+}
+
+/// Multi-head SDPA over `samples` independent row groups on the active
+/// kernel dispatch: `q` is (samples*nq x d), `k`/`v` are
+/// (samples*nk x d), `out` receives (samples*nq x d) with heads
+/// re-interleaved; attention never crosses a sample boundary.
+pub fn sdpa_into(
+    mode: AttnMode,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    samples: usize,
+    nq: usize,
+    nk: usize,
+    d: usize,
+    h: usize,
+    out: &mut [f32],
+) {
+    sdpa_into_as(mode, kernel::active(), q, k, v, samples, nq, nk, d, h, out)
+}
+
+/// [`sdpa_into`] on an explicit kernel dispatch, so tests can pin the
+/// fused path's dispatch invariance in one process. Results are
+/// bit-identical across dispatches in *both* modes (the GEMM substrate's
+/// f32 contract for materialized; the fused primitives' elementwise /
+/// order-invariant contract for fused).
+pub fn sdpa_into_as(
+    mode: AttnMode,
+    disp: Dispatch,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    samples: usize,
+    nq: usize,
+    nk: usize,
+    d: usize,
+    h: usize,
+    out: &mut [f32],
+) {
+    assert!(h > 0 && d % h == 0, "heads must divide dim ({d} / {h})");
+    assert_eq!(q.len(), samples * nq * d, "q shape");
+    assert_eq!(k.len(), samples * nk * d, "k shape");
+    assert_eq!(v.len(), samples * nk * d, "v shape");
+    assert_eq!(out.len(), samples * nq * d, "out shape");
+    match mode {
+        AttnMode::Materialized => materialized_into(disp, q, k, v, samples, nq, nk, d, h, out),
+        AttnMode::Fused => fused_into(disp, q, k, v, samples, nq, nk, d, h, out),
+    }
+}
+
+/// The three-pass reference, verbatim the pre-PR 9 `HostUVit::mha` body:
+/// (sample x head) tasks fan out across the worker pool; each packs its
+/// head panels (q pre-scaled by 1/sqrt(dh), V transposed) and runs the
+/// two blocked GEMMs serially on its worker — the same arithmetic per
+/// head regardless of how many samples are folded.
+#[allow(clippy::too_many_arguments)]
+fn materialized_into(
+    disp: Dispatch,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    samples: usize,
+    nq: usize,
+    nk: usize,
+    d: usize,
+    h: usize,
+    out: &mut [f32],
+) {
+    let dh = d / h;
+    let scale = 1.0 / (dh as f32).sqrt();
+    // (samples*h, nq, dh) head outputs, one contiguous chunk per task.
+    let mut heads_out = vec![0.0f32; samples * h * nq * dh];
+    let attend = |ti: usize, out_h: &mut [f32]| {
+        let s = ti / h;
+        let off = (ti % h) * dh;
+        let qs = &q[s * nq * d..(s + 1) * nq * d];
+        let ks = &k[s * nk * d..(s + 1) * nk * d];
+        let vs = &v[s * nk * d..(s + 1) * nk * d];
+        with_scratch(task_scratch_elems(AttnMode::Materialized, nq, nk, dh), |buf| {
+            let (qh, rest) = buf.split_at_mut(nq * dh);
+            let (kh, rest) = rest.split_at_mut(nk * dh);
+            let (vht, rest) = rest.split_at_mut(dh * nk);
+            let logits = &mut rest[..nq * nk];
+            // Fold the 1/sqrt(dh) scale into the O(nq*dh) q-panel pack —
+            // nk/dh times cheaper than rescaling the (nq x nk) logits.
+            for i in 0..nq {
+                for c in 0..dh {
+                    qh[i * dh + c] = qs[i * d + off + c] * scale;
+                }
+            }
+            // Pack V directly transposed (dh x nk) so the PV reduction is
+            // a bt-GEMM with no internal packing allocation.
+            for j in 0..nk {
+                kh[j * dh..(j + 1) * dh].copy_from_slice(&ks[j * d + off..j * d + off + dh]);
+                for c in 0..dh {
+                    vht[c * nk + j] = vs[j * d + off + c];
+                }
+            }
+            gemm::matmul_bt_into_e_as(disp, qh, kh, logits, nq, dh, nk);
+            softmax_rows(logits, nq, nk);
+            gemm::matmul_bt_into_e_as(disp, logits, vht, out_h, nq, nk, dh);
+        });
+    };
+    // Below this many multiply-adds across all tasks, pool dispatch costs
+    // more than the attention math; results are bit-identical either way.
+    let macs = samples * h * nq * nk * dh;
+    if samples * h == 1 || macs < gemm::PAR_MIN_MACS {
+        for (ti, chunk) in heads_out.chunks_mut(nq * dh).enumerate() {
+            attend(ti, chunk);
+        }
+    } else {
+        pool::parallel_chunks_mut(&mut heads_out, nq * dh, |ti, chunk| attend(ti, chunk));
+    }
+    repack_into(&heads_out, out, samples, nq, d, h, dh, |s, head, i| {
+        (s * h + head) * nq * dh + i * dh
+    });
+}
+
+/// The fused streaming-tile path: (sample x head x q-block) tasks, each
+/// walking all of K/V in [`BK`]-key blocks with online softmax. See the
+/// module docs for the reduction-order contract.
+#[allow(clippy::too_many_arguments)]
+fn fused_into(
+    disp: Dispatch,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    samples: usize,
+    nq: usize,
+    nk: usize,
+    d: usize,
+    h: usize,
+    out: &mut [f32],
+) {
+    let dh = d / h;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let qbs = (nq + BQ - 1) / BQ;
+    let tasks = samples * h * qbs;
+    // Padded task-major accumulators: every task owns one BQ*dh chunk
+    // (a tail q-block uses a prefix; the pad keeps chunks uniform for
+    // `parallel_chunks_mut` and costs < BQ rows per head).
+    let mut heads_out = vec![0.0f32; tasks * BQ * dh];
+    let attend = |ti: usize, chunk: &mut [f32]| {
+        let sh = ti / qbs;
+        let qb = ti - sh * qbs;
+        let s = sh / h;
+        let off = (sh % h) * dh;
+        let i0 = qb * BQ;
+        let i1 = (i0 + BQ).min(nq);
+        let bq = i1 - i0;
+        let qs = &q[s * nq * d..(s + 1) * nq * d];
+        let ks = &k[s * nk * d..(s + 1) * nk * d];
+        let vs = &v[s * nk * d..(s + 1) * nk * d];
+        // The (bq x dh) accumulator lives directly in the task's output
+        // chunk — no copy at the end, and no O(nq)-sized scratch.
+        let acc = &mut chunk[..bq * dh];
+        with_scratch(task_scratch_elems(AttnMode::Fused, nq, nk, dh), |buf| {
+            let (qh, rest) = buf.split_at_mut(BQ * dh);
+            let (scores, rest) = rest.split_at_mut(BQ * BK);
+            let (m, l) = rest.split_at_mut(BQ);
+            for r in 0..bq {
+                let src = (i0 + r) * d + off;
+                for c in 0..dh {
+                    qh[r * dh + c] = qs[src + c] * scale;
+                }
+            }
+            for vv in acc.iter_mut() {
+                *vv = 0.0;
+            }
+            m[..bq].fill(f32::NEG_INFINITY);
+            l[..bq].fill(0.0);
+            let mut jb = 0;
+            while jb < nk {
+                let jend = (jb + BK).min(nk);
+                let w = jend - jb;
+                for r in 0..bq {
+                    let qr = &qh[r * dh..(r + 1) * dh];
+                    let srow = &mut scores[r * BK..r * BK + w];
+                    // Scores straight off the strided K rows (each head's
+                    // dh segment is contiguous) — no K packing.
+                    let mut j = 0;
+                    while j + 4 <= w {
+                        let k0 = (jb + j) * d + off;
+                        let k1 = (jb + j + 1) * d + off;
+                        let k2 = (jb + j + 2) * d + off;
+                        let k3 = (jb + j + 3) * d + off;
+                        let s4 = kernel::dot4_as(
+                            disp,
+                            qr,
+                            &ks[k0..k0 + dh],
+                            &ks[k1..k1 + dh],
+                            &ks[k2..k2 + dh],
+                            &ks[k3..k3 + dh],
+                        );
+                        srow[j..j + 4].copy_from_slice(&s4);
+                        j += 4;
+                    }
+                    while j < w {
+                        let kj = (jb + j) * d + off;
+                        srow[j] = kernel::dot_as(disp, qr, &ks[kj..kj + dh]);
+                        j += 1;
+                    }
+                    let accr = &mut acc[r * dh..(r + 1) * dh];
+                    // Running-max update: when the max moves, rescale the
+                    // exp-sum and the accumulator by exp(m_old - m_new).
+                    let mb = kernel::row_max_as(disp, srow, m[r]);
+                    if mb > m[r] {
+                        if l[r] > 0.0 {
+                            let corr = (m[r] - mb).exp();
+                            l[r] *= corr;
+                            kernel::scale_as(disp, accr, corr);
+                        }
+                        m[r] = mb;
+                    }
+                    // exp + index-order sum stay scalar (the boring part
+                    // of the numerics), writing p over the score row.
+                    let mr = m[r];
+                    let mut sum = 0.0f32;
+                    for sv in srow.iter_mut() {
+                        let p = (*sv - mr).exp();
+                        *sv = p;
+                        sum += p;
+                    }
+                    l[r] += sum;
+                    // Fused accumulate: acc_r += p_j * v_j per key row.
+                    for (jj, &p) in srow.iter().enumerate() {
+                        let vj = (jb + jj) * d + off;
+                        kernel::axpy_as(disp, accr, p, &vs[vj..vj + dh]);
+                    }
+                }
+                jb = jend;
+            }
+            // Final normalization (same 1e-20 floor as softmax_rows).
+            for r in 0..bq {
+                let inv = 1.0 / l[r].max(1e-20);
+                kernel::scale_as(disp, &mut acc[r * dh..(r + 1) * dh], inv);
+            }
+        });
+    };
+    let macs = samples * h * nq * nk * dh;
+    if tasks <= 1 || macs < gemm::PAR_MIN_MACS {
+        for (ti, chunk) in heads_out.chunks_mut(BQ * dh).enumerate() {
+            attend(ti, chunk);
+        }
+    } else {
+        pool::parallel_chunks_mut(&mut heads_out, BQ * dh, |ti, chunk| attend(ti, chunk));
+    }
+    repack_into(&heads_out, out, samples, nq, d, h, dh, |s, head, i| {
+        ((s * h + head) * qbs + i / BQ) * BQ * dh + (i % BQ) * dh
+    });
+}
+
+/// Re-interleave per-head outputs into (samples*nq x d) rows:
+/// `out[(s*nq + i) * d + head*dh ..][..dh] = heads_out[src_of(s, head, i)..]`.
+/// A full pass over `samples*nq*d` floats, so it fans out over the pool
+/// above the usual element threshold (PR 9 satellite — it was a serial
+/// tail before).
+fn repack_into<F: Fn(usize, usize, usize) -> usize + Sync>(
+    heads_out: &[f32],
+    out: &mut [f32],
+    samples: usize,
+    nq: usize,
+    d: usize,
+    h: usize,
+    dh: usize,
+    src_of: F,
+) {
+    let total_rows = samples * nq;
+    debug_assert_eq!(out.len(), total_rows * d);
+    let copy_rows = |r0: usize, chunk: &mut [f32]| {
+        for (dr, orow) in chunk.chunks_mut(d).enumerate() {
+            let gr = r0 + dr;
+            let s = gr / nq;
+            let i = gr - s * nq;
+            for head in 0..h {
+                let src = src_of(s, head, i);
+                orow[head * dh..(head + 1) * dh].copy_from_slice(&heads_out[src..src + dh]);
+            }
+        }
+    };
+    if total_rows * d < pool::PAR_MIN_ELEMS {
+        copy_rows(0, out);
+    } else {
+        let per = pool::rows_per_task(total_rows);
+        pool::parallel_chunks_mut(out, per * d, |ci, chunk| copy_rows(ci * per, chunk));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parse_and_display() {
+        assert_eq!(AttnMode::parse("materialized"), Some(AttnMode::Materialized));
+        assert_eq!(AttnMode::parse("mat"), Some(AttnMode::Materialized));
+        assert_eq!(AttnMode::parse(" Fused "), Some(AttnMode::Fused));
+        assert_eq!(AttnMode::parse("flash"), None);
+        assert_eq!(AttnMode::Fused.to_string(), "fused");
+        assert_eq!(AttnMode::default(), AttnMode::Materialized);
+    }
+
+    #[test]
+    fn fused_task_scratch_is_shape_independent() {
+        let small = task_scratch_elems(AttnMode::Fused, 64, 64, 64);
+        let large = task_scratch_elems(AttnMode::Fused, 4096, 4096, 64);
+        assert_eq!(small, large, "fused scratch must be O(Bq*Bk + Bq*dh), not O(nq*nk)");
+        assert_eq!(large, BQ * 64 + BQ * BK + 2 * BQ);
+        assert!(large < task_scratch_elems(AttnMode::Materialized, 4096, 4096, 64));
+        // And the materialized bound is the historical logits-dominated one.
+        assert_eq!(task_scratch_elems(AttnMode::Materialized, 3, 5, 2), 3 * 2 + 5 * 2 + 2 * 5 + 15);
+    }
+
+    #[test]
+    fn scratch_cap_releases_oversized_buffers() {
+        with_scratch(128, |b| assert_eq!(b.len(), 128));
+        assert_eq!(thread_scratch_len(), 128);
+        with_scratch(SCRATCH_CAP_ELEMS + 1, |b| {
+            assert_eq!(b.len(), SCRATCH_CAP_ELEMS + 1);
+            b[SCRATCH_CAP_ELEMS] = 1.0; // touch the tail — really allocated
+        });
+        assert_eq!(thread_scratch_len(), 0, "over-cap request must release the retained buffer");
+        with_scratch(64, |b| assert_eq!(b.len(), 64));
+        assert_eq!(thread_scratch_len(), 64, "under-cap requests retain again");
+    }
+
+    #[test]
+    fn ambient_is_default_without_env() {
+        // The fused branch is exercised by the CI TOMA_ATTN=fused leg
+        // (env mutation in-process would race parallel tests).
+        match std::env::var("TOMA_ATTN").as_deref() {
+            Ok("fused") => assert_eq!(ambient(), AttnMode::Fused),
+            _ => assert_eq!(ambient(), AttnMode::Materialized),
+        }
+    }
+}

@@ -29,6 +29,15 @@
 //! widening loads and the wider register tile. The dispatch property
 //! tests pin f32 bitwise and the halves to ≤ 1e-6 relative
 //! (`tests/kernel_dispatch.rs`).
+//!
+//! PR 9 extends the seam with the fused-attention primitives
+//! (`tensor::attention`): [`MicroKernel::row_max`] (running row max),
+//! [`MicroKernel::scale`] (accumulator rescale) and [`MicroKernel::axpy`]
+//! (exp-scale-accumulate's V-row update). All three keep the bit-identity
+//! contract across dispatches — max is order-invariant on finite inputs
+//! and the other two are elementwise with unfused multiplies — so even
+//! the *fused* attention path (itself not bit-identical to materialized
+//! attention; see `tensor::attention`) never depends on `TOMA_KERNEL`.
 
 pub mod scalar;
 #[cfg(target_arch = "x86_64")]
@@ -78,6 +87,21 @@ pub trait MicroKernel: sealed::Sealed {
     /// facility-location scan, bit-identical across implementations (same
     /// 8-lane shape as [`Self::dot`]; see `scalar::relu_gain`).
     fn relu_gain(row: &[f32], m: &[f32]) -> f32;
+
+    /// Running max of `row` seeded with `init` — the fused-attention
+    /// (PR 9) running-row-max update. Bit-identical across
+    /// implementations for the finite inputs the attention path produces
+    /// (max is order-invariant there; see `scalar::row_max`).
+    fn row_max(row: &[f32], init: f32) -> f32;
+
+    /// In-place `x *= a` — the fused-attention accumulator rescale.
+    /// Elementwise, so bit-identical across implementations.
+    fn scale(x: &mut [f32], a: f32);
+
+    /// `y += a * x` elementwise — the fused exp-scale-accumulate's V-row
+    /// update. Multiply-then-add per element (never a `vfmadd`), so
+    /// bit-identical across implementations.
+    fn axpy(y: &mut [f32], a: f32, x: &[f32]);
 }
 
 /// Which microkernel services the seam.
@@ -193,6 +217,71 @@ pub fn relu_gain_as(d: Dispatch, row: &[f32], m: &[f32]) -> f32 {
     }
     let _ = d;
     scalar::Scalar::relu_gain(row, m)
+}
+
+/// 1x4 widening dot tile on an explicit dispatch — the fused-attention
+/// score kernel sweeps four K rows per q-row call. Unsupported dispatches
+/// fall back to scalar (bit-identical either way).
+#[inline]
+pub fn dot4_as<A: Element, B: Element>(
+    d: Dispatch,
+    a: &[A],
+    b0: &[B],
+    b1: &[B],
+    b2: &[B],
+    b3: &[B],
+) -> [f32; 4] {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if d == Dispatch::Avx2Fma && d.supported() {
+            return x86::Avx2Fma::dot4(a, b0, b1, b2, b3);
+        }
+    }
+    let _ = d;
+    scalar::Scalar::dot4(a, b0, b1, b2, b3)
+}
+
+/// Running row max on an explicit dispatch (fused-attention primitive;
+/// bit-identical across dispatches for finite inputs).
+#[inline]
+pub fn row_max_as(d: Dispatch, row: &[f32], init: f32) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if d == Dispatch::Avx2Fma && d.supported() {
+            return x86::Avx2Fma::row_max(row, init);
+        }
+    }
+    let _ = d;
+    scalar::Scalar::row_max(row, init)
+}
+
+/// In-place `x *= a` on an explicit dispatch (fused-attention rescale;
+/// elementwise, bit-identical across dispatches).
+#[inline]
+pub fn scale_as(d: Dispatch, x: &mut [f32], a: f32) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if d == Dispatch::Avx2Fma && d.supported() {
+            return x86::Avx2Fma::scale(x, a);
+        }
+    }
+    let _ = d;
+    scalar::Scalar::scale(x, a)
+}
+
+/// `y += a * x` on an explicit dispatch (fused-attention V-row
+/// accumulate; elementwise multiply-then-add, bit-identical across
+/// dispatches).
+#[inline]
+pub fn axpy_as(d: Dispatch, y: &mut [f32], a: f32, x: &[f32]) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if d == Dispatch::Avx2Fma && d.supported() {
+            return x86::Avx2Fma::axpy(y, a, x);
+        }
+    }
+    let _ = d;
+    scalar::Scalar::axpy(y, a, x)
 }
 
 /// Single-thread blocked panel sweep on an explicit dispatch: `c` (rows
@@ -397,6 +486,62 @@ mod tests {
             assert_eq!(relu_gain(&row, &m), want, "active dispatch, len {n}");
             if Dispatch::Avx2Fma.supported() {
                 assert_eq!(relu_gain_as(Dispatch::Avx2Fma, &row, &m), want, "len {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn row_max_matches_scan_across_dispatches() {
+        let mut rng = Pcg64::new(35);
+        for n in [0usize, 1, 7, 8, 9, 31, 257] {
+            let row = rng.normal_vec(n);
+            for init in [f32::NEG_INFINITY, -0.25, 10.0] {
+                let want = row.iter().fold(init, |m, &v| if v > m { v } else { m });
+                assert_eq!(row_max_as(Dispatch::Scalar, &row, init), want, "len {n}");
+                if Dispatch::Avx2Fma.supported() {
+                    assert_eq!(row_max_as(Dispatch::Avx2Fma, &row, init), want, "len {n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scale_and_axpy_bitwise_across_dispatches() {
+        let mut rng = Pcg64::new(36);
+        for n in [0usize, 1, 7, 8, 9, 31, 257] {
+            let x = rng.normal_vec(n);
+            let y0 = rng.normal_vec(n);
+            let a = 0.37f32;
+            let mut ys = y0.clone();
+            scale_as(Dispatch::Scalar, &mut ys, a);
+            let want_scale: Vec<f32> = y0.iter().map(|v| v * a).collect();
+            assert_eq!(ys, want_scale, "scale len {n}");
+            let mut ya = y0.clone();
+            axpy_as(Dispatch::Scalar, &mut ya, a, &x);
+            let want_axpy: Vec<f32> = y0.iter().zip(&x).map(|(y, v)| y + a * v).collect();
+            assert_eq!(ya, want_axpy, "axpy len {n}");
+            if Dispatch::Avx2Fma.supported() {
+                let mut ys = y0.clone();
+                scale_as(Dispatch::Avx2Fma, &mut ys, a);
+                assert_eq!(ys, want_scale, "simd scale len {n}");
+                let mut ya = y0.clone();
+                axpy_as(Dispatch::Avx2Fma, &mut ya, a, &x);
+                assert_eq!(ya, want_axpy, "simd axpy len {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn dot4_as_matches_four_dots() {
+        let mut rng = Pcg64::new(37);
+        for n in [0usize, 1, 7, 8, 9, 31, 257] {
+            let a = rng.normal_vec(n);
+            let b: Vec<Vec<f32>> = (0..4).map(|_| rng.normal_vec(n)).collect();
+            for d in [Dispatch::Scalar, Dispatch::Avx2Fma] {
+                let t = dot4_as(d, &a, &b[0], &b[1], &b[2], &b[3]);
+                for (i, bt) in b.iter().enumerate() {
+                    assert_eq!(t[i], dot_as(Dispatch::Scalar, &a, bt.as_slice()), "len {n}");
+                }
             }
         }
     }

@@ -136,6 +136,44 @@ pub(crate) fn relu_gain(row: &[f32], m: &[f32]) -> f32 {
     total
 }
 
+/// Running max of `row` seeded with `init` — the fused-attention
+/// running-row-max update (PR 9). A plain index-order scan: `max` is
+/// associative and commutative on the finite values the attention path
+/// produces, so a lane-split SIMD reduction agrees bitwise (the only
+/// divergence is the sign of a `±0.0` result, which the downstream
+/// `exp(s - m)` arithmetic erases — `exp(±0.0) == 1.0` exactly).
+#[inline(always)]
+pub(crate) fn row_max(row: &[f32], init: f32) -> f32 {
+    let mut m = init;
+    for &v in row {
+        if v > m {
+            m = v;
+        }
+    }
+    m
+}
+
+/// In-place scale `x *= a` — the fused-attention accumulator rescale when
+/// the running max moves. Purely elementwise, so any vector width is
+/// bitwise the scalar loop.
+#[inline(always)]
+pub(crate) fn scale(x: &mut [f32], a: f32) {
+    for v in x.iter_mut() {
+        *v *= a;
+    }
+}
+
+/// `y += a * x` elementwise — the fused exp-scale-accumulate's V-row
+/// update. Multiply **then** add per element (never fused, matching the
+/// [`dot`] contract), so a vectorized arm is bitwise this loop.
+#[inline(always)]
+pub(crate) fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yv, xv) in y.iter_mut().zip(x) {
+        *yv += a * *xv;
+    }
+}
+
 impl MicroKernel for Scalar {
     #[inline(always)]
     fn dot<A: Element, B: Element>(a: &[A], b: &[B]) -> f32 {
@@ -150,5 +188,20 @@ impl MicroKernel for Scalar {
     #[inline(always)]
     fn relu_gain(row: &[f32], m: &[f32]) -> f32 {
         relu_gain(row, m)
+    }
+
+    #[inline(always)]
+    fn row_max(row: &[f32], init: f32) -> f32 {
+        row_max(row, init)
+    }
+
+    #[inline(always)]
+    fn scale(x: &mut [f32], a: f32) {
+        scale(x, a)
+    }
+
+    #[inline(always)]
+    fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+        axpy(y, a, x)
     }
 }

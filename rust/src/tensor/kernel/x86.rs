@@ -28,8 +28,8 @@
 
 use std::arch::x86_64::{
     __m128i, __m256, _mm256_add_ps, _mm256_castsi256_ps, _mm256_cvtepu16_epi32, _mm256_cvtph_ps,
-    _mm256_loadu_ps, _mm256_max_ps, _mm256_mul_ps, _mm256_setzero_ps, _mm256_slli_epi32,
-    _mm256_storeu_ps, _mm256_sub_ps, _mm_loadu_si128,
+    _mm256_loadu_ps, _mm256_max_ps, _mm256_mul_ps, _mm256_set1_ps, _mm256_setzero_ps,
+    _mm256_slli_epi32, _mm256_storeu_ps, _mm256_sub_ps, _mm_loadu_si128,
 };
 
 use super::MicroKernel;
@@ -289,6 +289,80 @@ unsafe fn relu_gain_avx2(row: &[f32], m: &[f32]) -> f32 {
     total
 }
 
+/// Running row max: `vmaxps` over 8-lane blocks seeded with `init`, lanes
+/// folded with the scalar `>` scan, scalar tail. Max is order-invariant on
+/// finite values, so this equals the scalar reference's index-order scan
+/// bitwise (a `±0.0`-sign divergence is possible in principle but erased
+/// by the `exp(s - m)` consumer — see `scalar::row_max`).
+#[target_feature(enable = "avx2", enable = "fma", enable = "f16c")]
+unsafe fn row_max_avx2(row: &[f32], init: f32) -> f32 {
+    let n = row.len();
+    let n8 = n / 8 * 8;
+    let mut m = init;
+    if n8 > 0 {
+        let mut acc = _mm256_set1_ps(init);
+        let rp = row.as_ptr();
+        let mut i = 0;
+        while i < n8 {
+            acc = _mm256_max_ps(acc, ld_f32(rp.add(i)));
+            i += 8;
+        }
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        for l in lanes {
+            if l > m {
+                m = l;
+            }
+        }
+    }
+    for &v in &row[n8..] {
+        if v > m {
+            m = v;
+        }
+    }
+    m
+}
+
+/// In-place `x *= a`: `vmulps` blocks + scalar tail. Elementwise, so
+/// bitwise the scalar loop.
+#[target_feature(enable = "avx2", enable = "fma", enable = "f16c")]
+unsafe fn scale_avx2(x: &mut [f32], a: f32) {
+    let n = x.len();
+    let n8 = n / 8 * 8;
+    let av = _mm256_set1_ps(a);
+    let xp = x.as_mut_ptr();
+    let mut i = 0;
+    while i < n8 {
+        _mm256_storeu_ps(xp.add(i), _mm256_mul_ps(ld_f32(xp.add(i)), av));
+        i += 8;
+    }
+    for v in &mut x[n8..] {
+        *v *= a;
+    }
+}
+
+/// `y += a * x`: multiply-then-add per 8-lane block (deliberately unfused,
+/// like [`madd`]) + scalar tail. Elementwise, so bitwise the scalar loop.
+#[target_feature(enable = "avx2", enable = "fma", enable = "f16c")]
+unsafe fn axpy_avx2(y: &mut [f32], a: f32, x: &[f32]) {
+    // Hard assert (release too): the pointer loads below are sized by
+    // `y.len()`; a buggy caller must trip here, not read out of bounds.
+    assert_eq!(y.len(), x.len(), "axpy operand lengths diverge");
+    let n = y.len();
+    let n8 = n / 8 * 8;
+    let av = _mm256_set1_ps(a);
+    let yp = y.as_mut_ptr();
+    let xp = x.as_ptr();
+    let mut i = 0;
+    while i < n8 {
+        _mm256_storeu_ps(yp.add(i), madd(ld_f32(yp.add(i)), av, ld_f32(xp.add(i))));
+        i += 8;
+    }
+    for (yv, xv) in y[n8..].iter_mut().zip(&x[n8..]) {
+        *yv += a * *xv;
+    }
+}
+
 impl MicroKernel for Avx2Fma {
     fn dot<A: Element, B: Element>(a: &[A], b: &[B]) -> f32 {
         if !super::simd_supported() {
@@ -382,5 +456,29 @@ impl MicroKernel for Avx2Fma {
         }
         // Safety: as in `dot` (f32-only, no casts needed).
         unsafe { relu_gain_avx2(row, m) }
+    }
+
+    fn row_max(row: &[f32], init: f32) -> f32 {
+        if !super::simd_supported() {
+            return super::scalar::Scalar::row_max(row, init);
+        }
+        // Safety: as in `dot` (f32-only, no casts needed).
+        unsafe { row_max_avx2(row, init) }
+    }
+
+    fn scale(x: &mut [f32], a: f32) {
+        if !super::simd_supported() {
+            return super::scalar::Scalar::scale(x, a);
+        }
+        // Safety: as in `dot` (f32-only, no casts needed).
+        unsafe { scale_avx2(x, a) }
+    }
+
+    fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+        if !super::simd_supported() {
+            return super::scalar::Scalar::axpy(y, a, x);
+        }
+        // Safety: as in `dot` (f32-only, no casts needed).
+        unsafe { axpy_avx2(y, a, x) }
     }
 }

@@ -9,8 +9,12 @@
 //! [`gemm`] the blocked/register-tiled GEMM lowered onto that seam and
 //! fanned out over the pool (generic over each operand's storage element,
 //! accumulating in f32), and [`ops`] the public kernel surface everything
-//! else calls.
+//! else calls. [`attention`] builds multi-head SDPA on top: the bit-exact
+//! materialized reference plus the fused online-softmax streaming path
+//! (selected per engine config; NOT bit-identical to each other — see
+//! that module's reduction-order contract).
 
+pub mod attention;
 pub mod element;
 pub mod gemm;
 pub mod kernel;

@@ -13,6 +13,7 @@ use toma::coordinator::scheduler::{
 use toma::coordinator::{EngineConfig, FaultKind, FaultPlan, GenRequest, RetryPolicy};
 use toma::model::HostUVit;
 use toma::runtime::ModelInfo;
+use toma::tensor::attention::AttnMode;
 use toma::toma::plan::ReuseSchedule;
 
 const REGIONS: usize = 4;
@@ -203,6 +204,46 @@ fn degenerate_single_member_cohort_matches_per_request() {
     assert_eq!(result.stats.weight_refreshes, reference.stats.weight_refreshes);
     assert_eq!(result.stats.plan_reuses, reference.stats.plan_reuses);
     assert_eq!(result.stats.steps, reference.stats.steps);
+}
+
+/// Fused-attention lanes (PR 9) key separately — the default
+/// materialized path above stays bit-identical and its key unchanged —
+/// while the scheduler-equivalence property itself still holds *within*
+/// the fused mode: fused batched latents == fused per-request latents,
+/// bit for bit (fused per-task arithmetic is fold-invariant, it is only
+/// the materialized-vs-fused comparison that has an envelope).
+#[test]
+fn fused_attn_lanes_key_separately_and_stay_fold_invariant() {
+    let cfg = toma_cfg(12);
+    let fused = cfg.clone().with_attn(AttnMode::Fused);
+    assert_eq!(fused.key(), format!("{}:attn-fused", cfg.key()), "fused keys its own lanes");
+
+    let model = model();
+    let seeds: Vec<u64> = vec![11, 22, 33];
+    let reference = reference_latents(&model, &fused, &seeds);
+    let m = model.clone();
+    let sched = Scheduler::new(
+        BatchPolicy {
+            max_batch: 3,
+            max_queue_wait_s: 0.25,
+            ..Default::default()
+        },
+        move |c: &EngineConfig| HostBackend::boxed(m.clone(), c.clone(), REGIONS, TAU),
+    );
+    let reqs: Vec<GenRequest> = seeds
+        .iter()
+        .map(|&seed| GenRequest::new(&format!("prompt {seed}"), seed))
+        .collect();
+    let results = sched.run_batch_ok(&fused, reqs).expect("batch ok");
+    for (i, r) in results.iter().enumerate() {
+        assert_eq!(
+            r.latent, reference[i],
+            "seed {}: fused batched latent diverged from fused per-request",
+            seeds[i]
+        );
+        assert!(r.latent.iter().all(|v| v.is_finite()));
+    }
+    sched.shutdown();
 }
 
 /// Chaos equivalence (PR 6): a deterministic injected panic kills the
