@@ -19,10 +19,15 @@
 //! — so the merge-on-top-of-fast-attention interaction is a tracked
 //! number, not an assumption.
 //!
-//! Emits `BENCH_attention.json` with only the Part-1 kernel rows; the
-//! Part-2 e2e generations are wall-clock and scheduler-noise-prone on
-//! shared runners, so they print but stay out of the gated JSON (same
-//! policy as gemm_dtype's Part 2 and serve_sweep).
+//! Part 1.5 (PR 10) times the exp seam in isolation: the std-exp block
+//! PR 9's inner loop ran vs the vectorized `exp_sub_sum` that replaced
+//! it, with an in-bench assert that the seam call wins under SIMD.
+//!
+//! Emits `BENCH_attention.json` with the Part-1 kernel and Part-1.5 exp
+//! rows; the Part-2 e2e generations are wall-clock and
+//! scheduler-noise-prone on shared runners, so their timings ride along
+//! only as informational notes (medians + precision deltas) rather than
+//! gated rows (same policy as gemm_dtype's Part 2 and serve_sweep).
 
 use std::sync::Arc;
 
@@ -109,6 +114,60 @@ fn main() {
     }
     println!("\n{}", table.render());
 
+    // --- Part 1.5: the exp seam — poly exp_sub_sum vs PR 9's loop. -----
+    // PR 9 left scalar `f32::exp` as the fused inner loop's serial
+    // fraction; PR 10 replaced it with the seam's `exp_sub_sum`. This
+    // times the exact std-exp block the seam call replaced against the
+    // seam call, on one BK-wide key-block column across all SDXL query
+    // rows (4096 rows x 128 scores — the row shape the tile walk feeds
+    // the seam, 1/32 of the full 4096x4096 score volume per iteration).
+    {
+        let (rows, w) = (4096usize, 128usize);
+        let pristine: Vec<f32> = rng.normal_vec(rows * w).into_iter().map(|v| v * 3.0).collect();
+        let maxes: Vec<f32> = pristine
+            .chunks(w)
+            .map(|r| kernel::row_max_as(kernel::active(), r, f32::NEG_INFINITY))
+            .collect();
+        let mut scratch = vec![0.0f32; rows * w];
+        let mut sink = 0.0f32;
+        let med_std = runner.bench("exp_seam_sdxl_std", || {
+            scratch.copy_from_slice(&pristine);
+            let mut l = 0.0f32;
+            for (row, &m) in scratch.chunks_mut(w).zip(&maxes) {
+                let mut sum = 0.0f32;
+                for sv in row.iter_mut() {
+                    let p = (*sv - m).exp();
+                    *sv = p;
+                    sum += p;
+                }
+                l += sum;
+            }
+            sink += l;
+        });
+        let med_vec = runner.bench("exp_seam_sdxl_vec", || {
+            scratch.copy_from_slice(&pristine);
+            let mut l = 0.0f32;
+            for (row, &m) in scratch.chunks_mut(w).zip(&maxes) {
+                l += kernel::exp_sub_sum_as(kernel::active(), row, m);
+            }
+            sink += l;
+        });
+        std::hint::black_box(sink);
+        if med_std > 0.0 && med_vec > 0.0 {
+            runner.note("exp_seam_speedup", &format!("{:.2}x", med_std / med_vec));
+            let (s0, s1) = (fmt_secs(med_std), fmt_secs(med_vec));
+            println!("exp seam (4096x128): std {s0} vs vectorized {s1}");
+            // The PR 10 acceptance pin: the vectorized transcendental
+            // must beat the scalar-exp baseline it replaced under SIMD.
+            if kernel::active() == Dispatch::Avx2Fma {
+                assert!(
+                    med_vec < med_std,
+                    "vectorized exp must beat std exp ({med_vec:.3e}s vs {med_std:.3e}s)"
+                );
+            }
+        }
+    }
+
     // --- Part 2: merge x attn grid through the host engine. ------------
     // Timed on a separate un-JSON'd runner: wall-clock e2e generations
     // stay out of the hard-gated BENCH file (warn-tier policy).
@@ -147,6 +206,9 @@ fn main() {
             if e2e.get(&label).is_none() {
                 continue; // filtered out
             }
+            // Wall-clock medians ride along as notes (informational —
+            // notes never gate), so the grid lands in the JSON artifact.
+            runner.note(&format!("{label}_median"), &format!("{med:.6e}"));
             if attn == AttnMode::Materialized {
                 reference = latent.clone();
             }

@@ -14,13 +14,20 @@
 //! widening loads). The rows land in `BENCH_gemm_dtype.json`, so the CI
 //! bench-diff gate tracks both kernel paths' trends.
 //!
+//! Part 1c (`epilogue`, PR 10) times the fused GEMM epilogue (bias+gelu
+//! applied per output chunk at write-back) against the seed's two-pass
+//! schedule (GEMM, then a serial bias walk, then `ops::gelu`) per storage
+//! dtype at the SDXL MLP shape — with an in-bench assert that the fused
+//! path wins under the SIMD dispatch. The numeric identity of the two is
+//! pinned in `tests/gemm_epilogue.rs`; this tracks the schedule.
+//!
 //! Part 2 is a Table-6-style latency/accuracy row: the same request
 //! generated end-to-end through the per-request host engine with f32 vs
 //! bf16 vs f16 weight panels, with the quality deltas
 //! (`quality::precision_delta`) alongside the median step latency.
 //!
 //! Emits `BENCH_gemm_dtype.json` (target name `gemm_dtype`) containing
-//! only the Part-1 kernel rows — that file is hard-gated by CI's
+//! only the Part-1/1b/1c kernel rows — that file is hard-gated by CI's
 //! bench-diff like table6. The Part-2 end-to-end generation timings are
 //! wall-clock and scheduler-noise-prone on shared runners, so they print
 //! to stdout but are deliberately kept out of the gated JSON (same
@@ -36,8 +43,9 @@ use toma::quality::{precision_delta, FeatureExtractor};
 use toma::report::{fmt_secs, Table};
 use toma::runtime::ModelInfo;
 use toma::tensor::element::StorageDtype;
-use toma::tensor::gemm::Panels;
+use toma::tensor::gemm::{Epilogue, Panels};
 use toma::tensor::kernel::{self, Dispatch};
+use toma::tensor::ops;
 use toma::util::Pcg64;
 
 /// UViT linear-layer shapes at width 512 (m = tokens, k = d_in, n = d_out).
@@ -137,6 +145,71 @@ fn main() {
         }
     }
     println!("\n{}", kd.render());
+
+    // --- Part 1c: epilogue — fused write-back vs the seed's two-pass. --
+    // The SDXL MLP shape (m = 4096 tokens, k = 512, n = 2048) with the
+    // bias+gelu epilogue: the fused path applies the epilogue per output
+    // chunk inside the parallel GEMM write-back (cache-hot, on the pool
+    // threads); the two-pass reference replays the seed call sites —
+    // GEMM, then a serial bias broadcast, then `ops::gelu` over the full
+    // 32 MiB C. Same elementwise math, bitwise-identical result (pinned
+    // in tests/gemm_epilogue.rs); this measures the schedule change.
+    let mut et = Table::new("epilogue — fused vs two-pass, bias+gelu (mlp1 4096x512x2048)")
+        .headers(&["Dtype", "Variant", "Median", "eff GB/s"]);
+    let (m, k, n) = (4096usize, 512usize, 2048usize);
+    let a = rng.normal_vec(m * k);
+    let scale = 1.0 / (k as f32).sqrt();
+    let w: Vec<f32> = rng.normal_vec(k * n).into_iter().map(|v| v * scale).collect();
+    let bias = rng.normal_vec(n);
+    for dtype in StorageDtype::ALL {
+        let panels = Panels::pack(&w, k, n, dtype);
+        // Ideal streamed bytes: A + packed panels + C written once. The
+        // two-pass legs move 2 extra C-sized passes on top of this, which
+        // is exactly the gap being measured.
+        let bytes = (4 * m * k + panels.bytes() + 4 * m * n) as f64;
+        let mut c = vec![0.0f32; m * n];
+        let mut medians = std::collections::BTreeMap::new();
+        for tag in ["fused", "twopass"] {
+            let label = format!("epilogue_{dtype}_{tag}");
+            let med = runner.bench(&label, || {
+                if tag == "fused" {
+                    let ep = Epilogue::BiasGelu(&bias);
+                    panels.matmul_bt_into_ep(&a, &mut c, m, k, n, ep);
+                } else {
+                    panels.matmul_bt_into(&a, &mut c, m, k, n);
+                    for row in c.chunks_mut(n) {
+                        for (cv, bv) in row.iter_mut().zip(&bias) {
+                            *cv += bv;
+                        }
+                    }
+                    ops::gelu(&mut c);
+                }
+                std::hint::black_box(&c);
+            });
+            if med > 0.0 {
+                et.row(vec![
+                    dtype.to_string(),
+                    tag.into(),
+                    fmt_secs(med),
+                    format!("{:.2}", bytes / med / 1e9),
+                ]);
+                medians.insert(tag, med);
+            }
+        }
+        if let (Some(&fu), Some(&tp)) = (medians.get("fused"), medians.get("twopass")) {
+            runner.note(&format!("epilogue_{dtype}_speedup"), &format!("{:.2}x", tp / fu));
+            // The PR 10 acceptance pin: under the SIMD dispatch the fused
+            // epilogue must strictly beat the seed's two-pass schedule at
+            // the SDXL MLP shape.
+            if kernel::active() == Dispatch::Avx2Fma {
+                assert!(
+                    fu < tp,
+                    "{dtype}: fused epilogue must beat two-pass ({fu:.3e}s vs {tp:.3e}s)"
+                );
+            }
+        }
+    }
+    println!("\n{}", et.render());
 
     // --- Part 2: table6-style f32-vs-half latency/accuracy row. --------
     // Timed on a separate un-JSON'd runner: these are wall-clock e2e

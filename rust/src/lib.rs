@@ -101,23 +101,31 @@
 //!   explicit AVX2+FMA `std::arch` kernels — hand-vectorized bf16/f16
 //!   widening loads, 2x4 register tile — behind once-per-process runtime
 //!   dispatch with a `TOMA_KERNEL=scalar|auto` override; f32 results are
-//!   bit-identical under every dispatch), [`tensor::gemm`] (blocked,
-//!   register-tiled, multithreaded GEMM lowered onto that seam, generic
-//!   over each operand's storage element and accumulating in f32, with
-//!   the seed's scalar loop nests kept as `gemm::scalar` references and
-//!   `gemm::Panels` as the runtime-dtype dispatch), [`tensor::ops`]
-//!   (public kernel surface: GEMMs — including the dtype-parameterized
-//!   `matmul_e`/`matmul_at_e` — tiled column softmax, parallel row ops),
-//!   and — since PR 9 — [`tensor::attention`]: multi-head SDPA with two
-//!   implementations behind `EngineConfig::attn` / `--attn` /
+//!   bit-identical under every dispatch; since PR 10 the seam also
+//!   carries vectorized transcendentals, `exp_body`/`exp_sub_sum` — one
+//!   polynomial exp shared by the scalar and SIMD arms, bitwise
+//!   dispatch-identical, envelope-bounded vs `f32::exp`),
+//!   [`tensor::gemm`] (blocked, register-tiled, multithreaded GEMM
+//!   lowered onto that seam, generic over each operand's storage element
+//!   and accumulating in f32, with the seed's scalar loop nests kept as
+//!   `gemm::scalar` references, `gemm::Panels` as the runtime-dtype
+//!   dispatch, and — since PR 10 — `gemm::Epilogue`: bias / bias+gelu /
+//!   bias+silu applied per output chunk at write-back, bitwise identical
+//!   to the two-pass schedule it replaces and default-on in
+//!   `model::Linear`), [`tensor::ops`] (public kernel surface: GEMMs —
+//!   including the dtype-parameterized `matmul_e`/`matmul_at_e` — row and
+//!   tiled column softmax over the seam's `row_max`/`scale` primitives,
+//!   parallel row ops), and — since PR 9 — [`tensor::attention`]:
+//!   multi-head SDPA with two implementations behind
+//!   `EngineConfig::attn` / `--attn` /
 //!   `TOMA_ATTN`. `materialized` (default) is the bit-exact three-pass
 //!   reference; `fused` is online-softmax streaming tiles on the
-//!   microkernel seam (`row_max`/`scale`/`axpy` fused primitives,
-//!   hand-vectorized in the AVX2 arm) — `O(Bq·Bk + Bq·dh)` scratch per
-//!   task instead of materializing `O(nq·nk)` logits, NOT bit-identical
-//!   to materialized (reduction reorder; pinned ≤1e-5 relative envelope)
-//!   but still dispatch- and fold-invariant, keying its own lanes
-//!   (`:attn-fused`).
+//!   microkernel seam (`row_max`/`scale`/`axpy`/`exp_sub_sum` fused
+//!   primitives, hand-vectorized in the AVX2 arm) — `O(Bq·Bk + Bq·dh)`
+//!   scratch per task instead of materializing `O(nq·nk)` logits, NOT
+//!   bit-identical to materialized (reduction reorder + poly exp; pinned
+//!   ≤1e-5 relative envelope) but still dispatch- and fold-invariant,
+//!   keying its own lanes (`:attn-fused`).
 //! * [`util`], [`workload`], [`report`], [`bench`] — substrates
 //!   (`util::error` is the crate's dependency-free `anyhow` stand-in;
 //!   `bench::Runner` understands `--quick` and `--json <path>`, and

@@ -37,8 +37,8 @@ use crate::anyhow;
 use crate::runtime::{ModelInfo, WeightStore};
 use crate::tensor::attention::{self, AttnMode};
 use crate::tensor::element::StorageDtype;
-use crate::tensor::gemm::Panels;
-use crate::tensor::ops::{gelu, layernorm, silu};
+use crate::tensor::gemm::{Epilogue, Panels};
+use crate::tensor::ops::layernorm;
 use crate::toma::merge::MergeWeights;
 use crate::toma::regions::RegionLayout;
 use crate::toma::unmerge::unmerge_transpose;
@@ -119,14 +119,29 @@ impl Linear {
     }
 
     /// y = x W + b into a caller buffer, using the cached Bᵀ panels
-    /// (widened on load when stored in a half dtype).
+    /// (widened on load when stored in a half dtype). The bias rides the
+    /// GEMM's fused epilogue (PR 10): applied per output row block at
+    /// write-back, bitwise the old GEMM-then-bias-loop two-pass.
     pub fn apply_into(&self, x: &[f32], rows: usize, y: &mut [f32]) {
-        self.wt.matmul_bt_into(x, y, rows, self.d_in, self.d_out);
-        for row in y.chunks_mut(self.d_out) {
-            for (yv, bv) in row.iter_mut().zip(&self.b) {
-                *yv += bv;
-            }
-        }
+        self.wt.matmul_bt_into_ep(x, y, rows, self.d_in, self.d_out, Epilogue::Bias(&self.b));
+    }
+
+    /// `gelu(x W + b)` — bias + activation fused into the GEMM epilogue,
+    /// so the (rows x d_out) activation is written once instead of the
+    /// two-pass write / re-read / re-write. Bitwise `apply` + `ops::gelu`.
+    pub fn apply_gelu(&self, x: &[f32], rows: usize) -> Vec<f32> {
+        let mut y = vec![0.0f32; rows * self.d_out];
+        let ep = Epilogue::BiasGelu(&self.b);
+        self.wt.matmul_bt_into_ep(x, &mut y, rows, self.d_in, self.d_out, ep);
+        y
+    }
+
+    /// `silu(x W + b)` — as [`Linear::apply_gelu`], with the silu tail.
+    pub fn apply_silu(&self, x: &[f32], rows: usize) -> Vec<f32> {
+        let mut y = vec![0.0f32; rows * self.d_out];
+        let ep = Epilogue::BiasSilu(&self.b);
+        self.wt.matmul_bt_into_ep(x, &mut y, rows, self.d_in, self.d_out, ep);
+        y
     }
 }
 
@@ -500,8 +515,7 @@ impl HostUVit {
             tok[i] += self.params.pos[i];
         }
         let te = self.time_embedding(t);
-        let mut h1 = self.params.time1.apply(&te, 1);
-        silu(&mut h1);
+        let h1 = self.params.time1.apply_silu(&te, 1);
         let temb = self.params.time2.apply(&h1, 1);
         for px in 0..n {
             for j in 0..d {
@@ -731,8 +745,7 @@ impl HostUVit {
             let h = self.ln(&x, s_count * n, &b.ln3);
             let (merged, rows_m) = self.batch_merge(&h, s_count, reduce);
             let hm: &[f32] = merged.as_deref().unwrap_or(&h);
-            let mut u = b.mlp1.apply(hm, s_count * rows_m);
-            gelu(&mut u);
+            let u = b.mlp1.apply_gelu(hm, s_count * rows_m);
             let y = b.mlp2.apply(&u, s_count * rows_m);
             self.batch_unmerge_add(&mut x, &y, s_count, reduce);
         }

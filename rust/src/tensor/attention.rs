@@ -17,8 +17,13 @@
 //!   3-4 passes of DRAM traffic disappear — K/V restream from cache
 //!   instead. Inner loops (score dots, running-max update, fused
 //!   exp-scale-accumulate) run on the sealed microkernel seam
-//!   (`kernel::dot4` / `row_max` / `scale` / `axpy`; `exp` stays scalar
-//!   to keep the numerics boring).
+//!   (`kernel::dot4` / `row_max` / `scale` / `axpy`, and since PR 10 the
+//!   vectorized `exp_sub_sum` poly-exp for the per-block exp + sum —
+//!   bitwise dispatch-invariant like every seam primitive, envelope-only
+//!   vs `f32::exp`). Single-key-block shapes (nk ≤ [`BK`], where
+//!   streaming degenerates to one block) take the three-pass layout with
+//!   the poly-exp `softmax_rows_fast` instead — logits are at most
+//!   nq x [`BK`] there, and the blocked GEMMs beat per-row streaming.
 //!
 //! Numeric contract — read this before comparing the two modes:
 //!
@@ -44,7 +49,7 @@ use std::fmt;
 use std::sync::OnceLock;
 
 use crate::tensor::kernel::{self, Dispatch};
-use crate::tensor::ops::softmax_rows;
+use crate::tensor::ops::{self, softmax_rows};
 use crate::tensor::{gemm, pool};
 
 /// Which SDPA implementation services a call (an [`EngineConfig`] field
@@ -57,8 +62,10 @@ pub enum AttnMode {
     /// logits). Bit-exact default.
     #[default]
     Materialized,
-    /// Online-softmax streaming tiles; never materializes logits. Within
-    /// a ≤ 1e-5 relative envelope of [`AttnMode::Materialized`], not
+    /// Online-softmax streaming tiles when nk exceeds one key block
+    /// ([`BK`]); single-block shapes take the three-pass layout with the
+    /// poly-exp fast softmax (logits at most nq x [`BK`]). Within a
+    /// ≤ 1e-5 relative envelope of [`AttnMode::Materialized`], not
     /// bit-identical (see the module contract).
     Fused,
 }
@@ -213,7 +220,17 @@ pub fn sdpa_into_as(
     assert_eq!(v.len(), samples * nk * d, "v shape");
     assert_eq!(out.len(), samples * nq * d, "out shape");
     match mode {
-        AttnMode::Materialized => materialized_into(disp, q, k, v, samples, nq, nk, d, h, out),
+        AttnMode::Materialized => {
+            materialized_into(disp, q, k, v, samples, nq, nk, d, h, out, false)
+        }
+        // One key block: streaming degenerates to a single jb iteration,
+        // so take the three-pass layout (blocked GEMMs instead of per-row
+        // dots) with the poly-exp fast softmax. The branch depends only
+        // on nk, so fused results stay fold- and dispatch-invariant; the
+        // fast softmax keeps this inside the fused envelope contract.
+        AttnMode::Fused if nk <= BK => {
+            materialized_into(disp, q, k, v, samples, nq, nk, d, h, out, true)
+        }
         AttnMode::Fused => fused_into(disp, q, k, v, samples, nq, nk, d, h, out),
     }
 }
@@ -223,6 +240,10 @@ pub fn sdpa_into_as(
 /// head panels (q pre-scaled by 1/sqrt(dh), V transposed) and runs the
 /// two blocked GEMMs serially on its worker — the same arithmetic per
 /// head regardless of how many samples are folded.
+///
+/// `fast` swaps the softmax for the poly-exp `softmax_rows_fast_as`
+/// (envelope-only vs `f32::exp`) — the fused mode's single-key-block
+/// layout. The bit-exact materialized default always passes `false`.
 #[allow(clippy::too_many_arguments)]
 fn materialized_into(
     disp: Dispatch,
@@ -235,6 +256,7 @@ fn materialized_into(
     d: usize,
     h: usize,
     out: &mut [f32],
+    fast: bool,
 ) {
     let dh = d / h;
     let scale = 1.0 / (dh as f32).sqrt();
@@ -267,7 +289,11 @@ fn materialized_into(
                 }
             }
             gemm::matmul_bt_into_e_as(disp, qh, kh, logits, nq, dh, nk);
-            softmax_rows(logits, nq, nk);
+            if fast {
+                ops::softmax_rows_fast_as(disp, logits, nq, nk);
+            } else {
+                softmax_rows(logits, nq, nk);
+            }
             gemm::matmul_bt_into_e_as(disp, logits, vht, out_h, nq, nk, dh);
         });
     };
@@ -382,16 +408,12 @@ fn fused_into(
                         }
                         m[r] = mb;
                     }
-                    // exp + index-order sum stay scalar (the boring part
-                    // of the numerics), writing p over the score row.
-                    let mr = m[r];
-                    let mut sum = 0.0f32;
-                    for sv in srow.iter_mut() {
-                        let p = (*sv - mr).exp();
-                        *sv = p;
-                        sum += p;
-                    }
-                    l[r] += sum;
+                    // Vectorized poly-exp + 8-lane sum in one sweep over
+                    // the score row (PR 10) — bitwise dispatch-invariant;
+                    // the swap from f32::exp stays inside the fused
+                    // path's ≤ 1e-5 envelope vs materialized (re-pinned
+                    // by tests/attention_fused.rs and the bench assert).
+                    l[r] += kernel::exp_sub_sum_as(disp, srow, m[r]);
                     // Fused accumulate: acc_r += p_j * v_j per key row.
                     for (jj, &p) in srow.iter().enumerate() {
                         let vj = (jb + jj) * d + off;

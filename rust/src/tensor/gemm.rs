@@ -34,6 +34,17 @@
 //! halves the bytes the panel sweep streams through L1/L2 without
 //! changing the accumulation order. [`Panels`] is the runtime-dispatch
 //! form for call sites whose dtype is a config value.
+//!
+//! Since PR 10 every entry point also comes in an [`Epilogue`]-fused form
+//! (`matmul_bt_into_ep*`): bias / bias+gelu / bias+silu applied to each
+//! output row block right after its accumulator is finalized, while the
+//! block is still cache-resident — killing the extra write + re-read +
+//! re-write DRAM round trip the two-pass `GEMM; then activate` code paid.
+//! The epilogue is *bit-exact*: it runs the same per-element scalar math
+//! as the two-pass code (`ops::gelu` / `ops::silu` themselves), after the
+//! accumulation fully completes, so fusion changes when the elementwise
+//! pass runs, never what it computes — results are bitwise the two-pass
+//! path under every dispatch and fold (pinned in `tests/gemm_epilogue.rs`).
 
 use super::element::{Bf16, Element, StorageDtype, F16};
 use super::kernel::{self, Dispatch};
@@ -55,6 +66,46 @@ pub fn dot_e<A: Element, B: Element>(a: &[A], b: &[B]) -> f32 {
 #[inline(always)]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     dot_e(a, b)
+}
+
+/// Elementwise tail fused into the GEMM write-back (PR 10): applied to
+/// each output row block immediately after its accumulator is finalized,
+/// while the block is still cache-resident. Each variant runs exactly the
+/// two-pass code's per-element math (`ops::gelu` / `ops::silu`), so fused
+/// results are bitwise the GEMM-then-loop path.
+#[derive(Clone, Copy, Debug)]
+pub enum Epilogue<'a> {
+    /// Plain GEMM (the historical entry points delegate with this).
+    None,
+    /// `c[r, j] += bias[j]` — `Linear::apply_into`'s bias add.
+    Bias(&'a [f32]),
+    /// Bias add then tanh-approximation gelu (the UViT MLP activation).
+    BiasGelu(&'a [f32]),
+    /// Bias add then silu (the UViT time-embedding activation).
+    BiasSilu(&'a [f32]),
+}
+
+impl Epilogue<'_> {
+    /// Apply to a row block of C (`c.len()` a multiple of `n`). Purely
+    /// elementwise per row, so applying per parallel chunk is bitwise
+    /// identical to one pass over the full output.
+    pub fn apply(&self, c: &mut [f32], n: usize) {
+        let bias = match self {
+            Epilogue::None => return,
+            Epilogue::Bias(b) | Epilogue::BiasGelu(b) | Epilogue::BiasSilu(b) => *b,
+        };
+        assert_eq!(bias.len(), n, "epilogue bias length");
+        for row in c.chunks_mut(n) {
+            for (cv, bv) in row.iter_mut().zip(bias) {
+                *cv += bv;
+            }
+        }
+        match self {
+            Epilogue::BiasGelu(_) => super::ops::gelu(c),
+            Epilogue::BiasSilu(_) => super::ops::silu(c),
+            _ => {}
+        }
+    }
 }
 
 /// C (m x n) = A (m x k) @ B (n x k)ᵀ, parallel over row blocks of C,
@@ -82,6 +133,39 @@ pub fn matmul_bt_into_e_as<A: Element, B: Element>(
     k: usize,
     n: usize,
 ) {
+    matmul_bt_into_ep_as(d, a, b, c, m, k, n, Epilogue::None)
+}
+
+/// [`matmul_bt_into_e`] with a fused [`Epilogue`] on the active dispatch.
+pub fn matmul_bt_into_ep<A: Element, B: Element>(
+    a: &[A],
+    b: &[B],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    ep: Epilogue<'_>,
+) {
+    matmul_bt_into_ep_as(kernel::active(), a, b, c, m, k, n, ep)
+}
+
+/// The one blocked, pool-parallel bt-GEMM implementation: every other
+/// `matmul_bt_into*` entry point delegates here. The epilogue runs per
+/// row-block inside the parallel closure — `bt_rows_as` consumes all
+/// k-panels before returning, so each block's accumulator is final when
+/// its epilogue fires, and blocks are disjoint, so fusion is bitwise the
+/// serial two-pass order.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_bt_into_ep_as<A: Element, B: Element>(
+    d: Dispatch,
+    a: &[A],
+    b: &[B],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    ep: Epilogue<'_>,
+) {
     assert_eq!(a.len(), m * k, "A shape");
     assert_eq!(b.len(), n * k, "B shape");
     assert_eq!(c.len(), m * n, "C shape");
@@ -90,6 +174,7 @@ pub fn matmul_bt_into_e_as<A: Element, B: Element>(
     }
     if m * k.max(1) * n < PAR_MIN_MACS {
         kernel::bt_rows_as(d, a, b, c, 0, m, k, n);
+        ep.apply(c, n);
         return;
     }
     let rows_per = pool::rows_per_task(m);
@@ -97,6 +182,7 @@ pub fn matmul_bt_into_e_as<A: Element, B: Element>(
         let r0 = ci * rows_per;
         let r1 = r0 + chunk.len() / n;
         kernel::bt_rows_as(d, a, b, chunk, r0, r1, k, n);
+        ep.apply(chunk, n);
     });
 }
 
@@ -246,10 +332,40 @@ impl Panels {
         k: usize,
         n: usize,
     ) {
+        self.matmul_bt_into_ep_as(d, a, c, m, k, n, Epilogue::None)
+    }
+
+    /// [`Panels::matmul_bt_into`] with a fused [`Epilogue`] — the
+    /// `Linear::apply_into` substrate (bias / bias+activation applied at
+    /// write-back, bitwise the two-pass code).
+    pub fn matmul_bt_into_ep(
+        &self,
+        a: &[f32],
+        c: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        ep: Epilogue<'_>,
+    ) {
+        self.matmul_bt_into_ep_as(kernel::active(), a, c, m, k, n, ep)
+    }
+
+    /// [`Panels::matmul_bt_into_ep`] on an explicit microkernel dispatch.
+    #[allow(clippy::too_many_arguments)]
+    pub fn matmul_bt_into_ep_as(
+        &self,
+        d: Dispatch,
+        a: &[f32],
+        c: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        ep: Epilogue<'_>,
+    ) {
         match self {
-            Panels::F32(v) => matmul_bt_into_e_as(d, a, v, c, m, k, n),
-            Panels::Bf16(v) => matmul_bt_into_e_as(d, a, v, c, m, k, n),
-            Panels::F16(v) => matmul_bt_into_e_as(d, a, v, c, m, k, n),
+            Panels::F32(v) => matmul_bt_into_ep_as(d, a, v, c, m, k, n, ep),
+            Panels::Bf16(v) => matmul_bt_into_ep_as(d, a, v, c, m, k, n, ep),
+            Panels::F16(v) => matmul_bt_into_ep_as(d, a, v, c, m, k, n, ep),
         }
     }
 }

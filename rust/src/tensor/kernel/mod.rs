@@ -38,6 +38,26 @@
 //! and the other two are elementwise with unfused multiplies — so even
 //! the *fused* attention path (itself not bit-identical to materialized
 //! attention; see `tensor::attention`) never depends on `TOMA_KERNEL`.
+//!
+//! PR 10 adds the vectorized transcendentals [`MicroKernel::exp_body`]
+//! and [`MicroKernel::exp_sub_sum`] (one shared polynomial evaluated in
+//! identical per-element order in both arms; see `scalar::exp_elem`).
+//! The full primitive contract, per guarantee class:
+//!
+//! | Primitive            | Across dispatches      | Vs the `std` reference      |
+//! |----------------------|------------------------|-----------------------------|
+//! | `dot`/`dot4`/`dot2x4`| bitwise (8-lane shape) | is the reference            |
+//! | `relu_gain`          | bitwise (8-lane shape) | is the reference            |
+//! | `row_max`            | bitwise on finite\*    | == index scan (finite\*)    |
+//! | `scale`, `axpy`      | bitwise (elementwise)  | == the plain loop           |
+//! | `exp_body`           | bitwise (elementwise)  | envelope-only vs `f32::exp` |
+//! | `exp_sub_sum`        | bitwise (8-lane shape) | envelope-only vs `f32::exp` |
+//!
+//! \* up to a `±0.0` sign the `exp(s - m)` consumer erases. The poly-exp
+//! envelope (a few ULP, pinned in `tests/kernel_dispatch.rs`) is why only
+//! envelope-gated consumers — the fused attention path — use the last two;
+//! the materialized softmax default stays on `f32::exp` so scheduler
+//! latents are bit-identical to the seed.
 
 pub mod scalar;
 #[cfg(target_arch = "x86_64")]
@@ -102,6 +122,18 @@ pub trait MicroKernel: sealed::Sealed {
     /// update. Multiply-then-add per element (never a `vfmadd`), so
     /// bit-identical across implementations.
     fn axpy(y: &mut [f32], a: f32, x: &[f32]);
+
+    /// In-place polynomial exp `x[i] = poly_exp(x[i])` (PR 10). One
+    /// fixed per-element op sequence (`scalar::exp_elem`) in both arms,
+    /// so bit-identical across implementations; envelope-only vs
+    /// `f32::exp` (finite inputs; see the module contract table).
+    fn exp_body(x: &mut [f32]);
+
+    /// Softmax-row inner op `row[j] = poly_exp(row[j] - m)` returning the
+    /// sum of the written values in the 8-lane [`Self::dot`] shape — so
+    /// the fused-attention inner loop gets exp + sum in one sweep,
+    /// bit-identical across implementations.
+    fn exp_sub_sum(row: &mut [f32], m: f32) -> f32;
 }
 
 /// Which microkernel services the seam.
@@ -282,6 +314,35 @@ pub fn axpy_as(d: Dispatch, y: &mut [f32], a: f32, x: &[f32]) {
     }
     let _ = d;
     scalar::Scalar::axpy(y, a, x)
+}
+
+/// In-place polynomial exp on an explicit dispatch (elementwise,
+/// bit-identical across dispatches; envelope-only vs `f32::exp`).
+#[inline]
+pub fn exp_body_as(d: Dispatch, x: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if d == Dispatch::Avx2Fma && d.supported() {
+            return x86::Avx2Fma::exp_body(x);
+        }
+    }
+    let _ = d;
+    scalar::Scalar::exp_body(x)
+}
+
+/// Softmax-row `row[j] = poly_exp(row[j] - m)` + 8-lane sum on an
+/// explicit dispatch (the fused-attention inner loop; bit-identical
+/// across dispatches, envelope-only vs `f32::exp`).
+#[inline]
+pub fn exp_sub_sum_as(d: Dispatch, row: &mut [f32], m: f32) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if d == Dispatch::Avx2Fma && d.supported() {
+            return x86::Avx2Fma::exp_sub_sum(row, m);
+        }
+    }
+    let _ = d;
+    scalar::Scalar::exp_sub_sum(row, m)
 }
 
 /// Single-thread blocked panel sweep on an explicit dispatch: `c` (rows

@@ -163,6 +163,105 @@ pub(crate) fn scale(x: &mut [f32], a: f32) {
     }
 }
 
+// Polynomial exp (PR 10): the Cephes `expf` range reduction + degree-5
+// minimax polynomial, written as one fixed per-element operation sequence
+// with every multiply-add deliberately *unfused*. Both kernel arms
+// evaluate exactly this sequence, so `exp_body` / `exp_sub_sum` are
+// bitwise dispatch-invariant like `scale`/`axpy`; versus `f32::exp` the
+// result is envelope-only (≤ a few ULP — pinned in
+// `tests/kernel_dispatch.rs`), which is why only envelope-gated consumers
+// (the fused attention path) use it.
+//
+// Inputs are clamped to [EXP_LO, EXP_HI], chosen so the reduced exponent
+// `n` stays in [-126, 127]: below EXP_LO the result saturates at
+// ~min-normal instead of flushing to 0 (fine for the exp(s - max) use,
+// where the true value is ≤ 1 and 1e-38 is far inside the envelope).
+// Like `row_max`, the contract covers finite inputs only.
+
+/// Lower clamp: smallest x with a representable normal exp(x).
+pub(crate) const EXP_LO: f32 = -87.336_54;
+/// Upper clamp: largest x whose reduced exponent fits (n ≤ 127).
+pub(crate) const EXP_HI: f32 = 88.376_26;
+/// log2(e), the range-reduction scale.
+pub(crate) const EXP_LOG2E: f32 = std::f32::consts::LOG2_E;
+/// 1.5·2²³ — adding and subtracting it rounds to the nearest integer
+/// (ties to even) in *both* arms, unlike `f32::round` (ties away from
+/// zero) vs `_mm256_round_ps` (ties to even).
+pub(crate) const EXP_MAGIC: f32 = 12_582_912.0;
+/// ln(2) split hi/lo (Cody–Waite), so `x - n·ln2` stays exact.
+pub(crate) const EXP_C1: f32 = 0.693_359_375;
+pub(crate) const EXP_C2: f32 = -2.121_944_4e-4;
+/// Degree-5 minimax coefficients for exp(r) on |r| ≤ ln2/2 (Cephes).
+pub(crate) const EXP_P0: f32 = 1.987_569_1e-4;
+pub(crate) const EXP_P1: f32 = 1.398_199_9e-3;
+pub(crate) const EXP_P2: f32 = 8.333_452e-3;
+pub(crate) const EXP_P3: f32 = 4.166_579_6e-2;
+pub(crate) const EXP_P4: f32 = 1.666_666_5e-1;
+pub(crate) const EXP_P5: f32 = 5.000_000_1e-1;
+
+/// One polynomial exp evaluation — the per-element sequence both arms
+/// reproduce op-for-op (each multiply and add rounds separately).
+#[inline(always)]
+pub(crate) fn exp_elem(x: f32) -> f32 {
+    let xc = if x > EXP_HI { EXP_HI } else { x };
+    let xc = if xc < EXP_LO { EXP_LO } else { xc };
+    let t = xc * EXP_LOG2E;
+    let n = (t + EXP_MAGIC) - EXP_MAGIC;
+    let r = xc - n * EXP_C1;
+    let r = r - n * EXP_C2;
+    let mut p = EXP_P0;
+    p = p * r + EXP_P1;
+    p = p * r + EXP_P2;
+    p = p * r + EXP_P3;
+    p = p * r + EXP_P4;
+    p = p * r + EXP_P5;
+    let rr = r * r;
+    let y = (p * rr + r) + 1.0;
+    // 2^n via exponent bits; n is integral in [-126, 127] by the clamps.
+    let two_n = f32::from_bits((((n as i32) + 127) as u32) << 23);
+    y * two_n
+}
+
+/// In-place `x[i] = poly_exp(x[i])` — elementwise, so any vector width is
+/// bitwise this loop.
+#[inline(always)]
+pub(crate) fn exp_body(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v = exp_elem(*v);
+    }
+}
+
+/// Softmax-row inner op: `row[j] = poly_exp(row[j] - m)`, returning the
+/// sum of the written values in the house 8-lane shape (lane `l` sums
+/// indices `i + l`, sequential lane fold, index-order tail) — so the SIMD
+/// arm's lane accumulator matches bitwise.
+#[inline(always)]
+pub(crate) fn exp_sub_sum(row: &mut [f32], m: f32) -> f32 {
+    let n = row.len();
+    let n8 = n / 8 * 8;
+    let mut acc = [0.0f32; 8];
+    let mut i = 0;
+    while i < n8 {
+        let blk = &mut row[i..i + 8];
+        for l in 0..8 {
+            let p = exp_elem(blk[l] - m);
+            blk[l] = p;
+            acc[l] += p;
+        }
+        i += 8;
+    }
+    let mut s = 0.0f32;
+    for l in 0..8 {
+        s += acc[l];
+    }
+    for v in row[n8..].iter_mut() {
+        let p = exp_elem(*v - m);
+        *v = p;
+        s += p;
+    }
+    s
+}
+
 /// `y += a * x` elementwise — the fused exp-scale-accumulate's V-row
 /// update. Multiply **then** add per element (never fused, matching the
 /// [`dot`] contract), so a vectorized arm is bitwise this loop.
@@ -203,5 +302,15 @@ impl MicroKernel for Scalar {
     #[inline(always)]
     fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
         axpy(y, a, x)
+    }
+
+    #[inline(always)]
+    fn exp_body(x: &mut [f32]) {
+        exp_body(x)
+    }
+
+    #[inline(always)]
+    fn exp_sub_sum(row: &mut [f32], m: f32) -> f32 {
+        exp_sub_sum(row, m)
     }
 }

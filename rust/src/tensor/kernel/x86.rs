@@ -27,9 +27,10 @@
 //! [`super`] dispatch layer — can reach the intrinsics unguarded.
 
 use std::arch::x86_64::{
-    __m128i, __m256, _mm256_add_ps, _mm256_castsi256_ps, _mm256_cvtepu16_epi32, _mm256_cvtph_ps,
-    _mm256_loadu_ps, _mm256_max_ps, _mm256_mul_ps, _mm256_set1_ps, _mm256_setzero_ps,
-    _mm256_slli_epi32, _mm256_storeu_ps, _mm256_sub_ps, _mm_loadu_si128,
+    __m128i, __m256, _mm256_add_epi32, _mm256_add_ps, _mm256_castsi256_ps, _mm256_cvtepu16_epi32,
+    _mm256_cvtph_ps, _mm256_cvtps_epi32, _mm256_loadu_ps, _mm256_max_ps, _mm256_min_ps,
+    _mm256_mul_ps, _mm256_set1_epi32, _mm256_set1_ps, _mm256_setzero_ps, _mm256_slli_epi32,
+    _mm256_storeu_ps, _mm256_sub_ps, _mm_loadu_si128,
 };
 
 use super::MicroKernel;
@@ -363,6 +364,86 @@ unsafe fn axpy_avx2(y: &mut [f32], a: f32, x: &[f32]) {
     }
 }
 
+/// 8-lane polynomial exp: `scalar::exp_elem` op-for-op per lane. Every
+/// multiply-add stays unfused (`madd`-style pairs, never `vfmadd`); the
+/// clamps put the constant *first* so a NaN lane propagates exactly like
+/// the scalar branch chain (`vminps`/`vmaxps` return the second operand
+/// when unordered); rounding uses the same magic-number add/sub; and the
+/// 2^n exponent-bit build matches the scalar `as i32` cast because `n` is
+/// integral, where truncation and `vcvtps2dq`'s round-to-nearest agree.
+#[target_feature(enable = "avx2", enable = "fma", enable = "f16c")]
+#[inline]
+unsafe fn exp_m256(x: __m256) -> __m256 {
+    use super::scalar::{
+        EXP_C1, EXP_C2, EXP_HI, EXP_LO, EXP_LOG2E, EXP_MAGIC, EXP_P0, EXP_P1, EXP_P2, EXP_P3,
+        EXP_P4, EXP_P5,
+    };
+    let xc = _mm256_min_ps(_mm256_set1_ps(EXP_HI), x);
+    let xc = _mm256_max_ps(_mm256_set1_ps(EXP_LO), xc);
+    let t = _mm256_mul_ps(xc, _mm256_set1_ps(EXP_LOG2E));
+    let magic = _mm256_set1_ps(EXP_MAGIC);
+    let n = _mm256_sub_ps(_mm256_add_ps(t, magic), magic);
+    let r = _mm256_sub_ps(xc, _mm256_mul_ps(n, _mm256_set1_ps(EXP_C1)));
+    let r = _mm256_sub_ps(r, _mm256_mul_ps(n, _mm256_set1_ps(EXP_C2)));
+    let mut p = _mm256_set1_ps(EXP_P0);
+    p = _mm256_add_ps(_mm256_mul_ps(p, r), _mm256_set1_ps(EXP_P1));
+    p = _mm256_add_ps(_mm256_mul_ps(p, r), _mm256_set1_ps(EXP_P2));
+    p = _mm256_add_ps(_mm256_mul_ps(p, r), _mm256_set1_ps(EXP_P3));
+    p = _mm256_add_ps(_mm256_mul_ps(p, r), _mm256_set1_ps(EXP_P4));
+    p = _mm256_add_ps(_mm256_mul_ps(p, r), _mm256_set1_ps(EXP_P5));
+    let rr = _mm256_mul_ps(r, r);
+    let y = _mm256_add_ps(_mm256_add_ps(_mm256_mul_ps(p, rr), r), _mm256_set1_ps(1.0));
+    let two_n = _mm256_castsi256_ps(_mm256_slli_epi32::<23>(_mm256_add_epi32(
+        _mm256_cvtps_epi32(n),
+        _mm256_set1_epi32(127),
+    )));
+    _mm256_mul_ps(y, two_n)
+}
+
+/// In-place polynomial exp: [`exp_m256`] blocks + `scalar::exp_elem`
+/// tail. Elementwise, so bitwise the scalar loop.
+#[target_feature(enable = "avx2", enable = "fma", enable = "f16c")]
+unsafe fn exp_body_avx2(x: &mut [f32]) {
+    let n = x.len();
+    let n8 = n / 8 * 8;
+    let xp = x.as_mut_ptr();
+    let mut i = 0;
+    while i < n8 {
+        _mm256_storeu_ps(xp.add(i), exp_m256(ld_f32(xp.add(i))));
+        i += 8;
+    }
+    for v in &mut x[n8..] {
+        *v = super::scalar::exp_elem(*v);
+    }
+}
+
+/// `row[j] = poly_exp(row[j] - m)` returning the sum: lane `l` of the
+/// vector accumulator performs exactly `scalar::exp_sub_sum`'s
+/// `acc[l] += p`, the reduction is [`hsum_ordered`], and the tail is the
+/// scalar loop — bitwise the scalar reference.
+#[target_feature(enable = "avx2", enable = "fma", enable = "f16c")]
+unsafe fn exp_sub_sum_avx2(row: &mut [f32], m: f32) -> f32 {
+    let n = row.len();
+    let n8 = n / 8 * 8;
+    let mv = _mm256_set1_ps(m);
+    let mut acc = _mm256_setzero_ps();
+    let rp = row.as_mut_ptr();
+    let mut i = 0;
+    while i < n8 {
+        let p = exp_m256(_mm256_sub_ps(ld_f32(rp.add(i)), mv));
+        _mm256_storeu_ps(rp.add(i), p);
+        acc = _mm256_add_ps(acc, p);
+        i += 8;
+    }
+    let mut s = hsum_ordered(acc);
+    for v in &mut row[n8..] {
+        let p = super::scalar::exp_elem(*v - m);
+        *v = p;
+        s += p;
+    }
+    s
+}
+
 impl MicroKernel for Avx2Fma {
     fn dot<A: Element, B: Element>(a: &[A], b: &[B]) -> f32 {
         if !super::simd_supported() {
@@ -480,5 +561,21 @@ impl MicroKernel for Avx2Fma {
         }
         // Safety: as in `dot` (f32-only, no casts needed).
         unsafe { axpy_avx2(y, a, x) }
+    }
+
+    fn exp_body(x: &mut [f32]) {
+        if !super::simd_supported() {
+            return super::scalar::Scalar::exp_body(x);
+        }
+        // Safety: as in `dot` (f32-only, no casts needed).
+        unsafe { exp_body_avx2(x) }
+    }
+
+    fn exp_sub_sum(row: &mut [f32], m: f32) -> f32 {
+        if !super::simd_supported() {
+            return super::scalar::Scalar::exp_sub_sum(row, m);
+        }
+        // Safety: as in `dot` (f32-only, no casts needed).
+        unsafe { exp_sub_sum_avx2(row, m) }
     }
 }

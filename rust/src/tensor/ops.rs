@@ -133,67 +133,92 @@ fn for_each_row(x: &mut [f32], rows: usize, cols: usize, f: impl Fn(&mut [f32]) 
 }
 
 /// In-place softmax over each row of an (rows x cols) matrix.
+///
+/// Max and scale ride the microkernel seam ([`kernel::row_max_as`] /
+/// [`kernel::scale_as`], PR 10) — bit-identical to the hand-rolled scans
+/// they replace (max is order-invariant on finite rows up to a `±0.0`
+/// sign the `exp` consumer erases; scale is elementwise). The exp + sum
+/// pass stays on `f32::exp` in index order: this is the *materialized*
+/// attention softmax, whose latents the scheduler-equivalence tests pin
+/// bitwise against the seed. The poly-exp fast path for envelope-gated
+/// consumers is [`softmax_rows_fast`].
 pub fn softmax_rows(x: &mut [f32], rows: usize, cols: usize) {
+    let d = kernel::active();
     for_each_row(x, rows, cols, |row| {
-        let mx = row.iter().fold(f32::NEG_INFINITY, |m, v| m.max(*v));
+        let mx = kernel::row_max_as(d, row, f32::NEG_INFINITY);
         let mut z = 0.0f32;
         for v in row.iter_mut() {
             *v = (*v - mx).exp();
             z += *v;
         }
-        let inv = 1.0 / z.max(1e-20);
-        for v in row.iter_mut() {
-            *v *= inv;
-        }
+        kernel::scale_as(d, row, 1.0 / z.max(1e-20));
+    });
+}
+
+/// [`softmax_rows`] with the polynomial exp + fused sum
+/// ([`kernel::exp_sub_sum_as`]) — one sweep instead of two for the
+/// exp-and-sum pass, vectorized under the SIMD dispatch. Bitwise
+/// dispatch-invariant, but **not** bit-identical to [`softmax_rows`]
+/// (poly exp is envelope-only vs `f32::exp`, and the sum is 8-lane
+/// rather than index-order): only envelope-gated consumers — the
+/// `:attn-fused` lanes in `tensor::attention` — may use it.
+pub fn softmax_rows_fast(x: &mut [f32], rows: usize, cols: usize) {
+    softmax_rows_fast_as(kernel::active(), x, rows, cols)
+}
+
+/// [`softmax_rows_fast`] on an explicit microkernel dispatch.
+pub fn softmax_rows_fast_as(d: kernel::Dispatch, x: &mut [f32], rows: usize, cols: usize) {
+    for_each_row(x, rows, cols, |row| {
+        let mx = kernel::row_max_as(d, row, f32::NEG_INFINITY);
+        let z = kernel::exp_sub_sum_as(d, row, mx);
+        kernel::scale_as(d, row, 1.0 / z.max(1e-20));
     });
 }
 
 /// In-place softmax over each *column* of an (rows x cols) matrix — the
 /// paper's column-wise merge softmax (Sec. 4.2.1).
 ///
-/// Column-tiled: per tile of `NB` columns the max / exp-sum / scale passes
-/// sweep row-major with a small per-column accumulator strip, so memory
-/// traffic is contiguous (the seed walked whole columns with stride
-/// `cols`, a cache miss per element once `cols` exceeds a few lines).
-/// Numerically identical to the strided form: each column sees the same
-/// operations in the same row order.
+/// Column-tiled through a transposed scratch strip (PR 10): a block of
+/// columns is gathered into contiguous (w x rows) scratch rows, each
+/// softmaxed with the seam's [`kernel::row_max_as`] /
+/// [`kernel::scale_as`] primitives, and scattered back — two passes over
+/// `x` instead of the previous three strip sweeps, with every reduction
+/// contiguous. Numerically identical to the seed's strided column walk:
+/// each column sees the same operations in the same row order (max is
+/// order-invariant on finite inputs, exp + sum stay `f32::exp` in row
+/// order, scale is elementwise) — this feeds the *default* merge path,
+/// which must stay bit-exact.
 pub fn softmax_cols(x: &mut [f32], rows: usize, cols: usize) {
-    const NB: usize = 512;
     if rows == 0 || cols == 0 {
         return;
     }
-    let w_max = NB.min(cols);
-    let mut mx = vec![0.0f32; w_max];
-    let mut z = vec![0.0f32; w_max];
+    let d = kernel::active();
+    // Keep the transposed strip L1/L2-resident whatever the row count.
+    let w_max = (8192 / rows).clamp(1, 512);
+    let mut tile = vec![0.0f32; w_max * rows];
     let mut jb = 0;
     while jb < cols {
-        let jend = (jb + NB).min(cols);
+        let jend = (jb + w_max).min(cols);
         let w = jend - jb;
-        mx[..w].fill(f32::NEG_INFINITY);
         for i in 0..rows {
             let row = &x[i * cols + jb..i * cols + jend];
-            for (m, v) in mx[..w].iter_mut().zip(row) {
-                if *v > *m {
-                    *m = *v;
-                }
+            for (l, &v) in row.iter().enumerate() {
+                tile[l * rows + i] = v;
             }
         }
-        z[..w].fill(0.0);
-        for i in 0..rows {
-            let row = &mut x[i * cols + jb..i * cols + jend];
-            for (l, v) in row.iter_mut().enumerate() {
-                let e = (*v - mx[l]).exp();
-                *v = e;
-                z[l] += e;
+        for col in tile[..w * rows].chunks_mut(rows) {
+            let mx = kernel::row_max_as(d, col, f32::NEG_INFINITY);
+            let mut z = 0.0f32;
+            for v in col.iter_mut() {
+                *v = (*v - mx).exp();
+                z += *v;
             }
-        }
-        for zv in z[..w].iter_mut() {
-            *zv = 1.0 / zv.max(1e-20);
+            kernel::scale_as(d, col, 1.0 / z.max(1e-20));
         }
         for i in 0..rows {
             let row = &mut x[i * cols + jb..i * cols + jend];
             for (l, v) in row.iter_mut().enumerate() {
-                *v *= z[l];
+                *v = tile[l * rows + i];
             }
         }
         jb = jend;

@@ -1,0 +1,104 @@
+//! Epilogue fusion is a scheduling change, not a numeric one (PR 10).
+//!
+//! [`Epilogue`] applies bias / bias+gelu / bias+silu per output chunk at
+//! GEMM write-back, while the chunk is still cache-hot — replacing the
+//! two-pass "GEMM, then walk C again" shape. Because every epilogue is
+//! purely elementwise and runs only after the accumulator for a chunk is
+//! final, the fused result must be **bitwise identical** to the two-pass
+//! reference for every epilogue, every storage dtype, and both the serial
+//! and parallel GEMM paths. These tests pin that contract; the perf side
+//! (fused strictly faster at the SDXL MLP shape) is asserted in
+//! `benches/gemm_dtype_sweep.rs`.
+
+use toma::model::Linear;
+use toma::tensor::element::StorageDtype;
+use toma::tensor::gemm::{self, Epilogue, Panels};
+use toma::tensor::ops;
+use toma::util::Pcg64;
+
+/// Two-pass reference: plain GEMM into `c`, then the seed's serial
+/// bias-broadcast loop, then the activation from `tensor::ops`.
+fn two_pass(
+    panels: &Panels,
+    a: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    ep: Epilogue<'_>,
+) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    panels.matmul_bt_into(a, &mut c, m, k, n);
+    let bias = match ep {
+        Epilogue::None => return c,
+        Epilogue::Bias(b) | Epilogue::BiasGelu(b) | Epilogue::BiasSilu(b) => b,
+    };
+    for row in c.chunks_mut(n) {
+        for (cv, bv) in row.iter_mut().zip(bias) {
+            *cv += bv;
+        }
+    }
+    match ep {
+        Epilogue::BiasGelu(_) => ops::gelu(&mut c),
+        Epilogue::BiasSilu(_) => ops::silu(&mut c),
+        _ => {}
+    }
+    c
+}
+
+#[test]
+fn fused_epilogues_bitwise_match_two_pass_across_dtypes() {
+    let mut g = Pcg64::new(0xEE01);
+    // (96, 32, 128) crosses PAR_MIN_MACS (parallel write-back, epilogue
+    // applied per row chunk); (5, 16, 24) stays serial with a ragged tail.
+    for (m, k, n) in [(96usize, 32usize, 128usize), (5, 16, 24)] {
+        let a = g.normal_vec(m * k);
+        let b_kn = g.normal_vec(k * n);
+        let bias = g.normal_vec(n);
+        for dtype in StorageDtype::ALL {
+            let panels = Panels::pack(&b_kn, k, n, dtype);
+            let eps = [
+                Epilogue::None,
+                Epilogue::Bias(&bias),
+                Epilogue::BiasGelu(&bias),
+                Epilogue::BiasSilu(&bias),
+            ];
+            for ep in eps {
+                let want = two_pass(&panels, &a, m, k, n, ep);
+                let mut got = vec![0.0f32; m * n];
+                panels.matmul_bt_into_ep(&a, &mut got, m, k, n, ep);
+                assert_eq!(got, want, "{dtype} ({m},{k},{n}) {ep:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn epilogue_none_is_plain_gemm() {
+    let mut g = Pcg64::new(0xEE02);
+    let (m, k, n) = (7usize, 33usize, 19usize);
+    let a = g.normal_vec(m * k);
+    let bt = g.normal_vec(n * k);
+    let mut plain = vec![0.0f32; m * n];
+    gemm::matmul_bt_into(&a, &bt, &mut plain, m, k, n);
+    let mut fused = vec![0.0f32; m * n];
+    gemm::matmul_bt_into_ep(&a, &bt, &mut fused, m, k, n, Epilogue::None);
+    assert_eq!(fused, plain);
+}
+
+#[test]
+fn linear_fused_activations_bitwise_match_apply_then_activation() {
+    let mut g = Pcg64::new(0xEE03);
+    let (rows, d_in, d_out) = (9usize, 24usize, 40usize);
+    let w = g.normal_vec(d_in * d_out);
+    let bias = g.normal_vec(d_out);
+    let x = g.normal_vec(rows * d_in);
+    for dtype in StorageDtype::ALL {
+        let lin = Linear::with_storage(w.clone(), bias.clone(), d_in, d_out, dtype);
+        let mut want_gelu = lin.apply(&x, rows);
+        ops::gelu(&mut want_gelu);
+        assert_eq!(lin.apply_gelu(&x, rows), want_gelu, "{dtype} gelu");
+        let mut want_silu = lin.apply(&x, rows);
+        ops::silu(&mut want_silu);
+        assert_eq!(lin.apply_silu(&x, rows), want_silu, "{dtype} silu");
+    }
+}

@@ -189,6 +189,92 @@ fn unsupported_dispatch_falls_back_to_scalar() {
 }
 
 #[test]
+fn poly_exp_envelope_vs_std_exp() {
+    // The PR 10 polynomial exp across the softmax operating range
+    // [-87.3, 0] (scores minus the row max are always ≤ 0; -87.3 is just
+    // above the clamp where exp is still normal): every value must stay
+    // within a tight ULP and absolute envelope of `f32::exp`. This is the
+    // bound that keeps the fused-attention ≤ 1e-5 relative envelope safe.
+    let mut worst_ulp = 0i64;
+    for i in 0..=87_300u32 {
+        let x = -(i as f32) * 1e-3;
+        let mut got = [x];
+        kernel::exp_body_as(Dispatch::Scalar, &mut got);
+        let want = x.exp();
+        let ulp = (got[0].to_bits() as i64 - want.to_bits() as i64).abs();
+        worst_ulp = worst_ulp.max(ulp);
+        assert!(ulp <= 32, "x={x}: poly {} vs std {want} ({ulp} ulp)", got[0]);
+        assert!((got[0] - want).abs() <= 4e-6, "x={x}: abs diff beyond envelope");
+    }
+    assert!(worst_ulp > 0, "poly exp should differ from std exp somewhere");
+    // Clamp behavior at the range edges: monotone saturation, no zeros,
+    // no infinities (the exp(s - max) consumer needs finite positives).
+    for x in [-1.0e4f32, -200.0, -88.0, 0.0, 1.0, 88.0, 1.0e4] {
+        let mut v = [x];
+        kernel::exp_body_as(Dispatch::Scalar, &mut v);
+        assert!(v[0].is_finite() && v[0] > 0.0, "x={x} -> {}", v[0]);
+    }
+}
+
+#[test]
+fn exp_body_and_exp_sub_sum_bitwise_across_dispatches() {
+    // The new transcendentals keep the house elementwise / 8-lane-shape
+    // contract: scalar and SIMD arms are bitwise identical for the row
+    // contents AND the returned sum, across remainder lengths.
+    let mut g = Pcg64::new(0xE10);
+    for len in [0usize, 1, 7, 8, 9, 31, 64, 255, 256, 257] {
+        let base: Vec<f32> = g.normal_vec(len).into_iter().map(|v| v * 4.0).collect();
+        let mut want = base.clone();
+        kernel::exp_body_as(Dispatch::Scalar, &mut want);
+        if simd() {
+            let mut got = base.clone();
+            kernel::exp_body_as(Dispatch::Avx2Fma, &mut got);
+            assert_eq!(got, want, "exp_body len {len}");
+        }
+        let m = kernel::row_max_as(Dispatch::Scalar, &base, f32::NEG_INFINITY);
+        let mut row_s = base.clone();
+        let sum_s = kernel::exp_sub_sum_as(Dispatch::Scalar, &mut row_s, m);
+        // Scalar reference semantics: poly_exp(v - m), summed 8-lane.
+        for (p, &v) in row_s.iter().zip(&base) {
+            let mut e = [v - m];
+            kernel::exp_body_as(Dispatch::Scalar, &mut e);
+            assert_eq!(*p, e[0], "exp_sub_sum row content, len {len}");
+        }
+        if simd() {
+            let mut row_v = base.clone();
+            let sum_v = kernel::exp_sub_sum_as(Dispatch::Avx2Fma, &mut row_v, m);
+            assert_eq!(row_v, row_s, "exp_sub_sum rows, len {len}");
+            assert_eq!(sum_v.to_bits(), sum_s.to_bits(), "exp_sub_sum sum, len {len}");
+        }
+    }
+}
+
+#[test]
+fn softmax_rows_fast_is_dispatch_invariant_and_inside_envelope() {
+    use toma::tensor::ops;
+    let mut g = Pcg64::new(0xE11);
+    for (rows, cols) in [(1usize, 1usize), (3, 7), (9, 33), (16, 130)] {
+        let base: Vec<f32> = g.normal_vec(rows * cols).into_iter().map(|v| v * 3.0).collect();
+        let mut fast = base.clone();
+        ops::softmax_rows_fast_as(Dispatch::Scalar, &mut fast, rows, cols);
+        if simd() {
+            let mut fast_v = base.clone();
+            ops::softmax_rows_fast_as(Dispatch::Avx2Fma, &mut fast_v, rows, cols);
+            assert_eq!(fast_v, fast, "softmax_rows_fast ({rows},{cols})");
+        }
+        // Probabilities within 1e-5 relative of the std-exp softmax — the
+        // fused-attention envelope this fast path must not consume.
+        let mut want = base.clone();
+        ops::softmax_rows(&mut want, rows, cols);
+        close_rel(&fast, &want, 1e-5, &format!("softmax fast ({rows},{cols})"));
+        for r in 0..rows {
+            let s: f32 = fast[r * cols..(r + 1) * cols].iter().sum();
+            assert!((s - 1.0).abs() < 1e-5, "row {r} sums to {s}");
+        }
+    }
+}
+
+#[test]
 fn relu_gain_seam_is_dispatch_invariant() {
     // The facility-location gain scan must be bitwise identical under
     // both kernels (selections must never depend on TOMA_KERNEL), even
